@@ -1,0 +1,64 @@
+//! Quickstart: plan an edge-cloud deployment for ResNet-50 in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::report::{fmt_bytes, fmt_latency};
+use auto_split::sim::LatencyModel;
+use auto_split::splitter::{auto_split, AutoSplitConfig};
+use auto_split::zoo;
+
+fn main() {
+    // 1. pick a model from the zoo and optimize its inference graph
+    let (graph, task) = zoo::by_name("resnet50").unwrap();
+    let optimized = optimize_for_inference(&graph).graph;
+
+    // 2. profile it (weights + activation statistics)
+    let profile = ModelProfile::synthesize(&optimized);
+
+    // 3. describe the deployment: Eyeriss-class edge, TPU cloud, 3 Mbps
+    let latency_model = LatencyModel::paper_default();
+
+    // 4. run Auto-Split with a 5% accuracy-drop budget and 32 MB of edge
+    //    memory (Algorithm 1 of the paper)
+    let config = AutoSplitConfig { max_drop_pct: 5.0, ..Default::default() };
+    let (solutions, selected) = auto_split(&optimized, &profile, &latency_model, task, &config);
+
+    println!("evaluated {} feasible (split, bit-width) solutions", solutions.len());
+    println!(
+        "selected: {} after layer '{}' (weighted index {})",
+        selected.placement, selected.split_layer, selected.split_index
+    );
+    println!(
+        "  end-to-end latency {}  (edge {} + uplink {} + cloud {})",
+        fmt_latency(selected.total_latency()),
+        fmt_latency(selected.edge_s),
+        fmt_latency(selected.tr_s),
+        fmt_latency(selected.cloud_s),
+    );
+    println!(
+        "  edge model {}  activations {}  transmission {}  est. accuracy drop {:.2}%",
+        fmt_bytes(selected.edge_model_bytes),
+        fmt_bytes(selected.edge_act_ws_bytes),
+        fmt_bytes(selected.tx_bytes),
+        selected.acc_drop_pct
+    );
+
+    // 5. the per-layer bit plan for the edge partition
+    if let Some(pos) = selected.split_pos {
+        let order = optimized.topo_order();
+        println!("\nedge partition bit-widths (weights/activations):");
+        for &id in order[..=pos].iter() {
+            let l = &optimized.layers[id];
+            if l.weight_count > 0 {
+                println!(
+                    "  {:<28} W{} A{}",
+                    l.name, selected.w_bits[id], selected.a_bits[id]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! END-TO-END DRIVER (the §5.5 license-plate case study, served for real):
+//! loads the AOT artifacts produced by `make artifacts`, runs the full
+//! edge → uplink → batcher → cloud pipeline on the bundled eval set with
+//! several concurrent clients, and reports accuracy + latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_lpr -- [n_requests]
+//! ```
+//!
+//! This is the workload recorded in EXPERIMENTS.md §E2E.
+
+use auto_split::coordinator::{ServeConfig, ServeMode, Server};
+use auto_split::report::fmt_bytes;
+use auto_split::sim::Uplink;
+use std::path::Path;
+use std::sync::Arc;
+
+fn load_eval(dir: &Path, img: usize) -> (Vec<Vec<f32>>, Vec<u8>) {
+    let buf = std::fs::read(dir.join("eval_set.bin")).expect("run `make artifacts` first");
+    let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let mut images = Vec::with_capacity(n);
+    let mut off = 4;
+    for _ in 0..n {
+        images.push(
+            buf[off..off + img * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect(),
+        );
+        off += img * 4;
+    }
+    (images, buf[off..off + n].to_vec())
+}
+
+fn run_mode(dir: &Path, mode: ServeMode, n: usize, clients: usize) -> (f64, f64, f64, usize) {
+    let mut cfg = ServeConfig::new(dir);
+    cfg.mode = mode;
+    cfg.uplink = Uplink::paper_default(); // 3 Mbps, the paper's Table 1
+    let server = Arc::new(Server::start(cfg).expect("start server"));
+    let img = server.meta.img * server.meta.img;
+    let (images, labels) = load_eval(dir, img);
+
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let tx_bytes = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = server.clone();
+            let images = &images;
+            let labels = &labels;
+            let correct = &correct;
+            let tx_bytes = &tx_bytes;
+            scope.spawn(move || {
+                for i in (c..n).step_by(clients) {
+                    let s = i % images.len();
+                    let res = server.infer(images[s].clone()).expect("infer");
+                    if res.class == labels[s] as usize {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    tx_bytes.store(res.tx_bytes, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let stats = server.stats();
+    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64;
+    println!("--- {mode:?} ---");
+    println!("{}", stats.report());
+    (
+        acc,
+        stats.e2e.quantile(0.5),
+        stats.throughput(),
+        tx_bytes.load(std::sync::atomic::Ordering::Relaxed),
+    )
+}
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(256);
+    let dir = Path::new("artifacts");
+    println!("serving {n} requests with 4 concurrent clients over a 3 Mbps uplink\n");
+
+    let (acc_s, p50_s, thr_s, tx_s) = run_mode(dir, ServeMode::Split, n, 4);
+    println!();
+    let (acc_c, p50_c, thr_c, tx_c) = run_mode(dir, ServeMode::CloudOnly, n, 4);
+
+    println!("\n=== Table 3 analogue (LPR case study, measured end-to-end) ===");
+    println!("{:<22} {:>9} {:>12} {:>12} {:>10}", "pipeline", "accuracy", "p50 latency", "req/s", "tx/req");
+    println!(
+        "{:<22} {:>8.1}% {:>10.1}ms {:>12.1} {:>10}",
+        "AUTO-SPLIT (split)",
+        100.0 * acc_s,
+        p50_s * 1e3,
+        thr_s,
+        fmt_bytes(tx_s)
+    );
+    println!(
+        "{:<22} {:>8.1}% {:>10.1}ms {:>12.1} {:>10}",
+        "Float (to cloud)",
+        100.0 * acc_c,
+        p50_c * 1e3,
+        thr_c,
+        fmt_bytes(tx_c)
+    );
+    let speedup = p50_c / p50_s;
+    println!("\nsplit speedup over cloud-only: {speedup:.2}× (paper Table 3: 970ms → 630ms = 1.54×)");
+}

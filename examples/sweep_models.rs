@@ -1,0 +1,48 @@
+//! Reproduce the Fig. 6 overall comparison from the command line: all nine
+//! benchmark models × {Auto-Split, QDMP, Neurosurgeon, U8, CLOUD16}.
+//!
+//! ```bash
+//! cargo run --release --example sweep_models
+//! ```
+
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::report::Table;
+use auto_split::sim::LatencyModel;
+use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx};
+use auto_split::zoo::{self, Task};
+
+fn main() {
+    let lm = LatencyModel::paper_default();
+    let mut table = Table::new(
+        "Fig. 6 — normalized latency (CLOUD16 = 100%), lower is better",
+        &["model", "auto-split", "qdmp", "neurosurgeon", "u8(edge)", "placement", "drop%"],
+    );
+    let mut gains = vec![];
+    for (g, task, _acc) in zoo::fig6_suite() {
+        let opt = optimize_for_inference(&g).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        let cfg = AutoSplitConfig {
+            max_drop_pct: if task == Task::Classification { 5.0 } else { 10.0 },
+            ..Default::default()
+        };
+        let (_, sel) = auto_split(&opt, &profile, &lm, task, &cfg);
+        let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
+        let cloud = ctx.cloud_only().total_latency();
+        let pct = |s: f64| format!("{:.0}%", 100.0 * s / cloud);
+        let q = ctx.qdmp().total_latency();
+        table.row(&[
+            opt.name.clone(),
+            pct(sel.total_latency()),
+            pct(q),
+            pct(ctx.neurosurgeon().total_latency()),
+            pct(ctx.uniform_edge_only(8).total_latency()),
+            sel.placement.to_string(),
+            format!("{:.1}", sel.acc_drop_pct),
+        ]);
+        gains.push(1.0 - sel.total_latency() / q);
+    }
+    println!("{}", table.render());
+    let mean_gain = 100.0 * gains.iter().sum::<f64>() / gains.len() as f64;
+    println!("mean latency reduction vs QDMP: {mean_gain:.0}% (paper: 20-80% per model)");
+}

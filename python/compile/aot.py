@@ -1,0 +1,143 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (under artifacts/):
+    lpr_edge_b1.hlo.txt        edge partition, batch 1 (camera stream)
+    lpr_cloud_b{1,2,4,8}.hlo.txt  cloud partition per batch size
+    lpr_full_b1.hlo.txt        float end-to-end (Cloud-Only baseline)
+    metadata.json              shapes / scales / accuracies / graph spec
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model
+
+CLOUD_BATCHES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big weight
+    # literals as `{...}`, which the rust-side HLO text parser silently
+    # turns into ZEROS — the artifact must carry the trained weights.
+    return comp.as_hlo_text(True)
+
+
+def load_weights(path):
+    z = np.load(path)
+    params = {k: jnp.asarray(z[k]) for k in z.files if not k.startswith("__")}
+    act_scales = [float(s) for s in z["__act_scales"]]
+    boundary_scale = float(z["__boundary_scale"])
+    return params, act_scales, boundary_scale
+
+
+def lower_all(params, act_scales, boundary_scale, outdir):
+    spec = model.graph_spec()
+    c2, length = spec["packed_shape"]
+    written = {}
+
+    # edge (batch 1)
+    w_scales = model.weight_scales(params)
+
+    def edge_fn(img):
+        return (
+            model.edge_forward_quant(params, img, act_scales, boundary_scale, w_scales),
+        )
+
+    img_spec = jax.ShapeDtypeStruct((1, 1, model.IMG, model.IMG), jnp.float32)
+    text = to_hlo_text(jax.jit(edge_fn).lower(img_spec))
+    written["lpr_edge_b1"] = text
+
+    # cloud per batch size
+    for b in CLOUD_BATCHES:
+        def cloud_fn(packed):
+            return (model.cloud_forward_packed(params, packed, boundary_scale),)
+
+        p_spec = jax.ShapeDtypeStruct((b, c2, length), jnp.uint8)
+        written[f"lpr_cloud_b{b}"] = to_hlo_text(jax.jit(cloud_fn).lower(p_spec))
+
+    # float full model (Cloud-Only reference)
+    def full_fn(img):
+        return (model.full_forward(params, img),)
+
+    written["lpr_full_b1"] = to_hlo_text(jax.jit(full_fn).lower(img_spec))
+
+    os.makedirs(outdir, exist_ok=True)
+    for name, text in written.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--weights", default=None, help="weights.npz (default <out>/weights.npz)")
+    args = ap.parse_args()
+    outdir = args.out
+    weights = args.weights or os.path.join(outdir, "weights.npz")
+
+    if not os.path.exists(weights):
+        raise SystemExit(
+            f"{weights} missing — run `python -m compile.train --out {weights}` first "
+            "(make artifacts does this)"
+        )
+    params, act_scales, boundary_scale = load_weights(weights)
+    lower_all(params, act_scales, boundary_scale, outdir)
+
+    # Evaluation set for the rust serving E2E (f32 images + u8 labels,
+    # raw little-endian: [n u32][img f32 × n·32·32][labels u8 × n]).
+    n_eval = 256
+    xe, ye = data.make_dataset(n_eval, seed=99)
+    with open(os.path.join(outdir, "eval_set.bin"), "wb") as f:
+        f.write(np.uint32(n_eval).tobytes())
+        f.write(xe.astype("<f4").tobytes())
+        f.write(ye.astype(np.uint8).tobytes())
+    print(f"wrote {outdir}/eval_set.bin ({n_eval} samples)")
+
+    train_meta_path = os.path.join(outdir, "train_meta.json")
+    train_meta = {}
+    if os.path.exists(train_meta_path):
+        with open(train_meta_path) as f:
+            train_meta = json.load(f)
+
+    spec = model.graph_spec()
+    meta = {
+        "model": "lpr_digit_cnn",
+        "graph": spec,
+        "boundary_scale": boundary_scale,
+        "act_scales": act_scales,
+        "cloud_batches": CLOUD_BATCHES,
+        "artifacts": {
+            "edge": "lpr_edge_b1.hlo.txt",
+            "cloud": {str(b): f"lpr_cloud_b{b}.hlo.txt" for b in CLOUD_BATCHES},
+            "full": "lpr_full_b1.hlo.txt",
+        },
+        "accuracy": train_meta,
+        "params": int(
+            sum(np.asarray(v).size for v in params.values())
+        ),
+    }
+    with open(os.path.join(outdir, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {outdir}/metadata.json")
+
+
+if __name__ == "__main__":
+    main()

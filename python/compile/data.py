@@ -1,0 +1,65 @@
+"""Synthetic license-plate digit dataset (§5.5 substitution).
+
+The paper evaluates on an internal proprietary plate dataset; we render
+10 digit glyphs as 8×6 bitmaps, upsample to 32×32 with random shift,
+scale jitter, stroke noise and background clutter — enough signal for a
+small CNN to reach high accuracy while remaining honestly learnable (not
+trivially separable).
+"""
+
+import numpy as np
+
+# 8 rows × 6 cols glyphs for digits 0-9 (1 = ink).
+_GLYPHS = [
+    ["011110", "110011", "110011", "110011", "110011", "110011", "110011", "011110"],  # 0
+    ["001100", "011100", "001100", "001100", "001100", "001100", "001100", "111111"],  # 1
+    ["011110", "110011", "000011", "000110", "001100", "011000", "110000", "111111"],  # 2
+    ["011110", "110011", "000011", "001110", "000011", "000011", "110011", "011110"],  # 3
+    ["000110", "001110", "011110", "110110", "111111", "000110", "000110", "000110"],  # 4
+    ["111111", "110000", "110000", "111110", "000011", "000011", "110011", "011110"],  # 5
+    ["011110", "110000", "110000", "111110", "110011", "110011", "110011", "011110"],  # 6
+    ["111111", "000011", "000110", "001100", "001100", "011000", "011000", "011000"],  # 7
+    ["011110", "110011", "110011", "011110", "110011", "110011", "110011", "011110"],  # 8
+    ["011110", "110011", "110011", "011111", "000011", "000011", "000011", "011110"],  # 9
+]
+
+IMG = 32
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    return np.array([[float(c) for c in row] for row in _GLYPHS[d]], dtype=np.float32)
+
+
+def render_digit(d: int, rng: np.random.Generator) -> np.ndarray:
+    """One noisy 32×32 grayscale digit image in [0, 1]."""
+    g = _glyph_array(d)
+    # nearest-neighbour upscale by 3 (24×18 core)
+    up = np.kron(g, np.ones((3, 3), dtype=np.float32))
+    img = np.zeros((IMG, IMG), dtype=np.float32)
+    oy = rng.integers(0, IMG - up.shape[0] + 1)
+    ox = rng.integers(0, IMG - up.shape[1] + 1)
+    img[oy : oy + up.shape[0], ox : ox + up.shape[1]] = up
+    # contrast jitter + plate background + sensor noise
+    ink = rng.uniform(0.6, 1.0)
+    bg = rng.uniform(0.0, 0.25)
+    img = bg + (ink - bg) * img
+    img += rng.normal(0.0, 0.08, img.shape).astype(np.float32)
+    # occasional occlusion stripe (dirt / plate frame)
+    if rng.uniform() < 0.3:
+        r = rng.integers(0, IMG)
+        img[r : r + 2, :] += rng.uniform(-0.3, 0.3)
+    return np.clip(img, 0.0, 1.0)
+
+
+def make_dataset(n: int, seed: int):
+    """n images + labels, deterministic in `seed`."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, n)
+    images = np.stack([render_digit(int(d), rng) for d in labels])
+    return images[:, None, :, :].astype(np.float32), labels.astype(np.int32)  # NCHW
+
+
+def train_test(n_train: int = 8000, n_test: int = 2000, seed: int = 7):
+    xtr, ytr = make_dataset(n_train, seed)
+    xte, yte = make_dataset(n_test, seed + 1)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: simulated-integer matmul and 4-bit pack/unpack.
+
+These are the compute hot-spots of the Auto-Split edge partition:
+
+* ``quant_matmul`` — the quantized GEMM every edge conv lowers to
+  (im2col). Fuses quantize → integer-accumulate → dequantize in one kernel
+  so the low-bit tensors never round-trip to HBM (DESIGN.md
+  §Hardware-Adaptation).
+* ``quant_pack4`` / ``unpack4_dequant`` — the split-boundary codec:
+  affine-quantize activations to 4-bit codes and pack two channel planes
+  per byte (channel-major, the fast layout of paper Table 6).
+
+All kernels run with ``interpret=True``: on this CPU-only PJRT stack a
+real TPU lowering would emit Mosaic custom-calls the CPU plugin cannot
+execute. Tiling is still expressed through ``BlockSpec`` so the same code
+targets the MXU (128×128 systolic tiles) when compiled for TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-friendly default tiles (multiples of 128 when shapes allow).
+_BM, _BN, _BK = 128, 128, 128
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile ≤ block that is a divisor-friendly cap on dim."""
+    return min(dim, block)
+
+
+def _qmm_kernel(x_ref, w_ref, o_ref, *, x_scale, w_scale, bits, nk):
+    """One (bm, bn) output tile; grid axis 2 walks the K tiles."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = float((1 << (bits - 1)) - 1)
+    qx = jnp.clip(jnp.round(x_ref[...] / x_scale), -q, q)
+    qw = jnp.clip(jnp.round(w_ref[...] / w_scale), -q, q)
+    # integer accumulate (f32 carries the exact integer range for b ≤ 8:
+    # |acc| < 127² · K < 2^24 for K ≤ 1024 — checked in tests)
+    o_ref[...] += qx @ qw
+    del nk
+
+
+def quant_matmul(x, w, x_scale: float, w_scale: float, bits: int = 8):
+    """Simulated-integer matmul: ``dequant(quant(x) @ quant(w))``.
+
+    x: (M, K) f32, w: (K, N) f32 → (M, N) f32.
+    Matches ``ref.quant_matmul_ref`` exactly.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn, bk = _tile(m, _BM), _tile(n, _BN), _tile(k, _BK)
+    # Zero-pad every dimension to a whole number of tiles: Pallas block
+    # padding is unspecified memory, and zeros quantize to zero codes so
+    # padding contributes nothing to the integer accumulation.
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    acc = pl.pallas_call(
+        functools.partial(
+            _qmm_kernel, x_scale=x_scale, w_scale=w_scale, bits=bits, nk=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return acc[:m, :n] * (x_scale * w_scale)
+
+
+def _quant_pack_kernel(x_ref, o_ref, *, scale, bits):
+    levels = float((1 << bits) - 1)
+    codes = jnp.clip(jnp.round(x_ref[...] / scale), 0.0, levels)
+    lo = codes[0::2, :]
+    hi = codes[1::2, :]
+    o_ref[...] = (lo + hi * 16.0).astype(jnp.uint8)
+
+
+def quant_pack4(x, scale: float):
+    """Affine-quantize non-negative activations to 4-bit codes and pack
+    channel-pairs into bytes. x: (C, L) f32 (C even) → (C//2, L) uint8."""
+    c, length = x.shape
+    assert c % 2 == 0, "channel count must be even for 4-bit pairing"
+    return pl.pallas_call(
+        functools.partial(_quant_pack_kernel, scale=scale, bits=4),
+        out_shape=jax.ShapeDtypeStruct((c // 2, length), jnp.uint8),
+        interpret=True,
+    )(x)
+
+
+def _unpack_dequant_kernel(p_ref, o_ref, *, scale):
+    v = p_ref[...].astype(jnp.float32)
+    hi = jnp.floor(v / 16.0)
+    lo = v - hi * 16.0
+    c2 = p_ref.shape[0]
+    out = jnp.zeros((2 * c2, p_ref.shape[1]), dtype=jnp.float32)
+    out = out.at[0::2, :].set(lo * scale)
+    out = out.at[1::2, :].set(hi * scale)
+    o_ref[...] = out
+
+
+def unpack4_dequant(packed, scale: float):
+    """Inverse of ``quant_pack4``: (C2, L) uint8 → (2·C2, L) f32."""
+    c2, length = packed.shape
+    return pl.pallas_call(
+        functools.partial(_unpack_dequant_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((2 * c2, length), jnp.float32),
+        interpret=True,
+    )(packed)
+
+
+def fake_quant(x, scale: float, bits: int = 8):
+    """Symmetric fake-quant (used for weight simulation in the edge
+    partition); delegates to the reference math — it is memory-bound and
+    fuses into neighbouring ops under XLA."""
+    return ref.fake_quant_sym(x, scale, bits)

@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything the L1 kernels (quant.py) compute is re-implemented here with
+plain jax.numpy so pytest/hypothesis can assert numerical equivalence.
+"""
+
+import jax.numpy as jnp
+
+
+def qmax_for(bits: int) -> int:
+    """Largest magnitude code of a signed symmetric b-bit grid."""
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_sym(x, scale, bits: int):
+    """Symmetric quantization to integer codes (as float values)."""
+    q = qmax_for(bits)
+    return jnp.clip(jnp.round(x / scale), -q, q)
+
+
+def fake_quant_sym(x, scale, bits: int):
+    """Round-trip through the signed b-bit grid."""
+    return quantize_sym(x, scale, bits) * scale
+
+
+def quantize_affine_u(x, scale, bits: int):
+    """Affine quantization of non-negative data to unsigned codes."""
+    levels = (1 << bits) - 1
+    return jnp.clip(jnp.round(x / scale), 0, levels)
+
+
+def quant_matmul_ref(x, w, x_scale, w_scale, bits: int):
+    """Simulated-integer matmul: fake-quant inputs at `bits`, accumulate in
+    f32, dequantize. x: (M, K), w: (K, N)."""
+    qx = quantize_sym(x, x_scale, bits)
+    qw = quantize_sym(w, w_scale, bits)
+    return (qx @ qw) * (x_scale * w_scale)
+
+
+def pack4_ref(codes):
+    """Pack two 4-bit channel planes per byte. codes: (C, L) uint8 with C
+    even, values < 16 → (C//2, L) uint8. Channel-major pairing (Table 6's
+    fast layout)."""
+    lo = codes[0::2, :]
+    hi = codes[1::2, :]
+    return (lo + hi * 16).astype(jnp.uint8)
+
+
+def unpack4_ref(packed):
+    """Inverse of pack4_ref: (C2, L) uint8 → (2*C2, L) uint8."""
+    lo = packed % 16
+    hi = packed // 16
+    c2, length = packed.shape
+    out = jnp.zeros((2 * c2, length), dtype=jnp.uint8)
+    out = out.at[0::2, :].set(lo.astype(jnp.uint8))
+    out = out.at[1::2, :].set(hi.astype(jnp.uint8))
+    return out
+
+
+def quant_pack_ref(x, scale, bits: int = 4):
+    """Affine-quantize non-negative activations to 4-bit codes and pack.
+    x: (C, L) float → (C//2, L) uint8."""
+    codes = quantize_affine_u(x, scale, bits).astype(jnp.uint8)
+    return pack4_ref(codes)
+
+
+def unpack_dequant_ref(packed, scale):
+    """Inverse of quant_pack_ref: unpack and dequantize to float."""
+    return unpack4_ref(packed).astype(jnp.float32) * scale

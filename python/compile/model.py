@@ -1,0 +1,212 @@
+"""L2 JAX model: the served LPR digit-recognition CNN, partitioned into an
+edge function (quantized convs via the Pallas ``quant_matmul`` kernel,
+4-bit packed output) and a cloud function (unpack + rest of the network).
+
+The architecture mirrors ``rust/src/zoo/lpr.rs::lpr_edge_cnn`` — the
+planner-side graph — and the agreement is checked by
+``python/tests/test_aot.py`` against ``artifacts/metadata.json``.
+
+Split boundary: after the third pooled conv stage, the activation is
+(64, 4, 4) = 1024 elements; packed at 4 bits it crosses the uplink as
+512 bytes vs the 1024-byte raw input — the Auto-Split win.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant as K
+from .kernels import ref
+
+IMG = 32
+N_CLASSES = 10
+# (cin, cout) per conv stage; every edge stage is conv3x3-relu-maxpool2.
+EDGE_CONVS = [(1, 16), (16, 32), (32, 64)]
+CLOUD_CONVS = [(64, 64)]
+FC1 = 128
+# split-boundary tensor (C, H, W) after the edge stages
+BOUNDARY = (64, 4, 4)
+ACT_BITS = 4  # transmission bit-width
+WEIGHT_BITS = 8  # edge weight precision (TFLite-style, §5.5)
+
+
+# --------------------------------------------------------------------------
+# primitive ops (shared by float and quantized paths)
+# --------------------------------------------------------------------------
+
+def im2col3x3(x):
+    """(B, C, H, W) → (B, H·W, C·9) patches for a same-padded 3×3 conv."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(xp[:, :, dy : dy + h, dx : dx + w])
+    # (9, B, C, H, W) → (B, H, W, C, 9) → (B, HW, C*9)
+    p = jnp.stack(cols, axis=-1)  # (B, C, H, W, 9)
+    p = p.transpose(0, 2, 3, 1, 4).reshape(b, h * w, c * 9)
+    return p
+
+
+def maxpool2(x):
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def conv3x3_float(x, w, bias):
+    """Float conv used for training. w: (C·9, cout)."""
+    b, _, h, wd = x.shape
+    p = im2col3x3(x)
+    y = p @ w + bias
+    return y.reshape(b, h, wd, -1).transpose(0, 3, 1, 2)
+
+
+def conv3x3_quant(x, w, bias, x_scale, w_scale, bits=WEIGHT_BITS):
+    """Quantized conv on the edge: im2col + Pallas quant_matmul."""
+    b, _, h, wd = x.shape
+    p = im2col3x3(x).reshape(b * h * wd, -1)
+    y = K.quant_matmul(p, w, x_scale, w_scale, bits=bits) + bias
+    return y.reshape(b, h, wd, -1).transpose(0, 3, 1, 2)
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def init_params(key):
+    params = {}
+    for i, (cin, cout) in enumerate(EDGE_CONVS + CLOUD_CONVS):
+        key, k1 = jax.random.split(key)
+        fan_in = cin * 9
+        params[f"conv{i}_w"] = (
+            jax.random.normal(k1, (fan_in, cout)) * np.sqrt(2.0 / fan_in)
+        ).astype(jnp.float32)
+        params[f"conv{i}_b"] = jnp.zeros((cout,), jnp.float32)
+    key, k1, k2 = jax.random.split(key, 3)
+    cb = BOUNDARY[0]
+    params["fc1_w"] = (jax.random.normal(k1, (cb, FC1)) * np.sqrt(2.0 / cb)).astype(
+        jnp.float32
+    )
+    params["fc1_b"] = jnp.zeros((FC1,), jnp.float32)
+    params["fc2_w"] = (
+        jax.random.normal(k2, (FC1, N_CLASSES)) * np.sqrt(2.0 / FC1)
+    ).astype(jnp.float32)
+    params["fc2_b"] = jnp.zeros((N_CLASSES,), jnp.float32)
+    return params
+
+
+def weight_scales(params, bits: int = WEIGHT_BITS):
+    """Per-layer symmetric weight scales at `bits`."""
+    qmax = ref.qmax_for(bits)
+    return {
+        name: float(jnp.max(jnp.abs(w)) / qmax) if name.endswith("_w") else None
+        for name, w in params.items()
+    }
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def edge_stages_float(params, x):
+    """Float edge stages (training / calibration path)."""
+    for i, _ in enumerate(EDGE_CONVS):
+        x = conv3x3_float(x, params[f"conv{i}_w"], params[f"conv{i}_b"])
+        x = jax.nn.relu(x)
+        x = maxpool2(x)
+    return x  # (B, 64, 4, 4)
+
+
+def cloud_stages(params, x):
+    """Cloud-side computation from the boundary tensor to logits (float)."""
+    i0 = len(EDGE_CONVS)
+    for j, _ in enumerate(CLOUD_CONVS):
+        x = conv3x3_float(x, params[f"conv{i0 + j}_w"], params[f"conv{i0 + j}_b"])
+        x = jax.nn.relu(x)
+    x = x.mean(axis=(2, 3))  # GAP → (B, 64)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+def full_forward(params, x):
+    """Float end-to-end forward (training & the Cloud-Only artifact)."""
+    return cloud_stages(params, edge_stages_float(params, x))
+
+
+def edge_forward_quant(
+    params, x, act_scales, boundary_scale, w_scales=None, weight_bits=WEIGHT_BITS
+):
+    """The AOT edge function: quantized convs (Pallas), 4-bit packed output.
+
+    x: (B, 1, 32, 32) f32 → (B, C/2, H·W) uint8 packed codes.
+    `act_scales[i]` is the input scale of conv i; `boundary_scale` the
+    affine scale of the boundary activation. All scales are calibration
+    constants baked into the artifact — pass `w_scales` (from
+    ``weight_scales``) when tracing under jit, since scale extraction
+    needs concrete values.
+    """
+    scales = w_scales if w_scales is not None else weight_scales(params, weight_bits)
+    for i, _ in enumerate(EDGE_CONVS):
+        w = params[f"conv{i}_w"]
+        x = conv3x3_quant(
+            x, w, params[f"conv{i}_b"], act_scales[i], scales[f"conv{i}_w"],
+            bits=weight_bits,
+        )
+        x = jax.nn.relu(x)
+        x = maxpool2(x)
+    b, c, h, w = x.shape
+    # channel-major flatten so the whole batch packs in ONE kernel call:
+    # pairing is along channels, the spatial axis just concatenates batch.
+    flat = x.reshape(b, c, h * w).transpose(1, 0, 2).reshape(c, b * h * w)
+    packed = K.quant_pack4(flat, boundary_scale)  # (c/2, b·hw)
+    return packed.reshape(c // 2, b, h * w).transpose(1, 0, 2)
+
+
+def cloud_forward_packed(params, packed, boundary_scale):
+    """The AOT cloud function: unpack + dequant + cloud stages → logits.
+
+    packed: (B, C/2, H·W) uint8 → (B, 10) f32.
+    """
+    c, h, w = BOUNDARY
+    b, c2, hw = packed.shape
+    flat = packed.transpose(1, 0, 2).reshape(c2, b * hw)
+    feat = K.unpack4_dequant(flat, boundary_scale)  # (c, b·hw)
+    x = feat.reshape(c, b, hw).transpose(1, 0, 2).reshape(b, c, h, w)
+    return cloud_stages(params, x)
+
+
+def calibrate_act_scales(params, sample):
+    """Symmetric input scales for each edge conv + affine boundary scale,
+    from a calibration batch (paper: post-training quantization with
+    profiling data, Fig. 2)."""
+    qmax = ref.qmax_for(WEIGHT_BITS)
+    scales = []
+    x = sample
+    for i, _ in enumerate(EDGE_CONVS):
+        scales.append(float(jnp.max(jnp.abs(x))) / qmax)
+        x = conv3x3_float(x, params[f"conv{i}_w"], params[f"conv{i}_b"])
+        x = jax.nn.relu(x)
+        x = maxpool2(x)
+    levels = (1 << ACT_BITS) - 1
+    # 99.9th percentile clipping (ACIQ-style) for the transmitted tensor
+    amax = float(jnp.quantile(x, 0.999))
+    boundary_scale = max(amax, 1e-6) / levels
+    return scales, boundary_scale
+
+
+def graph_spec():
+    """Architecture metadata consumed by the rust coordinator and the
+    planner-consistency test."""
+    return {
+        "img": IMG,
+        "classes": N_CLASSES,
+        "edge_convs": EDGE_CONVS,
+        "cloud_convs": CLOUD_CONVS,
+        "fc1": FC1,
+        "boundary": list(BOUNDARY),
+        "act_bits": ACT_BITS,
+        "weight_bits": WEIGHT_BITS,
+        "packed_shape": [BOUNDARY[0] // 2, BOUNDARY[1] * BOUNDARY[2]],
+        "input_bytes": IMG * IMG,  # 8-bit grayscale upload
+        "tx_bytes": BOUNDARY[0] // 2 * BOUNDARY[1] * BOUNDARY[2],
+    }

@@ -1,0 +1,117 @@
+"""Build-time training of the LPR digit CNN on the synthetic plate dataset.
+
+Runs once during `make artifacts` (cached in artifacts/weights.npz) and
+records float / quantized-split accuracies for Table 3's reproduction.
+No optimizer library is available in this environment, so a small Adam is
+implemented inline.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def cross_entropy(params, x, y):
+    logits = model.full_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+@jax.jit
+def adam_step(params, opt, x, y, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(cross_entropy)(params, x, y)
+    m, v, t = opt
+    t = t + 1
+    new_m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    new_v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    def upd(p, mm, vv):
+        mhat = mm / (1 - b1**t)
+        vhat = vv / (1 - b2**t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, (new_m, new_v, t), loss
+
+
+def accuracy(forward, x, y, batch=500):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(x[i : i + batch])
+        correct += int((jnp.argmax(logits, -1) == y[i : i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train(steps: int = 600, batch: int = 128, seed: int = 0, log_every: int = 100):
+    (xtr, ytr), (xte, yte) = data.train_test()
+    params = model.init_params(jax.random.PRNGKey(seed))
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    opt = (zeros, jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+    rng = np.random.default_rng(seed)
+    losses = []
+    for step in range(steps):
+        idx = rng.integers(0, xtr.shape[0], batch)
+        params, opt, loss = adam_step(params, opt, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:4d} loss {float(loss):.4f}")
+    return params, losses, (xtr, ytr), (xte, yte)
+
+
+def evaluate_all(params, xte, yte, xcal):
+    """Float accuracy + quantized-split accuracy (the Table 3 numbers)."""
+    float_fwd = jax.jit(lambda x: model.full_forward(params, x))
+    acc_float = accuracy(float_fwd, jnp.asarray(xte), jnp.asarray(yte))
+
+    act_scales, boundary_scale = model.calibrate_act_scales(params, jnp.asarray(xcal))
+    w_scales = model.weight_scales(params)
+
+    def split_fwd(x):
+        packed = model.edge_forward_quant(
+            params, x, act_scales, boundary_scale, w_scales
+        )
+        return model.cloud_forward_packed(params, packed, boundary_scale)
+
+    # interpret-mode Pallas is build-time-only and slow; 500 test images
+    # give the quantized accuracy to ±2% — plenty for the Table 3 check
+    n_q = min(500, xte.shape[0])
+    acc_split = accuracy(jax.jit(split_fwd), jnp.asarray(xte[:n_q]), jnp.asarray(yte[:n_q]))
+    return acc_float, acc_split, act_scales, boundary_scale
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    args = ap.parse_args()
+
+    params, losses, (xtr, _), (xte, yte) = train(steps=args.steps)
+    acc_float, acc_split, act_scales, boundary_scale = evaluate_all(
+        params, xte, yte, xtr[:512]
+    )
+    print(f"float acc {acc_float:.4f}  quant-split acc {acc_split:.4f}")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    np.savez(
+        args.out,
+        **{k: np.asarray(v) for k, v in params.items()},
+        __act_scales=np.asarray(act_scales, dtype=np.float32),
+        __boundary_scale=np.float32(boundary_scale),
+    )
+    meta = {
+        "acc_float": acc_float,
+        "acc_quant_split": acc_split,
+        "loss_curve": losses[:: max(1, len(losses) // 100)],
+        "final_loss": losses[-1],
+    }
+    with open(os.path.join(os.path.dirname(args.out), "train_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

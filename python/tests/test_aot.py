@@ -1,0 +1,91 @@
+"""AOT pipeline tests: HLO-text fidelity (the large-constants regression)
+and artifact/metadata consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_embeds_large_constants():
+    """Regression: xla's default HLO printer elides big literals as `{...}`,
+    which the rust text parser silently loads as ZEROS. to_hlo_text must
+    print them in full."""
+    big = jnp.arange(4096, dtype=jnp.float32).reshape(64, 64) / 1000.0
+
+    def f(x):
+        return (x @ big,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text, "large constants were elided"
+    # spot-check an actual weight value appears
+    assert "0.001" in text
+
+
+def test_hlo_text_is_parseable_header():
+    def f(x):
+        return (x + 1.0,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "metadata.json")),
+    reason="run `make artifacts` first",
+)
+class TestArtifacts:
+    @pytest.fixture(autouse=True)
+    def meta(self):
+        with open(os.path.join(ARTIFACTS, "metadata.json")) as f:
+            self.meta = json.load(f)
+
+    def test_metadata_matches_model_spec(self):
+        # JSON round-trips tuples as lists; normalize before comparing
+        spec = json.loads(json.dumps(model.graph_spec()))
+        assert self.meta["graph"] == spec
+
+    def test_all_artifacts_exist_and_carry_weights(self):
+        arts = self.meta["artifacts"]
+        paths = [arts["edge"], arts["full"], *arts["cloud"].values()]
+        for rel in paths:
+            p = os.path.join(ARTIFACTS, rel)
+            assert os.path.exists(p), p
+            text = open(p).read()
+            assert "{...}" not in text, f"{rel} has elided constants"
+            assert text.startswith("HloModule")
+
+    def test_eval_set_well_formed(self):
+        buf = open(os.path.join(ARTIFACTS, "eval_set.bin"), "rb").read()
+        n = int(np.frombuffer(buf[:4], np.uint32)[0])
+        img = model.IMG * model.IMG
+        assert len(buf) == 4 + n * img * 4 + n
+        images = np.frombuffer(buf[4 : 4 + n * img * 4], "<f4")
+        assert images.min() >= 0.0 and images.max() <= 1.0
+        labels = np.frombuffer(buf[4 + n * img * 4 :], np.uint8)
+        assert labels.max() <= 9
+
+    def test_recorded_accuracy_is_high(self):
+        acc = self.meta["accuracy"]
+        assert acc["acc_float"] > 0.95
+        assert acc["acc_quant_split"] > 0.9
+        # quantization costs at most a couple of points
+        assert acc["acc_float"] - acc["acc_quant_split"] < 0.05
+
+    def test_scales_positive(self):
+        assert self.meta["boundary_scale"] > 0
+        assert all(s > 0 for s in self.meta["act_scales"])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes / scales / bit-widths; assert_allclose against
+the reference is the CORE correctness signal for the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import quant as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- quant_matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    bits=st.sampled_from([2, 4, 6, 8]),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits):
+    x = randn(m, k)
+    w = randn(k, n, scale=0.1)
+    xs = float(np.abs(x).max() / ref.qmax_for(bits) + 1e-9)
+    ws = float(np.abs(w).max() / ref.qmax_for(bits) + 1e-9)
+    got = K.quant_matmul(jnp.asarray(x), jnp.asarray(w), xs, ws, bits=bits)
+    want = ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), xs, ws, bits)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_large_tile_boundary():
+    # exceeds one 128-tile in every dimension → exercises the K-loop
+    m, k, n = 130, 257, 140
+    x = randn(m, k)
+    w = randn(k, n, scale=0.05)
+    xs, ws = 0.02, 0.001
+    got = K.quant_matmul(jnp.asarray(x), jnp.asarray(w), xs, ws, bits=8)
+    want = ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), xs, ws, 8)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_exact_integers():
+    # integer-valued inputs on the grid are reproduced exactly
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    w = np.ones((4, 2), np.float32)
+    got = K.quant_matmul(jnp.asarray(x), jnp.asarray(w), 1.0, 1.0, bits=8)
+    assert_allclose(np.asarray(got), x @ w)
+
+
+def test_quant_matmul_accumulator_bound():
+    # |acc| < qmax² · K must stay in f32's exact-integer range (< 2^24)
+    k = 1024
+    assert ref.qmax_for(8) ** 2 * k < 2**24
+
+
+# ---------------------------------------------------------------- pack/unpack
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c2=st.integers(1, 32),
+    length=st.integers(1, 64),
+)
+def test_pack_unpack_roundtrip(c2, length):
+    codes = RNG.integers(0, 16, (2 * c2, length)).astype(np.uint8)
+    packed = ref.pack4_ref(jnp.asarray(codes))
+    assert packed.shape == (c2, length)
+    un = ref.unpack4_ref(packed)
+    assert np.array_equal(np.asarray(un), codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    length=st.integers(1, 64),
+    amax=st.floats(0.1, 10.0),
+)
+def test_quant_pack4_kernel_matches_ref(c, length, amax):
+    x = np.abs(randn(c, length, scale=amax / 3)).astype(np.float32)
+    scale = amax / 15.0
+    got = K.quant_pack4(jnp.asarray(x), scale)
+    want = ref.quant_pack_ref(jnp.asarray(x), scale, 4)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(c2=st.integers(1, 32), length=st.integers(1, 64))
+def test_unpack_dequant_kernel_matches_ref(c2, length):
+    packed = RNG.integers(0, 256, (c2, length)).astype(np.uint8)
+    scale = 0.37
+    got = K.unpack4_dequant(jnp.asarray(packed), scale)
+    want = ref.unpack_dequant_ref(jnp.asarray(packed), scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_pack_then_unpack_dequant_error_bounded():
+    # end-to-end codec error ≤ scale/2 per element
+    x = np.abs(randn(8, 16))
+    scale = float(x.max()) / 15.0
+    packed = K.quant_pack4(jnp.asarray(x), scale)
+    back = K.unpack4_dequant(packed, scale)
+    assert float(np.abs(np.asarray(back) - x).max()) <= scale / 2 + 1e-6
+
+
+def test_packed_is_half_the_bytes():
+    x = np.abs(randn(64, 16))
+    packed = K.quant_pack4(jnp.asarray(x), 0.1)
+    assert packed.size * 2 == x.size
+    assert packed.dtype == jnp.uint8
+
+
+# ---------------------------------------------------------------- fake quant
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 6, 8]), amax=st.floats(0.01, 100.0))
+def test_fake_quant_error_bound(bits, amax):
+    x = randn(256, scale=amax / 3)
+    x = np.clip(x, -amax, amax).astype(np.float32)
+    scale = amax / ref.qmax_for(bits)
+    y = np.asarray(K.fake_quant(jnp.asarray(x), scale, bits))
+    assert np.abs(y - x).max() <= scale / 2 + 1e-6
+
+
+def test_fake_quant_monotone_bits():
+    x = randn(2048)
+    err = []
+    for bits in [2, 4, 8]:
+        scale = float(np.abs(x).max()) / ref.qmax_for(bits)
+        y = np.asarray(K.fake_quant(jnp.asarray(x), scale, bits))
+        err.append(float(((y - x) ** 2).mean()))
+    assert err[0] > err[1] > err[2]
+
+
+# -------------------------------------------------------------- jit-compat
+
+def test_kernels_lower_under_jit():
+    # The AOT path jits the whole edge function; kernels must trace.
+    x = jnp.asarray(np.abs(randn(4, 16)))
+
+    @jax.jit
+    def f(t):
+        return K.quant_pack4(t, 0.05)
+
+    packed = f(x)
+    assert packed.shape == (2, 16)
+
+    @jax.jit
+    def g(a, b):
+        return K.quant_matmul(a, b, 0.01, 0.01, bits=8)
+
+    y = g(jnp.asarray(randn(8, 8)), jnp.asarray(randn(8, 8)))
+    assert y.shape == (8, 8)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

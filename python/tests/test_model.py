@@ -1,0 +1,105 @@
+"""L2 correctness: model shapes, edge/cloud partition consistency, and the
+quantized split path vs the float reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import data, model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(KEY)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = data.make_dataset(16, seed=3)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_full_forward_shape(params, batch):
+    x, _ = batch
+    logits = model.full_forward(params, x)
+    assert logits.shape == (16, model.N_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_edge_stage_shapes(params, batch):
+    x, _ = batch
+    f = model.edge_stages_float(params, x)
+    assert f.shape == (16, *model.BOUNDARY)
+
+
+def test_split_equals_full_when_float(params, batch):
+    # composing float edge + cloud must equal the full forward exactly
+    x, _ = batch
+    full = model.full_forward(params, x)
+    split = model.cloud_stages(params, model.edge_stages_float(params, x))
+    assert_allclose(np.asarray(full), np.asarray(split), rtol=1e-6)
+
+
+def test_quant_split_close_to_float(params, batch):
+    x, _ = batch
+    scales, bscale = model.calibrate_act_scales(params, x)
+    packed = model.edge_forward_quant(params, x, scales, bscale)
+    spec = model.graph_spec()
+    assert packed.shape == (16, *spec["packed_shape"])
+    assert packed.dtype == jnp.uint8
+    logits_q = model.cloud_forward_packed(params, packed, bscale)
+    logits_f = model.full_forward(params, x)
+    # quantization shifts logits but must stay correlated (same argmax for
+    # most samples on random init is too strict; check bounded deviation)
+    err = float(jnp.abs(logits_q - logits_f).mean())
+    mag = float(jnp.abs(logits_f).mean()) + 1e-6
+    assert err / mag < 1.0, f"relative logit error {err / mag}"
+
+
+def test_transmission_is_half_input(params, batch):
+    spec = model.graph_spec()
+    assert spec["tx_bytes"] * 2 == spec["input_bytes"]
+
+
+def test_im2col_matches_lax_conv(params):
+    # gold-check the im2col conv against lax.conv_general_dilated
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(2), (3 * 9, 5)) * 0.1
+    got = model.conv3x3_float(x, w, jnp.zeros((5,)))
+    # reshape weights to OIHW: w is (C*9, cout) with (c, dy*3+dx) layout
+    w4 = w.reshape(3, 3, 3, 5).transpose(3, 0, 1, 2)  # (cout, cin, kh, kw)
+    want = jax.lax.conv_general_dilated(
+        x, w4, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_maxpool2(params):
+    x = jnp.arange(16.0).reshape(1, 1, 4, 4)
+    p = model.maxpool2(x)
+    assert p.shape == (1, 1, 2, 2)
+    assert_allclose(np.asarray(p)[0, 0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+def test_dataset_is_learnable_signal():
+    # different digits must differ; same digit twice must correlate
+    x, y = data.make_dataset(200, seed=1)
+    assert x.shape == (200, 1, 32, 32)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert len(np.unique(y)) == 10
+
+
+def test_calibration_scales_positive(params, batch):
+    x, _ = batch
+    scales, bscale = model.calibrate_act_scales(params, x)
+    assert len(scales) == len(model.EDGE_CONVS)
+    assert all(s > 0 for s in scales)
+    assert bscale > 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,80 @@
+"""Validate the rust-side distortion→accuracy proxy against *real measured*
+accuracy: sweep the edge weight bit-width on the trained LPR CNN and check
+the qualitative bands the proxy is calibrated to (DESIGN.md §3):
+
+* W8: accuracy ≈ float (drop < 2 pts)
+* monotone: W8 ≥ W4 ≥ W2
+* W2: collapse (large drop)
+
+This is the strongest evidence available in this environment that the
+proxy's *ordering and threshold behaviour* — the only properties the
+Auto-Split selector consumes — match reality on real trained weights.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+WEIGHTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "weights.npz")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    if not os.path.exists(WEIGHTS):
+        pytest.skip("run `make artifacts` first")
+    z = np.load(WEIGHTS)
+    params = {k: jnp.asarray(z[k]) for k in z.files if not k.startswith("__")}
+    act_scales = [float(s) for s in z["__act_scales"]]
+    bscale = float(z["__boundary_scale"])
+    xte, yte = data.make_dataset(400, seed=123)
+    return params, act_scales, bscale, jnp.asarray(xte), jnp.asarray(yte)
+
+
+def accuracy_at_bits(trained, bits):
+    params, act_scales, bscale, x, y = trained
+    w_scales = model.weight_scales(params, bits)
+
+    @jax.jit
+    def fwd(t):
+        packed = model.edge_forward_quant(
+            params, t, act_scales, bscale, w_scales, weight_bits=bits
+        )
+        return model.cloud_forward_packed(params, packed, bscale)
+
+    correct = 0
+    for i in range(0, x.shape[0], 200):
+        logits = fwd(x[i : i + 200])
+        correct += int((jnp.argmax(logits, -1) == y[i : i + 200]).sum())
+    return correct / x.shape[0]
+
+
+@pytest.fixture(scope="module")
+def sweep(trained):
+    return {bits: accuracy_at_bits(trained, bits) for bits in (2, 4, 8)}
+
+
+def test_w8_matches_float(trained, sweep):
+    params, _, _, x, y = trained
+    logits = model.full_forward(params, x)
+    acc_float = float((jnp.argmax(logits, -1) == y).mean())
+    assert acc_float > 0.95
+    assert sweep[8] > acc_float - 0.02, f"W8 {sweep[8]} vs float {acc_float}"
+
+
+def test_monotone_in_bits(sweep):
+    assert sweep[8] >= sweep[4] >= sweep[2], f"{sweep}"
+
+
+def test_w2_collapses(sweep):
+    # 2-bit weights without retraining must lose a lot of accuracy —
+    # the proxy's "U2 catastrophic" band, measured for real
+    assert sweep[2] < sweep[8] - 0.15, f"{sweep}"
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

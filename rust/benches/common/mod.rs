@@ -1,0 +1,47 @@
+//! Shared setup for the paper-table benches.
+
+use auto_split::graph::{optimize_for_inference, Graph};
+use auto_split::profile::ModelProfile;
+use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
+use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx, Solution, SolutionList};
+use auto_split::zoo::{self, Task};
+
+pub struct ModelBench {
+    pub raw: Graph,
+    pub opt: Graph,
+    pub profile: ModelProfile,
+    pub task: Task,
+}
+
+impl ModelBench {
+    pub fn new(name: &str) -> Self {
+        let (raw, task) = zoo::by_name(name).unwrap();
+        let opt = optimize_for_inference(&raw).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        ModelBench { raw, opt, profile, task }
+    }
+
+    pub fn lm(&self, mbps: f64) -> LatencyModel {
+        LatencyModel::new(
+            AcceleratorConfig::eyeriss(),
+            AcceleratorConfig::tpu(),
+            Uplink::mbps(mbps),
+        )
+    }
+
+    pub fn threshold(&self) -> f64 {
+        match self.task {
+            Task::Classification => 5.0,
+            Task::Detection => 10.0,
+        }
+    }
+
+    pub fn plan(&self, lm: &LatencyModel, threshold: f64) -> (SolutionList, Solution) {
+        let cfg = AutoSplitConfig { max_drop_pct: threshold, ..Default::default() };
+        auto_split(&self.opt, &self.profile, lm, self.task, &cfg)
+    }
+
+    pub fn baselines<'a>(&'a self, lm: &'a LatencyModel) -> BaselineCtx<'a> {
+        BaselineCtx::new(&self.opt, &self.profile, lm, self.task)
+    }
+}

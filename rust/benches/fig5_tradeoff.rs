@@ -1,0 +1,68 @@
+//! Fig. 5 — accuracy vs latency trade-off scatter for ResNet-50 (left) and
+//! YOLOv3 (right). Prints the feasible-solution frontier (normalized to
+//! Cloud-Only), the uniform-quantization baselines U2/U4/U6/U8, and the
+//! solution Auto-Split suggests per user error threshold.
+
+mod common;
+
+use auto_split::report::Table;
+use auto_split::splitter::Placement;
+use common::ModelBench;
+
+fn run(model: &str, thresholds: &[f64]) {
+    let mb = ModelBench::new(model);
+    let lm = mb.lm(3.0);
+    let (list, _) = mb.plan(&lm, 100.0); // full frontier, no threshold
+    let ctx = mb.baselines(&lm);
+    let cloud = ctx.cloud_only();
+    let cloud_lat = cloud.total_latency();
+
+    let mut t = Table::new(
+        format!("Fig. 5 ({model}) — feasible solutions, normalized to CLOUD-ONLY"),
+        &["point", "drop%", "latency%", "placement", "split@"],
+    );
+    for (i, s) in list.pareto().iter().enumerate() {
+        t.row(&[
+            format!("pareto{i}"),
+            format!("{:.1}", s.acc_drop_pct),
+            format!("{:.0}", 100.0 * s.total_latency() / cloud_lat),
+            s.placement.to_string(),
+            s.split_index.to_string(),
+        ]);
+    }
+    for bits in [2u8, 4, 6, 8] {
+        let u = ctx.uniform_edge_only(bits);
+        t.row(&[
+            format!("U{bits}"),
+            format!("{:.1}", u.acc_drop_pct),
+            format!("{:.0}", 100.0 * u.total_latency() / cloud_lat),
+            u.placement.to_string(),
+            u.split_index.to_string(),
+        ]);
+    }
+    t.row(&["CLOUD16".into(), "0.0".into(), "100".into(), Placement::CloudOnly.to_string(), "0".into()]);
+    println!("{}", t.render());
+
+    let mut sel = Table::new(
+        format!("Fig. 5 ({model}) — Auto-Split selection per error threshold"),
+        &["threshold%", "latency%", "drop%", "placement", "split@"],
+    );
+    for &a in thresholds {
+        let s = list.select(a).unwrap();
+        sel.row(&[
+            format!("{a}"),
+            format!("{:.0}", 100.0 * s.total_latency() / cloud_lat),
+            format!("{:.2}", s.acc_drop_pct),
+            s.placement.to_string(),
+            s.split_index.to_string(),
+        ]);
+    }
+    println!("{}", sel.render());
+}
+
+fn main() {
+    // paper: thresholds 0/1/5/10% for ResNet-50, 0/10/20/50% for YOLOv3
+    run("resnet50", &[0.0, 1.0, 5.0, 10.0]);
+    run("yolov3", &[0.0, 10.0, 20.0, 50.0]);
+    println!("paper shape: ResNet-50 latency 100/57/43/43%; YOLOv3 100/37/32/24%.");
+}

@@ -1,0 +1,84 @@
+//! Fig. 6 — overall latency (bars, normalized to CLOUD-ONLY) + accuracy
+//! comparison across the nine benchmark models, plus the §5.3 headline
+//! aggregate claims. Also prints Table 1 (the platform configuration the
+//! whole evaluation runs on) and times the planner itself.
+
+mod common;
+
+use auto_split::report::{bench, Table};
+use auto_split::sim::AcceleratorConfig;
+use common::ModelBench;
+
+fn main() {
+    // ---- Table 1 ----
+    let mut t1 = Table::new(
+        "Table 1 — hardware platforms (simulator configuration)",
+        &["attribute", "eyeriss (edge)", "tpu (cloud)"],
+    );
+    let e = AcceleratorConfig::eyeriss();
+    let c = AcceleratorConfig::tpu();
+    t1.row(&["array".into(), format!("{}x{}", e.rows, e.cols), format!("{}x{}", c.rows, c.cols)]);
+    t1.row(&["on-chip".into(), format!("{} KB", e.on_chip_bytes >> 10), format!("{} MB", c.on_chip_bytes >> 20)]);
+    t1.row(&["off-chip".into(), format!("{} GB", e.off_chip_bytes >> 30), format!("{} GB", c.off_chip_bytes >> 30)]);
+    t1.row(&["bandwidth".into(), format!("{:.0} GB/s", e.dram_bw / 1e9), format!("{:.0} GB/s", c.dram_bw / 1e9)]);
+    t1.row(&["peak".into(), format!("{:.0} GOPs", e.peak_ops() / 1e9), format!("{:.0} TOPs", c.peak_ops() / 1e12)]);
+    t1.row(&["uplink".into(), "3 Mbps".into(), "3 Mbps".into()]);
+    println!("{}", t1.render());
+
+    // ---- Fig. 6 ----
+    let mut t = Table::new(
+        "Fig. 6 — latency normalized to CLOUD-ONLY (%), accuracy drop (pts)",
+        &["model", "auto-split", "qdmp", "neurosrg", "u8", "cloud16", "placement", "drop%"],
+    );
+    let (mut vs_qdmp, mut vs_ns, mut vs_u8, mut vs_cloud) = (vec![], vec![], vec![], vec![]);
+    let mut planner_s = 0.0;
+    let models = [
+        "resnet18", "resnet50", "googlenet", "resnext50_32x4d", "mobilenet_v2",
+        "mnasnet1_0", "yolov3_tiny", "yolov3", "yolov3_spp",
+    ];
+    for name in models {
+        let mb = ModelBench::new(name);
+        let lm = mb.lm(3.0);
+        let t0 = std::time::Instant::now();
+        let (_, sel) = mb.plan(&lm, mb.threshold());
+        planner_s += t0.elapsed().as_secs_f64();
+        let ctx = mb.baselines(&lm);
+        let cloud = ctx.cloud_only().total_latency();
+        let q = ctx.qdmp().total_latency();
+        let ns = ctx.neurosurgeon().total_latency();
+        let u8l = ctx.uniform_edge_only(8).total_latency();
+        let a = sel.total_latency();
+        let pct = |s: f64| format!("{:.0}", 100.0 * s / cloud);
+        t.row(&[
+            name.into(),
+            pct(a),
+            pct(q),
+            pct(ns),
+            pct(u8l),
+            "100".into(),
+            sel.placement.to_string(),
+            format!("{:.1}", sel.acc_drop_pct),
+        ]);
+        vs_qdmp.push(1.0 - a / q);
+        vs_ns.push(1.0 - a / ns);
+        vs_u8.push(1.0 - a / u8l);
+        vs_cloud.push(1.0 - a / cloud);
+    }
+    println!("{}", t.render());
+
+    let mean = |v: &[f64]| 100.0 * v.iter().sum::<f64>() / v.len() as f64;
+    println!("§5.3 headline (means across the suite, paper in parens):");
+    println!("  vs U8           {:>5.0}%  (25%)", mean(&vs_u8));
+    println!("  vs QDMP         {:>5.0}%  (40%)", mean(&vs_qdmp));
+    println!("  vs Neurosurgeon {:>5.0}%  (47%)", mean(&vs_ns));
+    println!("  vs Cloud-Only   {:>5.0}%  (70%)", mean(&vs_cloud));
+
+    // planner hot-path timing (offline, but drives every bench)
+    let mb = ModelBench::new("resnet50");
+    let lm = mb.lm(3.0);
+    let st = bench(1, 5, || {
+        let _ = mb.plan(&lm, 5.0);
+    });
+    println!("\nplanner timing: full Algorithm 1 on resnet50: {st}");
+    println!("total planning time for the 9-model suite: {planner_s:.2}s");
+}

@@ -1,0 +1,88 @@
+//! Fig. 7 — ResNet-50 latency & edge-model memory for the two competing
+//! split points (Auto-Split's early split vs QDMP's late split) under
+//! decreasing weight/activation/transmission bit-widths
+//! (W16A16-T16 → W8A8-T8 → W8A8-T1 → W4A4-T1 → W2A2-T1).
+
+mod common;
+
+use auto_split::quant::{DistortionTable, Metric};
+use auto_split::report::Table;
+use auto_split::splitter::autosplit::{evaluate_assignment, table_with16};
+use common::ModelBench;
+
+fn main() {
+    let mb = ModelBench::new("resnet50");
+    let lm = mb.lm(3.0);
+    let order = mb.opt.topo_order();
+
+    // the two splits of Fig. 7: the paper's early split@12 (an early-stage
+    // boundary whose transmission volume is ≈3× the late split's — we pin
+    // the stage-2 exit, the matching single-crossing-tensor cut) and
+    // QDMP's late split@53 (the last bottleneck conv3).
+    let pos_of = |name: &str| -> usize {
+        order
+            .iter()
+            .position(|&id| mb.opt.layers[id].name == name)
+            .unwrap_or(order.len() - 2)
+    };
+    let early = pos_of("layer2.3.add"); // 512×28×28 crossing ≈ 3× late
+    let late = pos_of("layer4.2.conv3.conv");
+
+    let mut table = DistortionTable::build(&mb.opt, &mb.profile, &[1, 2, 4, 6, 8], Metric::Mse);
+    table = table_with16(&table);
+
+    let mut t = Table::new(
+        "Fig. 7 — ResNet-50: latency & edge memory per (W, A, T) config",
+        &["config", "split", "idx", "latency(s)", "tr(s)", "edge MB", "tx KB"],
+    );
+    let configs: [(&str, u8, u8, u8); 5] = [
+        ("W16A16-T16", 16, 16, 16),
+        ("W8A8-T8", 8, 8, 8),
+        ("W8A8-T1", 8, 8, 1),
+        ("W4A4-T1", 4, 4, 1),
+        ("W2A2-T1", 2, 2, 1),
+    ];
+    let mut early_t1 = 0.0;
+    let mut late_t1 = 0.0;
+    for (pos, tag) in [(early, "early(AS)"), (late, "late(QDMP)")] {
+        for (name, w, a, tb) in configs {
+            let mut w_bits = vec![w; mb.opt.len()];
+            let mut a_bits = vec![a; mb.opt.len()];
+            // force the transmission bit-width on the crossing tensors
+            let mask = mb.opt.prefix_mask(&order, pos);
+            for u in mb.opt.cut_tensors(&mask) {
+                a_bits[u] = tb;
+            }
+            // keep the Cloud-side float
+            for &id in &order[pos + 1..] {
+                w_bits[id] = 16;
+                a_bits[id] = 16;
+            }
+            let s = evaluate_assignment(
+                name, &mb.opt, &order, Some(pos), &w_bits, &a_bits, &lm, &table, mb.task,
+            );
+            if name == "W8A8-T1" {
+                if pos == early {
+                    early_t1 = s.total_latency();
+                } else {
+                    late_t1 = s.total_latency();
+                }
+            }
+            t.row(&[
+                name.into(),
+                tag.into(),
+                s.split_index.to_string(),
+                format!("{:.3}", s.total_latency()),
+                format!("{:.3}", s.tr_s),
+                format!("{:.2}", s.edge_model_bytes as f64 / (1 << 20) as f64),
+                format!("{:.1}", s.tx_bytes as f64 / 1024.0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "W8A8-T1: early split is {:.0}% {} than late (paper: early 7% faster once T→1)",
+        100.0 * (late_t1 - early_t1).abs() / late_t1,
+        if early_t1 < late_t1 { "faster" } else { "slower" }
+    );
+}

@@ -1,0 +1,96 @@
+//! Performance bench for the L3 hot paths (the §Perf instrument):
+//! * the full planner (Algorithm 1) per model
+//! * its phases: graph optimization, profiling, distortion table,
+//!   candidate enumeration, min-cut
+//! * the serving-side packet codec (binary framing)
+
+mod common;
+
+use auto_split::coordinator::{ActivationPacket, Link};
+use auto_split::graph::{min_cut_split, optimize_for_inference};
+use auto_split::profile::ModelProfile;
+use auto_split::quant::{DistortionTable, Metric};
+use auto_split::report::{bench, Table};
+use auto_split::sim::Uplink;
+use auto_split::splitter::potential_splits;
+use auto_split::zoo;
+use common::ModelBench;
+
+fn main() {
+    let mut t = Table::new(
+        "L3 hot paths (mean wall time)",
+        &["phase", "resnet50", "yolov3"],
+    );
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["graph optimize".into()],
+        vec!["profile synth".into()],
+        vec!["distortion table".into()],
+        vec!["candidates (eq.6)".into()],
+        vec!["min-cut (QDMP)".into()],
+        vec!["full Algorithm 1".into()],
+    ];
+    for name in ["resnet50", "yolov3"] {
+        let (raw, _) = zoo::by_name(name).unwrap();
+        let mb = ModelBench::new(name);
+        let lm = mb.lm(3.0);
+        let order = mb.opt.topo_order();
+
+        let s = bench(1, 10, || {
+            let _ = std::hint::black_box(optimize_for_inference(&raw));
+        });
+        rows[0].push(format!("{:.2}ms", s.mean * 1e3));
+
+        let s = bench(1, 5, || {
+            let _ = std::hint::black_box(ModelProfile::synthesize(&mb.opt));
+        });
+        rows[1].push(format!("{:.2}ms", s.mean * 1e3));
+
+        let s = bench(1, 5, || {
+            let _ = std::hint::black_box(DistortionTable::build(
+                &mb.opt,
+                &mb.profile,
+                &[2, 4, 6, 8],
+                Metric::Mse,
+            ));
+        });
+        rows[2].push(format!("{:.2}ms", s.mean * 1e3));
+
+        let s = bench(1, 10, || {
+            let _ = std::hint::black_box(potential_splits(&mb.opt, &order, 2, 32 << 20));
+        });
+        rows[3].push(format!("{:.2}ms", s.mean * 1e3));
+
+        let n = mb.opt.len();
+        let le: Vec<f64> = (0..n).map(|i| lm.edge_layer(&mb.opt, i, 16, 16)).collect();
+        let lc: Vec<f64> = (0..n).map(|i| lm.cloud_layer(&mb.opt, i)).collect();
+        let lt: Vec<f64> =
+            (0..n).map(|i| lm.transmission(mb.opt.layers[i].act_elems(), 16)).collect();
+        let s = bench(1, 10, || {
+            let _ = std::hint::black_box(min_cut_split(&mb.opt, &le, &lc, &lt));
+        });
+        rows[4].push(format!("{:.2}ms", s.mean * 1e3));
+
+        let s = bench(1, 3, || {
+            let _ = std::hint::black_box(mb.plan(&lm, mb.threshold()));
+        });
+        rows[5].push(format!("{:.1}ms", s.mean * 1e3));
+    }
+    for r in rows {
+        t.row(&r);
+    }
+    println!("{}", t.render());
+
+    // serving codec hot path
+    let p = ActivationPacket {
+        bits: 4,
+        scale: 0.05,
+        zero_point: 0.0,
+        shape: [1, 32, 16, 1],
+        payload: (0..512u32).map(|i| i as u8).collect(),
+    };
+    let link = Link::new(Uplink::paper_default());
+    let s = bench(100, 1000, || {
+        let _ = std::hint::black_box(link.transmit(&p).unwrap());
+    });
+    println!("packet codec (512 B payload): {s}");
+}

@@ -1,0 +1,55 @@
+//! Open-loop serving latency under offered load (Poisson arrivals): the
+//! serving-system counterpart of the paper's per-request latency numbers.
+//! Sweeps the offered rate and reports p50/p99 arrival-to-response latency
+//! and achieved throughput for the split pipeline.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+mod common;
+
+use auto_split::coordinator::{poisson_schedule, replay, ServeConfig, Server};
+use auto_split::report::Table;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("metadata.json").exists() {
+        println!("SKIP serving_load: run `make artifacts`");
+        return;
+    }
+    let buf = std::fs::read(dir.join("eval_set.bin")).unwrap();
+    let n_eval = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let img = 32 * 32;
+    let images: Vec<Vec<f32>> = (0..n_eval.min(64))
+        .map(|s| {
+            buf[4 + s * img * 4..4 + (s + 1) * img * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect()
+        })
+        .collect();
+
+    let mut t = Table::new(
+        "Serving latency under open-loop Poisson load (split pipeline)",
+        &["offered rps", "achieved rps", "p50 ms", "p99 ms", "errors"],
+    );
+    let server = Server::start(ServeConfig::new(dir)).expect("server");
+    // warm the executables
+    for i in 0..8 {
+        let _ = server.infer(images[i % images.len()].clone());
+    }
+    for rate in [50.0, 150.0, 400.0] {
+        let schedule = poisson_schedule(rate, (rate * 1.5) as usize, images.len(), 11);
+        let report = replay(&server, &images, &schedule).expect("replay");
+        t.row(&[
+            format!("{rate:.0}"),
+            format!("{:.0}", report.achieved_rps),
+            format!("{:.2}", report.quantile(0.5) * 1e3),
+            format!("{:.2}", report.quantile(0.99) * 1e3),
+            report.errors.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("expected: p99 grows with offered load as batches fill; throughput tracks");
+    println!("the offered rate until the PJRT compute bound.");
+}

@@ -1,0 +1,55 @@
+//! Table 10 — potential split points towards the end of ResNet-50: output
+//! volume, shape, and volume difference vs the input image (negative ⇒
+//! viable), plus which of the equal-volume candidates Auto-Split ranks
+//! first once quantization sensitivity enters.
+
+mod common;
+
+use auto_split::quant::{DistortionTable, Metric};
+use auto_split::report::Table;
+use common::ModelBench;
+
+fn main() {
+    let mb = ModelBench::new("resnet50");
+    let order = mb.opt.topo_order();
+    let input_vol = mb.opt.input_elems() as i64;
+    let table = DistortionTable::build(&mb.opt, &mb.profile, &[2, 4, 6, 8], Metric::Mse);
+
+    let mut t = Table::new(
+        "Table 10 — tail split candidates of ResNet-50",
+        &["idx", "layer", "volume", "shape", "vol diff", "act D@4bit"],
+    );
+    let mut weighted = 0usize;
+    for (pos, &id) in order.iter().enumerate() {
+        let l = &mb.opt.layers[id];
+        if l.kind.is_gemm() {
+            weighted += 1;
+        }
+        // tail region: the last bottleneck stage + classifier
+        if !(l.name.contains("layer4") && l.name.contains("conv3")) && l.name != "fc" {
+            continue;
+        }
+        let mask = mb.opt.prefix_mask(&order, pos);
+        let cut = mb.opt.cut_elems(&mask) as i64;
+        t.row(&[
+            weighted.to_string(),
+            l.name.clone(),
+            cut.to_string(),
+            l.out_shape.to_string(),
+            format!("{}", cut - input_vol),
+            format!("{:.5}", table.act[id][1]),
+        ]);
+    }
+    t.row(&[
+        "-".into(),
+        "i/p image".into(),
+        input_vol.to_string(),
+        "(3,224,224)".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+    println!("paper Table 10: layer4.x.conv3 all at volume 100352 (diff -50176 elems vs");
+    println!("150528 input); the per-layer quantization sensitivity (last column) breaks");
+    println!("the tie between the equal-volume candidates (§B 'selecting split points').");
+}

@@ -1,0 +1,49 @@
+//! Table 2 — split index and edge-model size: Auto-Split vs QDMP_E vs
+//! QDMP_E+U4 on GoogleNet, ResNet-50 and the YOLOv3 family.
+
+mod common;
+
+use auto_split::report::Table;
+use common::ModelBench;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 2 — split idx / edge model size (MB)",
+        &["model", "AS idx", "AS MB", "QDMP_E idx", "QDMP_E MB", "QDMP_E+U4 MB"],
+    );
+    let mut size_ratio_qdmp = vec![];
+    let mut size_ratio_u4 = vec![];
+    for name in ["googlenet", "resnet50", "yolov3_spp", "yolov3_tiny", "yolov3"] {
+        let mb = ModelBench::new(name);
+        let lm = mb.lm(3.0);
+        let (_, sel) = mb.plan(&lm, mb.threshold());
+        let ctx = mb.baselines(&lm);
+        let qe = ctx.qdmp_e();
+        let qu4 = ctx.qdmp_e_u4();
+        let mbf = |b: usize| b as f64 / (1 << 20) as f64;
+        t.row(&[
+            name.into(),
+            sel.split_index.to_string(),
+            format!("{:.2}", mbf(sel.edge_model_bytes)),
+            qe.split_index.to_string(),
+            format!("{:.1}", mbf(qe.edge_model_bytes)),
+            format!("{:.2}", mbf(qu4.edge_model_bytes)),
+        ]);
+        // only meaningful when both methods actually split
+        if sel.edge_model_bytes > 0 && qe.edge_model_bytes > 0 {
+            size_ratio_qdmp.push(qe.edge_model_bytes as f64 / sel.edge_model_bytes as f64);
+            size_ratio_u4.push(qu4.edge_model_bytes.max(1) as f64 / sel.edge_model_bytes as f64);
+        }
+    }
+    println!("{}", t.render());
+    let gm = |v: &[f64]| {
+        (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+    };
+    if !size_ratio_qdmp.is_empty() {
+        println!(
+            "edge-size reduction (geo-mean): {:.1}x vs QDMP_E (paper 14.7x), {:.1}x vs QDMP_E+U4 (paper 3.1x)",
+            gm(&size_ratio_qdmp),
+            gm(&size_ratio_u4)
+        );
+    }
+}

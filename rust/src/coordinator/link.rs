@@ -1,0 +1,133 @@
+//! Simulated edge→cloud transport.
+//!
+//! Physically this deployment has both "devices" in one process, so the
+//! link serializes packets byte-for-byte (real framing, real encode/decode
+//! CPU cost) and *models* the wire time from the configured uplink. The
+//! serving loop can either account the wire time virtually (fast, default
+//! for experiments) or actually sleep it (`RealSleep`) for wall-clock
+//! demos.
+
+use super::protocol::ActivationPacket;
+use crate::sim::Uplink;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Serialization mode (Table 4: socket/binary vs RPC/ASCII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    Binary,
+    AsciiRpc,
+}
+
+/// How to realize the modeled network delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DelayMode {
+    /// Account the delay in metrics without sleeping (simulation time).
+    Virtual,
+    /// Actually sleep the modeled delay (wall-clock demo mode).
+    RealSleep,
+}
+
+/// One simulated uplink.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub uplink: Uplink,
+    pub format: WireFormat,
+    pub delay: DelayMode,
+}
+
+/// Result of a transfer: the decoded packet plus timing/size accounting.
+#[derive(Debug)]
+pub struct Transfer {
+    pub packet: ActivationPacket,
+    pub wire_bytes: usize,
+    /// Modeled network time (bandwidth + RTT).
+    pub net_time: Duration,
+    /// Measured CPU time spent encoding + decoding.
+    pub codec_time: Duration,
+}
+
+impl Link {
+    pub fn new(uplink: Uplink) -> Self {
+        Link { uplink, format: WireFormat::Binary, delay: DelayMode::Virtual }
+    }
+
+    pub fn with_format(mut self, f: WireFormat) -> Self {
+        self.format = f;
+        self
+    }
+
+    pub fn with_delay(mut self, d: DelayMode) -> Self {
+        self.delay = d;
+        self
+    }
+
+    /// Send a packet through the link: serialize, model the wire,
+    /// deserialize on the far side.
+    pub fn transmit(&self, packet: &ActivationPacket) -> Result<Transfer> {
+        let t0 = std::time::Instant::now();
+        let (wire_bytes, decoded) = match self.format {
+            WireFormat::Binary => {
+                let buf = packet.to_binary();
+                let n = buf.len();
+                (n, ActivationPacket::from_binary(&buf)?)
+            }
+            WireFormat::AsciiRpc => {
+                let s = packet.to_ascii();
+                let n = s.len();
+                (n, ActivationPacket::from_ascii(&s)?)
+            }
+        };
+        let codec_time = t0.elapsed();
+        let net_time = Duration::from_secs_f64(self.uplink.transfer_seconds(wire_bytes));
+        if self.delay == DelayMode::RealSleep {
+            std::thread::sleep(net_time);
+        }
+        Ok(Transfer { packet: decoded, wire_bytes, net_time, codec_time })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(n: usize) -> ActivationPacket {
+        ActivationPacket {
+            bits: 4,
+            scale: 0.1,
+            zero_point: 0.0,
+            shape: [1, 32, 4, 4],
+            payload: (0..n).map(|i| (i % 256) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn binary_transfer_roundtrips() {
+        let link = Link::new(Uplink::paper_default());
+        let p = pkt(512);
+        let t = link.transmit(&p).unwrap();
+        assert_eq!(t.packet, p);
+        assert!(t.net_time.as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn ascii_slower_and_fatter_than_binary() {
+        let p = pkt(4096);
+        let bin = Link::new(Uplink::paper_default()).transmit(&p).unwrap();
+        let asc = Link::new(Uplink::paper_default())
+            .with_format(WireFormat::AsciiRpc)
+            .transmit(&p)
+            .unwrap();
+        assert_eq!(asc.packet, p);
+        assert!(asc.wire_bytes > 3 * bin.wire_bytes);
+        assert!(asc.net_time > bin.net_time);
+    }
+
+    #[test]
+    fn faster_uplink_less_net_time() {
+        let p = pkt(2048);
+        let slow = Link::new(Uplink::mbps(1.0)).transmit(&p).unwrap();
+        let fast = Link::new(Uplink::mbps(100.0)).transmit(&p).unwrap();
+        assert!(slow.net_time > fast.net_time);
+    }
+}

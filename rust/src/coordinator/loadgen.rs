@@ -1,0 +1,157 @@
+//! Open-loop load generation: Poisson arrivals replayed against the
+//! serving pipeline — the standard methodology for measuring serving
+//! latency *under load* (closed-loop clients, as in `examples/serve_lpr`,
+//! underestimate queueing effects).
+
+use super::server::Server;
+use crate::profile::SplitMix64;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One generated request arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Offset from the start of the run.
+    pub at: Duration,
+    /// Index into the image pool.
+    pub image: usize,
+}
+
+/// Poisson arrival schedule at `rate_rps` for `n` requests over a pool of
+/// `pool` images. Deterministic in `seed`.
+pub fn poisson_schedule(rate_rps: f64, n: usize, pool: usize, seed: u64) -> Vec<Arrival> {
+    assert!(rate_rps > 0.0 && pool > 0);
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // exponential inter-arrival
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate_rps;
+            Arrival { at: Duration::from_secs_f64(t), image: rng.next_u64() as usize % pool }
+        })
+        .collect()
+}
+
+/// Outcome of an open-loop run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub requests: usize,
+    pub errors: usize,
+    /// End-to-end latency samples (seconds), arrival-to-response.
+    pub latencies: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * xs.len() as f64).ceil() as usize).clamp(1, xs.len()) - 1;
+        xs[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+}
+
+/// Replay a schedule against a running server (open loop: requests are
+/// issued at their scheduled time regardless of completions).
+pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Result<LoadReport> {
+    let start = Instant::now();
+    let mut pending: Vec<(Instant, mpsc::Receiver<Result<super::server::InferenceResult>>)> =
+        Vec::with_capacity(schedule.len());
+    let mut errors = 0usize;
+    for a in schedule {
+        let target = start + a.at;
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let issued = Instant::now();
+        match server.submit(images[a.image % images.len()].clone()) {
+            Ok(rx) => pending.push((issued, rx)),
+            Err(_) => errors += 1,
+        }
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    for (_issued, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(res)) => {
+                // per-request latency as measured by the pipeline
+                // (submit → response wall time + virtually-accounted net);
+                // NOT rx-wait time, which would include the remainder of
+                // the submission schedule for early requests
+                latencies.push(res.e2e.as_secs_f64());
+            }
+            _ => errors += 1,
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let n = schedule.len();
+    Ok(LoadReport {
+        offered_rps: n as f64 / schedule.last().map(|a| a.at.as_secs_f64()).unwrap_or(1.0),
+        achieved_rps: latencies.len() as f64 / wall,
+        requests: n,
+        errors,
+        latencies,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_sorted_and_deterministic() {
+        let a = poisson_schedule(100.0, 50, 8, 42);
+        let b = poisson_schedule(100.0, 50, 8, 42);
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.image, y.image);
+        }
+    }
+
+    #[test]
+    fn rate_roughly_matches() {
+        let rate = 200.0;
+        let n = 2000;
+        let s = poisson_schedule(rate, n, 4, 7);
+        let span = s.last().unwrap().at.as_secs_f64();
+        let empirical = n as f64 / span;
+        assert!((empirical / rate - 1.0).abs() < 0.15, "empirical {empirical}");
+    }
+
+    #[test]
+    fn images_within_pool() {
+        let s = poisson_schedule(10.0, 100, 3, 1);
+        assert!(s.iter().all(|a| a.image < 3));
+    }
+
+    #[test]
+    fn report_quantiles() {
+        let r = LoadReport {
+            offered_rps: 10.0,
+            achieved_rps: 10.0,
+            requests: 4,
+            errors: 0,
+            latencies: vec![0.004, 0.001, 0.003, 0.002],
+        };
+        assert_eq!(r.quantile(0.5), 0.002);
+        assert_eq!(r.quantile(1.0), 0.004);
+        assert!((r.mean() - 0.0025).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,165 @@
+//! Serving metrics: latency histograms (log-bucketed) + throughput.
+
+use std::time::Duration;
+
+/// Log-scale latency histogram from 1 µs to ~100 s.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+const BUCKETS: usize = 160; // 8 per decade over 1e-6..1e2+
+const LOG_MIN: f64 = -6.0;
+const PER_DECADE: f64 = 20.0;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: vec![0; BUCKETS], count: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64().max(1e-9);
+        let idx = (((s.log10() - LOG_MIN) * PER_DECADE) as isize).clamp(0, BUCKETS as isize - 1);
+        self.buckets[idx as usize] += 1;
+        self.count += 1;
+        self.sum_s += s;
+        self.max_s = self.max_s.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile from the log buckets (bucket upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 10f64.powf(LOG_MIN + (i as f64 + 1.0) / PER_DECADE);
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Aggregated serving statistics for a load run.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub e2e: LatencyHistogram,
+    pub edge: LatencyHistogram,
+    pub net: LatencyHistogram,
+    pub cloud: LatencyHistogram,
+    pub queue: LatencyHistogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub wall_s: f64,
+    pub tx_bytes_total: u64,
+}
+
+impl ServingStats {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches > 0 {
+            self.requests as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} (mean batch {:.2})  throughput={:.1} req/s\n\
+             e2e    p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms\n\
+             edge   mean={:.3}ms  net mean={:.3}ms  cloud mean={:.3}ms  queue mean={:.3}ms\n\
+             tx_total={} bytes",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.throughput(),
+            self.e2e.quantile(0.5) * 1e3,
+            self.e2e.quantile(0.95) * 1e3,
+            self.e2e.quantile(0.99) * 1e3,
+            self.e2e.mean() * 1e3,
+            self.edge.mean() * 1e3,
+            self.net.mean() * 1e3,
+            self.cloud.mean() * 1e3,
+            self.queue.mean() * 1e3,
+            self.tx_bytes_total,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 ≈ 500µs within bucket resolution
+        assert!((3e-4..8e-4).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean() - 0.02).abs() < 1e-9);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn stats_throughput() {
+        let mut s = ServingStats::default();
+        s.requests = 100;
+        s.wall_s = 2.0;
+        s.batches = 25;
+        assert_eq!(s.throughput(), 50.0);
+        assert_eq!(s.mean_batch(), 4.0);
+        assert!(!s.report().is_empty());
+    }
+}

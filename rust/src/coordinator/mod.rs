@@ -1,0 +1,29 @@
+//! The serving coordinator (request path, all Rust):
+//!
+//! ```text
+//! client → Server → edge worker (PJRT edge.hlo: quantized convs + pack)
+//!                     │ ActivationPacket (protocol.rs, Table 5 framing)
+//!                     ▼
+//!                  Link (simulated uplink: bytes/bw + RTT; binary/ASCII)
+//!                     ▼
+//!                  batcher → cloud worker (PJRT cloud_b{N}.hlo) → response
+//! ```
+//!
+//! Python never runs here: both partitions are AOT artifacts produced by
+//! `make artifacts`.
+
+pub mod cloud;
+pub mod edge;
+pub mod link;
+pub mod loadgen;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use cloud::CloudWorker;
+pub use edge::{EdgeSpec, EdgeWorker};
+pub use link::{DelayMode, Link, Transfer, WireFormat};
+pub use loadgen::{poisson_schedule, replay, Arrival, LoadReport};
+pub use metrics::{LatencyHistogram, ServingStats};
+pub use protocol::ActivationPacket;
+pub use server::{ArtifactMeta, InferenceResult, ServeConfig, ServeMode, Server};

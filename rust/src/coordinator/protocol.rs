@@ -1,0 +1,189 @@
+//! Activation transmission protocol (paper Table 5 + Appendix A).
+//!
+//! Wire layout (little-endian), binary mode:
+//!
+//! ```text
+//!   magic  u32   0x4153_5054 ("ASPT")
+//!   bits   u8    activation bit-width
+//!   scale  f32   dequantization scale
+//!   zp     f32   zero-point
+//!   shape  4×i32 logical activation shape (B, C, H, W)
+//!   len    u32   payload byte count
+//!   payload …    packed activation codes
+//! ```
+//!
+//! The ASCII mode reproduces the xmlRPC baseline of Table 4: binary data
+//! cannot ride an XML envelope, so every byte is expanded to its decimal
+//! text representation plus a separator (~3.6× inflation + per-element
+//! formatting cost) — this is exactly why the paper moved to sockets.
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: u32 = 0x4153_5054;
+
+/// One activation tensor in flight from edge to cloud.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationPacket {
+    pub bits: u8,
+    pub scale: f32,
+    pub zero_point: f32,
+    /// Logical shape (batch, channels-packed, h, w) of the payload.
+    pub shape: [i32; 4],
+    pub payload: Vec<u8>,
+}
+
+impl ActivationPacket {
+    /// Binary framing (socket mode).
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload.len() + 32);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(self.bits);
+        out.extend_from_slice(&self.scale.to_le_bytes());
+        out.extend_from_slice(&self.zero_point.to_le_bytes());
+        for d in self.shape {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse binary framing.
+    pub fn from_binary(buf: &[u8]) -> Result<Self> {
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > buf.len() {
+                bail!("truncated packet at offset {off}");
+            }
+            let s = &buf[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let magic = u32::from_le_bytes(take(&mut off, 4)?.try_into()?);
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let bits = take(&mut off, 1)?[0];
+        let scale = f32::from_le_bytes(take(&mut off, 4)?.try_into()?);
+        let zero_point = f32::from_le_bytes(take(&mut off, 4)?.try_into()?);
+        let mut shape = [0i32; 4];
+        for d in &mut shape {
+            *d = i32::from_le_bytes(take(&mut off, 4)?.try_into()?);
+        }
+        let len = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
+        let payload = take(&mut off, len)?.to_vec();
+        Ok(ActivationPacket { bits, scale, zero_point, shape, payload })
+    }
+
+    /// ASCII/RPC framing (Table 4 baseline): decimal text per byte.
+    pub fn to_ascii(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(self.payload.len() * 4 + 128);
+        write!(
+            s,
+            "<req bits={} scale={} zp={} shape={},{},{},{}>",
+            self.bits,
+            self.scale,
+            self.zero_point,
+            self.shape[0],
+            self.shape[1],
+            self.shape[2],
+            self.shape[3]
+        )
+        .unwrap();
+        for &b in &self.payload {
+            write!(s, "{b},").unwrap();
+        }
+        s.push_str("</req>");
+        s
+    }
+
+    /// Parse the ASCII framing.
+    pub fn from_ascii(s: &str) -> Result<Self> {
+        let head_end = s.find('>').context("no header")?;
+        let head = &s[..head_end];
+        let grab = |key: &str| -> Result<&str> {
+            let i = head.find(key).with_context(|| format!("missing {key}"))?;
+            let rest = &head[i + key.len()..];
+            Ok(rest.split_whitespace().next().unwrap_or(rest))
+        };
+        let bits: u8 = grab("bits=")?.parse()?;
+        let scale: f32 = grab("scale=")?.parse()?;
+        let zero_point: f32 = grab("zp=")?.parse()?;
+        let shape_s = grab("shape=")?;
+        let mut shape = [0i32; 4];
+        for (i, p) in shape_s.trim_end_matches('>').split(',').take(4).enumerate() {
+            shape[i] = p.parse()?;
+        }
+        let body = &s[head_end + 1..s.rfind("</req>").context("no trailer")?];
+        let payload: Vec<u8> = body
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse::<u8>().context("bad byte"))
+            .collect::<Result<_>>()?;
+        Ok(ActivationPacket { bits, scale, zero_point, shape, payload })
+    }
+
+    /// Wire size in each mode.
+    pub fn wire_bytes_binary(&self) -> usize {
+        4 + 1 + 4 + 4 + 16 + 4 + self.payload.len()
+    }
+
+    pub fn wire_bytes_ascii(&self) -> usize {
+        self.to_ascii().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ActivationPacket {
+        ActivationPacket {
+            bits: 4,
+            scale: 0.125,
+            zero_point: 0.0,
+            shape: [1, 32, 4, 4],
+            payload: (0..=255u8).collect(),
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let p = sample();
+        let buf = p.to_binary();
+        assert_eq!(buf.len(), p.wire_bytes_binary());
+        let q = ActivationPacket::from_binary(&buf).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn ascii_roundtrip() {
+        let p = sample();
+        let q = ActivationPacket::from_ascii(&p.to_ascii()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn ascii_is_much_fatter() {
+        let p = sample();
+        // Table 4: RPC payloads inflate ~3-4× vs binary
+        assert!(p.wire_bytes_ascii() > 3 * p.wire_bytes_binary());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let p = sample();
+        let buf = p.to_binary();
+        assert!(ActivationPacket::from_binary(&buf[..buf.len() - 1]).is_err());
+        assert!(ActivationPacket::from_binary(&buf[..10]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = sample();
+        let mut buf = p.to_binary();
+        buf[0] ^= 0xff;
+        assert!(ActivationPacket::from_binary(&buf).is_err());
+    }
+}

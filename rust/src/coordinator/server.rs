@@ -1,0 +1,456 @@
+//! The serving pipeline: client → edge worker → simulated uplink →
+//! dynamic batcher → cloud worker → response.
+//!
+//! Two OS threads own the two "devices" (PJRT handles are not `Send`, so
+//! each thread constructs its own runtime — which also mirrors the real
+//! topology: separate processes on separate machines). Channels carry the
+//! protocol packets; the batcher drains the cloud queue up to
+//! `max_batch` / `max_delay`, exactly like a production router.
+
+use super::cloud::CloudWorker;
+use super::edge::{EdgeSpec, EdgeWorker};
+use super::link::{DelayMode, Link, WireFormat};
+use super::metrics::ServingStats;
+use super::protocol::ActivationPacket;
+use crate::runtime::Runtime;
+use crate::sim::Uplink;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Execution mode: the Auto-Split split pipeline, or the Cloud-Only
+/// baseline (raw image upload + full model on the cloud).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    Split,
+    CloudOnly,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub uplink: Uplink,
+    pub wire: WireFormat,
+    pub delay: DelayMode,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub mode: ServeMode,
+}
+
+impl ServeConfig {
+    pub fn new(artifacts: impl Into<PathBuf>) -> Self {
+        ServeConfig {
+            artifacts: artifacts.into(),
+            uplink: Uplink::paper_default(),
+            wire: WireFormat::Binary,
+            delay: DelayMode::Virtual,
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            mode: ServeMode::Split,
+        }
+    }
+}
+
+/// Parsed artifacts/metadata.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub img: usize,
+    pub classes: usize,
+    pub packed_shape: (usize, usize),
+    pub boundary_scale: f32,
+    pub act_bits: u8,
+    pub cloud_batches: Vec<usize>,
+    pub acc_float: Option<f64>,
+    pub acc_quant_split: Option<f64>,
+    pub params: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("metadata.json"))
+            .with_context(|| format!("read {dir:?}/metadata.json — run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let g = j.get("graph").context("graph key")?;
+        let ps = g.get("packed_shape").context("packed_shape")?.as_arr().unwrap();
+        Ok(ArtifactMeta {
+            img: g.get("img").context("img")?.as_usize().unwrap(),
+            classes: g.get("classes").context("classes")?.as_usize().unwrap(),
+            packed_shape: (ps[0].as_usize().unwrap(), ps[1].as_usize().unwrap()),
+            boundary_scale: j.get("boundary_scale").context("scale")?.as_f64().unwrap() as f32,
+            act_bits: g.get("act_bits").context("act_bits")?.as_usize().unwrap() as u8,
+            cloud_batches: j
+                .get("cloud_batches")
+                .context("cloud_batches")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect(),
+            acc_float: j.at(&["accuracy", "acc_float"]).and_then(|v| v.as_f64()),
+            acc_quant_split: j.at(&["accuracy", "acc_quant_split"]).and_then(|v| v.as_f64()),
+            params: j.get("params").and_then(|v| v.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+/// Per-request timing + result returned to the client.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub logits: Vec<f32>,
+    pub class: usize,
+    pub edge: Duration,
+    pub net: Duration,
+    pub codec: Duration,
+    pub cloud: Duration,
+    pub queue: Duration,
+    /// End-to-end latency with the modeled network time included.
+    pub e2e: Duration,
+    pub tx_bytes: usize,
+    pub batch_size: usize,
+}
+
+struct Request {
+    image: Vec<f32>,
+    resp: mpsc::Sender<Result<InferenceResult>>,
+    submitted: Instant,
+}
+
+struct CloudJob {
+    packet: ActivationPacket,
+    resp: mpsc::Sender<Result<InferenceResult>>,
+    submitted: Instant,
+    edge: Duration,
+    net: Duration,
+    codec: Duration,
+    tx_bytes: usize,
+    arrived: Instant,
+}
+
+/// A running pipeline.
+pub struct Server {
+    req_tx: Option<mpsc::Sender<Request>>,
+    edge_handle: Option<std::thread::JoinHandle<()>>,
+    cloud_handle: Option<std::thread::JoinHandle<()>>,
+    pub meta: ArtifactMeta,
+    stats: Arc<Mutex<ServingStats>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Start the pipeline threads (compiles the artifacts — takes a
+    /// moment on first call).
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let meta = ArtifactMeta::load(&cfg.artifacts)?;
+        let stats = Arc::new(Mutex::new(ServingStats::default()));
+
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (cloud_tx, cloud_rx) = mpsc::channel::<CloudJob>();
+
+        // ---------------- edge thread -------------------------------
+        let edge_cfg = cfg.clone();
+        let edge_meta = meta.clone();
+        let (edge_ready_tx, edge_ready_rx) = mpsc::channel::<Result<()>>();
+        let edge_handle = std::thread::Builder::new()
+            .name("edge-worker".into())
+            .spawn(move || {
+                edge_thread(edge_cfg, edge_meta, req_rx, cloud_tx, edge_ready_tx);
+            })?;
+
+        // ---------------- cloud thread ------------------------------
+        let cloud_cfg = cfg.clone();
+        let cloud_meta = meta.clone();
+        let cloud_stats = stats.clone();
+        let (cloud_ready_tx, cloud_ready_rx) = mpsc::channel::<Result<()>>();
+        let cloud_handle = std::thread::Builder::new()
+            .name("cloud-worker".into())
+            .spawn(move || {
+                cloud_thread(cloud_cfg, cloud_meta, cloud_rx, cloud_stats, cloud_ready_tx);
+            })?;
+
+        edge_ready_rx.recv().context("edge thread died")??;
+        cloud_ready_rx.recv().context("cloud thread died")??;
+
+        Ok(Server {
+            req_tx: Some(req_tx),
+            edge_handle: Some(edge_handle),
+            cloud_handle: Some(cloud_handle),
+            meta,
+            stats,
+            started: Instant::now(),
+        })
+    }
+
+    /// Synchronous inference of one image.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResult> {
+        self.submit(image)?.recv().context("pipeline dropped request")?
+    }
+
+    /// Asynchronous submission; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<InferenceResult>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.req_tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Request { image, resp: resp_tx, submitted: Instant::now() })
+            .ok()
+            .context("edge thread gone")?;
+        Ok(resp_rx)
+    }
+
+    /// Snapshot of aggregated metrics.
+    pub fn stats(&self) -> ServingStats {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.wall_s = self.started.elapsed().as_secs_f64();
+        s
+    }
+
+    /// Stop the pipeline and join the threads.
+    pub fn shutdown(mut self) -> ServingStats {
+        let stats = self.stats();
+        self.req_tx.take(); // closes the channel; threads drain and exit
+        if let Some(h) = self.edge_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.cloud_handle.take() {
+            let _ = h.join();
+        }
+        stats
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.req_tx.take();
+        if let Some(h) = self.edge_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.cloud_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn edge_thread(
+    cfg: ServeConfig,
+    meta: ArtifactMeta,
+    req_rx: mpsc::Receiver<Request>,
+    cloud_tx: mpsc::Sender<CloudJob>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // own runtime: PJRT handles are thread-local by construction here
+    let init = (|| -> Result<Option<EdgeWorker>> {
+        match cfg.mode {
+            ServeMode::CloudOnly => Ok(None),
+            ServeMode::Split => {
+                let rt = Runtime::cpu()?;
+                let engine = rt.load_hlo_text(&cfg.artifacts.join("lpr_edge_b1.hlo.txt"))?;
+                Ok(Some(EdgeWorker::new(
+                    engine,
+                    EdgeSpec {
+                        img: meta.img,
+                        packed_shape: meta.packed_shape,
+                        boundary_scale: meta.boundary_scale,
+                        act_bits: meta.act_bits,
+                    },
+                )))
+            }
+        }
+    })();
+    let worker = match init {
+        Ok(w) => {
+            let _ = ready.send(Ok(()));
+            w
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let link = Link::new(cfg.uplink).with_format(cfg.wire).with_delay(cfg.delay);
+
+    while let Ok(req) = req_rx.recv() {
+        let work = (|| -> Result<CloudJob> {
+            let (packet, edge_dt) = match (&worker, cfg.mode) {
+                (Some(w), ServeMode::Split) => w.infer(&req.image)?,
+                (_, ServeMode::CloudOnly) | (None, _) => {
+                    // raw 8-bit image upload (the Cloud-Only baseline)
+                    let payload: Vec<u8> =
+                        req.image.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8).collect();
+                    (
+                        ActivationPacket {
+                            bits: 8,
+                            scale: 1.0 / 255.0,
+                            zero_point: 0.0,
+                            shape: [1, 1, meta.img as i32, meta.img as i32],
+                            payload,
+                        },
+                        Duration::ZERO,
+                    )
+                }
+            };
+            let transfer = link.transmit(&packet)?;
+            Ok(CloudJob {
+                packet: transfer.packet,
+                resp: req.resp.clone(),
+                submitted: req.submitted,
+                edge: edge_dt,
+                net: transfer.net_time,
+                codec: transfer.codec_time,
+                tx_bytes: transfer.wire_bytes,
+                arrived: Instant::now(),
+            })
+        })();
+        match work {
+            Ok(job) => {
+                if cloud_tx.send(job).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = req.resp.send(Err(e));
+            }
+        }
+    }
+}
+
+fn cloud_thread(
+    cfg: ServeConfig,
+    meta: ArtifactMeta,
+    cloud_rx: mpsc::Receiver<CloudJob>,
+    stats: Arc<Mutex<ServingStats>>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    enum CloudExec {
+        Split(CloudWorker),
+        Full(crate::runtime::Engine),
+    }
+    let init = (|| -> Result<CloudExec> {
+        let rt = Runtime::cpu()?;
+        match cfg.mode {
+            ServeMode::Split => {
+                let mut engines = BTreeMap::new();
+                for &b in &meta.cloud_batches {
+                    if b > cfg.max_batch && !engines.is_empty() {
+                        break;
+                    }
+                    let e = rt.load_hlo_text(&cfg.artifacts.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
+                    engines.insert(b, e);
+                }
+                Ok(CloudExec::Split(CloudWorker::new(engines, meta.packed_shape, meta.classes)))
+            }
+            ServeMode::CloudOnly => {
+                Ok(CloudExec::Full(rt.load_hlo_text(&cfg.artifacts.join("lpr_full_b1.hlo.txt"))?))
+            }
+        }
+    })();
+    let exec = match init {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        // blocking wait for the first job
+        let first = match cloud_rx.recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        // drain up to max_batch within the batching window
+        let deadline = Instant::now() + cfg.max_delay;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match cloud_rx.recv_timeout(deadline - now) {
+                Ok(j) => batch.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let run = |packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
+            match &exec {
+                CloudExec::Split(w) => w.infer_batch(packets),
+                CloudExec::Full(engine) => {
+                    // batch-1 full model: run sequentially
+                    let mut out = Vec::with_capacity(packets.len());
+                    let t0 = Instant::now();
+                    for p in packets {
+                        let img: Vec<f32> =
+                            p.payload.iter().map(|&b| b as f32 * p.scale).collect();
+                        let lit = crate::runtime::literal_f32(
+                            &img,
+                            &[1, 1, meta.img as i64, meta.img as i64],
+                        )?;
+                        out.push(engine.run_f32(&[lit])?);
+                    }
+                    Ok((out, t0.elapsed()))
+                }
+            }
+        };
+
+        let packets: Vec<ActivationPacket> = batch.iter().map(|j| j.packet.clone()).collect();
+        match run(&packets) {
+            Ok((logits, cloud_dt)) => {
+                let bsz = batch.len();
+                let mut st = stats.lock().unwrap();
+                st.batches += 1;
+                for (job, lg) in batch.into_iter().zip(logits) {
+                    let class = lg
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let queue = job.arrived.elapsed();
+                    let wall = job.submitted.elapsed();
+                    // virtual-delay mode: add the modeled wire time; in
+                    // RealSleep mode it is already part of the wall clock
+                    let e2e = if cfg.delay == DelayMode::Virtual {
+                        wall + job.net
+                    } else {
+                        wall
+                    };
+                    let res = InferenceResult {
+                        logits: lg,
+                        class,
+                        edge: job.edge,
+                        net: job.net,
+                        codec: job.codec,
+                        cloud: cloud_dt,
+                        queue,
+                        e2e,
+                        tx_bytes: job.tx_bytes,
+                        batch_size: bsz,
+                    };
+                    st.requests += 1;
+                    st.tx_bytes_total += job.tx_bytes as u64;
+                    st.e2e.record(res.e2e);
+                    st.edge.record(res.edge);
+                    st.net.record(res.net);
+                    st.cloud.record(res.cloud);
+                    st.queue.record(res.queue);
+                    let _ = job.resp.send(Ok(res));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in batch {
+                    let _ = job.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! The inference DAG: nodes are [`Layer`]s, edges carry activations.
+//!
+//! All Auto-Split analyses (potential-split identification, activation
+//! working-set / `M^a` computation, min-cut baselines) operate on this
+//! structure.
+
+use super::layer::{infer_layer, Layer, LayerKind, Shape};
+
+
+pub type NodeId = usize;
+
+/// A DNN inference graph (DAG). Node 0 is always the input.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// `preds[i]` = producers feeding node `i`, in input order.
+    pub preds: Vec<Vec<NodeId>>,
+    /// `succs[i]` = consumers of node `i`'s output.
+    pub succs: Vec<Vec<NodeId>>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, input: Shape) -> Self {
+        let mut g = Graph { name: name.into(), ..Default::default() };
+        let (out, w, macs) = infer_layer(LayerKind::Input, &[input], 0);
+        g.layers.push(Layer {
+            name: "input".into(),
+            kind: LayerKind::Input,
+            in_shapes: vec![input],
+            out_shape: out,
+            weight_count: w,
+            macs,
+            fused_activation: None,
+            folded_bn: false,
+        });
+        g.preds.push(vec![]);
+        g.succs.push(vec![]);
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Append a layer consuming the outputs of `preds`; returns its id.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        kind: LayerKind,
+        preds: &[NodeId],
+        out_channels: usize,
+    ) -> NodeId {
+        let in_shapes: Vec<Shape> =
+            preds.iter().map(|&p| self.layers[p].out_shape).collect();
+        let (out, w, macs) = infer_layer(kind, &in_shapes, out_channels);
+        let id = self.layers.len();
+        self.layers.push(Layer {
+            name: name.into(),
+            kind,
+            in_shapes,
+            out_shape: out,
+            weight_count: w,
+            macs,
+            fused_activation: None,
+            folded_bn: false,
+        });
+        self.preds.push(preds.to_vec());
+        self.succs.push(vec![]);
+        for &p in preds {
+            self.succs[p].push(id);
+        }
+        id
+    }
+
+    /// Ids of nodes with no consumers (graph outputs).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&i| self.succs[i].is_empty()).collect()
+    }
+
+    /// Kahn topological order. Nodes are inserted in construction order so
+    /// for builder-produced graphs this is typically `0..n`, but graph
+    /// optimization can rewire edges; always sort explicitly.
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.preds[i].len()).collect();
+        let mut queue: std::collections::VecDeque<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "graph {} has a cycle", self.name);
+        order
+    }
+
+    /// Validate structural invariants; used by tests and after rewrites.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.len();
+        if self.preds.len() != n || self.succs.len() != n {
+            return Err("adjacency length mismatch".into());
+        }
+        for i in 0..n {
+            for &p in &self.preds[i] {
+                if p >= n {
+                    return Err(format!("node {i} pred {p} out of range"));
+                }
+                if !self.succs[p].contains(&i) {
+                    return Err(format!("asymmetric edge {p}->{i}"));
+                }
+            }
+            for &s in &self.succs[i] {
+                if !self.preds[s].contains(&i) {
+                    return Err(format!("asymmetric edge {i}->{s}"));
+                }
+            }
+            // The input node stores its own shape in `in_shapes` despite
+            // having no predecessors.
+            if !matches!(self.layers[i].kind, LayerKind::Input)
+                && self.layers[i].in_shapes.len() != self.preds[i].len()
+            {
+                return Err(format!("node {i} in_shapes/preds mismatch"));
+            }
+        }
+        // acyclicity via topo
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.preds[i].len()).collect();
+        let mut queue: std::collections::VecDeque<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = queue.pop_front() {
+            seen += 1;
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        if seen != n {
+            return Err("cycle detected".into());
+        }
+        Ok(())
+    }
+
+    /// Total parameter elements (`Σ s^w_i`).
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_count).sum()
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Model size in bytes at `bits` precision.
+    pub fn model_bytes(&self, bits: u8) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes(bits)).sum()
+    }
+
+    /// Input activation element count (raw image volume).
+    pub fn input_elems(&self) -> usize {
+        self.layers[0].out_shape.volume()
+    }
+
+    /// Elements transmitted if the graph is cut after the topo-prefix
+    /// `prefix` (a set of node ids, must include node 0): the sum of
+    /// `s^a_u` over prefix nodes `u` with at least one consumer outside
+    /// the prefix. Each producer is counted once even with multiple
+    /// crossing consumers (its output is transmitted once).
+    pub fn cut_elems(&self, in_prefix: &[bool]) -> usize {
+        let mut total = 0;
+        for u in 0..self.len() {
+            if !in_prefix[u] {
+                continue;
+            }
+            if self.succs[u].iter().any(|&v| !in_prefix[v]) {
+                total += self.layers[u].act_elems();
+            }
+        }
+        total
+    }
+
+    /// The set of producer nodes whose activations cross the cut.
+    pub fn cut_tensors(&self, in_prefix: &[bool]) -> Vec<NodeId> {
+        (0..self.len())
+            .filter(|&u| in_prefix[u] && self.succs[u].iter().any(|&v| !in_prefix[v]))
+            .collect()
+    }
+
+    /// Membership mask for the prefix of `order[..=pos]`.
+    pub fn prefix_mask(&self, order: &[NodeId], pos: usize) -> Vec<bool> {
+        let mut mask = vec![false; self.len()];
+        for &id in &order[..=pos] {
+            mask[id] = true;
+        }
+        mask
+    }
+}
+
+impl std::fmt::Display for Graph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{}: {} layers, {:.2}M params, {:.2}G MACs",
+            self.name,
+            self.len(),
+            self.total_weights() as f64 / 1e6,
+            self.total_macs() as f64 / 1e9
+        )?;
+        for (i, l) in self.layers.iter().enumerate() {
+            writeln!(
+                f,
+                "  [{i:3}] {:<24} {:<3} {} <- {:?}",
+                l.name,
+                l.kind.short_code(),
+                l.out_shape,
+                self.preds[i]
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::PoolKind;
+
+    fn diamond() -> Graph {
+        // input -> a -> {b, c} -> add
+        let mut g = Graph::new("diamond", Shape::new(3, 8, 8));
+        let a = g.add("a", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 8);
+        let b = g.add("b", LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 }, &[a], 8);
+        let c = g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[a], 8);
+        g.add("add", LayerKind::Add, &[b, c], 0);
+        g
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = diamond();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.len(), 5);
+        assert_eq!(g.outputs(), vec![4]);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let g = diamond();
+        let order = g.topo_order();
+        let mut pos = vec![0; g.len()];
+        for (p, &id) in order.iter().enumerate() {
+            pos[id] = p;
+        }
+        for v in 0..g.len() {
+            for &p in &g.preds[v] {
+                assert!(pos[p] < pos[v]);
+            }
+        }
+    }
+
+    #[test]
+    fn cut_counts_producer_once() {
+        let g = diamond();
+        // prefix {input, a}: a's output feeds both b and c across the cut,
+        // but is transmitted once.
+        let mut mask = vec![false; g.len()];
+        mask[0] = true;
+        mask[1] = true;
+        assert_eq!(g.cut_elems(&mask), g.layers[1].act_elems());
+        assert_eq!(g.cut_tensors(&mask), vec![1]);
+    }
+
+    #[test]
+    fn cut_with_two_crossing_tensors() {
+        let g = diamond();
+        // prefix {input, a, b}: both a (feeds c) and b (feeds add) cross.
+        let mut mask = vec![false; g.len()];
+        for i in [0usize, 1, 2] {
+            mask[i] = true;
+        }
+        assert_eq!(
+            g.cut_elems(&mask),
+            g.layers[1].act_elems() + g.layers[2].act_elems()
+        );
+    }
+
+    #[test]
+    fn totals() {
+        let mut g = Graph::new("t", Shape::new(3, 4, 4));
+        g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 4);
+        g.add("p", LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max }, &[1], 0);
+        assert_eq!(g.total_weights(), 3 * 9 * 4 + 4);
+        assert_eq!(g.model_bytes(8), 3 * 9 * 4 + 4);
+        assert_eq!(g.model_bytes(4), (3 * 9 * 4 + 4) / 2);
+        assert_eq!(g.input_elems(), 48);
+    }
+}

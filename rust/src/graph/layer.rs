@@ -1,0 +1,359 @@
+//! Layer definitions for the DNN DAG substrate.
+//!
+//! A [`Layer`] carries everything the Auto-Split optimizer needs about one
+//! node of the inference graph: its kind (conv / linear / …), tensor shapes,
+//! parameter count (`s^w` in the paper), output activation size (`s^a`),
+//! and MAC count (used by the latency simulator).
+
+
+
+/// Tensor shape in CHW order (batch dimension is implicit and equals 1 for
+/// the latency analysis, matching the paper's single-stream edge setting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub const fn new(c: usize, h: usize, w: usize) -> Self {
+        Shape { c, h, w }
+    }
+
+    /// 1-D shape helper (e.g. the output of a fully-connected layer).
+    pub const fn vec(c: usize) -> Self {
+        Shape { c, h: 1, w: 1 }
+    }
+
+    /// Number of elements (the paper's `s^a_i` is expressed in elements and
+    /// multiplied by the bit-width when converted to bytes).
+    pub const fn volume(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{},{})", self.c, self.h, self.w)
+    }
+}
+
+/// Supported activation functions (fused into producers by
+/// [`crate::graph::optimize::optimize_for_inference`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+    LeakyRelu,
+    Sigmoid,
+    /// h-swish / swish family (MobileNet-v3, MnasNet SE blocks).
+    Swish,
+}
+
+/// Pooling flavours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+    /// Global average pool: output is `(C,1,1)` regardless of kernel.
+    GlobalAvg,
+}
+
+/// The operator taxonomy. It covers every layer used by the paper's
+/// benchmark zoo (ResNet/ResNeXt bottlenecks, GoogleNet inception modules,
+/// MobileNet/MnasNet inverted residuals with squeeze-excite, YOLO darknet
+/// blocks + upsample/concat routes, Faster-RCNN FPN laterals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Graph input (raw image). `s^w = 0`.
+    Input,
+    /// 2-D convolution. `groups > 1` expresses grouped / depthwise conv
+    /// (depthwise when `groups == c_in`).
+    Conv {
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Fully connected.
+    Linear,
+    /// Batch normalization (folded away by graph optimization).
+    BatchNorm,
+    /// Standalone activation (fused away by graph optimization).
+    Activation(ActKind),
+    Pool {
+        kernel: usize,
+        stride: usize,
+        kind: PoolKind,
+    },
+    /// Elementwise residual add (N inputs, same shape).
+    Add,
+    /// Elementwise multiply (squeeze-excitation gating).
+    Mul,
+    /// Channel-wise concatenation.
+    Concat,
+    /// Nearest-neighbour upsample by an integer factor (YOLO routes).
+    Upsample { factor: usize },
+    /// Reshape / flatten (no compute, no weights).
+    Flatten,
+    /// Detection / classification head marker (YOLO layer, softmax, …).
+    /// Treated as compute-free but *pinned to the cloud side or final*,
+    /// because its consumers are post-processing.
+    Head,
+}
+
+impl LayerKind {
+    /// True for operators that carry trainable parameters.
+    pub fn has_weights(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv { .. } | LayerKind::Linear | LayerKind::BatchNorm
+        )
+    }
+
+    /// True for operators the latency simulator maps onto the systolic
+    /// array as a GEMM (everything else is vector-unit / data movement).
+    pub fn is_gemm(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::Linear)
+    }
+
+    pub fn short_code(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "I",
+            LayerKind::Conv { groups, kernel, .. } => {
+                if *groups > 1 {
+                    "D"
+                } else if *kernel == 1 {
+                    "P"
+                } else {
+                    "C"
+                }
+            }
+            LayerKind::Linear => "L",
+            LayerKind::BatchNorm => "BN",
+            LayerKind::Activation(_) => "R",
+            LayerKind::Pool { kind: PoolKind::GlobalAvg, .. } => "G",
+            LayerKind::Pool { .. } => "Pl",
+            LayerKind::Add => "+",
+            LayerKind::Mul => "*",
+            LayerKind::Concat => "||",
+            LayerKind::Upsample { .. } => "Up",
+            LayerKind::Flatten => "Fl",
+            LayerKind::Head => "H",
+        }
+    }
+}
+
+/// One node of the inference DAG.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Shapes of the inputs, in predecessor order.
+    pub in_shapes: Vec<Shape>,
+    pub out_shape: Shape,
+    /// Parameter element count (`s^w_i`). Bias included for conv/linear.
+    pub weight_count: usize,
+    /// Multiply-accumulate count for one inference.
+    pub macs: u64,
+    /// Fused activation (set by graph optimization, or at construction).
+    pub fused_activation: Option<ActKind>,
+    /// Whether a batch-norm has been folded into this layer.
+    pub folded_bn: bool,
+}
+
+impl Layer {
+    /// Output activation element count (`s^a_i`).
+    pub fn act_elems(&self) -> usize {
+        self.out_shape.volume()
+    }
+
+    /// Weight bytes at a given bit-width.
+    pub fn weight_bytes(&self, bits: u8) -> usize {
+        bits_to_bytes(self.weight_count, bits)
+    }
+
+    /// Output activation bytes at a given bit-width.
+    pub fn act_bytes(&self, bits: u8) -> usize {
+        bits_to_bytes(self.act_elems(), bits)
+    }
+}
+
+/// `elems` values of `bits` bits each, packed, rounded up to whole bytes.
+pub fn bits_to_bytes(elems: usize, bits: u8) -> usize {
+    (elems * bits as usize).div_ceil(8)
+}
+
+/// Compute the spatial output size of a conv/pool window.
+pub fn conv_out_dim(in_dim: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (in_dim + 2 * pad).saturating_sub(kernel) / stride + 1
+}
+
+/// Derive output shape, weight count and MACs for `kind` applied to
+/// `in_shapes` producing `out_channels` (where applicable).
+pub fn infer_layer(
+    kind: LayerKind,
+    in_shapes: &[Shape],
+    out_channels: usize,
+) -> (Shape, usize, u64) {
+    match kind {
+        LayerKind::Input => (in_shapes[0], 0, 0),
+        LayerKind::Conv { kernel, stride, pad, groups } => {
+            let i = in_shapes[0];
+            assert!(i.c % groups == 0, "in channels {} not divisible by groups {}", i.c, groups);
+            assert!(out_channels % groups == 0);
+            let oh = conv_out_dim(i.h, kernel, stride, pad);
+            let ow = conv_out_dim(i.w, kernel, stride, pad);
+            let out = Shape::new(out_channels, oh, ow);
+            let w = (i.c / groups) * kernel * kernel * out_channels + out_channels;
+            let macs = (i.c / groups) as u64
+                * (kernel * kernel) as u64
+                * out.volume() as u64;
+            (out, w, macs)
+        }
+        LayerKind::Linear => {
+            let i = in_shapes[0].volume();
+            let out = Shape::vec(out_channels);
+            let w = i * out_channels + out_channels;
+            (out, w, (i * out_channels) as u64)
+        }
+        LayerKind::BatchNorm => {
+            let i = in_shapes[0];
+            // scale, shift, running mean, running var
+            (i, 4 * i.c, i.volume() as u64)
+        }
+        LayerKind::Activation(_) => (in_shapes[0], 0, in_shapes[0].volume() as u64 / 2),
+        LayerKind::Pool { kernel, stride, kind } => {
+            let i = in_shapes[0];
+            match kind {
+                PoolKind::GlobalAvg => (Shape::vec(i.c), 0, i.volume() as u64),
+                _ => {
+                    // stride-1 pools are same-padded; strided pools use
+                    // ceil_mode (torchvision GoogleNet/ResNet convention)
+                    let dim = |d: usize| {
+                        if stride == 1 {
+                            conv_out_dim(d, kernel, 1, kernel / 2)
+                        } else {
+                            (d - kernel).div_ceil(stride) + 1
+                        }
+                    };
+                    let o = Shape::new(i.c, dim(i.h), dim(i.w));
+                    (o, 0, (o.volume() * kernel * kernel) as u64)
+                }
+            }
+        }
+        LayerKind::Add | LayerKind::Mul => {
+            let a = in_shapes[0];
+            // Mul supports broadcasting a (C,1,1) gate over (C,H,W).
+            let out = in_shapes
+                .iter()
+                .copied()
+                .max_by_key(|s| s.volume())
+                .unwrap_or(a);
+            (out, 0, out.volume() as u64)
+        }
+        LayerKind::Concat => {
+            let h = in_shapes[0].h;
+            let w = in_shapes[0].w;
+            let c: usize = in_shapes.iter().map(|s| s.c).sum();
+            for s in in_shapes {
+                assert_eq!((s.h, s.w), (h, w), "concat spatial mismatch");
+            }
+            (Shape::new(c, h, w), 0, 0)
+        }
+        LayerKind::Upsample { factor } => {
+            let i = in_shapes[0];
+            (Shape::new(i.c, i.h * factor, i.w * factor), 0, 0)
+        }
+        LayerKind::Flatten => (Shape::vec(in_shapes[0].volume()), 0, 0),
+        LayerKind::Head => (in_shapes[0], 0, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_weights() {
+        // 3x3 s1 p1 conv, 64->128 over 56x56
+        let (out, w, macs) = infer_layer(
+            LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+            &[Shape::new(64, 56, 56)],
+            128,
+        );
+        assert_eq!(out, Shape::new(128, 56, 56));
+        assert_eq!(w, 64 * 9 * 128 + 128);
+        assert_eq!(macs, 64 * 9 * 128 * 56 * 56);
+    }
+
+    #[test]
+    fn depthwise_conv() {
+        let (out, w, macs) = infer_layer(
+            LayerKind::Conv { kernel: 3, stride: 2, pad: 1, groups: 32 },
+            &[Shape::new(32, 112, 112)],
+            32,
+        );
+        assert_eq!(out, Shape::new(32, 56, 56));
+        assert_eq!(w, 9 * 32 + 32);
+        assert_eq!(macs, 9 * 32 * 56 * 56);
+    }
+
+    #[test]
+    fn linear_shape() {
+        let (out, w, _) = infer_layer(LayerKind::Linear, &[Shape::vec(2048)], 1000);
+        assert_eq!(out, Shape::vec(1000));
+        assert_eq!(w, 2048 * 1000 + 1000);
+    }
+
+    #[test]
+    fn global_pool() {
+        let (out, w, _) = infer_layer(
+            LayerKind::Pool { kernel: 7, stride: 1, kind: PoolKind::GlobalAvg },
+            &[Shape::new(2048, 7, 7)],
+            0,
+        );
+        assert_eq!(out, Shape::vec(2048));
+        assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let (out, ..) = infer_layer(
+            LayerKind::Concat,
+            &[Shape::new(64, 28, 28), Shape::new(128, 28, 28), Shape::new(32, 28, 28)],
+            0,
+        );
+        assert_eq!(out, Shape::new(224, 28, 28));
+    }
+
+    #[test]
+    fn upsample_doubles_spatial() {
+        let (out, ..) = infer_layer(
+            LayerKind::Upsample { factor: 2 },
+            &[Shape::new(256, 13, 13)],
+            0,
+        );
+        assert_eq!(out, Shape::new(256, 26, 26));
+    }
+
+    #[test]
+    fn bits_to_bytes_rounds_up() {
+        assert_eq!(bits_to_bytes(3, 4), 2); // 12 bits -> 2 bytes
+        assert_eq!(bits_to_bytes(2, 4), 1);
+        assert_eq!(bits_to_bytes(10, 8), 10);
+        assert_eq!(bits_to_bytes(7, 1), 1);
+        assert_eq!(bits_to_bytes(0, 8), 0);
+    }
+
+    #[test]
+    fn mul_broadcasts_se_gate() {
+        let (out, ..) = infer_layer(
+            LayerKind::Mul,
+            &[Shape::new(96, 14, 14), Shape::vec(96)],
+            0,
+        );
+        assert_eq!(out, Shape::new(96, 14, 14));
+    }
+}

@@ -1,0 +1,326 @@
+//! Max-flow / min-cut machinery for the DADS [27] / QDMP [58] baselines.
+//!
+//! DADS-style split: partition the DAG into an edge set `S` (containing the
+//! input) and a cloud set `T` (containing the outputs) minimizing
+//!
+//! ```text
+//!   Σ_{v∈S} lat_edge(v) + Σ_{v∈T} lat_cloud(v) + Σ_{u∈S with a consumer ∈T} lat_tr(u)
+//! ```
+//!
+//! which reduces to an s-t min-cut on an auxiliary flow network:
+//! * `src → v` with capacity `lat_cloud(v)` (cut ⇔ v placed on edge… see below)
+//! * `v → snk` with capacity `lat_edge(v)`
+//! * per producer `u`: auxiliary node `x_u`, `u → x_u` with capacity
+//!   `lat_tr(u)`, and `x_u → w` with capacity ∞ for each consumer `w`
+//!   (transmission is paid once even with several crossing consumers)
+//! * `w → u` with capacity ∞ for each DNN edge `u → w`, enforcing that the
+//!   cloud side is closed under successors (no cloud→edge data flow).
+//!
+//! Convention: vertices on the `src` side after the cut are the **edge**
+//! partition. `src→v` cut (v on sink side) pays `lat_cloud(v)`; `v→snk` cut
+//! (v on source side) pays `lat_edge(v)`.
+
+use super::dag::Graph;
+
+const INF: f64 = f64::INFINITY;
+
+/// Dinic max-flow over f64 capacities.
+pub struct Dinic {
+    n: usize,
+    // edge list: to, cap, and the index of the reverse edge
+    to: Vec<usize>,
+    cap: Vec<f64>,
+    head: Vec<Vec<usize>>, // adjacency: indices into the edge list
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic {
+            n,
+            to: vec![],
+            cap: vec![],
+            head: vec![vec![]; n],
+            level: vec![],
+            iter: vec![],
+        }
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, c: f64) {
+        debug_assert!(c >= 0.0);
+        let e = self.to.len();
+        self.to.push(v);
+        self.cap.push(c);
+        self.head[u].push(e);
+        self.to.push(u);
+        self.cap.push(0.0);
+        self.head[v].push(e + 1);
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level = vec![-1; self.n];
+        let mut q = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for &e in &self.head[u] {
+                let v = self.to[e];
+                if self.cap[e] > 1e-12 && self.level[v] < 0 {
+                    self.level[v] = self.level[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, f: f64) -> f64 {
+        if u == t {
+            return f;
+        }
+        while self.iter[u] < self.head[u].len() {
+            let e = self.head[u][self.iter[u]];
+            let v = self.to[e];
+            if self.cap[e] > 1e-12 && self.level[v] == self.level[u] + 1 {
+                let d = self.dfs(v, t, f.min(self.cap[e]));
+                if d > 1e-12 {
+                    self.cap[e] -= d;
+                    self.cap[e ^ 1] += d;
+                    return d;
+                }
+            }
+            self.iter[u] += 1;
+        }
+        0.0
+    }
+
+    /// Run max-flow; returns the flow value.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        let mut flow = 0.0;
+        while self.bfs(s, t) {
+            self.iter = vec![0; self.n];
+            loop {
+                let f = self.dfs(s, t, INF);
+                if f <= 1e-12 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+
+    /// After `max_flow`, the set of vertices reachable from `s` in the
+    /// residual graph (the source side of the min cut).
+    pub fn min_cut_source_side(&self, s: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n];
+        let mut q = std::collections::VecDeque::new();
+        seen[s] = true;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for &e in &self.head[u] {
+                let v = self.to[e];
+                if self.cap[e] > 1e-12 && !seen[v] {
+                    seen[v] = true;
+                    q.push_back(v);
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Result of a DADS/QDMP-style min-cut split.
+#[derive(Debug, Clone)]
+pub struct MinCutSplit {
+    /// `true` for nodes assigned to the edge device.
+    pub edge_side: Vec<bool>,
+    /// Total objective (edge compute + transmission + cloud compute), same
+    /// units as the supplied latency vectors.
+    pub objective: f64,
+}
+
+/// Solve the DADS partition problem on `g` with per-node latencies.
+///
+/// `lat_edge[v]` / `lat_cloud[v]`: seconds to run node `v` on each device;
+/// `lat_tr[u]`: seconds to transmit node `u`'s output activation.
+/// The input node (id 0) is pinned to the edge side with `lat_edge[0] = 0`;
+/// its transmission cost models the Cloud-Only upload, so a cut directly
+/// after the input reproduces the Cloud-Only solution.
+pub fn min_cut_split(
+    g: &Graph,
+    lat_edge: &[f64],
+    lat_cloud: &[f64],
+    lat_tr: &[f64],
+) -> MinCutSplit {
+    let n = g.len();
+    assert_eq!(lat_edge.len(), n);
+    assert_eq!(lat_cloud.len(), n);
+    assert_eq!(lat_tr.len(), n);
+
+    // node ids: 0..n = DNN nodes, n..2n = aux transmit nodes, src=2n, snk=2n+1
+    let src = 2 * n;
+    let snk = 2 * n + 1;
+    let mut d = Dinic::new(2 * n + 2);
+
+    for v in 0..n {
+        // v on cloud side ⇒ cut src→v paying cloud latency
+        let c_cloud = if v == 0 { INF } else { lat_cloud[v] };
+        if c_cloud > 0.0 {
+            d.add_edge(src, v, c_cloud);
+        }
+        // v on edge side ⇒ cut v→snk paying edge latency
+        if lat_edge[v] > 0.0 {
+            d.add_edge(v, snk, lat_edge[v]);
+        }
+        if !g.succs[v].is_empty() {
+            // transmission aux node
+            let x = n + v;
+            d.add_edge(v, x, lat_tr[v]);
+            for &w in &g.succs[v] {
+                d.add_edge(x, w, INF);
+                // successor-closure: forbid w on edge while v on cloud
+                d.add_edge(w, v, INF);
+            }
+        }
+    }
+
+    let objective = d.max_flow(src, snk);
+    let side = d.min_cut_source_side(src);
+    let edge_side: Vec<bool> = (0..n).map(|v| side[v]).collect();
+    MinCutSplit { edge_side, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{LayerKind, Shape};
+
+    fn chain(k: usize) -> Graph {
+        let mut g = Graph::new("chain", Shape::new(1, 8, 8));
+        let mut prev = 0;
+        for i in 0..k {
+            prev = g.add(
+                format!("c{i}"),
+                LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+                &[prev],
+                1,
+            );
+        }
+        g
+    }
+
+    /// Brute-force over all successor-closed partitions (small graphs).
+    fn brute(g: &Graph, le: &[f64], lc: &[f64], lt: &[f64]) -> f64 {
+        let n = g.len();
+        let mut best = f64::INFINITY;
+        'outer: for mask in 0..(1u32 << n) {
+            if mask & 1 == 0 {
+                continue; // input must be on edge
+            }
+            let on_edge = |v: usize| mask >> v & 1 == 1;
+            // closure: consumer on edge ⇒ producer on edge
+            for v in 0..n {
+                for &w in &g.succs[v] {
+                    if on_edge(w) && !on_edge(v) {
+                        continue 'outer;
+                    }
+                }
+            }
+            let mut cost = 0.0;
+            for v in 0..n {
+                if on_edge(v) {
+                    cost += le[v];
+                    if g.succs[v].iter().any(|&w| !on_edge(w)) {
+                        cost += lt[v];
+                    }
+                } else {
+                    cost += lc[v];
+                }
+            }
+            best = best.min(cost);
+        }
+        best
+    }
+
+    #[test]
+    fn chain_matches_bruteforce() {
+        let g = chain(5);
+        let n = g.len();
+        // deterministic pseudo-random latencies
+        let le: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin().abs()).collect();
+        let lc: Vec<f64> = (0..n).map(|i| 0.2 + (i as f64 * 1.3).cos().abs() * 0.3).collect();
+        let lt: Vec<f64> = (0..n).map(|i| 0.5 + (i as f64 * 2.1).sin().abs() * 2.0).collect();
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+        let bf = brute(&g, &le, &lc, &lt);
+        assert!((cut.objective - bf).abs() < 1e-6, "{} vs {}", cut.objective, bf);
+    }
+
+    #[test]
+    fn diamond_matches_bruteforce() {
+        let mut g = Graph::new("d", Shape::new(1, 4, 4));
+        let a = g.add("a", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 2);
+        let b = g.add("b", LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 }, &[a], 2);
+        let c = g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[a], 2);
+        g.add("add", LayerKind::Add, &[b, c], 0);
+        let n = g.len();
+        let le: Vec<f64> = (0..n).map(|i| 0.5 + i as f64 * 0.1).collect();
+        let lc: Vec<f64> = (0..n).map(|i| 0.05 + i as f64 * 0.02).collect();
+        let lt: Vec<f64> = (0..n).map(|i| (3.0 - i as f64).abs() * 0.4 + 0.1).collect();
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+        let bf = brute(&g, &le, &lc, &lt);
+        assert!((cut.objective - bf).abs() < 1e-6, "{} vs {}", cut.objective, bf);
+        // partition must keep input on the edge side
+        assert!(cut.edge_side[0]);
+    }
+
+    #[test]
+    fn all_cloud_when_edge_is_slow() {
+        let g = chain(4);
+        let n = g.len();
+        let le = vec![100.0; n];
+        let lc = vec![0.01; n];
+        let lt = vec![0.1; n];
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+        // everything except the pinned input goes to the cloud
+        assert!(cut.edge_side[0]);
+        assert!(!cut.edge_side[1..].iter().any(|&b| b));
+    }
+
+    #[test]
+    fn all_edge_when_transmission_is_expensive() {
+        let g = chain(4);
+        let n = g.len();
+        let le = vec![0.01; n];
+        let lc = vec![0.01; n];
+        let mut lt = vec![1000.0; n];
+        // final node has no successors -> no transmission needed
+        lt[n - 1] = 0.0;
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+        assert!(cut.edge_side.iter().all(|&b| b), "{:?}", cut.edge_side);
+    }
+
+    #[test]
+    fn closure_respected() {
+        // y-branch where one branch is cheap on edge, but its consumer is
+        // forced cloud-ward; verify no cloud→edge edges in the result.
+        let mut g = Graph::new("y", Shape::new(1, 4, 4));
+        let a = g.add("a", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 2);
+        let b = g.add("b", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[a], 2);
+        g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[b], 2);
+        let n = g.len();
+        let le: Vec<f64> = vec![0.0, 0.1, 5.0, 0.1];
+        let lc: Vec<f64> = vec![0.0, 1.0, 0.1, 1.0];
+        let lt: Vec<f64> = vec![0.3, 0.2, 0.2, 0.0];
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+        for v in 0..n {
+            for &w in &g.succs[v] {
+                assert!(
+                    !(cut.edge_side[w] && !cut.edge_side[v]),
+                    "cloud node {v} feeds edge node {w}"
+                );
+            }
+        }
+    }
+}

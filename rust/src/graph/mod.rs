@@ -1,0 +1,13 @@
+//! DNN DAG substrate: layers, graphs, inference-graph optimization,
+//! liveness (activation working set), and min-cut partitioning.
+
+pub mod dag;
+pub mod layer;
+pub mod liveness;
+pub mod mincut;
+pub mod optimize;
+
+pub use dag::{Graph, NodeId};
+pub use layer::{ActKind, Layer, LayerKind, PoolKind, Shape};
+pub use mincut::{min_cut_split, MinCutSplit};
+pub use optimize::{optimize_for_inference, OptimizedGraph};

@@ -1,0 +1,169 @@
+//! Inference-graph optimizations: batch-norm folding and activation fusion.
+//!
+//! The paper (§2.2, Fig. 3/4 "Step 1") stresses that splitting must be done
+//! on the *optimized* execution graph: DADS cuts the un-optimized graph and
+//! can return sub-optimal splits because BN/ReLU nodes create spurious edges
+//! with large activations. QDMP and Auto-Split both cut the optimized graph.
+
+use super::dag::{Graph, NodeId};
+use super::layer::LayerKind;
+
+/// Result of [`optimize_for_inference`]: the rewritten graph plus the
+/// old-node → new-node mapping (folded nodes map to the node that absorbed
+/// them).
+#[derive(Debug, Clone)]
+pub struct OptimizedGraph {
+    pub graph: Graph,
+    /// `mapping[old_id] = new_id`.
+    pub mapping: Vec<NodeId>,
+    pub folded_bn: usize,
+    pub fused_act: usize,
+}
+
+/// Fold batch-norms into their producing conv/linear and fuse standalone
+/// activations into their producer, whenever the producer's output has no
+/// other consumer. Returns the rewritten graph.
+pub fn optimize_for_inference(g: &Graph) -> OptimizedGraph {
+    let order = g.topo_order();
+    let mut mapping: Vec<Option<NodeId>> = vec![None; g.len()];
+    let mut out = Graph { name: g.name.clone(), ..Default::default() };
+    let mut folded_bn = 0;
+    let mut fused_act = 0;
+
+    for &id in &order {
+        let layer = &g.layers[id];
+        // Candidate for folding into producer?
+        if g.preds[id].len() == 1 {
+            let p_old = g.preds[id][0];
+            // The producer must feed *only* this node, otherwise other
+            // consumers would observe the un-folded tensor.
+            if g.succs[p_old].len() == 1 {
+                let p_new = mapping[p_old].expect("topo order");
+                let target = &out.layers[p_new];
+                match layer.kind {
+                    LayerKind::BatchNorm
+                        if matches!(target.kind, LayerKind::Conv { .. } | LayerKind::Linear)
+                            && !target.folded_bn
+                            && target.fused_activation.is_none() =>
+                    {
+                        // w' = w*γ/σ, b' = (b-μ)*γ/σ + β : same weight count,
+                        // the BN's own 4C params disappear.
+                        out.layers[p_new].folded_bn = true;
+                        mapping[id] = Some(p_new);
+                        folded_bn += 1;
+                        continue;
+                    }
+                    LayerKind::Activation(act)
+                        if matches!(
+                            target.kind,
+                            LayerKind::Conv { .. }
+                                | LayerKind::Linear
+                                | LayerKind::Add
+                                | LayerKind::Mul
+                        ) && target.fused_activation.is_none() =>
+                    {
+                        out.layers[p_new].fused_activation = Some(act);
+                        mapping[id] = Some(p_new);
+                        fused_act += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Keep the node: remap predecessors.
+        let new_preds: Vec<NodeId> = g.preds[id]
+            .iter()
+            .map(|&p| mapping[p].expect("topo order"))
+            .collect();
+        let new_id = out.layers.len();
+        let mut l = layer.clone();
+        l.in_shapes = new_preds.iter().map(|&p| out.layers[p].out_shape).collect();
+        out.layers.push(l);
+        out.preds.push(new_preds.clone());
+        out.succs.push(vec![]);
+        for &p in &new_preds {
+            out.succs[p].push(new_id);
+        }
+        mapping[id] = Some(new_id);
+    }
+
+    let mapping: Vec<NodeId> = mapping.into_iter().map(|m| m.unwrap()).collect();
+    debug_assert!(out.validate().is_ok());
+    OptimizedGraph { graph: out, mapping, folded_bn, fused_act }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{ActKind, LayerKind, Shape};
+
+    /// conv -> bn -> relu -> conv -> bn -> relu with a skip add.
+    fn sample() -> Graph {
+        let mut g = Graph::new("s", Shape::new(3, 16, 16));
+        let c1 = g.add("c1", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 8);
+        let b1 = g.add("b1", LayerKind::BatchNorm, &[c1], 0);
+        let r1 = g.add("r1", LayerKind::Activation(ActKind::Relu), &[b1], 0);
+        let c2 = g.add("c2", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[r1], 8);
+        let b2 = g.add("b2", LayerKind::BatchNorm, &[c2], 0);
+        let a = g.add("add", LayerKind::Add, &[b2, r1], 0);
+        g.add("r2", LayerKind::Activation(ActKind::Relu), &[a], 0);
+        g
+    }
+
+    #[test]
+    fn folds_bn_and_fuses_relu() {
+        let g = sample();
+        let opt = optimize_for_inference(&g);
+        // c1+b1+r1 collapse into one node; c2+b2 collapse (b2 feeds add);
+        // add+r2 fuse. Result: input, c1*, c2*, add* = 4 nodes.
+        assert_eq!(opt.graph.len(), 4, "{}", opt.graph);
+        assert_eq!(opt.folded_bn, 2);
+        assert_eq!(opt.fused_act, 2);
+        assert!(opt.graph.validate().is_ok());
+        // The skip edge must now connect the fused c1 node to the add.
+        let add_new = opt.mapping[5];
+        let c1_new = opt.mapping[1];
+        assert!(opt.graph.preds[add_new].contains(&c1_new));
+        // r1 mapped onto c1's fused node.
+        assert_eq!(opt.mapping[3], c1_new);
+    }
+
+    #[test]
+    fn bn_not_folded_when_producer_shared() {
+        let mut g = Graph::new("shared", Shape::new(3, 8, 8));
+        let c = g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 4);
+        let b = g.add("bn", LayerKind::BatchNorm, &[c], 0);
+        // second consumer of the raw conv output
+        let p = g.add("pw", LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 }, &[c], 4);
+        g.add("add", LayerKind::Add, &[b, p], 0);
+        let opt = optimize_for_inference(&g);
+        // BN must survive: conv feeds two consumers.
+        assert_eq!(opt.graph.len(), g.len());
+        assert_eq!(opt.folded_bn, 0);
+    }
+
+    #[test]
+    fn mapping_is_surjective_onto_new_ids() {
+        let g = sample();
+        let opt = optimize_for_inference(&g);
+        let mut hit = vec![false; opt.graph.len()];
+        for &m in &opt.mapping {
+            hit[m] = true;
+        }
+        assert!(hit.into_iter().all(|h| h));
+    }
+
+    #[test]
+    fn activation_count_preserved_semantically() {
+        let g = sample();
+        let opt = optimize_for_inference(&g);
+        let fused: usize = opt
+            .graph
+            .layers
+            .iter()
+            .filter(|l| l.fused_activation.is_some())
+            .count();
+        assert_eq!(fused, 2);
+    }
+}

@@ -1,0 +1,33 @@
+//! # Auto-Split
+//!
+//! A production-grade reproduction of *"Auto-Split: A General Framework of
+//! Collaborative Edge-Cloud AI"* (KDD 2021): joint DNN splitting and
+//! mixed-precision post-training quantization for collaborative edge-cloud
+//! inference, plus a serving runtime that executes the resulting partitions
+//! via AOT-compiled XLA (PJRT) artifacts.
+//!
+//! ## Crate map
+//! * [`graph`] — DNN DAG substrate (layers, optimization, liveness, min-cut)
+//! * [`zoo`] — the paper's benchmark model graphs (ResNet-18/50, GoogleNet,
+//!   ResNeXt-50, MobileNet-v2, MnasNet, YOLOv3 family, Faster-RCNN, LPR)
+//! * [`profile`] — deterministic synthetic weights + activation statistics
+//! * [`sim`] — SCALE-SIM-style latency simulator (Eyeriss / TPU) + uplinks
+//! * [`quant`] — quantizers, distortion, Lagrangian bit allocation, packing
+//! * [`splitter`] — the Auto-Split optimizer (Algorithm 1) and all baselines
+//! * [`runtime`] — PJRT engine loading HLO-text artifacts
+//! * [`coordinator`] — the edge↔cloud serving runtime (request path)
+//! * [`report`] — table/figure rendering shared by the benches
+
+pub mod graph;
+pub mod profile;
+pub mod quant;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod splitter;
+pub mod util;
+pub mod zoo;
+
+pub use graph::{Graph, LayerKind, NodeId, Shape};
+pub use sim::LatencyModel;

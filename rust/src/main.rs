@@ -1,0 +1,276 @@
+//! `auto-split` CLI — the L3 coordinator entry point.
+//!
+//! Subcommands:
+//!   optimize  --model <name> [--threshold pct] [--mem mb] [--mbps rate]
+//!             run the Auto-Split planner on a zoo model, print the
+//!             solution list summary + the selected deployment plan
+//!   baselines --model <name> [...]
+//!             compare Auto-Split against Neurosurgeon/DADS/QDMP/U8/CLOUD16
+//!   serve     [--artifacts dir] [--mode split|cloud] [--requests n]
+//!             [--mbps rate] [--batch n] [--rpc]
+//!             run the serving pipeline on the AOT artifacts
+//!   zoo       list available models
+//!
+//! (The offline build environment has no clap; argument parsing is a
+//! small hand-rolled matcher.)
+
+use anyhow::{bail, Context, Result};
+use auto_split::coordinator::{ServeConfig, ServeMode, Server, WireFormat};
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::report::{fmt_bytes, fmt_latency, Table};
+use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
+use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx};
+use auto_split::zoo;
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--key`.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { rest: std::env::args().skip(1).collect() }
+    }
+
+    fn subcommand(&mut self) -> Option<String> {
+        if self.rest.first().map(|s| !s.starts_with("--")).unwrap_or(false) {
+            Some(self.rest.remove(0))
+        } else {
+            None
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.rest
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.rest.iter().any(|a| a == key)
+    }
+
+    fn parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().ok().with_context(|| format!("bad value for {key}: {v}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::new();
+    match args.subcommand().as_deref() {
+        Some("optimize") => cmd_optimize(&args),
+        Some("baselines") => cmd_baselines(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadtest") => cmd_loadtest(&args),
+        Some("zoo") => {
+            for m in zoo::MODEL_NAMES {
+                println!("{m}");
+            }
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!("usage: auto-split <optimize|baselines|serve|zoo> [flags]");
+            eprintln!("  optimize  --model resnet50 [--threshold 5] [--mem-mb 32] [--mbps 3]");
+            eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
+            eprintln!("  serve     [--artifacts artifacts] [--mode split|cloud] [--requests 64]");
+            eprintln!("            [--mbps 3] [--batch 8] [--rpc]");
+            eprintln!("  loadtest  [--artifacts artifacts] [--rps 100] [--requests 200]");
+            Ok(())
+        }
+    }
+}
+
+fn planner_inputs(
+    args: &Args,
+) -> Result<(auto_split::Graph, zoo::Task, LatencyModel, AutoSplitConfig)> {
+    let model = args.get("--model").context("--model required (see `auto-split zoo`)")?;
+    let (g, task) = zoo::by_name(model).with_context(|| format!("unknown model {model}"))?;
+    let opt = optimize_for_inference(&g).graph;
+    let lm = LatencyModel::new(
+        AcceleratorConfig::eyeriss(),
+        AcceleratorConfig::tpu(),
+        Uplink::mbps(args.parse("--mbps", 3.0)?),
+    );
+    let cfg = AutoSplitConfig {
+        max_drop_pct: args.parse("--threshold", 5.0)?,
+        edge_mem_bytes: args.parse("--mem-mb", 32usize)? << 20,
+        ..Default::default()
+    };
+    Ok((opt, task, lm, cfg))
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let (opt, task, lm, cfg) = planner_inputs(args)?;
+    let profile = ModelProfile::synthesize(&opt);
+    let (list, sel) = auto_split(&opt, &profile, &lm, task, &cfg);
+
+    println!(
+        "{}: {} candidate solutions (threshold {}%, edge mem {})",
+        opt.name,
+        list.len(),
+        cfg.max_drop_pct,
+        fmt_bytes(cfg.edge_mem_bytes)
+    );
+    let mut t = Table::new(
+        "Pareto frontier (accuracy drop vs latency)",
+        &["placement", "split@", "layer", "latency", "drop%", "edge size", "tx"],
+    );
+    for s in list.pareto().iter().take(12) {
+        t.row(&[
+            s.placement.to_string(),
+            s.split_index.to_string(),
+            s.split_layer.clone(),
+            fmt_latency(s.total_latency()),
+            format!("{:.2}", s.acc_drop_pct),
+            fmt_bytes(s.edge_model_bytes),
+            fmt_bytes(s.tx_bytes),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "SELECTED: {} split_idx={} ({})  latency={}  drop={:.2}%  edge={}  tx={}",
+        sel.placement,
+        sel.split_index,
+        sel.split_layer,
+        fmt_latency(sel.total_latency()),
+        sel.acc_drop_pct,
+        fmt_bytes(sel.edge_model_bytes),
+        fmt_bytes(sel.tx_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_baselines(args: &Args) -> Result<()> {
+    let (opt, task, lm, cfg) = planner_inputs(args)?;
+    let model = args.get("--model").unwrap();
+    let (raw, _) = zoo::by_name(model).unwrap();
+    let profile = ModelProfile::synthesize(&opt);
+    let (_, sel) = auto_split(&opt, &profile, &lm, task, &cfg);
+    let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
+
+    let mut t = Table::new(
+        format!("{} — method comparison", opt.name),
+        &["method", "placement", "split@", "latency", "vs cloud", "drop%", "edge size"],
+    );
+    let cloud = ctx.cloud_only();
+    let cloud_lat = cloud.total_latency();
+    for s in [
+        sel,
+        ctx.qdmp(),
+        ctx.qdmp_e(),
+        ctx.qdmp_e_u4(),
+        ctx.dads(&raw),
+        ctx.neurosurgeon(),
+        ctx.uniform_edge_only(8),
+        cloud,
+    ] {
+        t.row(&[
+            s.method.clone(),
+            s.placement.to_string(),
+            s.split_index.to_string(),
+            fmt_latency(s.total_latency()),
+            format!("{:.0}%", 100.0 * s.total_latency() / cloud_lat),
+            format!("{:.2}", s.acc_drop_pct),
+            fmt_bytes(s.edge_model_bytes),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    use auto_split::coordinator::{poisson_schedule, replay};
+    let dir = args.get("--artifacts").unwrap_or("artifacts");
+    let rps: f64 = args.parse("--rps", 100.0)?;
+    let n: usize = args.parse("--requests", 200)?;
+    let server = Server::start(ServeConfig::new(dir))?;
+    let buf = std::fs::read(std::path::Path::new(dir).join("eval_set.bin"))
+        .context("eval_set.bin — run `make artifacts`")?;
+    let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
+    let img = server.meta.img * server.meta.img;
+    let images: Vec<Vec<f32>> = (0..count.min(64))
+        .map(|s| {
+            buf[4 + s * img * 4..4 + (s + 1) * img * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect()
+        })
+        .collect();
+    let _ = server.infer(images[0].clone()); // warm-up
+    println!("open-loop Poisson load: {rps} rps, {n} requests");
+    let schedule = poisson_schedule(rps, n, images.len(), 1);
+    let report = replay(&server, &images, &schedule)?;
+    println!(
+        "offered {:.0} rps  achieved {:.0} rps  errors {}
+p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms",
+        report.offered_rps,
+        report.achieved_rps,
+        report.errors,
+        report.quantile(0.5) * 1e3,
+        report.quantile(0.95) * 1e3,
+        report.quantile(0.99) * 1e3,
+        report.mean() * 1e3,
+    );
+    println!("
+{}", server.shutdown().report());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get("--artifacts").unwrap_or("artifacts");
+    let mut cfg = ServeConfig::new(dir);
+    cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
+    cfg.max_batch = args.parse("--batch", 8usize)?;
+    if args.flag("--rpc") {
+        cfg.wire = WireFormat::AsciiRpc;
+    }
+    cfg.mode = match args.get("--mode").unwrap_or("split") {
+        "split" => ServeMode::Split,
+        "cloud" => ServeMode::CloudOnly,
+        m => bail!("bad --mode {m}"),
+    };
+    let n: usize = args.parse("--requests", 64)?;
+
+    println!("starting pipeline ({:?}, artifacts={dir})...", cfg.mode);
+    let server = Server::start(cfg)?;
+    println!(
+        "model: {} params, float acc {:?}, quant-split acc {:?}",
+        server.meta.params, server.meta.acc_float, server.meta.acc_quant_split
+    );
+
+    // replay the bundled eval set
+    let eval = std::path::Path::new(dir).join("eval_set.bin");
+    let buf = std::fs::read(&eval).with_context(|| format!("read {eval:?}"))?;
+    let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
+    let img = server.meta.img * server.meta.img;
+    let mut correct = 0;
+    let mut submitted = vec![];
+    for i in 0..n {
+        let s = i % count;
+        let off = 4 + s * img * 4;
+        let image: Vec<f32> = buf[off..off + img * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        submitted.push((server.submit(image)?, buf[4 + count * img * 4 + s]));
+    }
+    for (rx, label) in submitted {
+        let res = rx.recv()??;
+        if res.class == label as usize {
+            correct += 1;
+        }
+    }
+    let stats = server.shutdown();
+    println!("\naccuracy over {n} requests: {:.3}", correct as f64 / n as f64);
+    println!("{}", stats.report());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Activation-statistics helpers shared by calibration and the serving
+//! runtime (scale/zero-point computation for the transmission protocol).
+
+/// Summary statistics of a sampled tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorStats {
+    pub min: f32,
+    pub max: f32,
+    pub mean: f32,
+    pub std: f32,
+    /// Fraction of exact zeros (ReLU sparsity; drives the Table 7
+    /// feature-compression advantage).
+    pub sparsity: f32,
+}
+
+impl TensorStats {
+    pub fn compute(xs: &[f32]) -> Self {
+        if xs.is_empty() {
+            return TensorStats { min: 0.0, max: 0.0, mean: 0.0, std: 0.0, sparsity: 0.0 };
+        }
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        let mut zeros = 0usize;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+            sum += x as f64;
+            if x == 0.0 {
+                zeros += 1;
+            }
+        }
+        let mean = (sum / xs.len() as f64) as f32;
+        let var = xs.iter().map(|&x| ((x - mean) as f64).powi(2)).sum::<f64>()
+            / xs.len() as f64;
+        TensorStats {
+            min,
+            max,
+            mean,
+            std: var.sqrt() as f32,
+            sparsity: zeros as f32 / xs.len() as f32,
+        }
+    }
+
+    /// Symmetric quantization scale for `bits` (paper's edge devices use
+    /// symmetric integer grids; zero-point 0).
+    pub fn symmetric_scale(&self, bits: u8) -> f32 {
+        let amax = self.min.abs().max(self.max.abs());
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        if amax == 0.0 {
+            1.0
+        } else {
+            amax / qmax
+        }
+    }
+
+    /// Asymmetric (affine) scale and zero-point covering [min, max].
+    pub fn affine_scale_zp(&self, bits: u8) -> (f32, i32) {
+        let levels = ((1u64 << bits) - 1) as f32;
+        let (lo, hi) = (self.min.min(0.0), self.max.max(0.0));
+        let scale = if hi > lo { (hi - lo) / levels } else { 1.0 };
+        let zp = (-lo / scale).round() as i32;
+        (scale, zp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let s = TensorStats::compute(&[0.0, 1.0, -1.0, 0.0]);
+        assert_eq!(s.min, -1.0);
+        assert_eq!(s.max, 1.0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.sparsity, 0.5);
+    }
+
+    #[test]
+    fn symmetric_scale_int8() {
+        let s = TensorStats::compute(&[-2.0, 2.0]);
+        let sc = s.symmetric_scale(8);
+        assert!((sc - 2.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn affine_covers_range() {
+        let s = TensorStats::compute(&[0.0, 6.0]); // relu6-like
+        let (scale, zp) = s.affine_scale_zp(8);
+        assert_eq!(zp, 0);
+        assert!((scale - 6.0 / 255.0).abs() < 1e-7);
+        let s2 = TensorStats::compute(&[-1.0, 3.0]);
+        let (sc2, zp2) = s2.affine_scale_zp(4);
+        assert!(zp2 > 0);
+        assert!(sc2 > 0.0);
+    }
+
+    #[test]
+    fn empty_tensor_safe() {
+        let s = TensorStats::compute(&[]);
+        assert_eq!(s.symmetric_scale(8), 1.0);
+    }
+}

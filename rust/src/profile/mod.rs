@@ -1,0 +1,16 @@
+//! Deterministic synthetic model profiles.
+//!
+//! The paper profiles *trained* models (weights + sample activations) to
+//! obtain per-layer quantization sensitivities. We have no proprietary
+//! checkpoints, so this module synthesizes per-layer weight tensors and
+//! activation samples from seeded, layer-dependent distributions chosen to
+//! reproduce the *sensitivity diversity* real networks exhibit (see
+//! DESIGN.md §3). Everything is deterministic: same graph → same profile.
+
+pub mod activations;
+pub mod rng;
+pub mod weights;
+
+pub use activations::TensorStats;
+pub use rng::SplitMix64;
+pub use weights::{LayerProfile, ModelProfile};

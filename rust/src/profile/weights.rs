@@ -1,0 +1,185 @@
+//! Synthetic per-layer weight tensors and the [`ModelProfile`] consumed by
+//! the quantization-error machinery.
+//!
+//! Real post-training-quantization sensitivity varies across layers because
+//! weight distributions differ (first/last layers and depthwise convs are
+//! notoriously outlier-heavy, large 1x1 projections are benign). We emulate
+//! this with a per-layer *distribution family* chosen deterministically from
+//! the layer's name and role:
+//! * plain convs/linears: Gaussian with fan-in scaling (He init shape)
+//! * depthwise convs: Gaussian + Laplace outlier mixture (heavy tails)
+//! * first conv & heads: wider dynamic range (scale ×2)
+//!
+//! Tensors are subsampled to at most [`MAX_SAMPLE`] elements — quantization
+//! MSE is a per-element statistic, so a deterministic subsample of a few
+//! thousand points estimates it to well under 1% relative error.
+
+use super::rng::SplitMix64;
+use crate::graph::{Graph, LayerKind};
+
+/// Cap on sampled elements per tensor (keeps profiling O(n_layers)).
+pub const MAX_SAMPLE: usize = 4096;
+
+/// Per-layer sampled tensors for quantization analysis.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    /// Sampled weight values (empty for weight-free layers).
+    pub weights: Vec<f32>,
+    /// Sampled output-activation values (post-nonlinearity).
+    pub activations: Vec<f32>,
+    /// True element counts the samples stand for.
+    pub weight_count: usize,
+    pub act_count: usize,
+}
+
+/// Sampled profile for a whole model.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelProfile {
+    /// Build the deterministic synthetic profile for `g`.
+    pub fn synthesize(g: &Graph) -> Self {
+        let layers = (0..g.len()).map(|i| synth_layer(g, i)).collect();
+        ModelProfile { layers }
+    }
+}
+
+fn synth_layer(g: &Graph, id: usize) -> LayerProfile {
+    let layer = &g.layers[id];
+    let mut rng = SplitMix64::from_name(&format!("{}/{}", g.name, layer.name));
+
+    let weights = if layer.weight_count > 0 && layer.kind.has_weights() {
+        let n = layer.weight_count.min(MAX_SAMPLE);
+        let fan_in = fan_in(g, id).max(1);
+        let sigma = (2.0 / fan_in as f64).sqrt();
+        let (outlier_p, outlier_scale, range_scale) = weight_character(g, id, &mut rng);
+        (0..n)
+            .map(|_| {
+                let base = if rng.next_f64() < outlier_p {
+                    rng.next_laplace(sigma * outlier_scale)
+                } else {
+                    rng.next_normal() * sigma
+                };
+                (base * range_scale) as f32
+            })
+            .collect()
+    } else {
+        vec![]
+    };
+
+    let activations = {
+        let n = layer.act_elems().min(MAX_SAMPLE);
+        let relu_like = layer.fused_activation.is_some()
+            || matches!(layer.kind, LayerKind::Activation(_));
+        // Activation scale grows mildly with depth (BN keeps it near 1).
+        let depth_frac = id as f64 / g.len().max(1) as f64;
+        let sigma = 1.0 + 0.5 * depth_frac;
+        (0..n)
+            .map(|_| {
+                let x = rng.next_normal() * sigma;
+                let v = if relu_like { x.max(0.0) } else { x };
+                v as f32
+            })
+            .collect()
+    };
+
+    LayerProfile {
+        weights,
+        activations,
+        weight_count: layer.weight_count,
+        act_count: layer.act_elems(),
+    }
+}
+
+/// (outlier probability, outlier scale, dynamic-range scale) per layer role.
+fn weight_character(g: &Graph, id: usize, rng: &mut SplitMix64) -> (f64, f64, f64) {
+    let layer = &g.layers[id];
+    let depthwise = matches!(layer.kind, LayerKind::Conv { groups, .. } if groups > 1);
+    let first = id <= 1;
+    let last = g.succs[id].is_empty()
+        || g.succs[id].iter().all(|&s| matches!(g.layers[s].kind, LayerKind::Head));
+    // A mild random per-layer factor keeps sensitivities from being
+    // perfectly uniform across same-shaped layers (Table 10 discussion).
+    let jitter = 0.75 + 0.5 * rng.next_f64();
+    if depthwise {
+        (0.05, 4.0, 1.5 * jitter)
+    } else if first || last {
+        (0.02, 3.0, 2.0 * jitter)
+    } else {
+        (0.005, 2.0, 1.0 * jitter)
+    }
+}
+
+fn fan_in(g: &Graph, id: usize) -> usize {
+    let layer = &g.layers[id];
+    match layer.kind {
+        LayerKind::Conv { kernel, groups, .. } => {
+            let cin = layer.in_shapes.first().map(|s| s.c).unwrap_or(1);
+            (cin / groups.max(1)) * kernel * kernel
+        }
+        LayerKind::Linear => layer.in_shapes.first().map(|s| s.volume()).unwrap_or(1),
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{LayerKind, Shape};
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", Shape::new(3, 16, 16));
+        let c = g.add("c1", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 8);
+        let c2 = g.add("c2", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[c], 8);
+        let d = g.add("dw", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 8 }, &[c2], 8);
+        g.add("fc", LayerKind::Linear, &[d], 10);
+        g
+    }
+
+    #[test]
+    fn deterministic_profiles() {
+        let g = tiny();
+        let a = ModelProfile::synthesize(&g);
+        let b = ModelProfile::synthesize(&g);
+        assert_eq!(a.layers[1].weights, b.layers[1].weights);
+        assert_eq!(a.layers[2].activations, b.layers[2].activations);
+    }
+
+    #[test]
+    fn sample_counts_capped() {
+        let g = tiny();
+        let p = ModelProfile::synthesize(&g);
+        for lp in &p.layers {
+            assert!(lp.weights.len() <= MAX_SAMPLE);
+            assert!(lp.activations.len() <= MAX_SAMPLE);
+        }
+        assert_eq!(p.layers[1].weight_count, g.layers[1].weight_count);
+    }
+
+    #[test]
+    fn depthwise_has_heavier_tails_than_plain() {
+        let g = tiny();
+        let p = ModelProfile::synthesize(&g);
+        let kurt = |xs: &[f32]| {
+            let n = xs.len() as f64;
+            let m = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+            xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n / (var * var)
+        };
+        // layer 2 is the mid-network plain conv, layer 3 the depthwise
+        let plain = kurt(&p.layers[2].weights);
+        let dw = kurt(&p.layers[3].weights);
+        assert!(dw > plain, "depthwise kurtosis {dw} <= plain {plain}");
+    }
+
+    #[test]
+    fn relu_activations_nonnegative_when_fused() {
+        let mut g = Graph::new("r", Shape::new(3, 8, 8));
+        let c = g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 4);
+        g.add("r", LayerKind::Activation(crate::graph::ActKind::Relu), &[c], 0);
+        let p = ModelProfile::synthesize(&g);
+        assert!(p.layers[2].activations.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-layer quantization distortion `D^w_i(b)`, `D^a_i(b)` (§3.1).
+//!
+//! The paper uses MSE against the 16-bit reference, "while other distance
+//! metrics such as cross-entropy or KL-Divergence can alternatively be
+//! utilized without changing the algorithm" — we implement MSE (default)
+//! plus the KLD alternative, both *energy-normalized* so distortions are
+//! comparable across layers of very different dynamic range.
+
+use super::quantizer::QuantParams;
+use crate::graph::Graph;
+use crate::profile::ModelProfile;
+
+/// Distortion metric selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Metric {
+    #[default]
+    Mse,
+    Kld,
+}
+
+/// Relative MSE of fake-quantizing `xs` at `bits` (symmetric for signed
+/// data, affine for non-negative data).
+pub fn tensor_distortion(xs: &[f32], bits: u8, metric: Metric) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let nonneg = xs.iter().all(|&x| x >= 0.0);
+    let qp = if nonneg {
+        QuantParams::fit_affine(xs, bits)
+    } else {
+        QuantParams::fit_symmetric(xs, bits)
+    };
+    match metric {
+        Metric::Mse => {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for &x in xs {
+                let e = (x - qp.fake_quant(x)) as f64;
+                num += e * e;
+                den += (x as f64) * (x as f64);
+            }
+            if den > 0.0 {
+                num / den
+            } else {
+                0.0
+            }
+        }
+        Metric::Kld => histogram_kld(xs, &qp),
+    }
+}
+
+/// KL divergence between the histogram of `xs` and of its fake-quantized
+/// version (TensorRT-style sensitivity signal).
+fn histogram_kld(xs: &[f32], qp: &QuantParams) -> f64 {
+    const BINS: usize = 128;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !(hi > lo) {
+        return 0.0;
+    }
+    let width = (hi - lo) / BINS as f32;
+    let mut p = vec![1e-9f64; BINS]; // smoothed
+    let mut q = vec![1e-9f64; BINS];
+    for &x in xs {
+        let bin = (((x - lo) / width) as usize).min(BINS - 1);
+        p[bin] += 1.0;
+        let xq = qp.fake_quant(x);
+        let binq = (((xq - lo) / width) as usize).min(BINS - 1);
+        q[binq] += 1.0;
+    }
+    let (sp, sq): (f64, f64) = (p.iter().sum(), q.iter().sum());
+    p.iter()
+        .zip(&q)
+        .map(|(&pi, &qi)| {
+            let (pi, qi) = (pi / sp, qi / sq);
+            pi * (pi / qi).ln()
+        })
+        .sum()
+}
+
+/// Precomputed distortion tables for a model: `weight[i][k]` is `D^w_i` at
+/// candidate bit-width `bits[k]`; likewise `act`. Weight-free layers carry
+/// zeros. Computed once per (graph, profile, candidate set).
+#[derive(Debug, Clone)]
+pub struct DistortionTable {
+    pub bits: Vec<u8>,
+    pub weight: Vec<Vec<f64>>,
+    pub act: Vec<Vec<f64>>,
+}
+
+impl DistortionTable {
+    pub fn build(g: &Graph, profile: &ModelProfile, bits: &[u8], metric: Metric) -> Self {
+        let mut weight = Vec::with_capacity(g.len());
+        let mut act = Vec::with_capacity(g.len());
+        for i in 0..g.len() {
+            let lp = &profile.layers[i];
+            weight.push(
+                bits.iter()
+                    .map(|&b| tensor_distortion(&lp.weights, b, metric))
+                    .collect(),
+            );
+            act.push(
+                bits.iter()
+                    .map(|&b| tensor_distortion(&lp.activations, b, metric))
+                    .collect(),
+            );
+        }
+        DistortionTable { bits: bits.to_vec(), weight, act }
+    }
+
+    /// Index of `bits` in the candidate set.
+    pub fn bit_index(&self, bits: u8) -> usize {
+        self.bits
+            .iter()
+            .position(|&b| b == bits)
+            .unwrap_or_else(|| panic!("bit-width {bits} not in candidate set {:?}", self.bits))
+    }
+
+    /// Total distortion of an assignment (eq. 4 LHS) over the first `n`
+    /// layers in `order`.
+    pub fn total(
+        &self,
+        order: &[usize],
+        upto: usize,
+        w_bits: &[u8],
+        a_bits: &[u8],
+    ) -> f64 {
+        order[..=upto]
+            .iter()
+            .map(|&i| {
+                self.weight[i][self.bit_index(w_bits[i])]
+                    + self.act[i][self.bit_index(a_bits[i])]
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{LayerKind, Shape};
+
+    #[test]
+    fn distortion_monotone_in_bits() {
+        let xs: Vec<f32> = (0..2000)
+            .map(|i| ((i * 2654435761u64 as usize) % 1000) as f32 / 500.0 - 1.0)
+            .collect();
+        let d2 = tensor_distortion(&xs, 2, Metric::Mse);
+        let d4 = tensor_distortion(&xs, 4, Metric::Mse);
+        let d8 = tensor_distortion(&xs, 8, Metric::Mse);
+        assert!(d2 > d4 && d4 > d8, "{d2} {d4} {d8}");
+        assert!(d8 < 1e-3);
+    }
+
+    #[test]
+    fn kld_monotone_too() {
+        let xs: Vec<f32> = (0..2000).map(|i| ((i % 100) as f32 - 50.0) / 25.0).collect();
+        let d2 = tensor_distortion(&xs, 2, Metric::Kld);
+        let d6 = tensor_distortion(&xs, 6, Metric::Kld);
+        assert!(d2 > d6);
+    }
+
+    #[test]
+    fn table_shapes() {
+        let mut g = Graph::new("t", Shape::new(3, 8, 8));
+        g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 4);
+        g.add("fc", LayerKind::Linear, &[1], 10);
+        let p = ModelProfile::synthesize(&g);
+        let t = DistortionTable::build(&g, &p, &[2, 4, 6, 8], Metric::Mse);
+        assert_eq!(t.weight.len(), 3);
+        assert_eq!(t.weight[1].len(), 4);
+        // input has no weights
+        assert!(t.weight[0].iter().all(|&d| d == 0.0));
+        // conv distortion decreases with bits
+        assert!(t.weight[1][0] >= t.weight[1][3]);
+    }
+
+    #[test]
+    fn total_sums_prefix() {
+        let mut g = Graph::new("t", Shape::new(3, 8, 8));
+        g.add("c", LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 }, &[0], 4);
+        g.add("fc", LayerKind::Linear, &[1], 10);
+        let p = ModelProfile::synthesize(&g);
+        let t = DistortionTable::build(&g, &p, &[2, 8], Metric::Mse);
+        let order = vec![0, 1, 2];
+        let w = vec![2u8, 2, 2];
+        let a = vec![8u8, 8, 8];
+        let d_all = t.total(&order, 2, &w, &a);
+        let d_one = t.total(&order, 1, &w, &a);
+        assert!(d_all >= d_one);
+    }
+}

@@ -1,0 +1,391 @@
+//! Lagrangian bit allocation (Shoham & Gersho [46]) for problems (8)/(9).
+//!
+//! Problem (8): choose per-layer weight bit-widths minimizing total
+//! distortion subject to a *sum* budget `Σ sᵢ·bᵢ ≤ M^wgt`. The Lagrangian
+//! relaxation picks, for each λ ≥ 0, `bᵢ(λ) = argmin_b Dᵢ(b) + λ·sᵢ·b`;
+//! the budget is met by bisecting λ (the rate Σ sᵢ·bᵢ(λ) is non-increasing
+//! in λ).
+//!
+//! Problem (9): activation bit-widths under a *peak* (working-set) budget.
+//! The max-constraint decouples differently: we start from the best bits
+//! and greedily lower the bits of layers on the memory peak, preferring the
+//! cheapest distortion increase per byte saved, until the peak fits.
+
+/// Per-layer allocation inputs for the sum-budget problem.
+#[derive(Debug, Clone)]
+pub struct SumItem {
+    /// Element count (`s_i`); rate of choosing bit `b` is `s_i * b` bits.
+    pub elems: usize,
+    /// `dist[k]` = distortion at candidate `bits[k]`.
+    pub dist: Vec<f64>,
+}
+
+/// Result of an allocation: chosen index into the candidate bit set per
+/// layer, plus achieved totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub choice: Vec<usize>,
+    pub total_distortion: f64,
+    pub total_bits: u128,
+}
+
+/// Solve (8): minimize Σ dist subject to Σ elems·bits ≤ `budget_bits`.
+/// Returns `None` if even the minimum bit-width assignment violates the
+/// budget. `bits` must be sorted ascending.
+pub fn allocate_sum_budget(
+    items: &[SumItem],
+    bits: &[u8],
+    budget_bits: u128,
+) -> Option<Allocation> {
+    assert!(bits.windows(2).all(|w| w[0] < w[1]), "bits must be ascending");
+    let eval = |lambda: f64| -> Allocation {
+        let mut choice = Vec::with_capacity(items.len());
+        let mut dist = 0.0;
+        let mut rate: u128 = 0;
+        for it in items {
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for (k, &b) in bits.iter().enumerate() {
+                let cost = it.dist[k] + lambda * (it.elems as f64) * (b as f64);
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = k;
+                }
+            }
+            choice.push(best);
+            dist += items[choice.len() - 1].dist[best];
+            rate += items[choice.len() - 1].elems as u128 * bits[best] as u128;
+        }
+        Allocation { choice, total_distortion: dist, total_bits: rate }
+    };
+
+    // λ = 0 → each layer takes its distortion-minimal (highest) bits.
+    let free = eval(0.0);
+    if free.total_bits <= budget_bits {
+        return Some(free);
+    }
+    // Feasibility at the floor.
+    let min_rate: u128 = items
+        .iter()
+        .map(|it| it.elems as u128 * bits[0] as u128)
+        .sum();
+    if min_rate > budget_bits {
+        return None;
+    }
+    // Tiny instances (shallow split prefixes, unit tests): solve exactly.
+    // The Lagrangian is only optimal on the convex hull of each layer's
+    // rate-distortion curve; exhaustive search costs nothing here.
+    if (bits.len() as f64).powi(items.len() as i32) <= 65536.0 {
+        return Some(exact_enumeration(items, bits, budget_bits));
+    }
+    // Bisect λ. Rate is non-increasing in λ; find the smallest λ that fits.
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    while eval(hi).total_bits > budget_bits {
+        hi *= 4.0;
+        if hi > 1e18 {
+            break;
+        }
+    }
+    let mut fit = eval(hi);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let a = eval(mid);
+        if a.total_bits <= budget_bits {
+            hi = mid;
+            fit = a;
+        } else {
+            lo = mid;
+        }
+    }
+    // Greedy refinement: spend leftover budget upgrading the layer with the
+    // best distortion decrease per added bit (fixes Lagrangian granularity).
+    let mut alloc = fit;
+    loop {
+        let mut best: Option<(usize, f64, u128)> = None;
+        for (i, it) in items.iter().enumerate() {
+            let k = alloc.choice[i];
+            if k + 1 >= bits.len() {
+                continue;
+            }
+            let extra = it.elems as u128 * (bits[k + 1] - bits[k]) as u128;
+            if alloc.total_bits + extra > budget_bits {
+                continue;
+            }
+            let gain = it.dist[k] - it.dist[k + 1];
+            let score = gain / extra as f64;
+            if best.map(|(_, s, _)| score > s).unwrap_or(gain > 0.0) {
+                best = Some((i, score, extra));
+            }
+        }
+        match best {
+            Some((i, _, extra)) => {
+                let k = alloc.choice[i];
+                alloc.total_distortion -= items[i].dist[k] - items[i].dist[k + 1];
+                alloc.choice[i] = k + 1;
+                alloc.total_bits += extra;
+            }
+            None => break,
+        }
+    }
+    // Pairwise local search: move one bit-step of budget from layer i to
+    // layer j when it lowers total distortion. Closes the Lagrangian
+    // granularity gap on small instances (verified against brute force in
+    // the property tests).
+    let rate = |i: usize, k: usize| items[i].elems as u128 * bits[k] as u128;
+    let mut improved = true;
+    let mut sweeps = 0;
+    while improved && sweeps < 8 {
+        improved = false;
+        sweeps += 1;
+        for i in 0..items.len() {
+            if alloc.choice[i] == 0 {
+                continue;
+            }
+            for j in 0..items.len() {
+                // re-check i's headroom: an accepted move inside this
+                // sweep may have pushed choice[i] down to the floor
+                if i == j || alloc.choice[i] == 0 || alloc.choice[j] + 1 >= bits.len() {
+                    continue;
+                }
+                let (ki, kj) = (alloc.choice[i], alloc.choice[j]);
+                // multi-step exchanges (up to 3 levels each way) close the
+                // gap on instances where a single-step swap is not enough
+                'moves: for di in 1..=ki.min(3) {
+                    for dj in 1..=(bits.len() - 1 - kj).min(3) {
+                        let new_bits = alloc.total_bits - rate(i, ki)
+                            + rate(i, ki - di)
+                            - rate(j, kj)
+                            + rate(j, kj + dj);
+                        if new_bits > budget_bits {
+                            continue;
+                        }
+                        let delta = (items[i].dist[ki - di] - items[i].dist[ki])
+                            + (items[j].dist[kj + dj] - items[j].dist[kj]);
+                        if delta < -1e-15 {
+                            alloc.choice[i] = ki - di;
+                            alloc.choice[j] = kj + dj;
+                            alloc.total_bits = new_bits;
+                            alloc.total_distortion += delta;
+                            improved = true;
+                            break 'moves;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Some(alloc)
+}
+
+/// Exhaustive solve of the sum-budget problem for small instances.
+fn exact_enumeration(items: &[SumItem], bits: &[u8], budget_bits: u128) -> Allocation {
+    let levels = bits.len();
+    let combos = levels.pow(items.len() as u32);
+    let mut best: Option<Allocation> = None;
+    for c in 0..combos {
+        let mut cc = c;
+        let mut rate: u128 = 0;
+        let mut dist = 0.0;
+        let mut choice = Vec::with_capacity(items.len());
+        for it in items {
+            let k = cc % levels;
+            cc /= levels;
+            rate += it.elems as u128 * bits[k] as u128;
+            dist += it.dist[k];
+            choice.push(k);
+        }
+        if rate <= budget_bits
+            && best
+                .as_ref()
+                .map(|b| dist < b.total_distortion)
+                .unwrap_or(true)
+        {
+            best = Some(Allocation { choice, total_distortion: dist, total_bits: rate });
+        }
+    }
+    best.expect("feasibility checked by caller")
+}
+
+/// Inputs for the peak-budget problem (9): each layer contributes
+/// `elems·bits` to the working set whenever it is live.
+pub struct PeakItem {
+    pub elems: usize,
+    pub dist: Vec<f64>,
+}
+
+/// Solve (9) with a callback that evaluates the activation working-set peak
+/// (bytes) for a candidate bit assignment. Greedy: start at max bits,
+/// repeatedly downgrade the choice that reduces the peak at the least
+/// distortion cost per byte, until `peak(bits) ≤ budget_bytes`.
+///
+/// `peak` receives the per-layer *bit* choices (indexed like `items`).
+pub fn allocate_peak_budget<F>(
+    items: &[PeakItem],
+    bits: &[u8],
+    budget_bytes: usize,
+    mut peak: F,
+) -> Option<Allocation>
+where
+    F: FnMut(&[u8]) -> usize,
+{
+    assert!(bits.windows(2).all(|w| w[0] < w[1]));
+    let mut choice: Vec<usize> = vec![bits.len() - 1; items.len()];
+    let cur_bits = |choice: &[usize]| -> Vec<u8> {
+        choice.iter().map(|&k| bits[k]).collect()
+    };
+    let mut p = peak(&cur_bits(&choice));
+    while p > budget_bytes {
+        // candidate downgrades: any layer above the floor
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..items.len() {
+            let k = choice[i];
+            if k == 0 {
+                continue;
+            }
+            let d_cost = items[i].dist[k - 1] - items[i].dist[k];
+            let byte_gain = items[i].elems * (bits[k] - bits[k - 1]) as usize;
+            if byte_gain == 0 {
+                continue;
+            }
+            let score = d_cost / byte_gain as f64;
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        let (i, _) = best?; // all at floor and still over budget → infeasible
+        choice[i] -= 1;
+        p = peak(&cur_bits(&choice));
+    }
+    let total_distortion = items
+        .iter()
+        .zip(&choice)
+        .map(|(it, &k)| it.dist[k])
+        .sum();
+    let total_bits = items
+        .iter()
+        .zip(&choice)
+        .map(|(it, &k)| it.elems as u128 * bits[k] as u128)
+        .sum();
+    Some(Allocation { choice, total_distortion, total_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geometric_dist(bits: &[u8], scale: f64) -> Vec<f64> {
+        // distortion ~ scale * 4^-b (6 dB/bit), the classic quantizer law
+        bits.iter().map(|&b| scale * 4f64.powi(-(b as i32))).collect()
+    }
+
+    #[test]
+    fn unconstrained_takes_max_bits() {
+        let bits = [2u8, 4, 6, 8];
+        let items: Vec<SumItem> = (0..4)
+            .map(|i| SumItem { elems: 100, dist: geometric_dist(&bits, 1.0 + i as f64) })
+            .collect();
+        let a = allocate_sum_budget(&items, &bits, u128::MAX).unwrap();
+        assert!(a.choice.iter().all(|&k| k == 3));
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let bits = [2u8, 4];
+        let items = vec![SumItem { elems: 100, dist: geometric_dist(&bits, 1.0) }];
+        assert!(allocate_sum_budget(&items, &bits, 100).is_none()); // needs ≥200
+    }
+
+    #[test]
+    fn budget_respected_and_sensitive_layers_win() {
+        let bits = [2u8, 4, 6, 8];
+        // layer 0 is 100× more sensitive than layer 1, same size
+        let items = vec![
+            SumItem { elems: 1000, dist: geometric_dist(&bits, 100.0) },
+            SumItem { elems: 1000, dist: geometric_dist(&bits, 1.0) },
+        ];
+        // budget for an average of 5 bits/elem
+        let a = allocate_sum_budget(&items, &bits, 10_000).unwrap();
+        assert!(a.total_bits <= 10_000);
+        assert!(
+            a.choice[0] >= a.choice[1],
+            "sensitive layer got {} vs {}",
+            bits[a.choice[0]],
+            bits[a.choice[1]]
+        );
+    }
+
+    #[test]
+    fn matches_bruteforce_on_small_instance() {
+        let bits = [2u8, 4, 6, 8];
+        let items: Vec<SumItem> = (0..3)
+            .map(|i| SumItem {
+                elems: 50 + i * 37,
+                dist: geometric_dist(&bits, (i + 1) as f64 * 3.0),
+            })
+            .collect();
+        let budget = 2_000u128;
+        let a = allocate_sum_budget(&items, &bits, budget).unwrap();
+        // brute force
+        let mut best = f64::INFINITY;
+        for c0 in 0..4 {
+            for c1 in 0..4 {
+                for c2 in 0..4 {
+                    let rate = items[0].elems as u128 * bits[c0] as u128
+                        + items[1].elems as u128 * bits[c1] as u128
+                        + items[2].elems as u128 * bits[c2] as u128;
+                    if rate <= budget {
+                        let d = items[0].dist[c0] + items[1].dist[c1] + items[2].dist[c2];
+                        best = best.min(d);
+                    }
+                }
+            }
+        }
+        // Lagrangian+refinement should be within a whisker of optimal
+        assert!(
+            a.total_distortion <= best * 1.05 + 1e-12,
+            "{} vs optimal {}",
+            a.total_distortion,
+            best
+        );
+    }
+
+    #[test]
+    fn peak_allocator_fits_budget() {
+        let bits = [2u8, 4, 8];
+        let items: Vec<PeakItem> = (0..5)
+            .map(|i| PeakItem { elems: 100 * (i + 1), dist: geometric_dist(&bits, 1.0) })
+            .collect();
+        // peak = largest single tensor (chain assumption)
+        let peak = |bw: &[u8]| -> usize {
+            items
+                .iter()
+                .zip(bw)
+                .map(|(it, &b)| it.elems * b as usize / 8)
+                .max()
+                .unwrap()
+        };
+        let a = allocate_peak_budget(&items, &bits, 300, peak).unwrap();
+        let final_bits: Vec<u8> = a.choice.iter().map(|&k| bits[k]).collect();
+        let p = items
+            .iter()
+            .zip(&final_bits)
+            .map(|(it, &b)| it.elems * b as usize / 8)
+            .max()
+            .unwrap();
+        assert!(p <= 300);
+        // the big layer (500 elems) must have been downgraded, small ones not
+        assert!(final_bits[4] < 8);
+        assert_eq!(final_bits[0], 8);
+    }
+
+    #[test]
+    fn peak_infeasible_returns_none() {
+        let bits = [4u8, 8];
+        let items = vec![PeakItem { elems: 1000, dist: vec![1.0, 0.1] }];
+        let r = allocate_peak_budget(&items, &bits, 10, |bw| {
+            items[0].elems * bw[0] as usize / 8
+        });
+        assert!(r.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Post-training quantization substrate: quantizers, per-layer distortion
+//! tables, Lagrangian bit allocation [46], and sub-8-bit packing.
+
+pub mod error;
+pub mod lagrange;
+pub mod packing;
+pub mod per_channel;
+pub mod quantizer;
+
+pub use error::{DistortionTable, Metric};
+pub use lagrange::{allocate_peak_budget, allocate_sum_budget, Allocation, PeakItem, SumItem};
+pub use packing::{pack, packed_len, unpack, PackLayout};
+pub use per_channel::{per_tensor_distortion, PerChannelQuant};
+pub use quantizer::{fake_quant_tensor, quantize_tensor, QuantParams};

@@ -1,0 +1,233 @@
+//! Sub-8-bit activation packing for transmission (paper Appendix A).
+//!
+//! Existing devices only move `int8` buffers, so b<8 codes must be packed:
+//! two 4-bit nibbles (or four 2-bit crumbs) per byte. The appendix finds
+//! **channel packing** (pairing values across channel planes, contiguous
+//! inner loops) ~100× faster than **height-width packing** (pairing
+//! adjacent spatial positions with strided access) — Table 6. We implement
+//! both layouts; the serving hot path uses channel packing.
+
+/// Packing layout along which value-pairs are formed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackLayout {
+    /// Pair element `i` of channel `2c` with element `i` of channel `2c+1`
+    /// (vectorizable contiguous runs).
+    Channel,
+    /// Pair spatially adjacent elements within each channel plane
+    /// (strided, cache-hostile — kept as the Table 6 baseline).
+    HeightWidth,
+}
+
+/// Pack `codes` (unsigned quantized values, each < 2^bits, laid out CHW
+/// with `plane = h*w` elements per channel) into bytes.
+///
+/// Supported bit-widths: 1, 2, 4 (and 8 = memcpy).
+pub fn pack(codes: &[u8], bits: u8, plane: usize, layout: PackLayout) -> Vec<u8> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "packable bit-widths: 1/2/4/8");
+    if bits == 8 {
+        return codes.to_vec();
+    }
+    let per_byte = (8 / bits) as usize;
+    let mut out = Vec::with_capacity(codes.len().div_ceil(per_byte));
+    match layout {
+        PackLayout::Channel => {
+            // Values at the same spatial index of `per_byte` consecutive
+            // channels share a byte; tail channels pad with zero.
+            assert!(plane > 0 && codes.len() % plane == 0);
+            let channels = codes.len() / plane;
+            let mut c = 0;
+            while c < channels {
+                let group = (0..per_byte)
+                    .map(|j| c + j)
+                    .collect::<Vec<_>>();
+                for i in 0..plane {
+                    let mut byte = 0u8;
+                    for (slot, &ch) in group.iter().enumerate() {
+                        let v = if ch < channels { codes[ch * plane + i] } else { 0 };
+                        debug_assert!(v < (1 << bits));
+                        byte |= v << (slot as u8 * bits);
+                    }
+                    out.push(byte);
+                }
+                c += per_byte;
+            }
+        }
+        PackLayout::HeightWidth => {
+            // Adjacent spatial positions within one channel share a byte.
+            assert!(plane > 0 && codes.len() % plane == 0);
+            let channels = codes.len() / plane;
+            for c in 0..channels {
+                let base = c * plane;
+                let mut i = 0;
+                while i < plane {
+                    let mut byte = 0u8;
+                    for slot in 0..per_byte {
+                        let v = if i + slot < plane { codes[base + i + slot] } else { 0 };
+                        debug_assert!(v < (1 << bits));
+                        byte |= v << (slot as u8 * bits);
+                    }
+                    out.push(byte);
+                    i += per_byte;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Invert [`pack`]; `elems` is the original element count, `plane` the
+/// per-channel spatial size.
+pub fn unpack(
+    packed: &[u8],
+    bits: u8,
+    elems: usize,
+    plane: usize,
+    layout: PackLayout,
+) -> Vec<u8> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8));
+    if bits == 8 {
+        return packed[..elems].to_vec();
+    }
+    let per_byte = (8 / bits) as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    let mut out = vec![0u8; elems];
+    match layout {
+        PackLayout::Channel => {
+            assert!(plane > 0 && elems % plane == 0);
+            let channels = elems / plane;
+            let mut c = 0;
+            let mut byte_idx = 0;
+            while c < channels {
+                for i in 0..plane {
+                    let byte = packed[byte_idx];
+                    byte_idx += 1;
+                    for slot in 0..per_byte {
+                        let ch = c + slot;
+                        if ch < channels {
+                            out[ch * plane + i] = (byte >> (slot as u8 * bits)) & mask;
+                        }
+                    }
+                }
+                c += per_byte;
+            }
+        }
+        PackLayout::HeightWidth => {
+            assert!(plane > 0 && elems % plane == 0);
+            let channels = elems / plane;
+            let mut byte_idx = 0;
+            for c in 0..channels {
+                let base = c * plane;
+                let mut i = 0;
+                while i < plane {
+                    let byte = packed[byte_idx];
+                    byte_idx += 1;
+                    for slot in 0..per_byte {
+                        if i + slot < elems.min(plane) {
+                            out[base + i + slot] = (byte >> (slot as u8 * bits)) & mask;
+                        }
+                    }
+                    i += per_byte;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Packed byte count for `elems` values at `bits` in `layout` (includes
+/// channel-pad slack for the channel layout).
+pub fn packed_len(elems: usize, bits: u8, plane: usize, layout: PackLayout) -> usize {
+    if bits == 8 {
+        return elems;
+    }
+    let per_byte = (8 / bits) as usize;
+    match layout {
+        PackLayout::Channel => {
+            let channels = elems / plane;
+            channels.div_ceil(per_byte) * plane
+        }
+        PackLayout::HeightWidth => {
+            let channels = elems / plane;
+            channels * plane.div_ceil(per_byte)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(n: usize, bits: u8) -> Vec<u8> {
+        let mask = ((1u32 << bits) - 1) as u8;
+        (0..n).map(|i| (i as u8).wrapping_mul(37) & mask).collect()
+    }
+
+    #[test]
+    fn roundtrip_channel_4bit() {
+        // 4 channels × 3x3 plane
+        let plane = 9;
+        let xs = codes(4 * plane, 4);
+        let p = pack(&xs, 4, plane, PackLayout::Channel);
+        assert_eq!(p.len(), packed_len(xs.len(), 4, plane, PackLayout::Channel));
+        assert_eq!(p.len(), 2 * plane);
+        let u = unpack(&p, 4, xs.len(), plane, PackLayout::Channel);
+        assert_eq!(u, xs);
+    }
+
+    #[test]
+    fn roundtrip_hw_4bit() {
+        let plane = 10;
+        let xs = codes(3 * plane, 4);
+        let p = pack(&xs, 4, plane, PackLayout::HeightWidth);
+        let u = unpack(&p, 4, xs.len(), plane, PackLayout::HeightWidth);
+        assert_eq!(u, xs);
+    }
+
+    #[test]
+    fn roundtrip_2bit_and_1bit() {
+        let plane = 16;
+        for bits in [1u8, 2] {
+            for layout in [PackLayout::Channel, PackLayout::HeightWidth] {
+                let xs = codes(8 * plane, bits);
+                let p = pack(&xs, bits, plane, layout);
+                let u = unpack(&p, bits, xs.len(), plane, layout);
+                assert_eq!(u, xs, "bits={bits} layout={layout:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn odd_channel_count_pads() {
+        let plane = 4;
+        let xs = codes(3 * plane, 4); // 3 channels: one pad channel
+        let p = pack(&xs, 4, plane, PackLayout::Channel);
+        assert_eq!(p.len(), 2 * plane);
+        let u = unpack(&p, 4, xs.len(), plane, PackLayout::Channel);
+        assert_eq!(u, xs);
+    }
+
+    #[test]
+    fn odd_plane_hw_pads() {
+        let plane = 7; // odd spatial size
+        let xs = codes(2 * plane, 4);
+        let p = pack(&xs, 4, plane, PackLayout::HeightWidth);
+        assert_eq!(p.len(), 2 * plane.div_ceil(2));
+        let u = unpack(&p, 4, xs.len(), plane, PackLayout::HeightWidth);
+        assert_eq!(u, xs);
+    }
+
+    #[test]
+    fn eight_bit_is_identity() {
+        let xs = codes(100, 8);
+        let p = pack(&xs, 8, 10, PackLayout::Channel);
+        assert_eq!(p, xs);
+    }
+
+    #[test]
+    fn compression_ratio_4bit_halves() {
+        let plane = 64;
+        let xs = codes(64 * plane, 4);
+        let p = pack(&xs, 4, plane, PackLayout::Channel);
+        assert_eq!(p.len() * 2, xs.len());
+    }
+}

@@ -1,0 +1,146 @@
+//! Per-channel weight quantization — the standard PTQ refinement ([32],
+//! ZeroQ [7]) the paper's pipeline composes with: one symmetric scale per
+//! output channel instead of per tensor. Cuts weight distortion by the
+//! spread of channel ranges at identical bit cost, tightening eq. (4)'s
+//! budget and admitting lower bit-widths at the same threshold.
+
+use super::quantizer::QuantParams;
+
+/// Per-channel symmetric quantizer: `scales[c]` covers channel `c`.
+#[derive(Debug, Clone)]
+pub struct PerChannelQuant {
+    pub bits: u8,
+    pub scales: Vec<f32>,
+}
+
+impl PerChannelQuant {
+    /// Fit per-channel amax scales. `xs` is laid out channel-major:
+    /// `xs[c * per_ch .. (c+1) * per_ch]` is channel `c`.
+    pub fn fit(xs: &[f32], channels: usize, bits: u8) -> Self {
+        assert!(channels > 0 && xs.len() % channels == 0);
+        let per_ch = xs.len() / channels;
+        let scales = (0..channels)
+            .map(|c| {
+                QuantParams::fit_symmetric(&xs[c * per_ch..(c + 1) * per_ch], bits).scale
+            })
+            .collect();
+        PerChannelQuant { bits, scales }
+    }
+
+    /// Fake-quantize in place layout-compatibly with [`fit`].
+    pub fn fake_quant(&self, xs: &[f32]) -> Vec<f32> {
+        let channels = self.scales.len();
+        let per_ch = xs.len() / channels;
+        let mut out = Vec::with_capacity(xs.len());
+        for (c, &scale) in self.scales.iter().enumerate() {
+            let qp = QuantParams { bits: self.bits, scale, zero_point: 0, signed: true };
+            for &x in &xs[c * per_ch..(c + 1) * per_ch] {
+                out.push(qp.fake_quant(x));
+            }
+        }
+        out
+    }
+
+    /// Energy-normalized MSE of the per-channel round trip.
+    pub fn distortion(&self, xs: &[f32]) -> f64 {
+        let y = self.fake_quant(xs);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in xs.iter().zip(&y) {
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-tensor distortion of the same data, for the ablation comparison.
+pub fn per_tensor_distortion(xs: &[f32], bits: u8) -> f64 {
+    let qp = QuantParams::fit_symmetric(xs, bits);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &x in xs {
+        let e = (x - qp.fake_quant(x)) as f64;
+        num += e * e;
+        den += (x as f64) * (x as f64);
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::SplitMix64;
+
+    /// Channels with wildly different ranges — the per-channel win case.
+    fn heterogeneous(channels: usize, per_ch: usize) -> Vec<f32> {
+        let mut rng = SplitMix64::new(5);
+        let mut xs = Vec::with_capacity(channels * per_ch);
+        for c in 0..channels {
+            let scale = 0.01 * (c as f64 + 1.0).powi(2);
+            for _ in 0..per_ch {
+                xs.push((rng.next_normal() * scale) as f32);
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_heterogeneous_ranges() {
+        let xs = heterogeneous(16, 256);
+        for bits in [2u8, 4, 8] {
+            let pc = PerChannelQuant::fit(&xs, 16, bits);
+            let d_pc = pc.distortion(&xs);
+            let d_pt = per_tensor_distortion(&xs, bits);
+            // at 2 bits both grids are so coarse the relative win shrinks
+            let factor = if bits == 2 { 1.0 } else { 0.5 };
+            assert!(
+                d_pc < d_pt * factor,
+                "bits={bits}: per-channel {d_pc} vs per-tensor {d_pt}"
+            );
+        }
+    }
+
+    #[test]
+    fn equal_on_homogeneous_ranges() {
+        let mut rng = SplitMix64::new(6);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.next_normal() as f32).collect();
+        let pc = PerChannelQuant::fit(&xs, 8, 4);
+        let d_pc = pc.distortion(&xs);
+        let d_pt = per_tensor_distortion(&xs, 4);
+        // same statistics per channel → little to gain (within 2x noise)
+        assert!(d_pc <= d_pt * 1.05);
+        assert!(d_pt <= d_pc * 3.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_channel() {
+        let xs = heterogeneous(4, 64);
+        let pc = PerChannelQuant::fit(&xs, 4, 8);
+        let y = pc.fake_quant(&xs);
+        let per_ch = xs.len() / 4;
+        for c in 0..4 {
+            for i in 0..per_ch {
+                let idx = c * per_ch + i;
+                assert!((xs[idx] - y[idx]).abs() <= pc.scales[c] * 0.5 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let xs = heterogeneous(8, 128);
+        let d2 = PerChannelQuant::fit(&xs, 8, 2).distortion(&xs);
+        let d4 = PerChannelQuant::fit(&xs, 8, 4).distortion(&xs);
+        let d8 = PerChannelQuant::fit(&xs, 8, 8).distortion(&xs);
+        assert!(d2 > d4 && d4 > d8);
+    }
+}

@@ -1,0 +1,155 @@
+//! Linear quantizers (symmetric and affine) used both for distortion
+//! analysis (offline planner) and on the serving hot path (activation
+//! quantization at the split boundary).
+
+/// Parameters of an affine (scale / zero-point) quantizer at `bits`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub bits: u8,
+    pub scale: f32,
+    pub zero_point: i32,
+    /// Signed (symmetric) grid vs unsigned (affine) grid.
+    pub signed: bool,
+}
+
+impl QuantParams {
+    /// Symmetric quantizer covering ±amax with a signed b-bit grid.
+    pub fn symmetric(amax: f32, bits: u8) -> Self {
+        assert!((1..=16).contains(&bits));
+        let qmax = ((1i64 << (bits - 1)) - 1).max(1) as f32;
+        let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+        QuantParams { bits, scale, zero_point: 0, signed: true }
+    }
+
+    /// Affine quantizer covering [lo, hi] with an unsigned b-bit grid
+    /// (used for post-ReLU activations: no negative levels wasted).
+    pub fn affine(lo: f32, hi: f32, bits: u8) -> Self {
+        assert!((1..=16).contains(&bits));
+        let (lo, hi) = (lo.min(0.0), hi.max(lo + f32::EPSILON));
+        let levels = ((1u64 << bits) - 1) as f32;
+        let scale = (hi - lo) / levels;
+        let zero_point = (-lo / scale).round() as i32;
+        QuantParams { bits, scale, zero_point, signed: false }
+    }
+
+    /// Fit a symmetric quantizer to data (amax calibration).
+    pub fn fit_symmetric(xs: &[f32], bits: u8) -> Self {
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        QuantParams::symmetric(amax, bits)
+    }
+
+    /// Fit an affine quantizer to data (min/max calibration).
+    pub fn fit_affine(xs: &[f32], bits: u8) -> Self {
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        QuantParams::affine(lo, hi, bits)
+    }
+
+    #[inline]
+    pub fn q_min(&self) -> i32 {
+        if self.signed {
+            -(1i32 << (self.bits - 1)) + 1
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    pub fn q_max(&self) -> i32 {
+        if self.signed {
+            (1i32 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) as i32 - 1
+        }
+    }
+
+    /// Quantize one value to its integer code.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32 + self.zero_point;
+        q.clamp(self.q_min(), self.q_max())
+    }
+
+    /// Dequantize an integer code.
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero_point) as f32 * self.scale
+    }
+
+    /// Round-trip a value through the quantizer (fake-quant).
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Quantize a slice into i32 codes.
+pub fn quantize_tensor(xs: &[f32], qp: &QuantParams) -> Vec<i32> {
+    xs.iter().map(|&x| qp.quantize(x)).collect()
+}
+
+/// Fake-quantize a slice (round-trip through the integer grid).
+pub fn fake_quant_tensor(xs: &[f32], qp: &QuantParams) -> Vec<f32> {
+    xs.iter().map(|&x| qp.fake_quant(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_int8_roundtrip() {
+        let qp = QuantParams::symmetric(1.0, 8);
+        assert_eq!(qp.quantize(1.0), 127);
+        assert_eq!(qp.quantize(-1.0), -127);
+        assert!((qp.fake_quant(0.5) - 0.5).abs() < qp.scale);
+        assert_eq!(qp.quantize(99.0), 127); // clamps
+    }
+
+    #[test]
+    fn affine_relu_range() {
+        let qp = QuantParams::affine(0.0, 6.0, 8);
+        assert_eq!(qp.zero_point, 0);
+        assert_eq!(qp.quantize(0.0), 0);
+        assert_eq!(qp.quantize(6.0), 255);
+        assert!((qp.fake_quant(3.0) - 3.0).abs() < qp.scale);
+    }
+
+    #[test]
+    fn lower_bits_coarser() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 / 500.0) - 1.0).collect();
+        let err = |bits| {
+            let qp = QuantParams::fit_symmetric(&xs, bits);
+            xs.iter().map(|&x| (x - qp.fake_quant(x)).powi(2)).sum::<f32>() / xs.len() as f32
+        };
+        assert!(err(2) > err(4));
+        assert!(err(4) > err(8));
+    }
+
+    #[test]
+    fn fit_affine_covers_data() {
+        let xs = vec![-0.5f32, 2.5, 1.0];
+        let qp = QuantParams::fit_affine(&xs, 4);
+        for &x in &xs {
+            assert!((qp.fake_quant(x) - x).abs() <= qp.scale, "{x}");
+        }
+    }
+
+    #[test]
+    fn one_bit_grid_is_sane() {
+        let qp = QuantParams::symmetric(1.0, 2);
+        // 2-bit symmetric: codes {-1, 0, 1}
+        assert_eq!(qp.q_min(), -1);
+        assert_eq!(qp.q_max(), 1);
+    }
+
+    #[test]
+    fn degenerate_tensor() {
+        let qp = QuantParams::fit_symmetric(&[0.0, 0.0], 8);
+        assert_eq!(qp.fake_quant(0.0), 0.0);
+    }
+}

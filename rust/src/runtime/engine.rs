@@ -1,0 +1,87 @@
+//! HLO-text → PJRT executable wrapper.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU). Cheap to clone engines from; create once.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment; on real
+    /// deployments this is the edge NPU / cloud TPU plugin).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact (see python/compile/aot.py for why
+    /// text, not serialized protos) and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Engine {
+            exe,
+            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Engine {
+    /// Execute with literal inputs; returns the unwrapped outputs (the AOT
+    /// pipeline lowers with `return_tuple=True`, so the raw result is a
+    /// 1-element tuple of the real outputs).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let out = result.to_tuple1().context("unwrap return tuple")?;
+        Ok(out)
+    }
+
+    /// Execute and read back an f32 tensor.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        Ok(self.run(inputs)?.to_vec::<f32>()?)
+    }
+
+    /// Execute and read back a u8 tensor.
+    pub fn run_u8(&self, inputs: &[xla::Literal]) -> Result<Vec<u8>> {
+        Ok(self.run(inputs)?.to_vec::<u8>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a u8 literal of the given shape (u8 is not a `NativeType` in the
+/// xla crate; go through the untyped-data constructor).
+pub fn literal_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &dims_usize,
+        data,
+    )?)
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU).
+//!
+//! One [`Engine`] per compiled executable; the coordinator owns one edge
+//! engine and one cloud engine per batch size (dynamic shapes are not a
+//! PJRT concept — each batch size is its own artifact, like production
+//! serving stacks do).
+
+pub mod engine;
+
+pub use engine::{literal_f32, literal_u8, Engine, Runtime};

@@ -1,0 +1,127 @@
+//! Accelerator configurations (paper Table 1) for the SCALE-SIM-style
+//! analytic latency model.
+
+
+
+/// Systolic-array dataflow, following SCALE-SIM's taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Weights pinned in PEs, inputs streamed (TPU-style).
+    WeightStationary,
+    /// Partial sums pinned (Eyeriss-adjacent analytic approximation).
+    OutputStationary,
+}
+
+/// One accelerator: a `rows × cols` systolic MAC array plus an on-chip
+/// scratchpad and an off-chip memory channel.
+#[derive(Debug, Clone, Copy)]
+pub struct AcceleratorConfig {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub freq_hz: f64,
+    /// On-chip (scratchpad/SRAM) bytes — Table 1 "On-chip memory".
+    pub on_chip_bytes: usize,
+    /// Off-chip (DRAM) bytes — Table 1 "Off-chip memory".
+    pub off_chip_bytes: usize,
+    /// Off-chip bandwidth, bytes/sec — Table 1 "Bandwidth".
+    pub dram_bw: f64,
+    pub dataflow: Dataflow,
+    /// MAC datapath width in bits: the paper's edge devices have fixed
+    /// INT8 MAC units, so sub-8-bit precision does NOT speed up compute
+    /// (§5.1) — only data movement scales with bit-width.
+    pub mac_bits: u8,
+    /// Native arithmetic bit-width of the *cloud* execution (FP16 in the
+    /// paper's CLOUD16 baseline).
+    pub native_bits: u8,
+}
+
+impl AcceleratorConfig {
+    /// Eyeriss [9] as configured in SCALE-SIM and the paper's Table 1:
+    /// 12×14 PE array, 192 KB on-chip, 4 GB off-chip, 1 GB/s, ~34 GOPs.
+    pub fn eyeriss() -> Self {
+        AcceleratorConfig {
+            name: "eyeriss",
+            rows: 12,
+            cols: 14,
+            freq_hz: 200e6,
+            on_chip_bytes: 192 * 1024,
+            off_chip_bytes: 4 << 30,
+            dram_bw: 1e9,
+            dataflow: Dataflow::OutputStationary,
+            mac_bits: 8,
+            native_bits: 8,
+        }
+    }
+
+    /// Cloud TPU per Table 1: 256×256 MXU, 28 MB on-chip, 16 GB HBM,
+    /// 13 GB/s (SCALE-SIM config), ~96 TOPs peak.
+    pub fn tpu() -> Self {
+        AcceleratorConfig {
+            name: "tpu",
+            rows: 256,
+            cols: 256,
+            freq_hz: 700e6,
+            on_chip_bytes: 28 << 20,
+            off_chip_bytes: 16usize << 30,
+            dram_bw: 13e9,
+            dataflow: Dataflow::WeightStationary,
+            mac_bits: 16,
+            native_bits: 16,
+        }
+    }
+
+    /// Hi3516E-class camera SoC (the §5.5 LPR edge device): a small CPU/NPU
+    /// with far less parallelism than Eyeriss-class research silicon.
+    pub fn hi3516e() -> Self {
+        AcceleratorConfig {
+            name: "hi3516e",
+            rows: 8,
+            cols: 8,
+            freq_hz: 900e6,
+            on_chip_bytes: 512 << 20, // paper: 512MB on-chip (system RAM)
+            off_chip_bytes: 1 << 30,
+            dram_bw: 1.6e9,
+            dataflow: Dataflow::OutputStationary,
+            mac_bits: 8,
+            native_bits: 8,
+        }
+    }
+
+    /// Peak MACs/sec of the array.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.rows as f64 * self.cols as f64 * self.freq_hz
+    }
+
+    /// Peak ops/sec (1 MAC = 2 ops), for roofline reporting.
+    pub fn peak_ops(&self) -> f64 {
+        2.0 * self.peak_macs_per_sec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_configs() {
+        let e = AcceleratorConfig::eyeriss();
+        assert_eq!(e.on_chip_bytes, 192 * 1024);
+        assert_eq!(e.dram_bw, 1e9);
+        // 12*14*200MHz*2 = 67.2 GOPs — same order as Table 1's 34 GOPs
+        assert!(e.peak_ops() > 30e9 && e.peak_ops() < 100e9);
+
+        let t = AcceleratorConfig::tpu();
+        assert_eq!(t.on_chip_bytes, 28 << 20);
+        // 256*256*700MHz*2 ≈ 91.8 TOPs ~ Table 1's 96 TOPs
+        assert!(t.peak_ops() > 80e12 && t.peak_ops() < 100e12);
+    }
+
+    #[test]
+    fn cloud_is_much_faster_than_edge() {
+        assert!(
+            AcceleratorConfig::tpu().peak_ops()
+                > 500.0 * AcceleratorConfig::eyeriss().peak_ops()
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! The latency functions of §3.1: `L^edge`, `L^cloud`, `L^tr`.
+//!
+//! Per-layer latency = max(compute, off-chip traffic) — the standard
+//! double-buffered overlap assumption SCALE-SIM's analytic mode makes —
+//! plus a fixed per-layer dispatch overhead.
+
+use super::device::AcceleratorConfig;
+use super::memory::memory_seconds;
+use super::network::Uplink;
+use super::systolic::compute_seconds;
+use crate::graph::layer::bits_to_bytes;
+use crate::graph::{Graph, NodeId};
+
+/// Per-layer kernel-dispatch overhead (s). Edge runtimes (TFLite-class)
+/// pay ~tens of µs per op; the cloud runtime amortizes via graph mode.
+pub const EDGE_DISPATCH_S: f64 = 20e-6;
+pub const CLOUD_DISPATCH_S: f64 = 5e-6;
+
+/// Latency oracle for a fixed (edge device, cloud device, uplink) triple.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    pub edge: AcceleratorConfig,
+    pub cloud: AcceleratorConfig,
+    pub uplink: Uplink,
+}
+
+impl LatencyModel {
+    pub fn new(edge: AcceleratorConfig, cloud: AcceleratorConfig, uplink: Uplink) -> Self {
+        LatencyModel { edge, cloud, uplink }
+    }
+
+    /// The paper's experimental setup: Eyeriss edge, TPU cloud, 3 Mbps.
+    pub fn paper_default() -> Self {
+        LatencyModel::new(
+            AcceleratorConfig::eyeriss(),
+            AcceleratorConfig::tpu(),
+            Uplink::paper_default(),
+        )
+    }
+
+    /// `L^edge_i(b^w_i, b^a_i)`: seconds to run layer `i` on the edge.
+    /// Following SCALE-SIM (and §5.1), compute cycles are
+    /// precision-independent — the fixed MAC array neither speeds up below
+    /// 8 bits nor slows down at 16 — while off-chip data movement scales
+    /// with the bit-width. This is what makes float (QDMP/Neurosurgeon)
+    /// splits viable and quantized splits strictly better.
+    pub fn edge_layer(&self, g: &Graph, i: NodeId, w_bits: u8, a_bits: u8) -> f64 {
+        let layer = &g.layers[i];
+        if layer.macs == 0 && layer.weight_count == 0 {
+            return 0.0;
+        }
+        let comp = compute_seconds(layer, &self.edge);
+        let mem = memory_seconds(layer, &self.edge, w_bits, a_bits);
+        comp.max(mem) + EDGE_DISPATCH_S
+    }
+
+    /// `L^cloud_i`: cloud executes at its native (FP16) precision.
+    pub fn cloud_layer(&self, g: &Graph, i: NodeId) -> f64 {
+        let layer = &g.layers[i];
+        if layer.macs == 0 && layer.weight_count == 0 {
+            return 0.0;
+        }
+        let b = self.cloud.native_bits;
+        let comp = compute_seconds(layer, &self.cloud);
+        let mem = memory_seconds(layer, &self.cloud, b, b);
+        comp.max(mem) + CLOUD_DISPATCH_S
+    }
+
+    /// `L^tr` for transmitting `elems` activation values at `bits` each.
+    pub fn transmission(&self, elems: usize, bits: u8) -> f64 {
+        self.uplink.transfer_seconds(bits_to_bytes(elems, bits))
+    }
+
+    /// Transmission latency of the raw input (`L^tr_0`): 8-bit pixels.
+    pub fn raw_input_transmission(&self, g: &Graph) -> f64 {
+        self.transmission(g.input_elems(), 8)
+    }
+
+    /// Sum of cloud latencies over all layers (the Cloud-Only compute part).
+    pub fn cloud_all(&self, g: &Graph) -> f64 {
+        (0..g.len()).map(|i| self.cloud_layer(g, i)).sum()
+    }
+
+    /// End-to-end Cloud-Only latency: upload raw input + full cloud run.
+    pub fn cloud_only(&self, g: &Graph) -> f64 {
+        self.raw_input_transmission(g) + self.cloud_all(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{LayerKind, Shape};
+
+    fn small_net() -> Graph {
+        let mut g = Graph::new("net", Shape::new(3, 64, 64));
+        let mut prev = 0;
+        for (i, c) in [16usize, 32, 64].iter().enumerate() {
+            prev = g.add(
+                format!("c{i}"),
+                LayerKind::Conv { kernel: 3, stride: 2, pad: 1, groups: 1 },
+                &[prev],
+                *c,
+            );
+        }
+        g.add("fc", LayerKind::Linear, &[prev], 10);
+        g
+    }
+
+    #[test]
+    fn edge_slower_than_cloud_per_layer() {
+        let g = small_net();
+        let m = LatencyModel::paper_default();
+        for i in 1..g.len() {
+            assert!(m.edge_layer(&g, i, 8, 8) > m.cloud_layer(&g, i));
+        }
+    }
+
+    #[test]
+    fn quantization_reduces_edge_latency_for_memory_bound_layers() {
+        // FC layers are memory bound: weight traffic dominates.
+        let g = small_net();
+        let m = LatencyModel::paper_default();
+        let fc = g.len() - 1;
+        let l8 = m.edge_layer(&g, fc, 8, 8);
+        let l2 = m.edge_layer(&g, fc, 2, 8);
+        assert!(l2 < l8, "2-bit weights should cut FC latency: {l2} vs {l8}");
+    }
+
+    #[test]
+    fn sixteen_bit_no_faster_than_eight() {
+        // compute cycles are precision-independent; memory traffic is not,
+        // so 16-bit can only be equal (compute-bound) or slower
+        // (memory-bound, e.g. the FC layer)
+        let g = small_net();
+        let m = LatencyModel::paper_default();
+        for i in 1..g.len() {
+            assert!(m.edge_layer(&g, i, 16, 16) >= m.edge_layer(&g, i, 8, 8));
+        }
+        let fc = g.len() - 1;
+        assert!(m.edge_layer(&g, fc, 16, 16) > m.edge_layer(&g, fc, 8, 8));
+    }
+
+    #[test]
+    fn transmission_matches_uplink() {
+        let m = LatencyModel::paper_default();
+        let elems = 100_000;
+        let t8 = m.transmission(elems, 8);
+        let t4 = m.transmission(elems, 4);
+        assert!(t4 < t8);
+        assert!(t8 > 0.2); // 100 KB over 3 Mbps is hundreds of ms
+    }
+
+    #[test]
+    fn cloud_only_dominated_by_upload_at_3mbps() {
+        let g = small_net();
+        let m = LatencyModel::paper_default();
+        let up = m.raw_input_transmission(&g);
+        let total = m.cloud_only(&g);
+        assert!(up / total > 0.9, "upload {up} of {total}");
+    }
+
+    #[test]
+    fn input_and_zero_compute_layers_free() {
+        let g = small_net();
+        let m = LatencyModel::paper_default();
+        assert_eq!(m.edge_layer(&g, 0, 8, 8), 0.0);
+        assert_eq!(m.cloud_layer(&g, 0), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Off-chip traffic model: the part of layer latency that *does* scale with
+//! bit-width (§5.1: "lower bit precision speeds up data movement across
+//! offchip and onchip memory, which in turn results in an overall speedup",
+//! while MACs stay fixed INT8).
+
+use super::device::AcceleratorConfig;
+use crate::graph::layer::bits_to_bytes;
+use crate::graph::Layer;
+
+/// Bytes moved over the off-chip interface for one execution of `layer`
+/// at `w_bits` / `a_bits` precision.
+///
+/// Model: input activations are read once, weights are read once (re-read
+/// `refetch` times if the combined working tensors exceed the scratchpad),
+/// outputs are written once. This is SCALE-SIM's best-case ("all reuse
+/// captured on-chip") traffic plus a capacity-miss refetch factor.
+pub fn offchip_bytes(layer: &Layer, dev: &AcceleratorConfig, w_bits: u8, a_bits: u8) -> u64 {
+    let in_elems: usize = layer.in_shapes.iter().map(|s| s.volume()).sum();
+    let in_bytes = bits_to_bytes(in_elems, a_bits) as u64;
+    let out_bytes = bits_to_bytes(layer.out_shape.volume(), a_bits) as u64;
+    let w_bytes = bits_to_bytes(layer.weight_count, w_bits) as u64;
+
+    let working = in_bytes + out_bytes + w_bytes;
+    let refetch = working.div_ceil(dev.on_chip_bytes.max(1) as u64).max(1);
+    // capacity misses re-stream the stationary operand
+    in_bytes + out_bytes + w_bytes * refetch
+}
+
+/// Seconds spent on off-chip transfers for the layer.
+pub fn memory_seconds(layer: &Layer, dev: &AcceleratorConfig, w_bits: u8, a_bits: u8) -> f64 {
+    offchip_bytes(layer, dev, w_bits, a_bits) as f64 / dev.dram_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, LayerKind, Shape};
+
+    fn conv_layer(cin: usize, cout: usize, hw: usize) -> Layer {
+        let mut g = Graph::new("t", Shape::new(cin, hw, hw));
+        let id = g.add(
+            "c",
+            LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+            &[0],
+            cout,
+        );
+        g.layers[id].clone()
+    }
+
+    #[test]
+    fn lower_bits_less_traffic() {
+        let dev = AcceleratorConfig::eyeriss();
+        let l = conv_layer(64, 64, 28);
+        let b8 = offchip_bytes(&l, &dev, 8, 8);
+        let b4 = offchip_bytes(&l, &dev, 4, 4);
+        let b2 = offchip_bytes(&l, &dev, 2, 2);
+        assert!(b4 < b8 && b2 < b4);
+        // halving bits should roughly halve traffic
+        assert!((b4 as f64) / (b8 as f64) < 0.6);
+    }
+
+    #[test]
+    fn refetch_kicks_in_for_huge_layers() {
+        let dev = AcceleratorConfig::eyeriss(); // 192 KB scratchpad
+        let big = conv_layer(512, 512, 28); // weights ≈ 2.36M params
+        let small = conv_layer(16, 16, 28);
+        let big_w = big.weight_bytes(8) as u64;
+        let traffic = offchip_bytes(&big, &dev, 8, 8);
+        assert!(traffic > 2 * big_w, "expect weight refetch: {traffic}");
+        let small_traffic = offchip_bytes(&small, &dev, 8, 8);
+        let small_total = (small.weight_bytes(8)
+            + small.in_shapes[0].volume()
+            + small.out_shape.volume()) as u64;
+        assert_eq!(small_traffic, small_total);
+    }
+
+    #[test]
+    fn memory_seconds_scale_with_bandwidth() {
+        let l = conv_layer(64, 64, 28);
+        let e = memory_seconds(&l, &AcceleratorConfig::eyeriss(), 8, 8);
+        let t = memory_seconds(&l, &AcceleratorConfig::tpu(), 8, 8);
+        assert!(e > 10.0 * t);
+    }
+}

@@ -1,0 +1,17 @@
+//! Latency substrate: a SCALE-SIM-style analytic accelerator model
+//! (Eyeriss edge / TPU cloud, paper Table 1) plus uplink network models.
+//!
+//! The paper measures latency on the cycle-accurate SCALE-SIM [45]; we
+//! reimplement its analytic estimation mode (see DESIGN.md §3 for the
+//! substitution argument). The key property preserved is §5.1's: fixed
+//! INT8 MACs mean sub-8-bit precision accelerates *data movement only*.
+
+pub mod device;
+pub mod latency;
+pub mod memory;
+pub mod network;
+pub mod systolic;
+
+pub use device::{AcceleratorConfig, Dataflow};
+pub use latency::LatencyModel;
+pub use network::Uplink;

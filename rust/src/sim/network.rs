@@ -1,0 +1,84 @@
+//! Uplink models: `L^tr(bytes)` for the network types the paper considers
+//! (§1: BLE, 3G, 5G, WiFi; experiments default to 3 Mbps per Table 1).
+
+/// A point-to-point uplink between the edge device and the cloud.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uplink {
+    /// Application-level throughput, bits per second.
+    pub bps: f64,
+    /// One-way latency added to every transfer, seconds.
+    pub rtt_s: f64,
+    /// Protocol overhead multiplier on payload bytes (framing, headers).
+    pub overhead: f64,
+}
+
+impl Uplink {
+    pub fn new(bps: f64) -> Self {
+        Uplink { bps, rtt_s: 0.01, overhead: 1.05 }
+    }
+
+    /// The paper's default experimental uplink (Table 1: 3 Mbps).
+    pub fn paper_default() -> Self {
+        Uplink::new(3e6)
+    }
+
+    pub fn ble() -> Self {
+        Uplink { bps: 0.27e6, rtt_s: 0.05, overhead: 1.10 }
+    }
+
+    pub fn cellular_3g() -> Self {
+        Uplink { bps: 3e6, rtt_s: 0.065, overhead: 1.08 }
+    }
+
+    pub fn wifi() -> Self {
+        Uplink { bps: 54e6, rtt_s: 0.005, overhead: 1.05 }
+    }
+
+    pub fn nr_5g() -> Self {
+        Uplink { bps: 100e6, rtt_s: 0.002, overhead: 1.05 }
+    }
+
+    pub fn mbps(rate: f64) -> Self {
+        Uplink::new(rate * 1e6)
+    }
+
+    /// Seconds to move `bytes` application bytes to the cloud.
+    pub fn transfer_seconds(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.rtt_s + (bytes as f64 * self.overhead * 8.0) / self.bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_mbps_for_one_megabyte() {
+        let u = Uplink { bps: 3e6, rtt_s: 0.0, overhead: 1.0 };
+        let t = u.transfer_seconds(1 << 20);
+        // 8.39 Mbit / 3 Mbps ≈ 2.8 s
+        assert!((t - 2.796).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        assert_eq!(Uplink::paper_default().transfer_seconds(0), 0.0);
+    }
+
+    #[test]
+    fn faster_links_are_faster() {
+        let b = 100_000;
+        assert!(Uplink::ble().transfer_seconds(b) > Uplink::cellular_3g().transfer_seconds(b));
+        assert!(Uplink::cellular_3g().transfer_seconds(b) > Uplink::wifi().transfer_seconds(b));
+        assert!(Uplink::wifi().transfer_seconds(b) > Uplink::nr_5g().transfer_seconds(b));
+    }
+
+    #[test]
+    fn rtt_floors_small_transfers() {
+        let u = Uplink::cellular_3g();
+        assert!(u.transfer_seconds(1) >= u.rtt_s);
+    }
+}

@@ -1,0 +1,172 @@
+//! Analytic systolic-array cycle model, following SCALE-SIM's [45]
+//! "analytical" estimation mode.
+//!
+//! Every GEMM-like layer (conv via im2col, linear) is tiled over a
+//! `R × C` PE array:
+//!
+//! * **weight-stationary**: a `R × C` weight tile is pinned; `M` input rows
+//!   stream through. Per-tile cycles ≈ `R + C + M - 1` (array fill + drain
+//!   + stream), tiles = `⌈K/R⌉ · ⌈N/C⌉`.
+//! * **output-stationary**: output tile pinned, `K` partial sums
+//!   accumulate; per-tile cycles ≈ `K + R + C - 1`, tiles = `⌈M/R⌉ · ⌈N/C⌉`.
+//!
+//! Non-GEMM layers (pool, add, concat, upsample) are handled by the memory
+//! model only (they are data-movement bound on these accelerators).
+
+use super::device::{AcceleratorConfig, Dataflow};
+use crate::graph::{Layer, LayerKind};
+
+/// GEMM dimensions of a layer mapped onto the array (im2col convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Output spatial positions (rows streamed through the array).
+    pub m: usize,
+    /// Reduction size (`k·k·C_in/groups`).
+    pub k: usize,
+    /// Output channels per group.
+    pub n: usize,
+    /// Independent GEMMs (conv groups).
+    pub groups: usize,
+}
+
+/// Map a layer to GEMM dims; `None` for non-GEMM layers.
+pub fn gemm_dims(layer: &Layer) -> Option<GemmDims> {
+    match layer.kind {
+        LayerKind::Conv { kernel, groups, .. } => {
+            let cin = layer.in_shapes[0].c;
+            Some(GemmDims {
+                m: layer.out_shape.h * layer.out_shape.w,
+                k: (cin / groups) * kernel * kernel,
+                n: layer.out_shape.c / groups,
+                groups,
+            })
+        }
+        LayerKind::Linear => Some(GemmDims {
+            m: 1,
+            k: layer.in_shapes[0].volume(),
+            n: layer.out_shape.c,
+            groups: 1,
+        }),
+        _ => None,
+    }
+}
+
+/// Compute cycles for one layer on `dev` (compute only, no memory).
+pub fn compute_cycles(layer: &Layer, dev: &AcceleratorConfig) -> u64 {
+    let Some(g) = gemm_dims(layer) else {
+        // vector op: one lane per column per cycle, generous estimate
+        let elems = layer.out_shape.volume() as u64;
+        return elems.div_ceil(dev.cols as u64);
+    };
+    let (r, c) = (dev.rows as u64, dev.cols as u64);
+    let (m, k, n) = (g.m as u64, g.k as u64, g.n as u64);
+    let per_group = match dev.dataflow {
+        Dataflow::WeightStationary => {
+            let tiles = k.div_ceil(r) * n.div_ceil(c);
+            tiles * (r + c + m - 1)
+        }
+        Dataflow::OutputStationary => {
+            let tiles = m.div_ceil(r) * n.div_ceil(c);
+            tiles * (k + r + c - 1)
+        }
+    };
+    per_group * g.groups as u64
+}
+
+/// Seconds of pure compute for a layer.
+pub fn compute_seconds(layer: &Layer, dev: &AcceleratorConfig) -> f64 {
+    compute_cycles(layer, dev) as f64 / dev.freq_hz
+}
+
+/// Array (MAC) utilization of a layer: ideal MAC-cycles / modeled cycles.
+pub fn utilization(layer: &Layer, dev: &AcceleratorConfig) -> f64 {
+    let cycles = compute_cycles(layer, dev);
+    if cycles == 0 {
+        return 0.0;
+    }
+    let ideal = layer.macs as f64 / (dev.rows as f64 * dev.cols as f64);
+    (ideal / cycles as f64).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Shape};
+
+    fn conv_layer(cin: usize, cout: usize, hw: usize, k: usize, groups: usize) -> Layer {
+        let mut g = Graph::new("t", Shape::new(cin, hw, hw));
+        let id = g.add(
+            "c",
+            LayerKind::Conv { kernel: k, stride: 1, pad: k / 2, groups },
+            &[0],
+            cout,
+        );
+        g.layers[id].clone()
+    }
+
+    #[test]
+    fn gemm_dims_conv() {
+        let l = conv_layer(64, 128, 56, 3, 1);
+        let d = gemm_dims(&l).unwrap();
+        assert_eq!(d.m, 56 * 56);
+        assert_eq!(d.k, 64 * 9);
+        assert_eq!(d.n, 128);
+        assert_eq!(d.groups, 1);
+    }
+
+    #[test]
+    fn big_layer_slower_than_small() {
+        let dev = AcceleratorConfig::eyeriss();
+        let big = conv_layer(256, 256, 28, 3, 1);
+        let small = conv_layer(32, 32, 28, 3, 1);
+        assert!(compute_cycles(&big, &dev) > 10 * compute_cycles(&small, &dev));
+    }
+
+    #[test]
+    fn tpu_much_faster_than_eyeriss() {
+        let l = conv_layer(256, 256, 28, 3, 1);
+        let e = compute_seconds(&l, &AcceleratorConfig::eyeriss());
+        let t = compute_seconds(&l, &AcceleratorConfig::tpu());
+        assert!(e > 20.0 * t, "eyeriss {e} vs tpu {t}");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let dev = AcceleratorConfig::eyeriss();
+        for l in [
+            conv_layer(64, 128, 56, 3, 1),
+            conv_layer(3, 64, 224, 7, 1),
+            conv_layer(32, 32, 7, 1, 32),
+        ] {
+            let u = utilization(&l, &dev);
+            assert!((0.0..=1.0).contains(&u), "{u}");
+        }
+    }
+
+    #[test]
+    fn dense_conv_utilizes_eyeriss_well() {
+        // a large dense conv should keep a small array busy
+        let dev = AcceleratorConfig::eyeriss();
+        let l = conv_layer(256, 256, 56, 3, 1);
+        assert!(utilization(&l, &dev) > 0.5);
+    }
+
+    #[test]
+    fn depthwise_underutilizes_array() {
+        // groups shrink per-GEMM work: utilization collapses (known
+        // systolic-array weakness SCALE-SIM reproduces)
+        let dev = AcceleratorConfig::tpu();
+        let dw = conv_layer(256, 256, 28, 3, 256);
+        let dense = conv_layer(256, 256, 28, 3, 1);
+        assert!(utilization(&dw, &dev) < utilization(&dense, &dev));
+    }
+
+    #[test]
+    fn vector_op_cycles() {
+        let mut g = Graph::new("t", Shape::new(8, 16, 16));
+        let id = g.add("add", LayerKind::Add, &[0, 0], 0);
+        let l = g.layers[id].clone();
+        let dev = AcceleratorConfig::eyeriss();
+        assert_eq!(compute_cycles(&l, &dev), (8 * 16 * 16u64).div_ceil(14));
+    }
+}

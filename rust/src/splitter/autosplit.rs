@@ -1,0 +1,546 @@
+//! Algorithm 1: joint DNN splitting and bit assignment.
+//!
+//! For each potential split `n ∈ P` (eq. 6) the weight/activation budget
+//! grids `{M_k^wgt}`, `{M_k^act}` induced by uniform assignments are
+//! solved independently — problem (8) with the Shoham–Gersho Lagrangian
+//! allocator, problem (9) with the peak-constrained greedy allocator —
+//! and every feasible `(b^w, b^a, n)` combination is evaluated and kept.
+//! The caller selects the lowest-latency solution whose estimated accuracy
+//! drop is within the user threshold `A` (Remark 4).
+
+use super::accuracy;
+use super::candidates::{edge_only_fits, potential_splits};
+use super::solutions::{weighted_index, Placement, Solution, SolutionList};
+use crate::graph::layer::bits_to_bytes;
+use crate::graph::{Graph, NodeId};
+use crate::profile::ModelProfile;
+use crate::quant::{
+    allocate_peak_budget, allocate_sum_budget, DistortionTable, Metric, PeakItem, SumItem,
+};
+use crate::sim::LatencyModel;
+use crate::zoo::Task;
+
+/// Per-crossing-tensor protocol header: scale (f32) + zero-point (f32) +
+/// 4×i32 shape + u8 bits (Table 5), rounded up.
+pub const TX_HEADER_BYTES: usize = 32;
+
+/// Auto-Split configuration.
+#[derive(Debug, Clone)]
+pub struct AutoSplitConfig {
+    /// Candidate bit-widths supported by the edge device (Remark 1).
+    pub bit_set: Vec<u8>,
+    /// Edge memory budget `M`, bytes.
+    pub edge_mem_bytes: usize,
+    /// User accuracy-drop threshold `A`, percent.
+    pub max_drop_pct: f64,
+    /// Distortion metric (MSE default).
+    pub metric: Metric,
+}
+
+impl Default for AutoSplitConfig {
+    fn default() -> Self {
+        AutoSplitConfig {
+            bit_set: vec![2, 4, 6, 8],
+            // Eyeriss-class edge: weights live in off-chip DRAM; the paper
+            // constrains the *deployable* footprint. 32 MB is the HiLens
+            // camera-class budget used throughout our experiments.
+            edge_mem_bytes: 32 << 20,
+            max_drop_pct: 5.0,
+            metric: Metric::Mse,
+        }
+    }
+}
+
+/// Precomputed liveness structure for fast working-set evaluation inside
+/// the activation allocator: `live[s]` = nodes resident at step `s`.
+struct PeakModel {
+    live: Vec<Vec<NodeId>>,
+}
+
+impl PeakModel {
+    fn build(g: &Graph, order: &[NodeId], upto: usize) -> Self {
+        let mut pos = vec![usize::MAX; g.len()];
+        for (p, &id) in order.iter().enumerate() {
+            pos[id] = p;
+        }
+        let in_prefix = |id: NodeId| pos[id] <= upto;
+        let mut last_use = vec![0usize; g.len()];
+        for &u in &order[..=upto] {
+            let mut last = pos[u];
+            let mut crosses = g.succs[u].is_empty();
+            for &v in &g.succs[u] {
+                if in_prefix(v) {
+                    last = last.max(pos[v]);
+                } else {
+                    crosses = true;
+                }
+            }
+            last_use[u] = if crosses { upto } else { last };
+        }
+        let mut live = vec![Vec::new(); upto + 1];
+        for &u in &order[..=upto] {
+            for step in pos[u]..=last_use[u] {
+                live[step].push(u);
+            }
+        }
+        PeakModel { live }
+    }
+
+    /// Peak bytes given per-node activation bit widths.
+    fn peak(&self, g: &Graph, a_bits: &[u8]) -> usize {
+        self.live
+            .iter()
+            .map(|nodes| {
+                nodes
+                    .iter()
+                    .map(|&u| bits_to_bytes(g.layers[u].act_elems(), a_bits[u]))
+                    .sum()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Evaluate a concrete `(split, bits)` assignment into a [`Solution`].
+///
+/// `pos = None` → Cloud-Only; `pos = Some(last)` → Edge-Only.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_assignment(
+    method: &str,
+    g: &Graph,
+    order: &[NodeId],
+    pos: Option<usize>,
+    w_bits: &[u8],
+    a_bits: &[u8],
+    lm: &LatencyModel,
+    table: &DistortionTable,
+    task: Task,
+) -> Solution {
+    let n = g.len();
+    assert_eq!(w_bits.len(), n);
+    assert_eq!(a_bits.len(), n);
+
+    let (placement, edge_s, tr_s, cloud_s, tx_bytes, dist_w, dist_a, edge_w_bytes, edge_ws) =
+        match pos {
+            None => {
+                // Cloud-Only: upload the raw 8-bit input.
+                let tx = bits_to_bytes(g.input_elems(), 8) + TX_HEADER_BYTES;
+                (
+                    Placement::CloudOnly,
+                    0.0,
+                    lm.uplink.transfer_seconds(tx),
+                    lm.cloud_all(g),
+                    tx,
+                    0.0,
+                    0.0,
+                    0,
+                    0,
+                )
+            }
+            Some(p) => {
+                let mask = g.prefix_mask(order, p);
+                let cut = g.cut_tensors(&mask);
+                let edge_only = p + 1 == order.len();
+                let mut edge = 0.0;
+                let mut dist_w = 0.0;
+                let mut dist_a = 0.0;
+                let mut w_bytes = 0usize;
+                for &id in &order[..=p] {
+                    edge += lm.edge_layer(g, id, w_bits[id], a_bits[id]);
+                    dist_w += table.weight[id][table.bit_index(w_bits[id])];
+                    dist_a += table.act[id][table.bit_index(a_bits[id])];
+                    w_bytes += bits_to_bytes(g.layers[id].weight_count, w_bits[id]);
+                }
+                let tx: usize = if edge_only {
+                    0
+                } else {
+                    cut.iter()
+                        .map(|&u| {
+                            bits_to_bytes(g.layers[u].act_elems(), a_bits[u]) + TX_HEADER_BYTES
+                        })
+                        .sum()
+                };
+                let mut cloud = 0.0;
+                for &id in &order[p + 1..] {
+                    cloud += lm.cloud_layer(g, id);
+                }
+                // note: the batch explorer (explore_split) uses the
+                // precomputed-context fast path instead of this one
+                let pm = PeakModel::build(g, order, p);
+                let ws = pm.peak(g, a_bits);
+                (
+                    if edge_only { Placement::EdgeOnly } else { Placement::Split },
+                    edge,
+                    lm.uplink.transfer_seconds(tx),
+                    cloud,
+                    tx,
+                    dist_w,
+                    dist_a,
+                    w_bytes,
+                    ws,
+                )
+            }
+        };
+
+    Solution {
+        method: method.to_string(),
+        placement,
+        split_pos: pos,
+        split_layer: pos
+            .map(|p| g.layers[order[p]].name.clone())
+            .unwrap_or_else(|| "input".into()),
+        split_index: weighted_index(g, order, pos),
+        w_bits: w_bits.to_vec(),
+        a_bits: a_bits.to_vec(),
+        edge_s,
+        tr_s,
+        cloud_s,
+        distortion_w: dist_w,
+        distortion_a: dist_a,
+        acc_drop_pct: accuracy::drop_pct_split(dist_w, dist_a, task),
+        edge_model_bytes: edge_w_bytes,
+        edge_act_ws_bytes: edge_ws,
+        tx_bytes,
+    }
+}
+
+/// Run Algorithm 1 on an **optimized** graph and return the full feasible
+/// solution list `S` (Cloud-Only always included).
+pub fn auto_split_solutions(
+    g: &Graph,
+    profile: &ModelProfile,
+    lm: &LatencyModel,
+    task: Task,
+    cfg: &AutoSplitConfig,
+) -> SolutionList {
+    let order = g.topo_order();
+    let bits = &cfg.bit_set;
+    let table = DistortionTable::build(g, profile, bits, cfg.metric);
+    let b_min = bits[0];
+    let float_bits = vec![16u8; g.len()]; // for Cloud-Only bookkeeping
+
+    let mut list = SolutionList::default();
+    // Cloud-Only is always feasible (Remark 3).
+    list.push(evaluate_assignment(
+        "auto-split",
+        g,
+        &order,
+        None,
+        &float_bits,
+        &float_bits,
+        lm,
+        &table_with16(&table),
+        task,
+    ));
+
+    // Candidate splits (eq. 6) + Edge-Only if it fits at b_min.
+    let mut cand_positions: Vec<usize> = potential_splits(g, &order, b_min, cfg.edge_mem_bytes)
+        .into_iter()
+        .map(|c| c.pos)
+        .collect();
+    if edge_only_fits(g, &order, b_min, cfg.edge_mem_bytes) {
+        cand_positions.push(order.len() - 1);
+    }
+
+    for &pos in &cand_positions {
+        explore_split(g, &order, pos, &table, lm, task, cfg, &mut list);
+    }
+    list
+}
+
+/// Extend the distortion table with a 16-bit (zero-distortion) column so
+/// float assignments can be evaluated with the same machinery.
+pub fn table_with16(t: &DistortionTable) -> DistortionTable {
+    let mut t2 = t.clone();
+    if !t2.bits.contains(&16) {
+        t2.bits.push(16);
+        for row in &mut t2.weight {
+            row.push(0.0);
+        }
+        for row in &mut t2.act {
+            row.push(0.0);
+        }
+    }
+    t2
+}
+
+/// Grid-search the budget pairs of one split position and push every
+/// feasible evaluated assignment.
+#[allow(clippy::too_many_arguments)]
+fn explore_split(
+    g: &Graph,
+    order: &[NodeId],
+    pos: usize,
+    table: &DistortionTable,
+    lm: &LatencyModel,
+    task: Task,
+    cfg: &AutoSplitConfig,
+    list: &mut SolutionList,
+) {
+    let bits = &cfg.bit_set;
+    let prefix: Vec<NodeId> = order[..=pos].to_vec();
+
+    // Problem (8) items: weighted layers only.
+    let w_ids: Vec<NodeId> = prefix
+        .iter()
+        .copied()
+        .filter(|&id| g.layers[id].weight_count > 0)
+        .collect();
+    let w_items: Vec<SumItem> = w_ids
+        .iter()
+        .map(|&id| SumItem { elems: g.layers[id].weight_count, dist: table.weight[id].clone() })
+        .collect();
+
+    // Problem (9) items: all prefix activations.
+    let a_items: Vec<PeakItem> = prefix
+        .iter()
+        .map(|&id| PeakItem { elems: g.layers[id].act_elems(), dist: table.act[id].clone() })
+        .collect();
+    let pm = PeakModel::build(g, order, pos);
+
+    // Budget grids induced by uniform assignments (Algorithm 1).
+    let w_elems: usize = w_ids.iter().map(|&id| g.layers[id].weight_count).sum();
+    let mut w_allocs = Vec::new();
+    for &b in bits {
+        let budget_bits = w_elems as u128 * b as u128;
+        if let Some(a) = allocate_sum_budget(&w_items, bits, budget_bits) {
+            let bytes = (a.total_bits as usize).div_ceil(8);
+            w_allocs.push((bytes, a));
+        }
+    }
+    let mut a_allocs = Vec::new();
+    for &b in bits {
+        let uniform = vec![b; g.len()];
+        let budget = pm.peak(g, &uniform);
+        let peak_fn = |bw: &[u8]| {
+            // bw is indexed like a_items (= prefix order); expand to node ids
+            let mut full = vec![8u8; g.len()];
+            for (k, &id) in prefix.iter().enumerate() {
+                full[id] = bw[k];
+            }
+            pm.peak(g, &full)
+        };
+        if let Some(a) = allocate_peak_budget(&a_items, bits, budget, peak_fn) {
+            a_allocs.push((budget, a));
+        }
+    }
+
+    // Combine pairs; for each combination additionally sweep the bit-width
+    // of the *transmitted* (cut) tensors across the candidate set — the
+    // `b^a_n` term of objective (5a) that makes early splits viable
+    // (Fig. 3: "when quantized to 4-bits, the transmission cost becomes
+    // lowest ... the new optimal split point"; Fig. 7's T dimension).
+    let mask = g.prefix_mask(order, pos);
+    let cut_nodes = g.cut_tensors(&mask);
+    let edge_only = pos + 1 == order.len();
+    // §Perf: everything that does not depend on the bit assignment is
+    // hoisted out of the (w_alloc × a_alloc × T) loop — the cloud suffix
+    // sum, the liveness structure (PeakModel), per-layer edge-latency
+    // rows per candidate bit-width, and the split metadata.
+    let cloud_suffix: f64 = order[pos + 1..].iter().map(|&id| lm.cloud_layer(g, id)).sum();
+    let split_layer = g.layers[order[pos]].name.clone();
+    let split_index = super::solutions::weighted_index(g, order, Some(pos));
+    // edge_lat[k][id]: latency of layer id at (bits[k] weights, bits[k] acts)
+    // is NOT separable; but L^edge(w,a) only enters via max(comp, mem) —
+    // we precompute per (layer, w_bit, a_bit) pairs lazily in a flat cache.
+    let nb = bits.len();
+    let mut edge_lat = vec![f64::NAN; g.len() * nb * nb];
+    let mut lat_of = |id: usize, wk: usize, ak: usize| -> f64 {
+        let key = (id * nb + wk) * nb + ak;
+        if edge_lat[key].is_nan() {
+            edge_lat[key] = lm.edge_layer(g, id, bits[wk], bits[ak]);
+        }
+        edge_lat[key]
+    };
+    let bit_idx: Vec<usize> = bits.iter().map(|&b| table.bit_index(b)).collect();
+
+    let mut seen: std::collections::HashSet<(usize, usize, u8)> = Default::default();
+    for (wi, (w_bytes, wa)) in w_allocs.iter().enumerate() {
+        for (ai, (a_bytes, aa)) in a_allocs.iter().enumerate() {
+            if w_bytes + a_bytes > cfg.edge_mem_bytes {
+                continue;
+            }
+            // map node id -> choice index (within prefix)
+            let mut w_choice = vec![usize::MAX; g.len()];
+            for (k, &id) in w_ids.iter().enumerate() {
+                w_choice[id] = wa.choice[k];
+            }
+            let mut a_choice = vec![usize::MAX; g.len()];
+            for (k, &id) in prefix.iter().enumerate() {
+                a_choice[id] = aa.choice[k];
+            }
+            for (tk, &tb) in bits.iter().enumerate() {
+                if !seen.insert((wi, ai, tb)) {
+                    continue;
+                }
+                let mut w_bits_v = vec![8u8; g.len()];
+                let mut a_bits_v = vec![8u8; g.len()];
+                let mut edge = 0.0;
+                let mut dist_w = 0.0;
+                let mut dist_a = 0.0;
+                let mut w_bytes_real = 0usize;
+                let default_k = bits.iter().position(|&b| b == 8).unwrap_or(nb - 1);
+                for &id in &prefix {
+                    let wk = if w_choice[id] != usize::MAX { w_choice[id] } else { default_k };
+                    let mut ak = if a_choice[id] != usize::MAX { a_choice[id] } else { default_k };
+                    if !edge_only && cut_nodes.contains(&id) {
+                        ak = tk;
+                    }
+                    w_bits_v[id] = bits[wk];
+                    a_bits_v[id] = bits[ak];
+                    edge += lat_of(id, wk, ak);
+                    dist_w += table.weight[id][bit_idx[wk]];
+                    dist_a += table.act[id][bit_idx[ak]];
+                    w_bytes_real += bits_to_bytes(g.layers[id].weight_count, bits[wk]);
+                }
+                let tx: usize = if edge_only {
+                    0
+                } else {
+                    cut_nodes
+                        .iter()
+                        .map(|&u| bits_to_bytes(g.layers[u].act_elems(), tb) + TX_HEADER_BYTES)
+                        .sum()
+                };
+                let ws = pm.peak(g, &a_bits_v);
+                if w_bytes_real + ws > cfg.edge_mem_bytes {
+                    continue;
+                }
+                list.push(Solution {
+                    method: "auto-split".into(),
+                    placement: if edge_only { Placement::EdgeOnly } else { Placement::Split },
+                    split_pos: Some(pos),
+                    split_layer: split_layer.clone(),
+                    split_index,
+                    w_bits: w_bits_v,
+                    a_bits: a_bits_v,
+                    edge_s: edge,
+                    tr_s: lm.uplink.transfer_seconds(tx),
+                    cloud_s: cloud_suffix,
+                    distortion_w: dist_w,
+                    distortion_a: dist_a,
+                    acc_drop_pct: accuracy::drop_pct_split(dist_w, dist_a, task),
+                    edge_model_bytes: w_bytes_real,
+                    edge_act_ws_bytes: ws,
+                    tx_bytes: tx,
+                });
+            }
+        }
+    }
+}
+
+/// End-to-end entry: optimize → enumerate → select under the threshold.
+/// Returns (full list, selected solution index).
+pub fn auto_split(
+    g: &Graph,
+    profile: &ModelProfile,
+    lm: &LatencyModel,
+    task: Task,
+    cfg: &AutoSplitConfig,
+) -> (SolutionList, Solution) {
+    let list = auto_split_solutions(g, profile, lm, task, cfg);
+    let sel = list
+        .select(cfg.max_drop_pct)
+        .expect("cloud-only always present")
+        .clone();
+    (list, sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+    use crate::zoo;
+
+    fn run(gname: &str, mem_mb: usize, drop: f64) -> (SolutionList, Solution) {
+        let (g, task) = zoo::by_name(gname).unwrap();
+        let opt = optimize_for_inference(&g).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        let lm = LatencyModel::paper_default();
+        let cfg = AutoSplitConfig {
+            edge_mem_bytes: mem_mb << 20,
+            max_drop_pct: drop,
+            ..Default::default()
+        };
+        auto_split(&opt, &profile, &lm, task, &cfg)
+    }
+
+    #[test]
+    fn remark5_never_worse_than_cloud_only() {
+        for m in ["resnet18", "googlenet", "mobilenet_v2"] {
+            let (list, sel) = run(m, 32, 5.0);
+            let cloud = list
+                .solutions
+                .iter()
+                .find(|s| s.placement == Placement::CloudOnly)
+                .unwrap();
+            assert!(
+                sel.total_latency() <= cloud.total_latency() + 1e-9,
+                "{m}: selected {} vs cloud {}",
+                sel.total_latency(),
+                cloud.total_latency()
+            );
+        }
+    }
+
+    #[test]
+    fn solutions_respect_memory() {
+        let (list, _) = run("resnet18", 8, 5.0);
+        for s in &list.solutions {
+            if s.placement != Placement::CloudOnly {
+                assert!(s.edge_mem_bytes() <= 8 << 20);
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_threshold_never_faster() {
+        let (list, _) = run("resnet50", 32, 0.0);
+        let strict = list.select(0.5).unwrap().total_latency();
+        let loose = list.select(10.0).unwrap().total_latency();
+        assert!(loose <= strict + 1e-9);
+    }
+
+    #[test]
+    fn split_beats_cloud_only_at_3mbps() {
+        // At 3 Mbps uploading a 224×224 image costs ~0.4 s; a deep split
+        // point transmits far less. Auto-Split must find a faster option.
+        let (list, sel) = run("resnet50", 32, 5.0);
+        assert!(list.len() > 1, "should find split candidates");
+        let cloud = list
+            .solutions
+            .iter()
+            .find(|s| s.placement == Placement::CloudOnly)
+            .unwrap();
+        assert!(sel.total_latency() < cloud.total_latency());
+    }
+
+    #[test]
+    fn mobilenet_avoids_cloud_only() {
+        // paper Fig. 6: MobileNet-v2 / MnasNet run mostly on the edge
+        // (EDGE-ONLY in the paper; our simulator sometimes finds a deep
+        // SPLIT with 2-bit transmission that is even faster). The
+        // essential behaviour: the raw-upload CLOUD-ONLY path loses, and
+        // an EDGE-ONLY solution exists in the feasible list.
+        let (list, sel) = run("mobilenet_v2", 32, 5.0);
+        assert_ne!(sel.placement, Placement::CloudOnly, "{sel:?}");
+        assert!(list
+            .solutions
+            .iter()
+            .any(|s| s.placement == Placement::EdgeOnly && s.acc_drop_pct <= 5.0));
+    }
+
+    #[test]
+    fn evaluate_cloud_only_has_no_edge_cost() {
+        let (g, task) = zoo::by_name("resnet18").unwrap();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let profile = ModelProfile::synthesize(&opt);
+        let lm = LatencyModel::paper_default();
+        let t = DistortionTable::build(&opt, &profile, &[2, 4, 6, 8, 16], Metric::Mse);
+        let bits = vec![16u8; opt.len()];
+        let s = evaluate_assignment("x", &opt, &order, None, &bits, &bits, &lm, &t, task);
+        assert_eq!(s.edge_s, 0.0);
+        assert_eq!(s.edge_model_bytes, 0);
+        assert!(s.tr_s > 0.0 && s.cloud_s > 0.0);
+    }
+}

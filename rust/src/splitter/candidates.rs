@@ -1,0 +1,139 @@
+//! Potential-split identification (§4.1, eq. 6, Fig. 4).
+//!
+//! Pipeline: optimize the graph (Step 1, done by the caller), take the
+//! topological order, and for every prefix cut compute the *minimum*
+//! transmission volume (every crossing producer at `b_min`). Keep cuts
+//! whose best-case transmission does not exceed the raw-input upload and
+//! whose minimum-footprint edge sub-model fits the device memory.
+
+use crate::graph::layer::bits_to_bytes;
+use crate::graph::liveness::working_set_uniform;
+use crate::graph::{Graph, NodeId};
+
+/// One admissible split point.
+#[derive(Debug, Clone)]
+pub struct SplitCandidate {
+    /// Position in the topo order after which the graph is cut.
+    pub pos: usize,
+    /// Producers whose activations cross the cut.
+    pub cut_nodes: Vec<NodeId>,
+    /// Total crossing elements (`Σ s^a` over `cut_nodes`).
+    pub cut_elems: usize,
+    /// Minimum transmission bytes (at `b_min`).
+    pub min_tx_bytes: usize,
+    /// Minimum edge footprint: weights + activation working set at `b_min`.
+    pub min_mem_bytes: usize,
+}
+
+/// Enumerate eq. (6)'s candidate set `P` on an *optimized* graph.
+///
+/// * `order` — topo order of `g`
+/// * `b_min` — lowest bit-width supported by the edge device
+/// * `mem_bytes` — edge memory budget `M`
+pub fn potential_splits(
+    g: &Graph,
+    order: &[NodeId],
+    b_min: u8,
+    mem_bytes: usize,
+) -> Vec<SplitCandidate> {
+    let t0_bytes = bits_to_bytes(g.input_elems(), 8); // raw 8-bit image upload
+    let mut out = Vec::new();
+    let mut weight_elems_prefix: usize = 0;
+
+    for pos in 0..order.len() {
+        let id = order[pos];
+        weight_elems_prefix += g.layers[id].weight_count;
+        if pos + 1 == order.len() {
+            break; // full prefix = Edge-Only, handled separately
+        }
+        let mask = g.prefix_mask(order, pos);
+        let cut_nodes = g.cut_tensors(&mask);
+        let cut_elems: usize = cut_nodes.iter().map(|&u| g.layers[u].act_elems()).sum();
+        let min_tx_bytes = bits_to_bytes(cut_elems, b_min);
+        // eq. 6 condition 1: T_n ≤ T_0
+        if min_tx_bytes > t0_bytes {
+            continue;
+        }
+        // eq. 6 condition 2: minimum-footprint fit
+        let w_bytes = bits_to_bytes(weight_elems_prefix, b_min);
+        let ws = working_set_uniform(g, order, pos, b_min);
+        let min_mem_bytes = w_bytes + ws;
+        if min_mem_bytes > mem_bytes {
+            continue;
+        }
+        // Cutting right after the input is the Cloud-Only solution;
+        // skip (represented separately) unless it strictly beats raw
+        // upload, which cannot happen at the input itself.
+        if pos == 0 {
+            continue;
+        }
+        out.push(SplitCandidate { pos, cut_nodes, cut_elems, min_tx_bytes, min_mem_bytes });
+    }
+    out
+}
+
+/// Can the whole model fit on the edge at `b_min` (Edge-Only feasibility)?
+pub fn edge_only_fits(g: &Graph, order: &[NodeId], b_min: u8, mem_bytes: usize) -> bool {
+    let w = bits_to_bytes(g.total_weights(), b_min);
+    let ws = working_set_uniform(g, order, order.len() - 1, b_min);
+    w + ws <= mem_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+    use crate::zoo;
+
+    #[test]
+    fn candidates_respect_transmission_filter() {
+        let g = zoo::resnet50();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let cands = potential_splits(&opt, &order, 2, 4 << 30);
+        assert!(!cands.is_empty());
+        let t0 = opt.input_elems(); // bytes at 8-bit = elems
+        for c in &cands {
+            assert!(c.min_tx_bytes <= t0, "cut at {} too big", c.pos);
+        }
+        // early high-volume layers (56×56×256) must be filtered at b_min=8
+        let cands8 = potential_splits(&opt, &order, 8, 4 << 30);
+        for c in &cands8 {
+            assert!(c.cut_elems <= t0);
+        }
+        // lower b_min admits more candidates
+        assert!(cands.len() >= cands8.len());
+    }
+
+    #[test]
+    fn memory_filter_prunes() {
+        let g = zoo::resnet50();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let all = potential_splits(&opt, &order, 2, usize::MAX);
+        let tight = potential_splits(&opt, &order, 2, 2 << 20); // 2 MB
+        assert!(tight.len() < all.len());
+        for c in &tight {
+            assert!(c.min_mem_bytes <= 2 << 20);
+        }
+    }
+
+    #[test]
+    fn multi_tensor_cuts_counted() {
+        let g = zoo::yolov3();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let cands = potential_splits(&opt, &order, 2, 4 << 30);
+        // cuts inside the neck cross route tensors too
+        assert!(cands.iter().any(|c| c.cut_nodes.len() > 1));
+    }
+
+    #[test]
+    fn edge_only_feasibility() {
+        let g = zoo::mobilenet_v2();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        assert!(edge_only_fits(&opt, &order, 2, 4 << 30));
+        assert!(!edge_only_fits(&opt, &order, 8, 1 << 20));
+    }
+}

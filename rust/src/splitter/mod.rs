@@ -1,0 +1,13 @@
+//! The Auto-Split optimizer (the paper's contribution) and its baselines.
+
+pub mod accuracy;
+pub mod autosplit;
+pub mod baselines;
+pub mod candidates;
+pub mod compression;
+pub mod solutions;
+
+pub use autosplit::{auto_split, auto_split_solutions, evaluate_assignment, AutoSplitConfig};
+pub use baselines::BaselineCtx;
+pub use candidates::{edge_only_fits, potential_splits, SplitCandidate};
+pub use solutions::{Placement, Solution, SolutionList};

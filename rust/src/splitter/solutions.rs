@@ -1,0 +1,199 @@
+//! Solution representation: a (split, bit-assignment) pair with its full
+//! latency / memory / distortion / accuracy evaluation.
+
+use crate::graph::{Graph, LayerKind, NodeId};
+
+/// Where the model executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    CloudOnly,
+    EdgeOnly,
+    Split,
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Placement::CloudOnly => "CLOUD-ONLY",
+            Placement::EdgeOnly => "EDGE-ONLY",
+            Placement::Split => "SPLIT",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A fully evaluated candidate solution of problem (5).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Producing method ("auto-split", "qdmp", "neurosurgeon", "u8", …).
+    pub method: String,
+    pub placement: Placement,
+    /// Position in the optimized graph's topo order after which the cut
+    /// happens (`None` for Cloud-Only).
+    pub split_pos: Option<usize>,
+    /// Name of the last edge layer.
+    pub split_layer: String,
+    /// Paper-style split index: number of weighted (conv/linear) layers on
+    /// the edge side (ResNet-50 fc = 53, Table 10).
+    pub split_index: usize,
+    /// Per-node bit assignments (indexed by node id of the graph the
+    /// solution was computed on; 16 = float16 / not quantized).
+    pub w_bits: Vec<u8>,
+    pub a_bits: Vec<u8>,
+    /// Latency breakdown, seconds.
+    pub edge_s: f64,
+    pub tr_s: f64,
+    pub cloud_s: f64,
+    /// Quantization distortion on the edge partition (eq. 4 LHS), split
+    /// into weight and activation terms (the accuracy proxy weighs them
+    /// differently; `distortion()` gives the combined sum).
+    pub distortion_w: f64,
+    pub distortion_a: f64,
+    /// Estimated accuracy drop, percent of the float metric.
+    pub acc_drop_pct: f64,
+    /// Edge model size (weights), bytes.
+    pub edge_model_bytes: usize,
+    /// Peak edge activation working set, bytes.
+    pub edge_act_ws_bytes: usize,
+    /// Bytes crossing the uplink per inference.
+    pub tx_bytes: usize,
+}
+
+impl Solution {
+    pub fn total_latency(&self) -> f64 {
+        self.edge_s + self.tr_s + self.cloud_s
+    }
+
+    /// Combined distortion (eq. 4 LHS).
+    pub fn distortion(&self) -> f64 {
+        self.distortion_w + self.distortion_a
+    }
+
+    /// Edge memory footprint (weights + activation working set), eq. (3).
+    pub fn edge_mem_bytes(&self) -> usize {
+        self.edge_model_bytes + self.edge_act_ws_bytes
+    }
+}
+
+/// Number of weighted layers in the topo prefix `order[..=pos]` — the
+/// paper's split-index convention.
+pub fn weighted_index(g: &Graph, order: &[NodeId], pos: Option<usize>) -> usize {
+    match pos {
+        None => 0,
+        Some(p) => order[..=p]
+            .iter()
+            .filter(|&&id| matches!(g.layers[id].kind, LayerKind::Conv { .. } | LayerKind::Linear))
+            .count(),
+    }
+}
+
+/// A list of feasible solutions (Algorithm 1's `S`).
+#[derive(Debug, Clone, Default)]
+pub struct SolutionList {
+    pub solutions: Vec<Solution>,
+}
+
+impl SolutionList {
+    pub fn push(&mut self, s: Solution) {
+        self.solutions.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.solutions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.solutions.is_empty()
+    }
+
+    /// Lowest-latency solution whose accuracy drop is within
+    /// `max_drop_pct` (the user threshold `A`). Falls back to the most
+    /// accurate solution if nothing qualifies.
+    pub fn select(&self, max_drop_pct: f64) -> Option<&Solution> {
+        let ok = self
+            .solutions
+            .iter()
+            .filter(|s| s.acc_drop_pct <= max_drop_pct + 1e-9)
+            .min_by(|a, b| a.total_latency().partial_cmp(&b.total_latency()).unwrap());
+        ok.or_else(|| {
+            self.solutions
+                .iter()
+                .min_by(|a, b| a.acc_drop_pct.partial_cmp(&b.acc_drop_pct).unwrap())
+        })
+    }
+
+    /// Accuracy/latency Pareto frontier (for the Fig. 5 scatter): solutions
+    /// not dominated in (latency, drop).
+    pub fn pareto(&self) -> Vec<&Solution> {
+        let mut front: Vec<&Solution> = vec![];
+        for s in &self.solutions {
+            let dominated = self.solutions.iter().any(|o| {
+                (o.total_latency() < s.total_latency() - 1e-12
+                    && o.acc_drop_pct <= s.acc_drop_pct + 1e-12)
+                    || (o.acc_drop_pct < s.acc_drop_pct - 1e-12
+                        && o.total_latency() <= s.total_latency() + 1e-12)
+            });
+            if !dominated {
+                front.push(s);
+            }
+        }
+        front.sort_by(|a, b| a.acc_drop_pct.partial_cmp(&b.acc_drop_pct).unwrap());
+        front
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sol(method: &str, lat: f64, drop: f64) -> Solution {
+        Solution {
+            method: method.into(),
+            placement: Placement::Split,
+            split_pos: Some(1),
+            split_layer: "x".into(),
+            split_index: 1,
+            w_bits: vec![],
+            a_bits: vec![],
+            edge_s: lat,
+            tr_s: 0.0,
+            cloud_s: 0.0,
+            distortion_w: 0.0,
+            distortion_a: 0.0,
+            acc_drop_pct: drop,
+            edge_model_bytes: 0,
+            edge_act_ws_bytes: 0,
+            tx_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn select_respects_threshold() {
+        let mut l = SolutionList::default();
+        l.push(sol("fast-bad", 0.1, 20.0));
+        l.push(sol("slow-good", 1.0, 0.1));
+        l.push(sol("mid", 0.5, 4.0));
+        assert_eq!(l.select(5.0).unwrap().method, "mid");
+        assert_eq!(l.select(50.0).unwrap().method, "fast-bad");
+        assert_eq!(l.select(0.5).unwrap().method, "slow-good");
+    }
+
+    #[test]
+    fn select_falls_back_to_most_accurate() {
+        let mut l = SolutionList::default();
+        l.push(sol("a", 0.1, 20.0));
+        l.push(sol("b", 0.2, 10.0));
+        assert_eq!(l.select(1.0).unwrap().method, "b");
+    }
+
+    #[test]
+    fn pareto_filters_dominated() {
+        let mut l = SolutionList::default();
+        l.push(sol("p1", 0.1, 10.0));
+        l.push(sol("p2", 1.0, 1.0));
+        l.push(sol("dominated", 1.5, 12.0));
+        let f = l.pareto();
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|s| s.method != "dominated"));
+    }
+}

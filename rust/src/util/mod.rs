@@ -1,0 +1,5 @@
+//! Small in-tree utilities (the build is offline: no serde/clap/etc.).
+
+pub mod json;
+
+pub use json::Json;

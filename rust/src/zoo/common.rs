@@ -1,0 +1,93 @@
+//! Shared building blocks for the benchmark zoo.
+//!
+//! Graphs are constructed *un-optimized* (explicit BatchNorm and Activation
+//! nodes) so that the DADS-vs-QDMP distinction — min-cut on the raw vs the
+//! inference-optimized graph — is reproducible. Run
+//! [`crate::graph::optimize_for_inference`] before splitting, exactly as
+//! the paper's Fig. 4 Step 1 does.
+
+use crate::graph::{ActKind, Graph, LayerKind, NodeId};
+
+/// conv → BN → activation; returns the id of the activation node.
+pub fn conv_bn_act(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    cout: usize,
+    kernel: usize,
+    stride: usize,
+    act: Option<ActKind>,
+) -> NodeId {
+    conv_bn_act_grouped(g, name, from, cout, kernel, stride, 1, act)
+}
+
+/// Grouped variant (ResNeXt, depthwise convs).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bn_act_grouped(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    cout: usize,
+    kernel: usize,
+    stride: usize,
+    groups: usize,
+    act: Option<ActKind>,
+) -> NodeId {
+    let pad = kernel / 2;
+    let c = g.add(
+        format!("{name}.conv"),
+        LayerKind::Conv { kernel, stride, pad, groups },
+        &[from],
+        cout,
+    );
+    let b = g.add(format!("{name}.bn"), LayerKind::BatchNorm, &[c], 0);
+    match act {
+        Some(a) => g.add(format!("{name}.act"), LayerKind::Activation(a), &[b], 0),
+        None => b,
+    }
+}
+
+/// conv → activation without BN (YOLO tiny heads, plain style).
+pub fn conv_act(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    cout: usize,
+    kernel: usize,
+    stride: usize,
+    act: ActKind,
+) -> NodeId {
+    let pad = kernel / 2;
+    let c = g.add(
+        format!("{name}.conv"),
+        LayerKind::Conv { kernel, stride, pad, groups: 1 },
+        &[from],
+        cout,
+    );
+    g.add(format!("{name}.act"), LayerKind::Activation(act), &[c], 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn conv_bn_act_chains_three_nodes() {
+        let mut g = Graph::new("t", Shape::new(3, 32, 32));
+        let id = conv_bn_act(&mut g, "stem", 0, 16, 3, 2, Some(ActKind::Relu));
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.layers[id].out_shape, Shape::new(16, 16, 16));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn grouped_reduces_weights() {
+        let mut g = Graph::new("t", Shape::new(32, 16, 16));
+        let a = conv_bn_act_grouped(&mut g, "g1", 0, 32, 3, 1, 1, None);
+        let b = conv_bn_act_grouped(&mut g, "g32", a, 32, 3, 1, 32, None);
+        let w_dense = g.layers[g.preds[a][0]].weight_count;
+        let w_dw = g.layers[g.preds[b][0]].weight_count;
+        assert!(w_dense > 20 * w_dw);
+    }
+}

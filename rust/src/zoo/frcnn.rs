@@ -1,0 +1,154 @@
+//! Faster R-CNN with ResNet-50 + FPN backbone (800×800 canonical input).
+//!
+//! The paper's Appendix B uses this model to show why early-branching
+//! detectors do not admit SPLIT solutions: the FPN collects features from
+//! layer indices [10, 23, 42, 52] (Table 9), so any cut deeper than the
+//! first collection point must also transmit the earlier FPN inputs
+//! (Fig. 8-left), inflating transmission volume until CLOUD-ONLY wins.
+
+use super::common::conv_bn_act;
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+fn bottleneck(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    width: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    let c1 = conv_bn_act(g, &format!("{name}.conv1"), from, width, 1, 1, Some(ActKind::Relu));
+    let c2 = conv_bn_act(g, &format!("{name}.conv2"), c1, width, 3, stride, Some(ActKind::Relu));
+    let c3 = conv_bn_act(g, &format!("{name}.conv3"), c2, cout, 1, 1, None);
+    let skip = if stride != 1 || g.layers[from].out_shape.c != cout {
+        conv_bn_act(g, &format!("{name}.down"), from, cout, 1, stride, None)
+    } else {
+        from
+    };
+    let add = g.add(format!("{name}.add"), LayerKind::Add, &[c3, skip], 0);
+    g.add(format!("{name}.relu"), LayerKind::Activation(ActKind::Relu), &[add], 0)
+}
+
+/// `fasterrcnn_resnet50_fpn`-shaped graph. Returns the full detector graph;
+/// the FPN laterals create the early multi-branch structure of Table 9.
+pub fn fasterrcnn_resnet50_fpn() -> Graph {
+    let mut g = Graph::new("fasterrcnn_r50_fpn", Shape::new(3, 800, 800));
+    let s = conv_bn_act(&mut g, "stem", 0, 64, 7, 2, Some(ActKind::Relu));
+    let mut x = g.add(
+        "maxpool",
+        LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max },
+        &[s],
+        0,
+    );
+    let mut c_feats: Vec<NodeId> = Vec::new(); // C2..C5
+    for (si, (width, blocks)) in [(64, 3), (128, 4), (256, 6), (512, 3)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            x = bottleneck(&mut g, &format!("layer{}.{b}", si + 1), x, *width, width * 4, stride);
+        }
+        c_feats.push(x);
+    }
+
+    // FPN: 1×1 laterals on C2..C5, top-down upsample+add, 3×3 smoothing.
+    let mut laterals: Vec<NodeId> = c_feats
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            g.add(
+                format!("fpn.lateral{}", i + 2),
+                LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 },
+                &[c],
+                256,
+            )
+        })
+        .collect();
+    for i in (0..3).rev() {
+        let up = g.add(
+            format!("fpn.up{}", i + 2),
+            LayerKind::Upsample { factor: 2 },
+            &[laterals[i + 1]],
+            0,
+        );
+        laterals[i] = g.add(
+            format!("fpn.merge{}", i + 2),
+            LayerKind::Add,
+            &[laterals[i], up],
+            0,
+        );
+    }
+    for (i, &l) in laterals.iter().enumerate() {
+        let sm = g.add(
+            format!("fpn.smooth{}", i + 2),
+            LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+            &[l],
+            256,
+        );
+        // RPN head consumes every pyramid level
+        let rpn = g.add(
+            format!("rpn.p{}", i + 2),
+            LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+            &[sm],
+            256,
+        );
+        g.add(format!("rpn.head{}", i + 2), LayerKind::Head, &[rpn], 0);
+    }
+    g
+}
+
+/// Paper Table 9: first intermediate feature-collection indices for
+/// FasterRCNN vs the YOLO family (indices into the optimized graph's
+/// weighted-layer numbering).
+pub fn table9_collection_indices() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("Yolov3-tiny", vec![16, 23]),
+        ("Yolov3", vec![82, 94, 106]),
+        ("Yolov3-spp", vec![89, 101, 113]),
+        ("FasterRCNN", vec![10, 23, 42, 52]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = fasterrcnn_resnet50_fpn();
+        assert!(g.validate().is_ok());
+        // backbone 25.6M minus fc, plus FPN/RPN convs
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((26.0..32.0).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn four_pyramid_levels() {
+        let g = fasterrcnn_resnet50_fpn();
+        let heads = g.layers.iter().filter(|l| matches!(l.kind, LayerKind::Head)).count();
+        assert_eq!(heads, 4);
+    }
+
+    #[test]
+    fn early_branch_forces_multi_tensor_cuts() {
+        // Any prefix cut between C2 and C5 must carry ≥ 2 crossing tensors.
+        let g = fasterrcnn_resnet50_fpn();
+        let opt = optimize_for_inference(&g).graph;
+        let order = opt.topo_order();
+        let c2_pos = order
+            .iter()
+            .position(|&id| opt.layers[id].name.contains("layer2.0.add"))
+            .unwrap();
+        let c5_pos = order
+            .iter()
+            .position(|&id| opt.layers[id].name.contains("layer4.0.add"))
+            .unwrap();
+        let mid = (c2_pos + c5_pos) / 2;
+        let mask = opt.prefix_mask(&order, mid);
+        assert!(opt.cut_tensors(&mask).len() >= 2);
+    }
+
+    #[test]
+    fn high_res_input() {
+        assert_eq!(fasterrcnn_resnet50_fpn().input_elems(), 3 * 800 * 800);
+    }
+}

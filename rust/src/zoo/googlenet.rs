@@ -1,0 +1,105 @@
+//! GoogleNet (Inception v1) at 224×224, per torchvision `googlenet`
+//! (inference graph: no aux classifiers).
+
+use super::common::conv_bn_act;
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+/// One inception module: four parallel branches concatenated.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+) -> NodeId {
+    let b1 = conv_bn_act(g, &format!("{name}.b1"), from, c1, 1, 1, Some(ActKind::Relu));
+    let b2r = conv_bn_act(g, &format!("{name}.b2r"), from, c3r, 1, 1, Some(ActKind::Relu));
+    let b2 = conv_bn_act(g, &format!("{name}.b2"), b2r, c3, 3, 1, Some(ActKind::Relu));
+    let b3r = conv_bn_act(g, &format!("{name}.b3r"), from, c5r, 1, 1, Some(ActKind::Relu));
+    let b3 = conv_bn_act(g, &format!("{name}.b3"), b3r, c5, 3, 1, Some(ActKind::Relu));
+    let mp = g.add(
+        format!("{name}.pool"),
+        LayerKind::Pool { kernel: 3, stride: 1, kind: PoolKind::Max },
+        &[from],
+        0,
+    );
+    let b4 = conv_bn_act(g, &format!("{name}.b4"), mp, pp, 1, 1, Some(ActKind::Relu));
+    g.add(format!("{name}.cat"), LayerKind::Concat, &[b1, b2, b3, b4], 0)
+}
+
+pub fn googlenet() -> Graph {
+    let mut g = Graph::new("googlenet", Shape::new(3, 224, 224));
+    let c1 = conv_bn_act(&mut g, "conv1", 0, 64, 7, 2, Some(ActKind::Relu));
+    let p1 = g.add("pool1", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c1], 0);
+    let c2 = conv_bn_act(&mut g, "conv2", p1, 64, 1, 1, Some(ActKind::Relu));
+    let c3 = conv_bn_act(&mut g, "conv3", c2, 192, 3, 1, Some(ActKind::Relu));
+    let p2 = g.add("pool2", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c3], 0);
+
+    let i3a = inception(&mut g, "3a", p2, 64, 96, 128, 16, 32, 32);
+    let i3b = inception(&mut g, "3b", i3a, 128, 128, 192, 32, 96, 64);
+    let p3 = g.add("pool3", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i3b], 0);
+
+    let i4a = inception(&mut g, "4a", p3, 192, 96, 208, 16, 48, 64);
+    let i4b = inception(&mut g, "4b", i4a, 160, 112, 224, 24, 64, 64);
+    let i4c = inception(&mut g, "4c", i4b, 128, 128, 256, 24, 64, 64);
+    let i4d = inception(&mut g, "4d", i4c, 112, 144, 288, 32, 64, 64);
+    let i4e = inception(&mut g, "4e", i4d, 256, 160, 320, 32, 128, 128);
+    let p4 = g.add("pool4", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i4e], 0);
+
+    let i5a = inception(&mut g, "5a", p4, 256, 160, 320, 32, 128, 128);
+    let i5b = inception(&mut g, "5b", i5a, 384, 192, 384, 48, 128, 128);
+
+    let gp = g.add(
+        "avgpool",
+        LayerKind::Pool { kernel: 7, stride: 1, kind: PoolKind::GlobalAvg },
+        &[i5b],
+        0,
+    );
+    g.add("fc", LayerKind::Linear, &[gp], 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+
+    #[test]
+    fn params_match_torchvision() {
+        let g = googlenet();
+        assert!(g.validate().is_ok());
+        // torchvision googlenet: 6.62M params, ~1.5 GMACs
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((6.0..7.5).contains(&m), "params {m}M");
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((1.3..1.8).contains(&gm), "{gm} GMACs");
+    }
+
+    #[test]
+    fn stage_shapes() {
+        let g = googlenet();
+        let i3b = g.layers.iter().find(|l| l.name == "3b.cat").unwrap();
+        assert_eq!(i3b.out_shape, Shape::new(480, 28, 28));
+        let i5b = g.layers.iter().find(|l| l.name == "5b.cat").unwrap();
+        assert_eq!(i5b.out_shape, Shape::new(1024, 7, 7));
+    }
+
+    #[test]
+    fn optimizes_to_dag_with_concats() {
+        let g = googlenet();
+        let opt = optimize_for_inference(&g);
+        assert!(opt.folded_bn > 50);
+        let concats = opt
+            .graph
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Concat))
+            .count();
+        assert_eq!(concats, 9);
+    }
+}

@@ -1,0 +1,156 @@
+//! License-plate-recognition models (§5.5 case study).
+//!
+//! Two graphs:
+//! * [`lpr_custom_yolov3`] — the planner-side model: a custom YOLOv3-class
+//!   detector (float size ≈ 295 MB per Table 3) followed by an LSTM-class
+//!   character-recognition head, modeled as recurrent-equivalent Linear
+//!   layers (LSTM gates = 4 fused GEMMs/step; latency-equivalent dense
+//!   layers carry identical weight/MAC counts for the simulator).
+//! * [`lpr_edge_cnn`] — the *served* model: the small trained CNN that the
+//!   python build pipeline (python/compile/model.py) AOT-compiles; its
+//!   layer graph here mirrors the JAX definition so the planner and the
+//!   artifacts agree (checked by an integration test against
+//!   artifacts/metadata.json).
+
+use super::common::{conv_act, conv_bn_act};
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+const LEAKY: Option<ActKind> = Some(ActKind::LeakyRelu);
+
+/// Custom YOLOv3-based plate detector + recognition head (planner model).
+/// ~74M params ⇒ ~295 MB at FP32 (Table 3 "Float (on edge)").
+pub fn lpr_custom_yolov3(lstm_hidden: usize) -> Graph {
+    let mut g = Graph::new("lpr_yolov3", Shape::new(3, 416, 416));
+    // Darknet-53-like backbone, widened final stages (custom plate model)
+    let mut x = conv_bn_act(&mut g, "d0", 0, 32, 3, 1, LEAKY);
+    let mut route: NodeId = 0;
+    for (i, (c, n)) in [(64usize, 1), (128, 2), (256, 4), (512, 4), (1024, 2)].iter().enumerate() {
+        x = conv_bn_act(&mut g, &format!("down{i}"), x, *c, 3, 2, LEAKY);
+        for r in 0..*n {
+            let c1 = conv_bn_act(&mut g, &format!("res{i}.{r}.a"), x, c / 2, 1, 1, LEAKY);
+            let c2 = conv_bn_act(&mut g, &format!("res{i}.{r}.b"), c1, *c, 3, 1, LEAKY);
+            x = g.add(format!("res{i}.{r}.add"), LayerKind::Add, &[c2, x], 0);
+        }
+        if *c == 512 {
+            route = x;
+        }
+    }
+    // widened detection neck (this is what blows up the float size)
+    x = conv_bn_act(&mut g, "neck.0", x, 1024, 1, 1, LEAKY);
+    x = conv_bn_act(&mut g, "neck.1", x, 2048, 3, 1, LEAKY);
+    x = conv_bn_act(&mut g, "neck.2", x, 1024, 1, 1, LEAKY);
+    let det = g.add(
+        "det.conv",
+        LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 },
+        &[x],
+        18, // 3 anchors × (4 box + 1 obj + 1 class)
+    );
+    g.add("det.yolo", LayerKind::Head, &[det], 0);
+
+    // scale-2 plate branch
+    let up = conv_bn_act(&mut g, "up.conv", x, 256, 1, 1, LEAKY);
+    let upu = g.add("up.up", LayerKind::Upsample { factor: 2 }, &[up], 0);
+    let cat = g.add("route", LayerKind::Concat, &[upu, route], 0);
+    let f2 = conv_bn_act(&mut g, "neck2", cat, 512, 3, 1, LEAKY);
+    let det2 = g.add(
+        "det2.conv",
+        LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 },
+        &[f2],
+        18,
+    );
+    g.add("det2.yolo", LayerKind::Head, &[det2], 0);
+
+    // Character recognition head on the cropped plate (runs on cloud in the
+    // Auto-Split solution). LSTM over 16 time steps, 4 gates each:
+    // modeled as Linear layers with the same GEMM volume.
+    let reduce = conv_bn_act(&mut g, "crop.reduce", f2, 256, 1, 1, LEAKY);
+    let crop = g.add(
+        "crop.pool",
+        LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Avg },
+        &[reduce],
+        0,
+    );
+    let flat = g.add("crop.flatten", LayerKind::Flatten, &[crop], 0);
+    let proj = g.add("lstm.in_proj", LayerKind::Linear, &[flat], lstm_hidden);
+    let gates = g.add("lstm.gates", LayerKind::Linear, &[proj], 4 * lstm_hidden);
+    let cell = g.add("lstm.cell", LayerKind::Linear, &[gates], lstm_hidden);
+    let logits = g.add("ctc.fc", LayerKind::Linear, &[cell], 36 * 16); // 36-charset × 16 slots
+    g.add("ctc.head", LayerKind::Head, &[logits], 0);
+    g
+}
+
+/// The small served CNN (mirrors `python/compile/model.py::EDGE_CONVS +
+/// CLOUD_CONVS`). 32×32 grayscale plate-digit crops, 10 classes.
+/// Split boundary after `p3`: (64, 4, 4) = 1024 elems, 512 bytes at
+/// 4 bits — half the 1024-byte raw-image upload.
+pub fn lpr_edge_cnn() -> Graph {
+    let mut g = Graph::new("lpr_edge_cnn", Shape::new(1, 32, 32));
+    // convs carry no BN, matching the JAX definition
+    let c1 = conv_act(&mut g, "c1", 0, 16, 3, 1, ActKind::Relu);
+    let p1 = g.add("p1", LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max }, &[c1], 0);
+    let c2 = conv_act(&mut g, "c2", p1, 32, 3, 1, ActKind::Relu);
+    let p2 = g.add("p2", LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max }, &[c2], 0);
+    let c3 = conv_act(&mut g, "c3", p2, 64, 3, 1, ActKind::Relu);
+    let p3 = g.add("p3", LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max }, &[c3], 0);
+    // ---- canonical split boundary (64×4×4 = 1024 elems) ----
+    let c4 = conv_act(&mut g, "c4", p3, 64, 3, 1, ActKind::Relu);
+    let gp = g.add(
+        "gap",
+        LayerKind::Pool { kernel: 4, stride: 1, kind: PoolKind::GlobalAvg },
+        &[c4],
+        0,
+    );
+    let fc1 = g.add("fc1", LayerKind::Linear, &[gp], 128);
+    let a1 = g.add("fc1.act", LayerKind::Activation(ActKind::Relu), &[fc1], 0);
+    g.add("fc2", LayerKind::Linear, &[a1], 10);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn custom_yolo_is_295mb_class() {
+        let g = lpr_custom_yolov3(512);
+        assert!(g.validate().is_ok());
+        let mb = g.total_weights() as f64 * 4.0 / (1 << 20) as f64; // fp32
+        // Table 3: 295 MB float
+        assert!((250.0..340.0).contains(&mb), "float size {mb} MB");
+    }
+
+    #[test]
+    fn larger_lstm_grows_cloud_side_only() {
+        let small = lpr_custom_yolov3(512);
+        let large = lpr_custom_yolov3(1024);
+        assert!(large.total_weights() > small.total_weights());
+        // detector part identical
+        let det_w = |g: &Graph| -> usize {
+            g.layers
+                .iter()
+                .filter(|l| !l.name.starts_with("lstm") && !l.name.starts_with("ctc"))
+                .map(|l| l.weight_count)
+                .sum()
+        };
+        assert_eq!(det_w(&small), det_w(&large));
+    }
+
+    #[test]
+    fn edge_cnn_is_small() {
+        let g = lpr_edge_cnn();
+        assert!(g.validate().is_ok());
+        let kb = g.total_weights() as f64 / 1024.0;
+        assert!(kb < 200.0, "{kb} K params");
+        // split-boundary activation is 4×4×64 (512 bytes at 4 bits)
+        let p3 = g.layers.iter().find(|l| l.name == "p3").unwrap();
+        assert_eq!(p3.out_shape, Shape::new(64, 4, 4));
+    }
+
+    #[test]
+    fn edge_cnn_output_is_10_classes() {
+        let g = lpr_edge_cnn();
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g.layers[out[0]].out_shape, Shape::vec(10));
+    }
+}

@@ -1,0 +1,196 @@
+//! MobileNet-v2 and MnasNet-1.0 at 224×224 (torchvision configurations).
+//! Both are inverted-residual architectures; MnasNet adds squeeze-excite
+//! on its 5×5 stages (the Fig. 4 example in the paper is exactly such an
+//! "inverted residual layer with squeeze & excitation from MnasNet").
+
+use super::common::{conv_bn_act, conv_bn_act_grouped};
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+/// Inverted residual: 1×1 expand → k×k depthwise → (optional SE) → 1×1
+/// project (linear), with skip when stride 1 and cin == cout.
+#[allow(clippy::too_many_arguments)]
+fn inverted_residual(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    cout: usize,
+    expand: usize,
+    kernel: usize,
+    stride: usize,
+    se_ratio: Option<f64>,
+) -> NodeId {
+    let cin = g.layers[from].out_shape.c;
+    let hidden = cin * expand;
+    let mut x = from;
+    if expand != 1 {
+        x = conv_bn_act(g, &format!("{name}.expand"), x, hidden, 1, 1, Some(ActKind::Relu6));
+    }
+    x = conv_bn_act_grouped(
+        g,
+        &format!("{name}.dw"),
+        x,
+        hidden,
+        kernel,
+        stride,
+        hidden,
+        Some(ActKind::Relu6),
+    );
+    if let Some(r) = se_ratio {
+        // squeeze-excite: global pool → fc reduce → fc expand → sigmoid →
+        // mul. MnasNet-A1/EfficientNet convention: the squeeze width is a
+        // ratio of the block *input* channels, not the expanded width.
+        let squeezed = ((cin as f64 * r).round() as usize).max(8);
+        let gp = g.add(
+            format!("{name}.se.pool"),
+            LayerKind::Pool { kernel: 1, stride: 1, kind: PoolKind::GlobalAvg },
+            &[x],
+            0,
+        );
+        let r1 = g.add(format!("{name}.se.fc1"), LayerKind::Linear, &[gp], squeezed);
+        let a1 = g.add(
+            format!("{name}.se.relu"),
+            LayerKind::Activation(ActKind::Relu),
+            &[r1],
+            0,
+        );
+        let r2 = g.add(format!("{name}.se.fc2"), LayerKind::Linear, &[a1], hidden);
+        let a2 = g.add(
+            format!("{name}.se.sig"),
+            LayerKind::Activation(ActKind::Sigmoid),
+            &[r2],
+            0,
+        );
+        x = g.add(format!("{name}.se.mul"), LayerKind::Mul, &[x, a2], 0);
+    }
+    let proj = conv_bn_act(g, &format!("{name}.project"), x, cout, 1, 1, None);
+    if stride == 1 && cin == cout {
+        g.add(format!("{name}.add"), LayerKind::Add, &[proj, from], 0)
+    } else {
+        proj
+    }
+}
+
+/// torchvision `mobilenet_v2` (width 1.0).
+pub fn mobilenet_v2() -> Graph {
+    let mut g = Graph::new("mobilenet_v2", Shape::new(3, 224, 224));
+    let mut x = conv_bn_act(&mut g, "stem", 0, 32, 3, 2, Some(ActKind::Relu6));
+    // (expansion t, channels c, repeats n, stride s)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (bi, (t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            x = inverted_residual(&mut g, &format!("block{bi}.{r}"), x, *c, *t, 3, stride, None);
+        }
+    }
+    x = conv_bn_act(&mut g, "head_conv", x, 1280, 1, 1, Some(ActKind::Relu6));
+    let gp = g.add(
+        "avgpool",
+        LayerKind::Pool { kernel: 7, stride: 1, kind: PoolKind::GlobalAvg },
+        &[x],
+        0,
+    );
+    g.add("classifier", LayerKind::Linear, &[gp], 1000);
+    g
+}
+
+/// torchvision `mnasnet1_0` (MnasNet-B1 with SE on the 5×5 stages, as in
+/// the MnasNet-A1 search result the paper's Fig. 4 depicts).
+pub fn mnasnet1_0() -> Graph {
+    let mut g = Graph::new("mnasnet1_0", Shape::new(3, 224, 224));
+    let mut x = conv_bn_act(&mut g, "stem", 0, 32, 3, 2, Some(ActKind::Relu));
+    // sep conv stem block: depthwise 3x3 + pointwise to 16
+    x = conv_bn_act_grouped(&mut g, "sep.dw", x, 32, 3, 1, 32, Some(ActKind::Relu));
+    x = conv_bn_act(&mut g, "sep.pw", x, 16, 1, 1, None);
+    // (expansion, cout, repeats, stride, kernel, se) — torchvision
+    // mnasnet1_0 stage table, SE on the 5×5 stages as in MnasNet-A1
+    let cfg: [(usize, usize, usize, usize, usize, bool); 6] = [
+        (3, 24, 3, 2, 3, false),
+        (3, 40, 3, 2, 5, true),
+        (6, 80, 3, 2, 5, false),
+        (6, 96, 2, 1, 3, true),
+        (6, 192, 4, 2, 5, true),
+        (6, 320, 1, 1, 3, false),
+    ];
+    for (bi, (t, c, n, s, k, se)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            let se_ratio = if *se { Some(0.25) } else { None };
+            x = inverted_residual(
+                &mut g,
+                &format!("mb{bi}.{r}"),
+                x,
+                *c,
+                *t,
+                *k,
+                stride,
+                se_ratio,
+            );
+        }
+    }
+    x = conv_bn_act(&mut g, "head_conv", x, 1280, 1, 1, Some(ActKind::Relu));
+    let gp = g.add(
+        "avgpool",
+        LayerKind::Pool { kernel: 7, stride: 1, kind: PoolKind::GlobalAvg },
+        &[x],
+        0,
+    );
+    g.add("classifier", LayerKind::Linear, &[gp], 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+
+    #[test]
+    fn mobilenet_params_and_macs() {
+        let g = mobilenet_v2();
+        assert!(g.validate().is_ok());
+        // torchvision: 3.50M params, 0.32 GMACs
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((3.2..4.0).contains(&m), "params {m}M");
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((0.28..0.40).contains(&gm), "{gm} GMACs");
+    }
+
+    #[test]
+    fn mnasnet_params() {
+        let g = mnasnet1_0();
+        assert!(g.validate().is_ok());
+        // torchvision mnasnet1_0: 4.38M params (B1, no SE); A1 w/ SE ~3.9M
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((3.0..5.5).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn skip_connections_exist() {
+        let g = mobilenet_v2();
+        let adds = g.layers.iter().filter(|l| matches!(l.kind, LayerKind::Add)).count();
+        assert_eq!(adds, 10); // 1+1+3+2+2+1 per-stage repeats minus firsts
+    }
+
+    #[test]
+    fn se_blocks_present_in_mnasnet() {
+        let g = mnasnet1_0();
+        let muls = g.layers.iter().filter(|l| matches!(l.kind, LayerKind::Mul)).count();
+        assert_eq!(muls, 3 + 2 + 4); // SE stages: 40×3, 96×2, 192×4
+        let opt = optimize_for_inference(&g);
+        assert!(opt.graph.validate().is_ok());
+    }
+
+    #[test]
+    fn final_feature_shape() {
+        let g = mobilenet_v2();
+        let head = g.layers.iter().find(|l| l.name == "head_conv.conv").unwrap();
+        assert_eq!(head.out_shape, Shape::new(1280, 7, 7));
+    }
+}

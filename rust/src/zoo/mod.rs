@@ -1,0 +1,110 @@
+//! Benchmark model zoo: the paper's evaluation models as exact-shape
+//! inference graphs (see DESIGN.md §3 for the synthetic-weights
+//! substitution). All graphs are constructed un-optimized; run
+//! [`crate::graph::optimize_for_inference`] before splitting.
+
+pub mod common;
+pub mod frcnn;
+pub mod googlenet;
+pub mod lpr;
+pub mod mobilenet;
+pub mod resnet;
+pub mod vgg;
+pub mod yolo;
+
+pub use frcnn::fasterrcnn_resnet50_fpn;
+pub use googlenet::googlenet;
+pub use lpr::{lpr_custom_yolov3, lpr_edge_cnn};
+pub use mobilenet::{mnasnet1_0, mobilenet_v2};
+pub use resnet::{resnet18, resnet50, resnext50_32x4d};
+pub use vgg::{squeezenet1_0, vgg16};
+pub use yolo::{yolov3, yolov3_spp, yolov3_tiny};
+
+use crate::graph::Graph;
+
+/// Task family of a benchmark (drives the accuracy proxy + thresholds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Classification,
+    Detection,
+}
+
+/// The Fig. 6 benchmark suite: (constructor, task, paper reference top-1 /
+/// mAP of the float model).
+pub fn fig6_suite() -> Vec<(Graph, Task, f64)> {
+    vec![
+        (resnet18(), Task::Classification, 69.8),
+        (resnet50(), Task::Classification, 76.1),
+        (googlenet(), Task::Classification, 69.8),
+        (resnext50_32x4d(), Task::Classification, 77.6),
+        (mobilenet_v2(), Task::Classification, 71.9),
+        (mnasnet1_0(), Task::Classification, 73.5),
+        (yolov3_tiny(), Task::Detection, 16.6),
+        (yolov3(), Task::Detection, 39.0),
+        (yolov3_spp(), Task::Detection, 40.6),
+    ]
+}
+
+/// Look up a zoo model by CLI name.
+pub fn by_name(name: &str) -> Option<(Graph, Task)> {
+    let g = match name {
+        "resnet18" => (resnet18(), Task::Classification),
+        "resnet50" => (resnet50(), Task::Classification),
+        "googlenet" => (googlenet(), Task::Classification),
+        "resnext50_32x4d" | "resnext50" => (resnext50_32x4d(), Task::Classification),
+        "mobilenet_v2" => (mobilenet_v2(), Task::Classification),
+        "mnasnet1_0" => (mnasnet1_0(), Task::Classification),
+        "yolov3" => (yolov3(), Task::Detection),
+        "yolov3_tiny" => (yolov3_tiny(), Task::Detection),
+        "yolov3_spp" => (yolov3_spp(), Task::Detection),
+        "fasterrcnn" => (fasterrcnn_resnet50_fpn(), Task::Detection),
+        "lpr" => (lpr_custom_yolov3(512), Task::Detection),
+        "lpr_edge_cnn" => (lpr_edge_cnn(), Task::Classification),
+        "vgg16" => (vgg16(), Task::Classification),
+        "squeezenet1_0" | "squeezenet" => (squeezenet1_0(), Task::Classification),
+        _ => return None,
+    };
+    Some(g)
+}
+
+/// All CLI-addressable zoo names.
+pub const MODEL_NAMES: &[&str] = &[
+    "resnet18",
+    "resnet50",
+    "googlenet",
+    "resnext50_32x4d",
+    "mobilenet_v2",
+    "mnasnet1_0",
+    "yolov3",
+    "yolov3_tiny",
+    "yolov3_spp",
+    "fasterrcnn",
+    "lpr",
+    "lpr_edge_cnn",
+    "vgg16",
+    "squeezenet1_0",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for name in MODEL_NAMES {
+            let (g, _) = by_name(name).unwrap();
+            assert!(g.validate().is_ok(), "{name}: {:?}", g.validate());
+            assert!(g.len() > 5, "{name} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn suite_has_nine_models() {
+        assert_eq!(fig6_suite().len(), 9);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("alexnet").is_none());
+    }
+}

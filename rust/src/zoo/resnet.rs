@@ -1,0 +1,206 @@
+//! ResNet-18 / ResNet-50 / ResNeXt-50 (32×4d) at 224×224, matching the
+//! torchvision architectures the paper benchmarks (Fig. 6, Table 2/10).
+
+use super::common::{conv_bn_act, conv_bn_act_grouped};
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+/// Basic block (ResNet-18/34): two 3×3 convs + identity/projection skip.
+fn basic_block(g: &mut Graph, name: &str, from: NodeId, cout: usize, stride: usize) -> NodeId {
+    let c1 = conv_bn_act(g, &format!("{name}.conv1"), from, cout, 3, stride, Some(ActKind::Relu));
+    let c2 = conv_bn_act(g, &format!("{name}.conv2"), c1, cout, 3, 1, None);
+    let skip = if stride != 1 || g.layers[from].out_shape.c != cout {
+        conv_bn_act(g, &format!("{name}.down"), from, cout, 1, stride, None)
+    } else {
+        from
+    };
+    let add = g.add(format!("{name}.add"), LayerKind::Add, &[c2, skip], 0);
+    g.add(format!("{name}.relu"), LayerKind::Activation(ActKind::Relu), &[add], 0)
+}
+
+/// Bottleneck block (ResNet-50 / ResNeXt): 1×1 reduce, 3×3 (grouped), 1×1
+/// expand ×4, with projection skip on stage entry.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    g: &mut Graph,
+    name: &str,
+    from: NodeId,
+    width: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+) -> NodeId {
+    let c1 = conv_bn_act(g, &format!("{name}.conv1"), from, width, 1, 1, Some(ActKind::Relu));
+    let c2 = conv_bn_act_grouped(
+        g,
+        &format!("{name}.conv2"),
+        c1,
+        width,
+        3,
+        stride,
+        groups,
+        Some(ActKind::Relu),
+    );
+    let c3 = conv_bn_act(g, &format!("{name}.conv3"), c2, cout, 1, 1, None);
+    let skip = if stride != 1 || g.layers[from].out_shape.c != cout {
+        conv_bn_act(g, &format!("{name}.down"), from, cout, 1, stride, None)
+    } else {
+        from
+    };
+    let add = g.add(format!("{name}.add"), LayerKind::Add, &[c3, skip], 0);
+    g.add(format!("{name}.relu"), LayerKind::Activation(ActKind::Relu), &[add], 0)
+}
+
+fn stem(g: &mut Graph) -> NodeId {
+    let s = conv_bn_act(g, "stem", 0, 64, 7, 2, Some(ActKind::Relu));
+    g.add(
+        "maxpool",
+        LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max },
+        &[s],
+        0,
+    )
+}
+
+fn classifier(g: &mut Graph, from: NodeId, classes: usize) -> NodeId {
+    let p = g.add(
+        "avgpool",
+        LayerKind::Pool { kernel: 7, stride: 1, kind: PoolKind::GlobalAvg },
+        &[from],
+        0,
+    );
+    g.add("fc", LayerKind::Linear, &[p], classes)
+}
+
+/// torchvision `resnet18`: [2, 2, 2, 2] basic blocks.
+pub fn resnet18() -> Graph {
+    let mut g = Graph::new("resnet18", Shape::new(3, 224, 224));
+    let mut x = stem(&mut g);
+    for (si, (cout, blocks)) in [(64, 2), (128, 2), (256, 2), (512, 2)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            x = basic_block(&mut g, &format!("layer{}.{b}", si + 1), x, *cout, stride);
+        }
+    }
+    classifier(&mut g, x, 1000);
+    g
+}
+
+/// torchvision `resnet50`: [3, 4, 6, 3] bottlenecks.
+pub fn resnet50() -> Graph {
+    let mut g = Graph::new("resnet50", Shape::new(3, 224, 224));
+    let mut x = stem(&mut g);
+    for (si, (width, blocks)) in [(64, 3), (128, 4), (256, 6), (512, 3)].iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            x = bottleneck(
+                &mut g,
+                &format!("layer{}.{b}", si + 1),
+                x,
+                *width,
+                width * 4,
+                stride,
+                1,
+            );
+        }
+    }
+    classifier(&mut g, x, 1000);
+    g
+}
+
+/// torchvision `resnext50_32x4d`: bottlenecks with 32 groups, base width 4.
+pub fn resnext50_32x4d() -> Graph {
+    let mut g = Graph::new("resnext50_32x4d", Shape::new(3, 224, 224));
+    let mut x = stem(&mut g);
+    for (si, (width, blocks)) in [(128, 3), (256, 4), (512, 6), (1024, 3)].iter().enumerate() {
+        let cout = [256, 512, 1024, 2048][si];
+        for b in 0..*blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            x = bottleneck(
+                &mut g,
+                &format!("layer{}.{b}", si + 1),
+                x,
+                *width,
+                cout,
+                stride,
+                32,
+            );
+        }
+    }
+    classifier(&mut g, x, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+
+    #[test]
+    fn resnet18_params_match_torchvision() {
+        let g = resnet18();
+        assert!(g.validate().is_ok());
+        // torchvision: 11.69M params (incl. BN); ours adds BN running stats
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((11.0..12.6).contains(&m), "params {m}M");
+        // 1.81 GMACs
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((1.6..2.0).contains(&gm), "{gm} GMACs");
+    }
+
+    #[test]
+    fn resnet50_params_match_torchvision() {
+        let g = resnet50();
+        assert!(g.validate().is_ok());
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((25.0..26.8).contains(&m), "params {m}M"); // 25.56M
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((3.8..4.4).contains(&gm), "{gm} GMACs"); // 4.09 GMACs
+    }
+
+    #[test]
+    fn resnext50_params_match_torchvision() {
+        let g = resnext50_32x4d();
+        assert!(g.validate().is_ok());
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((24.5..26.5).contains(&m), "params {m}M"); // 25.03M
+    }
+
+    #[test]
+    fn resnet50_optimized_has_53_weight_layers() {
+        // Table 10 speaks of split index 53 = the fc layer; the optimized
+        // graph has 53 conv/linear layers (49 main + 4 downsample) + input
+        // + pools + adds.
+        let g = resnet50();
+        let opt = optimize_for_inference(&g).graph;
+        let weighted = opt
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. } | LayerKind::Linear))
+            .count();
+        assert_eq!(weighted, 54); // 53 convs + fc
+    }
+
+    #[test]
+    fn final_stage_shape_is_2048x7x7() {
+        // Table 10: layer4 conv3 outputs (2048, 7, 7), volume 100_352
+        let g = resnet50();
+        let l = g
+            .layers
+            .iter()
+            .find(|l| l.name == "layer4.2.conv3.conv")
+            .expect("layer4.2.conv3");
+        assert_eq!(l.out_shape, Shape::new(2048, 7, 7));
+        assert_eq!(l.out_shape.volume(), 100_352);
+        assert_eq!(g.input_elems(), 150_528); // Table 10 i/p image row
+    }
+
+    #[test]
+    fn all_relus_fuse_away() {
+        let g = resnet50();
+        let opt = optimize_for_inference(&g);
+        assert!(!opt
+            .graph
+            .layers
+            .iter()
+            .any(|l| matches!(l.kind, LayerKind::BatchNorm)));
+    }
+}

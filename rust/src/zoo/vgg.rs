@@ -1,0 +1,113 @@
+//! VGG-16 and SqueezeNet-1.0 — extension models beyond the paper's suite.
+//!
+//! VGG-16 is the classic *chain* architecture (Neurosurgeon's home turf:
+//! topological sorting loses nothing, a useful control); SqueezeNet is the
+//! extreme small-model case where EDGE-ONLY should dominate.
+
+use super::common::conv_act;
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+/// torchvision `vgg16` (no BN variant): 13 convs + 3 FC, 138M params.
+pub fn vgg16() -> Graph {
+    let mut g = Graph::new("vgg16", Shape::new(3, 224, 224));
+    let mut x: NodeId = 0;
+    let cfg: [&[usize]; 5] = [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    for (b, widths) in cfg.iter().enumerate() {
+        for (i, &c) in widths.iter().enumerate() {
+            x = conv_act(&mut g, &format!("conv{}_{}", b + 1, i + 1), x, c, 3, 1, ActKind::Relu);
+        }
+        x = g.add(
+            format!("pool{}", b + 1),
+            LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max },
+            &[x],
+            0,
+        );
+    }
+    let f = g.add("flatten", LayerKind::Flatten, &[x], 0);
+    let fc1 = g.add("fc1", LayerKind::Linear, &[f], 4096);
+    let r1 = g.add("fc1.act", LayerKind::Activation(ActKind::Relu), &[fc1], 0);
+    let fc2 = g.add("fc2", LayerKind::Linear, &[r1], 4096);
+    let r2 = g.add("fc2.act", LayerKind::Activation(ActKind::Relu), &[fc2], 0);
+    g.add("fc3", LayerKind::Linear, &[r2], 1000);
+    g
+}
+
+/// Fire module: squeeze 1×1 → parallel expand 1×1 / 3×3 → concat.
+fn fire(g: &mut Graph, name: &str, from: NodeId, squeeze: usize, expand: usize) -> NodeId {
+    let s = conv_act(g, &format!("{name}.squeeze"), from, squeeze, 1, 1, ActKind::Relu);
+    let e1 = conv_act(g, &format!("{name}.e1"), s, expand, 1, 1, ActKind::Relu);
+    let e3 = conv_act(g, &format!("{name}.e3"), s, expand, 3, 1, ActKind::Relu);
+    g.add(format!("{name}.cat"), LayerKind::Concat, &[e1, e3], 0)
+}
+
+/// torchvision `squeezenet1_0`: 1.25M params.
+pub fn squeezenet1_0() -> Graph {
+    let mut g = Graph::new("squeezenet1_0", Shape::new(3, 224, 224));
+    let mut x = conv_act(&mut g, "conv1", 0, 96, 7, 2, ActKind::Relu);
+    x = g.add("pool1", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[x], 0);
+    x = fire(&mut g, "fire2", x, 16, 64);
+    x = fire(&mut g, "fire3", x, 16, 64);
+    x = fire(&mut g, "fire4", x, 32, 128);
+    x = g.add("pool4", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[x], 0);
+    x = fire(&mut g, "fire5", x, 32, 128);
+    x = fire(&mut g, "fire6", x, 48, 192);
+    x = fire(&mut g, "fire7", x, 48, 192);
+    x = fire(&mut g, "fire8", x, 64, 256);
+    x = g.add("pool8", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[x], 0);
+    x = fire(&mut g, "fire9", x, 64, 256);
+    x = conv_act(&mut g, "conv10", x, 1000, 1, 1, ActKind::Relu);
+    g.add(
+        "gap",
+        LayerKind::Pool { kernel: 13, stride: 1, kind: PoolKind::GlobalAvg },
+        &[x],
+        0,
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+    use crate::profile::ModelProfile;
+    use crate::sim::LatencyModel;
+    use crate::splitter::{auto_split, AutoSplitConfig, Placement};
+    use crate::zoo::Task;
+
+    #[test]
+    fn vgg16_params_match() {
+        let g = vgg16();
+        assert!(g.validate().is_ok());
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((135.0..141.0).contains(&m), "params {m}M"); // 138.4M
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((14.0..16.5).contains(&gm), "{gm} GMACs"); // 15.5
+    }
+
+    #[test]
+    fn squeezenet_params_match() {
+        let g = squeezenet1_0();
+        assert!(g.validate().is_ok());
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((1.1..1.4).contains(&m), "params {m}M"); // 1.25M
+    }
+
+    #[test]
+    fn vgg_is_a_pure_chain() {
+        // no node fans out: Neurosurgeon's chain assumption is exact here
+        let g = vgg16();
+        let opt = optimize_for_inference(&g).graph;
+        assert!(opt.succs.iter().all(|s| s.len() <= 1));
+    }
+
+    #[test]
+    fn squeezenet_avoids_cloud_only() {
+        // 1.25M params quantize to ≤1.25 MB: edge participation dominates
+        let g = squeezenet1_0();
+        let opt = optimize_for_inference(&g).graph;
+        let p = ModelProfile::synthesize(&opt);
+        let lm = LatencyModel::paper_default();
+        let (_, sel) = auto_split(&opt, &p, &lm, Task::Classification, &AutoSplitConfig::default());
+        assert_ne!(sel.placement, Placement::CloudOnly);
+    }
+}

@@ -1,0 +1,219 @@
+//! YOLOv3, YOLOv3-SPP and YOLOv3-tiny at 416×416 (the paper's detection
+//! benchmarks; Fig. 5/6, Tables 2/8/9). Architectures follow the darknet
+//! configs: Darknet-53 backbone, three detection scales with route/upsample
+//! concatenations, 255-channel (80-class COCO) YOLO heads.
+
+use super::common::conv_bn_act;
+use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
+
+const LEAKY: Option<ActKind> = Some(ActKind::LeakyRelu);
+
+/// Darknet residual: 1×1 reduce + 3×3 expand + add.
+fn dark_residual(g: &mut Graph, name: &str, from: NodeId, channels: usize) -> NodeId {
+    let c1 = conv_bn_act(g, &format!("{name}.r1"), from, channels / 2, 1, 1, LEAKY);
+    let c2 = conv_bn_act(g, &format!("{name}.r2"), c1, channels, 3, 1, LEAKY);
+    g.add(format!("{name}.add"), LayerKind::Add, &[c2, from], 0)
+}
+
+/// Darknet-53 backbone; returns (route_36, route_61, top) feature nodes —
+/// the layer-36 / layer-61 routes of the darknet numbering (Table 9's
+/// intermediate collection points feeding scales 2 and 3).
+fn darknet53(g: &mut Graph) -> (NodeId, NodeId, NodeId) {
+    let mut x = conv_bn_act(g, "d0", 0, 32, 3, 1, LEAKY);
+    x = conv_bn_act(g, "down1", x, 64, 3, 2, LEAKY);
+    x = dark_residual(g, "res1.0", x, 64);
+    x = conv_bn_act(g, "down2", x, 128, 3, 2, LEAKY);
+    for i in 0..2 {
+        x = dark_residual(g, &format!("res2.{i}"), x, 128);
+    }
+    x = conv_bn_act(g, "down3", x, 256, 3, 2, LEAKY);
+    for i in 0..8 {
+        x = dark_residual(g, &format!("res3.{i}"), x, 256);
+    }
+    let route36 = x; // 256×52×52
+    x = conv_bn_act(g, "down4", x, 512, 3, 2, LEAKY);
+    for i in 0..8 {
+        x = dark_residual(g, &format!("res4.{i}"), x, 512);
+    }
+    let route61 = x; // 512×26×26
+    x = conv_bn_act(g, "down5", x, 1024, 3, 2, LEAKY);
+    for i in 0..4 {
+        x = dark_residual(g, &format!("res5.{i}"), x, 1024);
+    }
+    (route36, route61, x) // top: 1024×13×13
+}
+
+/// Detection neck block: 5 alternating 1×1/3×3 convs; returns (branch
+/// point fed to the next scale, feature fed to the local head).
+fn neck5(g: &mut Graph, name: &str, from: NodeId, mid: usize) -> (NodeId, NodeId) {
+    let mut x = conv_bn_act(g, &format!("{name}.0"), from, mid, 1, 1, LEAKY);
+    x = conv_bn_act(g, &format!("{name}.1"), x, mid * 2, 3, 1, LEAKY);
+    x = conv_bn_act(g, &format!("{name}.2"), x, mid, 1, 1, LEAKY);
+    x = conv_bn_act(g, &format!("{name}.3"), x, mid * 2, 3, 1, LEAKY);
+    x = conv_bn_act(g, &format!("{name}.4"), x, mid, 1, 1, LEAKY);
+    let feat = conv_bn_act(g, &format!("{name}.feat"), x, mid * 2, 3, 1, LEAKY);
+    (x, feat)
+}
+
+/// YOLO head: 1×1 conv to 255 channels + head marker node.
+fn yolo_head(g: &mut Graph, name: &str, from: NodeId) -> NodeId {
+    let c = g.add(
+        format!("{name}.conv"),
+        LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 },
+        &[from],
+        255,
+    );
+    g.add(format!("{name}.yolo"), LayerKind::Head, &[c], 0)
+}
+
+fn yolov3_impl(name: &str, spp: bool) -> Graph {
+    let mut g = Graph::new(name, Shape::new(3, 416, 416));
+    let (r36, r61, top) = darknet53(&mut g);
+
+    // scale 1 (13×13)
+    let neck_in = if spp {
+        // SPP: three parallel maxpools (5/9/13, stride 1) + identity, concat
+        let pre = conv_bn_act(&mut g, "spp.pre", top, 512, 1, 1, LEAKY);
+        let p5 = g.add("spp.p5", LayerKind::Pool { kernel: 5, stride: 1, kind: PoolKind::Max }, &[pre], 0);
+        let p9 = g.add("spp.p9", LayerKind::Pool { kernel: 9, stride: 1, kind: PoolKind::Max }, &[pre], 0);
+        let p13 = g.add("spp.p13", LayerKind::Pool { kernel: 13, stride: 1, kind: PoolKind::Max }, &[pre], 0);
+        g.add("spp.cat", LayerKind::Concat, &[pre, p5, p9, p13], 0)
+    } else {
+        top
+    };
+    let (branch1, feat1) = neck5(&mut g, "neck1", neck_in, 512);
+    yolo_head(&mut g, "head1", feat1);
+
+    // scale 2 (26×26)
+    let up1 = conv_bn_act(&mut g, "up1.conv", branch1, 256, 1, 1, LEAKY);
+    let up1u = g.add("up1.up", LayerKind::Upsample { factor: 2 }, &[up1], 0);
+    let cat2 = g.add("route2", LayerKind::Concat, &[up1u, r61], 0);
+    let (branch2, feat2) = neck5(&mut g, "neck2", cat2, 256);
+    yolo_head(&mut g, "head2", feat2);
+
+    // scale 3 (52×52)
+    let up2 = conv_bn_act(&mut g, "up2.conv", branch2, 128, 1, 1, LEAKY);
+    let up2u = g.add("up2.up", LayerKind::Upsample { factor: 2 }, &[up2], 0);
+    let cat3 = g.add("route3", LayerKind::Concat, &[up2u, r36], 0);
+    let (_, feat3) = neck5(&mut g, "neck3", cat3, 128);
+    yolo_head(&mut g, "head3", feat3);
+    g
+}
+
+/// YOLOv3 (Darknet-53, 416², COCO heads): 61.9M params.
+pub fn yolov3() -> Graph {
+    yolov3_impl("yolov3", false)
+}
+
+/// YOLOv3-SPP: YOLOv3 with a spatial-pyramid-pooling block before neck 1.
+pub fn yolov3_spp() -> Graph {
+    yolov3_impl("yolov3_spp", true)
+}
+
+/// YOLOv3-tiny: conv/maxpool backbone, two detection scales, 8.9M params.
+pub fn yolov3_tiny() -> Graph {
+    let mut g = Graph::new("yolov3_tiny", Shape::new(3, 416, 416));
+    let mut x = conv_bn_act(&mut g, "c0", 0, 16, 3, 1, LEAKY);
+    let mut route8 = 0;
+    for (i, c) in [32usize, 64, 128, 256, 512].iter().enumerate() {
+        let stride = if *c == 512 { 1 } else { 2 };
+        x = g.add(
+            format!("pool{i}"),
+            LayerKind::Pool { kernel: 2, stride: 2, kind: PoolKind::Max },
+            &[x],
+            0,
+        );
+        x = conv_bn_act(&mut g, &format!("c{}", i + 1), x, *c, 3, 1, LEAKY);
+        if *c == 256 {
+            route8 = x; // 256×26×26 feature for scale 2
+        }
+        let _ = stride;
+    }
+    // final stride-1 "pool" (darknet quirk) approximated by 1× maxpool
+    x = g.add(
+        "pool5",
+        LayerKind::Pool { kernel: 3, stride: 1, kind: PoolKind::Max },
+        &[x],
+        0,
+    );
+    x = conv_bn_act(&mut g, "c6", x, 1024, 3, 1, LEAKY);
+    let b = conv_bn_act(&mut g, "c7", x, 256, 1, 1, LEAKY);
+    let f1 = conv_bn_act(&mut g, "c8", b, 512, 3, 1, LEAKY);
+    yolo_head(&mut g, "head1", f1);
+
+    let up = conv_bn_act(&mut g, "up.conv", b, 128, 1, 1, LEAKY);
+    let upu = g.add("up.up", LayerKind::Upsample { factor: 2 }, &[up], 0);
+    let cat = g.add("route", LayerKind::Concat, &[upu, route8], 0);
+    let f2 = conv_bn_act(&mut g, "c9", cat, 256, 3, 1, LEAKY);
+    yolo_head(&mut g, "head2", f2);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+
+    #[test]
+    fn yolov3_params_match_darknet() {
+        let g = yolov3();
+        assert!(g.validate().is_ok());
+        // darknet yolov3: 61.95M params, ~65.9 GMACs @416
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((59.0..64.0).contains(&m), "params {m}M");
+        let gm = g.total_macs() as f64 / 1e9;
+        assert!((30.0..40.0).contains(&gm), "{gm} GMACs"); // 32.8 GMACs (65.6 GFLOPs)
+    }
+
+    #[test]
+    fn tiny_params() {
+        let g = yolov3_tiny();
+        assert!(g.validate().is_ok());
+        // yolov3-tiny: 8.86M params
+        let m = g.total_weights() as f64 / 1e6;
+        assert!((8.0..9.8).contains(&m), "params {m}M");
+    }
+
+    #[test]
+    fn spp_is_bigger_than_plain() {
+        let spp = yolov3_spp();
+        let plain = yolov3();
+        assert!(spp.total_weights() > plain.total_weights());
+        // SPP concat: 2048×13×13
+        let cat = spp.layers.iter().find(|l| l.name == "spp.cat").unwrap();
+        assert_eq!(cat.out_shape, Shape::new(2048, 13, 13));
+    }
+
+    #[test]
+    fn three_detection_scales() {
+        let g = yolov3();
+        let heads: Vec<_> = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Head))
+            .collect();
+        assert_eq!(heads.len(), 3);
+        assert_eq!(heads[0].out_shape, Shape::new(255, 13, 13));
+        assert_eq!(heads[1].out_shape, Shape::new(255, 26, 26));
+        assert_eq!(heads[2].out_shape, Shape::new(255, 52, 52));
+    }
+
+    #[test]
+    fn routes_preserved_after_optimization() {
+        let g = yolov3();
+        let opt = optimize_for_inference(&g);
+        assert!(opt.graph.validate().is_ok());
+        let concats = opt
+            .graph
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Concat))
+            .count();
+        assert_eq!(concats, 2);
+    }
+
+    #[test]
+    fn input_volume_416() {
+        assert_eq!(yolov3().input_elems(), 3 * 416 * 416);
+    }
+}

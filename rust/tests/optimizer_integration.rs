@@ -1,0 +1,238 @@
+//! Cross-module integration: the full Auto-Split planner against the
+//! benchmark zoo with the paper's experimental configuration, plus the
+//! planner ↔ artifacts consistency check.
+
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::sim::{LatencyModel, Uplink};
+use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx, Placement};
+use auto_split::util::Json;
+use auto_split::zoo;
+
+fn cfg() -> AutoSplitConfig {
+    AutoSplitConfig { max_drop_pct: 5.0, ..Default::default() }
+}
+
+fn plan(model: &str, c: &AutoSplitConfig) -> (auto_split::splitter::SolutionList, auto_split::splitter::Solution) {
+    let (g, task) = zoo::by_name(model).unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+    auto_split(&opt, &profile, &lm, task, c)
+}
+
+#[test]
+fn auto_split_beats_every_baseline_on_resnet50() {
+    let (g, task) = zoo::by_name("resnet50").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+    let (_, sel) = auto_split(&opt, &profile, &lm, task, &cfg());
+    let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
+    for (name, sol) in [
+        ("qdmp", ctx.qdmp()),
+        ("neurosurgeon", ctx.neurosurgeon()),
+        ("cloud16", ctx.cloud_only()),
+        ("dads", ctx.dads(&g)),
+    ] {
+        assert!(
+            sel.total_latency() <= sol.total_latency() + 1e-9,
+            "auto-split {} vs {name} {}",
+            sel.total_latency(),
+            sol.total_latency()
+        );
+    }
+}
+
+#[test]
+fn fig6_suite_runs_and_respects_thresholds() {
+    // classification 5%, detection 10% (paper Fig. 6 setting)
+    for (g, task, _) in zoo::fig6_suite() {
+        let opt = optimize_for_inference(&g).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        let lm = LatencyModel::paper_default();
+        let mut c = cfg();
+        c.max_drop_pct = match task {
+            zoo::Task::Classification => 5.0,
+            zoo::Task::Detection => 10.0,
+        };
+        let (list, sel) = auto_split(&opt, &profile, &lm, task, &c);
+        assert!(!list.is_empty());
+        assert!(
+            sel.acc_drop_pct <= c.max_drop_pct + 1e-6,
+            "{}: drop {}",
+            opt.name,
+            sel.acc_drop_pct
+        );
+        // Remark 5: never slower than Cloud-Only
+        let cloud = list
+            .solutions
+            .iter()
+            .find(|s| s.placement == Placement::CloudOnly)
+            .unwrap();
+        assert!(sel.total_latency() <= cloud.total_latency() + 1e-9, "{}", opt.name);
+    }
+}
+
+#[test]
+fn yolo_split_index_earlier_than_qdmp() {
+    // Table 2 shape: Auto-Split chooses much earlier (smaller) split
+    // indices than QDMP because quantization makes early cuts cheap.
+    let (g, task) = zoo::by_name("yolov3").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+    let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+        max_drop_pct: 10.0,
+        ..Default::default()
+    });
+    let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
+    let q = ctx.qdmp();
+    if sel.placement == Placement::Split && q.placement == Placement::Split {
+        assert!(
+            sel.split_index <= q.split_index,
+            "auto-split idx {} vs qdmp idx {}",
+            sel.split_index,
+            q.split_index
+        );
+    }
+    // edge model must be far smaller than QDMP_E's float partition (14.7×
+    // in the paper; require ≥3× here)
+    let qe = ctx.qdmp_e();
+    if sel.placement == Placement::Split && qe.placement == Placement::Split {
+        assert!(
+            sel.edge_model_bytes * 3 <= qe.edge_model_bytes.max(1),
+            "auto-split {}B vs qdmp_e {}B",
+            sel.edge_model_bytes,
+            qe.edge_model_bytes
+        );
+    }
+}
+
+#[test]
+fn bandwidth_sweep_has_crossover() {
+    // Table 8: at high uplink rates Cloud-Only wins; at low rates SPLIT
+    // or EDGE-ONLY wins.
+    let (g, task) = zoo::by_name("yolov3").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let mut placements = vec![];
+    for mbps in [1.0, 3.0, 10.0, 20.0, 1000.0] {
+        let lm = LatencyModel::new(
+            auto_split::sim::AcceleratorConfig::eyeriss(),
+            auto_split::sim::AcceleratorConfig::tpu(),
+            Uplink::mbps(mbps),
+        );
+        let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+            max_drop_pct: 10.0,
+            ..Default::default()
+        });
+        placements.push((mbps, sel.placement, sel.total_latency()));
+    }
+    // at 1 Gbps uploading is free: Cloud-Only must be selected
+    assert_eq!(placements.last().unwrap().1, Placement::CloudOnly, "{placements:?}");
+    // at 1 Mbps the selected solution must not be Cloud-Only
+    assert_ne!(placements[0].1, Placement::CloudOnly, "{placements:?}");
+}
+
+#[test]
+fn frcnn_admits_no_meaningful_edge_partition() {
+    // Appendix B: FasterRCNN's early FPN branches kill deep splits — the
+    // paper reports CLOUD-ONLY. Our optimizer may still shave the stem
+    // (split index ≤ 2, a compressed-upload variant of Cloud-Only), but
+    // no split beyond the first FPN collection point (index 10, Table 9)
+    // can be selected.
+    let (g, task) = zoo::by_name("fasterrcnn").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+    let (list, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+        max_drop_pct: 10.0,
+        ..Default::default()
+    });
+    assert!(
+        sel.placement == Placement::CloudOnly || sel.split_index <= 2,
+        "{sel:?}"
+    );
+    // and nothing past the FPN's first collection point is even close:
+    // every feasible deeper split must be slower than the selection
+    for s in &list.solutions {
+        if s.split_index > 10 && s.acc_drop_pct <= 10.0 {
+            assert!(
+                s.total_latency() >= sel.total_latency(),
+                "deep split idx{} at {} beats selection {}",
+                s.split_index,
+                s.total_latency(),
+                sel.total_latency()
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_agrees_with_artifact_metadata() {
+    // The rust planner's lpr_edge_cnn and the python artifacts must
+    // describe the same network.
+    let meta_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/metadata.json");
+    if !meta_path.exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(meta_path).unwrap()).unwrap();
+    let g = zoo::lpr_edge_cnn();
+    // boundary volume
+    let b = j.at(&["graph", "boundary"]).unwrap().as_arr().unwrap();
+    let vol: usize = b.iter().map(|v| v.as_usize().unwrap()).product();
+    let p3 = g.layers.iter().find(|l| l.name == "p3").unwrap();
+    assert_eq!(vol, p3.out_shape.volume());
+    // input size
+    let img = j.at(&["graph", "img"]).unwrap().as_usize().unwrap();
+    assert_eq!(img * img, g.input_elems());
+    // classes
+    let classes = j.at(&["graph", "classes"]).unwrap().as_usize().unwrap();
+    let out = g.outputs()[0];
+    assert_eq!(classes, g.layers[out].out_shape.volume());
+    // the transmitted bytes must be half the raw image (4-bit vs 8-bit ×
+    // half the elements)
+    let tx = j.at(&["graph", "tx_bytes"]).unwrap().as_usize().unwrap();
+    let input_bytes = j.at(&["graph", "input_bytes"]).unwrap().as_usize().unwrap();
+    assert_eq!(tx * 2, input_bytes);
+}
+
+#[test]
+fn lpr_planner_selects_split_for_the_case_study() {
+    // §5.5: the custom YOLO LPR model gets a SPLIT solution on a
+    // Hi3516E-class device over ~3 Mbps.
+    let (g, task) = zoo::by_name("lpr").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::new(
+        auto_split::sim::AcceleratorConfig::hi3516e(),
+        auto_split::sim::AcceleratorConfig::tpu(),
+        Uplink::paper_default(),
+    );
+    let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+        max_drop_pct: 10.0,
+        edge_mem_bytes: 64 << 20,
+        ..Default::default()
+    });
+    assert_eq!(sel.placement, Placement::Split, "{sel:?}");
+    // Table 3: edge partition ~15 MB ≪ the 295 MB float model
+    assert!(
+        sel.edge_model_bytes < 64 << 20,
+        "edge size {}",
+        sel.edge_model_bytes
+    );
+}
+
+#[test]
+fn tighter_memory_smaller_edge_models() {
+    let c_small = AutoSplitConfig { edge_mem_bytes: 4 << 20, ..cfg() };
+    let c_large = AutoSplitConfig { edge_mem_bytes: 256 << 20, ..cfg() };
+    let (_, s_small) = plan("resnet50", &c_small);
+    let (_, s_large) = plan("resnet50", &c_large);
+    assert!(s_small.edge_mem_bytes() <= 4 << 20);
+    // larger memory can only help latency
+    assert!(s_large.total_latency() <= s_small.total_latency() + 1e-9);
+}

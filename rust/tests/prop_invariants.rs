@@ -1,0 +1,215 @@
+//! Property-based tests over randomized inputs (the environment has no
+//! proptest crate; a seeded SplitMix64 generator drives many random cases
+//! per property — deterministic, so failures are reproducible).
+
+use auto_split::graph::liveness::{chain_estimate_bytes, working_set_bytes};
+use auto_split::graph::{min_cut_split, optimize_for_inference, Graph, LayerKind, Shape};
+use auto_split::profile::SplitMix64;
+use auto_split::quant::{allocate_sum_budget, pack, unpack, PackLayout, SumItem};
+
+/// Random DAG: a chain with random skip edges and random ops.
+fn random_graph(rng: &mut SplitMix64, max_nodes: usize) -> Graph {
+    let mut g = Graph::new("rand", Shape::new(3, 16, 16));
+    let n = 3 + (rng.next_u64() as usize % max_nodes);
+    let mut frontier = vec![0usize];
+    for i in 0..n {
+        let from = frontier[rng.next_u64() as usize % frontier.len()];
+        let c = g.layers[from].out_shape.c;
+        let choice = rng.next_u64() % 4;
+        let id = match choice {
+            0 => g.add(
+                format!("c{i}"),
+                LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+                &[from],
+                4 + (rng.next_u64() as usize % 8),
+            ),
+            1 => g.add(
+                format!("p{i}"),
+                LayerKind::Conv { kernel: 1, stride: 1, pad: 0, groups: 1 },
+                &[from],
+                4 + (rng.next_u64() as usize % 8),
+            ),
+            2 => {
+                // residual add with a same-shape sibling
+                let sib = g.add(
+                    format!("s{i}"),
+                    LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+                    &[from],
+                    c,
+                );
+                g.add(format!("a{i}"), LayerKind::Add, &[sib, from], 0)
+            }
+            _ => g.add(format!("bn{i}"), LayerKind::BatchNorm, &[from], 0),
+        };
+        frontier.push(id);
+    }
+    g
+}
+
+#[test]
+fn prop_topo_order_respects_edges() {
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..50 {
+        let g = random_graph(&mut rng, 20);
+        assert!(g.validate().is_ok());
+        let order = g.topo_order();
+        let mut pos = vec![0; g.len()];
+        for (p, &id) in order.iter().enumerate() {
+            pos[id] = p;
+        }
+        for v in 0..g.len() {
+            for &p in &g.preds[v] {
+                assert!(pos[p] < pos[v]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_optimize_preserves_gemm_work() {
+    let mut rng = SplitMix64::new(22);
+    for _ in 0..50 {
+        let g = random_graph(&mut rng, 20);
+        let opt = optimize_for_inference(&g);
+        assert!(opt.graph.validate().is_ok());
+        let gemm_macs = |g: &Graph| -> u64 {
+            g.layers.iter().filter(|l| l.kind.is_gemm()).map(|l| l.macs).sum()
+        };
+        assert_eq!(gemm_macs(&g), gemm_macs(&opt.graph), "{g}\n{}", opt.graph);
+        // mapping covers every original node
+        assert_eq!(opt.mapping.len(), g.len());
+        assert!(opt.graph.len() <= g.len());
+    }
+}
+
+#[test]
+fn prop_mincut_matches_bruteforce() {
+    let mut rng = SplitMix64::new(33);
+    for case in 0..30 {
+        let g = random_graph(&mut rng, 8); // ≤ 11 nodes → brute force ok
+        let n = g.len();
+        if n > 14 {
+            continue;
+        }
+        let le: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0).collect();
+        let lc: Vec<f64> = (0..n).map(|_| rng.next_f64() * 0.5).collect();
+        let lt: Vec<f64> = (0..n).map(|_| rng.next_f64() * 3.0).collect();
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+
+        // brute force over closed partitions
+        let mut best = f64::INFINITY;
+        'outer: for mask in 0..(1u32 << n) {
+            if mask & 1 == 0 {
+                continue;
+            }
+            let on_edge = |v: usize| mask >> v & 1 == 1;
+            for v in 0..n {
+                for &w in &g.succs[v] {
+                    if on_edge(w) && !on_edge(v) {
+                        continue 'outer;
+                    }
+                }
+            }
+            let mut cost = 0.0;
+            for v in 0..n {
+                if on_edge(v) {
+                    cost += le[v];
+                    if g.succs[v].iter().any(|&w| !on_edge(w)) {
+                        cost += lt[v];
+                    }
+                } else {
+                    cost += lc[v];
+                }
+            }
+            best = best.min(cost);
+        }
+        assert!(
+            (cut.objective - best).abs() < 1e-6,
+            "case {case}: mincut {} vs brute {best}",
+            cut.objective
+        );
+    }
+}
+
+#[test]
+fn prop_working_set_bounds() {
+    let mut rng = SplitMix64::new(44);
+    for _ in 0..40 {
+        let g = random_graph(&mut rng, 16);
+        let order = g.topo_order();
+        let bits = vec![8u8; g.len()];
+        for upto in [0, order.len() / 2, order.len() - 1] {
+            let ws = working_set_bytes(&g, &order, upto, &bits);
+            let chain = chain_estimate_bytes(&g, &order, upto, &bits);
+            // chain estimate is a lower bound; total allocation an upper
+            let total: usize =
+                order[..=upto].iter().map(|&u| g.layers[u].act_bytes(8)).sum();
+            assert!(ws >= chain, "ws {ws} < chain {chain}");
+            assert!(ws <= total, "ws {ws} > total {total}");
+        }
+    }
+}
+
+#[test]
+fn prop_lagrange_budget_and_quality() {
+    let mut rng = SplitMix64::new(55);
+    let bits = [2u8, 4, 6, 8];
+    for _ in 0..60 {
+        let n = 2 + (rng.next_u64() as usize % 5);
+        let items: Vec<SumItem> = (0..n)
+            .map(|_| {
+                let scale = 0.1 + rng.next_f64() * 10.0;
+                SumItem {
+                    elems: 10 + (rng.next_u64() as usize % 500),
+                    dist: bits.iter().map(|&b| scale * 4f64.powi(-(b as i32))).collect(),
+                }
+            })
+            .collect();
+        let min_rate: u128 = items.iter().map(|it| it.elems as u128 * 2).sum();
+        let max_rate: u128 = items.iter().map(|it| it.elems as u128 * 8).sum();
+        let budget = min_rate + (rng.next_u64() as u128 % (max_rate - min_rate + 1));
+        let a = allocate_sum_budget(&items, &bits, budget).expect("feasible");
+        assert!(a.total_bits <= budget);
+
+        // brute force optimum
+        let mut best = f64::INFINITY;
+        let combos = 4usize.pow(n as u32);
+        for c in 0..combos {
+            let mut cc = c;
+            let mut rate = 0u128;
+            let mut d = 0.0;
+            for it in &items {
+                let k = cc % 4;
+                cc /= 4;
+                rate += it.elems as u128 * bits[k] as u128;
+                d += it.dist[k];
+            }
+            if rate <= budget {
+                best = best.min(d);
+            }
+        }
+        assert!(
+            a.total_distortion <= best * 1.10 + 1e-9,
+            "allocator {} vs brute {best}",
+            a.total_distortion
+        );
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip_random() {
+    let mut rng = SplitMix64::new(66);
+    for _ in 0..60 {
+        let bits = [1u8, 2, 4, 8][rng.next_u64() as usize % 4];
+        let plane = 1 + (rng.next_u64() as usize % 40);
+        let channels = 1 + (rng.next_u64() as usize % 12);
+        let mask = ((1u32 << bits) - 1) as u8;
+        let codes: Vec<u8> =
+            (0..plane * channels).map(|_| (rng.next_u64() as u8) & mask).collect();
+        for layout in [PackLayout::Channel, PackLayout::HeightWidth] {
+            let p = pack(&codes, bits, plane, layout);
+            let u = unpack(&p, bits, codes.len(), plane, layout);
+            assert_eq!(u, codes, "bits={bits} plane={plane} ch={channels} {layout:?}");
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! End-to-end serving integration: load the AOT artifacts, run the full
+//! edge → link → batcher → cloud pipeline, and check real accuracy on the
+//! bundled eval set.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use auto_split::coordinator::{
+    DelayMode, ServeConfig, ServeMode, Server, WireFormat,
+};
+use auto_split::sim::Uplink;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("metadata.json").exists() && p.join("eval_set.bin").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Load the python-side eval set: [n u32][imgs f32][labels u8].
+fn load_eval_set(dir: &Path) -> (Vec<Vec<f32>>, Vec<u8>) {
+    let buf = std::fs::read(dir.join("eval_set.bin")).unwrap();
+    let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let img = 32 * 32;
+    let mut images = Vec::with_capacity(n);
+    let mut off = 4;
+    for _ in 0..n {
+        let mut v = Vec::with_capacity(img);
+        for _ in 0..img {
+            v.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        images.push(v);
+    }
+    let labels = buf[off..off + n].to_vec();
+    (images, labels)
+}
+
+#[test]
+fn split_pipeline_serves_accurately() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(ServeConfig::new(&dir)).expect("start server");
+    let (images, labels) = load_eval_set(&dir);
+
+    let mut correct = 0;
+    let n = 64;
+    for (img, &label) in images.iter().zip(&labels).take(n) {
+        let res = server.infer(img.clone()).expect("infer");
+        assert_eq!(res.logits.len(), 10);
+        assert!(res.edge.as_secs_f64() > 0.0, "edge compute must be measured");
+        assert!(res.net.as_secs_f64() > 0.0, "network must be modeled");
+        assert!(res.tx_bytes > 0);
+        if res.class == label as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // training reports ≈0.99+ quantized accuracy; the serving path must
+    // reproduce it (same artifacts, same math)
+    assert!(acc > 0.9, "serving accuracy {acc}");
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n as u64);
+}
+
+#[test]
+fn split_transmits_less_than_cloud_only() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let img = images[0].clone();
+
+    let split = Server::start(ServeConfig::new(&dir)).unwrap();
+    let r_split = split.infer(img.clone()).unwrap();
+    drop(split);
+
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.mode = ServeMode::CloudOnly;
+    let cloud = Server::start(cfg).unwrap();
+    let r_cloud = cloud.infer(img).unwrap();
+    drop(cloud);
+
+    // the split boundary is 512 packed bytes vs the 1024-byte raw image
+    assert!(
+        r_split.tx_bytes * 3 < r_cloud.tx_bytes * 2,
+        "split {} vs cloud {}",
+        r_split.tx_bytes,
+        r_cloud.tx_bytes
+    );
+    // over the 3 Mbps default uplink that halves the network time
+    assert!(r_split.net < r_cloud.net);
+}
+
+#[test]
+fn split_and_cloud_only_agree_on_labels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+
+    let split = Server::start(ServeConfig::new(&dir)).unwrap();
+    let split_classes: Vec<usize> =
+        images.iter().take(16).map(|i| split.infer(i.clone()).unwrap().class).collect();
+    drop(split);
+
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.mode = ServeMode::CloudOnly;
+    let cloud = Server::start(cfg).unwrap();
+    let cloud_classes: Vec<usize> =
+        images.iter().take(16).map(|i| cloud.infer(i.clone()).unwrap().class).collect();
+    drop(cloud);
+
+    let agree = split_classes
+        .iter()
+        .zip(&cloud_classes)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(agree >= 14, "split/cloud agreement {agree}/16");
+}
+
+#[test]
+fn dynamic_batching_fills_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.max_batch = 8;
+    cfg.max_delay = std::time::Duration::from_millis(20);
+    let server = Server::start(cfg).unwrap();
+
+    // fire 32 async requests, then collect
+    let rxs: Vec<_> = images
+        .iter()
+        .take(32)
+        .map(|i| server.submit(i.clone()).unwrap())
+        .collect();
+    let mut max_batch_seen = 0;
+    for rx in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        max_batch_seen = max_batch_seen.max(res.batch_size);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 32);
+    assert!(
+        max_batch_seen >= 2,
+        "batcher never batched (max batch {max_batch_seen})"
+    );
+    assert!(stats.batches < 32, "every request ran in its own batch");
+}
+
+#[test]
+fn ascii_rpc_mode_is_slower_on_the_wire() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let img = images[0].clone();
+
+    let bin = Server::start(ServeConfig::new(&dir)).unwrap();
+    let r_bin = bin.infer(img.clone()).unwrap();
+    drop(bin);
+
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.wire = WireFormat::AsciiRpc;
+    let asc = Server::start(cfg).unwrap();
+    let r_asc = asc.infer(img).unwrap();
+    drop(asc);
+
+    // packed activations are sparse (many "0," tokens ≈ 2 chars/byte), so
+    // ASCII inflation is ≥1.5× here; on dense payloads it reaches ~4×
+    assert!(
+        r_asc.tx_bytes as f64 > 1.5 * r_bin.tx_bytes as f64,
+        "ascii {} vs binary {}",
+        r_asc.tx_bytes,
+        r_bin.tx_bytes
+    );
+    assert!(r_asc.net > r_bin.net);
+}
+
+#[test]
+fn malformed_request_fails_without_poisoning_pipeline() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let server = Server::start(ServeConfig::new(&dir)).unwrap();
+    // wrong image size → per-request error
+    let err = server.infer(vec![0.0; 17]);
+    assert!(err.is_err(), "undersized image must be rejected");
+    // the pipeline keeps serving afterwards
+    let ok = server.infer(images[0].clone()).unwrap();
+    assert_eq!(ok.logits.len(), 10);
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 1, "failed request must not count");
+}
+
+#[test]
+fn open_loop_load_replay() {
+    use auto_split::coordinator::{poisson_schedule, replay};
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let server = Server::start(ServeConfig::new(&dir)).unwrap();
+    let _ = server.infer(images[0].clone()); // warm up the executables
+    let schedule = poisson_schedule(100.0, 40, images.len().min(16), 3);
+    let report = replay(&server, &images[..16], &schedule).unwrap();
+    assert_eq!(report.requests, 40);
+    assert_eq!(report.errors, 0);
+    assert!(report.quantile(0.5) > 0.0);
+    assert!(report.quantile(0.99) >= report.quantile(0.5));
+    assert!(report.achieved_rps > 0.0);
+}
+
+#[test]
+fn concurrent_clients_all_answered() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let server = std::sync::Arc::new(Server::start(ServeConfig::new(&dir)).unwrap());
+    let n_clients = 8;
+    let per_client = 8;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let server = server.clone();
+            let images = &images;
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let img = images[(c * per_client + i) % images.len()].clone();
+                    let r = server.infer(img).expect("infer under concurrency");
+                    assert_eq!(r.logits.len(), 10);
+                }
+            });
+        }
+    });
+    let stats = server.stats();
+    assert_eq!(stats.requests, (n_clients * per_client) as u64);
+}
+
+#[test]
+fn real_sleep_mode_walltime_includes_network() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (images, _) = load_eval_set(&dir);
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.delay = DelayMode::RealSleep;
+    cfg.uplink = Uplink::mbps(50.0); // keep the sleep short
+    let server = Server::start(cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let res = server.infer(images[0].clone()).unwrap();
+    let wall = t0.elapsed();
+    assert!(wall >= res.net, "wall {wall:?} must include slept net {:?}", res.net);
+}
