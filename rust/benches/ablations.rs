@@ -15,7 +15,7 @@ use auto_split::graph::liveness::{chain_estimate_bytes, working_set_bytes};
 use auto_split::profile::ModelProfile;
 use auto_split::quant::{per_tensor_distortion, Metric, PerChannelQuant};
 use auto_split::report::Table;
-use auto_split::splitter::{auto_split, AutoSplitConfig};
+use auto_split::splitter::{AutoSplitConfig, Planner};
 use common::ModelBench;
 
 fn memory_model_ablation() {
@@ -56,7 +56,7 @@ fn metric_ablation() {
                 metric,
                 ..Default::default()
             };
-            let (_, sel) = auto_split(&mb.opt, &mb.profile, &lm, mb.task, &cfg);
+            let (_, sel) = Planner::new(cfg).plan(&mb.opt, &mb.profile, &lm, mb.task);
             t.row(&[
                 name.into(),
                 format!("{metric:?}"),

@@ -3,7 +3,7 @@
 use auto_split::graph::{optimize_for_inference, Graph};
 use auto_split::profile::ModelProfile;
 use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
-use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx, Solution, SolutionList};
+use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Planner, Solution, SolutionList};
 use auto_split::zoo::{self, Task};
 
 pub struct ModelBench {
@@ -36,9 +36,21 @@ impl ModelBench {
         }
     }
 
-    pub fn plan(&self, lm: &LatencyModel, threshold: f64) -> (SolutionList, Solution) {
+    /// Planner for this model at `threshold`; 0 threads = one per core.
+    pub fn planner(&self, threshold: f64, threads: usize) -> Planner {
         let cfg = AutoSplitConfig { max_drop_pct: threshold, ..Default::default() };
-        auto_split(&self.opt, &self.profile, lm, self.task, &cfg)
+        Planner::new(cfg).with_threads(threads)
+    }
+
+    /// Plan with the default (parallel) worker pool.
+    pub fn plan(&self, lm: &LatencyModel, threshold: f64) -> (SolutionList, Solution) {
+        self.planner(threshold, 0).plan(&self.opt, &self.profile, lm, self.task)
+    }
+
+    /// Plan on a single worker (the sequential reference path).
+    #[allow(dead_code)]
+    pub fn plan_sequential(&self, lm: &LatencyModel, threshold: f64) -> (SolutionList, Solution) {
+        self.planner(threshold, 1).plan(&self.opt, &self.profile, lm, self.task)
     }
 
     pub fn baselines<'a>(&'a self, lm: &'a LatencyModel) -> BaselineCtx<'a> {

@@ -1,5 +1,6 @@
 //! Performance bench for the L3 hot paths (the §Perf instrument):
-//! * the full planner (Algorithm 1) per model
+//! * the full planner (Algorithm 1) per model, sequential vs parallel —
+//!   the headline number for the scoped-thread-pool `Planner`
 //! * its phases: graph optimization, profiling, distortion table,
 //!   candidate enumeration, min-cut
 //! * the serving-side packet codec (binary framing)
@@ -27,8 +28,10 @@ fn main() {
         vec!["distortion table".into()],
         vec!["candidates (eq.6)".into()],
         vec!["min-cut (QDMP)".into()],
-        vec!["full Algorithm 1".into()],
+        vec!["Algorithm 1 (1 thread)".into()],
+        vec!["Algorithm 1 (parallel)".into()],
     ];
+    let mut speedups = vec![];
     for name in ["resnet50", "yolov3"] {
         let (raw, _) = zoo::by_name(name).unwrap();
         let mb = ModelBench::new(name);
@@ -70,15 +73,25 @@ fn main() {
         });
         rows[4].push(format!("{:.2}ms", s.mean * 1e3));
 
-        let s = bench(1, 3, || {
+        let seq = bench(1, 3, || {
+            let _ = std::hint::black_box(mb.plan_sequential(&lm, mb.threshold()));
+        });
+        rows[5].push(format!("{:.1}ms", seq.mean * 1e3));
+
+        let par = bench(1, 3, || {
             let _ = std::hint::black_box(mb.plan(&lm, mb.threshold()));
         });
-        rows[5].push(format!("{:.1}ms", s.mean * 1e3));
+        rows[6].push(format!("{:.1}ms", par.mean * 1e3));
+        speedups.push((name, seq.mean / par.mean));
     }
     for r in rows {
         t.row(&r);
     }
     println!("{}", t.render());
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for (name, s) in &speedups {
+        println!("planner speedup ({name}, {workers} workers): {s:.2}x");
+    }
 
     // serving codec hot path
     let p = ActivationPacket {

@@ -25,5 +25,5 @@ pub use edge::{EdgeSpec, EdgeWorker};
 pub use link::{DelayMode, Link, Transfer, WireFormat};
 pub use loadgen::{poisson_schedule, replay, Arrival, LoadReport};
 pub use metrics::{LatencyHistogram, ServingStats};
-pub use protocol::ActivationPacket;
+pub use protocol::{ActivationPacket, TX_HEADER_BYTES};
 pub use server::{ArtifactMeta, InferenceResult, ServeConfig, ServeMode, Server};

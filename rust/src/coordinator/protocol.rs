@@ -21,6 +21,14 @@ use anyhow::{bail, Context, Result};
 
 pub const MAGIC: u32 = 0x4153_5054;
 
+/// Binary-frame overhead added to every transmitted activation payload:
+/// magic (u32) + bits (u8) + scale (f32) + zero-point (f32) + 4×i32 shape +
+/// payload length (u32). This is the single source of truth for the
+/// per-tensor header cost — the planner charges exactly this many bytes per
+/// crossing tensor (objective 5a's transmission term), so planned `tx_bytes`
+/// match what [`ActivationPacket::to_binary`] actually puts on the wire.
+pub const TX_HEADER_BYTES: usize = 4 + 1 + 4 + 4 + 16 + 4;
+
 /// One activation tensor in flight from edge to cloud.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ActivationPacket {
@@ -126,7 +134,7 @@ impl ActivationPacket {
 
     /// Wire size in each mode.
     pub fn wire_bytes_binary(&self) -> usize {
-        4 + 1 + 4 + 4 + 16 + 4 + self.payload.len()
+        TX_HEADER_BYTES + self.payload.len()
     }
 
     pub fn wire_bytes_ascii(&self) -> usize {
@@ -155,6 +163,14 @@ mod tests {
         assert_eq!(buf.len(), p.wire_bytes_binary());
         let q = ActivationPacket::from_binary(&buf).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn header_const_matches_framing() {
+        let p = sample();
+        assert_eq!(p.to_binary().len(), TX_HEADER_BYTES + p.payload.len());
+        let empty = ActivationPacket { payload: vec![], ..sample() };
+        assert_eq!(empty.to_binary().len(), TX_HEADER_BYTES);
     }
 
     #[test]

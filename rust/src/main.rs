@@ -20,7 +20,7 @@ use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
 use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
-use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx};
+use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Planner};
 use auto_split::zoo;
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key`.
@@ -80,6 +80,7 @@ fn main() -> Result<()> {
             }
             eprintln!("usage: auto-split <optimize|baselines|serve|zoo> [flags]");
             eprintln!("  optimize  --model resnet50 [--threshold 5] [--mem-mb 32] [--mbps 3]");
+            eprintln!("            [--threads 0]   planner workers (0 = per core, 1 = sequential)");
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
             eprintln!("  serve     [--artifacts artifacts] [--mode split|cloud] [--requests 64]");
             eprintln!("            [--mbps 3] [--batch 8] [--rpc]");
@@ -91,7 +92,7 @@ fn main() -> Result<()> {
 
 fn planner_inputs(
     args: &Args,
-) -> Result<(auto_split::Graph, zoo::Task, LatencyModel, AutoSplitConfig)> {
+) -> Result<(auto_split::Graph, zoo::Task, LatencyModel, Planner)> {
     let model = args.get("--model").context("--model required (see `auto-split zoo`)")?;
     let (g, task) = zoo::by_name(model).with_context(|| format!("unknown model {model}"))?;
     let opt = optimize_for_inference(&g).graph;
@@ -105,20 +106,22 @@ fn planner_inputs(
         edge_mem_bytes: args.parse("--mem-mb", 32usize)? << 20,
         ..Default::default()
     };
-    Ok((opt, task, lm, cfg))
+    // --threads 0 (default) = one worker per core; 1 = sequential
+    let planner = Planner::new(cfg).with_threads(args.parse("--threads", 0usize)?);
+    Ok((opt, task, lm, planner))
 }
 
 fn cmd_optimize(args: &Args) -> Result<()> {
-    let (opt, task, lm, cfg) = planner_inputs(args)?;
+    let (opt, task, lm, planner) = planner_inputs(args)?;
     let profile = ModelProfile::synthesize(&opt);
-    let (list, sel) = auto_split(&opt, &profile, &lm, task, &cfg);
+    let (list, sel) = planner.plan(&opt, &profile, &lm, task);
 
     println!(
         "{}: {} candidate solutions (threshold {}%, edge mem {})",
         opt.name,
         list.len(),
-        cfg.max_drop_pct,
-        fmt_bytes(cfg.edge_mem_bytes)
+        planner.config().max_drop_pct,
+        fmt_bytes(planner.config().edge_mem_bytes)
     );
     let mut t = Table::new(
         "Pareto frontier (accuracy drop vs latency)",
@@ -150,11 +153,11 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 }
 
 fn cmd_baselines(args: &Args) -> Result<()> {
-    let (opt, task, lm, cfg) = planner_inputs(args)?;
+    let (opt, task, lm, planner) = planner_inputs(args)?;
     let model = args.get("--model").unwrap();
     let (raw, _) = zoo::by_name(model).unwrap();
     let profile = ModelProfile::synthesize(&opt);
-    let (_, sel) = auto_split(&opt, &profile, &lm, task, &cfg);
+    let (_, sel) = planner.plan(&opt, &profile, &lm, task);
     let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
 
     let mut t = Table::new(

@@ -1,87 +1,404 @@
-//! HLO-text → PJRT executable wrapper.
+//! Artifact execution engine.
+//!
+//! The original deployment loads AOT-compiled HLO-text artifacts through
+//! PJRT (the `xla` crate, CPU plugin). That crate cannot be resolved in
+//! this offline build environment, so the default engine here is a
+//! **deterministic pure-Rust reference interpreter** over a tiny artifact
+//! dialect (`REFHLO v1`, below). The serving pipeline, wire protocol,
+//! batcher, and metrics are identical either way — only the tensor math
+//! behind [`Engine::run_f32`] / [`Engine::run_u8`] differs. Restoring the
+//! PJRT backend is a matter of re-adding the `xla` dependency and swapping
+//! this module's internals; the public API is the PJRT wrapper's.
+//!
+//! ## `REFHLO v1` artifact dialect
+//!
+//! Line-oriented `key: value` text. First line is the magic `REFHLO v1`;
+//! the `program` key selects the computation:
+//!
+//! * `edge_pack` — f32 image `[1,1,img,img]` → quantize each value with
+//!   `scale` to `bits`-bit codes → pack `8/bits` codes per byte →
+//!   u8 payload of `c2*hw` bytes (requires `img*img == c2*hw*(8/bits)`).
+//! * `cloud_logits` — u8 packed batch `[b,c2,hw]` → unpack codes →
+//!   dequantize with `scale` → per-sample logits via a deterministic
+//!   linear head (`classes` rows, seeded by `seed`).
+//! * `full_logits` — f32 image `[1,1,img,img]` → logits via a
+//!   deterministic linear head (`classes` rows, seeded by `seed`).
+//!
+//! Real HLO text (`HloModule ...`) is detected and rejected with a clear
+//! error pointing at the PJRT backend.
 
-use anyhow::{Context, Result};
+use crate::profile::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 
-/// A PJRT client (CPU). Cheap to clone engines from; create once.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+/// Runtime handle (PJRT-client analogue). Cheap; create once per thread.
+pub struct Runtime;
 
 impl Runtime {
-    /// CPU PJRT client (the only backend in this environment; on real
-    /// deployments this is the edge NPU / cloud TPU plugin).
+    /// The reference CPU runtime (in the PJRT build: the CPU plugin).
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client })
+        Ok(Runtime)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "reference-cpu".to_string()
     }
 
-    /// Load an HLO **text** artifact (see python/compile/aot.py for why
-    /// text, not serialized protos) and compile it.
+    /// Load and "compile" an artifact file into an [`Engine`].
     pub fn load_hlo_text(&self, path: &Path) -> Result<Engine> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {path:?}"))?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read artifact {path:?}"))?;
+        let program = parse_ref_program(&text)
+            .with_context(|| format!("parse artifact {path:?}"))?;
         Ok(Engine {
-            exe,
-            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+            program,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
         })
     }
 }
 
-/// One compiled executable.
+/// A parsed reference program.
+enum Program {
+    EdgePack {
+        img: usize,
+        bits: u8,
+        c2: usize,
+        hw: usize,
+        scale: f32,
+    },
+    CloudLogits {
+        batch: usize,
+        c2: usize,
+        hw: usize,
+        bits: u8,
+        scale: f32,
+        classes: usize,
+        /// `classes × (c2*hw*(8/bits))` row-major head weights.
+        weights: Vec<f32>,
+    },
+    FullLogits {
+        img: usize,
+        classes: usize,
+        /// `classes × img²` row-major head weights.
+        weights: Vec<f32>,
+    },
+}
+
+/// Host tensor handed to an [`Engine`] (PJRT literal analogue).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    U8 { data: Vec<u8>, dims: Vec<i64> },
+}
+
+impl Literal {
+    fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data),
+            Literal::U8 { .. } => bail!("expected f32 literal, got u8"),
+        }
+    }
+
+    fn u8_data(&self) -> Result<&[u8]> {
+        match self {
+            Literal::U8 { data, .. } => Ok(data),
+            Literal::F32 { .. } => bail!("expected u8 literal, got f32"),
+        }
+    }
+}
+
+/// One loaded executable.
 pub struct Engine {
-    exe: xla::PjRtLoadedExecutable,
+    program: Program,
     pub name: String,
 }
 
 impl Engine {
-    /// Execute with literal inputs; returns the unwrapped outputs (the AOT
-    /// pipeline lowers with `return_tuple=True`, so the raw result is a
-    /// 1-element tuple of the real outputs).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
-            .to_literal_sync()
-            .context("fetch result literal")?;
-        let out = result.to_tuple1().context("unwrap return tuple")?;
-        Ok(out)
-    }
-
     /// Execute and read back an f32 tensor.
-    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        Ok(self.run(inputs)?.to_vec::<f32>()?)
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        anyhow::ensure!(inputs.len() == 1, "{}: expected 1 input", self.name);
+        match &self.program {
+            Program::CloudLogits { batch, c2, hw, bits, scale, classes, weights } => {
+                let data = inputs[0].u8_data()?;
+                let sample = c2 * hw;
+                anyhow::ensure!(
+                    sample > 0 && data.len() == batch * sample,
+                    "{}: bad batch payload {} (batch {batch} × {sample})",
+                    self.name,
+                    data.len()
+                );
+                let per = (8 / bits) as usize;
+                let feat = sample * per;
+                let mask = ((1u16 << bits) - 1) as u8;
+                let mut out = Vec::with_capacity(batch * classes);
+                for b in 0..*batch {
+                    let bytes = &data[b * sample..(b + 1) * sample];
+                    // unpack + dequantize
+                    let mut x = Vec::with_capacity(feat);
+                    for &byte in bytes {
+                        for slot in 0..per {
+                            let code = (byte >> (slot as u8 * bits)) & mask;
+                            x.push(code as f32 * scale);
+                        }
+                    }
+                    for c in 0..*classes {
+                        let row = &weights[c * feat..(c + 1) * feat];
+                        let mut acc = 0.0f32;
+                        for (w, v) in row.iter().zip(&x) {
+                            acc += w * v;
+                        }
+                        out.push(acc);
+                    }
+                }
+                Ok(out)
+            }
+            Program::FullLogits { img, classes, weights } => {
+                let x = inputs[0].f32_data()?;
+                let feat = img * img;
+                anyhow::ensure!(
+                    x.len() == feat,
+                    "{}: bad image {} (expected {feat})",
+                    self.name,
+                    x.len()
+                );
+                let mut out = Vec::with_capacity(*classes);
+                for c in 0..*classes {
+                    let row = &weights[c * feat..(c + 1) * feat];
+                    let mut acc = 0.0f32;
+                    for (w, v) in row.iter().zip(x) {
+                        acc += w * v;
+                    }
+                    out.push(acc);
+                }
+                Ok(out)
+            }
+            Program::EdgePack { .. } => {
+                bail!("{}: edge_pack produces u8, call run_u8", self.name)
+            }
+        }
     }
 
     /// Execute and read back a u8 tensor.
-    pub fn run_u8(&self, inputs: &[xla::Literal]) -> Result<Vec<u8>> {
-        Ok(self.run(inputs)?.to_vec::<u8>()?)
+    pub fn run_u8(&self, inputs: &[Literal]) -> Result<Vec<u8>> {
+        anyhow::ensure!(inputs.len() == 1, "{}: expected 1 input", self.name);
+        match &self.program {
+            Program::EdgePack { img, bits, c2, hw, scale } => {
+                let x = inputs[0].f32_data()?;
+                anyhow::ensure!(
+                    x.len() == img * img,
+                    "{}: bad image {} (expected {})",
+                    self.name,
+                    x.len(),
+                    img * img
+                );
+                let per = (8 / bits) as usize;
+                anyhow::ensure!(
+                    img * img == c2 * hw * per,
+                    "{}: shape mismatch img²={} vs c2*hw*per={}",
+                    self.name,
+                    img * img,
+                    c2 * hw * per
+                );
+                let qmax = ((1u16 << bits) - 1) as f32;
+                let code = |v: f32| -> u8 { (v / scale).round().clamp(0.0, qmax) as u8 };
+                let mut out = Vec::with_capacity(c2 * hw);
+                for j in 0..c2 * hw {
+                    let mut byte = 0u8;
+                    for slot in 0..per {
+                        byte |= code(x[j * per + slot]) << (slot as u8 * bits);
+                    }
+                    out.push(byte);
+                }
+                Ok(out)
+            }
+            _ => bail!("{}: program produces f32, call run_f32", self.name),
+        }
     }
 }
 
 /// Build an f32 literal of the given shape.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+    Ok(Literal::F32 { data: data.to_vec(), dims: dims.to_vec() })
 }
 
-/// Build a u8 literal of the given shape (u8 is not a `NativeType` in the
-/// xla crate; go through the untyped-data constructor).
-pub fn literal_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
+/// Build a u8 literal of the given shape.
+pub fn literal_u8(data: &[u8], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
-    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::U8,
-        &dims_usize,
-        data,
-    )?)
+    Ok(Literal::U8 { data: data.to_vec(), dims: dims.to_vec() })
+}
+
+/// Deterministic linear-head weights: small, zero-mean, seed-stable.
+fn head_weights(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..rows * cols)
+        .map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.1)
+        .collect()
+}
+
+struct RefKeys {
+    kv: BTreeMap<String, String>,
+}
+
+impl RefKeys {
+    fn get(&self, k: &str) -> Result<&str> {
+        self.kv
+            .get(k)
+            .map(String::as_str)
+            .with_context(|| format!("missing key `{k}`"))
+    }
+
+    fn usize_of(&self, k: &str) -> Result<usize> {
+        self.get(k)?.parse::<usize>().with_context(|| format!("bad `{k}`"))
+    }
+
+    fn f32_of(&self, k: &str) -> Result<f32> {
+        self.get(k)?.parse::<f32>().with_context(|| format!("bad `{k}`"))
+    }
+
+    fn bits_of(&self, k: &str) -> Result<u8> {
+        let b = self.usize_of(k)? as u8;
+        anyhow::ensure!(matches!(b, 1 | 2 | 4 | 8), "unsupported bits {b}");
+        Ok(b)
+    }
+}
+
+fn parse_ref_program(text: &str) -> Result<Program> {
+    let mut lines = text.lines();
+    let magic = lines.next().map(str::trim).unwrap_or_default();
+    if magic.starts_with("HloModule") {
+        bail!(
+            "artifact is HLO text; the PJRT backend (xla crate) is not \
+             available in this offline build — see src/runtime/engine.rs"
+        );
+    }
+    anyhow::ensure!(magic == "REFHLO v1", "bad artifact magic {magic:?}");
+
+    let mut kv: BTreeMap<String, String> = BTreeMap::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once(':').context("expected `key: value` line")?;
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let keys = RefKeys { kv };
+    let usize_of = |k: &str| keys.usize_of(k);
+    let f32_of = |k: &str| keys.f32_of(k);
+    let bits_of = |k: &str| keys.bits_of(k);
+
+    match keys.get("program")? {
+        "edge_pack" => Ok(Program::EdgePack {
+            img: usize_of("img")?,
+            bits: bits_of("bits")?,
+            c2: usize_of("c2")?,
+            hw: usize_of("hw")?,
+            scale: f32_of("scale")?,
+        }),
+        "cloud_logits" => {
+            let c2 = usize_of("c2")?;
+            let hw = usize_of("hw")?;
+            let bits = bits_of("bits")?;
+            let classes = usize_of("classes")?;
+            let seed = usize_of("seed")? as u64;
+            let feat = c2 * hw * (8 / bits) as usize;
+            Ok(Program::CloudLogits {
+                batch: usize_of("batch")?,
+                c2,
+                hw,
+                bits,
+                scale: f32_of("scale")?,
+                classes,
+                weights: head_weights(seed, classes, feat),
+            })
+        }
+        "full_logits" => {
+            let img = usize_of("img")?;
+            let classes = usize_of("classes")?;
+            let seed = usize_of("seed")? as u64;
+            Ok(Program::FullLogits {
+                img,
+                classes,
+                weights: head_weights(seed, classes, img * img),
+            })
+        }
+        other => bail!("unknown program {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("autosplit-engine-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn edge_pack_roundtrips_through_cloud() {
+        let edge = write_tmp(
+            "edge.hlo.txt",
+            "REFHLO v1\nprogram: edge_pack\nimg: 4\nbits: 4\nc2: 2\nhw: 4\nscale: 0.1\n",
+        );
+        let cloud = write_tmp(
+            "cloud.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 1\nc2: 2\nhw: 4\nbits: 4\n\
+             scale: 0.1\nclasses: 3\nseed: 7\n",
+        );
+        let rt = Runtime::cpu().unwrap();
+        let e = rt.load_hlo_text(&edge).unwrap();
+        let c = rt.load_hlo_text(&cloud).unwrap();
+        let img: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let packed = e.run_u8(&[literal_f32(&img, &[1, 1, 4, 4]).unwrap()]).unwrap();
+        assert_eq!(packed.len(), 8);
+        let logits = c.run_f32(&[literal_u8(&packed, &[1, 2, 4]).unwrap()]).unwrap();
+        assert_eq!(logits.len(), 3);
+        // deterministic across engines
+        let logits2 = c.run_f32(&[literal_u8(&packed, &[1, 2, 4]).unwrap()]).unwrap();
+        assert_eq!(logits, logits2);
+    }
+
+    #[test]
+    fn full_logits_runs() {
+        let full = write_tmp(
+            "full.hlo.txt",
+            "REFHLO v1\nprogram: full_logits\nimg: 4\nclasses: 5\nseed: 9\n",
+        );
+        let rt = Runtime::cpu().unwrap();
+        let f = rt.load_hlo_text(&full).unwrap();
+        let img = vec![0.5f32; 16];
+        let logits = f.run_f32(&[literal_f32(&img, &[1, 1, 4, 4]).unwrap()]).unwrap();
+        assert_eq!(logits.len(), 5);
+    }
+
+    #[test]
+    fn hlo_text_rejected_with_pointer() {
+        let p = write_tmp("real.hlo.txt", "HloModule lpr_edge\nENTRY main { ... }\n");
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo_text(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("PJRT"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = write_tmp("junk.hlo.txt", "not an artifact\n");
+        assert!(Runtime::cpu().unwrap().load_hlo_text(&p).is_err());
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_u8(&[1, 2, 3], &[1, 3]).is_ok());
+    }
 }

@@ -1,11 +1,16 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
-//! the request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU).
+//! Artifact runtime: load AOT artifacts and execute them on the request
+//! path.
 //!
 //! One [`Engine`] per compiled executable; the coordinator owns one edge
 //! engine and one cloud engine per batch size (dynamic shapes are not a
 //! PJRT concept — each batch size is its own artifact, like production
 //! serving stacks do).
+//!
+//! The offline build ships a pure-Rust **reference interpreter** over the
+//! `REFHLO v1` artifact dialect (see [`engine`]); the PJRT/XLA backend the
+//! deployment originally wrapped is restored by re-adding the `xla` crate
+//! and swapping the engine internals — the API here is the PJRT wrapper's.
 
 pub mod engine;
 
-pub use engine::{literal_f32, literal_u8, Engine, Runtime};
+pub use engine::{literal_f32, literal_u8, Engine, Literal, Runtime};

@@ -9,7 +9,7 @@
 //! drop is within the user threshold `A` (Remark 4).
 
 use super::accuracy;
-use super::candidates::{edge_only_fits, potential_splits};
+use super::planner::Planner;
 use super::solutions::{weighted_index, Placement, Solution, SolutionList};
 use crate::graph::layer::bits_to_bytes;
 use crate::graph::{Graph, NodeId};
@@ -20,9 +20,10 @@ use crate::quant::{
 use crate::sim::LatencyModel;
 use crate::zoo::Task;
 
-/// Per-crossing-tensor protocol header: scale (f32) + zero-point (f32) +
-/// 4×i32 shape + u8 bits (Table 5), rounded up.
-pub const TX_HEADER_BYTES: usize = 32;
+/// Per-crossing-tensor protocol header (Table 5 framing). Defined once in
+/// the wire protocol so planned transmission bytes match the serving path
+/// byte-for-byte; re-exported here for the optimizer's callers.
+pub use crate::coordinator::protocol::TX_HEADER_BYTES;
 
 /// Auto-Split configuration.
 #[derive(Debug, Clone)]
@@ -206,6 +207,10 @@ pub fn evaluate_assignment(
 
 /// Run Algorithm 1 on an **optimized** graph and return the full feasible
 /// solution list `S` (Cloud-Only always included).
+///
+/// Thin wrapper over [`Planner`], which owns candidate enumeration and the
+/// (parallel) per-candidate grid search. Plans are bit-identical whatever
+/// the worker count — see `Planner` for the determinism argument.
 pub fn auto_split_solutions(
     g: &Graph,
     profile: &ModelProfile,
@@ -213,39 +218,7 @@ pub fn auto_split_solutions(
     task: Task,
     cfg: &AutoSplitConfig,
 ) -> SolutionList {
-    let order = g.topo_order();
-    let bits = &cfg.bit_set;
-    let table = DistortionTable::build(g, profile, bits, cfg.metric);
-    let b_min = bits[0];
-    let float_bits = vec![16u8; g.len()]; // for Cloud-Only bookkeeping
-
-    let mut list = SolutionList::default();
-    // Cloud-Only is always feasible (Remark 3).
-    list.push(evaluate_assignment(
-        "auto-split",
-        g,
-        &order,
-        None,
-        &float_bits,
-        &float_bits,
-        lm,
-        &table_with16(&table),
-        task,
-    ));
-
-    // Candidate splits (eq. 6) + Edge-Only if it fits at b_min.
-    let mut cand_positions: Vec<usize> = potential_splits(g, &order, b_min, cfg.edge_mem_bytes)
-        .into_iter()
-        .map(|c| c.pos)
-        .collect();
-    if edge_only_fits(g, &order, b_min, cfg.edge_mem_bytes) {
-        cand_positions.push(order.len() - 1);
-    }
-
-    for &pos in &cand_positions {
-        explore_split(g, &order, pos, &table, lm, task, cfg, &mut list);
-    }
-    list
+    Planner::new(cfg.clone()).solutions(g, profile, lm, task)
 }
 
 /// Extend the distortion table with a 16-bit (zero-distortion) column so
@@ -264,10 +237,15 @@ pub fn table_with16(t: &DistortionTable) -> DistortionTable {
     t2
 }
 
-/// Grid-search the budget pairs of one split position and push every
-/// feasible evaluated assignment.
+/// Grid-search the budget pairs of one split position and return every
+/// feasible evaluated assignment, in deterministic grid order.
+///
+/// This is the per-candidate unit of work the [`Planner`] fans out across
+/// worker threads: it reads only shared immutable inputs and returns its
+/// own result vector, so candidate-level parallelism cannot reorder or
+/// perturb anything inside a candidate.
 #[allow(clippy::too_many_arguments)]
-fn explore_split(
+pub(crate) fn explore_split(
     g: &Graph,
     order: &[NodeId],
     pos: usize,
@@ -275,8 +253,8 @@ fn explore_split(
     lm: &LatencyModel,
     task: Task,
     cfg: &AutoSplitConfig,
-    list: &mut SolutionList,
-) {
+) -> Vec<Solution> {
+    let mut out = Vec::new();
     let bits = &cfg.bit_set;
     let prefix: Vec<NodeId> = order[..=pos].to_vec();
 
@@ -405,7 +383,7 @@ fn explore_split(
                 if w_bytes_real + ws > cfg.edge_mem_bytes {
                     continue;
                 }
-                list.push(Solution {
+                out.push(Solution {
                     method: "auto-split".into(),
                     placement: if edge_only { Placement::EdgeOnly } else { Placement::Split },
                     split_pos: Some(pos),
@@ -426,10 +404,14 @@ fn explore_split(
             }
         }
     }
+    out
 }
 
 /// End-to-end entry: optimize → enumerate → select under the threshold.
-/// Returns (full list, selected solution index).
+/// Returns (full list, selected solution).
+///
+/// Thin wrapper over [`Planner::plan`] with the default (parallel) worker
+/// pool; use [`Planner`] directly to control the thread count.
 pub fn auto_split(
     g: &Graph,
     profile: &ModelProfile,
@@ -437,12 +419,7 @@ pub fn auto_split(
     task: Task,
     cfg: &AutoSplitConfig,
 ) -> (SolutionList, Solution) {
-    let list = auto_split_solutions(g, profile, lm, task, cfg);
-    let sel = list
-        .select(cfg.max_drop_pct)
-        .expect("cloud-only always present")
-        .clone();
-    (list, sel)
+    Planner::new(cfg.clone()).plan(g, profile, lm, task)
 }
 
 #[cfg(test)]

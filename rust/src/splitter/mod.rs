@@ -1,13 +1,21 @@
 //! The Auto-Split optimizer (the paper's contribution) and its baselines.
+//!
+//! Entry point: [`Planner`] — configure once, then [`Planner::plan`] a
+//! model. The free functions [`auto_split`] / [`auto_split_solutions`] are
+//! thin wrappers kept for call-site brevity.
 
 pub mod accuracy;
 pub mod autosplit;
 pub mod baselines;
 pub mod candidates;
 pub mod compression;
+pub mod planner;
 pub mod solutions;
 
-pub use autosplit::{auto_split, auto_split_solutions, evaluate_assignment, AutoSplitConfig};
+pub use autosplit::{
+    auto_split, auto_split_solutions, evaluate_assignment, AutoSplitConfig, TX_HEADER_BYTES,
+};
 pub use baselines::BaselineCtx;
 pub use candidates::{edge_only_fits, potential_splits, SplitCandidate};
+pub use planner::Planner;
 pub use solutions::{Placement, Solution, SolutionList};

@@ -1,0 +1,232 @@
+//! The reusable `Planner` API: Algorithm 1 with a hand-rolled scoped
+//! thread pool over the per-split-candidate `(b^w, b^a, n)` grids.
+//!
+//! ## Why candidate-level parallelism
+//!
+//! Algorithm 1 factorizes per split candidate `n`: each candidate solves
+//! its own problems (8)/(9) and sweeps its own `(b^w, b^a, T)` grid over
+//! **shared immutable inputs** (graph, distortion table, latency model).
+//! Candidates are therefore embarrassingly parallel, and they dominate the
+//! planner's wall time (the distortion table is built once up front).
+//!
+//! ## Determinism
+//!
+//! Plans are **bit-identical** to the sequential path for any worker
+//! count:
+//!
+//! 1. [`explore_split`] is a pure function of its candidate — it performs
+//!    no cross-candidate floating-point accumulation, and the evaluation
+//!    order *inside* a candidate is untouched.
+//! 2. Workers claim candidate *indices* from an atomic counter and write
+//!    each result into the slot of its index; the merge step concatenates
+//!    the slots in index order. Scheduling can change which thread runs a
+//!    candidate, never where its results land.
+//!
+//! The `planner_equivalence` integration test locks this property, and
+//! the golden-plan fixtures lock the plans themselves.
+
+use super::autosplit::{evaluate_assignment, explore_split, table_with16, AutoSplitConfig};
+use super::candidates::{edge_only_fits, potential_splits};
+use super::solutions::{Solution, SolutionList};
+use crate::graph::{Graph, NodeId};
+use crate::profile::ModelProfile;
+use crate::quant::DistortionTable;
+use crate::sim::LatencyModel;
+use crate::zoo::Task;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Reusable Auto-Split planner: configuration + worker pool policy.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    cfg: AutoSplitConfig,
+    /// Worker threads for the candidate grid; 0 = one per available core.
+    threads: usize,
+}
+
+impl Planner {
+    /// Planner with the default pool (one worker per available core).
+    pub fn new(cfg: AutoSplitConfig) -> Self {
+        Planner { cfg, threads: 0 }
+    }
+
+    /// Single-threaded planner (the reference path for equivalence tests).
+    pub fn sequential(cfg: AutoSplitConfig) -> Self {
+        Planner { cfg, threads: 1 }
+    }
+
+    /// Override the worker count (0 = one per available core).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &AutoSplitConfig {
+        &self.cfg
+    }
+
+    /// Effective worker count for `jobs` independent candidates.
+    fn worker_count(&self, jobs: usize) -> usize {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let t = if self.threads == 0 { hw } else { self.threads };
+        t.max(1).min(jobs.max(1))
+    }
+
+    /// Run Algorithm 1: enumerate every feasible `(split, bit-assignment)`
+    /// solution (Cloud-Only always included, Remark 3).
+    pub fn solutions(
+        &self,
+        g: &Graph,
+        profile: &ModelProfile,
+        lm: &LatencyModel,
+        task: Task,
+    ) -> SolutionList {
+        let order = g.topo_order();
+        let bits = &self.cfg.bit_set;
+        let table = DistortionTable::build(g, profile, bits, self.cfg.metric);
+        let b_min = bits[0];
+        let float_bits = vec![16u8; g.len()]; // for Cloud-Only bookkeeping
+
+        let mut list = SolutionList::default();
+        // Cloud-Only is always feasible (Remark 3).
+        list.push(evaluate_assignment(
+            "auto-split",
+            g,
+            &order,
+            None,
+            &float_bits,
+            &float_bits,
+            lm,
+            &table_with16(&table),
+            task,
+        ));
+
+        // Candidate splits (eq. 6) + Edge-Only if it fits at b_min.
+        let mut cand_positions: Vec<usize> =
+            potential_splits(g, &order, b_min, self.cfg.edge_mem_bytes)
+                .into_iter()
+                .map(|c| c.pos)
+                .collect();
+        if edge_only_fits(g, &order, b_min, self.cfg.edge_mem_bytes) {
+            cand_positions.push(order.len() - 1);
+        }
+
+        for sols in self.explore_candidates(g, &order, &cand_positions, &table, lm, task) {
+            list.solutions.extend(sols);
+        }
+        list
+    }
+
+    /// End-to-end: enumerate, then select the fastest solution within the
+    /// accuracy threshold (Remark 4). Returns (full list, selection).
+    pub fn plan(
+        &self,
+        g: &Graph,
+        profile: &ModelProfile,
+        lm: &LatencyModel,
+        task: Task,
+    ) -> (SolutionList, Solution) {
+        let list = self.solutions(g, profile, lm, task);
+        let sel = list
+            .select(self.cfg.max_drop_pct)
+            .expect("cloud-only always present")
+            .clone();
+        (list, sel)
+    }
+
+    /// Evaluate every candidate's grid, one result vector per candidate,
+    /// in candidate order. Work is distributed over a scoped thread pool
+    /// (the offline environment has no rayon); see the module docs for the
+    /// determinism argument.
+    fn explore_candidates(
+        &self,
+        g: &Graph,
+        order: &[NodeId],
+        positions: &[usize],
+        table: &DistortionTable,
+        lm: &LatencyModel,
+        task: Task,
+    ) -> Vec<Vec<Solution>> {
+        let workers = self.worker_count(positions.len());
+        let cfg = &self.cfg;
+        if workers <= 1 || positions.len() <= 1 {
+            return positions
+                .iter()
+                .map(|&pos| explore_split(g, order, pos, table, lm, task, cfg))
+                .collect();
+        }
+
+        // Index-claiming pool: deeper candidates cost more (longer
+        // prefixes), so dynamic claiming balances better than chunking.
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Vec<Solution>>> =
+            positions.iter().map(|_| Mutex::new(Vec::new())).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= positions.len() {
+                        break;
+                    }
+                    let sols = explore_split(g, order, positions[i], table, lm, task, cfg);
+                    *slots[i].lock().unwrap() = sols;
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimize_for_inference;
+    use crate::zoo;
+
+    fn inputs(model: &str) -> (Graph, ModelProfile, LatencyModel, Task) {
+        let (g, task) = zoo::by_name(model).unwrap();
+        let opt = optimize_for_inference(&g).graph;
+        let profile = ModelProfile::synthesize(&opt);
+        (opt, profile, LatencyModel::paper_default(), task)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let (g, profile, lm, task) = inputs("squeezenet1_0");
+        let cfg = AutoSplitConfig::default();
+        let seq = Planner::sequential(cfg.clone()).solutions(&g, &profile, &lm, task);
+        for threads in [2, 3, 8] {
+            let par = Planner::new(cfg.clone())
+                .with_threads(threads)
+                .solutions(&g, &profile, &lm, task);
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn free_function_matches_sequential_reference() {
+        // `auto_split` delegates to the default (parallel) planner; compare
+        // it against the independent single-threaded path so the wrapper's
+        // pool is actually exercised against the reference.
+        let (g, profile, lm, task) = inputs("lpr_edge_cnn");
+        let cfg = AutoSplitConfig::default();
+        let (list_a, sel_a) =
+            super::super::autosplit::auto_split(&g, &profile, &lm, task, &cfg);
+        let (list_b, sel_b) = Planner::sequential(cfg).plan(&g, &profile, &lm, task);
+        assert_eq!(list_a, list_b);
+        assert_eq!(sel_a, sel_b);
+    }
+
+    #[test]
+    fn worker_count_clamped() {
+        let p = Planner::new(AutoSplitConfig::default()).with_threads(64);
+        assert_eq!(p.worker_count(3), 3);
+        assert_eq!(p.worker_count(0), 1);
+        let s = Planner::sequential(AutoSplitConfig::default());
+        assert_eq!(s.worker_count(100), 1);
+    }
+}

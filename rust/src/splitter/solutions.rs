@@ -23,7 +23,11 @@ impl std::fmt::Display for Placement {
 }
 
 /// A fully evaluated candidate solution of problem (5).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field exactly (f64 bit-for-bit under the
+/// usual `==`); the planner's parallel/sequential equivalence tests rely
+/// on this to prove bit-identical plans.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
     /// Producing method ("auto-split", "qdmp", "neurosurgeon", "u8", …).
     pub method: String,
@@ -88,7 +92,7 @@ pub fn weighted_index(g: &Graph, order: &[NodeId], pos: Option<usize>) -> usize 
 }
 
 /// A list of feasible solutions (Algorithm 1's `S`).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SolutionList {
     pub solutions: Vec<Solution>,
 }

@@ -5,20 +5,33 @@
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::sim::{LatencyModel, Uplink};
-use auto_split::splitter::{auto_split, AutoSplitConfig, BaselineCtx, Placement};
+use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Placement, Planner, Solution, SolutionList};
 use auto_split::util::Json;
 use auto_split::zoo;
+
+
+/// All planning in this suite goes through the `Planner` API (the free
+/// `auto_split` wrapper is covered by the library's own unit tests).
+fn run_planner(
+    g: &auto_split::Graph,
+    profile: &ModelProfile,
+    lm: &LatencyModel,
+    task: zoo::Task,
+    cfg: &AutoSplitConfig,
+) -> (SolutionList, Solution) {
+    Planner::new(cfg.clone()).plan(g, profile, lm, task)
+}
 
 fn cfg() -> AutoSplitConfig {
     AutoSplitConfig { max_drop_pct: 5.0, ..Default::default() }
 }
 
-fn plan(model: &str, c: &AutoSplitConfig) -> (auto_split::splitter::SolutionList, auto_split::splitter::Solution) {
+fn plan(model: &str, c: &AutoSplitConfig) -> (SolutionList, Solution) {
     let (g, task) = zoo::by_name(model).unwrap();
     let opt = optimize_for_inference(&g).graph;
     let profile = ModelProfile::synthesize(&opt);
     let lm = LatencyModel::paper_default();
-    auto_split(&opt, &profile, &lm, task, c)
+    run_planner(&opt, &profile, &lm, task, c)
 }
 
 #[test]
@@ -27,7 +40,7 @@ fn auto_split_beats_every_baseline_on_resnet50() {
     let opt = optimize_for_inference(&g).graph;
     let profile = ModelProfile::synthesize(&opt);
     let lm = LatencyModel::paper_default();
-    let (_, sel) = auto_split(&opt, &profile, &lm, task, &cfg());
+    let (_, sel) = run_planner(&opt, &profile, &lm, task, &cfg());
     let ctx = BaselineCtx::new(&opt, &profile, &lm, task);
     for (name, sol) in [
         ("qdmp", ctx.qdmp()),
@@ -56,7 +69,7 @@ fn fig6_suite_runs_and_respects_thresholds() {
             zoo::Task::Classification => 5.0,
             zoo::Task::Detection => 10.0,
         };
-        let (list, sel) = auto_split(&opt, &profile, &lm, task, &c);
+        let (list, sel) = run_planner(&opt, &profile, &lm, task, &c);
         assert!(!list.is_empty());
         assert!(
             sel.acc_drop_pct <= c.max_drop_pct + 1e-6,
@@ -82,7 +95,7 @@ fn yolo_split_index_earlier_than_qdmp() {
     let opt = optimize_for_inference(&g).graph;
     let profile = ModelProfile::synthesize(&opt);
     let lm = LatencyModel::paper_default();
-    let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+    let (_, sel) = run_planner(&opt, &profile, &lm, task, &AutoSplitConfig {
         max_drop_pct: 10.0,
         ..Default::default()
     });
@@ -123,7 +136,7 @@ fn bandwidth_sweep_has_crossover() {
             auto_split::sim::AcceleratorConfig::tpu(),
             Uplink::mbps(mbps),
         );
-        let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+        let (_, sel) = run_planner(&opt, &profile, &lm, task, &AutoSplitConfig {
             max_drop_pct: 10.0,
             ..Default::default()
         });
@@ -146,7 +159,7 @@ fn frcnn_admits_no_meaningful_edge_partition() {
     let opt = optimize_for_inference(&g).graph;
     let profile = ModelProfile::synthesize(&opt);
     let lm = LatencyModel::paper_default();
-    let (list, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+    let (list, sel) = run_planner(&opt, &profile, &lm, task, &AutoSplitConfig {
         max_drop_pct: 10.0,
         ..Default::default()
     });
@@ -212,7 +225,7 @@ fn lpr_planner_selects_split_for_the_case_study() {
         auto_split::sim::AcceleratorConfig::tpu(),
         Uplink::paper_default(),
     );
-    let (_, sel) = auto_split(&opt, &profile, &lm, task, &AutoSplitConfig {
+    let (_, sel) = run_planner(&opt, &profile, &lm, task, &AutoSplitConfig {
         max_drop_pct: 10.0,
         edge_mem_bytes: 64 << 20,
         ..Default::default()

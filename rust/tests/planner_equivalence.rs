@@ -1,0 +1,70 @@
+//! Sequential ↔ parallel planner equivalence: same model, same config →
+//! the thread-pool `Planner` must produce a `SolutionList` that is
+//! **bit-identical** (every field of every solution, f64s compared exactly)
+//! to the single-threaded reference path, for any worker count.
+//!
+//! This is the determinism contract the Planner's scoped pool promises:
+//! candidates are pure functions merged in index order, so scheduling can
+//! never leak into the plan.
+
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::sim::LatencyModel;
+use auto_split::splitter::{AutoSplitConfig, Planner};
+use auto_split::zoo;
+
+fn check_model(model: &str, cfg: AutoSplitConfig) {
+    let (g, task) = zoo::by_name(model).unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+
+    let seq = Planner::sequential(cfg.clone()).solutions(&opt, &profile, &lm, task);
+    assert!(!seq.is_empty(), "{model}: planner produced no solutions");
+
+    for threads in [0usize, 2, 4, 7] {
+        let par = Planner::new(cfg.clone())
+            .with_threads(threads)
+            .solutions(&opt, &profile, &lm, task);
+        assert_eq!(
+            seq.len(),
+            par.len(),
+            "{model}: solution count diverged at threads={threads}"
+        );
+        // Full structural equality — exact f64s, exact ordering.
+        assert_eq!(seq, par, "{model}: plans diverged at threads={threads}");
+    }
+
+    // The selection is a pure function of the list, but assert it anyway:
+    // this is the value deployments actually consume.
+    let sel_seq = Planner::sequential(cfg.clone()).plan(&opt, &profile, &lm, task).1;
+    let sel_par = Planner::new(cfg).with_threads(4).plan(&opt, &profile, &lm, task).1;
+    assert_eq!(sel_seq, sel_par, "{model}: selected plan diverged");
+}
+
+#[test]
+fn resnet18_parallel_equals_sequential() {
+    check_model("resnet18", AutoSplitConfig::default());
+}
+
+#[test]
+fn googlenet_parallel_equals_sequential() {
+    check_model("googlenet", AutoSplitConfig::default());
+}
+
+#[test]
+fn yolov3_tiny_parallel_equals_sequential() {
+    check_model(
+        "yolov3_tiny",
+        AutoSplitConfig { max_drop_pct: 10.0, ..Default::default() },
+    );
+}
+
+#[test]
+fn tight_memory_parallel_equals_sequential() {
+    // A tight memory budget exercises the infeasible-allocation branches.
+    check_model(
+        "mobilenet_v2",
+        AutoSplitConfig { edge_mem_bytes: 4 << 20, ..Default::default() },
+    );
+}

@@ -5,7 +5,7 @@
 use auto_split::graph::liveness::{chain_estimate_bytes, working_set_bytes};
 use auto_split::graph::{min_cut_split, optimize_for_inference, Graph, LayerKind, Shape};
 use auto_split::profile::SplitMix64;
-use auto_split::quant::{allocate_sum_budget, pack, unpack, PackLayout, SumItem};
+use auto_split::quant::{allocate_sum_budget, pack, packed_len, unpack, PackLayout, SumItem};
 
 /// Random DAG: a chain with random skip edges and random ops.
 fn random_graph(rng: &mut SplitMix64, max_nodes: usize) -> Graph {
@@ -193,6 +193,79 @@ fn prop_lagrange_budget_and_quality() {
             "allocator {} vs brute {best}",
             a.total_distortion
         );
+    }
+}
+
+/// Min-cut validity over random DAGs (beyond the brute-force sizes of
+/// `prop_mincut_matches_bruteforce`): whatever the latencies, the returned
+/// partition must be a *valid cut* — the input pinned to the edge set, the
+/// cloud set closed under successors (cut edges all point edge→cloud), and
+/// the reported objective must equal the cost recomputed from the mask.
+#[test]
+fn prop_mincut_is_valid_closed_partition() {
+    let mut rng = SplitMix64::new(77);
+    for case in 0..40 {
+        let g = random_graph(&mut rng, 24);
+        let n = g.len();
+        let le: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0).collect();
+        let lc: Vec<f64> = (0..n).map(|_| rng.next_f64() * 0.5).collect();
+        let lt: Vec<f64> = (0..n).map(|_| rng.next_f64() * 3.0).collect();
+        let cut = min_cut_split(&g, &le, &lc, &lt);
+
+        assert_eq!(cut.edge_side.len(), n);
+        assert!(cut.edge_side[0], "case {case}: input must stay on the edge");
+        // closure: a cut edge may only cross edge→cloud, never cloud→edge
+        for v in 0..n {
+            for &w in &g.succs[v] {
+                assert!(
+                    !(cut.edge_side[w] && !cut.edge_side[v]),
+                    "case {case}: cloud node {v} feeds edge node {w}"
+                );
+            }
+        }
+        // the objective is exactly the cost of the returned partition
+        let mut cost = 0.0;
+        for v in 0..n {
+            if cut.edge_side[v] {
+                cost += le[v];
+                if g.succs[v].iter().any(|&w| !cut.edge_side[w]) {
+                    cost += lt[v];
+                }
+            } else {
+                cost += lc[v];
+            }
+        }
+        assert!(
+            (cut.objective - cost).abs() <= 1e-6 * (1.0 + cost),
+            "case {case}: objective {} vs mask cost {cost}",
+            cut.objective
+        );
+    }
+}
+
+/// Pack/unpack round-trip + size-formula agreement over random bit-widths,
+/// plane sizes, and channel counts, in both layouts: `unpack(pack(x)) == x`
+/// and `pack(x).len() == packed_len(..)` always.
+#[test]
+fn prop_pack_len_formula_matches_pack() {
+    let mut rng = SplitMix64::new(88);
+    for _ in 0..80 {
+        let bits = [1u8, 2, 4, 8][rng.next_u64() as usize % 4];
+        let plane = 1 + (rng.next_u64() as usize % 50);
+        let channels = 1 + (rng.next_u64() as usize % 9);
+        let mask = ((1u32 << bits) - 1) as u8;
+        let codes: Vec<u8> =
+            (0..plane * channels).map(|_| (rng.next_u64() as u8) & mask).collect();
+        for layout in [PackLayout::Channel, PackLayout::HeightWidth] {
+            let p = pack(&codes, bits, plane, layout);
+            assert_eq!(
+                p.len(),
+                packed_len(codes.len(), bits, plane, layout),
+                "bits={bits} plane={plane} ch={channels} {layout:?}"
+            );
+            let u = unpack(&p, bits, codes.len(), plane, layout);
+            assert_eq!(u, codes, "bits={bits} plane={plane} ch={channels} {layout:?}");
+        }
     }
 }
 

@@ -1,0 +1,208 @@
+//! Deterministic loopback serving e2e: drive `coordinator::Server`
+//! edge↔cloud over the in-memory link with synthetic reference artifacts
+//! (no `make artifacts` required), and assert that the request/response
+//! byte accounting matches `protocol.rs`'s header math exactly:
+//!
+//! ```text
+//!   tx_bytes == TX_HEADER_BYTES + payload_len
+//! ```
+//!
+//! where `payload_len` is `c2*hw` packed bytes for the SPLIT pipeline and
+//! `img*img` raw 8-bit pixels for CLOUD-ONLY — the same per-tensor header
+//! constant the planner charges in objective (5a), so what the planner
+//! plans is what the server bills.
+
+use auto_split::coordinator::{
+    ServeConfig, ServeMode, Server, WireFormat, TX_HEADER_BYTES,
+};
+use auto_split::profile::SplitMix64;
+use std::path::{Path, PathBuf};
+
+const IMG: usize = 16; // 256 pixels
+const BITS: usize = 4; // 2 codes/byte
+const C2: usize = 2;
+const HW: usize = 64; // C2*HW*2 == IMG*IMG
+const CLASSES: usize = 10;
+const SCALE: f32 = 0.05;
+
+/// Write a self-contained reference-artifact directory (REFHLO dialect,
+/// see `runtime::engine`) and return its path.
+fn write_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("autosplit-loopback-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let metadata = format!(
+        "{{\n  \"graph\": {{\"img\": {IMG}, \"classes\": {CLASSES}, \
+         \"packed_shape\": [{C2}, {HW}], \"act_bits\": {BITS}}},\n  \
+         \"boundary_scale\": {SCALE},\n  \"cloud_batches\": [1, 4],\n  \
+         \"params\": 1234,\n  \
+         \"accuracy\": {{\"acc_float\": 1.0, \"acc_quant_split\": 1.0}}\n}}\n"
+    );
+    std::fs::write(dir.join("metadata.json"), metadata).unwrap();
+
+    let edge = format!(
+        "REFHLO v1\nprogram: edge_pack\nimg: {IMG}\nbits: {BITS}\n\
+         c2: {C2}\nhw: {HW}\nscale: {SCALE}\n"
+    );
+    std::fs::write(dir.join("lpr_edge_b1.hlo.txt"), edge).unwrap();
+
+    for b in [1usize, 4] {
+        let cloud = format!(
+            "REFHLO v1\nprogram: cloud_logits\nbatch: {b}\nc2: {C2}\n\
+             hw: {HW}\nbits: {BITS}\nscale: {SCALE}\nclasses: {CLASSES}\n\
+             seed: 42\n"
+        );
+        std::fs::write(dir.join(format!("lpr_cloud_b{b}.hlo.txt")), cloud).unwrap();
+    }
+
+    let full = format!(
+        "REFHLO v1\nprogram: full_logits\nimg: {IMG}\nclasses: {CLASSES}\nseed: 43\n"
+    );
+    std::fs::write(dir.join("lpr_full_b1.hlo.txt"), full).unwrap();
+    dir
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Deterministic pseudo-image in [0, 1).
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..IMG * IMG).map(|_| rng.next_f32()).collect()
+}
+
+#[test]
+fn split_loopback_byte_counts_match_protocol_header_math() {
+    let dir = write_artifacts("split");
+    let server = Server::start(ServeConfig::new(&dir)).expect("start split server");
+    assert_eq!(server.meta.packed_shape, (C2, HW));
+
+    let res = server.infer(image(1)).expect("loopback infer");
+    assert_eq!(res.logits.len(), CLASSES);
+    // SPLIT payload: c2*hw packed bytes + exactly one protocol header.
+    assert_eq!(res.tx_bytes, TX_HEADER_BYTES + C2 * HW);
+    // 4-bit packing halves the raw 8-bit upload's payload.
+    assert_eq!((res.tx_bytes - TX_HEADER_BYTES) * 2, IMG * IMG);
+    assert!(res.net.as_secs_f64() > 0.0, "uplink must be modeled");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.tx_bytes_total, (TX_HEADER_BYTES + C2 * HW) as u64);
+    cleanup(&dir);
+}
+
+#[test]
+fn cloud_only_loopback_byte_counts_match_protocol_header_math() {
+    let dir = write_artifacts("cloud");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.mode = ServeMode::CloudOnly;
+    let server = Server::start(cfg).expect("start cloud server");
+
+    let res = server.infer(image(2)).expect("loopback infer");
+    assert_eq!(res.logits.len(), CLASSES);
+    // CLOUD-ONLY payload: the raw 8-bit image + one protocol header.
+    assert_eq!(res.tx_bytes, TX_HEADER_BYTES + IMG * IMG);
+    drop(server);
+    cleanup(&dir);
+}
+
+#[test]
+fn split_transmits_less_than_cloud_only_loopback() {
+    let dir = write_artifacts("less");
+    let split = Server::start(ServeConfig::new(&dir)).unwrap();
+    let r_split = split.infer(image(3)).unwrap();
+    drop(split);
+
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.mode = ServeMode::CloudOnly;
+    let cloud = Server::start(cfg).unwrap();
+    let r_cloud = cloud.infer(image(3)).unwrap();
+    drop(cloud);
+
+    assert!(r_split.tx_bytes < r_cloud.tx_bytes);
+    // Header-exact accounting on both sides ⇒ payloads differ by 2×.
+    assert_eq!(
+        (r_cloud.tx_bytes - TX_HEADER_BYTES),
+        2 * (r_split.tx_bytes - TX_HEADER_BYTES)
+    );
+    assert!(r_split.net < r_cloud.net);
+    cleanup(&dir);
+}
+
+#[test]
+fn loopback_is_deterministic_across_servers() {
+    let dir = write_artifacts("det");
+    let img = image(4);
+
+    let a = Server::start(ServeConfig::new(&dir)).unwrap();
+    let ra = a.infer(img.clone()).unwrap();
+    drop(a);
+    let b = Server::start(ServeConfig::new(&dir)).unwrap();
+    let rb = b.infer(img).unwrap();
+    drop(b);
+
+    // Same artifacts + same image ⇒ identical logits (bit-for-bit), class,
+    // and byte accounting: the whole quantize→pack→frame→unpack→matmul
+    // loop is deterministic.
+    assert_eq!(ra.logits, rb.logits);
+    assert_eq!(ra.class, rb.class);
+    assert_eq!(ra.tx_bytes, rb.tx_bytes);
+    cleanup(&dir);
+}
+
+#[test]
+fn loopback_batches_and_counts_every_request() {
+    let dir = write_artifacts("batch");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.max_batch = 4;
+    cfg.max_delay = std::time::Duration::from_millis(20);
+    let server = Server::start(cfg).unwrap();
+
+    let n = 12;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(image(100 + i as u64)).unwrap())
+        .collect();
+    for rx in rxs {
+        let res = rx.recv().unwrap().expect("batched loopback response");
+        assert_eq!(res.logits.len(), CLASSES);
+        assert_eq!(res.tx_bytes, TX_HEADER_BYTES + C2 * HW);
+        assert!(res.batch_size >= 1 && res.batch_size <= 4);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n as u64);
+    assert_eq!(stats.tx_bytes_total, (n * (TX_HEADER_BYTES + C2 * HW)) as u64);
+    cleanup(&dir);
+}
+
+#[test]
+fn loopback_ascii_wire_inflates_but_still_decodes() {
+    let dir = write_artifacts("ascii");
+    let bin = Server::start(ServeConfig::new(&dir)).unwrap();
+    let r_bin = bin.infer(image(5)).unwrap();
+    drop(bin);
+
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.wire = WireFormat::AsciiRpc;
+    let asc = Server::start(cfg).unwrap();
+    let r_asc = asc.infer(image(5)).unwrap();
+    drop(asc);
+
+    // Same decoded result, fatter wire (Table 4's RPC-vs-socket effect).
+    assert_eq!(r_bin.logits, r_asc.logits);
+    assert!(r_asc.tx_bytes > r_bin.tx_bytes);
+    cleanup(&dir);
+}
+
+#[test]
+fn loopback_rejects_malformed_without_poisoning() {
+    let dir = write_artifacts("malformed");
+    let server = Server::start(ServeConfig::new(&dir)).unwrap();
+    assert!(server.infer(vec![0.0; 7]).is_err(), "undersized image must fail");
+    let ok = server.infer(image(6)).unwrap();
+    assert_eq!(ok.logits.len(), CLASSES);
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 1, "failed request must not be counted");
+    cleanup(&dir);
+}
