@@ -1,15 +1,16 @@
 //! END-TO-END DRIVER (the §5.5 license-plate case study, served for real):
 //! loads the AOT artifacts produced by `make artifacts`, runs the full
-//! edge → uplink → batcher → cloud pipeline on the bundled eval set with
-//! several concurrent clients, and reports accuracy + latency/throughput.
+//! edge → uplink → SLO batcher → sharded cloud pool on the bundled eval
+//! set with several concurrent clients, and reports accuracy +
+//! latency/throughput (plus per-shard work counters).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_lpr -- [n_requests]
+//! make artifacts && cargo run --release --example serve_lpr -- [n_requests] [shards]
 //! ```
 //!
 //! This is the workload recorded in EXPERIMENTS.md §E2E.
 
-use auto_split::coordinator::{ServeConfig, ServeMode, Server};
+use auto_split::coordinator::{SchedulerConfig, ServeConfig, ServeMode, Server};
 use auto_split::report::fmt_bytes;
 use auto_split::sim::Uplink;
 use std::path::Path;
@@ -32,10 +33,17 @@ fn load_eval(dir: &Path, img: usize) -> (Vec<Vec<f32>>, Vec<u8>) {
     (images, buf[off..off + n].to_vec())
 }
 
-fn run_mode(dir: &Path, mode: ServeMode, n: usize, clients: usize) -> (f64, f64, f64, usize) {
+fn run_mode(
+    dir: &Path,
+    mode: ServeMode,
+    n: usize,
+    clients: usize,
+    shards: usize,
+) -> (f64, f64, f64, usize) {
     let mut cfg = ServeConfig::new(dir);
     cfg.mode = mode;
     cfg.uplink = Uplink::paper_default(); // 3 Mbps, the paper's Table 1
+    cfg.scheduler = SchedulerConfig::default().with_shards(shards);
     let server = Arc::new(Server::start(cfg).expect("start server"));
     let img = server.meta.img * server.meta.img;
     let (images, labels) = load_eval(dir, img);
@@ -75,15 +83,22 @@ fn run_mode(dir: &Path, mode: ServeMode, n: usize, clients: usize) -> (f64, f64,
 
 fn main() {
     let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(256);
+    let shards: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(2);
     let dir = Path::new("artifacts");
-    println!("serving {n} requests with 4 concurrent clients over a 3 Mbps uplink\n");
+    println!(
+        "serving {n} requests with 4 concurrent clients over a 3 Mbps uplink \
+         ({shards} cloud shards)\n"
+    );
 
-    let (acc_s, p50_s, thr_s, tx_s) = run_mode(dir, ServeMode::Split, n, 4);
+    let (acc_s, p50_s, thr_s, tx_s) = run_mode(dir, ServeMode::Split, n, 4, shards);
     println!();
-    let (acc_c, p50_c, thr_c, tx_c) = run_mode(dir, ServeMode::CloudOnly, n, 4);
+    let (acc_c, p50_c, thr_c, tx_c) = run_mode(dir, ServeMode::CloudOnly, n, 4, shards);
 
     println!("\n=== Table 3 analogue (LPR case study, measured end-to-end) ===");
-    println!("{:<22} {:>9} {:>12} {:>12} {:>10}", "pipeline", "accuracy", "p50 latency", "req/s", "tx/req");
+    println!(
+        "{:<22} {:>9} {:>12} {:>12} {:>10}",
+        "pipeline", "accuracy", "p50 latency", "req/s", "tx/req"
+    );
     println!(
         "{:<22} {:>8.1}% {:>10.1}ms {:>12.1} {:>10}",
         "AUTO-SPLIT (split)",
@@ -101,5 +116,7 @@ fn main() {
         fmt_bytes(tx_c)
     );
     let speedup = p50_c / p50_s;
-    println!("\nsplit speedup over cloud-only: {speedup:.2}× (paper Table 3: 970ms → 630ms = 1.54×)");
+    println!(
+        "\nsplit speedup over cloud-only: {speedup:.2}× (paper Table 3: 970ms → 630ms = 1.54×)"
+    );
 }

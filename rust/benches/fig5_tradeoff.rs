@@ -40,7 +40,13 @@ fn run(model: &str, thresholds: &[f64]) {
             u.split_index.to_string(),
         ]);
     }
-    t.row(&["CLOUD16".into(), "0.0".into(), "100".into(), Placement::CloudOnly.to_string(), "0".into()]);
+    t.row(&[
+        "CLOUD16".into(),
+        "0.0".into(),
+        "100".into(),
+        Placement::CloudOnly.to_string(),
+        "0".into(),
+    ]);
     println!("{}", t.render());
 
     let mut sel = Table::new(

@@ -18,10 +18,26 @@ fn main() {
     let e = AcceleratorConfig::eyeriss();
     let c = AcceleratorConfig::tpu();
     t1.row(&["array".into(), format!("{}x{}", e.rows, e.cols), format!("{}x{}", c.rows, c.cols)]);
-    t1.row(&["on-chip".into(), format!("{} KB", e.on_chip_bytes >> 10), format!("{} MB", c.on_chip_bytes >> 20)]);
-    t1.row(&["off-chip".into(), format!("{} GB", e.off_chip_bytes >> 30), format!("{} GB", c.off_chip_bytes >> 30)]);
-    t1.row(&["bandwidth".into(), format!("{:.0} GB/s", e.dram_bw / 1e9), format!("{:.0} GB/s", c.dram_bw / 1e9)]);
-    t1.row(&["peak".into(), format!("{:.0} GOPs", e.peak_ops() / 1e9), format!("{:.0} TOPs", c.peak_ops() / 1e12)]);
+    t1.row(&[
+        "on-chip".into(),
+        format!("{} KB", e.on_chip_bytes >> 10),
+        format!("{} MB", c.on_chip_bytes >> 20),
+    ]);
+    t1.row(&[
+        "off-chip".into(),
+        format!("{} GB", e.off_chip_bytes >> 30),
+        format!("{} GB", c.off_chip_bytes >> 30),
+    ]);
+    t1.row(&[
+        "bandwidth".into(),
+        format!("{:.0} GB/s", e.dram_bw / 1e9),
+        format!("{:.0} GB/s", c.dram_bw / 1e9),
+    ]);
+    t1.row(&[
+        "peak".into(),
+        format!("{:.0} GOPs", e.peak_ops() / 1e9),
+        format!("{:.0} TOPs", c.peak_ops() / 1e12),
+    ]);
     t1.row(&["uplink".into(), "3 Mbps".into(), "3 Mbps".into()]);
     println!("{}", t1.render());
 

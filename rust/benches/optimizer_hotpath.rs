@@ -30,8 +30,10 @@ fn main() {
         vec!["min-cut (QDMP)".into()],
         vec!["Algorithm 1 (1 thread)".into()],
         vec!["Algorithm 1 (parallel)".into()],
+        vec!["Algorithm 1 (par, no memo)".into()],
     ];
     let mut speedups = vec![];
+    let mut memo_speedups = vec![];
     for name in ["resnet50", "yolov3"] {
         let (raw, _) = zoo::by_name(name).unwrap();
         let mb = ModelBench::new(name);
@@ -83,6 +85,16 @@ fn main() {
         });
         rows[6].push(format!("{:.1}ms", par.mean * 1e3));
         speedups.push((name, seq.mean / par.mean));
+
+        // the same parallel pool with the cross-candidate edge-latency
+        // memo disabled: candidates recompute per-layer latencies (the
+        // pre-memo behaviour) — the row quantifies the memoization win
+        let no_memo_planner = mb.planner(mb.threshold(), 0).with_edge_memo(false);
+        let no_memo = bench(1, 3, || {
+            let _ = std::hint::black_box(no_memo_planner.plan(&mb.opt, &mb.profile, &lm, mb.task));
+        });
+        rows[7].push(format!("{:.1}ms", no_memo.mean * 1e3));
+        memo_speedups.push((name, no_memo.mean / par.mean));
     }
     for r in rows {
         t.row(&r);
@@ -91,6 +103,9 @@ fn main() {
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     for (name, s) in &speedups {
         println!("planner speedup ({name}, {workers} workers): {s:.2}x");
+    }
+    for (name, s) in &memo_speedups {
+        println!("edge-latency memo speedup ({name}): {s:.2}x");
     }
 
     // serving codec hot path

@@ -102,7 +102,8 @@ fn measured_level() {
         &["pipeline", "accuracy", "p50 e2e", "mean net", "tx bytes/req"],
     );
     let n = 96;
-    for (name, mode) in [("AUTO-SPLIT", ServeMode::Split), ("Float (to cloud)", ServeMode::CloudOnly)] {
+    let modes = [("AUTO-SPLIT", ServeMode::Split), ("Float (to cloud)", ServeMode::CloudOnly)];
+    for (name, mode) in modes {
         let mut cfg = ServeConfig::new(dir);
         cfg.mode = mode;
         // the served CNN's tensors are tiny (1 KB image); a BLE-class

@@ -22,7 +22,8 @@ fn main() {
         &["layout", "pack", "unpack", "roundtrip ok"],
     );
     let mut means = vec![];
-    for (name, layout) in [("Channel", PackLayout::Channel), ("Height-Width", PackLayout::HeightWidth)] {
+    let layouts = [("Channel", PackLayout::Channel), ("Height-Width", PackLayout::HeightWidth)];
+    for (name, layout) in layouts {
         let packed = pack(&codes, 4, plane, layout);
         let un = unpack(&packed, 4, codes.len(), plane, layout);
         let ok = un == codes;

@@ -65,7 +65,13 @@ fn main() {
     let sparsity = 0.75;
     let act_elems = sel.tx_bytes * 8 / 4; // tx at ~4 bits
     let codes: Vec<u8> = (0..act_elems)
-        .map(|i| if (i * 2654435761usize) % 100 < (sparsity * 100.0) as usize { 0 } else { (i % 3) as u8 + 1 })
+        .map(|i| {
+            if (i * 2654435761usize) % 100 < (sparsity * 100.0) as usize {
+                0
+            } else {
+                (i % 3) as u8 + 1
+            }
+        })
         .collect();
     let packed = lossless_packed_bytes(&codes, 2);
     let ratio = raw_bytes as f64 / packed as f64;

@@ -1,16 +1,29 @@
-//! Open-loop load generation: Poisson arrivals replayed against the
-//! serving pipeline — the standard methodology for measuring serving
-//! latency *under load* (closed-loop clients, as in `examples/serve_lpr`,
-//! underestimate queueing effects).
+//! Load generation against the serving pipeline.
+//!
+//! Three workload shapes, all deterministic in their seed:
+//!
+//! * **open loop** — Poisson arrivals issued on schedule regardless of
+//!   completions (the standard way to measure latency *under load*;
+//!   closed-loop clients underestimate queueing effects);
+//! * **closed loop** — N clients issuing back-to-back requests (each
+//!   waits for its response before the next), the classic
+//!   think-time-zero saturation workload;
+//! * **mixed** — both at once: a Poisson foreground over a closed-loop
+//!   background, the shape real deployments see (batch traffic under an
+//!   interactive SLO).
+//!
+//! Reports account every request as completed, shed, or errored — under
+//! admission control `completed + shed + errors == offered` always holds.
 
-use super::server::Server;
+use super::server::{Outcome, Server};
 use crate::profile::SplitMix64;
+use crate::report::Table;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// One generated request arrival.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Arrival {
     /// Offset from the start of the run.
     pub at: Duration,
@@ -34,14 +47,19 @@ pub fn poisson_schedule(rate_rps: f64, n: usize, pool: usize, seed: u64) -> Vec<
         .collect()
 }
 
-/// Outcome of an open-loop run.
+/// Outcome of one load run (open or closed loop).
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub offered_rps: f64,
     pub achieved_rps: f64,
+    /// Requests offered to the server.
     pub requests: usize,
+    /// Requests answered with a result.
+    pub completed: usize,
+    /// Requests load-shed by the admission policy.
+    pub shed: usize,
     pub errors: usize,
-    /// End-to-end latency samples (seconds), arrival-to-response.
+    /// End-to-end latency samples (seconds) of completed requests.
     pub latencies: Vec<f64>,
 }
 
@@ -63,38 +81,62 @@ impl LoadReport {
             self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
         }
     }
+
+    /// Fraction of offered requests that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests > 0 {
+            self.shed as f64 / self.requests as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Does `completed + shed + errors` cover every offered request?
+    pub fn fully_accounted(&self) -> bool {
+        self.completed + self.shed + self.errors == self.requests
+    }
+}
+
+/// Tally one terminal response into (latencies, shed, errors).
+fn tally(
+    recv: Result<Result<Outcome>, mpsc::RecvError>,
+    latencies: &mut Vec<f64>,
+    shed: &mut usize,
+    errors: &mut usize,
+) {
+    match recv {
+        Ok(Ok(Outcome::Done(res))) => {
+            // per-request latency as measured by the pipeline
+            // (submit → response wall time + virtually-accounted net);
+            // NOT rx-wait time, which would include the remainder of
+            // the submission schedule for early requests
+            latencies.push(res.e2e.as_secs_f64());
+        }
+        Ok(Ok(Outcome::Shed(_))) => *shed += 1,
+        _ => *errors += 1,
+    }
 }
 
 /// Replay a schedule against a running server (open loop: requests are
 /// issued at their scheduled time regardless of completions).
 pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Result<LoadReport> {
     let start = Instant::now();
-    let mut pending: Vec<(Instant, mpsc::Receiver<Result<super::server::InferenceResult>>)> =
-        Vec::with_capacity(schedule.len());
+    let mut pending = Vec::with_capacity(schedule.len());
+    let mut shed = 0usize;
     let mut errors = 0usize;
     for a in schedule {
         let target = start + a.at;
         if let Some(wait) = target.checked_duration_since(Instant::now()) {
             std::thread::sleep(wait);
         }
-        let issued = Instant::now();
         match server.submit(images[a.image % images.len()].clone()) {
-            Ok(rx) => pending.push((issued, rx)),
+            Ok(rx) => pending.push(rx),
             Err(_) => errors += 1,
         }
     }
     let mut latencies = Vec::with_capacity(pending.len());
-    for (_issued, rx) in pending {
-        match rx.recv() {
-            Ok(Ok(res)) => {
-                // per-request latency as measured by the pipeline
-                // (submit → response wall time + virtually-accounted net);
-                // NOT rx-wait time, which would include the remainder of
-                // the submission schedule for early requests
-                latencies.push(res.e2e.as_secs_f64());
-            }
-            _ => errors += 1,
-        }
+    for rx in pending {
+        tally(rx.recv(), &mut latencies, &mut shed, &mut errors);
     }
     let wall = start.elapsed().as_secs_f64();
     let n = schedule.len();
@@ -102,9 +144,185 @@ pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Res
         offered_rps: n as f64 / schedule.last().map(|a| a.at.as_secs_f64()).unwrap_or(1.0),
         achieved_rps: latencies.len() as f64 / wall,
         requests: n,
+        completed: latencies.len(),
+        shed,
         errors,
         latencies,
     })
+}
+
+/// Closed-loop run: `clients` threads each issue `per_client` back-to-back
+/// requests (waiting for every response before the next submission).
+/// Image picks are deterministic: client `c`, request `i` uses image
+/// `(c * per_client + i) % images.len()`.
+pub fn closed_loop(
+    server: &Server,
+    images: &[Vec<f32>],
+    clients: usize,
+    per_client: usize,
+) -> Result<LoadReport> {
+    anyhow::ensure!(!images.is_empty(), "empty image pool");
+    let start = Instant::now();
+    let mut lat_all = Vec::new();
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(clients);
+        for c in 0..clients {
+            joins.push(scope.spawn(move || {
+                let mut latencies = Vec::with_capacity(per_client);
+                let mut shed = 0usize;
+                let mut errors = 0usize;
+                for i in 0..per_client {
+                    let img = images[(c * per_client + i) % images.len()].clone();
+                    match server.submit(img) {
+                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut shed, &mut errors),
+                        Err(_) => errors += 1,
+                    }
+                }
+                (latencies, shed, errors)
+            }));
+        }
+        for j in joins {
+            let (l, s, e) = j.join().expect("closed-loop client panicked");
+            lat_all.extend(l);
+            shed += s;
+            errors += e;
+        }
+    });
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let n = clients * per_client;
+    Ok(LoadReport {
+        offered_rps: n as f64 / wall, // closed loop: offered == issued
+        achieved_rps: lat_all.len() as f64 / wall,
+        requests: n,
+        completed: lat_all.len(),
+        shed,
+        errors,
+        latencies: lat_all,
+    })
+}
+
+/// A deterministic mixed open/closed workload description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MixedWorkload {
+    /// Poisson foreground schedule.
+    pub open: Vec<Arrival>,
+    pub closed_clients: usize,
+    pub closed_per_client: usize,
+    /// Pre-drawn image indices for every closed-loop request, in
+    /// (client-major, request-minor) order — part of the seed contract.
+    pub closed_images: Vec<usize>,
+}
+
+/// Build a mixed workload: `n_open` Poisson arrivals at `rate_rps` plus
+/// `clients × per_client` closed-loop requests, all image picks drawn
+/// from one seeded stream. Bit-stable in `seed`.
+pub fn mixed_workload(
+    rate_rps: f64,
+    n_open: usize,
+    clients: usize,
+    per_client: usize,
+    pool: usize,
+    seed: u64,
+) -> MixedWorkload {
+    assert!(pool > 0);
+    let open = poisson_schedule(rate_rps, n_open, pool, seed);
+    // an independent deterministic stream for the closed-loop picks
+    let mut rng = SplitMix64::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let closed_images =
+        (0..clients * per_client).map(|_| rng.next_u64() as usize % pool).collect();
+    MixedWorkload { open, closed_clients: clients, closed_per_client: per_client, closed_images }
+}
+
+/// Reports for the two halves of a mixed run.
+#[derive(Debug, Clone)]
+pub struct MixedReport {
+    pub open: LoadReport,
+    pub closed: LoadReport,
+}
+
+impl MixedReport {
+    pub fn total_offered(&self) -> usize {
+        self.open.requests + self.closed.requests
+    }
+
+    pub fn total_shed(&self) -> usize {
+        self.open.shed + self.closed.shed
+    }
+}
+
+/// Run a mixed workload: the closed-loop background runs on worker
+/// threads while the open-loop schedule replays on the calling thread.
+pub fn run_mixed(server: &Server, images: &[Vec<f32>], wl: &MixedWorkload) -> Result<MixedReport> {
+    anyhow::ensure!(!images.is_empty(), "empty image pool");
+    let start = Instant::now();
+    let mut closed_parts: Vec<(Vec<f64>, usize, usize)> = Vec::new();
+    let mut open_report: Option<Result<LoadReport>> = None;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(wl.closed_clients);
+        for c in 0..wl.closed_clients {
+            let picks = &wl.closed_images;
+            joins.push(scope.spawn(move || {
+                let mut latencies = Vec::with_capacity(wl.closed_per_client);
+                let mut shed = 0usize;
+                let mut errors = 0usize;
+                for i in 0..wl.closed_per_client {
+                    let pick = picks[c * wl.closed_per_client + i] % images.len();
+                    match server.submit(images[pick].clone()) {
+                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut shed, &mut errors),
+                        Err(_) => errors += 1,
+                    }
+                }
+                (latencies, shed, errors)
+            }));
+        }
+        open_report = Some(replay(server, images, &wl.open));
+        for j in joins {
+            closed_parts.push(j.join().expect("mixed closed client panicked"));
+        }
+    });
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let mut lat_all = Vec::new();
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    for (l, s, e) in closed_parts {
+        lat_all.extend(l);
+        shed += s;
+        errors += e;
+    }
+    let n = wl.closed_clients * wl.closed_per_client;
+    let closed = LoadReport {
+        offered_rps: n as f64 / wall,
+        achieved_rps: lat_all.len() as f64 / wall,
+        requests: n,
+        completed: lat_all.len(),
+        shed,
+        errors,
+        latencies: lat_all,
+    };
+    Ok(MixedReport { open: open_report.expect("open replay ran")?, closed })
+}
+
+/// Render a per-policy (or per-configuration) comparison table from named
+/// load reports — the standard artifact of an admission/routing sweep.
+pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
+    let mut t = Table::new(
+        title,
+        &["policy", "offered rps", "achieved rps", "p50 ms", "p99 ms", "shed", "errors"],
+    );
+    for (name, r) in rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.0}", r.offered_rps),
+            format!("{:.0}", r.achieved_rps),
+            format!("{:.2}", r.quantile(0.5) * 1e3),
+            format!("{:.2}", r.quantile(0.99) * 1e3),
+            format!("{} ({:.0}%)", r.shed, 100.0 * r.shed_rate()),
+            r.errors.to_string(),
+        ]);
+    }
+    t.render()
 }
 
 #[cfg(test)]
@@ -147,11 +365,65 @@ mod tests {
             offered_rps: 10.0,
             achieved_rps: 10.0,
             requests: 4,
+            completed: 4,
+            shed: 0,
             errors: 0,
             latencies: vec![0.004, 0.001, 0.003, 0.002],
         };
         assert_eq!(r.quantile(0.5), 0.002);
         assert_eq!(r.quantile(1.0), 0.004);
         assert!((r.mean() - 0.0025).abs() < 1e-12);
+        assert!(r.fully_accounted());
+        assert_eq!(r.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn accounting_detects_losses() {
+        let r = LoadReport {
+            offered_rps: 1.0,
+            achieved_rps: 1.0,
+            requests: 10,
+            completed: 6,
+            shed: 3,
+            errors: 0,
+            latencies: vec![0.001; 6],
+        };
+        assert!(!r.fully_accounted(), "6 + 3 != 10");
+        assert!((r.shed_rate() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_workload_bit_stable_in_seed() {
+        let a = mixed_workload(120.0, 40, 3, 5, 8, 77);
+        let b = mixed_workload(120.0, 40, 3, 5, 8, 77);
+        assert_eq!(a, b, "same seed ⇒ identical workload");
+        assert_eq!(a.closed_images.len(), 15);
+        assert!(a.closed_images.iter().all(|&i| i < 8));
+        let c = mixed_workload(120.0, 40, 3, 5, 8, 78);
+        assert_ne!(a, c, "different seed ⇒ different workload");
+    }
+
+    #[test]
+    fn mixed_workload_streams_are_independent() {
+        // the closed-loop picks must not perturb the open-loop schedule
+        let open_only = poisson_schedule(120.0, 40, 8, 77);
+        let mixed = mixed_workload(120.0, 40, 3, 5, 8, 77);
+        assert_eq!(mixed.open, open_only);
+    }
+
+    #[test]
+    fn policy_table_renders_all_rows() {
+        let r = LoadReport {
+            offered_rps: 100.0,
+            achieved_rps: 90.0,
+            requests: 100,
+            completed: 90,
+            shed: 10,
+            errors: 0,
+            latencies: vec![0.002; 90],
+        };
+        let s = policy_table("sweep", &[("block".into(), r.clone()), ("shed".into(), r)]);
+        assert!(s.contains("block") && s.contains("shed"), "{s}");
+        assert!(s.contains("10 (10%)"), "{s}");
     }
 }

@@ -72,13 +72,37 @@ pub struct ServingStats {
     pub net: LatencyHistogram,
     pub cloud: LatencyHistogram,
     pub queue: LatencyHistogram,
+    /// Requests served end-to-end (completed).
     pub requests: u64,
     pub batches: u64,
     pub wall_s: f64,
     pub tx_bytes_total: u64,
+    /// Requests offered to admission control (completed + shed + failed).
+    pub offered: u64,
+    /// Requests refused by the admission policy (never computed).
+    pub shed: u64,
+    /// Batches closed early by the SLO drain rule (deadline-bound).
+    pub batch_slo_closes: u64,
+    /// Admission-queue depth at snapshot time.
+    pub queue_depth: u64,
+    /// Admission-queue high-water mark.
+    pub queue_peak: u64,
+    /// Per-shard executed batch counts (index = shard id).
+    pub shard_batches: Vec<u64>,
+    /// Per-shard served request counts (index = shard id).
+    pub shard_requests: Vec<u64>,
 }
 
 impl ServingStats {
+    /// Stats sized for an `n`-shard cloud pool.
+    pub fn with_shards(n: usize) -> Self {
+        ServingStats {
+            shard_batches: vec![0; n.max(1)],
+            shard_requests: vec![0; n.max(1)],
+            ..ServingStats::default()
+        }
+    }
+
     pub fn throughput(&self) -> f64 {
         if self.wall_s > 0.0 {
             self.requests as f64 / self.wall_s
@@ -95,13 +119,34 @@ impl ServingStats {
         }
     }
 
+    /// Fraction of offered requests that were load-shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered > 0 {
+            self.shed as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
+        let shards = self
+            .shard_batches
+            .iter()
+            .zip(&self.shard_requests)
+            .enumerate()
+            .map(|(i, (b, r))| format!("s{i}:{b}b/{r}r"))
+            .collect::<Vec<_>>()
+            .join(" ");
         format!(
-            "requests={} batches={} (mean batch {:.2})  throughput={:.1} req/s\n\
+            "requests={} shed={} offered={} batches={} (mean batch {:.2})  \
+             throughput={:.1} req/s\n\
              e2e    p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              edge   mean={:.3}ms  net mean={:.3}ms  cloud mean={:.3}ms  queue mean={:.3}ms\n\
+             queue  depth={} peak={}  slo_closes={}  shards: [{}]\n\
              tx_total={} bytes",
             self.requests,
+            self.shed,
+            self.offered,
             self.batches,
             self.mean_batch(),
             self.throughput(),
@@ -113,6 +158,10 @@ impl ServingStats {
             self.net.mean() * 1e3,
             self.cloud.mean() * 1e3,
             self.queue.mean() * 1e3,
+            self.queue_depth,
+            self.queue_peak,
+            self.batch_slo_closes,
+            shards,
             self.tx_bytes_total,
         )
     }
@@ -161,5 +210,32 @@ mod tests {
         assert_eq!(s.throughput(), 50.0);
         assert_eq!(s.mean_batch(), 4.0);
         assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn shed_rate_accounting() {
+        let mut s = ServingStats::with_shards(2);
+        assert_eq!(s.shard_batches.len(), 2);
+        assert_eq!(s.shed_rate(), 0.0, "no offered load → rate 0");
+        s.offered = 10;
+        s.shed = 4;
+        s.requests = 6;
+        assert!((s.shed_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(s.requests + s.shed, s.offered, "every request accounted");
+    }
+
+    #[test]
+    fn report_includes_scheduler_counters() {
+        let mut s = ServingStats::with_shards(2);
+        s.offered = 5;
+        s.shed = 2;
+        s.requests = 3;
+        s.shard_batches = vec![2, 1];
+        s.shard_requests = vec![2, 1];
+        s.queue_peak = 7;
+        let r = s.report();
+        assert!(r.contains("shed=2"), "{r}");
+        assert!(r.contains("peak=7"), "{r}");
+        assert!(r.contains("s0:2b/2r"), "{r}");
     }
 }

@@ -1,16 +1,23 @@
 //! The serving coordinator (request path, all Rust):
 //!
 //! ```text
-//! client → Server → edge worker (PJRT edge.hlo: quantized convs + pack)
+//! client → Server → admission queue (bounded: Block/ShedNewest/ShedOldest)
+//!                     │
+//!                     ▼
+//!                  edge worker (PJRT edge.hlo: quantized convs + pack)
 //!                     │ ActivationPacket (protocol.rs, Table 5 framing)
 //!                     ▼
 //!                  Link (simulated uplink: bytes/bw + RTT; binary/ASCII)
 //!                     ▼
-//!                  batcher → cloud worker (PJRT cloud_b{N}.hlo) → response
+//!                  SLO-aware batcher → router → cloud shard 0..N−1
+//!                  (scheduler.rs)              (PJRT cloud_b{N}.hlo)
+//!                                                  │
+//!                                                  ▼ response
 //! ```
 //!
 //! Python never runs here: both partitions are AOT artifacts produced by
-//! `make artifacts`.
+//! `make artifacts`. The scheduling layer (admission control, deadline-
+//! aware batching, shard routing) lives in [`scheduler`].
 
 pub mod cloud;
 pub mod edge;
@@ -18,12 +25,24 @@ pub mod link;
 pub mod loadgen;
 pub mod metrics;
 pub mod protocol;
+pub mod scheduler;
 pub mod server;
+pub mod testkit;
 
 pub use cloud::CloudWorker;
 pub use edge::{EdgeSpec, EdgeWorker};
 pub use link::{DelayMode, Link, Transfer, WireFormat};
-pub use loadgen::{poisson_schedule, replay, Arrival, LoadReport};
+pub use loadgen::{
+    closed_loop, mixed_workload, poisson_schedule, policy_table, replay, run_mixed, Arrival,
+    LoadReport, MixedReport, MixedWorkload,
+};
 pub use metrics::{LatencyHistogram, ServingStats};
 pub use protocol::{ActivationPacket, TX_HEADER_BYTES};
-pub use server::{ArtifactMeta, InferenceResult, ServeConfig, ServeMode, Server};
+pub use scheduler::{
+    AdmissionPolicy, AdmissionQueue, BatchCost, CostPrior, RoutePolicy, SchedulerConfig,
+};
+pub use server::{
+    ArtifactMeta, InferenceResult, Outcome, ResponseReceiver, ServeConfig, ServeMode, Server,
+    ShedInfo,
+};
+pub use testkit::{load_eval_images, reference_image, write_reference_artifacts, RefArtifactSpec};

@@ -1,0 +1,279 @@
+//! Bounded admission queue with configurable overload policy.
+//!
+//! This is the single point where the serving pipeline says *no*: every
+//! client request passes through one [`AdmissionQueue`] before any edge
+//! compute happens. The queue has a hard capacity; what happens at the
+//! capacity wall is the admission policy:
+//!
+//! * [`AdmissionPolicy::Block`] — the producer waits for space (classic
+//!   backpressure; closed-loop clients slow down, open-loop generators
+//!   fall behind their schedule).
+//! * [`AdmissionPolicy::ShedNewest`] — the incoming request is refused
+//!   immediately (the cheapest possible rejection: no queue mutation).
+//! * [`AdmissionPolicy::ShedOldest`] — the oldest queued request is
+//!   evicted to make room (its deadline is the most hopeless one under
+//!   overload, so evicting it maximizes the value of the work we keep).
+//!
+//! The queue is deliberately generic over the item type so the policy
+//! machinery is unit-testable without spinning up the serving pipeline.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// What to do when a request arrives and the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the submitter until space frees up (backpressure).
+    Block,
+    /// Refuse the incoming request (tail-drop).
+    ShedNewest,
+    /// Evict the oldest queued request to admit the new one (head-drop).
+    ShedOldest,
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionPolicy::Block => write!(f, "block"),
+            AdmissionPolicy::ShedNewest => write!(f, "shed-newest"),
+            AdmissionPolicy::ShedOldest => write!(f, "shed-oldest"),
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "block" => Ok(AdmissionPolicy::Block),
+            "shed-newest" | "shed-new" => Ok(AdmissionPolicy::ShedNewest),
+            "shed-oldest" | "shed-old" => Ok(AdmissionPolicy::ShedOldest),
+            other => {
+                Err(format!("unknown admission policy {other:?} (block|shed-newest|shed-oldest)"))
+            }
+        }
+    }
+}
+
+/// Outcome of offering one item to the queue.
+#[derive(Debug)]
+pub enum Admit<T> {
+    /// The item was enqueued.
+    Enqueued,
+    /// The queue was full under `ShedNewest`: the offered item was refused
+    /// (the caller still owns it and must answer it as shed).
+    RefusedNewest(T),
+    /// The queue was full under `ShedOldest`: the offered item was
+    /// enqueued and the returned oldest item was evicted (the caller must
+    /// answer the evicted item as shed).
+    EvictedOldest(T),
+    /// The queue is closed: the offered item is handed back.
+    Closed(T),
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    /// High-water mark of the queue depth, for `ServingStats::queue_peak`.
+    peak: usize,
+}
+
+/// A bounded MPSC queue with an overload policy (see module docs).
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    /// Signalled when space frees up (for `Block` producers).
+    space: Condvar,
+    /// Signalled when an item arrives (for the consumer).
+    items: Condvar,
+    cap: usize,
+    policy: AdmissionPolicy,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize, policy: AdmissionPolicy) -> Self {
+        AdmissionQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false, peak: 0 }),
+            space: Condvar::new(),
+            items: Condvar::new(),
+            cap: cap.max(1),
+            policy,
+        }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The configured overload policy.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Offer one item; the return value says who (if anyone) was shed.
+    pub fn push(&self, item: T) -> Admit<T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Admit::Closed(item);
+        }
+        if st.q.len() >= self.cap {
+            match self.policy {
+                AdmissionPolicy::Block => {
+                    while st.q.len() >= self.cap && !st.closed {
+                        st = self.space.wait(st).unwrap();
+                    }
+                    if st.closed {
+                        return Admit::Closed(item);
+                    }
+                }
+                AdmissionPolicy::ShedNewest => return Admit::RefusedNewest(item),
+                AdmissionPolicy::ShedOldest => {
+                    let oldest = st.q.pop_front().expect("cap >= 1 and queue full");
+                    st.q.push_back(item);
+                    // depth unchanged: one in, one out
+                    self.items.notify_one();
+                    return Admit::EvictedOldest(oldest);
+                }
+            }
+        }
+        st.q.push_back(item);
+        st.peak = st.peak.max(st.q.len());
+        self.items.notify_one();
+        Admit::Enqueued
+    }
+
+    /// Blocking pop; returns `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                self.space.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.items.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers are refused, the consumer drains the
+    /// remainder and then sees `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.items.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Current depth.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    /// High-water mark of the depth since construction.
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_peak() {
+        let q = AdmissionQueue::new(8, AdmissionPolicy::Block);
+        for i in 0..5 {
+            assert!(matches!(q.push(i), Admit::Enqueued));
+        }
+        assert_eq!(q.depth(), 5);
+        assert_eq!(q.peak(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.peak(), 5, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn shed_newest_refuses_incoming_at_capacity() {
+        let q = AdmissionQueue::new(2, AdmissionPolicy::ShedNewest);
+        assert!(matches!(q.push(1), Admit::Enqueued));
+        assert!(matches!(q.push(2), Admit::Enqueued));
+        match q.push(3) {
+            Admit::RefusedNewest(v) => assert_eq!(v, 3),
+            other => panic!("expected RefusedNewest, got {other:?}"),
+        }
+        // queued items are untouched and depth never exceeded the cap
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.peak(), 2);
+    }
+
+    #[test]
+    fn shed_oldest_evicts_head_at_capacity() {
+        let q = AdmissionQueue::new(2, AdmissionPolicy::ShedOldest);
+        q.push(1);
+        q.push(2);
+        match q.push(3) {
+            Admit::EvictedOldest(v) => assert_eq!(v, 1),
+            other => panic!("expected EvictedOldest, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.peak(), 2, "depth never exceeds the cap");
+    }
+
+    #[test]
+    fn block_policy_waits_for_space() {
+        let q = Arc::new(AdmissionQueue::new(1, AdmissionPolicy::Block));
+        q.push(10);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            // blocks until the consumer pops
+            assert!(matches!(q2.push(20), Admit::Enqueued));
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.depth(), 1, "producer must still be blocked");
+        assert_eq!(q.pop(), Some(10));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(20));
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = AdmissionQueue::new(4, AdmissionPolicy::Block);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert!(matches!(q.push(3), Admit::Closed(3)));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_unblocks_waiting_producer() {
+        let q = Arc::new(AdmissionQueue::new(1, AdmissionPolicy::Block));
+        q.push(1);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || matches!(q2.push(2), Admit::Closed(2)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(producer.join().unwrap(), "blocked producer must see Closed");
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        use AdmissionPolicy::{Block, ShedNewest, ShedOldest};
+        for p in [Block, ShedNewest, ShedOldest] {
+            let s = p.to_string();
+            assert_eq!(s.parse::<AdmissionPolicy>().unwrap(), p);
+        }
+        assert!("bogus".parse::<AdmissionPolicy>().is_err());
+    }
+}

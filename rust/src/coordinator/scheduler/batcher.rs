@@ -1,0 +1,220 @@
+//! SLO-aware dynamic batching: when to stop waiting and run.
+//!
+//! The classic batcher closes a batch on two triggers: the batch is full
+//! (`max_batch`) or the batching window expired (`max_delay`). Both are
+//! blind to *deadlines*: under a latency SLO, waiting out the full window
+//! is wrong whenever the oldest queued request no longer has window +
+//! execution time left in its budget.
+//!
+//! The deadline-aware rule implemented here closes the batch as soon as
+//!
+//! ```text
+//!   remaining_budget(oldest) < predicted_exec(batch_size)  + more waiting
+//! ```
+//!
+//! i.e. the drain deadline for a batch whose oldest member was submitted
+//! at `t0` under SLO budget `B` is `t0 + B − predicted_exec(b)`, clamped
+//! into the fixed window `[open, open + max_delay]`. The execution-time
+//! predictor starts from the analytic `sim::latency` model (the same
+//! `L^cloud` the planner optimizes against) and is refined online with an
+//! EWMA of measured shard execution times per compiled batch size.
+
+use crate::sim::LatencyModel;
+use crate::Graph;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Analytic prior for batch execution time: `base + per_item · b` seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostPrior {
+    pub base_s: f64,
+    pub per_item_s: f64,
+}
+
+impl CostPrior {
+    /// A conservative serving-path default (sub-millisecond engines).
+    pub fn serving_default() -> Self {
+        CostPrior { base_s: 200e-6, per_item_s: 150e-6 }
+    }
+
+    /// Derive the prior from the analytic latency model: `per_item` is the
+    /// cloud-side latency of the layers at and after `from_pos` in
+    /// topological order (the cloud partition the planner assigned),
+    /// `base` one dispatch round-trip. This is the same `L^cloud` term the
+    /// optimizer minimizes, reused as the serving-time predictor.
+    pub fn from_latency_model(lm: &LatencyModel, g: &Graph, from_pos: usize) -> Self {
+        let order = g.topo_order();
+        let start = from_pos.min(order.len());
+        let per_item: f64 = order[start..].iter().map(|&id| lm.cloud_layer(g, id)).sum();
+        CostPrior { base_s: crate::sim::CLOUD_DISPATCH_S, per_item_s: per_item.max(1e-9) }
+    }
+
+    pub fn predict(&self, batch: usize) -> f64 {
+        self.base_s + self.per_item_s * batch as f64
+    }
+}
+
+/// Shared execution-time predictor: analytic prior + per-engine-batch-size
+/// EWMA of measured execution times (fed back by the shard threads).
+pub struct BatchCost {
+    prior: CostPrior,
+    ewma: Mutex<BTreeMap<usize, f64>>,
+}
+
+const EWMA_ALPHA: f64 = 0.2;
+
+impl BatchCost {
+    pub fn new(prior: CostPrior) -> Self {
+        BatchCost { prior, ewma: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record one measured execution of the `engine_batch`-sized engine.
+    pub fn observe(&self, engine_batch: usize, secs: f64) {
+        let mut m = self.ewma.lock().unwrap();
+        let e = m.entry(engine_batch).or_insert(secs);
+        *e = (1.0 - EWMA_ALPHA) * *e + EWMA_ALPHA * secs;
+    }
+
+    /// Predicted execution seconds for a batch padded to `engine_batch`.
+    pub fn predict(&self, engine_batch: usize) -> f64 {
+        let m = self.ewma.lock().unwrap();
+        match m.get(&engine_batch) {
+            Some(&s) => s,
+            None => self.prior.predict(engine_batch),
+        }
+    }
+}
+
+/// Why a batch was closed (surfaced in `ServingStats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainCause {
+    /// The batch reached `max_batch` (or the largest compiled engine).
+    Full,
+    /// The fixed `max_delay` batching window expired.
+    Window,
+    /// The SLO rule fired: the oldest request's remaining budget dropped
+    /// below the predicted execution time, so waiting longer would breach.
+    SloBudget,
+    /// The upstream queue disconnected (shutdown drain).
+    Disconnected,
+}
+
+/// Deadline for draining a batch whose window opened at `open`, given the
+/// submission time of its oldest member and the predicted execution time
+/// for the *next possible* engine size. Returns the instant at which the
+/// batch must close, and whether the SLO term (rather than the fixed
+/// window) is the binding constraint.
+pub fn drain_deadline(
+    open: Instant,
+    max_delay: Duration,
+    slo: Option<Duration>,
+    oldest_submitted: Instant,
+    predicted_exec: Duration,
+) -> (Instant, bool) {
+    let window = open + max_delay;
+    match slo {
+        None => (window, false),
+        Some(budget) => {
+            // close early enough that `exec` still fits in the budget;
+            // saturates to "close now" when the budget is already blown
+            let slo_deadline = (oldest_submitted + budget)
+                .checked_sub(predicted_exec)
+                .unwrap_or(oldest_submitted);
+            if slo_deadline < window {
+                (slo_deadline, true)
+            } else {
+                (window, false)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_is_affine_in_batch() {
+        let p = CostPrior { base_s: 1e-3, per_item_s: 2e-3 };
+        assert!((p.predict(1) - 3e-3).abs() < 1e-12);
+        assert!((p.predict(4) - 9e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prior_from_latency_model_matches_cloud_suffix() {
+        let (g, _) = crate::zoo::by_name("lpr_edge_cnn").unwrap();
+        let lm = LatencyModel::paper_default();
+        let whole = CostPrior::from_latency_model(&lm, &g, 0);
+        let suffix = CostPrior::from_latency_model(&lm, &g, g.len() / 2);
+        assert!(whole.per_item_s >= suffix.per_item_s, "suffix is a subset of the layers");
+        assert!(suffix.per_item_s > 0.0);
+        // pos 0 sums every layer = the model's cloud_all
+        assert!((whole.per_item_s - lm.cloud_all(&g)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_overrides_prior_and_converges() {
+        let c = BatchCost::new(CostPrior { base_s: 1.0, per_item_s: 1.0 });
+        assert!((c.predict(4) - 5.0).abs() < 1e-12, "no observations → prior");
+        c.observe(4, 0.010);
+        assert!((c.predict(4) - 0.010).abs() < 1e-12, "first observation seeds the EWMA");
+        for _ in 0..64 {
+            c.observe(4, 0.020);
+        }
+        assert!((c.predict(4) - 0.020).abs() < 1e-3, "EWMA converges to the measured cost");
+        // other engine sizes still fall back to the prior
+        assert!((c.predict(8) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_slo_means_fixed_window() {
+        let open = Instant::now();
+        let (d, slo_bound) =
+            drain_deadline(open, Duration::from_millis(2), None, open, Duration::from_millis(1));
+        assert_eq!(d, open + Duration::from_millis(2));
+        assert!(!slo_bound);
+    }
+
+    #[test]
+    fn tight_budget_closes_before_window() {
+        let open = Instant::now();
+        let oldest = open; // submitted right at window open
+        let window = Duration::from_millis(10); // generous window
+        let slo = Some(Duration::from_millis(3)); // tight SLO
+        let exec = Duration::from_millis(2); // predicted exec
+        let (d, slo_bound) = drain_deadline(open, window, slo, oldest, exec);
+        // must close by oldest + (3ms − 2ms) = open + 1ms < open + 10ms
+        assert_eq!(d, open + Duration::from_millis(1));
+        assert!(slo_bound);
+    }
+
+    #[test]
+    fn blown_budget_closes_immediately() {
+        let t0 = Instant::now();
+        let open = t0 + Duration::from_millis(50); // oldest waited 50ms already
+        let (d, slo_bound) = drain_deadline(
+            open,
+            Duration::from_millis(10),
+            Some(Duration::from_millis(20)), // budget long gone
+            t0,
+            Duration::from_millis(30),
+        );
+        assert!(d <= open, "deadline in the past → drain immediately");
+        assert!(slo_bound);
+    }
+
+    #[test]
+    fn loose_budget_leaves_window_binding() {
+        let open = Instant::now();
+        let (d, slo_bound) = drain_deadline(
+            open,
+            Duration::from_millis(2),
+            Some(Duration::from_secs(10)), // SLO far away
+            open,
+            Duration::from_millis(1),
+        );
+        assert_eq!(d, open + Duration::from_millis(2));
+        assert!(!slo_bound);
+    }
+}

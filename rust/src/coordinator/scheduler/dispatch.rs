@@ -1,0 +1,204 @@
+//! Shard routing: which cloud worker gets the next drained batch.
+//!
+//! The dispatcher closes a batch (see [`super::batcher`]) and then asks a
+//! [`Router`] for a shard index. Three policies:
+//!
+//! * `RoundRobin` — cycle through shards; maximal fairness, no state.
+//! * `LeastOutstanding` — pick the shard with the fewest in-flight
+//!   requests (join-the-shortest-queue, the classic tail-latency win when
+//!   batch costs are uneven).
+//! * `BatchAffinity` — route by the *padded engine batch size*, so a
+//!   shard keeps re-running the same compiled executable (hot engine:
+//!   warm code/weight caches, no engine switch). Ties between more
+//!   engine sizes than shards wrap around.
+//!
+//! Outstanding counts are shared with the shard threads through atomics:
+//! the dispatcher increments on dispatch, the shard decrements per
+//! completed request.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Batch → shard routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstanding,
+    BatchAffinity,
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoutePolicy::RoundRobin => write!(f, "round-robin"),
+            RoutePolicy::LeastOutstanding => write!(f, "least-outstanding"),
+            RoutePolicy::BatchAffinity => write!(f, "batch-affinity"),
+        }
+    }
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "least" | "least-outstanding" => Ok(RoutePolicy::LeastOutstanding),
+            "affinity" | "batch-affinity" => Ok(RoutePolicy::BatchAffinity),
+            other => Err(format!("unknown route policy {other:?} (rr|least|affinity)")),
+        }
+    }
+}
+
+/// Per-shard in-flight request counters, shared dispatcher ↔ shards.
+#[derive(Clone)]
+pub struct Outstanding(Arc<Vec<AtomicUsize>>);
+
+impl Outstanding {
+    pub fn new(shards: usize) -> Self {
+        Outstanding(Arc::new((0..shards.max(1)).map(|_| AtomicUsize::new(0)).collect()))
+    }
+
+    pub fn add(&self, shard: usize, n: usize) {
+        self.0[shard].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, shard: usize, n: usize) {
+        self.0[shard].fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, shard: usize) -> usize {
+        self.0[shard].load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Stateful batch → shard router (owned by the dispatcher thread).
+pub struct Router {
+    policy: RoutePolicy,
+    shards: usize,
+    rr_next: usize,
+    outstanding: Outstanding,
+    /// Compiled engine batch sizes, ascending (for `BatchAffinity`).
+    engine_batches: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(
+        policy: RoutePolicy,
+        shards: usize,
+        outstanding: Outstanding,
+        engine_batches: Vec<usize>,
+    ) -> Self {
+        Router { policy, shards: shards.max(1), rr_next: 0, outstanding, engine_batches }
+    }
+
+    /// Pick the shard for a batch that will run on the `engine_batch`-sized
+    /// executable. Deterministic given the policy state.
+    pub fn pick(&mut self, engine_batch: usize) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let s = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.shards;
+                s
+            }
+            RoutePolicy::LeastOutstanding => {
+                // argmin over in-flight counts; ties break to the lowest
+                // index so the choice is deterministic
+                let mut best = 0usize;
+                let mut best_n = usize::MAX;
+                for s in 0..self.shards {
+                    let n = self.outstanding.get(s);
+                    if n < best_n {
+                        best_n = n;
+                        best = s;
+                    }
+                }
+                best
+            }
+            RoutePolicy::BatchAffinity => {
+                // bucket = rank of the engine size among the compiled
+                // sizes; same engine size → same shard → hot engine
+                let bucket = self
+                    .engine_batches
+                    .iter()
+                    .position(|&b| b == engine_batch)
+                    .unwrap_or(engine_batch);
+                bucket % self.shards
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3, Outstanding::new(3), vec![1, 4, 8]);
+        let picks: Vec<usize> = (0..7).map(|_| r.pick(4)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_shard() {
+        let out = Outstanding::new(3);
+        out.add(0, 5);
+        out.add(1, 2);
+        out.add(2, 7);
+        let mut r = Router::new(RoutePolicy::LeastOutstanding, 3, out.clone(), vec![1]);
+        assert_eq!(r.pick(1), 1);
+        out.sub(2, 7);
+        assert_eq!(r.pick(1), 2);
+    }
+
+    #[test]
+    fn least_outstanding_ties_break_low() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding, 4, Outstanding::new(4), vec![1]);
+        assert_eq!(r.pick(1), 0);
+    }
+
+    #[test]
+    fn affinity_pins_engine_size_to_shard() {
+        let mut r = Router::new(RoutePolicy::BatchAffinity, 2, Outstanding::new(2), vec![1, 4, 8]);
+        let s1 = r.pick(1);
+        let s4 = r.pick(4);
+        let s8 = r.pick(8);
+        // stable across repeated batches
+        assert_eq!(r.pick(1), s1);
+        assert_eq!(r.pick(4), s4);
+        assert_eq!(r.pick(8), s8);
+        // consecutive engine sizes land on different shards (1→0, 4→1, 8→0)
+        assert_eq!(s1, 0);
+        assert_eq!(s4, 1);
+        assert_eq!(s8, 0);
+    }
+
+    #[test]
+    fn outstanding_counts_track() {
+        let out = Outstanding::new(2);
+        out.add(1, 4);
+        assert_eq!(out.get(1), 4);
+        out.sub(1, 3);
+        assert_eq!(out.get(1), 1);
+        assert_eq!(out.get(0), 0);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn route_parse_roundtrip() {
+        use RoutePolicy::{BatchAffinity, LeastOutstanding, RoundRobin};
+        for p in [RoundRobin, LeastOutstanding, BatchAffinity] {
+            assert_eq!(p.to_string().parse::<RoutePolicy>().unwrap(), p);
+        }
+        assert!("nope".parse::<RoutePolicy>().is_err());
+    }
+}

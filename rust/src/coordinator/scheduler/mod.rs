@@ -1,0 +1,135 @@
+//! The serving scheduler: admission control, SLO-aware batching, and
+//! sharded dispatch.
+//!
+//! ```text
+//!            ┌──────────────────────────────────────────────────────┐
+//!            │                    Server                            │
+//! client ──▶ │ AdmissionQueue (bounded; Block/ShedNewest/ShedOldest)│
+//!            │        │ pop                                         │
+//!            │        ▼                                             │
+//!            │  edge worker ──▶ Link ──▶ dispatcher                 │
+//!            │                            │  SLO-aware batcher      │
+//!            │                            │  (close early when the  │
+//!            │                            │   oldest request's      │
+//!            │                            │   budget < predicted    │
+//!            │                            │   execution time)       │
+//!            │                            ▼  Router (rr/least/      │
+//!            │                    ┌───────┴─────────┐  affinity)    │
+//!            │                    ▼                 ▼               │
+//!            │                 shard 0    …      shard N−1          │
+//!            │              (own Runtime +     (own Runtime +       │
+//!            │               b-size engines)    b-size engines)     │
+//!            └──────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The three concerns are split into one module each — [`admission`] (who
+//! gets in), [`batcher`] (when a batch closes), [`dispatch`] (who runs
+//! it) — and composed by `coordinator::server`.
+
+pub mod admission;
+pub mod batcher;
+pub mod dispatch;
+
+pub use admission::{Admit, AdmissionPolicy, AdmissionQueue};
+pub use batcher::{drain_deadline, BatchCost, CostPrior, DrainCause};
+pub use dispatch::{Outstanding, RoutePolicy, Router};
+
+use std::time::Duration;
+
+/// Full scheduling configuration for a [`crate::coordinator::Server`]:
+/// admission, batching, and shard routing.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Cloud worker shards; each owns its runtime and per-batch engines.
+    pub shards: usize,
+    /// Admission queue capacity (requests waiting for edge compute).
+    pub queue_cap: usize,
+    /// What happens when the admission queue is full.
+    pub admission: AdmissionPolicy,
+    /// Batch → shard routing policy.
+    pub route: RoutePolicy,
+    /// Maximum requests per cloud batch.
+    pub max_batch: usize,
+    /// Fixed batching window (upper bound on batch-assembly waiting).
+    pub max_delay: Duration,
+    /// Per-request end-to-end latency budget; enables the deadline-aware
+    /// drain rule when set.
+    pub slo: Option<Duration>,
+    /// Analytic prior for the batch execution-time predictor (refined
+    /// online from measured shard times).
+    pub cost_prior: CostPrior,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            shards: 1,
+            queue_cap: 256,
+            admission: AdmissionPolicy::Block,
+            route: RoutePolicy::RoundRobin,
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            slo: None,
+            cost_prior: CostPrior::serving_default(),
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Builder-style helpers (each consumes and returns `self`).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    pub fn with_admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: Duration) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_single_shard_blocking() {
+        let c = SchedulerConfig::default();
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.admission, AdmissionPolicy::Block);
+        assert_eq!(c.route, RoutePolicy::RoundRobin);
+        assert!(c.slo.is_none());
+        assert!(c.queue_cap >= 1);
+    }
+
+    #[test]
+    fn builders_clamp_to_sane_minimums() {
+        let c = SchedulerConfig::default().with_shards(0).with_queue_cap(0);
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.queue_cap, 1);
+        let c = c
+            .with_shards(4)
+            .with_admission(AdmissionPolicy::ShedNewest)
+            .with_route(RoutePolicy::BatchAffinity)
+            .with_slo(Duration::from_millis(50));
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.admission, AdmissionPolicy::ShedNewest);
+        assert_eq!(c.route, RoutePolicy::BatchAffinity);
+        assert_eq!(c.slo, Some(Duration::from_millis(50)));
+    }
+}

@@ -1,17 +1,34 @@
-//! The serving pipeline: client → edge worker → simulated uplink →
-//! dynamic batcher → cloud worker → response.
+//! The serving pipeline: client → admission queue → edge worker →
+//! simulated uplink → SLO-aware batcher → sharded cloud pool → response.
 //!
-//! Two OS threads own the two "devices" (PJRT handles are not `Send`, so
-//! each thread constructs its own runtime — which also mirrors the real
-//! topology: separate processes on separate machines). Channels carry the
-//! protocol packets; the batcher drains the cloud queue up to
-//! `max_batch` / `max_delay`, exactly like a production router.
+//! OS threads own the "devices" (PJRT handles are not `Send`, so each
+//! thread constructs its own runtime — which also mirrors the real
+//! topology: separate processes on separate machines):
+//!
+//! * one **edge thread** drains the bounded [`AdmissionQueue`] (the only
+//!   place requests are refused — see [`AdmissionPolicy`]), runs the edge
+//!   partition, and pushes [`CloudJob`]s through a *bounded* channel so
+//!   cloud saturation backs up into the admission queue instead of an
+//!   invisible unbounded buffer;
+//! * one **dispatcher thread** assembles batches under the deadline-aware
+//!   drain rule ([`scheduler::batcher`]) and routes each closed batch to a
+//!   shard ([`scheduler::dispatch`]);
+//! * **N shard threads**, each owning its own `Runtime` and per-batch-size
+//!   engines, execute batches and answer the clients.
+//!
+//! Every submitted request receives exactly one terminal response:
+//! `Ok(Outcome::Done)` (served), `Ok(Outcome::Shed)` (load-shed by the
+//! admission policy), or `Err` (malformed request / pipeline failure).
 
 use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
 use super::link::{DelayMode, Link, WireFormat};
 use super::metrics::ServingStats;
 use super::protocol::ActivationPacket;
+use super::scheduler::{
+    drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
+    Router, SchedulerConfig,
+};
 use crate::runtime::Runtime;
 use crate::sim::Uplink;
 use crate::util::Json;
@@ -30,16 +47,16 @@ pub enum ServeMode {
     CloudOnly,
 }
 
-/// Server configuration.
+/// Server configuration: artifacts + transport + scheduling.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub artifacts: PathBuf,
     pub uplink: Uplink,
     pub wire: WireFormat,
     pub delay: DelayMode,
-    pub max_batch: usize,
-    pub max_delay: Duration,
     pub mode: ServeMode,
+    /// Admission, batching, and shard-routing policy.
+    pub scheduler: SchedulerConfig,
 }
 
 impl ServeConfig {
@@ -49,10 +66,14 @@ impl ServeConfig {
             uplink: Uplink::paper_default(),
             wire: WireFormat::Binary,
             delay: DelayMode::Virtual,
-            max_batch: 8,
-            max_delay: Duration::from_millis(2),
             mode: ServeMode::Split,
+            scheduler: SchedulerConfig::default(),
         }
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerConfig) -> Self {
+        self.scheduler = scheduler;
+        self
     }
 }
 
@@ -112,17 +133,66 @@ pub struct InferenceResult {
     pub e2e: Duration,
     pub tx_bytes: usize,
     pub batch_size: usize,
+    /// Cloud shard that executed the request.
+    pub shard: usize,
 }
+
+/// Why a request was shed instead of served.
+#[derive(Debug, Clone)]
+pub struct ShedInfo {
+    pub policy: AdmissionPolicy,
+    /// Admission-queue depth at shed time.
+    pub queue_depth: usize,
+    /// How long the request had waited when it was shed.
+    pub waited: Duration,
+}
+
+/// Terminal disposition of one submitted request.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// Served: the full pipeline ran.
+    Done(InferenceResult),
+    /// Load-shed by the admission policy; no compute was spent on it.
+    Shed(ShedInfo),
+}
+
+impl Outcome {
+    /// Unwrap a served result; a shed outcome becomes an error.
+    pub fn done(self) -> Result<InferenceResult> {
+        match self {
+            Outcome::Done(r) => Ok(r),
+            Outcome::Shed(s) => Err(anyhow::anyhow!(
+                "request shed ({} policy, queue depth {})",
+                s.policy,
+                s.queue_depth
+            )),
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Shed(_))
+    }
+
+    pub fn as_done(&self) -> Option<&InferenceResult> {
+        match self {
+            Outcome::Done(r) => Some(r),
+            Outcome::Shed(_) => None,
+        }
+    }
+}
+
+/// The response half a client holds after [`Server::submit`].
+pub type ResponseReceiver = mpsc::Receiver<Result<Outcome>>;
 
 struct Request {
     image: Vec<f32>,
-    resp: mpsc::Sender<Result<InferenceResult>>,
+    resp: mpsc::Sender<Result<Outcome>>,
     submitted: Instant,
 }
 
 struct CloudJob {
     packet: ActivationPacket,
-    resp: mpsc::Sender<Result<InferenceResult>>,
+    resp: mpsc::Sender<Result<Outcome>>,
     submitted: Instant,
     edge: Duration,
     net: Duration,
@@ -131,14 +201,40 @@ struct CloudJob {
     arrived: Instant,
 }
 
+/// One closed batch on its way to a shard.
+struct ShardBatch {
+    jobs: Vec<CloudJob>,
+    /// The compiled batch size the shard will pad to (affinity/cost key).
+    engine_batch: usize,
+}
+
 /// A running pipeline.
 pub struct Server {
-    req_tx: Option<mpsc::Sender<Request>>,
-    edge_handle: Option<std::thread::JoinHandle<()>>,
-    cloud_handle: Option<std::thread::JoinHandle<()>>,
+    queue: Arc<AdmissionQueue<Request>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
     pub meta: ArtifactMeta,
     stats: Arc<Mutex<ServingStats>>,
     started: Instant,
+}
+
+/// The compiled engine batch sizes actually loaded for `max_batch`: every
+/// artifact batch ≤ `max_batch`, or the smallest artifact batch if none
+/// fit. The dispatcher and every shard derive their capping from this one
+/// list, so a drained batch always fits a loaded engine.
+fn engine_batch_set(meta: &ArtifactMeta, max_batch: usize) -> Vec<usize> {
+    let mut v: Vec<usize> =
+        meta.cloud_batches.iter().copied().filter(|&b| b <= max_batch).collect();
+    if v.is_empty() {
+        if let Some(&b) = meta.cloud_batches.first() {
+            v.push(b);
+        }
+    }
+    if v.is_empty() {
+        v.push(1);
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
 }
 
 impl Server {
@@ -146,77 +242,177 @@ impl Server {
     /// moment on first call).
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let meta = ArtifactMeta::load(&cfg.artifacts)?;
-        let stats = Arc::new(Mutex::new(ServingStats::default()));
+        let sched = cfg.scheduler.clone();
+        let shards = sched.shards.max(1);
+        let stats = Arc::new(Mutex::new(ServingStats::with_shards(shards)));
+        let queue = Arc::new(AdmissionQueue::new(sched.queue_cap, sched.admission));
+        let cost = Arc::new(BatchCost::new(sched.cost_prior));
+        let outstanding = Outstanding::new(shards);
 
-        let (req_tx, req_rx) = mpsc::channel::<Request>();
-        let (cloud_tx, cloud_rx) = mpsc::channel::<CloudJob>();
+        let engine_batches = match cfg.mode {
+            ServeMode::Split => engine_batch_set(&meta, sched.max_batch),
+            // Cloud-Only runs the batch-1 full model sequentially, so any
+            // drained size up to max_batch is its own "engine size".
+            ServeMode::CloudOnly => (1..=sched.max_batch.max(1)).collect(),
+        };
+
+        // bounded edge → dispatcher channel: when the cloud side lags, the
+        // edge blocks here and the admission queue (the shed point) fills
+        let inflight_cap = (sched.max_batch.max(1) * shards * 2).max(4);
+        let (cloud_tx, cloud_rx) = mpsc::sync_channel::<CloudJob>(inflight_cap);
+
+        let mut handles = Vec::new();
 
         // ---------------- edge thread -------------------------------
-        let edge_cfg = cfg.clone();
-        let edge_meta = meta.clone();
         let (edge_ready_tx, edge_ready_rx) = mpsc::channel::<Result<()>>();
-        let edge_handle = std::thread::Builder::new()
-            .name("edge-worker".into())
-            .spawn(move || {
-                edge_thread(edge_cfg, edge_meta, req_rx, cloud_tx, edge_ready_tx);
-            })?;
+        {
+            let cfg = cfg.clone();
+            let meta = meta.clone();
+            let queue = queue.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("edge-worker".into())
+                    .spawn(move || edge_thread(cfg, meta, queue, cloud_tx, edge_ready_tx))?,
+            );
+        }
 
-        // ---------------- cloud thread ------------------------------
-        let cloud_cfg = cfg.clone();
-        let cloud_meta = meta.clone();
-        let cloud_stats = stats.clone();
-        let (cloud_ready_tx, cloud_ready_rx) = mpsc::channel::<Result<()>>();
-        let cloud_handle = std::thread::Builder::new()
-            .name("cloud-worker".into())
-            .spawn(move || {
-                cloud_thread(cloud_cfg, cloud_meta, cloud_rx, cloud_stats, cloud_ready_tx);
-            })?;
+        // ---------------- shard threads -----------------------------
+        let mut shard_txs = Vec::with_capacity(shards);
+        let mut shard_readies = Vec::with_capacity(shards);
+        for shard_id in 0..shards {
+            let (batch_tx, batch_rx) = mpsc::sync_channel::<ShardBatch>(2);
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            shard_txs.push(batch_tx);
+            shard_readies.push(ready_rx);
+            let cfg = cfg.clone();
+            let meta = meta.clone();
+            let stats = stats.clone();
+            let outstanding = outstanding.clone();
+            let cost = cost.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("cloud-shard-{shard_id}"))
+                    .spawn(move || {
+                        shard_thread(
+                            cfg,
+                            meta,
+                            shard_id,
+                            batch_rx,
+                            outstanding,
+                            cost,
+                            stats,
+                            ready_tx,
+                        )
+                    })?,
+            );
+        }
 
-        edge_ready_rx.recv().context("edge thread died")??;
-        cloud_ready_rx.recv().context("cloud thread died")??;
+        // ---------------- dispatcher thread -------------------------
+        {
+            let sched = sched.clone();
+            let engine_batches = engine_batches.clone();
+            let outstanding = outstanding.clone();
+            let cost = cost.clone();
+            let stats = stats.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("dispatcher".into())
+                    .spawn(move || {
+                        dispatcher_thread(
+                            sched,
+                            engine_batches,
+                            cloud_rx,
+                            shard_txs,
+                            outstanding,
+                            cost,
+                            stats,
+                        )
+                    })?,
+            );
+        }
 
-        Ok(Server {
-            req_tx: Some(req_tx),
-            edge_handle: Some(edge_handle),
-            cloud_handle: Some(cloud_handle),
-            meta,
-            stats,
-            started: Instant::now(),
-        })
+        // ---------------- ready handshakes --------------------------
+        match edge_ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(abort_start(&queue, handles, e)),
+            Err(_) => {
+                return Err(abort_start(&queue, handles, anyhow::anyhow!("edge thread died")))
+            }
+        }
+        for (i, ready) in shard_readies.into_iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    return Err(abort_start(&queue, handles, e.context(format!("shard {i}"))))
+                }
+                Err(_) => {
+                    let e = anyhow::anyhow!("shard {i} died");
+                    return Err(abort_start(&queue, handles, e));
+                }
+            }
+        }
+
+        Ok(Server { queue, handles, meta, stats, started: Instant::now() })
     }
 
-    /// Synchronous inference of one image.
+    /// Synchronous inference of one image; a shed request surfaces as an
+    /// error (closed-loop clients treat shed as failure-and-retry).
     pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResult> {
-        self.submit(image)?.recv().context("pipeline dropped request")?
+        self.submit(image)?.recv().context("pipeline dropped request")??.done()
     }
 
-    /// Asynchronous submission; returns the response channel.
-    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<InferenceResult>>> {
+    /// Asynchronous submission through admission control. The returned
+    /// channel yields exactly one terminal [`Outcome`] (or `Err`). Under
+    /// `Block` admission this call itself blocks while the queue is full.
+    pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.req_tx
-            .as_ref()
-            .context("server stopped")?
-            .send(Request { image, resp: resp_tx, submitted: Instant::now() })
-            .ok()
-            .context("edge thread gone")?;
+        let req = Request { image, resp: resp_tx, submitted: Instant::now() };
+        // count the offer BEFORE enqueueing: once pushed, the pipeline can
+        // complete the request concurrently, and a stats() snapshot must
+        // never observe requests + shed > offered
+        self.stats.lock().unwrap().offered += 1;
+        match self.queue.push(req) {
+            Admit::Enqueued => {}
+            Admit::RefusedNewest(r) => self.shed(r),
+            Admit::EvictedOldest(old) => self.shed(old),
+            Admit::Closed(_) => {
+                self.stats.lock().unwrap().offered -= 1; // never entered the pipeline
+                anyhow::bail!("server stopped")
+            }
+        }
         Ok(resp_rx)
+    }
+
+    /// Answer one request as load-shed (counted, never computed).
+    fn shed(&self, req: Request) {
+        self.stats.lock().unwrap().shed += 1;
+        let info = ShedInfo {
+            policy: self.queue.policy(),
+            queue_depth: self.queue.depth(),
+            waited: req.submitted.elapsed(),
+        };
+        let _ = req.resp.send(Ok(Outcome::Shed(info)));
+    }
+
+    /// Current admission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
     }
 
     /// Snapshot of aggregated metrics.
     pub fn stats(&self) -> ServingStats {
         let mut s = self.stats.lock().unwrap().clone();
         s.wall_s = self.started.elapsed().as_secs_f64();
+        s.queue_depth = self.queue.depth() as u64;
+        s.queue_peak = self.queue.peak() as u64;
         s
     }
 
     /// Stop the pipeline and join the threads.
     pub fn shutdown(mut self) -> ServingStats {
         let stats = self.stats();
-        self.req_tx.take(); // closes the channel; threads drain and exit
-        if let Some(h) = self.edge_handle.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.cloud_handle.take() {
+        self.queue.close(); // edge drains and exits; the pool follows
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
         stats
@@ -225,21 +421,32 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.req_tx.take();
-        if let Some(h) = self.edge_handle.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.cloud_handle.take() {
+        self.queue.close();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// Tear down a partially-started pipeline: close the admission queue (the
+/// threads cascade-exit from there) and join whatever was spawned.
+fn abort_start(
+    queue: &Arc<AdmissionQueue<Request>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    e: anyhow::Error,
+) -> anyhow::Error {
+    queue.close();
+    for h in handles {
+        let _ = h.join();
+    }
+    e
+}
+
 fn edge_thread(
     cfg: ServeConfig,
     meta: ArtifactMeta,
-    req_rx: mpsc::Receiver<Request>,
-    cloud_tx: mpsc::Sender<CloudJob>,
+    queue: Arc<AdmissionQueue<Request>>,
+    cloud_tx: mpsc::SyncSender<CloudJob>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     // own runtime: PJRT handles are thread-local by construction here
@@ -273,7 +480,7 @@ fn edge_thread(
     };
     let link = Link::new(cfg.uplink).with_format(cfg.wire).with_delay(cfg.delay);
 
-    while let Ok(req) = req_rx.recv() {
+    while let Some(req) = queue.pop() {
         let work = (|| -> Result<CloudJob> {
             let (packet, edge_dt) = match (&worker, cfg.mode) {
                 (Some(w), ServeMode::Split) => w.infer(&req.image)?,
@@ -307,6 +514,8 @@ fn edge_thread(
         })();
         match work {
             Ok(job) => {
+                // bounded send: blocks under cloud saturation, pushing the
+                // backlog into the (shedding) admission queue
                 if cloud_tx.send(job).is_err() {
                     break;
                 }
@@ -318,27 +527,105 @@ fn edge_thread(
     }
 }
 
-fn cloud_thread(
+fn dispatcher_thread(
+    sched: SchedulerConfig,
+    engine_batches: Vec<usize>,
+    cloud_rx: mpsc::Receiver<CloudJob>,
+    shard_txs: Vec<mpsc::SyncSender<ShardBatch>>,
+    outstanding: Outstanding,
+    cost: Arc<BatchCost>,
+    stats: Arc<Mutex<ServingStats>>,
+) {
+    let largest_engine = *engine_batches.last().expect("engine set is never empty");
+    let eff_max_batch = sched.max_batch.clamp(1, largest_engine);
+    // smallest compiled engine that fits k requests (same padding rule as
+    // CloudWorker::engine_batch_for)
+    let engine_for = |k: usize| -> usize {
+        engine_batches.iter().copied().find(|&b| b >= k).unwrap_or(largest_engine)
+    };
+    let mut router = Router::new(
+        sched.route,
+        shard_txs.len(),
+        outstanding.clone(),
+        engine_batches.clone(),
+    );
+
+    loop {
+        // blocking wait for the first job of the next batch
+        let first = match cloud_rx.recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        let open = Instant::now();
+        let mut batch = vec![first];
+        let mut cause = DrainCause::Full;
+        while batch.len() < eff_max_batch {
+            // the SLO drain rule: close once the oldest member's remaining
+            // budget drops below the predicted execution time
+            let oldest = batch.iter().map(|j| j.submitted).min().expect("batch non-empty");
+            let exec = Duration::from_secs_f64(cost.predict(engine_for(batch.len())));
+            let (deadline, slo_bound) =
+                drain_deadline(open, sched.max_delay, sched.slo, oldest, exec);
+            let now = Instant::now();
+            if now >= deadline {
+                cause = if slo_bound { DrainCause::SloBudget } else { DrainCause::Window };
+                break;
+            }
+            match cloud_rx.recv_timeout(deadline - now) {
+                Ok(j) => batch.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    cause = if slo_bound { DrainCause::SloBudget } else { DrainCause::Window };
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    cause = DrainCause::Disconnected;
+                    break;
+                }
+            }
+        }
+
+        let engine_batch = engine_for(batch.len());
+        let shard = router.pick(engine_batch);
+        let n = batch.len();
+        outstanding.add(shard, n);
+        if cause == DrainCause::SloBudget {
+            stats.lock().unwrap().batch_slo_closes += 1;
+        }
+        let sb = ShardBatch { jobs: batch, engine_batch };
+        if let Err(mpsc::SendError(lost)) = shard_txs[shard].send(sb) {
+            // shard is gone; answer its batch rather than dropping it
+            outstanding.sub(shard, n);
+            for job in lost.jobs {
+                let _ = job.resp.send(Err(anyhow::anyhow!("cloud shard {shard} unavailable")));
+            }
+        }
+    }
+}
+
+enum CloudExec {
+    Split(CloudWorker),
+    Full(crate::runtime::Engine),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_thread(
     cfg: ServeConfig,
     meta: ArtifactMeta,
-    cloud_rx: mpsc::Receiver<CloudJob>,
+    shard_id: usize,
+    batch_rx: mpsc::Receiver<ShardBatch>,
+    outstanding: Outstanding,
+    cost: Arc<BatchCost>,
     stats: Arc<Mutex<ServingStats>>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    enum CloudExec {
-        Split(CloudWorker),
-        Full(crate::runtime::Engine),
-    }
     let init = (|| -> Result<CloudExec> {
         let rt = Runtime::cpu()?;
         match cfg.mode {
             ServeMode::Split => {
                 let mut engines = BTreeMap::new();
-                for &b in &meta.cloud_batches {
-                    if b > cfg.max_batch && !engines.is_empty() {
-                        break;
-                    }
-                    let e = rt.load_hlo_text(&cfg.artifacts.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
+                for &b in &engine_batch_set(&meta, cfg.scheduler.max_batch) {
+                    let e =
+                        rt.load_hlo_text(&cfg.artifacts.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
                     engines.insert(b, e);
                 }
                 Ok(CloudExec::Split(CloudWorker::new(engines, meta.packed_shape, meta.classes)))
@@ -359,55 +646,37 @@ fn cloud_thread(
         }
     };
 
-    loop {
-        // blocking wait for the first job
-        let first = match cloud_rx.recv() {
-            Ok(j) => j,
-            Err(_) => break,
-        };
-        let mut batch = vec![first];
-        // drain up to max_batch within the batching window
-        let deadline = Instant::now() + cfg.max_delay;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match cloud_rx.recv_timeout(deadline - now) {
-                Ok(j) => batch.push(j),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+    let run = |packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
+        match &exec {
+            CloudExec::Split(w) => w.infer_batch(packets),
+            CloudExec::Full(engine) => {
+                // batch-1 full model: run sequentially
+                let mut out = Vec::with_capacity(packets.len());
+                let t0 = Instant::now();
+                for p in packets {
+                    let img: Vec<f32> = p.payload.iter().map(|&b| b as f32 * p.scale).collect();
+                    let lit = crate::runtime::literal_f32(
+                        &img,
+                        &[1, 1, meta.img as i64, meta.img as i64],
+                    )?;
+                    out.push(engine.run_f32(&[lit])?);
+                }
+                Ok((out, t0.elapsed()))
             }
         }
+    };
 
-        let run = |packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
-            match &exec {
-                CloudExec::Split(w) => w.infer_batch(packets),
-                CloudExec::Full(engine) => {
-                    // batch-1 full model: run sequentially
-                    let mut out = Vec::with_capacity(packets.len());
-                    let t0 = Instant::now();
-                    for p in packets {
-                        let img: Vec<f32> =
-                            p.payload.iter().map(|&b| b as f32 * p.scale).collect();
-                        let lit = crate::runtime::literal_f32(
-                            &img,
-                            &[1, 1, meta.img as i64, meta.img as i64],
-                        )?;
-                        out.push(engine.run_f32(&[lit])?);
-                    }
-                    Ok((out, t0.elapsed()))
-                }
-            }
-        };
-
-        let packets: Vec<ActivationPacket> = batch.iter().map(|j| j.packet.clone()).collect();
+    while let Ok(sb) = batch_rx.recv() {
+        let packets: Vec<ActivationPacket> = sb.jobs.iter().map(|j| j.packet.clone()).collect();
+        let n = sb.jobs.len();
         match run(&packets) {
             Ok((logits, cloud_dt)) => {
-                let bsz = batch.len();
+                // feed the SLO predictor with the measured execution time
+                cost.observe(sb.engine_batch, cloud_dt.as_secs_f64());
                 let mut st = stats.lock().unwrap();
                 st.batches += 1;
-                for (job, lg) in batch.into_iter().zip(logits) {
+                st.shard_batches[shard_id] += 1;
+                for (job, lg) in sb.jobs.into_iter().zip(logits) {
                     let class = lg
                         .iter()
                         .enumerate()
@@ -433,24 +702,27 @@ fn cloud_thread(
                         queue,
                         e2e,
                         tx_bytes: job.tx_bytes,
-                        batch_size: bsz,
+                        batch_size: n,
+                        shard: shard_id,
                     };
                     st.requests += 1;
+                    st.shard_requests[shard_id] += 1;
                     st.tx_bytes_total += job.tx_bytes as u64;
                     st.e2e.record(res.e2e);
                     st.edge.record(res.edge);
                     st.net.record(res.net);
                     st.cloud.record(res.cloud);
                     st.queue.record(res.queue);
-                    let _ = job.resp.send(Ok(res));
+                    let _ = job.resp.send(Ok(Outcome::Done(res)));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for job in batch {
+                for job in sb.jobs {
                     let _ = job.resp.send(Err(anyhow::anyhow!("{msg}")));
                 }
             }
         }
+        outstanding.sub(shard_id, n);
     }
 }

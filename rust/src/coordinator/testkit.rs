@@ -1,0 +1,175 @@
+//! Self-contained reference artifacts for driving the serving pipeline
+//! without `make artifacts` (no Python, no toolchain beyond this crate).
+//!
+//! Writes a synthetic artifact directory in the `REFHLO v1` dialect (see
+//! `runtime::engine`): an `edge_pack` partition, `cloud_logits` engines
+//! for each requested batch size, a `full_logits` Cloud-Only baseline,
+//! and a matching `metadata.json`. Everything is deterministic in the
+//! spec, so tests, benches, and the CI loadgen smoke all exercise the
+//! exact same pipeline bytes.
+
+use crate::profile::SplitMix64;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape of a synthetic REFHLO artifact set.
+#[derive(Debug, Clone)]
+pub struct RefArtifactSpec {
+    /// Image side (img × img f32 inputs).
+    pub img: usize,
+    /// Activation bit width (must divide 8).
+    pub bits: u8,
+    /// Packed payload shape (c2, hw); `img² == c2·hw·(8/bits)`.
+    pub c2: usize,
+    pub hw: usize,
+    pub classes: usize,
+    pub scale: f32,
+    /// Cloud engine batch sizes to compile.
+    pub cloud_batches: Vec<usize>,
+    /// Head-weight seed (same seed ⇒ same logits).
+    pub seed: u64,
+}
+
+impl Default for RefArtifactSpec {
+    fn default() -> Self {
+        // 16×16 images, 4-bit packing: 256 pixels → 128 packed bytes
+        RefArtifactSpec {
+            img: 16,
+            bits: 4,
+            c2: 2,
+            hw: 64,
+            classes: 10,
+            scale: 0.05,
+            cloud_batches: vec![1, 4],
+            seed: 42,
+        }
+    }
+}
+
+impl RefArtifactSpec {
+    /// The invariant the edge_pack program enforces.
+    pub fn is_consistent(&self) -> bool {
+        self.bits != 0
+            && 8 % self.bits == 0
+            && self.img * self.img == self.c2 * self.hw * (8 / self.bits) as usize
+    }
+
+    /// Deterministic pseudo-image in [0, 1).
+    pub fn image(&self, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..self.img * self.img).map(|_| rng.next_f32()).collect()
+    }
+}
+
+/// Deterministic pseudo-image for the default spec (test convenience).
+pub fn reference_image(seed: u64) -> Vec<f32> {
+    RefArtifactSpec::default().image(seed)
+}
+
+/// Load up to `max` images from the python-side `eval_set.bin`
+/// (`[n u32][imgs f32][labels u8]`; image size from `metadata.json`).
+/// The single parser shared by the CLI and the serving benches.
+pub fn load_eval_images(dir: &Path, max: usize) -> Result<Vec<Vec<f32>>> {
+    let meta = crate::coordinator::ArtifactMeta::load(dir)?;
+    let buf = std::fs::read(dir.join("eval_set.bin"))
+        .with_context(|| format!("read {dir:?}/eval_set.bin — run `make artifacts`"))?;
+    let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
+    let img = meta.img * meta.img;
+    Ok((0..count.min(max))
+        .map(|s| {
+            buf[4 + s * img * 4..4 + (s + 1) * img * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect()
+        })
+        .collect())
+}
+
+/// Write a complete reference artifact directory; returns `dir` back.
+pub fn write_reference_artifacts(dir: &Path, spec: &RefArtifactSpec) -> Result<PathBuf> {
+    anyhow::ensure!(spec.is_consistent(), "img² must equal c2·hw·(8/bits)");
+    anyhow::ensure!(!spec.cloud_batches.is_empty(), "need at least one cloud batch size");
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    let RefArtifactSpec { img, bits, c2, hw, classes, scale, ref cloud_batches, seed } = *spec;
+
+    let batches = cloud_batches.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ");
+    let metadata = format!(
+        "{{\n  \"graph\": {{\"img\": {img}, \"classes\": {classes}, \
+         \"packed_shape\": [{c2}, {hw}], \"act_bits\": {bits}}},\n  \
+         \"boundary_scale\": {scale},\n  \"cloud_batches\": [{batches}],\n  \
+         \"params\": 1234,\n  \
+         \"accuracy\": {{\"acc_float\": 1.0, \"acc_quant_split\": 1.0}}\n}}\n"
+    );
+    std::fs::write(dir.join("metadata.json"), metadata)?;
+
+    let edge = format!(
+        "REFHLO v1\nprogram: edge_pack\nimg: {img}\nbits: {bits}\n\
+         c2: {c2}\nhw: {hw}\nscale: {scale}\n"
+    );
+    std::fs::write(dir.join("lpr_edge_b1.hlo.txt"), edge)?;
+
+    for &b in cloud_batches {
+        let cloud = format!(
+            "REFHLO v1\nprogram: cloud_logits\nbatch: {b}\nc2: {c2}\n\
+             hw: {hw}\nbits: {bits}\nscale: {scale}\nclasses: {classes}\n\
+             seed: {seed}\n"
+        );
+        std::fs::write(dir.join(format!("lpr_cloud_b{b}.hlo.txt")), cloud)?;
+    }
+
+    let full = format!(
+        "REFHLO v1\nprogram: full_logits\nimg: {img}\nclasses: {classes}\nseed: {}\n",
+        seed + 1
+    );
+    std::fs::write(dir.join("lpr_full_b1.hlo.txt"), full)?;
+    Ok(dir.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_consistent() {
+        assert!(RefArtifactSpec::default().is_consistent());
+    }
+
+    #[test]
+    fn inconsistent_spec_rejected() {
+        let spec = RefArtifactSpec { img: 7, ..Default::default() };
+        let name = format!("autosplit-testkit-bad-{}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        assert!(write_reference_artifacts(&dir, &spec).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writes_every_artifact_and_meta_parses() {
+        let dir = std::env::temp_dir().join(format!("autosplit-testkit-{}", std::process::id()));
+        let spec = RefArtifactSpec::default();
+        write_reference_artifacts(&dir, &spec).unwrap();
+        let files = [
+            "metadata.json",
+            "lpr_edge_b1.hlo.txt",
+            "lpr_cloud_b1.hlo.txt",
+            "lpr_cloud_b4.hlo.txt",
+            "lpr_full_b1.hlo.txt",
+        ];
+        for f in files {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        let meta = crate::coordinator::ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.img, spec.img);
+        assert_eq!(meta.packed_shape, (spec.c2, spec.hw));
+        assert_eq!(meta.cloud_batches, spec.cloud_batches);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn images_deterministic_in_seed() {
+        let spec = RefArtifactSpec::default();
+        assert_eq!(spec.image(9), spec.image(9));
+        assert_ne!(spec.image(9), spec.image(10));
+        assert!(spec.image(9).iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

@@ -7,21 +7,30 @@
 //!   baselines --model <name> [...]
 //!             compare Auto-Split against Neurosurgeon/DADS/QDMP/U8/CLOUD16
 //!   serve     [--artifacts dir] [--mode split|cloud] [--requests n]
-//!             [--mbps rate] [--batch n] [--rpc]
+//!             [--mbps rate] [--batch n] [--rpc] [--shards n]
+//!             [--queue-cap n] [--admission policy] [--slo-ms f] [--route policy]
 //!             run the serving pipeline on the AOT artifacts
+//!   loadtest  open-loop / closed-loop / mixed load generation against the
+//!             sharded server; `--synthetic` needs no artifacts at all
 //!   zoo       list available models
 //!
 //! (The offline build environment has no clap; argument parsing is a
 //! small hand-rolled matcher.)
 
 use anyhow::{bail, Context, Result};
-use auto_split::coordinator::{ServeConfig, ServeMode, Server, WireFormat};
+use auto_split::coordinator::{
+    load_eval_images, mixed_workload, poisson_schedule, policy_table, replay, run_mixed,
+    AdmissionPolicy, CostPrior, LoadReport, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig,
+    ServeConfig, ServeMode, Server, WireFormat,
+};
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
 use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
 use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Planner};
 use auto_split::zoo;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key`.
 struct Args {
@@ -78,13 +87,19 @@ fn main() -> Result<()> {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
-            eprintln!("usage: auto-split <optimize|baselines|serve|zoo> [flags]");
+            eprintln!("usage: auto-split <optimize|baselines|serve|loadtest|zoo> [flags]");
             eprintln!("  optimize  --model resnet50 [--threshold 5] [--mem-mb 32] [--mbps 3]");
             eprintln!("            [--threads 0]   planner workers (0 = per core, 1 = sequential)");
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
             eprintln!("  serve     [--artifacts artifacts] [--mode split|cloud] [--requests 64]");
             eprintln!("            [--mbps 3] [--batch 8] [--rpc]");
-            eprintln!("  loadtest  [--artifacts artifacts] [--rps 100] [--requests 200]");
+            eprintln!("            [--shards 1] [--queue-cap 256]");
+            eprintln!("            [--admission block|shed-newest|shed-oldest]");
+            eprintln!("            [--slo-ms 0] [--route rr|least|affinity]");
+            eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
+            eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
+            eprintln!("            [--seed 1] [--compare] [--json out.json]");
+            eprintln!("            + all `serve` scheduler flags");
             Ok(())
         }
     }
@@ -190,41 +205,180 @@ fn cmd_baselines(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the scheduler configuration from the shared serve/loadtest flags.
+fn scheduler_from_args(args: &Args) -> Result<SchedulerConfig> {
+    let mut s = SchedulerConfig::default();
+    s.shards = args.parse("--shards", 1usize)?.max(1);
+    s.queue_cap = args.parse("--queue-cap", 256usize)?.max(1);
+    s.max_batch = args.parse("--batch", 8usize)?.max(1);
+    if let Some(v) = args.get("--admission") {
+        s.admission = v.parse::<AdmissionPolicy>().map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get("--route") {
+        s.route = v.parse::<RoutePolicy>().map_err(anyhow::Error::msg)?;
+    }
+    let slo_ms: f64 = args.parse("--slo-ms", 0.0)?;
+    if slo_ms > 0.0 {
+        s.slo = Some(Duration::from_secs_f64(slo_ms / 1e3));
+        // seed the execution-time predictor from the analytic latency
+        // model of the LPR cloud partition (refined online by the shards).
+        // Synthetic REFHLO artifacts are not that model — their engines
+        // are orders of magnitude faster, and an oversized prior would
+        // close every cold batch at size 1 — so keep the neutral default
+        // there and let the EWMA calibrate.
+        if !args.flag("--synthetic") {
+            if let Some((g, _)) = zoo::by_name("lpr_edge_cnn") {
+                let lm = LatencyModel::paper_default();
+                s.cost_prior = CostPrior::from_latency_model(&lm, &g, g.len() / 2);
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Resolve the artifact directory + image pool for serving workloads:
+/// either real AOT artifacts (`--artifacts`) or a synthetic REFHLO set
+/// written to a temp directory (`--synthetic`, no `make artifacts`
+/// needed). The bool says whether the directory is the disposable
+/// synthetic one (the caller removes it when done).
+fn serving_inputs(args: &Args) -> Result<(PathBuf, Vec<Vec<f32>>, bool)> {
+    if args.flag("--synthetic") {
+        let spec = RefArtifactSpec::default();
+        let name = format!("autosplit-synthetic-{}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        auto_split::coordinator::write_reference_artifacts(&dir, &spec)?;
+        let images: Vec<Vec<f32>> = (0..32).map(|i| spec.image(1000 + i as u64)).collect();
+        return Ok((dir, images, true));
+    }
+    let dir = PathBuf::from(args.get("--artifacts").unwrap_or("artifacts"));
+    let images =
+        load_eval_images(&dir, 64).context("loading eval images (or pass --synthetic)")?;
+    Ok((dir, images, false))
+}
+
+/// Emit a machine-readable serving benchmark record (CI trajectory file).
+fn write_bench_json(path: &str, sched: &SchedulerConfig, r: &LoadReport) -> Result<()> {
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"shards\": {},\n  \"admission\": \"{}\",\n  \
+         \"route\": \"{}\",\n  \"queue_cap\": {},\n  \"offered_rps\": {:.3},\n  \
+         \"achieved_rps\": {:.3},\n  \"p50_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
+         \"shed_rate\": {:.4},\n  \"completed\": {},\n  \"shed\": {},\n  \"errors\": {}\n}}\n",
+        sched.shards,
+        sched.admission,
+        sched.route,
+        sched.queue_cap,
+        r.offered_rps,
+        r.achieved_rps,
+        r.quantile(0.5) * 1e3,
+        r.quantile(0.99) * 1e3,
+        r.shed_rate(),
+        r.completed,
+        r.shed,
+        r.errors,
+    );
+    std::fs::write(path, json).with_context(|| format!("write {path}"))
+}
+
+fn print_report(tag: &str, r: &LoadReport) {
+    println!(
+        "{tag}: offered {:.0} rps  achieved {:.0} rps  completed {}  shed {}  errors {}\n\
+         {tag}: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms",
+        r.offered_rps,
+        r.achieved_rps,
+        r.completed,
+        r.shed,
+        r.errors,
+        r.quantile(0.5) * 1e3,
+        r.quantile(0.95) * 1e3,
+        r.quantile(0.99) * 1e3,
+        r.mean() * 1e3,
+    );
+}
+
 fn cmd_loadtest(args: &Args) -> Result<()> {
-    use auto_split::coordinator::{poisson_schedule, replay};
-    let dir = args.get("--artifacts").unwrap_or("artifacts");
+    let sched = scheduler_from_args(args)?;
     let rps: f64 = args.parse("--rps", 100.0)?;
     let n: usize = args.parse("--requests", 200)?;
-    let server = Server::start(ServeConfig::new(dir))?;
-    let buf = std::fs::read(std::path::Path::new(dir).join("eval_set.bin"))
-        .context("eval_set.bin — run `make artifacts`")?;
-    let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
-    let img = server.meta.img * server.meta.img;
-    let images: Vec<Vec<f32>> = (0..count.min(64))
-        .map(|s| {
-            buf[4 + s * img * 4..4 + (s + 1) * img * 4]
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect()
-        })
-        .collect();
+    let clients: usize = args.parse("--clients", 0)?;
+    let per_client: usize = args.parse("--per-client", 32)?;
+    let seed: u64 = args.parse("--seed", 1u64)?;
+    let mbps: f64 = args.parse("--mbps", 3.0)?;
+    let (dir, images, synthetic) = serving_inputs(args)?;
+    let result = run_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps, &dir, &images);
+    if synthetic {
+        let _ = std::fs::remove_dir_all(&dir); // disposable temp artifacts
+    }
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_loadtest(
+    args: &Args,
+    sched: &SchedulerConfig,
+    rps: f64,
+    n: usize,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+    mbps: f64,
+    dir: &Path,
+    images: &[Vec<f32>],
+) -> Result<()> {
+    let make_server = |sched: SchedulerConfig| -> Result<Server> {
+        let mut cfg = ServeConfig::new(dir);
+        cfg.uplink = Uplink::mbps(mbps);
+        cfg.scheduler = sched;
+        Server::start(cfg)
+    };
+
+    if args.flag("--compare") {
+        // per-policy comparison over the identical open-loop schedule
+        let mut rows = Vec::new();
+        let policies =
+            [AdmissionPolicy::Block, AdmissionPolicy::ShedNewest, AdmissionPolicy::ShedOldest];
+        for policy in policies {
+            let server = make_server(sched.clone().with_admission(policy))?;
+            let _ = server.infer(images[0].clone()); // warm-up
+            let schedule = poisson_schedule(rps, n, images.len(), seed);
+            let report = replay(&server, images, &schedule)?;
+            rows.push((policy.to_string(), report));
+            server.shutdown();
+        }
+        println!("{}", policy_table("Admission-policy comparison (open loop)", &rows));
+        // --json records the configured admission policy's run
+        if let Some(path) = args.get("--json") {
+            let name = sched.admission.to_string();
+            let row = rows.iter().find(|(p, _)| *p == name).map(|(_, r)| r);
+            let row = row.context("configured policy missing from comparison")?;
+            write_bench_json(path, sched, row)?;
+            println!("wrote {path} ({name} row)");
+        }
+        return Ok(());
+    }
+
+    let server = make_server(sched.clone())?;
     let _ = server.infer(images[0].clone()); // warm-up
-    println!("open-loop Poisson load: {rps} rps, {n} requests");
-    let schedule = poisson_schedule(rps, n, images.len(), 1);
-    let report = replay(&server, &images, &schedule)?;
-    println!(
-        "offered {:.0} rps  achieved {:.0} rps  errors {}
-p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms",
-        report.offered_rps,
-        report.achieved_rps,
-        report.errors,
-        report.quantile(0.5) * 1e3,
-        report.quantile(0.95) * 1e3,
-        report.quantile(0.99) * 1e3,
-        report.mean() * 1e3,
-    );
-    println!("
-{}", server.shutdown().report());
+    let report = if clients > 0 {
+        println!(
+            "mixed load: {rps} rps open-loop × {n} + {clients} closed-loop clients × {per_client}"
+        );
+        let wl = mixed_workload(rps, n, clients, per_client, images.len(), seed);
+        let mr = run_mixed(&server, images, &wl)?;
+        print_report("closed", &mr.closed);
+        mr.open
+    } else if n == 0 {
+        bail!("nothing to do: --requests and --clients are both 0");
+    } else {
+        println!("open-loop Poisson load: {rps} rps, {n} requests, {} shards", sched.shards);
+        let schedule = poisson_schedule(rps, n, images.len(), seed);
+        replay(&server, images, &schedule)?
+    };
+    print_report("open", &report);
+    if let Some(path) = args.get("--json") {
+        write_bench_json(path, sched, &report)?;
+        println!("wrote {path}");
+    }
+    println!("\n{}", server.shutdown().report());
     Ok(())
 }
 
@@ -232,7 +386,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.get("--artifacts").unwrap_or("artifacts");
     let mut cfg = ServeConfig::new(dir);
     cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
-    cfg.max_batch = args.parse("--batch", 8usize)?;
+    cfg.scheduler = scheduler_from_args(args)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }
@@ -243,7 +397,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let n: usize = args.parse("--requests", 64)?;
 
-    println!("starting pipeline ({:?}, artifacts={dir})...", cfg.mode);
+    println!(
+        "starting pipeline ({:?}, artifacts={dir}, {} shards)...",
+        cfg.mode, cfg.scheduler.shards
+    );
     let server = Server::start(cfg)?;
     println!(
         "model: {} params, float acc {:?}, quant-split acc {:?}",
@@ -251,11 +408,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
 
     // replay the bundled eval set
-    let eval = std::path::Path::new(dir).join("eval_set.bin");
+    let eval = Path::new(dir).join("eval_set.bin");
     let buf = std::fs::read(&eval).with_context(|| format!("read {eval:?}"))?;
     let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
     let img = server.meta.img * server.meta.img;
     let mut correct = 0;
+    let mut answered = 0;
+    let mut shed = 0;
     let mut submitted = vec![];
     for i in 0..n {
         let s = i % count;
@@ -267,13 +426,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         submitted.push((server.submit(image)?, buf[4 + count * img * 4 + s]));
     }
     for (rx, label) in submitted {
-        let res = rx.recv()??;
-        if res.class == label as usize {
-            correct += 1;
+        match rx.recv()?? {
+            Outcome::Done(res) => {
+                answered += 1;
+                if res.class == label as usize {
+                    correct += 1;
+                }
+            }
+            Outcome::Shed(_) => shed += 1,
         }
     }
     let stats = server.shutdown();
-    println!("\naccuracy over {n} requests: {:.3}", correct as f64 / n as f64);
+    println!(
+        "\naccuracy over {answered} answered requests ({shed} shed): {:.3}",
+        if answered > 0 { correct as f64 / answered as f64 } else { 0.0 }
+    );
     println!("{}", stats.report());
     Ok(())
 }

@@ -13,5 +13,5 @@ pub mod network;
 pub mod systolic;
 
 pub use device::{AcceleratorConfig, Dataflow};
-pub use latency::LatencyModel;
+pub use latency::{LatencyModel, CLOUD_DISPATCH_S, EDGE_DISPATCH_S};
 pub use network::Uplink;

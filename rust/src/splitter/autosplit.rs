@@ -221,6 +221,40 @@ pub fn auto_split_solutions(
     Planner::new(cfg.clone()).solutions(g, profile, lm, task)
 }
 
+/// Per-layer edge-latency table over the candidate bit grid, built
+/// **once per planner run** and shared read-only across all split
+/// candidates (it used to be recomputed lazily inside every candidate —
+/// `O(candidates × layers × bits²)` latency-model evaluations instead of
+/// `O(layers × bits²)`).
+///
+/// Values are exactly `lm.edge_layer(g, id, bits[wk], bits[ak])`, so a
+/// memoized plan is bit-identical to the unmemoized reference path.
+#[derive(Debug, Clone)]
+pub(crate) struct EdgeLatMemo {
+    nb: usize,
+    lat: Vec<f64>,
+}
+
+impl EdgeLatMemo {
+    pub(crate) fn build(g: &Graph, bits: &[u8], lm: &LatencyModel) -> Self {
+        let nb = bits.len();
+        let mut lat = vec![0.0f64; g.len() * nb * nb];
+        for id in 0..g.len() {
+            for (wk, &wb) in bits.iter().enumerate() {
+                for (ak, &ab) in bits.iter().enumerate() {
+                    lat[(id * nb + wk) * nb + ak] = lm.edge_layer(g, id, wb, ab);
+                }
+            }
+        }
+        EdgeLatMemo { nb, lat }
+    }
+
+    #[inline]
+    fn get(&self, id: usize, wk: usize, ak: usize) -> f64 {
+        self.lat[(id * self.nb + wk) * self.nb + ak]
+    }
+}
+
 /// Extend the distortion table with a 16-bit (zero-distortion) column so
 /// float assignments can be evaluated with the same machinery.
 pub fn table_with16(t: &DistortionTable) -> DistortionTable {
@@ -253,6 +287,7 @@ pub(crate) fn explore_split(
     lm: &LatencyModel,
     task: Task,
     cfg: &AutoSplitConfig,
+    memo: Option<&EdgeLatMemo>,
 ) -> Vec<Solution> {
     let mut out = Vec::new();
     let bits = &cfg.bit_set;
@@ -319,11 +354,16 @@ pub(crate) fn explore_split(
     let split_layer = g.layers[order[pos]].name.clone();
     let split_index = super::solutions::weighted_index(g, order, Some(pos));
     // edge_lat[k][id]: latency of layer id at (bits[k] weights, bits[k] acts)
-    // is NOT separable; but L^edge(w,a) only enters via max(comp, mem) —
-    // we precompute per (layer, w_bit, a_bit) pairs lazily in a flat cache.
+    // is NOT separable; but L^edge(w,a) only enters via max(comp, mem).
+    // With a cross-candidate memo (the default Planner path) lookups are
+    // free here; the lazy per-candidate cache remains as the memo-less
+    // reference path so equivalence is testable.
     let nb = bits.len();
-    let mut edge_lat = vec![f64::NAN; g.len() * nb * nb];
+    let mut edge_lat = vec![f64::NAN; if memo.is_some() { 0 } else { g.len() * nb * nb }];
     let mut lat_of = |id: usize, wk: usize, ak: usize| -> f64 {
+        if let Some(m) = memo {
+            return m.get(id, wk, ak);
+        }
         let key = (id * nb + wk) * nb + ak;
         if edge_lat[key].is_nan() {
             edge_lat[key] = lm.edge_layer(g, id, bits[wk], bits[ak]);

@@ -25,7 +25,9 @@
 //! The `planner_equivalence` integration test locks this property, and
 //! the golden-plan fixtures lock the plans themselves.
 
-use super::autosplit::{evaluate_assignment, explore_split, table_with16, AutoSplitConfig};
+use super::autosplit::{
+    evaluate_assignment, explore_split, table_with16, AutoSplitConfig, EdgeLatMemo,
+};
 use super::candidates::{edge_only_fits, potential_splits};
 use super::solutions::{Solution, SolutionList};
 use crate::graph::{Graph, NodeId};
@@ -42,22 +44,33 @@ pub struct Planner {
     cfg: AutoSplitConfig,
     /// Worker threads for the candidate grid; 0 = one per available core.
     threads: usize,
+    /// Precompute the per-layer edge-latency table once per run and share
+    /// it across candidates (bit-identical results; on by default).
+    edge_memo: bool,
 }
 
 impl Planner {
     /// Planner with the default pool (one worker per available core).
     pub fn new(cfg: AutoSplitConfig) -> Self {
-        Planner { cfg, threads: 0 }
+        Planner { cfg, threads: 0, edge_memo: true }
     }
 
     /// Single-threaded planner (the reference path for equivalence tests).
     pub fn sequential(cfg: AutoSplitConfig) -> Self {
-        Planner { cfg, threads: 1 }
+        Planner { cfg, threads: 1, edge_memo: true }
     }
 
     /// Override the worker count (0 = one per available core).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Toggle the cross-candidate edge-latency memo (the `false` path
+    /// recomputes latencies per candidate — the pre-memo reference,
+    /// kept for equivalence tests and the `optimizer_hotpath` bench).
+    pub fn with_edge_memo(mut self, on: bool) -> Self {
+        self.edge_memo = on;
         self
     }
 
@@ -150,10 +163,19 @@ impl Planner {
     ) -> Vec<Vec<Solution>> {
         let workers = self.worker_count(positions.len());
         let cfg = &self.cfg;
+        // The edge-latency memo is built once and shared read-only by
+        // every worker; candidates no longer re-derive per-layer edge
+        // latencies (see `EdgeLatMemo`).
+        let memo = if self.edge_memo {
+            Some(EdgeLatMemo::build(g, &cfg.bit_set, lm))
+        } else {
+            None
+        };
+        let memo = memo.as_ref();
         if workers <= 1 || positions.len() <= 1 {
             return positions
                 .iter()
-                .map(|&pos| explore_split(g, order, pos, table, lm, task, cfg))
+                .map(|&pos| explore_split(g, order, pos, table, lm, task, cfg, memo))
                 .collect();
         }
 
@@ -169,7 +191,7 @@ impl Planner {
                     if i >= positions.len() {
                         break;
                     }
-                    let sols = explore_split(g, order, positions[i], table, lm, task, cfg);
+                    let sols = explore_split(g, order, positions[i], table, lm, task, cfg, memo);
                     *slots[i].lock().unwrap() = sols;
                 });
             }
@@ -219,6 +241,20 @@ mod tests {
         let (list_b, sel_b) = Planner::sequential(cfg).plan(&g, &profile, &lm, task);
         assert_eq!(list_a, list_b);
         assert_eq!(sel_a, sel_b);
+    }
+
+    #[test]
+    fn memoized_matches_unmemoized_bitwise() {
+        // the cross-candidate edge-latency memo must not perturb plans:
+        // same values, same evaluation order, bit-identical solutions
+        let (g, profile, lm, task) = inputs("squeezenet1_0");
+        let cfg = AutoSplitConfig::default();
+        let with = Planner::new(cfg.clone()).with_threads(2).solutions(&g, &profile, &lm, task);
+        let without = Planner::new(cfg)
+            .with_threads(2)
+            .with_edge_memo(false)
+            .solutions(&g, &profile, &lm, task);
+        assert_eq!(with, without);
     }
 
     #[test]

@@ -35,21 +35,25 @@ fn inception(
 pub fn googlenet() -> Graph {
     let mut g = Graph::new("googlenet", Shape::new(3, 224, 224));
     let c1 = conv_bn_act(&mut g, "conv1", 0, 64, 7, 2, Some(ActKind::Relu));
-    let p1 = g.add("pool1", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c1], 0);
+    let p1 =
+        g.add("pool1", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c1], 0);
     let c2 = conv_bn_act(&mut g, "conv2", p1, 64, 1, 1, Some(ActKind::Relu));
     let c3 = conv_bn_act(&mut g, "conv3", c2, 192, 3, 1, Some(ActKind::Relu));
-    let p2 = g.add("pool2", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c3], 0);
+    let p2 =
+        g.add("pool2", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[c3], 0);
 
     let i3a = inception(&mut g, "3a", p2, 64, 96, 128, 16, 32, 32);
     let i3b = inception(&mut g, "3b", i3a, 128, 128, 192, 32, 96, 64);
-    let p3 = g.add("pool3", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i3b], 0);
+    let p3 =
+        g.add("pool3", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i3b], 0);
 
     let i4a = inception(&mut g, "4a", p3, 192, 96, 208, 16, 48, 64);
     let i4b = inception(&mut g, "4b", i4a, 160, 112, 224, 24, 64, 64);
     let i4c = inception(&mut g, "4c", i4b, 128, 128, 256, 24, 64, 64);
     let i4d = inception(&mut g, "4d", i4c, 112, 144, 288, 32, 64, 64);
     let i4e = inception(&mut g, "4e", i4d, 256, 160, 320, 32, 128, 128);
-    let p4 = g.add("pool4", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i4e], 0);
+    let p4 =
+        g.add("pool4", LayerKind::Pool { kernel: 3, stride: 2, kind: PoolKind::Max }, &[i4e], 0);
 
     let i5a = inception(&mut g, "5a", p4, 256, 160, 320, 32, 128, 128);
     let i5b = inception(&mut g, "5b", i5a, 384, 192, 384, 48, 128, 128);

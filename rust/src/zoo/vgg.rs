@@ -11,7 +11,8 @@ use crate::graph::{ActKind, Graph, LayerKind, NodeId, PoolKind, Shape};
 pub fn vgg16() -> Graph {
     let mut g = Graph::new("vgg16", Shape::new(3, 224, 224));
     let mut x: NodeId = 0;
-    let cfg: [&[usize]; 5] = [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let cfg: [&[usize]; 5] =
+        [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
     for (b, widths) in cfg.iter().enumerate() {
         for (i, &c) in widths.iter().enumerate() {
             x = conv_act(&mut g, &format!("conv{}_{}", b + 1, i + 1), x, c, 3, 1, ActKind::Relu);

@@ -74,9 +74,12 @@ fn yolov3_impl(name: &str, spp: bool) -> Graph {
     let neck_in = if spp {
         // SPP: three parallel maxpools (5/9/13, stride 1) + identity, concat
         let pre = conv_bn_act(&mut g, "spp.pre", top, 512, 1, 1, LEAKY);
-        let p5 = g.add("spp.p5", LayerKind::Pool { kernel: 5, stride: 1, kind: PoolKind::Max }, &[pre], 0);
-        let p9 = g.add("spp.p9", LayerKind::Pool { kernel: 9, stride: 1, kind: PoolKind::Max }, &[pre], 0);
-        let p13 = g.add("spp.p13", LayerKind::Pool { kernel: 13, stride: 1, kind: PoolKind::Max }, &[pre], 0);
+        let spp_pool = |g: &mut Graph, name: &str, kernel: usize| {
+            g.add(name, LayerKind::Pool { kernel, stride: 1, kind: PoolKind::Max }, &[pre], 0)
+        };
+        let p5 = spp_pool(&mut g, "spp.p5", 5);
+        let p9 = spp_pool(&mut g, "spp.p9", 9);
+        let p13 = spp_pool(&mut g, "spp.p13", 13);
         g.add("spp.cat", LayerKind::Concat, &[pre, p5, p9, p13], 0)
     } else {
         top

@@ -5,7 +5,9 @@
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::sim::{LatencyModel, Uplink};
-use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Placement, Planner, Solution, SolutionList};
+use auto_split::splitter::{
+    AutoSplitConfig, BaselineCtx, Placement, Planner, Solution, SolutionList,
+};
 use auto_split::util::Json;
 use auto_split::zoo;
 

@@ -122,8 +122,8 @@ fn dynamic_batching_fills_batches() {
     let Some(dir) = artifacts_dir() else { return };
     let (images, _) = load_eval_set(&dir);
     let mut cfg = ServeConfig::new(&dir);
-    cfg.max_batch = 8;
-    cfg.max_delay = std::time::Duration::from_millis(20);
+    cfg.scheduler.max_batch = 8;
+    cfg.scheduler.max_delay = std::time::Duration::from_millis(20);
     let server = Server::start(cfg).unwrap();
 
     // fire 32 async requests, then collect
@@ -134,7 +134,7 @@ fn dynamic_batching_fills_batches() {
         .collect();
     let mut max_batch_seen = 0;
     for rx in rxs {
-        let res = rx.recv().unwrap().unwrap();
+        let res = rx.recv().unwrap().unwrap().done().unwrap();
         max_batch_seen = max_batch_seen.max(res.batch_size);
     }
     let stats = server.shutdown();

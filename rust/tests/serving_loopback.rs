@@ -1,7 +1,8 @@
 //! Deterministic loopback serving e2e: drive `coordinator::Server`
 //! edge↔cloud over the in-memory link with synthetic reference artifacts
-//! (no `make artifacts` required), and assert that the request/response
-//! byte accounting matches `protocol.rs`'s header math exactly:
+//! (no `make artifacts` required — see `coordinator::testkit`), and
+//! assert that the request/response byte accounting matches
+//! `protocol.rs`'s header math exactly:
 //!
 //! ```text
 //!   tx_bytes == TX_HEADER_BYTES + payload_len
@@ -13,53 +14,21 @@
 //! plans is what the server bills.
 
 use auto_split::coordinator::{
-    ServeConfig, ServeMode, Server, WireFormat, TX_HEADER_BYTES,
+    reference_image, write_reference_artifacts, RefArtifactSpec, ServeConfig, ServeMode, Server,
+    WireFormat, TX_HEADER_BYTES,
 };
-use auto_split::profile::SplitMix64;
 use std::path::{Path, PathBuf};
 
 const IMG: usize = 16; // 256 pixels
-const BITS: usize = 4; // 2 codes/byte
 const C2: usize = 2;
-const HW: usize = 64; // C2*HW*2 == IMG*IMG
+const HW: usize = 64; // C2*HW*2 == IMG*IMG (4-bit packing)
 const CLASSES: usize = 10;
-const SCALE: f32 = 0.05;
 
-/// Write a self-contained reference-artifact directory (REFHLO dialect,
-/// see `runtime::engine`) and return its path.
+/// Write the default reference-artifact directory and return its path.
 fn write_artifacts(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir()
-        .join(format!("autosplit-loopback-{}-{tag}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-
-    let metadata = format!(
-        "{{\n  \"graph\": {{\"img\": {IMG}, \"classes\": {CLASSES}, \
-         \"packed_shape\": [{C2}, {HW}], \"act_bits\": {BITS}}},\n  \
-         \"boundary_scale\": {SCALE},\n  \"cloud_batches\": [1, 4],\n  \
-         \"params\": 1234,\n  \
-         \"accuracy\": {{\"acc_float\": 1.0, \"acc_quant_split\": 1.0}}\n}}\n"
-    );
-    std::fs::write(dir.join("metadata.json"), metadata).unwrap();
-
-    let edge = format!(
-        "REFHLO v1\nprogram: edge_pack\nimg: {IMG}\nbits: {BITS}\n\
-         c2: {C2}\nhw: {HW}\nscale: {SCALE}\n"
-    );
-    std::fs::write(dir.join("lpr_edge_b1.hlo.txt"), edge).unwrap();
-
-    for b in [1usize, 4] {
-        let cloud = format!(
-            "REFHLO v1\nprogram: cloud_logits\nbatch: {b}\nc2: {C2}\n\
-             hw: {HW}\nbits: {BITS}\nscale: {SCALE}\nclasses: {CLASSES}\n\
-             seed: 42\n"
-        );
-        std::fs::write(dir.join(format!("lpr_cloud_b{b}.hlo.txt")), cloud).unwrap();
-    }
-
-    let full = format!(
-        "REFHLO v1\nprogram: full_logits\nimg: {IMG}\nclasses: {CLASSES}\nseed: 43\n"
-    );
-    std::fs::write(dir.join("lpr_full_b1.hlo.txt"), full).unwrap();
+    let name = format!("autosplit-loopback-{}-{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    write_reference_artifacts(&dir, &RefArtifactSpec::default()).unwrap();
     dir
 }
 
@@ -69,8 +38,7 @@ fn cleanup(dir: &Path) {
 
 /// Deterministic pseudo-image in [0, 1).
 fn image(seed: u64) -> Vec<f32> {
-    let mut rng = SplitMix64::new(seed);
-    (0..IMG * IMG).map(|_| rng.next_f32()).collect()
+    reference_image(seed)
 }
 
 #[test]
@@ -89,6 +57,8 @@ fn split_loopback_byte_counts_match_protocol_header_math() {
 
     let stats = server.shutdown();
     assert_eq!(stats.requests, 1);
+    assert_eq!(stats.offered, 1);
+    assert_eq!(stats.shed, 0);
     assert_eq!(stats.tx_bytes_total, (TX_HEADER_BYTES + C2 * HW) as u64);
     cleanup(&dir);
 }
@@ -156,8 +126,8 @@ fn loopback_is_deterministic_across_servers() {
 fn loopback_batches_and_counts_every_request() {
     let dir = write_artifacts("batch");
     let mut cfg = ServeConfig::new(&dir);
-    cfg.max_batch = 4;
-    cfg.max_delay = std::time::Duration::from_millis(20);
+    cfg.scheduler.max_batch = 4;
+    cfg.scheduler.max_delay = std::time::Duration::from_millis(20);
     let server = Server::start(cfg).unwrap();
 
     let n = 12;
@@ -165,13 +135,15 @@ fn loopback_batches_and_counts_every_request() {
         .map(|i| server.submit(image(100 + i as u64)).unwrap())
         .collect();
     for rx in rxs {
-        let res = rx.recv().unwrap().expect("batched loopback response");
+        let out = rx.recv().unwrap().expect("batched loopback response");
+        let res = out.done().expect("Block admission never sheds");
         assert_eq!(res.logits.len(), CLASSES);
         assert_eq!(res.tx_bytes, TX_HEADER_BYTES + C2 * HW);
         assert!(res.batch_size >= 1 && res.batch_size <= 4);
     }
     let stats = server.shutdown();
     assert_eq!(stats.requests, n as u64);
+    assert_eq!(stats.offered, n as u64);
     assert_eq!(stats.tx_bytes_total, (n * (TX_HEADER_BYTES + C2 * HW)) as u64);
     cleanup(&dir);
 }
@@ -204,5 +176,6 @@ fn loopback_rejects_malformed_without_poisoning() {
     assert_eq!(ok.logits.len(), CLASSES);
     let stats = server.shutdown();
     assert_eq!(stats.requests, 1, "failed request must not be counted");
+    assert_eq!(stats.offered, 2, "both requests passed admission");
     cleanup(&dir);
 }

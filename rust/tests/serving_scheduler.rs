@@ -1,0 +1,255 @@
+//! Scheduler integration: drive the sharded cloud pool over the
+//! in-memory link with synthetic REFHLO artifacts and lock the subsystem
+//! contracts:
+//!
+//! * every submitted request is answered-or-shed **exactly once**
+//!   (`completed + shed + errors == offered`);
+//! * shed counts match the admission policy (`Block` never sheds;
+//!   `ShedNewest` refuses the newest, `ShedOldest` evicts the oldest);
+//! * the admission queue depth never exceeds `queue_cap`;
+//! * per-shard batch/request counters sum to the totals;
+//! * batch-affinity routing pins an engine batch size to one shard;
+//! * the SLO drain rule closes batches long before the fixed window;
+//! * `poisson_schedule` and the mixed open/closed workload are bit-stable
+//!   in their seed.
+
+use auto_split::coordinator::{
+    closed_loop, mixed_workload, poisson_schedule, run_mixed, write_reference_artifacts,
+    AdmissionPolicy, DelayMode, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig,
+    ServeConfig, Server,
+};
+use auto_split::sim::Uplink;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn write_artifacts(tag: &str) -> PathBuf {
+    let name = format!("autosplit-scheduler-{}-{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    write_reference_artifacts(&dir, &RefArtifactSpec::default()).unwrap();
+    dir
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let spec = RefArtifactSpec::default();
+    (0..n).map(|i| spec.image(500 + i as u64)).collect()
+}
+
+#[test]
+fn sharded_pool_answers_every_request_exactly_once() {
+    let dir = write_artifacts("shards");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.scheduler = SchedulerConfig::default().with_shards(4).with_route(RoutePolicy::RoundRobin);
+    cfg.scheduler.max_batch = 4;
+    let server = Server::start(cfg).expect("start 4-shard server");
+
+    let n = 32u64;
+    let rxs: Vec<_> = images(n as usize)
+        .into_iter()
+        .map(|img| server.submit(img).unwrap())
+        .collect();
+    let mut done = 0u64;
+    for rx in rxs {
+        // exactly one terminal message per request
+        let out = rx.recv().expect("response").expect("no pipeline error");
+        match out {
+            Outcome::Done(res) => {
+                assert!(res.shard < 4, "shard id in range");
+                assert_eq!(res.logits.len(), 10);
+                done += 1;
+            }
+            Outcome::Shed(_) => panic!("Block admission must never shed"),
+        }
+        // ...and never a second one
+        assert!(rx.try_recv().is_err(), "exactly one response per request");
+    }
+    assert_eq!(done, n);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.offered, n);
+    assert_eq!(stats.requests, n);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.shard_batches.len(), 4);
+    assert_eq!(stats.shard_batches.iter().sum::<u64>(), stats.batches);
+    assert_eq!(stats.shard_requests.iter().sum::<u64>(), stats.requests);
+    cleanup(&dir);
+}
+
+/// Overload harness: RealSleep over a very slow uplink makes the edge
+/// stage take ~40 ms per request, so a fast burst fills the admission
+/// queue deterministically.
+fn overloaded_config(dir: &Path, policy: AdmissionPolicy, cap: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(dir);
+    cfg.uplink = Uplink::mbps(0.05);
+    cfg.delay = DelayMode::RealSleep;
+    cfg.scheduler = SchedulerConfig::default().with_queue_cap(cap).with_admission(policy);
+    cfg
+}
+
+#[test]
+fn shed_newest_under_overload_accounts_every_request() {
+    let dir = write_artifacts("shednew");
+    let cap = 4;
+    let cfg = overloaded_config(&dir, AdmissionPolicy::ShedNewest, cap);
+    let server = Server::start(cfg).unwrap();
+
+    let n = 40;
+    let pool = images(8);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(pool[i % pool.len()].clone()).unwrap())
+        .collect();
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    for rx in rxs.iter() {
+        match rx.recv().expect("terminal response") {
+            Ok(Outcome::Done(_)) => completed += 1,
+            Ok(Outcome::Shed(info)) => {
+                assert_eq!(info.policy, AdmissionPolicy::ShedNewest);
+                assert!(info.queue_depth <= cap, "shed at depth {}", info.queue_depth);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected pipeline error: {e:#}"),
+        }
+        assert!(rx.try_recv().is_err(), "exactly one response per request");
+    }
+    // every request accounted: completed + shed == offered
+    assert_eq!(completed + shed, n);
+    assert!(shed > 0, "a {cap}-deep queue under a 40-burst must shed");
+    assert!(completed >= cap, "queued requests must still be served");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.offered, n as u64);
+    assert_eq!(stats.requests + stats.shed, stats.offered);
+    assert_eq!(stats.shed, shed as u64);
+    // the queue never grew past its capacity
+    assert!(stats.queue_peak <= cap as u64, "peak {} > cap {cap}", stats.queue_peak);
+    cleanup(&dir);
+}
+
+#[test]
+fn shed_oldest_keeps_the_newest_request() {
+    let dir = write_artifacts("shedold");
+    let cfg = overloaded_config(&dir, AdmissionPolicy::ShedOldest, 4);
+    let server = Server::start(cfg).unwrap();
+
+    let n = 30;
+    let pool = images(4);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(pool[i % pool.len()].clone()).unwrap())
+        .collect();
+    let outcomes: Vec<Outcome> = rxs
+        .iter()
+        .map(|rx| rx.recv().expect("terminal response").expect("no error"))
+        .collect();
+    let completed = outcomes.iter().filter(|o| o.as_done().is_some()).count();
+    let shed = outcomes.iter().filter(|o| o.is_shed()).count();
+    assert_eq!(completed + shed, n, "answered-or-shed exactly once");
+    assert!(shed > 0, "overload must shed");
+    // head-drop keeps the *latest* arrivals: the last submission can never
+    // be evicted (eviction only happens on later pushes)
+    assert!(
+        outcomes.last().unwrap().as_done().is_some(),
+        "ShedOldest must keep the newest request"
+    );
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests + stats.shed, stats.offered);
+    cleanup(&dir);
+}
+
+#[test]
+fn batch_affinity_pins_singleton_batches_to_one_shard() {
+    let dir = write_artifacts("affinity");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.scheduler =
+        SchedulerConfig::default().with_shards(2).with_route(RoutePolicy::BatchAffinity);
+    let server = Server::start(cfg).unwrap();
+
+    // sequential closed-loop singles → every batch pads to engine size 1
+    // → affinity must route them all to the same shard
+    let mut shards_seen = std::collections::BTreeSet::new();
+    for img in images(10) {
+        let res = server.infer(img).unwrap();
+        assert_eq!(res.batch_size, 1);
+        shards_seen.insert(res.shard);
+    }
+    assert_eq!(shards_seen.len(), 1, "affinity must pin engine b=1 to one shard");
+
+    let stats = server.shutdown();
+    let used: Vec<u64> = stats.shard_requests.iter().copied().filter(|&r| r > 0).collect();
+    assert_eq!(used, vec![10], "all requests on a single hot shard");
+    cleanup(&dir);
+}
+
+#[test]
+fn slo_rule_closes_batches_before_the_window() {
+    let dir = write_artifacts("slo");
+    let mut cfg = ServeConfig::new(&dir);
+    // absurd fixed window: without the SLO rule the first response would
+    // take ~10 s; the 5 ms budget must cut it to milliseconds
+    cfg.scheduler.max_delay = Duration::from_secs(10);
+    cfg.scheduler = cfg.scheduler.with_slo(Duration::from_millis(5));
+    let server = Server::start(cfg).unwrap();
+
+    let t0 = Instant::now();
+    let res = server.infer(images(1)[0].clone()).expect("infer under SLO");
+    let elapsed = t0.elapsed();
+    assert_eq!(res.logits.len(), 10);
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "SLO batcher must not wait out the 10 s window (took {elapsed:?})"
+    );
+
+    let stats = server.shutdown();
+    assert!(stats.batch_slo_closes >= 1, "the drain must be SLO-bound");
+    cleanup(&dir);
+}
+
+#[test]
+fn closed_loop_and_mixed_account_every_request() {
+    let dir = write_artifacts("mixed");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.scheduler = SchedulerConfig::default().with_shards(2);
+    let server = Server::start(cfg).unwrap();
+    let pool = images(8);
+
+    let closed = closed_loop(&server, &pool, 4, 6).unwrap();
+    assert_eq!(closed.requests, 24);
+    assert_eq!(closed.completed, 24);
+    assert!(closed.fully_accounted());
+    assert!(closed.quantile(0.99) >= closed.quantile(0.5));
+
+    let wl = mixed_workload(400.0, 20, 2, 5, pool.len(), 9);
+    let mr = run_mixed(&server, &pool, &wl).unwrap();
+    assert!(mr.open.fully_accounted(), "open half accounted");
+    assert!(mr.closed.fully_accounted(), "closed half accounted");
+    assert_eq!(mr.total_offered(), 20 + 10);
+    assert_eq!(mr.total_shed(), 0, "Block admission never sheds");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.offered, 54, "24 closed-loop + 30 mixed requests");
+    assert_eq!(stats.requests + stats.shed, stats.offered);
+    cleanup(&dir);
+}
+
+#[test]
+fn schedules_bit_stable_in_seed() {
+    // open-loop Poisson schedule: bit-stable
+    let a = poisson_schedule(333.0, 100, 16, 2024);
+    let b = poisson_schedule(333.0, 100, 16, 2024);
+    assert_eq!(a, b);
+    // mixed open/closed workload: bit-stable, and its open half equals the
+    // plain Poisson schedule for the same seed
+    let ma = mixed_workload(333.0, 100, 4, 25, 16, 2024);
+    let mb = mixed_workload(333.0, 100, 4, 25, 16, 2024);
+    assert_eq!(ma, mb);
+    assert_eq!(ma.open, a);
+    assert_eq!(ma.closed_images.len(), 100);
+    // a different seed must move both halves
+    let mc = mixed_workload(333.0, 100, 4, 25, 16, 2025);
+    assert_ne!(mc.open, ma.open);
+    assert_ne!(mc.closed_images, ma.closed_images);
+}
