@@ -25,7 +25,8 @@ fn main() {
     let mut rows: Vec<Vec<String>> = vec![
         vec!["graph optimize".into()],
         vec!["profile synth".into()],
-        vec!["distortion table".into()],
+        vec!["distortion table (seq)".into()],
+        vec!["distortion table (par)".into()],
         vec!["candidates (eq.6)".into()],
         vec!["min-cut (QDMP)".into()],
         vec!["Algorithm 1 (1 thread)".into()],
@@ -34,6 +35,7 @@ fn main() {
     ];
     let mut speedups = vec![];
     let mut memo_speedups = vec![];
+    let mut table_speedups = vec![];
     for name in ["resnet50", "yolov3"] {
         let (raw, _) = zoo::by_name(name).unwrap();
         let mb = ModelBench::new(name);
@@ -50,7 +52,7 @@ fn main() {
         });
         rows[1].push(format!("{:.2}ms", s.mean * 1e3));
 
-        let s = bench(1, 5, || {
+        let table_seq = bench(1, 5, || {
             let _ = std::hint::black_box(DistortionTable::build(
                 &mb.opt,
                 &mb.profile,
@@ -58,12 +60,27 @@ fn main() {
                 Metric::Mse,
             ));
         });
-        rows[2].push(format!("{:.2}ms", s.mean * 1e3));
+        rows[2].push(format!("{:.2}ms", table_seq.mean * 1e3));
+
+        // the layer-parallel profiling pass (ROADMAP planner scale-out
+        // item (a)); bit-identical to sequential, one worker per core
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let table_par = bench(1, 5, || {
+            let _ = std::hint::black_box(DistortionTable::build_parallel(
+                &mb.opt,
+                &mb.profile,
+                &[2, 4, 6, 8],
+                Metric::Mse,
+                workers,
+            ));
+        });
+        rows[3].push(format!("{:.2}ms", table_par.mean * 1e3));
+        table_speedups.push((name, table_seq.mean / table_par.mean));
 
         let s = bench(1, 10, || {
             let _ = std::hint::black_box(potential_splits(&mb.opt, &order, 2, 32 << 20));
         });
-        rows[3].push(format!("{:.2}ms", s.mean * 1e3));
+        rows[4].push(format!("{:.2}ms", s.mean * 1e3));
 
         let n = mb.opt.len();
         let le: Vec<f64> = (0..n).map(|i| lm.edge_layer(&mb.opt, i, 16, 16)).collect();
@@ -73,17 +90,17 @@ fn main() {
         let s = bench(1, 10, || {
             let _ = std::hint::black_box(min_cut_split(&mb.opt, &le, &lc, &lt));
         });
-        rows[4].push(format!("{:.2}ms", s.mean * 1e3));
+        rows[5].push(format!("{:.2}ms", s.mean * 1e3));
 
         let seq = bench(1, 3, || {
             let _ = std::hint::black_box(mb.plan_sequential(&lm, mb.threshold()));
         });
-        rows[5].push(format!("{:.1}ms", seq.mean * 1e3));
+        rows[6].push(format!("{:.1}ms", seq.mean * 1e3));
 
         let par = bench(1, 3, || {
             let _ = std::hint::black_box(mb.plan(&lm, mb.threshold()));
         });
-        rows[6].push(format!("{:.1}ms", par.mean * 1e3));
+        rows[7].push(format!("{:.1}ms", par.mean * 1e3));
         speedups.push((name, seq.mean / par.mean));
 
         // the same parallel pool with the cross-candidate edge-latency
@@ -93,7 +110,7 @@ fn main() {
         let no_memo = bench(1, 3, || {
             let _ = std::hint::black_box(no_memo_planner.plan(&mb.opt, &mb.profile, &lm, mb.task));
         });
-        rows[7].push(format!("{:.1}ms", no_memo.mean * 1e3));
+        rows[8].push(format!("{:.1}ms", no_memo.mean * 1e3));
         memo_speedups.push((name, no_memo.mean / par.mean));
     }
     for r in rows {
@@ -106,6 +123,9 @@ fn main() {
     }
     for (name, s) in &memo_speedups {
         println!("edge-latency memo speedup ({name}): {s:.2}x");
+    }
+    for (name, s) in &table_speedups {
+        println!("distortion-table parallel speedup ({name}, {workers} workers): {s:.2}x");
     }
 
     // serving codec hot path

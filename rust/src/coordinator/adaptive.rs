@@ -1,0 +1,520 @@
+//! Online adaptation: estimate the link, switch the plan.
+//!
+//! The offline half of adaptive splitting is `splitter::planbank` — a
+//! precomputed table of per-network-state optimal plans. This module is
+//! the online half, three small pieces composed by `coordinator::server`:
+//!
+//! * [`LinkEstimator`] — a log-space EWMA over the per-transfer
+//!   `(wire bytes, payload seconds)` observations the existing
+//!   `Link`/`Transfer` path already produces, plus an RTT EWMA fed from
+//!   each chain's RTT charge. Log-space matters: bandwidth bins span
+//!   orders of magnitude (BLE ↔ 5G), and a linear EWMA converges
+//!   asymmetrically (fast up, pathologically slow down).
+//! * [`PlanSwitcher`] — maps the estimate onto the bank's bandwidth bins
+//!   with **hysteresis**: switch only when the estimate clears the bin
+//!   boundary by a configurable margin for K consecutive windows, so an
+//!   estimate hovering on a boundary can never flap the serving plan.
+//! * [`BwTrace`] — piecewise-constant bandwidth schedules for load
+//!   replay (`loadtest --bw-trace`), so static-vs-adaptive comparisons
+//!   run over the exact same link history.
+//!
+//! The server applies a switch **between link batches only** — a drained
+//! cloud batch is always plan-pure (`ServingStats::mid_batch_swaps`
+//! stays 0), and every switch increments `ServingStats::plan_switches`.
+
+use crate::sim::Uplink;
+use crate::splitter::PlanBank;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Online estimate of the uplink from observed transfers.
+#[derive(Debug, Clone)]
+pub struct LinkEstimator {
+    /// EWMA weight of a new sample (applied in log-space for bandwidth).
+    alpha: f64,
+    ln_bps: f64,
+    rtt_s: f64,
+}
+
+impl LinkEstimator {
+    /// Seed from the configured uplink (the operator's prior); the
+    /// estimate then tracks what the link actually delivers.
+    pub fn new(initial_bps: f64, initial_rtt_s: f64) -> Self {
+        LinkEstimator { alpha: 0.3, ln_bps: initial_bps.max(1.0).ln(), rtt_s: initial_rtt_s }
+    }
+
+    /// Fold in one transfer's bandwidth observation: `bytes` moved in
+    /// `payload_secs` of pure serialization time (RTT excluded). The
+    /// sample is application-level **goodput**, i.e. `link bps / protocol
+    /// overhead` (~5–10% below the nominal rate) — a uniform bias far
+    /// inside the switcher's margin on decade-wide bins, so bins stay in
+    /// nominal Mbps.
+    pub fn observe_payload(&mut self, bytes: usize, payload_secs: f64) {
+        if bytes == 0 || payload_secs <= 0.0 {
+            return;
+        }
+        let sample = (bytes as f64 * 8.0 / payload_secs).max(1.0).ln();
+        self.ln_bps = (1.0 - self.alpha) * self.ln_bps + self.alpha * sample;
+    }
+
+    /// Fold in one RTT observation (the per-chain RTT charge).
+    pub fn observe_rtt(&mut self, rtt_secs: f64) {
+        if rtt_secs <= 0.0 {
+            return;
+        }
+        self.rtt_s = (1.0 - self.alpha) * self.rtt_s + self.alpha * rtt_secs;
+    }
+
+    /// Estimated application-level throughput, bits per second.
+    pub fn bps(&self) -> f64 {
+        self.ln_bps.exp()
+    }
+
+    /// Estimated round-trip time, seconds.
+    pub fn rtt_s(&self) -> f64 {
+        self.rtt_s
+    }
+}
+
+/// Switch damping: the estimate must clear the bin boundary by `margin`
+/// (fractional) for `windows` consecutive observation windows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hysteresis {
+    pub margin: f64,
+    pub windows: u32,
+}
+
+impl Default for Hysteresis {
+    fn default() -> Self {
+        Hysteresis { margin: 0.25, windows: 3 }
+    }
+}
+
+/// One bandwidth bin the switcher can land in.
+#[derive(Debug, Clone)]
+pub struct SwitchBin {
+    /// Bin center, Mbps (the bank entry's network state).
+    pub mbps: f64,
+    /// Plan index (into the bank's plan list) this bin runs.
+    pub plan: usize,
+}
+
+/// Hysteretic estimate → bin mapper (see module docs).
+#[derive(Debug, Clone)]
+pub struct PlanSwitcher {
+    /// Bins in strictly ascending mbps order.
+    bins: Vec<SwitchBin>,
+    hys: Hysteresis,
+    active: usize,
+    /// Pending move direction (`true` = toward faster bins) + how many
+    /// consecutive windows it has persisted. Keyed on the *direction*
+    /// rather than the exact candidate bin, so an estimate straddling the
+    /// boundary between two non-active bins still accumulates windows
+    /// instead of resetting forever.
+    pending: Option<(bool, u32)>,
+}
+
+impl PlanSwitcher {
+    /// Build from a bank tier's `(mbps, plan)` pairs; `initial_bps` seeds
+    /// the active bin.
+    pub fn new(mut bins: Vec<SwitchBin>, hys: Hysteresis, initial_bps: f64) -> Self {
+        assert!(!bins.is_empty(), "switcher needs at least one bin");
+        bins.sort_by(|a, b| a.mbps.partial_cmp(&b.mbps).unwrap());
+        let mut sw = PlanSwitcher { bins, hys, active: 0, pending: None };
+        sw.active = sw.bin_for(initial_bps);
+        sw
+    }
+
+    /// The bin whose geometric boundaries contain `bps`.
+    fn bin_for(&self, bps: f64) -> usize {
+        let mbps = bps / 1e6;
+        for i in 0..self.bins.len() - 1 {
+            let boundary = (self.bins[i].mbps * self.bins[i + 1].mbps).sqrt();
+            if mbps < boundary {
+                return i;
+            }
+        }
+        self.bins.len() - 1
+    }
+
+    /// Does `bps` clear the boundary adjacent to the active bin, in the
+    /// direction of `target`, by the hysteresis margin?
+    fn clears_margin(&self, bps: f64, target: usize) -> bool {
+        let mbps = bps / 1e6;
+        if target > self.active {
+            let b = (self.bins[self.active].mbps * self.bins[self.active + 1].mbps).sqrt();
+            mbps > b * (1.0 + self.hys.margin)
+        } else {
+            let b = (self.bins[self.active - 1].mbps * self.bins[self.active].mbps).sqrt();
+            mbps < b / (1.0 + self.hys.margin)
+        }
+    }
+
+    /// Index of the active bin.
+    pub fn active_bin(&self) -> usize {
+        self.active
+    }
+
+    /// Plan index of the active bin.
+    pub fn plan(&self) -> usize {
+        self.bins[self.active].plan
+    }
+
+    /// Feed one observation window's bandwidth estimate. Returns the new
+    /// active **plan index** when (and only when) a switch fires.
+    pub fn tick(&mut self, est_bps: f64) -> Option<usize> {
+        let raw = self.bin_for(est_bps);
+        if raw == self.active || !self.clears_margin(est_bps, raw) {
+            self.pending = None;
+            return None;
+        }
+        let up = raw > self.active;
+        let count = match self.pending {
+            Some((dir, n)) if dir == up => n + 1,
+            _ => 1,
+        };
+        if count >= self.hys.windows {
+            self.pending = None;
+            let before = self.bins[self.active].plan;
+            // land on the window's latest bin in the sustained direction
+            self.active = raw;
+            let after = self.bins[self.active].plan;
+            // crossing bins that share a deduped plan is not a plan switch
+            if after != before {
+                return Some(after);
+            }
+            return None;
+        }
+        self.pending = Some((up, count));
+        None
+    }
+}
+
+/// One step of a piecewise-constant bandwidth trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStep {
+    /// Offset from the start of the replay.
+    pub at: Duration,
+    pub mbps: f64,
+    pub rtt_ms: f64,
+}
+
+/// A piecewise-constant Mbps schedule for load replay. Plain text, one
+/// step per line: `at_seconds mbps [rtt_ms]` (default RTT 10 ms, `#`
+/// comments). The named preset `ble-wifi-3g` is the ISSUE's demo trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BwTrace {
+    pub steps: Vec<TraceStep>,
+}
+
+impl BwTrace {
+    /// Parse the text format (sorted, non-empty).
+    pub fn parse(text: &str) -> Result<BwTrace> {
+        let mut steps = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let at: f64 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("trace line {}: bad time", lineno + 1))?;
+            let mbps: f64 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("trace line {}: bad mbps", lineno + 1))?;
+            let rtt_ms: f64 = match it.next() {
+                Some(s) => {
+                    s.parse().with_context(|| format!("trace line {}: bad rtt", lineno + 1))?
+                }
+                None => 10.0,
+            };
+            anyhow::ensure!(at >= 0.0 && mbps > 0.0, "trace line {}: bad values", lineno + 1);
+            steps.push(TraceStep { at: Duration::from_secs_f64(at), mbps, rtt_ms });
+        }
+        anyhow::ensure!(!steps.is_empty(), "empty bandwidth trace");
+        anyhow::ensure!(
+            steps.windows(2).all(|w| w[0].at <= w[1].at),
+            "trace steps must be sorted by time"
+        );
+        Ok(BwTrace { steps })
+    }
+
+    /// The BLE→WiFi→3G demo trace over a `total`-long replay: BLE for the
+    /// first 20%, WiFi for the next 20%, 3G for the remaining 60% (the 3G
+    /// majority puts the p50 where the mid-bandwidth plan decides it).
+    pub fn ble_wifi_3g(total: Duration) -> BwTrace {
+        let frac = |f: f64| Duration::from_secs_f64(total.as_secs_f64() * f);
+        BwTrace {
+            steps: vec![
+                TraceStep { at: Duration::ZERO, mbps: 0.27, rtt_ms: 50.0 },
+                TraceStep { at: frac(0.2), mbps: 54.0, rtt_ms: 5.0 },
+                TraceStep { at: frac(0.4), mbps: 3.0, rtt_ms: 65.0 },
+            ],
+        }
+    }
+
+    /// Resolve a `--bw-trace` argument: an existing file parses as the
+    /// text format; otherwise the preset names are tried (`ble-wifi-3g`),
+    /// scaled to `total_hint`.
+    pub fn from_arg(arg: &str, total_hint: Duration) -> Result<BwTrace> {
+        let p = Path::new(arg);
+        if p.exists() {
+            let text =
+                std::fs::read_to_string(p).with_context(|| format!("read trace {arg:?}"))?;
+            return BwTrace::parse(&text);
+        }
+        match arg {
+            "ble-wifi-3g" => Ok(BwTrace::ble_wifi_3g(total_hint)),
+            other => anyhow::bail!("--bw-trace {other:?}: no such file and no such preset"),
+        }
+    }
+
+    /// The step in force at offset `t` (the last step with `at <= t`;
+    /// before the first step, the first step).
+    pub fn step_at(&self, t: Duration) -> &TraceStep {
+        let mut cur = &self.steps[0];
+        for s in &self.steps {
+            if s.at <= t {
+                cur = s;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// The uplink in force at offset `t`.
+    pub fn uplink_at(&self, t: Duration) -> Uplink {
+        let s = self.step_at(t);
+        Uplink::from_mbps_rtt(s.mbps, s.rtt_ms)
+    }
+}
+
+/// Serving-side adaptive configuration: the bank plus switching policy.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    pub bank: PlanBank,
+    /// Directory plan artifact paths are resolved against.
+    pub bank_dir: PathBuf,
+    /// Which SLO tier's entries drive switching (`0.0` = the no-SLO tier).
+    pub slo_tier_ms: f64,
+    pub hysteresis: Hysteresis,
+    /// Pin to one plan id: the full adaptive pipeline with switching
+    /// disabled (the static baselines of `loadtest --compare`).
+    pub pinned: Option<String>,
+}
+
+impl AdaptiveConfig {
+    pub fn new(bank: PlanBank, bank_dir: impl Into<PathBuf>) -> Self {
+        AdaptiveConfig {
+            bank,
+            bank_dir: bank_dir.into(),
+            slo_tier_ms: 0.0,
+            hysteresis: Hysteresis::default(),
+            pinned: None,
+        }
+    }
+
+    /// Load from a bank directory (containing `plan_bank.json`) or a bank
+    /// JSON file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let (file, dir) = if path.is_dir() {
+            (path.join("plan_bank.json"), path.to_path_buf())
+        } else {
+            (path.to_path_buf(), path.parent().unwrap_or(Path::new(".")).to_path_buf())
+        };
+        let text = std::fs::read_to_string(&file).with_context(|| format!("read {file:?}"))?;
+        let bank = PlanBank::parse(&text)?;
+        Ok(AdaptiveConfig::new(bank, dir))
+    }
+
+    pub fn with_pinned(mut self, id: impl Into<String>) -> Self {
+        self.pinned = Some(id.into());
+        self
+    }
+}
+
+/// The live adaptive state shared by the edge workers (behind one mutex):
+/// estimator + switcher + the currently active plan index.
+#[derive(Debug)]
+pub struct AdaptiveRt {
+    pub est: LinkEstimator,
+    pub switcher: PlanSwitcher,
+    /// Active plan index (into the bank's plan list).
+    pub active: usize,
+    /// When pinned, ticks are ignored and `active` never moves.
+    pub pinned: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bins3() -> Vec<SwitchBin> {
+        vec![
+            SwitchBin { mbps: 0.27, plan: 0 },
+            SwitchBin { mbps: 3.0, plan: 1 },
+            SwitchBin { mbps: 54.0, plan: 2 },
+        ]
+    }
+
+    #[test]
+    fn estimator_converges_in_both_directions() {
+        let mut e = LinkEstimator::new(3e6, 0.065);
+        // 1 KB transfers at an actual 54 Mbps payload rate
+        for _ in 0..40 {
+            e.observe_payload(1000, 1000.0 * 8.0 / 54e6);
+        }
+        assert!((e.bps() / 54e6 - 1.0).abs() < 0.01, "up: {}", e.bps());
+        // …then the link collapses to BLE
+        for _ in 0..40 {
+            e.observe_payload(1000, 1000.0 * 8.0 / 0.27e6);
+        }
+        assert!((e.bps() / 0.27e6 - 1.0).abs() < 0.01, "down: {}", e.bps());
+    }
+
+    #[test]
+    fn estimator_log_ewma_is_direction_symmetric() {
+        // after k identical samples the log-distance shrinks by the same
+        // factor whether the move is up or down
+        let mut up = LinkEstimator::new(0.27e6, 0.05);
+        let mut down = LinkEstimator::new(54e6, 0.005);
+        for _ in 0..5 {
+            up.observe_payload(1000, 1000.0 * 8.0 / 54e6);
+            down.observe_payload(1000, 1000.0 * 8.0 / 0.27e6);
+        }
+        let up_remaining = (54e6f64 / up.bps()).ln();
+        let down_remaining = (down.bps() / 0.27e6f64).ln();
+        assert!((up_remaining - down_remaining).abs() < 1e-6);
+    }
+
+    #[test]
+    fn estimator_tracks_rtt_and_ignores_degenerate_samples() {
+        let mut e = LinkEstimator::new(3e6, 0.065);
+        for _ in 0..60 {
+            e.observe_rtt(0.005);
+        }
+        assert!((e.rtt_s() - 0.005).abs() < 1e-4);
+        let before = e.bps();
+        e.observe_payload(0, 1.0);
+        e.observe_payload(100, 0.0);
+        e.observe_rtt(0.0);
+        assert_eq!(e.bps(), before, "degenerate samples must not move the estimate");
+    }
+
+    #[test]
+    fn switcher_seeds_active_bin_from_initial_bps() {
+        let sw = PlanSwitcher::new(bins3(), Hysteresis::default(), 0.27e6);
+        assert_eq!(sw.active_bin(), 0);
+        assert_eq!(sw.plan(), 0);
+        let sw = PlanSwitcher::new(bins3(), Hysteresis::default(), 54e6);
+        assert_eq!(sw.plan(), 2);
+        let sw = PlanSwitcher::new(bins3(), Hysteresis::default(), 3e6);
+        assert_eq!(sw.plan(), 1);
+    }
+
+    #[test]
+    fn switcher_requires_k_consecutive_windows() {
+        let hys = Hysteresis { margin: 0.25, windows: 3 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        // two windows at WiFi: not yet
+        assert_eq!(sw.tick(54e6), None);
+        assert_eq!(sw.tick(54e6), None);
+        // third consecutive window: switch fires
+        assert_eq!(sw.tick(54e6), Some(2));
+        assert_eq!(sw.plan(), 2);
+        // steady state: no further switches
+        assert_eq!(sw.tick(54e6), None);
+    }
+
+    #[test]
+    fn switcher_never_flaps_on_a_boundary_oscillating_trace() {
+        // the ble↔3g boundary is sqrt(0.27·3) ≈ 0.9 Mbps; oscillate ±10%
+        // around it — inside the 25% margin — for many windows
+        let hys = Hysteresis { margin: 0.25, windows: 3 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        let boundary = (0.27f64 * 3.0).sqrt() * 1e6;
+        for i in 0..200 {
+            let est = if i % 2 == 0 { boundary * 1.1 } else { boundary * 0.9 };
+            assert_eq!(sw.tick(est), None, "window {i} must not switch");
+        }
+        assert_eq!(sw.plan(), 0, "plan never moved");
+    }
+
+    #[test]
+    fn switcher_alternation_beyond_margin_still_no_flap() {
+        // margin-clearing but non-consecutive windows reset the counter
+        let hys = Hysteresis { margin: 0.25, windows: 3 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        for _ in 0..50 {
+            assert_eq!(sw.tick(3e6), None, "candidate window");
+            assert_eq!(sw.tick(0.3e6), None, "reset window");
+        }
+        assert_eq!(sw.plan(), 0);
+    }
+
+    #[test]
+    fn switcher_straddling_a_far_boundary_still_switches() {
+        // the estimate hovers on the 3↔54 boundary (~12.7 Mbps) while BLE
+        // is active: the raw bin alternates between two non-active bins,
+        // but the *direction* is sustained, so the switch must still fire
+        let hys = Hysteresis { margin: 0.25, windows: 3 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        let fired: Vec<Option<usize>> = [13e6, 12e6, 13e6].iter().map(|&e| sw.tick(e)).collect();
+        assert_eq!(fired[0], None);
+        assert_eq!(fired[1], None);
+        assert!(fired[2].is_some(), "third sustained up-window must switch");
+        assert!(sw.active_bin() >= 1, "left the BLE bin");
+    }
+
+    #[test]
+    fn switcher_collapses_shared_plan_bins() {
+        // adjacent bins deduped to the same plan: crossing is not a switch
+        let bins = vec![
+            SwitchBin { mbps: 1.0, plan: 0 },
+            SwitchBin { mbps: 10.0, plan: 1 },
+            SwitchBin { mbps: 100.0, plan: 1 },
+        ];
+        let mut sw = PlanSwitcher::new(bins, Hysteresis { margin: 0.1, windows: 1 }, 10e6);
+        assert_eq!(sw.tick(100e6), None, "same plan, different bin");
+        assert_eq!(sw.active_bin(), 2);
+        assert_eq!(sw.plan(), 1);
+    }
+
+    #[test]
+    fn trace_parses_and_steps() {
+        let t = BwTrace::parse("# demo\n0 0.27 50\n0.8 54 5\n1.6 3 65\n").unwrap();
+        assert_eq!(t.steps.len(), 3);
+        assert_eq!(t.step_at(Duration::ZERO).mbps, 0.27);
+        assert_eq!(t.step_at(Duration::from_millis(900)).mbps, 54.0);
+        assert_eq!(t.step_at(Duration::from_secs(5)).mbps, 3.0);
+        let u = t.uplink_at(Duration::from_secs(2));
+        assert_eq!(u.bps, 3e6);
+        assert!((u.rtt_s - 0.065).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_default_rtt_and_rejects_garbage() {
+        let t = BwTrace::parse("0 10\n").unwrap();
+        assert_eq!(t.steps[0].rtt_ms, 10.0);
+        assert!(BwTrace::parse("").is_err());
+        assert!(BwTrace::parse("1 0.5\n0 3\n").is_err(), "unsorted");
+        assert!(BwTrace::parse("0 -3\n").is_err());
+        assert!(BwTrace::parse("x y\n").is_err());
+    }
+
+    #[test]
+    fn preset_trace_covers_the_three_phases() {
+        let t = BwTrace::ble_wifi_3g(Duration::from_secs(10));
+        assert_eq!(t.steps.len(), 3);
+        assert_eq!(t.step_at(Duration::from_secs(1)).mbps, 0.27);
+        assert_eq!(t.step_at(Duration::from_secs(3)).mbps, 54.0);
+        assert_eq!(t.step_at(Duration::from_secs(9)).mbps, 3.0);
+        assert_eq!(BwTrace::from_arg("ble-wifi-3g", Duration::from_secs(10)).unwrap(), t);
+        assert!(BwTrace::from_arg("no-such-preset", Duration::from_secs(1)).is_err());
+    }
+}

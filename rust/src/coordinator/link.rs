@@ -41,8 +41,13 @@ pub struct Link {
 pub struct Transfer {
     pub packet: ActivationPacket,
     pub wire_bytes: usize,
-    /// Modeled network time (bandwidth + RTT).
+    /// Modeled network time (bandwidth + this transfer's share of RTT).
     pub net_time: Duration,
+    /// The RTT portion of `net_time`. A stand-alone transfer carries the
+    /// full uplink RTT; in a chained batch only the first transfer does —
+    /// the uplink pays RTT once per batch, not once per packet (the same
+    /// convention `Uplink::batch_seconds` charges).
+    pub rtt: Duration,
     /// Measured CPU time spent encoding + decoding.
     pub codec_time: Duration,
 }
@@ -62,9 +67,12 @@ impl Link {
         self
     }
 
-    /// Send a packet through the link: serialize, model the wire,
-    /// deserialize on the far side.
-    pub fn transmit(&self, packet: &ActivationPacket) -> Result<Transfer> {
+    /// Serialize + deserialize one packet and return the decoded far side
+    /// with the wire byte count and measured codec time (no wire model).
+    fn codec_roundtrip(
+        &self,
+        packet: &ActivationPacket,
+    ) -> Result<(usize, ActivationPacket, Duration)> {
         let t0 = std::time::Instant::now();
         let (wire_bytes, decoded) = match self.format {
             WireFormat::Binary => {
@@ -78,12 +86,48 @@ impl Link {
                 (n, ActivationPacket::from_ascii(&s)?)
             }
         };
-        let codec_time = t0.elapsed();
-        let net_time = Duration::from_secs_f64(self.uplink.transfer_seconds(wire_bytes));
+        Ok((wire_bytes, decoded, t0.elapsed()))
+    }
+
+    /// Send a packet through the link: serialize, model the wire,
+    /// deserialize on the far side. A stand-alone transfer pays the full
+    /// uplink RTT.
+    pub fn transmit(&self, packet: &ActivationPacket) -> Result<Transfer> {
+        let (wire_bytes, decoded, codec_time) = self.codec_roundtrip(packet)?;
+        let rtt = if wire_bytes > 0 {
+            Duration::from_secs_f64(self.uplink.rtt_s)
+        } else {
+            Duration::ZERO
+        };
+        let net_time = rtt + Duration::from_secs_f64(self.uplink.payload_seconds(wire_bytes));
         if self.delay == DelayMode::RealSleep {
             std::thread::sleep(net_time);
         }
-        Ok(Transfer { packet: decoded, wire_bytes, net_time, codec_time })
+        Ok(Transfer { packet: decoded, wire_bytes, net_time, rtt, codec_time })
+    }
+
+    /// Send a chain of packets that share one connection round: the RTT is
+    /// charged **once for the whole batch** (on the first transfer), each
+    /// packet pays its own bandwidth term. Total modeled time equals
+    /// `Uplink::batch_seconds` over the wire sizes exactly.
+    pub fn transmit_batch(&self, packets: &[ActivationPacket]) -> Result<Vec<Transfer>> {
+        let mut out = Vec::with_capacity(packets.len());
+        let mut rtt_charged = false;
+        for packet in packets {
+            let (wire_bytes, decoded, codec_time) = self.codec_roundtrip(packet)?;
+            let rtt = if !rtt_charged && wire_bytes > 0 {
+                rtt_charged = true;
+                Duration::from_secs_f64(self.uplink.rtt_s)
+            } else {
+                Duration::ZERO
+            };
+            let net_time = rtt + Duration::from_secs_f64(self.uplink.payload_seconds(wire_bytes));
+            if self.delay == DelayMode::RealSleep {
+                std::thread::sleep(net_time);
+            }
+            out.push(Transfer { packet: decoded, wire_bytes, net_time, rtt, codec_time });
+        }
+        Ok(out)
     }
 }
 
@@ -129,5 +173,40 @@ mod tests {
         let slow = Link::new(Uplink::mbps(1.0)).transmit(&p).unwrap();
         let fast = Link::new(Uplink::mbps(100.0)).transmit(&p).unwrap();
         assert!(slow.net_time > fast.net_time);
+    }
+
+    #[test]
+    fn single_transfer_carries_full_rtt() {
+        let link = Link::new(Uplink::ble());
+        let t = link.transmit(&pkt(256)).unwrap();
+        assert_eq!(t.rtt, Duration::from_secs_f64(link.uplink.rtt_s));
+        let payload = Duration::from_secs_f64(link.uplink.payload_seconds(t.wire_bytes));
+        assert_eq!(t.net_time, t.rtt + payload);
+    }
+
+    #[test]
+    fn batched_transfers_pay_rtt_once() {
+        let link = Link::new(Uplink::cellular_3g());
+        let packets: Vec<ActivationPacket> = [64usize, 512, 128].iter().map(|&n| pkt(n)).collect();
+        let transfers = link.transmit_batch(&packets).unwrap();
+        assert_eq!(transfers.len(), 3);
+        // RTT on the first transfer only
+        assert_eq!(transfers[0].rtt, Duration::from_secs_f64(link.uplink.rtt_s));
+        assert_eq!(transfers[1].rtt, Duration::ZERO);
+        assert_eq!(transfers[2].rtt, Duration::ZERO);
+        // packets round-trip intact
+        for (t, p) in transfers.iter().zip(&packets) {
+            assert_eq!(&t.packet, p);
+        }
+        // total modeled time == Uplink::batch_seconds over the wire sizes
+        let sizes: Vec<usize> = transfers.iter().map(|t| t.wire_bytes).collect();
+        let total: f64 = transfers.iter().map(|t| t.net_time.as_secs_f64()).sum();
+        assert!((total - link.uplink.batch_seconds(&sizes)).abs() < 1e-9);
+        // and strictly cheaper than three stand-alone transfers
+        let singles: f64 = packets
+            .iter()
+            .map(|p| link.transmit(p).unwrap().net_time.as_secs_f64())
+            .sum();
+        assert!(total < singles);
     }
 }

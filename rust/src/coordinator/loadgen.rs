@@ -15,6 +15,7 @@
 //! Reports account every request as completed, shed, or errored — under
 //! admission control `completed + shed + errors == offered` always holds.
 
+use super::adaptive::BwTrace;
 use super::server::{Outcome, Server};
 use crate::profile::SplitMix64;
 use crate::report::Table;
@@ -120,11 +121,41 @@ fn tally(
 /// Replay a schedule against a running server (open loop: requests are
 /// issued at their scheduled time regardless of completions).
 pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Result<LoadReport> {
+    replay_inner(server, images, schedule, None)
+}
+
+/// Replay a schedule while walking a bandwidth trace: before each arrival
+/// the live uplink is set to the trace step in force at that arrival's
+/// *scheduled* offset, so two servers replaying the same (schedule,
+/// trace) pair see the identical link history — the fair substrate for
+/// static-vs-adaptive comparisons. The trace mutates only the link; the
+/// adaptive estimator still learns purely from observed transfers.
+pub fn replay_traced(
+    server: &Server,
+    images: &[Vec<f32>],
+    schedule: &[Arrival],
+    trace: &BwTrace,
+) -> Result<LoadReport> {
+    replay_inner(server, images, schedule, Some(trace))
+}
+
+fn replay_inner(
+    server: &Server,
+    images: &[Vec<f32>],
+    schedule: &[Arrival],
+    trace: Option<&BwTrace>,
+) -> Result<LoadReport> {
     let start = Instant::now();
     let mut pending = Vec::with_capacity(schedule.len());
     let mut shed = 0usize;
     let mut errors = 0usize;
+    if let Some(t) = trace {
+        server.set_uplink(t.uplink_at(Duration::ZERO));
+    }
     for a in schedule {
+        if let Some(t) = trace {
+            server.set_uplink(t.uplink_at(a.at));
+        }
         let target = start + a.at;
         if let Some(wait) = target.checked_duration_since(Instant::now()) {
             std::thread::sleep(wait);
@@ -304,6 +335,29 @@ pub fn run_mixed(server: &Server, images: &[Vec<f32>], wl: &MixedWorkload) -> Re
     Ok(MixedReport { open: open_report.expect("open replay ran")?, closed })
 }
 
+/// Render the static-vs-adaptive comparison: one row per serving
+/// configuration replayed over the identical (schedule, bandwidth-trace)
+/// pair. Rows are `(name, report, plan_switches, mid_batch_swaps)`.
+pub fn adaptive_table(title: &str, rows: &[(String, LoadReport, u64, u64)]) -> String {
+    let mut t = Table::new(
+        title,
+        &["config", "p50 ms", "p95 ms", "p99 ms", "completed", "shed", "switches", "mixed"],
+    );
+    for (name, r, switches, mixed) in rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.2}", r.quantile(0.5) * 1e3),
+            format!("{:.2}", r.quantile(0.95) * 1e3),
+            format!("{:.2}", r.quantile(0.99) * 1e3),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            switches.to_string(),
+            mixed.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Render a per-policy (or per-configuration) comparison table from named
 /// load reports — the standard artifact of an admission/routing sweep.
 pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
@@ -409,6 +463,25 @@ mod tests {
         let open_only = poisson_schedule(120.0, 40, 8, 77);
         let mixed = mixed_workload(120.0, 40, 3, 5, 8, 77);
         assert_eq!(mixed.open, open_only);
+    }
+
+    #[test]
+    fn adaptive_table_renders_switch_counters() {
+        let r = LoadReport {
+            offered_rps: 100.0,
+            achieved_rps: 100.0,
+            requests: 50,
+            completed: 50,
+            shed: 0,
+            errors: 0,
+            latencies: vec![0.01; 50],
+        };
+        let s = adaptive_table(
+            "static vs adaptive",
+            &[("adaptive".into(), r.clone(), 3, 0), ("static-ble".into(), r, 0, 0)],
+        );
+        assert!(s.contains("adaptive") && s.contains("static-ble"), "{s}");
+        assert!(s.contains("switches"), "{s}");
     }
 
     #[test]

@@ -91,14 +91,38 @@ pub struct ServingStats {
     pub shard_batches: Vec<u64>,
     /// Per-shard served request counts (index = shard id).
     pub shard_requests: Vec<u64>,
+    /// Per-edge-worker processed request counts (index = edge worker id).
+    pub edge_requests: Vec<u64>,
+    /// Per-plan processed request counts (index = bank plan; a single
+    /// slot for a static server).
+    pub plan_requests: Vec<u64>,
+    /// Adaptive plan switches applied (always between link batches).
+    pub plan_switches: u64,
+    /// Cloud batches that mixed plans — the invariant counter; the
+    /// dispatcher closes batches at plan boundaries, so this stays 0.
+    pub mid_batch_swaps: u64,
+    /// Active plan index at snapshot time.
+    pub active_plan: u64,
+    /// Link estimator's bandwidth estimate at snapshot time, bits/s.
+    pub est_bps: f64,
+    /// Link estimator's RTT estimate at snapshot time, seconds.
+    pub est_rtt_s: f64,
 }
 
 impl ServingStats {
     /// Stats sized for an `n`-shard cloud pool.
     pub fn with_shards(n: usize) -> Self {
+        ServingStats::sized(n, 1, 1)
+    }
+
+    /// Stats sized for the full pipeline shape: cloud shards × edge
+    /// workers × banked plans.
+    pub fn sized(shards: usize, edge_workers: usize, plans: usize) -> Self {
         ServingStats {
-            shard_batches: vec![0; n.max(1)],
-            shard_requests: vec![0; n.max(1)],
+            shard_batches: vec![0; shards.max(1)],
+            shard_requests: vec![0; shards.max(1)],
+            edge_requests: vec![0; edge_workers.max(1)],
+            plan_requests: vec![0; plans.max(1)],
             ..ServingStats::default()
         }
     }
@@ -137,12 +161,28 @@ impl ServingStats {
             .map(|(i, (b, r))| format!("s{i}:{b}b/{r}r"))
             .collect::<Vec<_>>()
             .join(" ");
+        let edges = self
+            .edge_requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| format!("e{i}:{r}r"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let plans = self
+            .plan_requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| format!("p{i}:{r}r"))
+            .collect::<Vec<_>>()
+            .join(" ");
         format!(
             "requests={} shed={} offered={} batches={} (mean batch {:.2})  \
              throughput={:.1} req/s\n\
              e2e    p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              edge   mean={:.3}ms  net mean={:.3}ms  cloud mean={:.3}ms  queue mean={:.3}ms\n\
-             queue  depth={} peak={}  slo_closes={}  shards: [{}]\n\
+             queue  depth={} peak={}  slo_closes={}  shards: [{}]  edges: [{}]\n\
+             adaptive est={:.2}Mbps rtt={:.1}ms active=p{} switches={} \
+             mid_batch_swaps={}  plans: [{}]\n\
              tx_total={} bytes",
             self.requests,
             self.shed,
@@ -162,6 +202,13 @@ impl ServingStats {
             self.queue_peak,
             self.batch_slo_closes,
             shards,
+            edges,
+            self.est_bps / 1e6,
+            self.est_rtt_s * 1e3,
+            self.active_plan,
+            self.plan_switches,
+            self.mid_batch_swaps,
+            plans,
             self.tx_bytes_total,
         )
     }
@@ -237,5 +284,32 @@ mod tests {
         assert!(r.contains("shed=2"), "{r}");
         assert!(r.contains("peak=7"), "{r}");
         assert!(r.contains("s0:2b/2r"), "{r}");
+    }
+
+    #[test]
+    fn sized_allocates_all_counter_vectors() {
+        let s = ServingStats::sized(3, 2, 4);
+        assert_eq!(s.shard_batches.len(), 3);
+        assert_eq!(s.edge_requests.len(), 2);
+        assert_eq!(s.plan_requests.len(), 4);
+        // with_shards keeps the single-edge single-plan shape
+        let s = ServingStats::with_shards(2);
+        assert_eq!(s.edge_requests.len(), 1);
+        assert_eq!(s.plan_requests.len(), 1);
+    }
+
+    #[test]
+    fn report_includes_adaptive_counters() {
+        let mut s = ServingStats::sized(1, 2, 3);
+        s.plan_switches = 4;
+        s.est_bps = 54e6;
+        s.plan_requests = vec![10, 5, 1];
+        s.edge_requests = vec![9, 7];
+        let r = s.report();
+        assert!(r.contains("switches=4"), "{r}");
+        assert!(r.contains("est=54.00Mbps"), "{r}");
+        assert!(r.contains("p1:5r"), "{r}");
+        assert!(r.contains("e1:7r"), "{r}");
+        assert!(r.contains("mid_batch_swaps=0"), "{r}");
     }
 }

@@ -17,8 +17,11 @@
 //!
 //! Python never runs here: both partitions are AOT artifacts produced by
 //! `make artifacts`. The scheduling layer (admission control, deadline-
-//! aware batching, shard routing) lives in [`scheduler`].
+//! aware batching, shard routing) lives in [`scheduler`]; the runtime
+//! re-splitting layer (link estimation + hysteretic plan switching over a
+//! `splitter::planbank` bank) lives in [`adaptive`].
 
+pub mod adaptive;
 pub mod cloud;
 pub mod edge;
 pub mod link;
@@ -29,12 +32,15 @@ pub mod scheduler;
 pub mod server;
 pub mod testkit;
 
+pub use adaptive::{
+    AdaptiveConfig, BwTrace, Hysteresis, LinkEstimator, PlanSwitcher, SwitchBin, TraceStep,
+};
 pub use cloud::CloudWorker;
 pub use edge::{EdgeSpec, EdgeWorker};
 pub use link::{DelayMode, Link, Transfer, WireFormat};
 pub use loadgen::{
-    closed_loop, mixed_workload, poisson_schedule, policy_table, replay, run_mixed, Arrival,
-    LoadReport, MixedReport, MixedWorkload,
+    adaptive_table, closed_loop, mixed_workload, poisson_schedule, policy_table, replay,
+    replay_traced, run_mixed, Arrival, LoadReport, MixedReport, MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
 pub use protocol::{ActivationPacket, TX_HEADER_BYTES};
@@ -45,4 +51,7 @@ pub use server::{
     ArtifactMeta, InferenceResult, Outcome, ResponseReceiver, ServeConfig, ServeMode, Server,
     ShedInfo,
 };
-pub use testkit::{load_eval_images, reference_image, write_reference_artifacts, RefArtifactSpec};
+pub use testkit::{
+    load_eval_images, reference_image, write_adaptive_bank, write_reference_artifacts,
+    AdaptiveBankSpec, AdaptivePlanSpec, RefArtifactSpec,
+};

@@ -144,6 +144,19 @@ impl<T> AdmissionQueue<T> {
         Admit::Enqueued
     }
 
+    /// Non-blocking pop: whatever is queued right now, or `None` on an
+    /// empty (or closed-and-drained) queue. Edge workers use this to
+    /// opportunistically chain already-waiting requests into one uplink
+    /// batch after a blocking [`AdmissionQueue::pop`].
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.q.pop_front();
+        if item.is_some() {
+            self.space.notify_one();
+        }
+        item
+    }
+
     /// Blocking pop; returns `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
@@ -265,6 +278,19 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
         assert!(producer.join().unwrap(), "blocked producer must see Closed");
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = AdmissionQueue::new(4, AdmissionPolicy::Block);
+        assert_eq!(q.try_pop(), None, "empty queue → None immediately");
+        q.push(7);
+        q.push(8);
+        assert_eq!(q.try_pop(), Some(7), "FIFO with pop");
+        assert_eq!(q.pop(), Some(8));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert_eq!(q.try_pop(), None);
     }
 
     #[test]

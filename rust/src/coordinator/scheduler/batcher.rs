@@ -96,6 +96,10 @@ pub enum DrainCause {
     /// The SLO rule fired: the oldest request's remaining budget dropped
     /// below the predicted execution time, so waiting longer would breach.
     SloBudget,
+    /// The next job belongs to a different adaptive plan: batches are
+    /// plan-pure, so the batch closes at the plan boundary (never
+    /// mid-batch — `ServingStats::mid_batch_swaps` stays 0).
+    PlanBoundary,
     /// The upstream queue disconnected (shutdown drain).
     Disconnected,
 }

@@ -42,6 +42,9 @@ use std::time::Duration;
 pub struct SchedulerConfig {
     /// Cloud worker shards; each owns its runtime and per-batch engines.
     pub shards: usize,
+    /// Edge worker threads draining the admission queue (the edge stage
+    /// sharding; each worker owns its runtime + per-plan edge engines).
+    pub edge_workers: usize,
     /// Admission queue capacity (requests waiting for edge compute).
     pub queue_cap: usize,
     /// What happens when the admission queue is full.
@@ -50,6 +53,9 @@ pub struct SchedulerConfig {
     pub route: RoutePolicy,
     /// Maximum requests per cloud batch.
     pub max_batch: usize,
+    /// Maximum requests an edge worker chains into one uplink batch (the
+    /// chain pays the link RTT once — `Uplink::batch_seconds`).
+    pub link_chain: usize,
     /// Fixed batching window (upper bound on batch-assembly waiting).
     pub max_delay: Duration,
     /// Per-request end-to-end latency budget; enables the deadline-aware
@@ -64,10 +70,12 @@ impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
             shards: 1,
+            edge_workers: 1,
             queue_cap: 256,
             admission: AdmissionPolicy::Block,
             route: RoutePolicy::RoundRobin,
             max_batch: 8,
+            link_chain: 8,
             max_delay: Duration::from_millis(2),
             slo: None,
             cost_prior: CostPrior::serving_default(),
@@ -101,6 +109,16 @@ impl SchedulerConfig {
         self.slo = Some(slo);
         self
     }
+
+    pub fn with_edge_workers(mut self, n: usize) -> Self {
+        self.edge_workers = n.max(1);
+        self
+    }
+
+    pub fn with_link_chain(mut self, n: usize) -> Self {
+        self.link_chain = n.max(1);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -111,17 +129,25 @@ mod tests {
     fn defaults_are_single_shard_blocking() {
         let c = SchedulerConfig::default();
         assert_eq!(c.shards, 1);
+        assert_eq!(c.edge_workers, 1);
         assert_eq!(c.admission, AdmissionPolicy::Block);
         assert_eq!(c.route, RoutePolicy::RoundRobin);
         assert!(c.slo.is_none());
         assert!(c.queue_cap >= 1);
+        assert!(c.link_chain >= 1);
     }
 
     #[test]
     fn builders_clamp_to_sane_minimums() {
-        let c = SchedulerConfig::default().with_shards(0).with_queue_cap(0);
+        let c = SchedulerConfig::default()
+            .with_shards(0)
+            .with_queue_cap(0)
+            .with_edge_workers(0)
+            .with_link_chain(0);
         assert_eq!(c.shards, 1);
         assert_eq!(c.queue_cap, 1);
+        assert_eq!(c.edge_workers, 1);
+        assert_eq!(c.link_chain, 1);
         let c = c
             .with_shards(4)
             .with_admission(AdmissionPolicy::ShedNewest)

@@ -1,25 +1,43 @@
-//! The serving pipeline: client → admission queue → edge worker →
+//! The serving pipeline: client → admission queue → edge worker pool →
 //! simulated uplink → SLO-aware batcher → sharded cloud pool → response.
 //!
 //! OS threads own the "devices" (PJRT handles are not `Send`, so each
 //! thread constructs its own runtime — which also mirrors the real
 //! topology: separate processes on separate machines):
 //!
-//! * one **edge thread** drains the bounded [`AdmissionQueue`] (the only
-//!   place requests are refused — see [`AdmissionPolicy`]), runs the edge
-//!   partition, and pushes [`CloudJob`]s through a *bounded* channel so
-//!   cloud saturation backs up into the admission queue instead of an
-//!   invisible unbounded buffer;
-//! * one **dispatcher thread** assembles batches under the deadline-aware
-//!   drain rule ([`scheduler::batcher`]) and routes each closed batch to a
-//!   shard ([`scheduler::dispatch`]);
-//! * **N shard threads**, each owning its own `Runtime` and per-batch-size
-//!   engines, execute batches and answer the clients.
+//! * **N edge threads** drain the bounded [`AdmissionQueue`] (the only
+//!   place requests are refused — see [`AdmissionPolicy`]), run the edge
+//!   partition, chain already-waiting requests into one uplink batch (the
+//!   chain pays the link RTT **once** — `Uplink::batch_seconds`), and push
+//!   [`CloudJob`]s through a *bounded* channel so cloud saturation backs
+//!   up into the admission queue instead of an invisible unbounded buffer;
+//! * one **dispatcher thread** assembles **plan-pure** batches under the
+//!   deadline-aware drain rule ([`scheduler::batcher`]) and routes each
+//!   closed batch to a shard ([`scheduler::dispatch`]);
+//! * **N shard threads**, each owning its own `Runtime` and per-plan,
+//!   per-batch-size engines, execute batches and answer the clients.
+//!
+//! ## Adaptive re-splitting
+//!
+//! With [`ServeConfig::adaptive`] set, the server loads **every** plan in
+//! the bank (edge and cloud artifacts both), estimates the live uplink
+//! from the transfers it already performs ([`adaptive::LinkEstimator`]),
+//! and hot-swaps the active edge/cloud pair when the estimate crosses a
+//! bank bin with hysteresis ([`adaptive::PlanSwitcher`]). Switches apply
+//! **between link batches only**: a request chain is planned under one
+//! plan, and the dispatcher closes a cloud batch at any plan boundary, so
+//! no batch ever mixes plans (`ServingStats::mid_batch_swaps` stays 0).
+//! Bank plans carry their modeled edge compute (`PlanSpec::edge_s`); the
+//! serving loop charges it exactly like the modeled wire time — accounted
+//! virtually under [`DelayMode::Virtual`], slept under
+//! [`DelayMode::RealSleep`] — since REFHLO reference artifacts execute in
+//! microseconds whatever the plan.
 //!
 //! Every submitted request receives exactly one terminal response:
 //! `Ok(Outcome::Done)` (served), `Ok(Outcome::Shed)` (load-shed by the
 //! admission policy), or `Err` (malformed request / pipeline failure).
 
+use super::adaptive::{AdaptiveConfig, AdaptiveRt, LinkEstimator, PlanSwitcher, SwitchBin};
 use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
 use super::link::{DelayMode, Link, WireFormat};
@@ -57,6 +75,9 @@ pub struct ServeConfig {
     pub mode: ServeMode,
     /// Admission, batching, and shard-routing policy.
     pub scheduler: SchedulerConfig,
+    /// Adaptive re-splitting: plan bank + switching policy. When set, the
+    /// plan artifacts come from the bank and `artifacts` is unused.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl ServeConfig {
@@ -68,11 +89,17 @@ impl ServeConfig {
             delay: DelayMode::Virtual,
             mode: ServeMode::Split,
             scheduler: SchedulerConfig::default(),
+            adaptive: None,
         }
     }
 
     pub fn with_scheduler(mut self, scheduler: SchedulerConfig) -> Self {
         self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: AdaptiveConfig) -> Self {
+        self.adaptive = Some(adaptive);
         self
     }
 }
@@ -135,6 +162,8 @@ pub struct InferenceResult {
     pub batch_size: usize,
     /// Cloud shard that executed the request.
     pub shard: usize,
+    /// Bank plan the request ran under (0 for a static server).
+    pub plan: usize,
 }
 
 /// Why a request was shed instead of served.
@@ -199,6 +228,14 @@ struct CloudJob {
     codec: Duration,
     tx_bytes: usize,
     arrived: Instant,
+    /// Bank plan this job was produced under (batches are plan-pure).
+    plan: usize,
+    /// Virtually-accounted time to add to the wall clock for `e2e` under
+    /// `DelayMode::Virtual`: the chain's modeled edge compute plus the
+    /// cumulative modeled wire time up to and including this member
+    /// (exactly what `RealSleep` would have slept by this point; zero
+    /// there, since it actually slept).
+    virt: Duration,
 }
 
 /// One closed batch on its way to a shard.
@@ -206,6 +243,17 @@ struct ShardBatch {
     jobs: Vec<CloudJob>,
     /// The compiled batch size the shard will pad to (affinity/cost key).
     engine_batch: usize,
+    /// The plan every job in this batch belongs to.
+    plan: usize,
+}
+
+/// One loaded plan: artifact location + metadata + its modeled edge cost.
+#[derive(Debug, Clone)]
+struct PlanRt {
+    meta: ArtifactMeta,
+    dir: PathBuf,
+    /// Modeled edge compute charged per request (see module docs).
+    sim_edge: Duration,
 }
 
 /// A running pipeline.
@@ -215,6 +263,13 @@ pub struct Server {
     pub meta: ArtifactMeta,
     stats: Arc<Mutex<ServingStats>>,
     started: Instant,
+    /// Live uplink shared with the edge workers (mutable mid-run for
+    /// bandwidth-trace replay — see `loadgen::replay_traced`).
+    uplink: Arc<Mutex<Uplink>>,
+    adaptive: Option<Arc<Mutex<AdaptiveRt>>>,
+    /// Bank plan ids, index-aligned with plan counters (`["static"]` for
+    /// a non-adaptive server).
+    plan_ids: Vec<String>,
 }
 
 /// The compiled engine batch sizes actually loaded for `max_batch`: every
@@ -237,20 +292,99 @@ fn engine_batch_set(meta: &ArtifactMeta, max_batch: usize) -> Vec<usize> {
     v
 }
 
+/// Resolve the plan set: the bank's plans (adaptive) or the single static
+/// artifact directory. Also returns the plan ids.
+fn resolve_plans(cfg: &ServeConfig) -> Result<(Vec<PlanRt>, Vec<String>)> {
+    match &cfg.adaptive {
+        None => {
+            let meta = ArtifactMeta::load(&cfg.artifacts)?;
+            let rt = PlanRt { meta, dir: cfg.artifacts.clone(), sim_edge: Duration::ZERO };
+            Ok((vec![rt], vec!["static".to_string()]))
+        }
+        Some(a) => {
+            anyhow::ensure!(
+                cfg.mode == ServeMode::Split,
+                "adaptive re-splitting requires the Split pipeline"
+            );
+            anyhow::ensure!(!a.bank.plans.is_empty(), "empty plan bank");
+            let mut plans = Vec::with_capacity(a.bank.plans.len());
+            let mut ids = Vec::with_capacity(a.bank.plans.len());
+            for p in &a.bank.plans {
+                let rel = p.artifacts.as_ref().with_context(|| {
+                    format!("bank plan {} has no artifacts (bankgen --synthetic builds them)", p.id)
+                })?;
+                let dir = a.bank_dir.join(rel);
+                let meta = ArtifactMeta::load(&dir)
+                    .with_context(|| format!("plan {} artifacts", p.id))?;
+                plans.push(PlanRt {
+                    meta,
+                    dir,
+                    sim_edge: Duration::from_secs_f64(p.edge_s.max(0.0)),
+                });
+                ids.push(p.id.clone());
+            }
+            // the pipeline swaps plans per request chain, so the parts the
+            // clients and the dispatcher see must agree across plans
+            for rt in &plans[1..] {
+                anyhow::ensure!(
+                    rt.meta.img == plans[0].meta.img,
+                    "bank plans disagree on image size"
+                );
+                anyhow::ensure!(
+                    rt.meta.cloud_batches == plans[0].meta.cloud_batches,
+                    "bank plans disagree on compiled cloud batch sizes"
+                );
+            }
+            Ok((plans, ids))
+        }
+    }
+}
+
+/// Build the live adaptive state for a bank-backed server.
+fn build_adaptive_rt(cfg: &ServeConfig, a: &AdaptiveConfig) -> Result<AdaptiveRt> {
+    let tier = a.bank.tier_entries(a.slo_tier_ms);
+    anyhow::ensure!(!tier.is_empty(), "bank has no entries for the switching tier");
+    let bins: Vec<SwitchBin> =
+        tier.iter().map(|e| SwitchBin { mbps: e.state.mbps, plan: e.plan }).collect();
+    let est = LinkEstimator::new(cfg.uplink.bps, cfg.uplink.rtt_s);
+    let switcher = PlanSwitcher::new(bins, a.hysteresis, cfg.uplink.bps);
+    let (active, pinned) = match &a.pinned {
+        Some(id) => {
+            let idx = a
+                .bank
+                .plan_index(id)
+                .with_context(|| format!("pinned plan {id:?} not in the bank"))?;
+            (idx, true)
+        }
+        None => (switcher.plan(), false),
+    };
+    Ok(AdaptiveRt { est, switcher, active, pinned })
+}
+
 impl Server {
     /// Start the pipeline threads (compiles the artifacts — takes a
     /// moment on first call).
     pub fn start(cfg: ServeConfig) -> Result<Server> {
-        let meta = ArtifactMeta::load(&cfg.artifacts)?;
+        let (plans, plan_ids) = resolve_plans(&cfg)?;
+        let plans = Arc::new(plans);
+        let adaptive = match &cfg.adaptive {
+            Some(a) => Some(Arc::new(Mutex::new(build_adaptive_rt(&cfg, a)?))),
+            None => None,
+        };
+        let initial_plan = adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0);
+        let meta = plans[initial_plan].meta.clone();
+
         let sched = cfg.scheduler.clone();
         let shards = sched.shards.max(1);
-        let stats = Arc::new(Mutex::new(ServingStats::with_shards(shards)));
+        let edge_workers = sched.edge_workers.max(1);
+        let stats = Arc::new(Mutex::new(ServingStats::sized(shards, edge_workers, plans.len())));
         let queue = Arc::new(AdmissionQueue::new(sched.queue_cap, sched.admission));
         let cost = Arc::new(BatchCost::new(sched.cost_prior));
         let outstanding = Outstanding::new(shards);
+        let uplink = Arc::new(Mutex::new(cfg.uplink));
 
         let engine_batches = match cfg.mode {
-            ServeMode::Split => engine_batch_set(&meta, sched.max_batch),
+            ServeMode::Split => engine_batch_set(&plans[0].meta, sched.max_batch),
             // Cloud-Only runs the batch-1 full model sequentially, so any
             // drained size up to max_batch is its own "engine size".
             ServeMode::CloudOnly => (1..=sched.max_batch.max(1)).collect(),
@@ -263,18 +397,38 @@ impl Server {
 
         let mut handles = Vec::new();
 
-        // ---------------- edge thread -------------------------------
-        let (edge_ready_tx, edge_ready_rx) = mpsc::channel::<Result<()>>();
-        {
+        // ---------------- edge threads ------------------------------
+        let mut edge_readies = Vec::with_capacity(edge_workers);
+        for edge_id in 0..edge_workers {
+            let (edge_ready_tx, edge_ready_rx) = mpsc::channel::<Result<()>>();
+            edge_readies.push(edge_ready_rx);
             let cfg = cfg.clone();
-            let meta = meta.clone();
+            let plans = plans.clone();
             let queue = queue.clone();
+            let cloud_tx = cloud_tx.clone();
+            let uplink = uplink.clone();
+            let adaptive = adaptive.clone();
+            let stats = stats.clone();
             handles.push(
                 std::thread::Builder::new()
-                    .name("edge-worker".into())
-                    .spawn(move || edge_thread(cfg, meta, queue, cloud_tx, edge_ready_tx))?,
+                    .name(format!("edge-worker-{edge_id}"))
+                    .spawn(move || {
+                        edge_thread(
+                            cfg,
+                            plans,
+                            edge_id,
+                            queue,
+                            cloud_tx,
+                            uplink,
+                            adaptive,
+                            stats,
+                            edge_ready_tx,
+                        )
+                    })?,
             );
         }
+        // the dispatcher must observe disconnect when the edge pool exits
+        drop(cloud_tx);
 
         // ---------------- shard threads -----------------------------
         let mut shard_txs = Vec::with_capacity(shards);
@@ -285,7 +439,7 @@ impl Server {
             shard_txs.push(batch_tx);
             shard_readies.push(ready_rx);
             let cfg = cfg.clone();
-            let meta = meta.clone();
+            let plans = plans.clone();
             let stats = stats.clone();
             let outstanding = outstanding.clone();
             let cost = cost.clone();
@@ -295,7 +449,7 @@ impl Server {
                     .spawn(move || {
                         shard_thread(
                             cfg,
-                            meta,
+                            plans,
                             shard_id,
                             batch_rx,
                             outstanding,
@@ -332,11 +486,16 @@ impl Server {
         }
 
         // ---------------- ready handshakes --------------------------
-        match edge_ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(abort_start(&queue, handles, e)),
-            Err(_) => {
-                return Err(abort_start(&queue, handles, anyhow::anyhow!("edge thread died")))
+        for (i, ready) in edge_readies.into_iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    return Err(abort_start(&queue, handles, e.context(format!("edge {i}"))))
+                }
+                Err(_) => {
+                    let e = anyhow::anyhow!("edge thread {i} died");
+                    return Err(abort_start(&queue, handles, e));
+                }
             }
         }
         for (i, ready) in shard_readies.into_iter().enumerate() {
@@ -352,7 +511,16 @@ impl Server {
             }
         }
 
-        Ok(Server { queue, handles, meta, stats, started: Instant::now() })
+        Ok(Server {
+            queue,
+            handles,
+            meta,
+            stats,
+            started: Instant::now(),
+            uplink,
+            adaptive,
+            plan_ids,
+        })
     }
 
     /// Synchronous inference of one image; a shed request surfaces as an
@@ -399,19 +567,47 @@ impl Server {
         self.queue.depth()
     }
 
+    /// Replace the live uplink (bandwidth-trace replay). Takes effect on
+    /// the next link batch; the adaptive estimator only ever sees the
+    /// resulting transfers, never this call.
+    pub fn set_uplink(&self, uplink: Uplink) {
+        *self.uplink.lock().unwrap() = uplink;
+    }
+
+    /// Convenience: set the live uplink from Mbps + RTT.
+    pub fn set_link(&self, mbps: f64, rtt_ms: f64) {
+        self.set_uplink(Uplink::from_mbps_rtt(mbps, rtt_ms));
+    }
+
+    /// Bank plan ids, index-aligned with the per-plan stats counters.
+    pub fn plan_ids(&self) -> &[String] {
+        &self.plan_ids
+    }
+
+    /// The currently active plan index.
+    pub fn active_plan(&self) -> usize {
+        self.adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0)
+    }
+
     /// Snapshot of aggregated metrics.
     pub fn stats(&self) -> ServingStats {
         let mut s = self.stats.lock().unwrap().clone();
         s.wall_s = self.started.elapsed().as_secs_f64();
         s.queue_depth = self.queue.depth() as u64;
         s.queue_peak = self.queue.peak() as u64;
+        if let Some(a) = &self.adaptive {
+            let rt = a.lock().unwrap();
+            s.est_bps = rt.est.bps();
+            s.est_rtt_s = rt.est.rtt_s();
+            s.active_plan = rt.active as u64;
+        }
         s
     }
 
     /// Stop the pipeline and join the threads.
     pub fn shutdown(mut self) -> ServingStats {
         let stats = self.stats();
-        self.queue.close(); // edge drains and exits; the pool follows
+        self.queue.close(); // edge pool drains and exits; the rest follows
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -442,33 +638,43 @@ fn abort_start(
     e
 }
 
+#[allow(clippy::too_many_arguments)]
 fn edge_thread(
     cfg: ServeConfig,
-    meta: ArtifactMeta,
+    plans: Arc<Vec<PlanRt>>,
+    edge_id: usize,
     queue: Arc<AdmissionQueue<Request>>,
     cloud_tx: mpsc::SyncSender<CloudJob>,
+    uplink: Arc<Mutex<Uplink>>,
+    adaptive: Option<Arc<Mutex<AdaptiveRt>>>,
+    stats: Arc<Mutex<ServingStats>>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    // own runtime: PJRT handles are thread-local by construction here
-    let init = (|| -> Result<Option<EdgeWorker>> {
+    // own runtime: PJRT handles are thread-local by construction here.
+    // One edge engine per bank plan — hot-swapping is an index change.
+    let init = (|| -> Result<Option<Vec<EdgeWorker>>> {
         match cfg.mode {
             ServeMode::CloudOnly => Ok(None),
             ServeMode::Split => {
                 let rt = Runtime::cpu()?;
-                let engine = rt.load_hlo_text(&cfg.artifacts.join("lpr_edge_b1.hlo.txt"))?;
-                Ok(Some(EdgeWorker::new(
-                    engine,
-                    EdgeSpec {
-                        img: meta.img,
-                        packed_shape: meta.packed_shape,
-                        boundary_scale: meta.boundary_scale,
-                        act_bits: meta.act_bits,
-                    },
-                )))
+                let mut workers = Vec::with_capacity(plans.len());
+                for plan in plans.iter() {
+                    let engine = rt.load_hlo_text(&plan.dir.join("lpr_edge_b1.hlo.txt"))?;
+                    workers.push(EdgeWorker::new(
+                        engine,
+                        EdgeSpec {
+                            img: plan.meta.img,
+                            packed_shape: plan.meta.packed_shape,
+                            boundary_scale: plan.meta.boundary_scale,
+                            act_bits: plan.meta.act_bits,
+                        },
+                    ));
+                }
+                Ok(Some(workers))
             }
         }
     })();
-    let worker = match init {
+    let workers = match init {
         Ok(w) => {
             let _ = ready.send(Ok(()));
             w
@@ -478,50 +684,143 @@ fn edge_thread(
             return;
         }
     };
-    let link = Link::new(cfg.uplink).with_format(cfg.wire).with_delay(cfg.delay);
+    let chain_cap = cfg.scheduler.link_chain.max(1);
 
-    while let Some(req) = queue.pop() {
-        let work = (|| -> Result<CloudJob> {
-            let (packet, edge_dt) = match (&worker, cfg.mode) {
-                (Some(w), ServeMode::Split) => w.infer(&req.image)?,
-                (_, ServeMode::CloudOnly) | (None, _) => {
-                    // raw 8-bit image upload (the Cloud-Only baseline)
-                    let payload: Vec<u8> =
-                        req.image.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8).collect();
-                    (
-                        ActivationPacket {
-                            bits: 8,
-                            scale: 1.0 / 255.0,
-                            zero_point: 0.0,
-                            shape: [1, 1, meta.img as i32, meta.img as i32],
-                            payload,
-                        },
-                        Duration::ZERO,
-                    )
+    'outer: while let Some(first) = queue.pop() {
+        // opportunistically chain already-waiting requests into one
+        // uplink batch (RTT paid once for the chain)
+        let mut reqs = vec![first];
+        while reqs.len() < chain_cap {
+            match queue.try_pop() {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+
+        // the whole chain runs under one plan: switches apply between
+        // link batches, never inside one
+        let plan = adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0);
+        let prt = &plans[plan];
+
+        let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
+        let mut staged: Vec<(mpsc::Sender<Result<Outcome>>, Instant, Duration)> =
+            Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let work = (|| -> Result<(ActivationPacket, Duration)> {
+                match (&workers, cfg.mode) {
+                    (Some(w), ServeMode::Split) => w[plan].infer(&req.image),
+                    (_, ServeMode::CloudOnly) | (None, _) => {
+                        // raw 8-bit image upload (the Cloud-Only baseline)
+                        let payload: Vec<u8> = req
+                            .image
+                            .iter()
+                            .map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8)
+                            .collect();
+                        let img = prt.meta.img as i32;
+                        Ok((
+                            ActivationPacket {
+                                bits: 8,
+                                scale: 1.0 / 255.0,
+                                zero_point: 0.0,
+                                shape: [1, 1, img, img],
+                                payload,
+                            },
+                            Duration::ZERO,
+                        ))
+                    }
                 }
-            };
-            let transfer = link.transmit(&packet)?;
-            Ok(CloudJob {
-                packet: transfer.packet,
-                resp: req.resp.clone(),
-                submitted: req.submitted,
-                edge: edge_dt,
-                net: transfer.net_time,
-                codec: transfer.codec_time,
-                tx_bytes: transfer.wire_bytes,
-                arrived: Instant::now(),
-            })
-        })();
-        match work {
-            Ok(job) => {
-                // bounded send: blocks under cloud saturation, pushing the
-                // backlog into the (shedding) admission queue
-                if cloud_tx.send(job).is_err() {
-                    break;
+            })();
+            match work {
+                Ok((packet, edge_dt)) => {
+                    packets.push(packet);
+                    staged.push((req.resp, req.submitted, edge_dt));
+                }
+                Err(e) => {
+                    let _ = req.resp.send(Err(e));
                 }
             }
+        }
+        if packets.is_empty() {
+            continue;
+        }
+
+        // modeled edge compute of the active plan: slept in RealSleep
+        // mode (part of the wall clock), accounted virtually otherwise
+        if cfg.delay == DelayMode::RealSleep && prt.sim_edge > Duration::ZERO {
+            std::thread::sleep(prt.sim_edge * packets.len() as u32);
+        }
+
+        let link = {
+            let ul = *uplink.lock().unwrap();
+            Link::new(ul).with_format(cfg.wire).with_delay(cfg.delay)
+        };
+        let transfers = match link.transmit_batch(&packets) {
+            Ok(t) => t,
             Err(e) => {
-                let _ = req.resp.send(Err(e));
+                let msg = format!("{e:#}");
+                for (resp, _, _) in staged {
+                    let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+                continue;
+            }
+        };
+
+        // feed the link estimator from what the transfers actually
+        // measured, then give the switcher one observation window
+        if let Some(a) = &adaptive {
+            let mut rt = a.lock().unwrap();
+            for t in &transfers {
+                rt.est.observe_payload(t.wire_bytes, (t.net_time - t.rtt).as_secs_f64());
+                if t.rtt > Duration::ZERO {
+                    rt.est.observe_rtt(t.rtt.as_secs_f64());
+                }
+            }
+            if !rt.pinned {
+                let est = rt.est.bps();
+                if let Some(next) = rt.switcher.tick(est) {
+                    rt.active = next;
+                    stats.lock().unwrap().plan_switches += 1;
+                }
+            }
+        }
+        {
+            let mut st = stats.lock().unwrap();
+            st.edge_requests[edge_id] += transfers.len() as u64;
+            st.plan_requests[plan] += transfers.len() as u64;
+        }
+
+        let arrived = Instant::now();
+        // virtual accounting mirrors what RealSleep's wall clock measures:
+        // the whole chain computes on the edge before anything transmits
+        // (every member waits n × sim_edge), and chain member i completes
+        // its transfer after the chain RTT plus every payload up to its
+        // own — so the per-member virtual time is CUMULATIVE, not just the
+        // member's own share
+        let sim_chain = prt.sim_edge * packets.len() as u32;
+        let mut chain_net = Duration::ZERO;
+        for ((resp, submitted, edge_dt), t) in staged.into_iter().zip(transfers) {
+            chain_net += t.net_time;
+            let virt = if cfg.delay == DelayMode::Virtual {
+                chain_net + sim_chain
+            } else {
+                Duration::ZERO
+            };
+            let job = CloudJob {
+                packet: t.packet,
+                resp,
+                submitted,
+                edge: edge_dt + prt.sim_edge,
+                net: t.net_time,
+                codec: t.codec_time,
+                tx_bytes: t.wire_bytes,
+                arrived,
+                plan,
+                virt,
+            };
+            // bounded send: blocks under cloud saturation, pushing the
+            // backlog into the (shedding) admission queue
+            if cloud_tx.send(job).is_err() {
+                break 'outer;
             }
         }
     }
@@ -549,14 +848,21 @@ fn dispatcher_thread(
         outstanding.clone(),
         engine_batches.clone(),
     );
+    // a job that arrived under a different plan than the open batch: it
+    // closes the batch and seeds the next one (plan-pure batches)
+    let mut carry: Option<CloudJob> = None;
 
     loop {
         // blocking wait for the first job of the next batch
-        let first = match cloud_rx.recv() {
-            Ok(j) => j,
-            Err(_) => break,
+        let first = match carry.take() {
+            Some(j) => j,
+            None => match cloud_rx.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            },
         };
         let open = Instant::now();
+        let plan = first.plan;
         let mut batch = vec![first];
         let mut cause = DrainCause::Full;
         while batch.len() < eff_max_batch {
@@ -572,6 +878,13 @@ fn dispatcher_thread(
                 break;
             }
             match cloud_rx.recv_timeout(deadline - now) {
+                Ok(j) if j.plan != plan => {
+                    // never mix plans in one batch: close here, start the
+                    // next batch from this job
+                    carry = Some(j);
+                    cause = DrainCause::PlanBoundary;
+                    break;
+                }
                 Ok(j) => batch.push(j),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     cause = if slo_bound { DrainCause::SloBudget } else { DrainCause::Window };
@@ -591,7 +904,7 @@ fn dispatcher_thread(
         if cause == DrainCause::SloBudget {
             stats.lock().unwrap().batch_slo_closes += 1;
         }
-        let sb = ShardBatch { jobs: batch, engine_batch };
+        let sb = ShardBatch { jobs: batch, engine_batch, plan };
         if let Err(mpsc::SendError(lost)) = shard_txs[shard].send(sb) {
             // shard is gone; answer its batch rather than dropping it
             outstanding.sub(shard, n);
@@ -603,14 +916,15 @@ fn dispatcher_thread(
 }
 
 enum CloudExec {
-    Split(CloudWorker),
+    /// One worker per bank plan (index-aligned with the plan list).
+    Split(Vec<CloudWorker>),
     Full(crate::runtime::Engine),
 }
 
 #[allow(clippy::too_many_arguments)]
 fn shard_thread(
     cfg: ServeConfig,
-    meta: ArtifactMeta,
+    plans: Arc<Vec<PlanRt>>,
     shard_id: usize,
     batch_rx: mpsc::Receiver<ShardBatch>,
     outstanding: Outstanding,
@@ -622,16 +936,25 @@ fn shard_thread(
         let rt = Runtime::cpu()?;
         match cfg.mode {
             ServeMode::Split => {
-                let mut engines = BTreeMap::new();
-                for &b in &engine_batch_set(&meta, cfg.scheduler.max_batch) {
-                    let e =
-                        rt.load_hlo_text(&cfg.artifacts.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
-                    engines.insert(b, e);
+                let mut workers = Vec::with_capacity(plans.len());
+                for plan in plans.iter() {
+                    let mut engines = BTreeMap::new();
+                    for &b in &engine_batch_set(&plan.meta, cfg.scheduler.max_batch) {
+                        let e = rt
+                            .load_hlo_text(&plan.dir.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
+                        engines.insert(b, e);
+                    }
+                    workers.push(CloudWorker::new(
+                        engines,
+                        plan.meta.packed_shape,
+                        plan.meta.classes,
+                    ));
                 }
-                Ok(CloudExec::Split(CloudWorker::new(engines, meta.packed_shape, meta.classes)))
+                Ok(CloudExec::Split(workers))
             }
             ServeMode::CloudOnly => {
-                Ok(CloudExec::Full(rt.load_hlo_text(&cfg.artifacts.join("lpr_full_b1.hlo.txt"))?))
+                let dir = &plans[0].dir;
+                Ok(CloudExec::Full(rt.load_hlo_text(&dir.join("lpr_full_b1.hlo.txt"))?))
             }
         }
     })();
@@ -646,19 +969,17 @@ fn shard_thread(
         }
     };
 
-    let run = |packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
+    let run = |plan: usize, packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
         match &exec {
-            CloudExec::Split(w) => w.infer_batch(packets),
+            CloudExec::Split(workers) => workers[plan].infer_batch(packets),
             CloudExec::Full(engine) => {
                 // batch-1 full model: run sequentially
+                let img = plans[0].meta.img;
                 let mut out = Vec::with_capacity(packets.len());
                 let t0 = Instant::now();
                 for p in packets {
-                    let img: Vec<f32> = p.payload.iter().map(|&b| b as f32 * p.scale).collect();
-                    let lit = crate::runtime::literal_f32(
-                        &img,
-                        &[1, 1, meta.img as i64, meta.img as i64],
-                    )?;
+                    let pix: Vec<f32> = p.payload.iter().map(|&b| b as f32 * p.scale).collect();
+                    let lit = crate::runtime::literal_f32(&pix, &[1, 1, img as i64, img as i64])?;
                     out.push(engine.run_f32(&[lit])?);
                 }
                 Ok((out, t0.elapsed()))
@@ -669,7 +990,12 @@ fn shard_thread(
     while let Ok(sb) = batch_rx.recv() {
         let packets: Vec<ActivationPacket> = sb.jobs.iter().map(|j| j.packet.clone()).collect();
         let n = sb.jobs.len();
-        match run(&packets) {
+        // plan purity is a dispatcher invariant; count any violation so a
+        // regression is visible in ServingStats instead of silent
+        if sb.jobs.iter().any(|j| j.plan != sb.plan) {
+            stats.lock().unwrap().mid_batch_swaps += 1;
+        }
+        match run(sb.plan, &packets) {
             Ok((logits, cloud_dt)) => {
                 // feed the SLO predictor with the measured execution time
                 cost.observe(sb.engine_batch, cloud_dt.as_secs_f64());
@@ -685,13 +1011,10 @@ fn shard_thread(
                         .unwrap_or(0);
                     let queue = job.arrived.elapsed();
                     let wall = job.submitted.elapsed();
-                    // virtual-delay mode: add the modeled wire time; in
-                    // RealSleep mode it is already part of the wall clock
-                    let e2e = if cfg.delay == DelayMode::Virtual {
-                        wall + job.net
-                    } else {
-                        wall
-                    };
+                    // the virtually-accounted time (modeled wire + modeled
+                    // edge compute) rides on top of the wall clock; under
+                    // RealSleep it was actually slept and `virt` is zero
+                    let e2e = wall + job.virt;
                     let res = InferenceResult {
                         logits: lg,
                         class,
@@ -704,6 +1027,7 @@ fn shard_thread(
                         tx_bytes: job.tx_bytes,
                         batch_size: n,
                         shard: shard_id,
+                        plan: job.plan,
                     };
                     st.requests += 1;
                     st.shard_requests[shard_id] += 1;

@@ -8,7 +8,9 @@
 //! spec, so tests, benches, and the CI loadgen smoke all exercise the
 //! exact same pipeline bytes.
 
+use crate::coordinator::protocol::TX_HEADER_BYTES;
 use crate::profile::SplitMix64;
+use crate::splitter::{BankGrid, NetClass, PlanBank, PlanSpec};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -125,6 +127,120 @@ pub fn write_reference_artifacts(dir: &Path, spec: &RefArtifactSpec) -> Result<P
     Ok(dir.to_path_buf())
 }
 
+/// One synthetic adaptive plan: a point on the split frontier. Lower act
+/// bits stand in for a deeper split — more (modeled) edge compute, fewer
+/// bytes on the wire, a larger accuracy drop.
+#[derive(Debug, Clone)]
+pub struct AdaptivePlanSpec {
+    pub bits: u8,
+    /// Modeled edge compute of this plan, charged by the serving loop
+    /// like the modeled wire time (REFHLO artifacts execute in µs).
+    pub edge_ms: f64,
+    pub acc_drop_pct: f64,
+}
+
+/// Shape of a synthetic adaptive bank: a frontier of plans (one REFHLO
+/// artifact set each) plus the network-state grid to sweep.
+#[derive(Debug, Clone)]
+pub struct AdaptiveBankSpec {
+    /// Image side; larger than the static default so the plans' wire
+    /// sizes separate clearly across BLE/3G/WiFi.
+    pub img: usize,
+    pub classes: usize,
+    pub scale: f32,
+    pub cloud_batches: Vec<usize>,
+    pub seed: u64,
+    pub plans: Vec<AdaptivePlanSpec>,
+    pub grid: BankGrid,
+    /// Modeled cloud compute, seconds (identical across plans).
+    pub cloud_s: f64,
+}
+
+impl Default for AdaptiveBankSpec {
+    fn default() -> Self {
+        // The frontier is tuned so the demo grid picks three distinct
+        // plans: BLE→b1 (deep split: 55 ms edge, 2 KB wire), 3G→b4,
+        // WiFi→b8 (shallow split: 1 ms edge, 16 KB wire).
+        AdaptiveBankSpec {
+            img: 128,
+            classes: 10,
+            scale: 0.05,
+            cloud_batches: vec![1, 4],
+            seed: 42,
+            plans: vec![
+                AdaptivePlanSpec { bits: 8, edge_ms: 1.0, acc_drop_pct: 0.3 },
+                AdaptivePlanSpec { bits: 4, edge_ms: 12.0, acc_drop_pct: 1.2 },
+                AdaptivePlanSpec { bits: 2, edge_ms: 30.0, acc_drop_pct: 2.5 },
+                AdaptivePlanSpec { bits: 1, edge_ms: 55.0, acc_drop_pct: 4.5 },
+            ],
+            grid: BankGrid {
+                states: vec![
+                    NetClass::new("ble", 0.27, 50.0),
+                    NetClass::new("3g", 3.0, 65.0),
+                    NetClass::new("wifi", 54.0, 5.0),
+                ],
+                slo_tiers_ms: vec![0.0, 150.0],
+                max_drop_pct: 5.0,
+            },
+            cloud_s: 0.0002,
+        }
+    }
+}
+
+impl AdaptiveBankSpec {
+    /// The REFHLO artifact spec realizing one plan of the frontier.
+    pub fn artifact_spec(&self, plan: &AdaptivePlanSpec) -> RefArtifactSpec {
+        let per = (8 / plan.bits) as usize;
+        RefArtifactSpec {
+            img: self.img,
+            bits: plan.bits,
+            c2: 2,
+            hw: self.img * self.img / (2 * per),
+            classes: self.classes,
+            scale: self.scale,
+            cloud_batches: self.cloud_batches.clone(),
+            seed: self.seed,
+        }
+    }
+
+    /// Deterministic pseudo-image sized for this bank's plans.
+    pub fn image(&self, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..self.img * self.img).map(|_| rng.next_f32()).collect()
+    }
+}
+
+/// Write a complete synthetic adaptive bank: one artifact directory per
+/// plan under `dir/plans/<id>/`, plus the deterministic `plan_bank.json`.
+/// Everything is a pure function of the spec, so two writes produce
+/// byte-identical banks (the determinism test locks this).
+pub fn write_adaptive_bank(dir: &Path, spec: &AdaptiveBankSpec) -> Result<PlanBank> {
+    anyhow::ensure!(!spec.plans.is_empty(), "bank spec needs at least one plan");
+    let mut candidates = Vec::with_capacity(spec.plans.len());
+    for plan in &spec.plans {
+        let art = spec.artifact_spec(plan);
+        anyhow::ensure!(art.is_consistent(), "plan b{} artifact shape", plan.bits);
+        let rel = format!("plans/b{}", plan.bits);
+        write_reference_artifacts(&dir.join(&rel), &art)?;
+        candidates.push(PlanSpec {
+            id: format!("b{}", plan.bits),
+            method: "synthetic-frontier".into(),
+            split_index: plan.bits as usize,
+            split_layer: format!("refhlo-b{}", plan.bits),
+            edge_s: plan.edge_ms / 1e3,
+            cloud_s: spec.cloud_s,
+            tx_bytes: spec.img * spec.img * plan.bits as usize / 8 + TX_HEADER_BYTES,
+            acc_drop_pct: plan.acc_drop_pct,
+            artifacts: Some(rel),
+        });
+    }
+    let mut bank = PlanBank::generate("refhlo-synthetic", &candidates, &spec.grid, 1);
+    bank.img = spec.img;
+    std::fs::write(dir.join("plan_bank.json"), bank.to_json())
+        .with_context(|| format!("write {dir:?}/plan_bank.json"))?;
+    Ok(bank)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +287,38 @@ mod tests {
         assert_eq!(spec.image(9), spec.image(9));
         assert_ne!(spec.image(9), spec.image(10));
         assert!(spec.image(9).iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn adaptive_bank_spec_plans_are_consistent_artifacts() {
+        let spec = AdaptiveBankSpec::default();
+        for plan in &spec.plans {
+            let art = spec.artifact_spec(plan);
+            assert!(art.is_consistent(), "b{}", plan.bits);
+        }
+        assert_eq!(spec.image(3).len(), spec.img * spec.img);
+        assert_eq!(spec.image(3), spec.image(3));
+    }
+
+    #[test]
+    fn adaptive_bank_writes_every_plan_and_selects_three() {
+        let dir =
+            std::env::temp_dir().join(format!("autosplit-bankspec-{}", std::process::id()));
+        let spec = AdaptiveBankSpec::default();
+        let bank = write_adaptive_bank(&dir, &spec).unwrap();
+        assert!(dir.join("plan_bank.json").exists());
+        for plan in &bank.plans {
+            let rel = plan.artifacts.as_ref().expect("synthetic plans carry artifacts");
+            let pdir = dir.join(rel);
+            assert!(pdir.join("metadata.json").exists(), "{rel}");
+            assert!(pdir.join("lpr_edge_b1.hlo.txt").exists(), "{rel}");
+            let meta = crate::coordinator::ArtifactMeta::load(&pdir).unwrap();
+            assert_eq!(meta.img, spec.img);
+        }
+        // the demo grid must pick three distinct plans across BLE/3G/WiFi
+        let tier0 = bank.tier_entries(0.0);
+        let ids: Vec<&str> = tier0.iter().map(|e| bank.plans[e.plan].id.as_str()).collect();
+        assert_eq!(ids, vec!["b1", "b4", "b8"]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

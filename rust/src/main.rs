@@ -19,15 +19,16 @@
 
 use anyhow::{bail, Context, Result};
 use auto_split::coordinator::{
-    load_eval_images, mixed_workload, poisson_schedule, policy_table, replay, run_mixed,
-    AdmissionPolicy, CostPrior, LoadReport, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig,
-    ServeConfig, ServeMode, Server, WireFormat,
+    adaptive_table, load_eval_images, mixed_workload, poisson_schedule, policy_table, replay,
+    replay_traced, run_mixed, write_adaptive_bank, AdaptiveBankSpec, AdaptiveConfig,
+    AdmissionPolicy, BwTrace, CostPrior, LoadReport, Outcome, RefArtifactSpec, RoutePolicy,
+    SchedulerConfig, ServeConfig, ServeMode, Server, ServingStats, WireFormat,
 };
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
 use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
-use auto_split::splitter::{AutoSplitConfig, BaselineCtx, Planner};
+use auto_split::splitter::{AutoSplitConfig, BankGrid, BaselineCtx, PlanBank, PlanSpec, Planner};
 use auto_split::zoo;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -75,6 +76,7 @@ fn main() -> Result<()> {
     match args.subcommand().as_deref() {
         Some("optimize") => cmd_optimize(&args),
         Some("baselines") => cmd_baselines(&args),
+        Some("bankgen") => cmd_bankgen(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadtest") => cmd_loadtest(&args),
         Some("zoo") => {
@@ -87,18 +89,23 @@ fn main() -> Result<()> {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
-            eprintln!("usage: auto-split <optimize|baselines|serve|loadtest|zoo> [flags]");
+            eprintln!("usage: auto-split <optimize|baselines|bankgen|serve|loadtest|zoo> [flags]");
             eprintln!("  optimize  --model resnet50 [--threshold 5] [--mem-mb 32] [--mbps 3]");
             eprintln!("            [--threads 0]   planner workers (0 = per core, 1 = sequential)");
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
+            eprintln!("  bankgen   --model resnet50 [--bins 0] [--tiers 0,100] [--out bank.json]");
+            eprintln!("            | --synthetic [--out bank]   runnable REFHLO plan bank");
             eprintln!("  serve     [--artifacts artifacts] [--mode split|cloud] [--requests 64]");
             eprintln!("            [--mbps 3] [--batch 8] [--rpc]");
-            eprintln!("            [--shards 1] [--queue-cap 256]");
+            eprintln!("            [--shards 1] [--edge-workers 1] [--queue-cap 256]");
             eprintln!("            [--admission block|shed-newest|shed-oldest]");
-            eprintln!("            [--slo-ms 0] [--route rr|least|affinity]");
+            eprintln!("            [--slo-ms 0] [--route rr|least|affinity] [--link-chain 8]");
+            eprintln!("            [--adaptive --bank <dir>]");
             eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
             eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
             eprintln!("            [--seed 1] [--compare] [--json out.json]");
+            eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
+            eprintln!("             [--pin plan-id]]");
             eprintln!("            + all `serve` scheduler flags");
             Ok(())
         }
@@ -209,8 +216,10 @@ fn cmd_baselines(args: &Args) -> Result<()> {
 fn scheduler_from_args(args: &Args) -> Result<SchedulerConfig> {
     let mut s = SchedulerConfig::default();
     s.shards = args.parse("--shards", 1usize)?.max(1);
+    s.edge_workers = args.parse("--edge-workers", 1usize)?.max(1);
     s.queue_cap = args.parse("--queue-cap", 256usize)?.max(1);
     s.max_batch = args.parse("--batch", 8usize)?.max(1);
+    s.link_chain = args.parse("--link-chain", 8usize)?.max(1);
     if let Some(v) = args.get("--admission") {
         s.admission = v.parse::<AdmissionPolicy>().map_err(anyhow::Error::msg)?;
     }
@@ -295,6 +304,222 @@ fn print_report(tag: &str, r: &LoadReport) {
     );
 }
 
+/// Render a bank as an aligned table (the `bankgen` report).
+fn bank_table(bank: &PlanBank) -> String {
+    let title = format!(
+        "{} plan bank ({} plans over {} grid cells)",
+        bank.model,
+        bank.plans.len(),
+        bank.entries.len()
+    );
+    let mut t = Table::new(
+        title,
+        &["state", "mbps", "rtt ms", "slo ms", "plan", "split@", "tx", "predicted"],
+    );
+    for e in &bank.entries {
+        let p = &bank.plans[e.plan];
+        t.row(&[
+            e.state.name.clone(),
+            format!("{:.2}", e.state.mbps),
+            format!("{:.1}", e.state.rtt_ms),
+            if e.slo_ms > 0.0 { format!("{:.0}", e.slo_ms) } else { "-".into() },
+            p.id.clone(),
+            p.split_index.to_string(),
+            fmt_bytes(p.tx_bytes),
+            fmt_latency(e.predicted_s),
+        ]);
+    }
+    t.render()
+}
+
+/// Write a bank to `--out`: a `.json` path verbatim, anything else as a
+/// directory containing `plan_bank.json`.
+fn write_bank(out: &str, bank: &PlanBank) -> Result<PathBuf> {
+    let path = if out.ends_with(".json") {
+        PathBuf::from(out)
+    } else {
+        std::fs::create_dir_all(out).with_context(|| format!("create {out}"))?;
+        Path::new(out).join("plan_bank.json")
+    };
+    std::fs::write(&path, bank.to_json()).with_context(|| format!("write {path:?}"))?;
+    Ok(path)
+}
+
+fn cmd_bankgen(args: &Args) -> Result<()> {
+    if args.flag("--synthetic") {
+        // runnable bank: REFHLO artifact set per plan + plan_bank.json
+        let out = args.get("--out").unwrap_or("bank");
+        let spec = AdaptiveBankSpec::default();
+        let bank = write_adaptive_bank(Path::new(out), &spec)?;
+        println!("{}", bank_table(&bank));
+        println!("wrote {} plan artifact sets + plan_bank.json under {out}", bank.plans.len());
+        return Ok(());
+    }
+    // model bank: enumerate the zoo model's candidates once (the planner's
+    // own parallel pool), then re-price the grid of network states
+    let (opt, task, lm, planner) = planner_inputs(args)?;
+    let profile = ModelProfile::synthesize(&opt);
+    let list = planner.solutions(&opt, &profile, &lm, task);
+    let candidates: Vec<PlanSpec> = list.solutions.iter().map(PlanSpec::from_solution).collect();
+    let mut grid = BankGrid::default();
+    grid.max_drop_pct = planner.config().max_drop_pct;
+    let bins: usize = args.parse("--bins", 0usize)?;
+    if bins >= 2 {
+        grid = grid.with_log_bins(0.1, 200.0, bins);
+    }
+    if let Some(t) = args.get("--tiers") {
+        let tiers: Vec<f64> = t.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+        anyhow::ensure!(!tiers.is_empty(), "bad --tiers {t:?}");
+        grid = grid.with_tiers(&tiers);
+    }
+    let bank = PlanBank::generate(&opt.name, &candidates, &grid, args.parse("--threads", 0usize)?);
+    println!(
+        "{}: {} feasible candidates → {} banked plans",
+        opt.name,
+        candidates.len(),
+        bank.plans.len()
+    );
+    println!("{}", bank_table(&bank));
+    if let Some(out) = args.get("--out") {
+        let path = write_bank(out, &bank)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Emit the adaptive benchmark record (CI trajectory file): per-config
+/// p50/p99 + the switch counters the acceptance gate reads.
+fn write_adaptive_json(path: &str, rows: &[(String, LoadReport, ServingStats)]) -> Result<()> {
+    let adaptive = rows.iter().find(|(n, _, _)| n == "adaptive");
+    let statics: Vec<&(String, LoadReport, ServingStats)> =
+        rows.iter().filter(|(n, _, _)| n != "adaptive").collect();
+    let dominates = match adaptive {
+        Some((_, ar, _)) if !statics.is_empty() => {
+            statics.iter().all(|(_, r, _)| ar.quantile(0.5) < r.quantile(0.5))
+        }
+        _ => false,
+    };
+    let mut rows_json = String::new();
+    for (i, (name, r, s)) in rows.iter().enumerate() {
+        if i > 0 {
+            rows_json.push_str(",\n");
+        }
+        rows_json.push_str(&format!(
+            "    {{\"config\": \"{name}\", \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+             \"completed\": {}, \"shed\": {}, \"plan_switches\": {}, \"mid_batch_swaps\": {}}}",
+            r.quantile(0.5) * 1e3,
+            r.quantile(0.99) * 1e3,
+            r.completed,
+            r.shed,
+            s.plan_switches,
+            s.mid_batch_swaps,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"adaptive\",\n  \
+         \"adaptive_strictly_dominates_p50\": {dominates},\n  \
+         \"rows\": [\n{rows_json}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json).with_context(|| format!("write {path}"))
+}
+
+/// The `loadtest --adaptive` path: replay one schedule + bandwidth trace
+/// against the bank-backed server and (with `--compare`) against the same
+/// pipeline pinned to the slowest-state and fastest-state plans.
+fn run_adaptive_loadtest(
+    args: &Args,
+    sched: &SchedulerConfig,
+    rps: f64,
+    n: usize,
+    seed: u64,
+) -> Result<()> {
+    let (acfg, tmp): (AdaptiveConfig, Option<PathBuf>) = match args.get("--bank") {
+        Some(p) => (AdaptiveConfig::load(Path::new(p))?, None),
+        None => {
+            anyhow::ensure!(
+                args.flag("--synthetic"),
+                "--adaptive needs --bank <dir> (or --synthetic for a temp bank)"
+            );
+            let dir = std::env::temp_dir().join(format!("autosplit-bank-{}", std::process::id()));
+            let bank = write_adaptive_bank(&dir, &AdaptiveBankSpec::default())?;
+            (AdaptiveConfig::new(bank, &dir), Some(dir))
+        }
+    };
+    anyhow::ensure!(
+        acfg.bank.img > 0,
+        "bank has no runnable artifacts — generate one with `bankgen --synthetic`"
+    );
+    let acfg = match args.get("--pin") {
+        Some(id) => acfg.with_pinned(id),
+        None => acfg,
+    };
+    let images: Vec<Vec<f32>> = (0..32u64)
+        .map(|i| RefArtifactSpec { img: acfg.bank.img, ..Default::default() }.image(1000 + i))
+        .collect();
+    let schedule = poisson_schedule(rps, n, images.len(), seed);
+    let span = schedule.last().map(|a| a.at).unwrap_or(Duration::from_secs(1));
+    let trace = match args.get("--bw-trace") {
+        Some(t) => BwTrace::from_arg(t, span)?,
+        None => BwTrace::ble_wifi_3g(span),
+    };
+    println!(
+        "adaptive load: {rps} rps × {n} over a {} step trace ({} banked plans)",
+        trace.steps.len(),
+        acfg.bank.plans.len()
+    );
+
+    let run_one = |name: &str, pin: Option<&str>| -> Result<(String, LoadReport, ServingStats)> {
+        let mut cfg = ServeConfig::new("unused-when-adaptive");
+        cfg.uplink = trace.uplink_at(Duration::ZERO);
+        cfg.scheduler = sched.clone();
+        let mut a = acfg.clone();
+        if let Some(id) = pin {
+            a = a.with_pinned(id);
+        }
+        cfg.adaptive = Some(a);
+        let server = Server::start(cfg)?;
+        let _ = server.infer(images[0].clone()); // warm-up
+        let report = replay_traced(&server, &images, &schedule, &trace)?;
+        let stats = server.shutdown();
+        println!(
+            "{name}: p50 {:.2} ms  p99 {:.2} ms  switches {}  mid_batch_swaps {}",
+            report.quantile(0.5) * 1e3,
+            report.quantile(0.99) * 1e3,
+            stats.plan_switches,
+            stats.mid_batch_swaps,
+        );
+        Ok((name.to_string(), report, stats))
+    };
+
+    let mut rows = vec![run_one("adaptive", None)?];
+    if args.flag("--compare") {
+        let tier = acfg.bank.tier_entries(acfg.slo_tier_ms);
+        let lo = tier.first().context("bank entries")?;
+        let hi = tier.last().context("bank entries")?;
+        let lo_name = format!("static-{}", lo.state.name);
+        let hi_name = format!("static-{}", hi.state.name);
+        let lo_id = acfg.bank.plans[lo.plan].id.clone();
+        let hi_id = acfg.bank.plans[hi.plan].id.clone();
+        rows.push(run_one(&lo_name, Some(&lo_id))?);
+        if hi_id != lo_id {
+            rows.push(run_one(&hi_name, Some(&hi_id))?);
+        }
+        let trows: Vec<(String, LoadReport, u64, u64)> = rows
+            .iter()
+            .map(|(n, r, s)| (n.clone(), r.clone(), s.plan_switches, s.mid_batch_swaps))
+            .collect();
+        println!("{}", adaptive_table("Static vs adaptive over the bandwidth trace", &trows));
+    }
+    if let Some(path) = args.get("--json") {
+        write_adaptive_json(path, &rows)?;
+        println!("wrote {path}");
+    }
+    if let Some(dir) = tmp {
+        let _ = std::fs::remove_dir_all(dir); // disposable temp bank
+    }
+    Ok(())
+}
+
 fn cmd_loadtest(args: &Args) -> Result<()> {
     let sched = scheduler_from_args(args)?;
     let rps: f64 = args.parse("--rps", 100.0)?;
@@ -303,6 +528,9 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let per_client: usize = args.parse("--per-client", 32)?;
     let seed: u64 = args.parse("--seed", 1u64)?;
     let mbps: f64 = args.parse("--mbps", 3.0)?;
+    if args.flag("--adaptive") {
+        return run_adaptive_loadtest(args, &sched, rps, n, seed);
+    }
     let (dir, images, synthetic) = serving_inputs(args)?;
     let result = run_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps, &dir, &images);
     if synthetic {
@@ -395,6 +623,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "cloud" => ServeMode::CloudOnly,
         m => bail!("bad --mode {m}"),
     };
+    if args.flag("--adaptive") {
+        let bank = args.get("--bank").context("--adaptive requires --bank <dir>")?;
+        cfg.adaptive = Some(AdaptiveConfig::load(Path::new(bank))?);
+    }
     let n: usize = args.parse("--requests", 64)?;
 
     println!(

@@ -82,10 +82,25 @@ fn histogram_kld(xs: &[f32], qp: &QuantParams) -> f64 {
         .sum()
 }
 
+/// One layer's `(weight row, act row)` over the candidate bit set — the
+/// per-layer unit of work shared by the sequential and parallel builders.
+fn layer_rows(
+    profile: &ModelProfile,
+    layer: usize,
+    bits: &[u8],
+    metric: Metric,
+) -> (Vec<f64>, Vec<f64>) {
+    let lp = &profile.layers[layer];
+    (
+        bits.iter().map(|&b| tensor_distortion(&lp.weights, b, metric)).collect(),
+        bits.iter().map(|&b| tensor_distortion(&lp.activations, b, metric)).collect(),
+    )
+}
+
 /// Precomputed distortion tables for a model: `weight[i][k]` is `D^w_i` at
 /// candidate bit-width `bits[k]`; likewise `act`. Weight-free layers carry
 /// zeros. Computed once per (graph, profile, candidate set).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DistortionTable {
     pub bits: Vec<u8>,
     pub weight: Vec<Vec<f64>>,
@@ -97,17 +112,53 @@ impl DistortionTable {
         let mut weight = Vec::with_capacity(g.len());
         let mut act = Vec::with_capacity(g.len());
         for i in 0..g.len() {
-            let lp = &profile.layers[i];
-            weight.push(
-                bits.iter()
-                    .map(|&b| tensor_distortion(&lp.weights, b, metric))
-                    .collect(),
-            );
-            act.push(
-                bits.iter()
-                    .map(|&b| tensor_distortion(&lp.activations, b, metric))
-                    .collect(),
-            );
+            let (w, a) = layer_rows(profile, i, bits, metric);
+            weight.push(w);
+            act.push(a);
+        }
+        DistortionTable { bits: bits.to_vec(), weight, act }
+    }
+
+    /// Parallel profiling pass: each layer's `(weight row, act row)` is a
+    /// pure function of that layer's profile, so layers are fanned across a
+    /// scoped thread pool with the same index-claiming + index-ordered
+    /// merge pattern as `splitter::Planner` — workers claim layer indices
+    /// from an atomic counter and write into the slot of the index, so
+    /// scheduling can never reorder or perturb a row. Bit-identical to
+    /// [`DistortionTable::build`] for any worker count (locked by the
+    /// `parallel_build_matches_sequential_bitwise` test).
+    pub fn build_parallel(
+        g: &Graph,
+        profile: &ModelProfile,
+        bits: &[u8],
+        metric: Metric,
+        threads: usize,
+    ) -> Self {
+        let n = g.len();
+        let workers = threads.max(1).min(n.max(1));
+        if workers <= 1 || n <= 1 {
+            return DistortionTable::build(g, profile, bits, metric);
+        }
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<(Vec<f64>, Vec<f64>)>> =
+            (0..n).map(|_| std::sync::Mutex::new((Vec::new(), Vec::new()))).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = layer_rows(profile, i, bits, metric);
+                });
+            }
+        });
+        let mut weight = Vec::with_capacity(n);
+        let mut act = Vec::with_capacity(n);
+        for slot in slots {
+            let (w, a) = slot.into_inner().unwrap();
+            weight.push(w);
+            act.push(a);
         }
         DistortionTable { bits: bits.to_vec(), weight, act }
     }
@@ -177,6 +228,33 @@ mod tests {
         assert!(t.weight[0].iter().all(|&d| d == 0.0));
         // conv distortion decreases with bits
         assert!(t.weight[1][0] >= t.weight[1][3]);
+    }
+
+    #[test]
+    fn parallel_build_matches_sequential_bitwise() {
+        // the profiling pass fans layers across worker threads; rows must
+        // land bit-identical whatever the worker count (ROADMAP planner
+        // scale-out item (a))
+        let mut g = Graph::new("t", Shape::new(3, 16, 16));
+        let mut prev = 0;
+        for i in 0..6 {
+            prev = g.add(
+                format!("c{i}"),
+                LayerKind::Conv { kernel: 3, stride: 1, pad: 1, groups: 1 },
+                &[prev],
+                4 + i,
+            );
+        }
+        g.add("fc", LayerKind::Linear, &[prev], 10);
+        let p = ModelProfile::synthesize(&g);
+        let bits = [2u8, 4, 6, 8];
+        for metric in [Metric::Mse, Metric::Kld] {
+            let seq = DistortionTable::build(&g, &p, &bits, metric);
+            for threads in [1, 2, 3, 8] {
+                let par = DistortionTable::build_parallel(&g, &p, &bits, metric, threads);
+                assert_eq!(seq, par, "threads={threads} metric={metric:?}");
+            }
+        }
     }
 
     #[test]

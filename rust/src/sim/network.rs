@@ -42,12 +42,42 @@ impl Uplink {
         Uplink::new(rate * 1e6)
     }
 
-    /// Seconds to move `bytes` application bytes to the cloud.
+    /// An ad-hoc uplink from Mbps + RTT in ms, with the generic 5%
+    /// protocol overhead. The single constructor shared by the plan bank's
+    /// network states, bandwidth-trace replay, and `Server::set_link`, so
+    /// offline pricing and the live link always agree (named presets carry
+    /// their own measured overheads).
+    pub fn from_mbps_rtt(mbps: f64, rtt_ms: f64) -> Self {
+        Uplink { bps: mbps * 1e6, rtt_s: rtt_ms / 1e3, overhead: 1.05 }
+    }
+
+    /// Bandwidth term only: seconds to serialize `bytes` onto the wire,
+    /// with protocol overhead but **without** the per-connection RTT.
+    /// Linear in `bytes`, so it distributes over a chained batch.
+    pub fn payload_seconds(&self, bytes: usize) -> f64 {
+        (bytes as f64 * self.overhead * 8.0) / self.bps
+    }
+
+    /// Seconds to move `bytes` application bytes to the cloud as one
+    /// stand-alone transfer: one RTT plus the bandwidth term.
     pub fn transfer_seconds(&self, bytes: usize) -> f64 {
         if bytes == 0 {
             return 0.0;
         }
-        self.rtt_s + (bytes as f64 * self.overhead * 8.0) / self.bps
+        self.rtt_s + self.payload_seconds(bytes)
+    }
+
+    /// Seconds to move a *chained batch* of transfers that share one
+    /// connection round: the RTT is paid **once per batch**, not once per
+    /// transfer. This is the single source of truth for batched uplink
+    /// cost — `Link::transmit_batch` realizes exactly this charge, and
+    /// `prop_invariants` asserts the two agree.
+    pub fn batch_seconds(&self, sizes: &[usize]) -> f64 {
+        let payload: f64 = sizes.iter().map(|&b| self.payload_seconds(b)).sum();
+        if sizes.iter().all(|&b| b == 0) {
+            return 0.0;
+        }
+        self.rtt_s + payload
     }
 }
 
@@ -80,5 +110,31 @@ mod tests {
     fn rtt_floors_small_transfers() {
         let u = Uplink::cellular_3g();
         assert!(u.transfer_seconds(1) >= u.rtt_s);
+    }
+
+    #[test]
+    fn transfer_is_rtt_plus_payload() {
+        let u = Uplink::wifi();
+        let b = 12_345;
+        assert!((u.transfer_seconds(b) - (u.rtt_s + u.payload_seconds(b))).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_pays_rtt_once() {
+        let u = Uplink::cellular_3g();
+        let sizes = [100usize, 2000, 5, 700];
+        let chained = u.batch_seconds(&sizes);
+        let individual: f64 = sizes.iter().map(|&b| u.transfer_seconds(b)).sum();
+        // one RTT instead of four
+        assert!((individual - chained - 3.0 * u.rtt_s).abs() < 1e-12);
+        // and the bandwidth term is exactly the sum of payload terms
+        let payload: f64 = sizes.iter().map(|&b| u.payload_seconds(b)).sum();
+        assert!((chained - (u.rtt_s + payload)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_free() {
+        assert_eq!(Uplink::wifi().batch_seconds(&[]), 0.0);
+        assert_eq!(Uplink::wifi().batch_seconds(&[0, 0]), 0.0);
     }
 }

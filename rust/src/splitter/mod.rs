@@ -9,6 +9,7 @@ pub mod autosplit;
 pub mod baselines;
 pub mod candidates;
 pub mod compression;
+pub mod planbank;
 pub mod planner;
 pub mod solutions;
 
@@ -17,5 +18,8 @@ pub use autosplit::{
 };
 pub use baselines::BaselineCtx;
 pub use candidates::{edge_only_fits, potential_splits, SplitCandidate};
+pub use planbank::{
+    log_spaced_states, preset_states, BankEntry, BankGrid, NetClass, PlanBank, PlanSpec,
+};
 pub use planner::Planner;
 pub use solutions::{Placement, Solution, SolutionList};

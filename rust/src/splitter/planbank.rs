@@ -1,0 +1,607 @@
+//! Offline plan bank: the per-network-state optimal plans, precomputed.
+//!
+//! Auto-Split (Table 1) plans against **one** fixed uplink, but real edge
+//! links swing across orders of magnitude (BLE ↔ 5G). The bank makes the
+//! planner's output re-usable at runtime: sweep a grid of network states
+//! (bandwidth bins from the `sim::network::Uplink` presets plus log-spaced
+//! Mbps bins, × SLO tiers) and record, for every state, which plan wins.
+//! The serving side (`coordinator::adaptive`) then hot-swaps between the
+//! banked plans as its online link estimate moves across bins.
+//!
+//! ## How the sweep reuses the planner
+//!
+//! A candidate plan's latency decomposes as `edge + tr(uplink) + cloud`,
+//! and only the transmission term depends on the network state. The
+//! planner therefore enumerates the feasible `(split, bits)` candidates
+//! **once** (its own candidate-level parallel pool), and the bank re-prices
+//! `tr` per state from the candidate's `tx_bytes` — equivalent to
+//! re-running the planner per state, at a fraction of the cost. The state
+//! sweep itself fans across a scoped thread pool with the same
+//! index-claiming + index-ordered-merge pattern as `splitter::Planner`,
+//! so a bank is **bit-identical for any worker count** (and therefore
+//! byte-identical when serialized — the determinism tests lock this).
+//!
+//! ## Selection rule per state
+//!
+//! * no SLO tier (`slo_ms == 0`): fastest candidate within the accuracy
+//!   threshold (Remark 4, re-priced at this state's uplink);
+//! * SLO tier `t`: the **most accurate** candidate whose predicted
+//!   end-to-end latency meets `t` — accuracy is the objective once the
+//!   budget is met — falling back to the fastest when nothing meets it.
+//!
+//! Entries pointing at the same winning candidate are deduplicated by plan
+//! identity, so a bank stores each distinct plan once.
+
+use super::solutions::Solution;
+use crate::sim::Uplink;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Magic identifying a serialized bank.
+pub const BANK_MAGIC: &str = "auto-split-planbank-v1";
+
+/// One network state of the grid: an uplink class the link estimator can
+/// land in at runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetClass {
+    pub name: String,
+    pub mbps: f64,
+    pub rtt_ms: f64,
+}
+
+impl NetClass {
+    pub fn new(name: impl Into<String>, mbps: f64, rtt_ms: f64) -> Self {
+        NetClass { name: name.into(), mbps, rtt_ms }
+    }
+
+    /// The uplink this state prices transmissions against.
+    pub fn uplink(&self) -> Uplink {
+        Uplink::from_mbps_rtt(self.mbps, self.rtt_ms)
+    }
+}
+
+/// The paper's §1 network classes, as grid states (Uplink presets).
+pub fn preset_states() -> Vec<NetClass> {
+    vec![
+        NetClass::new("ble", 0.27, 50.0),
+        NetClass::new("3g", 3.0, 65.0),
+        NetClass::new("wifi", 54.0, 5.0),
+        NetClass::new("5g", 100.0, 2.0),
+    ]
+}
+
+/// `n` log-spaced bandwidth bins over `[lo_mbps, hi_mbps]` (a generic
+/// 10 ms RTT), for grids finer than the presets.
+pub fn log_spaced_states(lo_mbps: f64, hi_mbps: f64, n: usize) -> Vec<NetClass> {
+    assert!(lo_mbps > 0.0 && hi_mbps > lo_mbps && n >= 2);
+    (0..n)
+        .map(|i| {
+            let f = i as f64 / (n - 1) as f64;
+            let mbps = lo_mbps * (hi_mbps / lo_mbps).powf(f);
+            NetClass::new(format!("{mbps:.2}mbps"), mbps, 10.0)
+        })
+        .collect()
+}
+
+/// The full sweep grid: network states × SLO tiers, plus the accuracy
+/// threshold the no-SLO selection honours.
+#[derive(Debug, Clone)]
+pub struct BankGrid {
+    pub states: Vec<NetClass>,
+    /// End-to-end latency tiers in ms; `0.0` is the "no SLO" tier.
+    pub slo_tiers_ms: Vec<f64>,
+    /// Accuracy-drop threshold `A` (percent) for the no-SLO selection.
+    pub max_drop_pct: f64,
+}
+
+impl Default for BankGrid {
+    fn default() -> Self {
+        BankGrid { states: preset_states(), slo_tiers_ms: vec![0.0], max_drop_pct: 5.0 }
+    }
+}
+
+impl BankGrid {
+    /// Add `n` log-spaced Mbps bins to the preset states.
+    pub fn with_log_bins(mut self, lo_mbps: f64, hi_mbps: f64, n: usize) -> Self {
+        self.states.extend(log_spaced_states(lo_mbps, hi_mbps, n));
+        self
+    }
+
+    pub fn with_tiers(mut self, tiers_ms: &[f64]) -> Self {
+        self.slo_tiers_ms = tiers_ms.to_vec();
+        self
+    }
+}
+
+/// One banked plan: the state-independent summary of a `(split, bits)`
+/// candidate, plus (optionally) where its runnable artifacts live.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSpec {
+    /// Deduplication identity (stable digest of the assignment).
+    pub id: String,
+    pub method: String,
+    pub split_index: usize,
+    pub split_layer: String,
+    /// Modeled edge compute, seconds (uplink-independent).
+    pub edge_s: f64,
+    /// Modeled cloud compute, seconds (uplink-independent).
+    pub cloud_s: f64,
+    /// Wire bytes per inference (payload + protocol headers).
+    pub tx_bytes: usize,
+    pub acc_drop_pct: f64,
+    /// Artifact directory relative to the bank root (`None` for
+    /// plan-table-only banks, e.g. straight from the zoo planner).
+    pub artifacts: Option<String>,
+}
+
+impl PlanSpec {
+    /// Predicted end-to-end seconds at a network state: the plan's
+    /// compute terms plus its transmission re-priced at this uplink.
+    pub fn predict_s(&self, state: &NetClass) -> f64 {
+        self.edge_s + self.cloud_s + state.uplink().transfer_seconds(self.tx_bytes)
+    }
+
+    /// Summarize a planner [`Solution`] into a bank candidate. The id is a
+    /// stable digest of the full assignment, so two solutions with the
+    /// same split and bit vectors dedup to one plan.
+    pub fn from_solution(s: &Solution) -> PlanSpec {
+        let mut h = Fnv::new();
+        h.push_bytes(s.method.as_bytes());
+        h.push_u64(s.split_pos.map(|p| p as u64 + 1).unwrap_or(0));
+        h.push_bytes(&s.w_bits);
+        h.push_bytes(&s.a_bits);
+        h.push_u64(s.tx_bytes as u64);
+        PlanSpec {
+            id: format!("p{:016x}", h.finish()),
+            method: s.method.clone(),
+            split_index: s.split_index,
+            split_layer: s.split_layer.clone(),
+            edge_s: s.edge_s,
+            cloud_s: s.cloud_s,
+            tx_bytes: s.tx_bytes,
+            acc_drop_pct: s.acc_drop_pct,
+            artifacts: None,
+        }
+    }
+}
+
+/// FNV-1a 64, the stable digest behind plan identities.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn push_u64(&mut self, v: u64) {
+        self.push_bytes(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One grid cell: at this `(state, SLO tier)`, run this plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankEntry {
+    pub state: NetClass,
+    /// SLO tier in ms (`0.0` = no SLO).
+    pub slo_ms: f64,
+    /// Index into [`PlanBank::plans`].
+    pub plan: usize,
+    /// Predicted end-to-end seconds of the chosen plan at this state.
+    pub predicted_s: f64,
+}
+
+/// The serialized, deterministic table of per-state optimal plans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanBank {
+    pub model: String,
+    /// Image side of the runnable artifacts (0 for plan-table-only banks).
+    pub img: usize,
+    /// Deduplicated plans, in first-use order over the entry sweep.
+    pub plans: Vec<PlanSpec>,
+    /// Grid cells in (tier-major, ascending-mbps) order.
+    pub entries: Vec<BankEntry>,
+}
+
+/// Pure per-cell selection (see the module docs for the rule).
+/// Deterministic: ties break to the lowest candidate index.
+fn select_for_state(
+    candidates: &[PlanSpec],
+    state: &NetClass,
+    slo_ms: f64,
+    max_drop_pct: f64,
+) -> (usize, f64) {
+    let accurate: Vec<usize> = (0..candidates.len())
+        .filter(|&i| candidates[i].acc_drop_pct <= max_drop_pct + 1e-9)
+        .collect();
+    let pool: Vec<usize> =
+        if accurate.is_empty() { (0..candidates.len()).collect() } else { accurate };
+    if slo_ms > 0.0 {
+        // most accurate plan that meets the latency budget
+        let mut best: Option<usize> = None;
+        for &i in &pool {
+            if candidates[i].predict_s(state) * 1e3 <= slo_ms + 1e-9 {
+                let better = match best {
+                    None => true,
+                    Some(b) => candidates[i].acc_drop_pct < candidates[b].acc_drop_pct - 1e-12,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        if let Some(i) = best {
+            return (i, candidates[i].predict_s(state));
+        }
+        // nothing meets the budget: fall through to fastest
+    }
+    let mut best = pool[0];
+    let mut best_s = candidates[best].predict_s(state);
+    for &i in &pool[1..] {
+        let s = candidates[i].predict_s(state);
+        if s < best_s - 1e-15 {
+            best = i;
+            best_s = s;
+        }
+    }
+    (best, best_s)
+}
+
+impl PlanBank {
+    /// Sweep the grid over `candidates` and assemble the deduplicated
+    /// bank. `threads = 0` uses one worker per available core; any worker
+    /// count produces a bit-identical bank (index-ordered merge).
+    pub fn generate(
+        model: &str,
+        candidates: &[PlanSpec],
+        grid: &BankGrid,
+        threads: usize,
+    ) -> PlanBank {
+        assert!(!candidates.is_empty(), "bank needs at least one candidate plan");
+        assert!(!grid.states.is_empty() && !grid.slo_tiers_ms.is_empty());
+        // tier-major, ascending-mbps cell order (the switcher's bin order)
+        let mut states = grid.states.clone();
+        states.sort_by(|a, b| a.mbps.partial_cmp(&b.mbps).unwrap());
+        let cells: Vec<(f64, &NetClass)> = grid
+            .slo_tiers_ms
+            .iter()
+            .flat_map(|&t| states.iter().map(move |s| (t, s)))
+            .collect();
+
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = if threads == 0 { hw } else { threads }.max(1).min(cells.len());
+        let picks: Vec<(usize, f64)> = if workers <= 1 {
+            cells
+                .iter()
+                .map(|(t, s)| select_for_state(candidates, s, *t, grid.max_drop_pct))
+                .collect()
+        } else {
+            let next = AtomicUsize::new(0);
+            let slots: Vec<Mutex<(usize, f64)>> =
+                cells.iter().map(|_| Mutex::new((0, 0.0))).collect();
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cells.len() {
+                            break;
+                        }
+                        let (t, s) = cells[i];
+                        *slots[i].lock().unwrap() =
+                            select_for_state(candidates, s, t, grid.max_drop_pct);
+                    });
+                }
+            });
+            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        };
+
+        // dedup by plan identity, in first-use order
+        let mut plans: Vec<PlanSpec> = Vec::new();
+        let mut index_of: BTreeMap<String, usize> = BTreeMap::new();
+        let mut entries = Vec::with_capacity(cells.len());
+        for ((tier, state), (cand, predicted_s)) in cells.into_iter().zip(picks) {
+            let spec = &candidates[cand];
+            let plan = *index_of.entry(spec.id.clone()).or_insert_with(|| {
+                plans.push(spec.clone());
+                plans.len() - 1
+            });
+            entries.push(BankEntry { state: state.clone(), slo_ms: tier, plan, predicted_s });
+        }
+        PlanBank { model: model.to_string(), img: 0, plans, entries }
+    }
+
+    /// Entries of one SLO tier, in ascending-mbps order (the switcher's
+    /// bin list). Falls back to the `0.0` tier when the requested tier is
+    /// not in the bank.
+    pub fn tier_entries(&self, slo_ms: f64) -> Vec<&BankEntry> {
+        let of_tier = |t: f64| -> Vec<&BankEntry> {
+            self.entries.iter().filter(|e| (e.slo_ms - t).abs() < 1e-9).collect()
+        };
+        let v = of_tier(slo_ms);
+        if v.is_empty() {
+            of_tier(0.0)
+        } else {
+            v
+        }
+    }
+
+    /// Index of a plan by id.
+    pub fn plan_index(&self, id: &str) -> Option<usize> {
+        self.plans.iter().position(|p| p.id == id)
+    }
+
+    /// Serialize deterministically (same bank ⇒ byte-identical text).
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("bank".to_string(), Json::Str(BANK_MAGIC.to_string()));
+        root.insert("model".to_string(), Json::Str(self.model.clone()));
+        root.insert("img".to_string(), Json::Num(self.img as f64));
+        let plans: Vec<Json> = self
+            .plans
+            .iter()
+            .map(|p| {
+                let mut o = BTreeMap::new();
+                o.insert("id".to_string(), Json::Str(p.id.clone()));
+                o.insert("method".to_string(), Json::Str(p.method.clone()));
+                o.insert("split_index".to_string(), Json::Num(p.split_index as f64));
+                o.insert("split_layer".to_string(), Json::Str(p.split_layer.clone()));
+                o.insert("edge_s".to_string(), Json::Num(p.edge_s));
+                o.insert("cloud_s".to_string(), Json::Num(p.cloud_s));
+                o.insert("tx_bytes".to_string(), Json::Num(p.tx_bytes as f64));
+                o.insert("acc_drop_pct".to_string(), Json::Num(p.acc_drop_pct));
+                o.insert(
+                    "artifacts".to_string(),
+                    match &p.artifacts {
+                        Some(a) => Json::Str(a.clone()),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("plans".to_string(), Json::Arr(plans));
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("state".to_string(), Json::Str(e.state.name.clone()));
+                o.insert("mbps".to_string(), Json::Num(e.state.mbps));
+                o.insert("rtt_ms".to_string(), Json::Num(e.state.rtt_ms));
+                o.insert("slo_ms".to_string(), Json::Num(e.slo_ms));
+                o.insert("plan".to_string(), Json::Num(e.plan as f64));
+                o.insert("predicted_s".to_string(), Json::Num(e.predicted_s));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("entries".to_string(), Json::Arr(entries));
+        let mut s = Json::Obj(root).to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse a serialized bank.
+    pub fn parse(text: &str) -> Result<PlanBank> {
+        let j = Json::parse(text).context("plan bank JSON")?;
+        let magic = j.get("bank").and_then(|v| v.as_str()).unwrap_or_default();
+        anyhow::ensure!(magic == BANK_MAGIC, "bad bank magic {magic:?}");
+        let model = j.get("model").and_then(|v| v.as_str()).context("model")?.to_string();
+        let img = j.get("img").and_then(|v| v.as_usize()).unwrap_or(0);
+        let mut plans = Vec::new();
+        for p in j.get("plans").and_then(|v| v.as_arr()).context("plans")? {
+            plans.push(PlanSpec {
+                id: p.get("id").and_then(|v| v.as_str()).context("plan id")?.to_string(),
+                method: p
+                    .get("method")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("auto-split")
+                    .to_string(),
+                split_index: p.get("split_index").and_then(|v| v.as_usize()).unwrap_or(0),
+                split_layer: p
+                    .get("split_layer")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                edge_s: p.get("edge_s").and_then(|v| v.as_f64()).context("edge_s")?,
+                cloud_s: p.get("cloud_s").and_then(|v| v.as_f64()).context("cloud_s")?,
+                tx_bytes: p.get("tx_bytes").and_then(|v| v.as_usize()).context("tx_bytes")?,
+                acc_drop_pct: p.get("acc_drop_pct").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                artifacts: p.get("artifacts").and_then(|v| v.as_str()).map(str::to_string),
+            });
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").and_then(|v| v.as_arr()).context("entries")? {
+            let plan = e.get("plan").and_then(|v| v.as_usize()).context("entry plan")?;
+            anyhow::ensure!(plan < plans.len(), "entry references plan {plan} of {}", plans.len());
+            entries.push(BankEntry {
+                state: NetClass {
+                    name: e.get("state").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                    mbps: e.get("mbps").and_then(|v| v.as_f64()).context("mbps")?,
+                    rtt_ms: e.get("rtt_ms").and_then(|v| v.as_f64()).unwrap_or(10.0),
+                },
+                slo_ms: e.get("slo_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                plan,
+                predicted_s: e.get("predicted_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            });
+        }
+        anyhow::ensure!(!plans.is_empty() && !entries.is_empty(), "empty bank");
+        Ok(PlanBank { model, img, plans, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: &str, edge_ms: f64, tx: usize, drop: f64) -> PlanSpec {
+        PlanSpec {
+            id: id.into(),
+            method: "test".into(),
+            split_index: 1,
+            split_layer: id.into(),
+            edge_s: edge_ms / 1e3,
+            cloud_s: 0.0002,
+            tx_bytes: tx,
+            acc_drop_pct: drop,
+            artifacts: None,
+        }
+    }
+
+    /// The synthetic demo frontier: deeper split ⇒ more edge compute,
+    /// fewer bytes on the wire, more accuracy loss.
+    fn frontier() -> Vec<PlanSpec> {
+        vec![
+            cand("b8", 1.0, 16417, 0.3),
+            cand("b4", 12.0, 8225, 1.2),
+            cand("b2", 30.0, 4129, 2.5),
+            cand("b1", 55.0, 2081, 4.5),
+        ]
+    }
+
+    fn demo_grid() -> BankGrid {
+        BankGrid {
+            states: vec![
+                NetClass::new("ble", 0.27, 50.0),
+                NetClass::new("3g", 3.0, 65.0),
+                NetClass::new("wifi", 54.0, 5.0),
+            ],
+            slo_tiers_ms: vec![0.0, 150.0],
+            max_drop_pct: 5.0,
+        }
+    }
+
+    #[test]
+    fn each_phase_picks_a_distinct_plan() {
+        let bank = PlanBank::generate("demo", &frontier(), &demo_grid(), 1);
+        let tier0 = bank.tier_entries(0.0);
+        assert_eq!(tier0.len(), 3);
+        let ids: Vec<&str> = tier0.iter().map(|e| bank.plans[e.plan].id.as_str()).collect();
+        // slow link → deep split, mid link → mid split, fast link → shallow
+        assert_eq!(ids, vec!["b1", "b4", "b8"]);
+        // entries are ascending in mbps (the switcher's bin order)
+        assert!(tier0.windows(2).all(|w| w[0].state.mbps < w[1].state.mbps));
+    }
+
+    #[test]
+    fn slo_tier_prefers_accuracy_within_budget() {
+        let bank = PlanBank::generate("demo", &frontier(), &demo_grid(), 1);
+        let tier = bank.tier_entries(150.0);
+        assert_eq!(tier.len(), 3);
+        let id_at = |mbps: f64| {
+            tier.iter()
+                .find(|e| (e.state.mbps - mbps).abs() < 1e-9)
+                .map(|e| bank.plans[e.plan].id.as_str())
+                .unwrap()
+        };
+        // at 3 Mbps every plan meets 150 ms ⇒ the most accurate one wins
+        assert_eq!(id_at(3.0), "b8");
+        // at BLE nothing meets 150 ms ⇒ fall back to the fastest
+        assert_eq!(id_at(0.27), "b1");
+        assert_eq!(id_at(54.0), "b8");
+    }
+
+    #[test]
+    fn generation_is_parallel_deterministic() {
+        let grid = BankGrid::default().with_log_bins(0.1, 200.0, 7).with_tiers(&[0.0, 80.0]);
+        let seq = PlanBank::generate("demo", &frontier(), &grid, 1);
+        for threads in [2, 3, 8] {
+            let par = PlanBank::generate("demo", &frontier(), &grid, threads);
+            assert_eq!(seq, par, "threads={threads}");
+            assert_eq!(seq.to_json(), par.to_json(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let mut bank = PlanBank::generate("demo", &frontier(), &demo_grid(), 2);
+        bank.img = 128;
+        bank.plans[0].artifacts = Some("plans/b8".into());
+        let text = bank.to_json();
+        let parsed = PlanBank::parse(&text).unwrap();
+        assert_eq!(parsed, bank);
+        assert_eq!(parsed.to_json(), text, "serialize ∘ parse is the identity");
+    }
+
+    #[test]
+    fn dedup_stores_each_plan_once() {
+        let bank = PlanBank::generate("demo", &frontier(), &demo_grid(), 1);
+        let mut ids: Vec<&str> = bank.plans.iter().map(|p| p.id.as_str()).collect();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "plans must be unique");
+        assert!(n < bank.entries.len(), "entries share deduped plans");
+        for e in &bank.entries {
+            assert!(e.plan < bank.plans.len());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PlanBank::parse("{}").is_err());
+        assert!(PlanBank::parse("{\"bank\": \"wrong\"}").is_err());
+        // entry referencing a missing plan
+        let text = r#"{
+            "bank": "auto-split-planbank-v1",
+            "model": "x", "img": 0,
+            "plans": [{"id": "a", "edge_s": 0.1, "cloud_s": 0.1, "tx_bytes": 10,
+                       "acc_drop_pct": 0, "artifacts": null}],
+            "entries": [{"state": "s", "mbps": 1, "rtt_ms": 10, "slo_ms": 0,
+                         "plan": 3, "predicted_s": 0.2}]
+        }"#;
+        assert!(PlanBank::parse(text).is_err());
+    }
+
+    #[test]
+    fn plan_ids_from_solutions_are_stable_digests() {
+        use crate::splitter::solutions::Placement;
+        let s = Solution {
+            method: "auto-split".into(),
+            placement: Placement::Split,
+            split_pos: Some(5),
+            split_layer: "conv5".into(),
+            split_index: 4,
+            w_bits: vec![4, 4, 8],
+            a_bits: vec![4, 2, 8],
+            edge_s: 0.01,
+            tr_s: 0.02,
+            cloud_s: 0.001,
+            distortion_w: 0.0,
+            distortion_a: 0.0,
+            acc_drop_pct: 1.0,
+            edge_model_bytes: 100,
+            edge_act_ws_bytes: 100,
+            tx_bytes: 777,
+        };
+        let a = PlanSpec::from_solution(&s);
+        let b = PlanSpec::from_solution(&s);
+        assert_eq!(a.id, b.id, "same assignment ⇒ same identity");
+        let mut s2 = s.clone();
+        s2.a_bits[1] = 4;
+        assert_ne!(PlanSpec::from_solution(&s2).id, a.id, "different bits ⇒ new identity");
+        assert_eq!(a.tx_bytes, 777);
+    }
+
+    #[test]
+    fn log_bins_are_geometric() {
+        let states = log_spaced_states(0.1, 100.0, 4);
+        assert_eq!(states.len(), 4);
+        let r01 = states[1].mbps / states[0].mbps;
+        let r12 = states[2].mbps / states[1].mbps;
+        assert!((r01 - r12).abs() < 1e-9, "geometric spacing");
+        assert!((states[0].mbps - 0.1).abs() < 1e-12);
+        assert!((states[3].mbps - 100.0).abs() < 1e-9);
+    }
+}

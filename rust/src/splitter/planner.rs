@@ -97,7 +97,15 @@ impl Planner {
     ) -> SolutionList {
         let order = g.topo_order();
         let bits = &self.cfg.bit_set;
-        let table = DistortionTable::build(g, profile, bits, self.cfg.metric);
+        // the profiling pass is layer-parallel with the same pool policy as
+        // the candidate grid below (bit-identical to sequential)
+        let table = DistortionTable::build_parallel(
+            g,
+            profile,
+            bits,
+            self.cfg.metric,
+            self.worker_count(g.len()),
+        );
         let b_min = bits[0];
         let float_bits = vec![16u8; g.len()]; // for Cloud-Only bookkeeping
 

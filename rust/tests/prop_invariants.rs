@@ -243,6 +243,62 @@ fn prop_mincut_is_valid_closed_partition() {
     }
 }
 
+/// Batched uplink RTT accounting: `Uplink::transfer_seconds` (stand-alone
+/// transfer) and `Link::transmit_batch` (chained transfers) must agree on
+/// where RTT is charged — a chain pays it **once per batch**, not once per
+/// request, and the Link's per-transfer accounting sums to exactly
+/// `Uplink::batch_seconds` over the wire sizes.
+#[test]
+fn prop_batched_uplink_pays_rtt_once_per_chain() {
+    use auto_split::coordinator::{ActivationPacket, Link};
+    use auto_split::sim::Uplink;
+    let mut rng = SplitMix64::new(99);
+    for case in 0..25 {
+        let uplink = Uplink {
+            bps: 1e5 + rng.next_f64() * 1e8,
+            rtt_s: rng.next_f64() * 0.1,
+            overhead: 1.0 + rng.next_f64() * 0.2,
+        };
+        let k = 1 + rng.next_u64() as usize % 6;
+        let packets: Vec<ActivationPacket> = (0..k)
+            .map(|_| ActivationPacket {
+                bits: 8,
+                scale: 0.1,
+                zero_point: 0.0,
+                shape: [1, 1, 1, 1],
+                payload: (0..1 + rng.next_u64() as usize % 4096).map(|i| i as u8).collect(),
+            })
+            .collect();
+        let link = Link::new(uplink);
+        let transfers = link.transmit_batch(&packets).unwrap();
+        assert_eq!(transfers.len(), k);
+
+        // RTT charged exactly once per chain (on the first transfer)
+        let rtt_total: f64 = transfers.iter().map(|t| t.rtt.as_secs_f64()).sum();
+        assert!((rtt_total - uplink.rtt_s).abs() < 1e-6, "case {case}: rtt {rtt_total}");
+
+        // the Link's accounting sums to Uplink::batch_seconds exactly
+        let sizes: Vec<usize> = transfers.iter().map(|t| t.wire_bytes).collect();
+        let net_total: f64 = transfers.iter().map(|t| t.net_time.as_secs_f64()).sum();
+        assert!(
+            (net_total - uplink.batch_seconds(&sizes)).abs() < 1e-6,
+            "case {case}: chained {net_total} vs model {}",
+            uplink.batch_seconds(&sizes)
+        );
+
+        // a stand-alone transfer is the chain of one
+        let single = link.transmit(&packets[0]).unwrap();
+        let expect = uplink.transfer_seconds(single.wire_bytes);
+        assert!((single.net_time.as_secs_f64() - expect).abs() < 1e-6, "case {case}");
+
+        // chaining strictly beats per-request RTT charging
+        if k > 1 && uplink.rtt_s > 1e-6 {
+            let singles: f64 = sizes.iter().map(|&b| uplink.transfer_seconds(b)).sum();
+            assert!(net_total < singles, "case {case}: {net_total} !< {singles}");
+        }
+    }
+}
+
 /// Pack/unpack round-trip + size-formula agreement over random bit-widths,
 /// plane sizes, and channel counts, in both layouts: `unpack(pack(x)) == x`
 /// and `pack(x).len() == packed_len(..)` always.

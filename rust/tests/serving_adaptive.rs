@@ -1,0 +1,260 @@
+//! Adaptive runtime re-splitting, end to end over the in-memory link:
+//!
+//! * plan-bank determinism — same spec ⇒ byte-identical `plan_bank.json`
+//!   (synthetic writer), same grid ⇒ bit-identical bank for any worker
+//!   count (zoo-model sweep);
+//! * a BLE→WiFi step trace lands the switcher on the expected bank
+//!   entries (deep-split plan on BLE, shallow-split plan on WiFi), with
+//!   the modeled per-plan edge compute visible in `e2e`;
+//! * exactly-once accounting is preserved across plan switches, and no
+//!   cloud batch ever mixes plans (`mid_batch_swaps == 0`);
+//! * a pinned plan (the static baselines of `loadtest --compare`) never
+//!   switches;
+//! * bandwidth-trace replay drives the live uplink and the switcher
+//!   reacts, with every request accounted.
+//!
+//! Everything below the wall clock is deterministic: the link is modeled,
+//! so the estimator sees exact f64 observations and the switch points of
+//! the sequential tests are reproducible to the tick.
+
+use auto_split::coordinator::{
+    poisson_schedule, replay_traced, write_adaptive_bank, AdaptiveBankSpec, AdaptiveConfig,
+    BwTrace, Outcome, SchedulerConfig, ServeConfig, Server,
+};
+use auto_split::graph::optimize_for_inference;
+use auto_split::profile::ModelProfile;
+use auto_split::sim::{LatencyModel, Uplink};
+use auto_split::splitter::{AutoSplitConfig, BankGrid, PlanBank, PlanSpec, Planner};
+use auto_split::zoo;
+use std::path::{Path, PathBuf};
+
+fn bank_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("autosplit-adaptive-{}-{tag}", std::process::id()))
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Start a bank-backed server (optionally pinned) on the given uplink.
+fn start_adaptive(dir: &Path, pin: Option<&str>, uplink: Uplink) -> (Server, PlanBank) {
+    let bank = write_adaptive_bank(dir, &AdaptiveBankSpec::default()).unwrap();
+    let mut acfg = AdaptiveConfig::new(bank.clone(), dir);
+    if let Some(id) = pin {
+        acfg = acfg.with_pinned(id);
+    }
+    let mut cfg = ServeConfig::new(dir); // artifacts unused when adaptive
+    cfg.uplink = uplink;
+    cfg.adaptive = Some(acfg);
+    (Server::start(cfg).expect("start adaptive server"), bank)
+}
+
+#[test]
+fn synthetic_bank_is_byte_identical_across_writes() {
+    let d1 = bank_dir("det-a");
+    let d2 = bank_dir("det-b");
+    let spec = AdaptiveBankSpec::default();
+    let b1 = write_adaptive_bank(&d1, &spec).unwrap();
+    let b2 = write_adaptive_bank(&d2, &spec).unwrap();
+    assert_eq!(b1, b2, "same spec ⇒ same bank");
+    let j1 = std::fs::read_to_string(d1.join("plan_bank.json")).unwrap();
+    let j2 = std::fs::read_to_string(d2.join("plan_bank.json")).unwrap();
+    assert_eq!(j1, j2, "same spec ⇒ byte-identical serialization");
+    // parse ∘ serialize is the identity on the file bytes
+    let parsed = PlanBank::parse(&j1).unwrap();
+    assert_eq!(parsed, b1);
+    assert_eq!(parsed.to_json(), j1);
+    cleanup(&d1);
+    cleanup(&d2);
+}
+
+#[test]
+fn model_bank_sweep_is_bit_identical_for_any_worker_count() {
+    // candidates from one planner run over a real zoo model; the grid
+    // sweep itself must be worker-count invariant (index-ordered merge)
+    let (g, task) = zoo::by_name("squeezenet1_0").unwrap();
+    let opt = optimize_for_inference(&g).graph;
+    let profile = ModelProfile::synthesize(&opt);
+    let lm = LatencyModel::paper_default();
+    let list = Planner::new(AutoSplitConfig::default()).solutions(&opt, &profile, &lm, task);
+    let candidates: Vec<PlanSpec> = list.solutions.iter().map(PlanSpec::from_solution).collect();
+    assert!(candidates.len() > 1, "planner found {} candidates", candidates.len());
+
+    let grid = BankGrid::default().with_log_bins(0.2, 150.0, 5).with_tiers(&[0.0, 120.0]);
+    let seq = PlanBank::generate(&opt.name, &candidates, &grid, 1);
+    for threads in [2, 4, 8] {
+        let par = PlanBank::generate(&opt.name, &candidates, &grid, threads);
+        assert_eq!(seq, par, "threads={threads}");
+        assert_eq!(seq.to_json(), par.to_json(), "threads={threads}");
+    }
+    // the sweep covered every grid cell and deduped the winners
+    assert_eq!(seq.entries.len(), (4 + 5) * 2);
+    assert!(!seq.plans.is_empty() && seq.plans.len() <= candidates.len());
+}
+
+#[test]
+fn ble_to_wifi_step_lands_on_expected_bank_plans() {
+    let dir = bank_dir("step");
+    let (server, bank) = start_adaptive(&dir, None, Uplink::ble());
+    let spec = AdaptiveBankSpec::default();
+    let b1 = bank.plan_index("b1").expect("deep-split plan in bank");
+    let b8 = bank.plan_index("b8").expect("shallow-split plan in bank");
+
+    // BLE phase: seeded on the BLE bin, the switcher must sit on the
+    // deep-split plan and stay there
+    let mut early = None;
+    for i in 0..12 {
+        let res = server.infer(spec.image(100 + i)).unwrap();
+        assert_eq!(res.plan, b1, "request {i} must run the BLE plan");
+        early = Some(res);
+    }
+    assert_eq!(server.active_plan(), b1);
+    assert_eq!(server.plan_ids()[b1], "b1");
+
+    // step the link to WiFi: the estimator converges through the 3G bin,
+    // so hysteresis applies two switches (b1→b4→b8), never a flap back
+    server.set_uplink(Uplink::wifi());
+    let mut late = None;
+    for i in 0..15 {
+        late = Some(server.infer(spec.image(200 + i)).unwrap());
+    }
+    assert_eq!(server.active_plan(), b8, "switcher must land on the WiFi plan");
+    assert_eq!(late.as_ref().unwrap().plan, b8);
+
+    // the modeled per-plan edge compute + modeled wire are visible in
+    // e2e: deep split on BLE is slower end-to-end than shallow on WiFi
+    let early = early.unwrap();
+    let late = late.unwrap();
+    assert!(
+        early.e2e > late.e2e,
+        "BLE/b1 e2e {:?} must exceed WiFi/b8 e2e {:?}",
+        early.e2e,
+        late.e2e
+    );
+    assert!(early.e2e.as_secs_f64() > 0.10, "55 ms edge + ~67 ms wire: {:?}", early.e2e);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.plan_switches, 2, "b1→b4→b8 is exactly two switches");
+    assert_eq!(stats.mid_batch_swaps, 0, "switches apply between batches only");
+    assert!(stats.est_bps > 20e6, "estimator tracked WiFi: {:.1} Mbps", stats.est_bps / 1e6);
+    assert!(stats.plan_requests[b1] > 0 && stats.plan_requests[b8] > 0);
+    cleanup(&dir);
+}
+
+#[test]
+fn exactly_once_accounting_survives_plan_switches() {
+    let dir = bank_dir("once");
+    let bank = write_adaptive_bank(&dir, &AdaptiveBankSpec::default()).unwrap();
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.uplink = Uplink::ble();
+    cfg.scheduler = SchedulerConfig::default().with_shards(2).with_edge_workers(2);
+    cfg.scheduler.max_batch = 4;
+    cfg.adaptive = Some(AdaptiveConfig::new(bank.clone(), &dir));
+    let server = Server::start(cfg).unwrap();
+    let spec = AdaptiveBankSpec::default();
+
+    // submit bursts while the link flips under the pipeline's feet
+    let links = [Uplink::ble(), Uplink::wifi(), Uplink::cellular_3g(), Uplink::wifi()];
+    let mut rxs = Vec::new();
+    for (phase, ul) in links.iter().enumerate() {
+        server.set_uplink(*ul);
+        for i in 0..12u64 {
+            rxs.push(server.submit(spec.image(phase as u64 * 100 + i)).unwrap());
+        }
+    }
+    let n = rxs.len() as u64;
+    let mut done = 0u64;
+    for rx in rxs {
+        match rx.recv().expect("terminal response").expect("no pipeline error") {
+            Outcome::Done(res) => {
+                assert!(res.plan < bank.plans.len());
+                done += 1;
+            }
+            Outcome::Shed(_) => panic!("Block admission must never shed"),
+        }
+        assert!(rx.try_recv().is_err(), "exactly one response per request");
+    }
+    assert_eq!(done, n);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.offered, n);
+    assert_eq!(stats.requests, n);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.mid_batch_swaps, 0, "no cloud batch may mix plans");
+    assert_eq!(stats.edge_requests.len(), 2, "two edge workers");
+    assert_eq!(stats.edge_requests.iter().sum::<u64>(), n, "edge counters cover every request");
+    assert_eq!(stats.plan_requests.iter().sum::<u64>(), n, "plan counters cover every request");
+    cleanup(&dir);
+}
+
+#[test]
+fn pinned_plan_disables_switching() {
+    let dir = bank_dir("pinned");
+    let (server, bank) = start_adaptive(&dir, Some("b8"), Uplink::ble());
+    let spec = AdaptiveBankSpec::default();
+    let b8 = bank.plan_index("b8").unwrap();
+    for i in 0..10 {
+        let res = server.infer(spec.image(i)).unwrap();
+        assert_eq!(res.plan, b8, "pinned server must never leave its plan");
+    }
+    // even a dramatic link improvement must not move a pinned server
+    server.set_uplink(Uplink::wifi());
+    for i in 10..20 {
+        assert_eq!(server.infer(spec.image(i)).unwrap().plan, b8);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.plan_switches, 0);
+    assert_eq!(stats.active_plan as usize, b8);
+    assert_eq!(stats.plan_requests[b8], 20);
+    cleanup(&dir);
+}
+
+#[test]
+fn traced_replay_accounts_everything_and_switches() {
+    let dir = bank_dir("trace");
+    let (server, _bank) = start_adaptive(&dir, None, Uplink::ble());
+    let spec = AdaptiveBankSpec::default();
+    let images: Vec<Vec<f32>> = (0..8u64).map(|i| spec.image(900 + i)).collect();
+    let schedule = poisson_schedule(250.0, 60, images.len(), 11);
+    let span = schedule.last().unwrap().at.as_secs_f64();
+    let trace = BwTrace::parse(&format!("0 0.27 50\n{:.3} 54 5\n", span * 0.4)).unwrap();
+
+    let report = replay_traced(&server, &images, &schedule, &trace).unwrap();
+    assert!(report.fully_accounted());
+    assert_eq!(report.completed, 60);
+    assert_eq!(report.shed, 0);
+
+    let stats = server.shutdown();
+    assert!(
+        stats.plan_switches >= 1,
+        "the switcher must react to the BLE→WiFi trace (saw {})",
+        stats.plan_switches
+    );
+    assert_eq!(stats.mid_batch_swaps, 0);
+    cleanup(&dir);
+}
+
+#[test]
+fn adaptive_requires_split_mode_and_runnable_bank() {
+    let dir = bank_dir("guards");
+    let bank = write_adaptive_bank(&dir, &AdaptiveBankSpec::default()).unwrap();
+    // Cloud-Only + adaptive is rejected at start
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.mode = auto_split::coordinator::ServeMode::CloudOnly;
+    cfg.adaptive = Some(AdaptiveConfig::new(bank.clone(), &dir));
+    assert!(Server::start(cfg).is_err(), "adaptive Cloud-Only must be refused");
+    // a plan-table-only bank (no artifacts) is rejected at start
+    let mut tableonly = bank;
+    for p in &mut tableonly.plans {
+        p.artifacts = None;
+    }
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.adaptive = Some(AdaptiveConfig::new(tableonly, &dir));
+    assert!(Server::start(cfg).is_err(), "bank without artifacts must be refused");
+    // pinning an unknown plan id is rejected at start
+    let bank2 = write_adaptive_bank(&dir, &AdaptiveBankSpec::default()).unwrap();
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.adaptive = Some(AdaptiveConfig::new(bank2, &dir).with_pinned("no-such-plan"));
+    assert!(Server::start(cfg).is_err(), "unknown pinned plan must be refused");
+    cleanup(&dir);
+}

@@ -185,6 +185,33 @@ fn batch_affinity_pins_singleton_batches_to_one_shard() {
 }
 
 #[test]
+fn edge_worker_pool_accounts_every_request() {
+    // the edge stage is sharded too: N edge threads drain the one
+    // admission queue; per-edge-worker counters must cover every request
+    let dir = write_artifacts("edgepool");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.scheduler = SchedulerConfig::default().with_edge_workers(3).with_shards(2);
+    cfg.scheduler.max_batch = 4;
+    let server = Server::start(cfg).expect("start 3-edge-worker server");
+
+    let n = 48u64;
+    let pool = images(8);
+    let rxs: Vec<_> = (0..n as usize)
+        .map(|i| server.submit(pool[i % pool.len()].clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        let out = rx.recv().expect("response").expect("no pipeline error");
+        out.done().expect("Block admission never sheds");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n);
+    assert_eq!(stats.edge_requests.len(), 3, "one counter per edge worker");
+    assert_eq!(stats.edge_requests.iter().sum::<u64>(), n, "edge counters cover every request");
+    assert_eq!(stats.plan_requests, vec![n], "static server: a single plan slot");
+    cleanup(&dir);
+}
+
+#[test]
 fn slo_rule_closes_batches_before_the_window() {
     let dir = write_artifacts("slo");
     let mut cfg = ServeConfig::new(&dir);
