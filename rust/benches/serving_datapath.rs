@@ -1,0 +1,221 @@
+//! Data-plane allocation benchmark: the loopback serving pipeline under a
+//! counting global allocator, owned copying plane (`--pool off`, the
+//! seed's architecture) vs the zero-copy pooled plane (`--pool on`, the
+//! default). Both planes share the refactored worker/engine internals,
+//! so the baseline is if anything leaner than the literal seed — the
+//! reported drop is a conservative lower bound on the seed-relative win.
+//!
+//! Reports **allocations/request** and **bytes-allocated/request** over a
+//! steady-state window (after a warmup that fills the pool shelves and
+//! every engine cache), plus p50/p99 latency and the pool hit rate, and
+//! writes `BENCH_datapath.json` — the record the CI gate reads: pooled
+//! steady-state allocations/request must drop ≥ 50% with p50 no worse,
+//! and the wire bytes must be identical in both modes.
+//!
+//! The counter wraps the `System` allocator and counts every thread, so
+//! the serving threads (edge, dispatcher, shards) — the actual data
+//! plane — are what is measured, not just the client loop.
+//!
+//! Flags: `--requests N` (default 400), `--warmup N` (default 64).
+
+use auto_split::coordinator::{write_reference_artifacts, RefArtifactSpec, ServeConfig, Server};
+use auto_split::report::Table;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), ALLOC_BYTES.load(Ordering::SeqCst))
+}
+
+/// One measured serving mode.
+struct Row {
+    name: &'static str,
+    allocs_per_req: f64,
+    bytes_per_req: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    hit_rate: f64,
+    tx_bytes_per_req: f64,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Drive `n` requests in bursts of 8 (so uplink chains and cloud batches
+/// actually form) and return the sorted e2e latencies, served tx bytes,
+/// and the allocation deltas across the submit/collect window. The owned
+/// request images are cloned BEFORE the window opens, so the counters
+/// measure the serving data plane, not the client's input preparation.
+fn drive(server: &Server, images: &[Vec<f32>], n: usize) -> (Vec<f64>, u64, u64, u64) {
+    let mut owned: Vec<Vec<f32>> = (0..n).map(|i| images[i % images.len()].clone()).collect();
+    owned.reverse(); // pop() issues them in order
+    let mut lat = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(8);
+    let mut tx = 0u64;
+    let (a0, b0) = snapshot();
+    let mut done = 0usize;
+    while done < n {
+        let burst = 8.min(n - done);
+        rxs.clear();
+        for _ in 0..burst {
+            rxs.push(server.submit(owned.pop().unwrap()).expect("submit"));
+        }
+        for rx in rxs.drain(..) {
+            let res = rx.recv().expect("response").expect("pipeline").done().expect("served");
+            lat.push(res.e2e.as_secs_f64());
+            tx += res.tx_bytes as u64;
+        }
+        done += burst;
+    }
+    let (a1, b1) = snapshot();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat, tx, a1 - a0, b1 - b0)
+}
+
+fn run_mode(
+    name: &'static str,
+    pooled: bool,
+    dir: &Path,
+    images: &[Vec<f32>],
+    warmup: usize,
+    n: usize,
+) -> Row {
+    let cfg = ServeConfig::new(dir).with_pool(pooled);
+    let server = Server::start(cfg).expect("start server");
+    // warmup: fills the pool shelves, engine caches, histograms, channels
+    let _ = drive(&server, images, warmup);
+    let warm_stats = server.stats();
+    let (lat, tx, allocs, bytes) = drive(&server, images, n);
+    let stats = server.stats();
+    server.shutdown();
+    // pool hit rate over the measured window only
+    let hits = stats.pool_hits - warm_stats.pool_hits;
+    let misses = stats.pool_misses - warm_stats.pool_misses;
+    let hit_rate = if hits + misses > 0 {
+        hits as f64 / (hits + misses) as f64
+    } else {
+        0.0
+    };
+    Row {
+        name,
+        allocs_per_req: allocs as f64 / n as f64,
+        bytes_per_req: bytes as f64 / n as f64,
+        p50_ms: quantile(&lat, 0.5) * 1e3,
+        p99_ms: quantile(&lat, 0.99) * 1e3,
+        hit_rate,
+        tx_bytes_per_req: tx as f64 / n as f64,
+    }
+}
+
+fn arg(key: &str, default: usize) -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == key)
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = arg("--requests", 400).max(1);
+    let warmup = arg("--warmup", 64).max(1);
+
+    let spec = RefArtifactSpec::default();
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("autosplit-datapath-{}", std::process::id()));
+    write_reference_artifacts(&dir, &spec).expect("write synthetic artifacts");
+    let images: Vec<Vec<f32>> = (0..32).map(|i| spec.image(5000 + i as u64)).collect();
+
+    println!("datapath bench: {n} requests/mode after {warmup} warmup (loopback, synthetic)\n");
+    let off = run_mode("off (legacy copy)", false, &dir, &images, warmup, n);
+    let on = run_mode("on (pooled sg)", true, &dir, &images, warmup, n);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut t = Table::new(
+        "Serving data plane — steady-state allocation cost per request",
+        &["pool", "allocs/req", "bytes/req", "p50 ms", "p99 ms", "pool hit", "tx B/req"],
+    );
+    for r in [&off, &on] {
+        t.row(&[
+            r.name.into(),
+            format!("{:.1}", r.allocs_per_req),
+            format!("{:.0}", r.bytes_per_req),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.1}%", 100.0 * r.hit_rate),
+            format!("{:.1}", r.tx_bytes_per_req),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let alloc_drop = 100.0 * (1.0 - on.allocs_per_req / off.allocs_per_req.max(1e-9));
+    let bytes_drop = 100.0 * (1.0 - on.bytes_per_req / off.bytes_per_req.max(1e-9));
+    println!(
+        "pooled plane: {alloc_drop:.1}% fewer allocations/request, \
+         {bytes_drop:.1}% fewer bytes/request"
+    );
+
+    let rows_json = [&off, &on]
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"pool\": \"{}\", \"allocs_per_req\": {:.3}, \
+                 \"bytes_per_req\": {:.1}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+                 \"hit_rate\": {:.4}, \"tx_bytes_per_req\": {:.1}}}",
+                if r.name.starts_with("on") { "on" } else { "off" },
+                r.allocs_per_req,
+                r.bytes_per_req,
+                r.p50_ms,
+                r.p99_ms,
+                r.hit_rate,
+                r.tx_bytes_per_req,
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"datapath\",\n  \"requests\": {n},\n  \
+         \"alloc_drop_pct\": {alloc_drop:.2},\n  \"bytes_drop_pct\": {bytes_drop:.2},\n  \
+         \"rows\": [\n{rows_json}\n  ]\n}}\n"
+    );
+    std::fs::write("BENCH_datapath.json", json).expect("write BENCH_datapath.json");
+    println!("wrote BENCH_datapath.json");
+}

@@ -1,0 +1,252 @@
+//! Size-classed reusable byte-buffer pool for the serving data plane.
+//!
+//! The hot path moves one packed payload per request plus one padded
+//! batch buffer per cloud batch. Allocating those fresh each time is pure
+//! churn — COINFER's "resource wall" profiling shows memory traffic, not
+//! FLOPs, is what saturates edge nodes — so the pipeline checks buffers
+//! out of this pool and checks them back in when the bytes have been
+//! consumed, the same discipline RDMA stacks apply to pre-registered
+//! memory regions (see the `rust-ibverbs` zerocopy pools): at steady
+//! state every checkout is a shelf hit and the request path allocates
+//! nothing.
+//!
+//! Buffers live on power-of-two size-class shelves, **one lock per
+//! class** (edge workers and cloud shards touch disjoint classes most of
+//! the time, so independent workers don't serialize on a global pool
+//! lock; counters are atomics). `checkout(cap)` returns a **cleared**
+//! `Vec<u8>` with capacity ≥ `cap`; `checkin` shelves the buffer under
+//! the largest class its capacity fully covers, so the capacity
+//! guarantee survives recycling. A disabled pool allocates on every
+//! checkout (counted as a miss) and drops every checkin; note the
+//! server's `--pool off` legacy plane bypasses the pool entirely, so its
+//! counters read zero there.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest size class, bytes. Checkouts below this round up.
+const MIN_CLASS_BYTES: usize = 64;
+/// Number of power-of-two size classes: 64 B .. 64 B << 20 = 64 MiB,
+/// comfortably past any packed activation batch. Checkouts beyond the
+/// largest class allocate exactly and never shelve.
+const NUM_CLASSES: usize = 21;
+/// Buffers kept per size class; beyond this a checkin is dropped.
+const MAX_SHELF_DEPTH: usize = 64;
+
+/// Snapshot of pool traffic counters (monotonic over the pool's life).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Checkouts served from a shelf — no allocation happened.
+    pub hits: u64,
+    /// Checkouts that had to allocate (cold shelf, or a checkout against
+    /// a disabled pool).
+    pub misses: u64,
+    /// Capacity bytes handed out from shelves (allocation avoided).
+    pub bytes_reused: u64,
+    /// Buffers returned and shelved for reuse.
+    pub checkins: u64,
+}
+
+impl PoolStats {
+    /// Fraction of checkouts served without allocating.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Shared, thread-safe buffer pool (one per [`crate::coordinator::Server`];
+/// payload buffers cycle edge → shard → back to the shelf through it).
+pub struct BufPool {
+    enabled: bool,
+    /// `shelves[i]` holds buffers of capacity ≥ `MIN_CLASS_BYTES << i`.
+    shelves: Vec<Mutex<Vec<Vec<u8>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_reused: AtomicU64,
+    checkins: AtomicU64,
+}
+
+impl BufPool {
+    /// A fresh pool. `enabled = false` builds the counting-only baseline:
+    /// every checkout allocates, every checkin drops.
+    pub fn new(enabled: bool) -> Arc<BufPool> {
+        Arc::new(BufPool {
+            enabled,
+            shelves: (0..NUM_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_reused: AtomicU64::new(0),
+            checkins: AtomicU64::new(0),
+        })
+    }
+
+    /// Is this pool actually recycling buffers?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Size-class index whose buffers satisfy a `cap`-byte checkout
+    /// (may be ≥ [`NUM_CLASSES`] for huge requests — never shelved).
+    fn ceil_class(cap: usize) -> usize {
+        let c = cap.max(MIN_CLASS_BYTES).next_power_of_two();
+        (c / MIN_CLASS_BYTES).ilog2() as usize
+    }
+
+    /// Largest size class a `cap`-byte buffer fully covers (checkin key).
+    fn floor_class(cap: usize) -> Option<usize> {
+        if cap < MIN_CLASS_BYTES {
+            return None;
+        }
+        Some((cap / MIN_CLASS_BYTES).ilog2() as usize)
+    }
+
+    /// Check out a cleared buffer with capacity ≥ `cap`.
+    pub fn checkout(&self, cap: usize) -> Vec<u8> {
+        let class = Self::ceil_class(cap);
+        if self.enabled && class < NUM_CLASSES {
+            if let Some(mut buf) = self.shelves[class].lock().unwrap().pop() {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_reused.fetch_add(buf.capacity() as u64, Ordering::Relaxed);
+                buf.clear();
+                return buf;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let want = if class < NUM_CLASSES { MIN_CLASS_BYTES << class } else { cap };
+        Vec::with_capacity(want)
+    }
+
+    /// Return a buffer for reuse. Dropped (not shelved) when the pool is
+    /// disabled, the buffer falls outside the class range, or its shelf
+    /// is already full.
+    pub fn checkin(&self, buf: Vec<u8>) {
+        if !self.enabled {
+            return;
+        }
+        let Some(class) = Self::floor_class(buf.capacity()) else {
+            return;
+        };
+        if class >= NUM_CLASSES {
+            return;
+        }
+        let mut shelf = self.shelves[class].lock().unwrap();
+        if shelf.len() < MAX_SHELF_DEPTH {
+            self.checkins.fetch_add(1, Ordering::Relaxed);
+            shelf.push(buf);
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
+            checkins: self.checkins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_checkout_misses_then_recycles_as_hit() {
+        let pool = BufPool::new(true);
+        let buf = pool.checkout(100);
+        assert!(buf.capacity() >= 100);
+        assert!(buf.is_empty());
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses), (0, 1));
+
+        pool.checkin(buf);
+        let buf2 = pool.checkout(100);
+        assert!(buf2.capacity() >= 100);
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.checkins), (1, 1, 1));
+        assert!(st.bytes_reused >= 100);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn checked_out_buffer_is_cleared_but_keeps_capacity() {
+        let pool = BufPool::new(true);
+        let mut buf = pool.checkout(64);
+        buf.extend_from_slice(&[1, 2, 3, 4]);
+        pool.checkin(buf);
+        let buf = pool.checkout(64);
+        assert!(buf.is_empty(), "recycled buffer must come back cleared");
+        assert!(buf.capacity() >= 64);
+    }
+
+    #[test]
+    fn size_classes_do_not_cross_contaminate() {
+        let pool = BufPool::new(true);
+        let small = pool.checkout(64);
+        pool.checkin(small);
+        // a much larger checkout must not get the small buffer back
+        let big = pool.checkout(1 << 16);
+        assert!(big.capacity() >= 1 << 16);
+        assert_eq!(pool.stats().misses, 2, "different class ⇒ cold miss");
+    }
+
+    #[test]
+    fn grown_buffer_reshelves_under_a_class_it_covers() {
+        let pool = BufPool::new(true);
+        let mut buf = pool.checkout(64);
+        buf.resize(10_000, 0); // caller grew it past its class
+        let cap = buf.capacity();
+        pool.checkin(buf);
+        // it now serves the largest class its capacity fully covers
+        let class_bytes = MIN_CLASS_BYTES << (cap / MIN_CLASS_BYTES).ilog2();
+        let buf = pool.checkout(class_bytes);
+        assert!(buf.capacity() >= class_bytes);
+        assert_eq!(pool.stats().hits, 1, "recycled across the grown class");
+    }
+
+    #[test]
+    fn oversized_checkout_allocates_exactly_and_never_shelves() {
+        let pool = BufPool::new(true);
+        let huge = MIN_CLASS_BYTES << NUM_CLASSES; // beyond the last class
+        let buf = pool.checkout(huge);
+        assert!(buf.capacity() >= huge);
+        pool.checkin(buf);
+        assert_eq!(pool.stats().checkins, 0, "beyond-range buffers are dropped");
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses), (0, 2));
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates_and_counts_misses() {
+        let pool = BufPool::new(false);
+        for _ in 0..3 {
+            let buf = pool.checkout(256);
+            assert!(buf.capacity() >= 256);
+            pool.checkin(buf);
+        }
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.checkins), (0, 3, 0));
+        assert_eq!(st.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn shelf_depth_is_bounded() {
+        let pool = BufPool::new(true);
+        let bufs: Vec<Vec<u8>> = (0..2 * MAX_SHELF_DEPTH).map(|_| pool.checkout(64)).collect();
+        for b in bufs {
+            pool.checkin(b);
+        }
+        assert_eq!(pool.stats().checkins as usize, MAX_SHELF_DEPTH);
+    }
+
+    #[test]
+    fn empty_stats_hit_rate_is_zero() {
+        assert_eq!(PoolStats::default().hit_rate(), 0.0);
+    }
+}

@@ -4,7 +4,7 @@
 //! zeros.
 
 use super::protocol::ActivationPacket;
-use crate::runtime::{literal_u8, Engine};
+use crate::runtime::{literal_view_u8, Engine};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -31,6 +31,11 @@ impl CloudWorker {
         *self.engines.keys().last().unwrap()
     }
 
+    /// Logits per request this worker's head produces.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
     /// Smallest compiled batch size that fits `k` requests.
     pub fn engine_batch_for(&self, k: usize) -> usize {
         self.engines
@@ -41,34 +46,54 @@ impl CloudWorker {
     }
 
     /// Run a batch of packets; returns per-request logits + compute time.
+    /// Allocating wrapper around [`CloudWorker::infer_batch_into`].
     pub fn infer_batch(
         &self,
         packets: &[ActivationPacket],
     ) -> Result<(Vec<Vec<f32>>, Duration)> {
-        anyhow::ensure!(!packets.is_empty());
-        anyhow::ensure!(packets.len() <= self.max_batch(), "batch too large");
-        let (c2, hw) = self.packed_shape;
-        let b = self.engine_batch_for(packets.len());
-        let engine = self.engines.get(&b).context("engine lookup")?;
-
-        // assemble (B, C/2, HW) u8 buffer, zero-padded to the engine batch
-        let mut buf = vec![0u8; b * c2 * hw];
-        for (i, p) in packets.iter().enumerate() {
-            anyhow::ensure!(p.payload.len() == c2 * hw, "payload shape mismatch");
-            buf[i * c2 * hw..(i + 1) * c2 * hw].copy_from_slice(&p.payload);
-        }
-        let t0 = Instant::now();
-        let lit = literal_u8(&buf, &[b as i64, c2 as i64, hw as i64])?;
-        let out = engine.run_f32(&[lit])?;
-        let dt = t0.elapsed();
-        anyhow::ensure!(out.len() == b * self.classes, "bad logits len {}", out.len());
+        let payloads: Vec<&[u8]> = packets.iter().map(|p| p.payload.as_slice()).collect();
+        let mut scratch = Vec::new();
+        let mut logits = Vec::new();
+        let (_, dt) = self.infer_batch_into(&payloads, &mut scratch, &mut logits)?;
         Ok((
-            packets
-                .iter()
-                .enumerate()
-                .map(|(i, _)| out[i * self.classes..(i + 1) * self.classes].to_vec())
+            (0..packets.len())
+                .map(|i| logits[i * self.classes..(i + 1) * self.classes].to_vec())
                 .collect(),
             dt,
         ))
+    }
+
+    /// Zero-copy batched execution: payloads are borrowed slices (one per
+    /// request), the padded `(B, C/2, HW)` batch tensor is assembled in
+    /// the caller's pooled `scratch`, and the engine writes all `B ×
+    /// classes` logits (padding rows included) into the caller's reusable
+    /// `logits` buffer. Returns the compiled engine batch used + compute
+    /// time. Bit-identical to [`CloudWorker::infer_batch`].
+    pub fn infer_batch_into(
+        &self,
+        payloads: &[&[u8]],
+        scratch: &mut Vec<u8>,
+        logits: &mut Vec<f32>,
+    ) -> Result<(usize, Duration)> {
+        anyhow::ensure!(!payloads.is_empty());
+        anyhow::ensure!(payloads.len() <= self.max_batch(), "batch too large");
+        let (c2, hw) = self.packed_shape;
+        let b = self.engine_batch_for(payloads.len());
+        let engine = self.engines.get(&b).context("engine lookup")?;
+
+        // assemble the u8 batch, zero-padded to the engine batch size
+        scratch.clear();
+        scratch.resize(b * c2 * hw, 0);
+        for (i, p) in payloads.iter().enumerate() {
+            anyhow::ensure!(p.len() == c2 * hw, "payload shape mismatch");
+            scratch[i * c2 * hw..(i + 1) * c2 * hw].copy_from_slice(p);
+        }
+        let t0 = Instant::now();
+        let dims = [b as i64, c2 as i64, hw as i64];
+        let lit = literal_view_u8(scratch, &dims)?;
+        engine.run_f32_into(&[lit], logits)?;
+        let dt = t0.elapsed();
+        anyhow::ensure!(logits.len() == b * self.classes, "bad logits len {}", logits.len());
+        Ok((b, dt))
     }
 }

@@ -1,8 +1,8 @@
 //! Edge worker: preprocess → edge executable (quantized convs + 4-bit
 //! pack, all inside the AOT artifact) → activation packet.
 
-use super::protocol::ActivationPacket;
-use crate::runtime::{literal_f32, Engine};
+use super::protocol::{ActivationPacket, PacketHeader};
+use crate::runtime::{literal_view_f32, Engine};
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
@@ -32,22 +32,46 @@ impl EdgeWorker {
 
     /// Run one camera frame (f32 grayscale in [0,1], IMG×IMG) through the
     /// edge partition; returns the transmission packet + compute time.
+    /// Allocating wrapper around [`EdgeWorker::infer_into`].
     pub fn infer(&self, image: &[f32]) -> Result<(ActivationPacket, Duration)> {
+        let mut payload = Vec::new();
+        let (h, dt) = self.infer_into(image, &mut payload)?;
+        Ok((
+            ActivationPacket {
+                bits: h.bits,
+                scale: h.scale,
+                zero_point: h.zero_point,
+                shape: h.shape,
+                payload,
+            },
+            dt,
+        ))
+    }
+
+    /// Zero-copy [`EdgeWorker::infer`]: the image is borrowed straight
+    /// into the engine and the packed activation lands in `payload` (a
+    /// pooled scratch buffer, cleared first). The frame header comes back
+    /// by value — nothing allocates at steady state.
+    pub fn infer_into(
+        &self,
+        image: &[f32],
+        payload: &mut Vec<u8>,
+    ) -> Result<(PacketHeader, Duration)> {
         let img = self.spec.img;
         anyhow::ensure!(image.len() == img * img, "bad image size {}", image.len());
         let t0 = Instant::now();
-        let lit = literal_f32(image, &[1, 1, img as i64, img as i64])?;
-        let packed = self.engine.run_u8(&[lit])?;
+        let dims = [1i64, 1, img as i64, img as i64];
+        let lit = literal_view_f32(image, &dims)?;
+        self.engine.run_u8_into(&[lit], payload)?;
         let dt = t0.elapsed();
         let (c2, hw) = self.spec.packed_shape;
-        anyhow::ensure!(packed.len() == c2 * hw, "unexpected packed len {}", packed.len());
+        anyhow::ensure!(payload.len() == c2 * hw, "unexpected packed len {}", payload.len());
         Ok((
-            ActivationPacket {
+            PacketHeader {
                 bits: self.spec.act_bits,
                 scale: self.spec.boundary_scale,
                 zero_point: 0.0,
                 shape: [1, c2 as i32, hw as i32, 1],
-                payload: packed,
             },
             dt,
         ))

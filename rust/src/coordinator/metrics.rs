@@ -107,6 +107,13 @@ pub struct ServingStats {
     pub est_bps: f64,
     /// Link estimator's RTT estimate at snapshot time, seconds.
     pub est_rtt_s: f64,
+    /// Buffer-pool checkouts served from a shelf (no allocation).
+    pub pool_hits: u64,
+    /// Buffer-pool checkouts that allocated (cold shelf). Zero on the
+    /// `--pool off` legacy plane, which bypasses the pool entirely.
+    pub pool_misses: u64,
+    /// Capacity bytes the pool handed out without allocating.
+    pub pool_bytes_reused: u64,
 }
 
 impl ServingStats {
@@ -152,6 +159,16 @@ impl ServingStats {
         }
     }
 
+    /// Fraction of buffer-pool checkouts served without allocating.
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total > 0 {
+            self.pool_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         let shards = self
             .shard_batches
@@ -183,6 +200,7 @@ impl ServingStats {
              queue  depth={} peak={}  slo_closes={}  shards: [{}]  edges: [{}]\n\
              adaptive est={:.2}Mbps rtt={:.1}ms active=p{} switches={} \
              mid_batch_swaps={}  plans: [{}]\n\
+             pool   hits={} misses={} hit_rate={:.1}% reused={} bytes\n\
              tx_total={} bytes",
             self.requests,
             self.shed,
@@ -209,6 +227,10 @@ impl ServingStats {
             self.plan_switches,
             self.mid_batch_swaps,
             plans,
+            self.pool_hits,
+            self.pool_misses,
+            100.0 * self.pool_hit_rate(),
+            self.pool_bytes_reused,
             self.tx_bytes_total,
         )
     }
@@ -296,6 +318,17 @@ mod tests {
         let s = ServingStats::with_shards(2);
         assert_eq!(s.edge_requests.len(), 1);
         assert_eq!(s.plan_requests.len(), 1);
+    }
+
+    #[test]
+    fn pool_hit_rate_accounting() {
+        let mut s = ServingStats::default();
+        assert_eq!(s.pool_hit_rate(), 0.0, "no checkouts → rate 0");
+        s.pool_hits = 3;
+        s.pool_misses = 1;
+        assert!((s.pool_hit_rate() - 0.75).abs() < 1e-12);
+        let r = s.report();
+        assert!(r.contains("hit_rate=75.0%"), "{r}");
     }
 
     #[test]

@@ -19,9 +19,12 @@
 //! `make artifacts`. The scheduling layer (admission control, deadline-
 //! aware batching, shard routing) lives in [`scheduler`]; the runtime
 //! re-splitting layer (link estimation + hysteretic plan switching over a
-//! `splitter::planbank` bank) lives in [`adaptive`].
+//! `splitter::planbank` bank) lives in [`adaptive`]; the zero-copy data
+//! plane (size-classed buffer pool + in-place packing + scatter-gather
+//! framing) lives in [`bufpool`], [`protocol`], and [`link`].
 
 pub mod adaptive;
+pub mod bufpool;
 pub mod cloud;
 pub mod edge;
 pub mod link;
@@ -35,15 +38,16 @@ pub mod testkit;
 pub use adaptive::{
     AdaptiveConfig, BwTrace, Hysteresis, LinkEstimator, PlanSwitcher, SwitchBin, TraceStep,
 };
+pub use bufpool::{BufPool, PoolStats};
 pub use cloud::CloudWorker;
 pub use edge::{EdgeSpec, EdgeWorker};
-pub use link::{DelayMode, Link, Transfer, WireFormat};
+pub use link::{DelayMode, Link, Segments, SgTransfer, Transfer, WireFormat};
 pub use loadgen::{
     adaptive_table, closed_loop, mixed_workload, poisson_schedule, policy_table, replay,
     replay_traced, run_mixed, Arrival, LoadReport, MixedReport, MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
-pub use protocol::{ActivationPacket, TX_HEADER_BYTES};
+pub use protocol::{ActivationPacket, ActivationView, PacketHeader, TX_HEADER_BYTES};
 pub use scheduler::{
     AdmissionPolicy, AdmissionQueue, BatchCost, CostPrior, RoutePolicy, SchedulerConfig,
 };

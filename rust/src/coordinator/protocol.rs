@@ -29,35 +29,37 @@ pub const MAGIC: u32 = 0x4153_5054;
 /// match what [`ActivationPacket::to_binary`] actually puts on the wire.
 pub const TX_HEADER_BYTES: usize = 4 + 1 + 4 + 4 + 16 + 4;
 
-/// One activation tensor in flight from edge to cloud.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ActivationPacket {
+/// The fixed-size header fields of one activation frame (everything but
+/// the payload). The zero-copy serving path moves one of these by value
+/// next to a pooled payload buffer instead of materializing a packet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PacketHeader {
     pub bits: u8,
     pub scale: f32,
     pub zero_point: f32,
     /// Logical shape (batch, channels-packed, h, w) of the payload.
     pub shape: [i32; 4],
-    pub payload: Vec<u8>,
 }
 
-impl ActivationPacket {
-    /// Binary framing (socket mode).
-    pub fn to_binary(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.payload.len() + 32);
-        out.extend_from_slice(&MAGIC.to_le_bytes());
-        out.push(self.bits);
-        out.extend_from_slice(&self.scale.to_le_bytes());
-        out.extend_from_slice(&self.zero_point.to_le_bytes());
-        for d in self.shape {
-            out.extend_from_slice(&d.to_le_bytes());
+impl PacketHeader {
+    /// Encode the binary frame header announcing a `payload_len`-byte
+    /// payload: exactly [`TX_HEADER_BYTES`] bytes, on the stack.
+    pub fn encode(&self, payload_len: usize) -> [u8; TX_HEADER_BYTES] {
+        let mut out = [0u8; TX_HEADER_BYTES];
+        out[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        out[4] = self.bits;
+        out[5..9].copy_from_slice(&self.scale.to_le_bytes());
+        out[9..13].copy_from_slice(&self.zero_point.to_le_bytes());
+        for (i, d) in self.shape.iter().enumerate() {
+            out[13 + 4 * i..17 + 4 * i].copy_from_slice(&d.to_le_bytes());
         }
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&self.payload);
+        out[29..33].copy_from_slice(&(payload_len as u32).to_le_bytes());
         out
     }
 
-    /// Parse binary framing.
-    pub fn from_binary(buf: &[u8]) -> Result<Self> {
+    /// Decode a binary frame header; returns the fields plus the payload
+    /// byte count the header announces.
+    pub fn decode(buf: &[u8]) -> Result<(PacketHeader, usize)> {
         let mut off = 0usize;
         let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
             if *off + n > buf.len() {
@@ -79,8 +81,130 @@ impl ActivationPacket {
             *d = i32::from_le_bytes(take(&mut off, 4)?.try_into()?);
         }
         let len = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
-        let payload = take(&mut off, len)?.to_vec();
-        Ok(ActivationPacket { bits, scale, zero_point, shape, payload })
+        Ok((PacketHeader { bits, scale, zero_point, shape }, len))
+    }
+}
+
+/// A borrowed, decoded activation frame: header fields by value, payload
+/// as a slice into the received buffer — parsing copies nothing. The
+/// owned [`ActivationPacket`] parse routes through [`ActivationView::to_owned`],
+/// so the one remaining copy is explicit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActivationView<'a> {
+    pub bits: u8,
+    pub scale: f32,
+    pub zero_point: f32,
+    pub shape: [i32; 4],
+    pub payload: &'a [u8],
+}
+
+impl<'a> ActivationView<'a> {
+    /// Zero-copy parse of a contiguous binary frame.
+    pub fn parse(buf: &'a [u8]) -> Result<ActivationView<'a>> {
+        let (h, len) = PacketHeader::decode(buf)?;
+        let payload = buf
+            .get(TX_HEADER_BYTES..TX_HEADER_BYTES + len)
+            .with_context(|| format!("truncated packet at offset {TX_HEADER_BYTES}"))?;
+        Ok(ActivationView {
+            bits: h.bits,
+            scale: h.scale,
+            zero_point: h.zero_point,
+            shape: h.shape,
+            payload,
+        })
+    }
+
+    /// Scatter-gather parse: header and payload arrive as separate
+    /// segments (a chained uplink transmits them back to back without
+    /// concatenating). The header's announced length must cover the
+    /// payload segment exactly.
+    pub fn parse_sg(header: &[u8], payload: &'a [u8]) -> Result<ActivationView<'a>> {
+        anyhow::ensure!(
+            header.len() == TX_HEADER_BYTES,
+            "bad header segment: {} bytes (want {TX_HEADER_BYTES})",
+            header.len()
+        );
+        let (h, len) = PacketHeader::decode(header)?;
+        anyhow::ensure!(
+            len == payload.len(),
+            "header announces {len} B but payload segment holds {}",
+            payload.len()
+        );
+        Ok(ActivationView {
+            bits: h.bits,
+            scale: h.scale,
+            zero_point: h.zero_point,
+            shape: h.shape,
+            payload,
+        })
+    }
+
+    /// The header fields of this view.
+    pub fn header(&self) -> PacketHeader {
+        PacketHeader {
+            bits: self.bits,
+            scale: self.scale,
+            zero_point: self.zero_point,
+            shape: self.shape,
+        }
+    }
+
+    /// Explicit copy into an owned packet — tests and the ASCII baseline
+    /// only; the serving hot path stays on the borrowed view.
+    pub fn to_owned(&self) -> ActivationPacket {
+        ActivationPacket {
+            bits: self.bits,
+            scale: self.scale,
+            zero_point: self.zero_point,
+            shape: self.shape,
+            payload: self.payload.to_vec(),
+        }
+    }
+}
+
+/// One activation tensor in flight from edge to cloud.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationPacket {
+    pub bits: u8,
+    pub scale: f32,
+    pub zero_point: f32,
+    /// Logical shape (batch, channels-packed, h, w) of the payload.
+    pub shape: [i32; 4],
+    pub payload: Vec<u8>,
+}
+
+impl ActivationPacket {
+    /// The header fields of this packet.
+    pub fn header(&self) -> PacketHeader {
+        PacketHeader {
+            bits: self.bits,
+            scale: self.scale,
+            zero_point: self.zero_point,
+            shape: self.shape,
+        }
+    }
+
+    /// Binary framing (socket mode). Allocating wrapper around
+    /// [`ActivationPacket::write_into`].
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload.len() + TX_HEADER_BYTES);
+        self.write_into(&mut out);
+        out
+    }
+
+    /// In-place binary framing: write the frame into `out` (cleared
+    /// first), reusing its capacity. Byte-identical to [`to_binary`].
+    pub fn write_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(TX_HEADER_BYTES + self.payload.len());
+        out.extend_from_slice(&self.header().encode(self.payload.len()));
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Parse binary framing into an owned packet: a zero-copy
+    /// [`ActivationView::parse`] plus one explicit payload copy.
+    pub fn from_binary(buf: &[u8]) -> Result<Self> {
+        Ok(ActivationView::parse(buf)?.to_owned())
     }
 
     /// ASCII/RPC framing (Table 4 baseline): decimal text per byte.
@@ -201,5 +325,61 @@ mod tests {
         let mut buf = p.to_binary();
         buf[0] ^= 0xff;
         assert!(ActivationPacket::from_binary(&buf).is_err());
+    }
+
+    #[test]
+    fn write_into_matches_to_binary_and_reuses_scratch() {
+        let p = sample();
+        let mut buf = vec![0xAAu8; 7]; // dirty scratch
+        p.write_into(&mut buf);
+        assert_eq!(buf, p.to_binary());
+        let empty = ActivationPacket { payload: vec![], ..sample() };
+        empty.write_into(&mut buf);
+        assert_eq!(buf, empty.to_binary());
+        assert_eq!(buf.len(), TX_HEADER_BYTES);
+    }
+
+    #[test]
+    fn header_encode_decode_roundtrip() {
+        let p = sample();
+        let enc = p.header().encode(p.payload.len());
+        assert_eq!(enc.len(), TX_HEADER_BYTES);
+        let (h, len) = PacketHeader::decode(&enc).unwrap();
+        assert_eq!(h, p.header());
+        assert_eq!(len, p.payload.len());
+    }
+
+    #[test]
+    fn view_parse_matches_owned_parse() {
+        let p = sample();
+        let buf = p.to_binary();
+        let v = ActivationView::parse(&buf).unwrap();
+        assert_eq!(v.to_owned(), p);
+        // the payload is a borrow into the frame, not a copy
+        let base = buf.as_ptr() as usize;
+        let pp = v.payload.as_ptr() as usize;
+        assert_eq!(pp - base, TX_HEADER_BYTES);
+    }
+
+    #[test]
+    fn view_rejects_truncation_at_every_cut() {
+        let p = sample();
+        let buf = p.to_binary();
+        for cut in [0, 3, 10, TX_HEADER_BYTES - 1, TX_HEADER_BYTES, buf.len() - 1] {
+            assert!(ActivationView::parse(&buf[..cut]).is_err(), "cut={cut}");
+        }
+        assert!(ActivationView::parse(&buf).is_ok());
+    }
+
+    #[test]
+    fn sg_parse_borrows_payload_segment_and_checks_len() {
+        let p = sample();
+        let header = p.header().encode(p.payload.len());
+        let v = ActivationView::parse_sg(&header, &p.payload).unwrap();
+        assert_eq!(v.to_owned(), p);
+        assert_eq!(v.payload.as_ptr(), p.payload.as_ptr(), "no copy");
+        // announced length must match the payload segment exactly
+        assert!(ActivationView::parse_sg(&header, &p.payload[1..]).is_err());
+        assert!(ActivationView::parse_sg(&header[1..], &p.payload).is_err());
     }
 }

@@ -17,6 +17,21 @@
 //! * **N shard threads**, each owning its own `Runtime` and per-plan,
 //!   per-batch-size engines, execute batches and answer the clients.
 //!
+//! ## Zero-copy data plane
+//!
+//! With [`ServeConfig::pool`] (the default) the request path is
+//! allocation-free at steady state: edge workers pack activations
+//! straight into buffers checked out of a shared [`BufPool`], frame
+//! headers live on the stack, the link moves header + payload as
+//! scatter-gather segments ([`Link::transmit_batch_sg`]) so chained
+//! uplinks never concatenate, the far side parses a borrowed
+//! `ActivationView` instead of copying, and each pooled payload buffer
+//! MOVES through the cloud job into the shard, which returns it to the
+//! pool after assembling the batch tensor in pooled scratch. `pool:
+//! false` keeps the owned copying plane (the seed's architecture) as a
+//! measurable baseline (`benches/serving_datapath.rs`); wire bytes,
+//! plans, and logits are bit-identical either way.
+//!
 //! ## Adaptive re-splitting
 //!
 //! With [`ServeConfig::adaptive`] set, the server loads **every** plan in
@@ -38,11 +53,12 @@
 //! admission policy), or `Err` (malformed request / pipeline failure).
 
 use super::adaptive::{AdaptiveConfig, AdaptiveRt, LinkEstimator, PlanSwitcher, SwitchBin};
+use super::bufpool::BufPool;
 use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
-use super::link::{DelayMode, Link, WireFormat};
+use super::link::{DelayMode, Link, Segments, WireFormat};
 use super::metrics::ServingStats;
-use super::protocol::ActivationPacket;
+use super::protocol::{ActivationPacket, PacketHeader, TX_HEADER_BYTES};
 use super::scheduler::{
     drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
     Router, SchedulerConfig,
@@ -78,6 +94,16 @@ pub struct ServeConfig {
     /// Adaptive re-splitting: plan bank + switching policy. When set, the
     /// plan artifacts come from the bank and `artifacts` is unused.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Zero-copy pooled data plane (default). `false` runs the owned
+    /// copying plane — the seed's architecture: owned packets, full
+    /// frame serialization, far-side payload copy, per-shard packet
+    /// clones — kept as the measurable baseline for
+    /// `benches/serving_datapath` and the `--pool off` CLI flag. (Both
+    /// planes share the refactored worker/engine internals, so this
+    /// baseline is if anything leaner than the literal seed and the
+    /// measured pooled gain is conservative.) Wire bytes and results are
+    /// bit-identical either way.
+    pub pool: bool,
 }
 
 impl ServeConfig {
@@ -90,6 +116,7 @@ impl ServeConfig {
             mode: ServeMode::Split,
             scheduler: SchedulerConfig::default(),
             adaptive: None,
+            pool: true,
         }
     }
 
@@ -100,6 +127,11 @@ impl ServeConfig {
 
     pub fn with_adaptive(mut self, adaptive: AdaptiveConfig) -> Self {
         self.adaptive = Some(adaptive);
+        self
+    }
+
+    pub fn with_pool(mut self, pool: bool) -> Self {
+        self.pool = pool;
         self
     }
 }
@@ -270,6 +302,10 @@ pub struct Server {
     /// Bank plan ids, index-aligned with plan counters (`["static"]` for
     /// a non-adaptive server).
     plan_ids: Vec<String>,
+    /// The shared buffer pool payloads and batch scratch cycle through
+    /// (idle when `ServeConfig::pool` is false — the legacy plane
+    /// bypasses it, so its counters read zero).
+    pool: Arc<BufPool>,
 }
 
 /// The compiled engine batch sizes actually loaded for `max_batch`: every
@@ -382,6 +418,7 @@ impl Server {
         let cost = Arc::new(BatchCost::new(sched.cost_prior));
         let outstanding = Outstanding::new(shards);
         let uplink = Arc::new(Mutex::new(cfg.uplink));
+        let pool = BufPool::new(cfg.pool);
 
         let engine_batches = match cfg.mode {
             ServeMode::Split => engine_batch_set(&plans[0].meta, sched.max_batch),
@@ -409,6 +446,7 @@ impl Server {
             let uplink = uplink.clone();
             let adaptive = adaptive.clone();
             let stats = stats.clone();
+            let pool = pool.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("edge-worker-{edge_id}"))
@@ -421,6 +459,7 @@ impl Server {
                             cloud_tx,
                             uplink,
                             adaptive,
+                            pool,
                             stats,
                             edge_ready_tx,
                         )
@@ -443,6 +482,7 @@ impl Server {
             let stats = stats.clone();
             let outstanding = outstanding.clone();
             let cost = cost.clone();
+            let pool = pool.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cloud-shard-{shard_id}"))
@@ -454,6 +494,7 @@ impl Server {
                             batch_rx,
                             outstanding,
                             cost,
+                            pool,
                             stats,
                             ready_tx,
                         )
@@ -520,6 +561,7 @@ impl Server {
             uplink,
             adaptive,
             plan_ids,
+            pool,
         })
     }
 
@@ -595,6 +637,10 @@ impl Server {
         s.wall_s = self.started.elapsed().as_secs_f64();
         s.queue_depth = self.queue.depth() as u64;
         s.queue_peak = self.queue.peak() as u64;
+        let ps = self.pool.stats();
+        s.pool_hits = ps.hits;
+        s.pool_misses = ps.misses;
+        s.pool_bytes_reused = ps.bytes_reused;
         if let Some(a) = &self.adaptive {
             let rt = a.lock().unwrap();
             s.est_bps = rt.est.bps();
@@ -638,6 +684,232 @@ fn abort_start(
     e
 }
 
+/// One chain member after its uplink transfer, normalized across the
+/// pooled scatter-gather and legacy owned data planes. The wire and time
+/// accounting is identical in both; only where the payload bytes live
+/// differs (pooled buffer moved along vs decoded copy).
+struct SentPacket {
+    resp: mpsc::Sender<Result<Outcome>>,
+    submitted: Instant,
+    edge_dt: Duration,
+    packet: ActivationPacket,
+    wire_bytes: usize,
+    net_time: Duration,
+    rtt: Duration,
+    codec_time: Duration,
+}
+
+/// One staged request on the pooled path: header by value, payload in a
+/// pooled buffer, the encoded frame header on the stack.
+struct StagedSg {
+    resp: mpsc::Sender<Result<Outcome>>,
+    submitted: Instant,
+    edge_dt: Duration,
+    header: PacketHeader,
+    frame_header: [u8; TX_HEADER_BYTES],
+    payload: Vec<u8>,
+}
+
+/// Capacity hint for a pooled edge payload buffer.
+fn edge_payload_cap(cfg: &ServeConfig, prt: &PlanRt) -> usize {
+    match cfg.mode {
+        ServeMode::Split => prt.meta.packed_shape.0 * prt.meta.packed_shape.1,
+        ServeMode::CloudOnly => prt.meta.img * prt.meta.img,
+    }
+}
+
+/// Stage one Cloud-Only request: quantize the raw image to the 8-bit
+/// upload payload (written into `payload`, cleared first) and return the
+/// matching frame header. Shared by both data planes so their baseline
+/// bytes cannot drift apart.
+fn stage_cloud_only(image: &[f32], img: usize, payload: &mut Vec<u8>) -> PacketHeader {
+    payload.clear();
+    payload.extend(image.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8));
+    let img = img as i32;
+    PacketHeader { bits: 8, scale: 1.0 / 255.0, zero_point: 0.0, shape: [1, 1, img, img] }
+}
+
+/// Modeled edge compute of the active plan: slept in RealSleep mode (part
+/// of the wall clock), accounted virtually otherwise (see module docs).
+fn sleep_sim_edge(cfg: &ServeConfig, prt: &PlanRt, n: usize) {
+    if cfg.delay == DelayMode::RealSleep && prt.sim_edge > Duration::ZERO {
+        std::thread::sleep(prt.sim_edge * n as u32);
+    }
+}
+
+/// Build the link for one chain from the live uplink (read at transmit
+/// time, so bandwidth-trace replay takes effect on the next chain).
+fn chain_link(cfg: &ServeConfig, uplink: &Mutex<Uplink>) -> Link {
+    let ul = *uplink.lock().unwrap();
+    Link::new(ul).with_format(cfg.wire).with_delay(cfg.delay)
+}
+
+/// Process one request chain on the zero-copy pooled data plane: pack
+/// into pooled payload buffers, frame headers on the stack, transmit
+/// header+payload as scatter-gather segments (nothing concatenated, far
+/// side borrows), then MOVE each pooled buffer into its cloud job. Every
+/// failed request is answered inline; the returned members are in-flight.
+#[allow(clippy::too_many_arguments)]
+fn edge_chain_sg(
+    cfg: &ServeConfig,
+    prt: &PlanRt,
+    plan: usize,
+    workers: Option<&Vec<EdgeWorker>>,
+    reqs: Vec<Request>,
+    uplink: &Mutex<Uplink>,
+    pool: &BufPool,
+) -> Vec<SentPacket> {
+    let mut staged: Vec<StagedSg> = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let mut payload = pool.checkout(edge_payload_cap(cfg, prt));
+        let work = match (workers, cfg.mode) {
+            (Some(w), ServeMode::Split) => w[plan].infer_into(&req.image, &mut payload),
+            (_, ServeMode::CloudOnly) | (None, _) => {
+                // raw 8-bit upload, quantized straight into the pooled buffer
+                let h = stage_cloud_only(&req.image, prt.meta.img, &mut payload);
+                Ok((h, Duration::ZERO))
+            }
+        };
+        match work {
+            Ok((header, edge_dt)) => {
+                let frame_header = header.encode(payload.len());
+                staged.push(StagedSg {
+                    resp: req.resp,
+                    submitted: req.submitted,
+                    edge_dt,
+                    header,
+                    frame_header,
+                    payload,
+                });
+            }
+            Err(e) => {
+                pool.checkin(payload);
+                let _ = req.resp.send(Err(e));
+            }
+        }
+    }
+    if staged.is_empty() {
+        return Vec::new();
+    }
+    sleep_sim_edge(cfg, prt, staged.len());
+    let link = chain_link(cfg, uplink);
+    let segs: Vec<Segments<'_>> = staged
+        .iter()
+        .map(|s| Segments { header: &s.frame_header, payload: &s.payload })
+        .collect();
+    let transfers = match link.transmit_batch_sg(&segs) {
+        Ok(t) => t,
+        Err(e) => {
+            drop(segs);
+            let msg = format!("{e:#}");
+            for s in staged {
+                pool.checkin(s.payload);
+                let _ = s.resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            return Vec::new();
+        }
+    };
+    drop(segs);
+    staged
+        .into_iter()
+        .zip(transfers)
+        .map(|(s, t)| SentPacket {
+            resp: s.resp,
+            submitted: s.submitted,
+            edge_dt: s.edge_dt,
+            // the pooled payload moves into the packet — no copy; the
+            // shard checks it back in once the batch tensor is built
+            packet: ActivationPacket {
+                bits: s.header.bits,
+                scale: s.header.scale,
+                zero_point: s.header.zero_point,
+                shape: s.header.shape,
+                payload: s.payload,
+            },
+            wire_bytes: t.wire_bytes,
+            net_time: t.net_time,
+            rtt: t.rtt,
+            codec_time: t.codec_time,
+        })
+        .collect()
+}
+
+/// Process one request chain on the owned copying data plane (the seed's
+/// architecture, kept as the `--pool off` baseline): owned packets, full
+/// frame serialization, far-side payload copy.
+fn edge_chain_owned(
+    cfg: &ServeConfig,
+    prt: &PlanRt,
+    plan: usize,
+    workers: Option<&Vec<EdgeWorker>>,
+    reqs: Vec<Request>,
+    uplink: &Mutex<Uplink>,
+) -> Vec<SentPacket> {
+    let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
+    let mut staged: Vec<(mpsc::Sender<Result<Outcome>>, Instant, Duration)> =
+        Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let work = (|| -> Result<(ActivationPacket, Duration)> {
+            match (workers, cfg.mode) {
+                (Some(w), ServeMode::Split) => w[plan].infer(&req.image),
+                (_, ServeMode::CloudOnly) | (None, _) => {
+                    // raw 8-bit image upload (the Cloud-Only baseline)
+                    let mut payload = Vec::new();
+                    let h = stage_cloud_only(&req.image, prt.meta.img, &mut payload);
+                    Ok((
+                        ActivationPacket {
+                            bits: h.bits,
+                            scale: h.scale,
+                            zero_point: h.zero_point,
+                            shape: h.shape,
+                            payload,
+                        },
+                        Duration::ZERO,
+                    ))
+                }
+            }
+        })();
+        match work {
+            Ok((packet, edge_dt)) => {
+                packets.push(packet);
+                staged.push((req.resp, req.submitted, edge_dt));
+            }
+            Err(e) => {
+                let _ = req.resp.send(Err(e));
+            }
+        }
+    }
+    if packets.is_empty() {
+        return Vec::new();
+    }
+    sleep_sim_edge(cfg, prt, packets.len());
+    let link = chain_link(cfg, uplink);
+    let transfers = match link.transmit_batch(&packets) {
+        Ok(t) => t,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (resp, _, _) in staged {
+                let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            return Vec::new();
+        }
+    };
+    staged
+        .into_iter()
+        .zip(transfers)
+        .map(|((resp, submitted, edge_dt), t)| SentPacket {
+            resp,
+            submitted,
+            edge_dt,
+            packet: t.packet,
+            wire_bytes: t.wire_bytes,
+            net_time: t.net_time,
+            rtt: t.rtt,
+            codec_time: t.codec_time,
+        })
+        .collect()
+}
+
 #[allow(clippy::too_many_arguments)]
 fn edge_thread(
     cfg: ServeConfig,
@@ -647,6 +919,7 @@ fn edge_thread(
     cloud_tx: mpsc::SyncSender<CloudJob>,
     uplink: Arc<Mutex<Uplink>>,
     adaptive: Option<Arc<Mutex<AdaptiveRt>>>,
+    pool: Arc<BufPool>,
     stats: Arc<Mutex<ServingStats>>,
     ready: mpsc::Sender<Result<()>>,
 ) {
@@ -702,74 +975,22 @@ fn edge_thread(
         let plan = adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0);
         let prt = &plans[plan];
 
-        let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
-        let mut staged: Vec<(mpsc::Sender<Result<Outcome>>, Instant, Duration)> =
-            Vec::with_capacity(reqs.len());
-        for req in reqs {
-            let work = (|| -> Result<(ActivationPacket, Duration)> {
-                match (&workers, cfg.mode) {
-                    (Some(w), ServeMode::Split) => w[plan].infer(&req.image),
-                    (_, ServeMode::CloudOnly) | (None, _) => {
-                        // raw 8-bit image upload (the Cloud-Only baseline)
-                        let payload: Vec<u8> = req
-                            .image
-                            .iter()
-                            .map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8)
-                            .collect();
-                        let img = prt.meta.img as i32;
-                        Ok((
-                            ActivationPacket {
-                                bits: 8,
-                                scale: 1.0 / 255.0,
-                                zero_point: 0.0,
-                                shape: [1, 1, img, img],
-                                payload,
-                            },
-                            Duration::ZERO,
-                        ))
-                    }
-                }
-            })();
-            match work {
-                Ok((packet, edge_dt)) => {
-                    packets.push(packet);
-                    staged.push((req.resp, req.submitted, edge_dt));
-                }
-                Err(e) => {
-                    let _ = req.resp.send(Err(e));
-                }
-            }
-        }
-        if packets.is_empty() {
+        // run the chain through the configured data plane; every failed
+        // member was already answered inline
+        let sent = if pool.enabled() {
+            edge_chain_sg(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &pool)
+        } else {
+            edge_chain_owned(&cfg, prt, plan, workers.as_ref(), reqs, &uplink)
+        };
+        if sent.is_empty() {
             continue;
         }
-
-        // modeled edge compute of the active plan: slept in RealSleep
-        // mode (part of the wall clock), accounted virtually otherwise
-        if cfg.delay == DelayMode::RealSleep && prt.sim_edge > Duration::ZERO {
-            std::thread::sleep(prt.sim_edge * packets.len() as u32);
-        }
-
-        let link = {
-            let ul = *uplink.lock().unwrap();
-            Link::new(ul).with_format(cfg.wire).with_delay(cfg.delay)
-        };
-        let transfers = match link.transmit_batch(&packets) {
-            Ok(t) => t,
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for (resp, _, _) in staged {
-                    let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
-                }
-                continue;
-            }
-        };
 
         // feed the link estimator from what the transfers actually
         // measured, then give the switcher one observation window
         if let Some(a) = &adaptive {
             let mut rt = a.lock().unwrap();
-            for t in &transfers {
+            for t in &sent {
                 rt.est.observe_payload(t.wire_bytes, (t.net_time - t.rtt).as_secs_f64());
                 if t.rtt > Duration::ZERO {
                     rt.est.observe_rtt(t.rtt.as_secs_f64());
@@ -785,8 +1006,8 @@ fn edge_thread(
         }
         {
             let mut st = stats.lock().unwrap();
-            st.edge_requests[edge_id] += transfers.len() as u64;
-            st.plan_requests[plan] += transfers.len() as u64;
+            st.edge_requests[edge_id] += sent.len() as u64;
+            st.plan_requests[plan] += sent.len() as u64;
         }
 
         let arrived = Instant::now();
@@ -796,23 +1017,23 @@ fn edge_thread(
         // its transfer after the chain RTT plus every payload up to its
         // own — so the per-member virtual time is CUMULATIVE, not just the
         // member's own share
-        let sim_chain = prt.sim_edge * packets.len() as u32;
+        let sim_chain = prt.sim_edge * sent.len() as u32;
         let mut chain_net = Duration::ZERO;
-        for ((resp, submitted, edge_dt), t) in staged.into_iter().zip(transfers) {
-            chain_net += t.net_time;
+        for s in sent {
+            chain_net += s.net_time;
             let virt = if cfg.delay == DelayMode::Virtual {
                 chain_net + sim_chain
             } else {
                 Duration::ZERO
             };
             let job = CloudJob {
-                packet: t.packet,
-                resp,
-                submitted,
-                edge: edge_dt + prt.sim_edge,
-                net: t.net_time,
-                codec: t.codec_time,
-                tx_bytes: t.wire_bytes,
+                packet: s.packet,
+                resp: s.resp,
+                submitted: s.submitted,
+                edge: s.edge_dt + prt.sim_edge,
+                net: s.net_time,
+                codec: s.codec_time,
+                tx_bytes: s.wire_bytes,
                 arrived,
                 plan,
                 virt,
@@ -921,6 +1142,87 @@ enum CloudExec {
     Full(crate::runtime::Engine),
 }
 
+/// Execute one batch on the zero-copy pooled data plane: payloads are
+/// borrowed straight out of the jobs into the pooled batch scratch, and
+/// the engine writes into the shard's long-lived f32 buffers. Only the
+/// per-request response logits are allocated (the client owns those).
+fn run_batch_pooled(
+    exec: &CloudExec,
+    plans: &[PlanRt],
+    sb: &ShardBatch,
+    pool: &BufPool,
+    logits_buf: &mut Vec<f32>,
+    pix_buf: &mut Vec<f32>,
+) -> Result<(Vec<Vec<f32>>, Duration)> {
+    match exec {
+        CloudExec::Split(workers) => {
+            let w = &workers[sb.plan];
+            let payloads: Vec<&[u8]> =
+                sb.jobs.iter().map(|j| j.packet.payload.as_slice()).collect();
+            // an empty batch is unreachable (the dispatcher always seeds
+            // one job), but let infer_batch_into's ensure report it
+            // instead of panicking here
+            let sample = payloads.first().map_or(0, |p| p.len());
+            let cap = w.engine_batch_for(payloads.len()) * sample;
+            let mut scratch = pool.checkout(cap);
+            let res = w.infer_batch_into(&payloads, &mut scratch, logits_buf);
+            pool.checkin(scratch);
+            let (_, dt) = res?;
+            let classes = w.classes();
+            Ok((
+                (0..sb.jobs.len())
+                    .map(|i| logits_buf[i * classes..(i + 1) * classes].to_vec())
+                    .collect(),
+                dt,
+            ))
+        }
+        CloudExec::Full(engine) => {
+            // batch-1 full model: run sequentially, pixels dequantized
+            // into the shard's reusable buffer
+            let img = plans[0].meta.img;
+            let dims = [1i64, 1, img as i64, img as i64];
+            let mut out = Vec::with_capacity(sb.jobs.len());
+            let t0 = Instant::now();
+            for j in &sb.jobs {
+                let p = &j.packet;
+                pix_buf.clear();
+                pix_buf.extend(p.payload.iter().map(|&b| b as f32 * p.scale));
+                let lit = crate::runtime::literal_view_f32(pix_buf, &dims)?;
+                let mut lg = Vec::new();
+                engine.run_f32_into(&[lit], &mut lg)?;
+                out.push(lg);
+            }
+            Ok((out, t0.elapsed()))
+        }
+    }
+}
+
+/// Execute one batch on the owned copying data plane (the seed's
+/// architecture, the `--pool off` baseline): clone every packet into the
+/// worker, allocate fresh batch and logits buffers.
+fn run_batch_owned(
+    exec: &CloudExec,
+    plans: &[PlanRt],
+    sb: &ShardBatch,
+) -> Result<(Vec<Vec<f32>>, Duration)> {
+    let packets: Vec<ActivationPacket> = sb.jobs.iter().map(|j| j.packet.clone()).collect();
+    match exec {
+        CloudExec::Split(workers) => workers[sb.plan].infer_batch(&packets),
+        CloudExec::Full(engine) => {
+            // batch-1 full model: run sequentially
+            let img = plans[0].meta.img;
+            let mut out = Vec::with_capacity(packets.len());
+            let t0 = Instant::now();
+            for p in &packets {
+                let pix: Vec<f32> = p.payload.iter().map(|&b| b as f32 * p.scale).collect();
+                let lit = crate::runtime::literal_f32(&pix, &[1, 1, img as i64, img as i64])?;
+                out.push(engine.run_f32(&[lit])?);
+            }
+            Ok((out, t0.elapsed()))
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn shard_thread(
     cfg: ServeConfig,
@@ -929,6 +1231,7 @@ fn shard_thread(
     batch_rx: mpsc::Receiver<ShardBatch>,
     outstanding: Outstanding,
     cost: Arc<BatchCost>,
+    pool: Arc<BufPool>,
     stats: Arc<Mutex<ServingStats>>,
     ready: mpsc::Sender<Result<()>>,
 ) {
@@ -969,33 +1272,32 @@ fn shard_thread(
         }
     };
 
-    let run = |plan: usize, packets: &[ActivationPacket]| -> Result<(Vec<Vec<f32>>, Duration)> {
-        match &exec {
-            CloudExec::Split(workers) => workers[plan].infer_batch(packets),
-            CloudExec::Full(engine) => {
-                // batch-1 full model: run sequentially
-                let img = plans[0].meta.img;
-                let mut out = Vec::with_capacity(packets.len());
-                let t0 = Instant::now();
-                for p in packets {
-                    let pix: Vec<f32> = p.payload.iter().map(|&b| b as f32 * p.scale).collect();
-                    let lit = crate::runtime::literal_f32(&pix, &[1, 1, img as i64, img as i64])?;
-                    out.push(engine.run_f32(&[lit])?);
-                }
-                Ok((out, t0.elapsed()))
-            }
-        }
-    };
+    // per-shard reusable scratch for the pooled data plane: the f32
+    // buffers live as long as the shard, the u8 batch scratch cycles
+    // through the pool
+    let mut logits_buf: Vec<f32> = Vec::new();
+    let mut pix_buf: Vec<f32> = Vec::new();
 
-    while let Ok(sb) = batch_rx.recv() {
-        let packets: Vec<ActivationPacket> = sb.jobs.iter().map(|j| j.packet.clone()).collect();
+    while let Ok(mut sb) = batch_rx.recv() {
         let n = sb.jobs.len();
         // plan purity is a dispatcher invariant; count any violation so a
         // regression is visible in ServingStats instead of silent
         if sb.jobs.iter().any(|j| j.plan != sb.plan) {
             stats.lock().unwrap().mid_batch_swaps += 1;
         }
-        match run(sb.plan, &packets) {
+        let run = if pool.enabled() {
+            run_batch_pooled(&exec, &plans, &sb, &pool, &mut logits_buf, &mut pix_buf)
+        } else {
+            run_batch_owned(&exec, &plans, &sb)
+        };
+        // the batch tensor is built (or the run failed): either way the
+        // pooled payload buffers are dead — recycle them
+        if pool.enabled() {
+            for job in &mut sb.jobs {
+                pool.checkin(std::mem::take(&mut job.packet.payload));
+            }
+        }
+        match run {
             Ok((logits, cloud_dt)) => {
                 // feed the SLO predictor with the measured execution time
                 cost.observe(sb.engine_batch, cloud_dt.as_secs_f64());

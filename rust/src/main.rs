@@ -100,10 +100,10 @@ fn main() -> Result<()> {
             eprintln!("            [--shards 1] [--edge-workers 1] [--queue-cap 256]");
             eprintln!("            [--admission block|shed-newest|shed-oldest]");
             eprintln!("            [--slo-ms 0] [--route rr|least|affinity] [--link-chain 8]");
-            eprintln!("            [--adaptive --bank <dir>]");
+            eprintln!("            [--adaptive --bank <dir>] [--pool on|off]");
             eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
             eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
-            eprintln!("            [--seed 1] [--compare] [--json out.json]");
+            eprintln!("            [--seed 1] [--compare] [--json out.json] [--pool on|off]");
             eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
             eprintln!("             [--pin plan-id]]");
             eprintln!("            + all `serve` scheduler flags");
@@ -210,6 +210,17 @@ fn cmd_baselines(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     Ok(())
+}
+
+/// The `--pool on|off` flag: zero-copy pooled data plane (default) vs
+/// the legacy copying baseline (`benches/serving_datapath` measures the
+/// gap; results are bit-identical either way).
+fn pool_from_args(args: &Args) -> Result<bool> {
+    match args.get("--pool") {
+        None | Some("on") => Ok(true),
+        Some("off") => Ok(false),
+        Some(v) => bail!("bad --pool {v} (expected on|off)"),
+    }
 }
 
 /// Build the scheduler configuration from the shared serve/loadtest flags.
@@ -472,6 +483,7 @@ fn run_adaptive_loadtest(
         let mut cfg = ServeConfig::new("unused-when-adaptive");
         cfg.uplink = trace.uplink_at(Duration::ZERO);
         cfg.scheduler = sched.clone();
+        cfg.pool = pool_from_args(args)?;
         let mut a = acfg.clone();
         if let Some(id) = pin {
             a = a.with_pinned(id);
@@ -556,6 +568,7 @@ fn run_loadtest(
         let mut cfg = ServeConfig::new(dir);
         cfg.uplink = Uplink::mbps(mbps);
         cfg.scheduler = sched;
+        cfg.pool = pool_from_args(args)?;
         Server::start(cfg)
     };
 
@@ -615,6 +628,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = ServeConfig::new(dir);
     cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
     cfg.scheduler = scheduler_from_args(args)?;
+    cfg.pool = pool_from_args(args)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }

@@ -9,6 +9,6 @@ pub mod quantizer;
 
 pub use error::{DistortionTable, Metric};
 pub use lagrange::{allocate_peak_budget, allocate_sum_budget, Allocation, PeakItem, SumItem};
-pub use packing::{pack, packed_len, unpack, PackLayout};
+pub use packing::{pack, pack_into, packed_len, unpack, unpack_into, PackLayout};
 pub use per_channel::{per_tensor_distortion, PerChannelQuant};
 pub use quantizer::{fake_quant_tensor, quantize_tensor, QuantParams};

@@ -21,28 +21,40 @@ pub enum PackLayout {
 /// Pack `codes` (unsigned quantized values, each < 2^bits, laid out CHW
 /// with `plane = h*w` elements per channel) into bytes.
 ///
-/// Supported bit-widths: 1, 2, 4 (and 8 = memcpy).
+/// Supported bit-widths: 1, 2, 4 (and 8 = memcpy). Allocating wrapper
+/// around [`pack_into`].
 pub fn pack(codes: &[u8], bits: u8, plane: usize, layout: PackLayout) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_into(codes, bits, plane, layout, &mut out);
+    out
+}
+
+/// In-place [`pack`]: write the packed bytes into `out` (cleared first),
+/// reusing its capacity — the serving hot path packs into pooled scratch
+/// and never allocates at steady state. Bit-identical to [`pack`].
+pub fn pack_into(codes: &[u8], bits: u8, plane: usize, layout: PackLayout, out: &mut Vec<u8>) {
     assert!(matches!(bits, 1 | 2 | 4 | 8), "packable bit-widths: 1/2/4/8");
+    out.clear();
     if bits == 8 {
-        return codes.to_vec();
+        out.extend_from_slice(codes);
+        return;
     }
     let per_byte = (8 / bits) as usize;
-    let mut out = Vec::with_capacity(codes.len().div_ceil(per_byte));
+    out.reserve(codes.len().div_ceil(per_byte));
     match layout {
         PackLayout::Channel => {
             // Values at the same spatial index of `per_byte` consecutive
-            // channels share a byte; tail channels pad with zero.
+            // channels share a byte; tail channels pad with zero. The
+            // group members are `c + slot` — plain index arithmetic, no
+            // per-group scratch in the inner loop.
             assert!(plane > 0 && codes.len() % plane == 0);
             let channels = codes.len() / plane;
             let mut c = 0;
             while c < channels {
-                let group = (0..per_byte)
-                    .map(|j| c + j)
-                    .collect::<Vec<_>>();
                 for i in 0..plane {
                     let mut byte = 0u8;
-                    for (slot, &ch) in group.iter().enumerate() {
+                    for slot in 0..per_byte {
+                        let ch = c + slot;
                         let v = if ch < channels { codes[ch * plane + i] } else { 0 };
                         debug_assert!(v < (1 << bits));
                         byte |= v << (slot as u8 * bits);
@@ -72,11 +84,10 @@ pub fn pack(codes: &[u8], bits: u8, plane: usize, layout: PackLayout) -> Vec<u8>
             }
         }
     }
-    out
 }
 
 /// Invert [`pack`]; `elems` is the original element count, `plane` the
-/// per-channel spatial size.
+/// per-channel spatial size. Allocating wrapper around [`unpack_into`].
 pub fn unpack(
     packed: &[u8],
     bits: u8,
@@ -84,13 +95,31 @@ pub fn unpack(
     plane: usize,
     layout: PackLayout,
 ) -> Vec<u8> {
+    let mut out = Vec::new();
+    unpack_into(packed, bits, elems, plane, layout, &mut out);
+    out
+}
+
+/// In-place [`unpack`]: write the unpacked codes into `out` (cleared and
+/// zero-filled to `elems` first), reusing its capacity. Bit-identical to
+/// [`unpack`].
+pub fn unpack_into(
+    packed: &[u8],
+    bits: u8,
+    elems: usize,
+    plane: usize,
+    layout: PackLayout,
+    out: &mut Vec<u8>,
+) {
     assert!(matches!(bits, 1 | 2 | 4 | 8));
+    out.clear();
     if bits == 8 {
-        return packed[..elems].to_vec();
+        out.extend_from_slice(&packed[..elems]);
+        return;
     }
     let per_byte = (8 / bits) as usize;
     let mask = ((1u32 << bits) - 1) as u8;
-    let mut out = vec![0u8; elems];
+    out.resize(elems, 0);
     match layout {
         PackLayout::Channel => {
             assert!(plane > 0 && elems % plane == 0);
@@ -131,7 +160,6 @@ pub fn unpack(
             }
         }
     }
-    out
 }
 
 /// Packed byte count for `elems` values at `bits` in `layout` (includes
@@ -221,6 +249,22 @@ mod tests {
         let xs = codes(100, 8);
         let p = pack(&xs, 8, 10, PackLayout::Channel);
         assert_eq!(p, xs);
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_scratch_bit_identically() {
+        let plane = 9;
+        for bits in [1u8, 2, 4, 8] {
+            let xs = codes(5 * plane, bits);
+            let mut pbuf = vec![0xAAu8; 3]; // dirty, undersized scratch
+            let mut ubuf = vec![0x55u8; 500]; // dirty, oversized scratch
+            for layout in [PackLayout::Channel, PackLayout::HeightWidth] {
+                pack_into(&xs, bits, plane, layout, &mut pbuf);
+                assert_eq!(pbuf, pack(&xs, bits, plane, layout), "bits={bits} {layout:?}");
+                unpack_into(&pbuf, bits, xs.len(), plane, layout, &mut ubuf);
+                assert_eq!(ubuf, xs, "bits={bits} {layout:?}");
+            }
+        }
     }
 
     #[test]

@@ -96,17 +96,37 @@ pub enum Literal {
 }
 
 impl Literal {
-    fn f32_data(&self) -> Result<&[f32]> {
+    /// Borrow this literal as a zero-copy [`LiteralView`].
+    pub fn view(&self) -> LiteralView<'_> {
         match self {
-            Literal::F32 { data, .. } => Ok(data),
-            Literal::U8 { .. } => bail!("expected f32 literal, got u8"),
+            Literal::F32 { data, dims } => LiteralView::F32 { data, dims },
+            Literal::U8 { data, dims } => LiteralView::U8 { data, dims },
+        }
+    }
+}
+
+/// Borrowed host tensor: the engine reads the caller's buffer directly
+/// instead of copying it into an owned [`Literal`] first (PJRT's
+/// zero-copy host-buffer semantics). Build with [`literal_view_f32`] /
+/// [`literal_view_u8`], or borrow an owned literal via [`Literal::view`].
+#[derive(Debug, Clone, Copy)]
+pub enum LiteralView<'a> {
+    F32 { data: &'a [f32], dims: &'a [i64] },
+    U8 { data: &'a [u8], dims: &'a [i64] },
+}
+
+impl<'a> LiteralView<'a> {
+    fn f32_data(&self) -> Result<&'a [f32]> {
+        match self {
+            LiteralView::F32 { data, .. } => Ok(data),
+            LiteralView::U8 { .. } => bail!("expected f32 literal, got u8"),
         }
     }
 
-    fn u8_data(&self) -> Result<&[u8]> {
+    fn u8_data(&self) -> Result<&'a [u8]> {
         match self {
-            Literal::U8 { data, .. } => Ok(data),
-            Literal::F32 { .. } => bail!("expected u8 literal, got f32"),
+            LiteralView::U8 { data, .. } => Ok(data),
+            LiteralView::F32 { .. } => bail!("expected u8 literal, got f32"),
         }
     }
 }
@@ -118,9 +138,22 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Execute and read back an f32 tensor.
+    /// Execute and read back an f32 tensor. Allocating wrapper around
+    /// [`Engine::run_f32_into`].
     pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        let views: Vec<LiteralView<'_>> = inputs.iter().map(Literal::view).collect();
+        let mut out = Vec::new();
+        self.run_f32_into(&views, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute over borrowed inputs and write the f32 result into `out`
+    /// (cleared first) — the zero-copy serving path: pooled batch scratch
+    /// in, reusable logits buffer out. Bit-identical to [`Engine::run_f32`]
+    /// (same float summation order).
+    pub fn run_f32_into(&self, inputs: &[LiteralView<'_>], out: &mut Vec<f32>) -> Result<()> {
         anyhow::ensure!(inputs.len() == 1, "{}: expected 1 input", self.name);
+        out.clear();
         match &self.program {
             Program::CloudLogits { batch, c2, hw, bits, scale, classes, weights } => {
                 let data = inputs[0].u8_data()?;
@@ -134,11 +167,13 @@ impl Engine {
                 let per = (8 / bits) as usize;
                 let feat = sample * per;
                 let mask = ((1u16 << bits) - 1) as u8;
-                let mut out = Vec::with_capacity(batch * classes);
+                out.reserve(batch * classes);
+                // one unpack scratch for the whole batch, not per sample
+                let mut x: Vec<f32> = Vec::with_capacity(feat);
                 for b in 0..*batch {
                     let bytes = &data[b * sample..(b + 1) * sample];
                     // unpack + dequantize
-                    let mut x = Vec::with_capacity(feat);
+                    x.clear();
                     for &byte in bytes {
                         for slot in 0..per {
                             let code = (byte >> (slot as u8 * bits)) & mask;
@@ -154,7 +189,7 @@ impl Engine {
                         out.push(acc);
                     }
                 }
-                Ok(out)
+                Ok(())
             }
             Program::FullLogits { img, classes, weights } => {
                 let x = inputs[0].f32_data()?;
@@ -165,7 +200,7 @@ impl Engine {
                     self.name,
                     x.len()
                 );
-                let mut out = Vec::with_capacity(*classes);
+                out.reserve(*classes);
                 for c in 0..*classes {
                     let row = &weights[c * feat..(c + 1) * feat];
                     let mut acc = 0.0f32;
@@ -174,7 +209,7 @@ impl Engine {
                     }
                     out.push(acc);
                 }
-                Ok(out)
+                Ok(())
             }
             Program::EdgePack { .. } => {
                 bail!("{}: edge_pack produces u8, call run_u8", self.name)
@@ -182,9 +217,21 @@ impl Engine {
         }
     }
 
-    /// Execute and read back a u8 tensor.
+    /// Execute and read back a u8 tensor. Allocating wrapper around
+    /// [`Engine::run_u8_into`].
     pub fn run_u8(&self, inputs: &[Literal]) -> Result<Vec<u8>> {
+        let views: Vec<LiteralView<'_>> = inputs.iter().map(Literal::view).collect();
+        let mut out = Vec::new();
+        self.run_u8_into(&views, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute over borrowed inputs and write the u8 result into `out`
+    /// (cleared first) — the edge partition packs straight into a pooled
+    /// payload buffer. Bit-identical to [`Engine::run_u8`].
+    pub fn run_u8_into(&self, inputs: &[LiteralView<'_>], out: &mut Vec<u8>) -> Result<()> {
         anyhow::ensure!(inputs.len() == 1, "{}: expected 1 input", self.name);
+        out.clear();
         match &self.program {
             Program::EdgePack { img, bits, c2, hw, scale } => {
                 let x = inputs[0].f32_data()?;
@@ -205,7 +252,7 @@ impl Engine {
                 );
                 let qmax = ((1u16 << bits) - 1) as f32;
                 let code = |v: f32| -> u8 { (v / scale).round().clamp(0.0, qmax) as u8 };
-                let mut out = Vec::with_capacity(c2 * hw);
+                out.reserve(c2 * hw);
                 for j in 0..c2 * hw {
                     let mut byte = 0u8;
                     for slot in 0..per {
@@ -213,25 +260,39 @@ impl Engine {
                     }
                     out.push(byte);
                 }
-                Ok(out)
+                Ok(())
             }
             _ => bail!("{}: program produces f32, call run_f32", self.name),
         }
     }
 }
 
-/// Build an f32 literal of the given shape.
+/// Build an f32 literal of the given shape (copies `data`).
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
     Ok(Literal::F32 { data: data.to_vec(), dims: dims.to_vec() })
 }
 
-/// Build a u8 literal of the given shape.
+/// Build a u8 literal of the given shape (copies `data`).
 pub fn literal_u8(data: &[u8], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
     Ok(Literal::U8 { data: data.to_vec(), dims: dims.to_vec() })
+}
+
+/// Borrow an f32 buffer as a zero-copy literal view.
+pub fn literal_view_f32<'a>(data: &'a [f32], dims: &'a [i64]) -> Result<LiteralView<'a>> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(LiteralView::F32 { data, dims })
+}
+
+/// Borrow a u8 buffer as a zero-copy literal view.
+pub fn literal_view_u8<'a>(data: &'a [u8], dims: &'a [i64]) -> Result<LiteralView<'a>> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(LiteralView::U8 { data, dims })
 }
 
 /// Deterministic linear-head weights: small, zero-mean, seed-stable.
@@ -400,5 +461,38 @@ mod tests {
     fn literal_shape_checked() {
         assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(literal_u8(&[1, 2, 3], &[1, 3]).is_ok());
+        assert!(literal_view_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_view_u8(&[1, 2, 3], &[1, 3]).is_ok());
+    }
+
+    #[test]
+    fn into_variants_match_owned_runs_bitwise() {
+        let edge = write_tmp(
+            "edge_into.hlo.txt",
+            "REFHLO v1\nprogram: edge_pack\nimg: 4\nbits: 4\nc2: 2\nhw: 4\nscale: 0.1\n",
+        );
+        let cloud = write_tmp(
+            "cloud_into.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 2\nc2: 2\nhw: 4\nbits: 4\n\
+             scale: 0.1\nclasses: 3\nseed: 7\n",
+        );
+        let rt = Runtime::cpu().unwrap();
+        let e = rt.load_hlo_text(&edge).unwrap();
+        let c = rt.load_hlo_text(&cloud).unwrap();
+        let img: Vec<f32> = (0..16).map(|i| i as f32 * 0.07).collect();
+
+        let owned = e.run_u8(&[literal_f32(&img, &[1, 1, 4, 4]).unwrap()]).unwrap();
+        let dims = [1i64, 1, 4, 4];
+        let mut packed = vec![0xAAu8; 3]; // dirty scratch
+        e.run_u8_into(&[literal_view_f32(&img, &dims).unwrap()], &mut packed).unwrap();
+        assert_eq!(packed, owned);
+
+        let mut batch = packed.clone();
+        batch.extend_from_slice(&packed);
+        let owned = c.run_f32(&[literal_u8(&batch, &[2, 2, 4]).unwrap()]).unwrap();
+        let bdims = [2i64, 2, 4];
+        let mut logits = vec![9.0f32; 2]; // dirty scratch
+        c.run_f32_into(&[literal_view_u8(&batch, &bdims).unwrap()], &mut logits).unwrap();
+        assert_eq!(logits, owned, "same float summation order, bit-identical");
     }
 }

@@ -13,4 +13,7 @@
 
 pub mod engine;
 
-pub use engine::{literal_f32, literal_u8, Engine, Literal, Runtime};
+pub use engine::{
+    literal_f32, literal_u8, literal_view_f32, literal_view_u8, Engine, Literal, LiteralView,
+    Runtime,
+};

@@ -2,10 +2,13 @@
 //! proptest crate; a seeded SplitMix64 generator drives many random cases
 //! per property — deterministic, so failures are reproducible).
 
+use auto_split::coordinator::{ActivationPacket, ActivationView};
 use auto_split::graph::liveness::{chain_estimate_bytes, working_set_bytes};
 use auto_split::graph::{min_cut_split, optimize_for_inference, Graph, LayerKind, Shape};
 use auto_split::profile::SplitMix64;
-use auto_split::quant::{allocate_sum_budget, pack, packed_len, unpack, PackLayout, SumItem};
+use auto_split::quant::{
+    allocate_sum_budget, pack, pack_into, packed_len, unpack, unpack_into, PackLayout, SumItem,
+};
 
 /// Random DAG: a chain with random skip edges and random ops.
 fn random_graph(rng: &mut SplitMix64, max_nodes: usize) -> Graph {
@@ -339,6 +342,75 @@ fn prop_pack_roundtrip_random() {
             let p = pack(&codes, bits, plane, layout);
             let u = unpack(&p, bits, codes.len(), plane, layout);
             assert_eq!(u, codes, "bits={bits} plane={plane} ch={channels} {layout:?}");
+        }
+    }
+}
+
+/// The in-place `pack_into`/`unpack_into` are bit-identical to the
+/// allocating `pack`/`unpack` over random bit-widths, plane sizes, and
+/// channel counts in both layouts — including when the scratch buffers
+/// arrive dirty and wrongly sized (the pooled-reuse contract).
+#[test]
+fn prop_pack_into_bit_identical_to_pack() {
+    let mut rng = SplitMix64::new(0xDA7A);
+    let mut pbuf: Vec<u8> = Vec::new();
+    let mut ubuf: Vec<u8> = Vec::new();
+    for case in 0..80 {
+        let bits = [1u8, 2, 4, 8][rng.next_u64() as usize % 4];
+        let plane = 1 + (rng.next_u64() as usize % 50);
+        let channels = 1 + (rng.next_u64() as usize % 9);
+        let mask = ((1u32 << bits) - 1) as u8;
+        let codes: Vec<u8> =
+            (0..plane * channels).map(|_| (rng.next_u64() as u8) & mask).collect();
+        for layout in [PackLayout::Channel, PackLayout::HeightWidth] {
+            // poison the scratch so stale contents would be caught
+            pbuf.resize(1 + (rng.next_u64() as usize % 70), 0xAA);
+            ubuf.resize(1 + (rng.next_u64() as usize % 70), 0x55);
+            let p = pack(&codes, bits, plane, layout);
+            pack_into(&codes, bits, plane, layout, &mut pbuf);
+            assert_eq!(pbuf, p, "case {case}: bits={bits} plane={plane} {layout:?}");
+            let u = unpack(&p, bits, codes.len(), plane, layout);
+            unpack_into(&p, bits, codes.len(), plane, layout, &mut ubuf);
+            assert_eq!(ubuf, u, "case {case}: bits={bits} plane={plane} {layout:?}");
+            assert_eq!(ubuf, codes, "case {case}: roundtrip");
+        }
+    }
+}
+
+/// `ActivationView::parse` (zero-copy) agrees with the owned
+/// `ActivationPacket::from_binary` on random frames, scatter-gather parse
+/// agrees with contiguous parse, and every truncation is rejected.
+#[test]
+fn prop_view_parse_matches_owned_parse_random_frames() {
+    let mut rng = SplitMix64::new(0xF4A3);
+    for case in 0..60 {
+        let len = rng.next_u64() as usize % 600;
+        let pkt = ActivationPacket {
+            bits: [1u8, 2, 4, 8][rng.next_u64() as usize % 4],
+            scale: (rng.next_f32() + 1e-3) * 0.5,
+            zero_point: rng.next_f32() - 0.5,
+            shape: [
+                1,
+                (rng.next_u64() % 64) as i32,
+                (rng.next_u64() % 64) as i32,
+                (rng.next_u64() % 64) as i32,
+            ],
+            payload: (0..len).map(|_| rng.next_u64() as u8).collect(),
+        };
+        let buf = pkt.to_binary();
+        let owned = ActivationPacket::from_binary(&buf).unwrap();
+        let view = ActivationView::parse(&buf).unwrap();
+        assert_eq!(view.to_owned(), owned, "case {case}");
+        assert_eq!(owned, pkt, "case {case}");
+        // scatter-gather parse over separate segments agrees
+        let header = pkt.header().encode(pkt.payload.len());
+        let sg = ActivationView::parse_sg(&header, &pkt.payload).unwrap();
+        assert_eq!(sg.to_owned(), pkt, "case {case} (sg)");
+        // any truncated frame is rejected by both parsers
+        for _ in 0..4 {
+            let cut = rng.next_u64() as usize % buf.len();
+            assert!(ActivationView::parse(&buf[..cut]).is_err(), "case {case} cut {cut}");
+            assert!(ActivationPacket::from_binary(&buf[..cut]).is_err(), "case {case}");
         }
     }
 }

@@ -168,6 +168,61 @@ fn loopback_ascii_wire_inflates_but_still_decodes() {
 }
 
 #[test]
+fn pool_hits_100_percent_after_warmup_and_tx_bytes_unchanged() {
+    let dir = write_artifacts("pool");
+    let server = Server::start(ServeConfig::new(&dir)).unwrap(); // pool on by default
+    // warmup: the first requests fault buffers into the pool shelves
+    for i in 0..8 {
+        let res = server.infer(image(50 + i)).unwrap();
+        assert_eq!(res.tx_bytes, TX_HEADER_BYTES + C2 * HW);
+    }
+    let warm = server.stats();
+    assert!(warm.pool_hits + warm.pool_misses > 0, "pooled plane must use the pool");
+
+    let n = 16u64;
+    for i in 0..n {
+        let res = server.infer(image(100 + i)).unwrap();
+        // wire bytes bit-identical to the seed data plane
+        assert_eq!(res.tx_bytes, TX_HEADER_BYTES + C2 * HW);
+    }
+    let steady = server.stats();
+    // 100% hit rate over the steady window: no new misses after warmup
+    assert_eq!(steady.pool_misses, warm.pool_misses, "steady state: no new misses");
+    assert!(steady.pool_hits > warm.pool_hits, "steady-state traffic goes through the pool");
+    assert!(steady.pool_bytes_reused > warm.pool_bytes_reused);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.tx_bytes_total, (8 + n) * (TX_HEADER_BYTES + C2 * HW) as u64);
+    cleanup(&dir);
+}
+
+#[test]
+fn pooled_and_legacy_data_planes_are_bit_identical() {
+    let dir = write_artifacts("planes");
+    let img = image(7);
+
+    let on = Server::start(ServeConfig::new(&dir)).unwrap();
+    let r_on = on.infer(img.clone()).unwrap();
+    let s_on = on.shutdown();
+
+    let off = Server::start(ServeConfig::new(&dir).with_pool(false)).unwrap();
+    let r_off = off.infer(img).unwrap();
+    let s_off = off.shutdown();
+
+    // same logits (bit-for-bit), same class, same wire accounting: the
+    // zero-copy plane changes where bytes live, never what they are
+    assert_eq!(r_on.logits, r_off.logits);
+    assert_eq!(r_on.class, r_off.class);
+    assert_eq!(r_on.tx_bytes, r_off.tx_bytes);
+    assert_eq!(s_on.tx_bytes_total, s_off.tx_bytes_total);
+    // the legacy plane bypasses the pool entirely: zero traffic
+    assert_eq!(s_off.pool_hits, 0);
+    assert_eq!(s_off.pool_misses, 0, "legacy plane must never touch the pool");
+    assert!(s_on.pool_hits + s_on.pool_misses > 0, "pooled plane must use the pool");
+    cleanup(&dir);
+}
+
+#[test]
 fn loopback_rejects_malformed_without_poisoning() {
     let dir = write_artifacts("malformed");
     let server = Server::start(ServeConfig::new(&dir)).unwrap();
