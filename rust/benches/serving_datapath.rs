@@ -106,7 +106,7 @@ fn drive(server: &Server, images: &[Vec<f32>], n: usize) -> (Vec<f64>, u64, u64,
         done += burst;
     }
     let (a1, b1) = snapshot();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(f64::total_cmp);
     (lat, tx, a1 - a0, b1 - b0)
 }
 

@@ -1,0 +1,137 @@
+//! Transport overhead of the TCP front-end: the identical open-loop
+//! schedule replayed against the same serving pipeline through (a) the
+//! in-process admission queue and (b) real loopback sockets speaking the
+//! binary frame protocol (`coordinator::net`). The paper's Table 4 made
+//! the socket-vs-RPC case; this bench quantifies what the socket layer
+//! itself costs on top of the in-process pipeline, and asserts the two
+//! transports agree on per-request wire bytes and exactly-once
+//! accounting (the CI gate re-checks both via `loadtest --json`).
+//!
+//! Runs entirely on synthetic REFHLO artifacts — no `make artifacts`.
+
+use auto_split::coordinator::{
+    poisson_schedule, replay, write_reference_artifacts, Client, LoadReport, NetConfig,
+    RefArtifactSpec, ServeConfig, Server, TcpClient, TcpFrontend,
+};
+use auto_split::report::Table;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn inputs() -> (PathBuf, Vec<Vec<f32>>) {
+    let spec = RefArtifactSpec::default();
+    let name = format!("autosplit-serving-tcp-{}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    write_reference_artifacts(&dir, &spec).expect("write synthetic artifacts");
+    let images = (0..32).map(|i| spec.image(9000 + i as u64)).collect();
+    (dir, images)
+}
+
+/// Client-observed round-trip p50: wall clock around submit→recv for `k`
+/// sequential requests. The pipeline's internal `e2e` is measured after
+/// the frame is submitted and relayed verbatim over TCP, so it is
+/// transport-blind by design — the socket layer's own cost (framing,
+/// kernel transit both ways, response decode) only shows up here.
+fn client_rtt_p50<C: Client>(client: &C, images: &[Vec<f32>], k: usize) -> f64 {
+    let mut samples: Vec<f64> = (0..k)
+        .map(|i| {
+            let t0 = Instant::now();
+            let rx = client.submit(images[i % images.len()].clone()).expect("submit");
+            let _ = rx.recv().expect("terminal outcome");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[(k / 2).min(k - 1)]
+}
+
+fn main() {
+    let requests: usize = std::env::args()
+        .skip_while(|a| a != "--requests")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let rate = 400.0;
+    let (dir, images) = inputs();
+    let schedule = poisson_schedule(rate, requests, images.len(), 13);
+    println!("transport bench: {rate:.0} rps × {requests} over one loopback pipeline\n");
+
+    let mut rows: Vec<(&str, LoadReport)> = Vec::new();
+    let rtt_samples = 50usize;
+
+    // ---- in-process transport --------------------------------------
+    let rtt_inproc;
+    {
+        let server = Server::start(ServeConfig::new(&dir)).expect("server");
+        let _ = server.infer(images[0].clone()); // warm-up
+        let report = replay(&server, &images, &schedule).expect("inproc replay");
+        rtt_inproc = client_rtt_p50(&server, &images, rtt_samples);
+        server.shutdown();
+        rows.push(("inproc", report));
+    }
+
+    // ---- tcp loopback transport ------------------------------------
+    let net_stats;
+    let rtt_tcp;
+    {
+        let server = Arc::new(Server::start(ServeConfig::new(&dir)).expect("server"));
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), NetConfig::default())
+            .expect("bind front-end");
+        let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+        let _ = client.submit(images[0].clone()).expect("warm-up").recv();
+        let report = replay(&client, &images, &schedule).expect("tcp replay");
+        rtt_tcp = client_rtt_p50(&client, &images, rtt_samples);
+        drop(client);
+        net_stats = frontend.shutdown();
+        rows.push(("tcp", report));
+    }
+
+    let mut t = Table::new(
+        "In-process vs TCP loopback (identical schedule + pipeline)",
+        &["transport", "achieved rps", "p50 ms", "p99 ms", "completed", "errors", "tx B/req"],
+    );
+    for (name, r) in &rows {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", r.achieved_rps),
+            format!("{:.2}", r.quantile(0.5) * 1e3),
+            format!("{:.2}", r.quantile(0.99) * 1e3),
+            r.completed.to_string(),
+            r.errors.to_string(),
+            format!("{:.1}", r.tx_bytes_per_completed()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let inproc = &rows[0].1;
+    let tcp = &rows[1].1;
+    let wire_ok = tcp.tx_bytes_per_completed() == inproc.tx_bytes_per_completed();
+    let accounted = tcp.fully_accounted() && inproc.fully_accounted();
+    // the table's e2e columns are the pipeline's internal clock (shared
+    // across transports by design); the socket layer's own cost is the
+    // client-observed round-trip gap below
+    println!(
+        "client-observed RTT p50 ({rtt_samples} sequential): inproc {:.3} ms, tcp {:.3} ms, \
+         socket-layer overhead {:+.3} ms",
+        rtt_inproc * 1e3,
+        rtt_tcp * 1e3,
+        (rtt_tcp - rtt_inproc) * 1e3,
+    );
+    println!(
+        "acceptance: wire bytes/request {} ({}), accounting {}",
+        tcp.tx_bytes_per_completed(),
+        if wire_ok { "identical" } else { "MISMATCH" },
+        if accounted { "exactly-once" } else { "LOSSY" },
+    );
+    println!(
+        "front-end: {} conns, {} served, {} rejects, {} read errors",
+        net_stats.tcp_accepted,
+        net_stats.requests,
+        net_stats.tcp_frame_rejects,
+        net_stats.tcp_read_errors,
+    );
+    assert!(wire_ok, "transports must bill identical wire bytes per request");
+    assert!(accounted, "both transports must account every request");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

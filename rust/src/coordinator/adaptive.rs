@@ -91,6 +91,30 @@ impl Default for Hysteresis {
     }
 }
 
+impl Hysteresis {
+    /// Does this config disable flap damping entirely? `windows: 0`
+    /// fires a switch on the first margin-clearing window, and a
+    /// negative (or NaN) `margin` turns every raw bin crossing into a
+    /// clearing one — either way an estimate wobbling on a boundary
+    /// flaps the serving plan every window. (A negative margin can even
+    /// make the down-boundary divide by zero at `margin == -1`.)
+    pub fn is_degenerate(&self) -> bool {
+        self.windows == 0 || !(self.margin >= 0.0)
+    }
+
+    /// Replace degenerate fields with the safe defaults, leaving valid
+    /// fields untouched. [`PlanSwitcher::new`] applies this, so a
+    /// degenerate config can never reach the switching loop; the CLI
+    /// rejects such configs outright instead of clamping (`main.rs`).
+    pub fn sanitized(self) -> Hysteresis {
+        let d = Hysteresis::default();
+        Hysteresis {
+            margin: if self.margin >= 0.0 { self.margin } else { d.margin },
+            windows: if self.windows == 0 { d.windows } else { self.windows },
+        }
+    }
+}
+
 /// One bandwidth bin the switcher can land in.
 #[derive(Debug, Clone)]
 pub struct SwitchBin {
@@ -117,9 +141,12 @@ pub struct PlanSwitcher {
 
 impl PlanSwitcher {
     /// Build from a bank tier's `(mbps, plan)` pairs; `initial_bps` seeds
-    /// the active bin.
+    /// the active bin. A degenerate `hys` (zero windows, negative or NaN
+    /// margin) is clamped onto the defaults — see
+    /// [`Hysteresis::sanitized`].
     pub fn new(mut bins: Vec<SwitchBin>, hys: Hysteresis, initial_bps: f64) -> Self {
         assert!(!bins.is_empty(), "switcher needs at least one bin");
+        let hys = hys.sanitized();
         bins.sort_by(|a, b| a.mbps.partial_cmp(&b.mbps).unwrap());
         let mut sw = PlanSwitcher { bins, hys, active: 0, pending: None };
         sw.active = sw.bin_for(initial_bps);
@@ -443,6 +470,50 @@ mod tests {
             assert_eq!(sw.tick(est), None, "window {i} must not switch");
         }
         assert_eq!(sw.plan(), 0, "plan never moved");
+    }
+
+    #[test]
+    fn degenerate_hysteresis_is_detected_and_sanitized() {
+        assert!(Hysteresis { margin: 0.25, windows: 0 }.is_degenerate());
+        assert!(Hysteresis { margin: -0.5, windows: 3 }.is_degenerate());
+        assert!(Hysteresis { margin: f64::NAN, windows: 3 }.is_degenerate());
+        assert!(!Hysteresis::default().is_degenerate());
+        // fully degenerate config → the defaults
+        assert_eq!(Hysteresis { margin: -1.0, windows: 0 }.sanitized(), Hysteresis::default());
+        // a valid field survives sanitizing next to a degenerate one
+        let s = Hysteresis { margin: 0.4, windows: 0 }.sanitized();
+        assert_eq!(s, Hysteresis { margin: 0.4, windows: Hysteresis::default().windows });
+        let s = Hysteresis { margin: -0.1, windows: 7 }.sanitized();
+        assert_eq!(s, Hysteresis { margin: Hysteresis::default().margin, windows: 7 });
+    }
+
+    #[test]
+    fn zero_window_hysteresis_no_longer_flaps() {
+        // `windows: 0` used to satisfy `count >= windows` on the FIRST
+        // margin-clearing window, and a negative margin made every raw
+        // bin crossing clear — together they disabled flap damping
+        // entirely. Sanitized at construction, the default damping holds
+        // against a boundary-oscillating estimate.
+        let hys = Hysteresis { margin: -1.0, windows: 0 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        let boundary = (0.27f64 * 3.0).sqrt() * 1e6;
+        for i in 0..200 {
+            let est = if i % 2 == 0 { boundary * 1.1 } else { boundary * 0.9 };
+            assert_eq!(sw.tick(est), None, "window {i} must not switch");
+        }
+        assert_eq!(sw.plan(), 0, "plan never moved");
+    }
+
+    #[test]
+    fn sanitized_zero_windows_still_requires_consecutive_clearing_windows() {
+        // windows: 0 with a valid margin clamps to the default window
+        // count — a genuine sustained move still switches, but only
+        // after the default K consecutive clearing windows
+        let hys = Hysteresis { margin: 0.25, windows: 0 };
+        let mut sw = PlanSwitcher::new(bins3(), hys, 0.27e6);
+        assert_eq!(sw.tick(54e6), None);
+        assert_eq!(sw.tick(54e6), None);
+        assert_eq!(sw.tick(54e6), Some(2), "third sustained window switches");
     }
 
     #[test]

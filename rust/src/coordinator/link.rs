@@ -102,7 +102,7 @@ impl Link {
         let t0 = std::time::Instant::now();
         let (wire_bytes, decoded) = match self.format {
             WireFormat::Binary => {
-                let buf = packet.to_binary();
+                let buf = packet.to_binary()?;
                 let n = buf.len();
                 (n, ActivationPacket::from_binary(&buf)?)
             }
@@ -305,7 +305,7 @@ mod tests {
     #[test]
     fn sg_transfer_accounts_exactly_like_owned_transfer() {
         let p = pkt(512);
-        let header = p.header().encode(p.payload.len());
+        let header = p.header().encode(p.payload.len()).unwrap();
         let link = Link::new(Uplink::paper_default());
         let owned = link.transmit(&p).unwrap();
         let sg = link.transmit_sg(Segments { header: &header, payload: &p.payload }).unwrap();
@@ -318,7 +318,8 @@ mod tests {
     fn sg_batch_pays_rtt_once_with_owned_batch_byte_accounting() {
         let link = Link::new(Uplink::cellular_3g());
         let packets: Vec<ActivationPacket> = [64usize, 512, 128].iter().map(|&n| pkt(n)).collect();
-        let headers: Vec<_> = packets.iter().map(|p| p.header().encode(p.payload.len())).collect();
+        let headers: Vec<_> =
+            packets.iter().map(|p| p.header().encode(p.payload.len()).unwrap()).collect();
         let segs: Vec<Segments<'_>> = packets
             .iter()
             .zip(&headers)
@@ -338,7 +339,7 @@ mod tests {
     #[test]
     fn sg_ascii_baseline_still_inflates() {
         let p = pkt(1024);
-        let header = p.header().encode(p.payload.len());
+        let header = p.header().encode(p.payload.len()).unwrap();
         let seg = Segments { header: &header, payload: &p.payload };
         let bin = Link::new(Uplink::paper_default()).transmit_sg(seg).unwrap();
         let rpc = Link::new(Uplink::paper_default()).with_format(WireFormat::AsciiRpc);
@@ -351,7 +352,7 @@ mod tests {
     #[test]
     fn sg_rejects_corrupt_header() {
         let p = pkt(64);
-        let mut header = p.header().encode(p.payload.len());
+        let mut header = p.header().encode(p.payload.len()).unwrap();
         header[0] ^= 0xff; // bad magic
         let link = Link::new(Uplink::paper_default());
         let seg = Segments { header: &header, payload: &p.payload };

@@ -16,7 +16,7 @@
 //! admission control `completed + shed + errors == offered` always holds.
 
 use super::adaptive::BwTrace;
-use super::server::{Outcome, Server};
+use super::server::{Client, Outcome};
 use crate::profile::SplitMix64;
 use crate::report::Table;
 use anyhow::Result;
@@ -60,19 +60,37 @@ pub struct LoadReport {
     /// Requests load-shed by the admission policy.
     pub shed: usize,
     pub errors: usize,
+    /// Edge→cloud wire bytes summed over completed requests — the
+    /// transport-parity invariant (`loadtest --transport tcp|inproc`
+    /// must agree per request).
+    pub tx_bytes: u64,
     /// End-to-end latency samples (seconds) of completed requests.
     pub latencies: Vec<f64>,
 }
 
 impl LoadReport {
+    /// Latency quantile over the completed samples. Well-defined for
+    /// every input: an empty run reports `0.0`, a single-sample run
+    /// reports that sample for every `q`, and NaN samples sort above
+    /// every real latency (`f64::total_cmp`) instead of panicking the
+    /// comparator mid-sort.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.latencies.is_empty() {
             return 0.0;
         }
         let mut xs = self.latencies.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let idx = ((q * xs.len() as f64).ceil() as usize).clamp(1, xs.len()) - 1;
         xs[idx]
+    }
+
+    /// Mean edge→cloud wire bytes per completed request.
+    pub fn tx_bytes_per_completed(&self) -> f64 {
+        if self.completed > 0 {
+            self.tx_bytes as f64 / self.completed as f64
+        } else {
+            0.0
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -98,10 +116,11 @@ impl LoadReport {
     }
 }
 
-/// Tally one terminal response into (latencies, shed, errors).
+/// Tally one terminal response into (latencies, tx bytes, shed, errors).
 fn tally(
     recv: Result<Result<Outcome>, mpsc::RecvError>,
     latencies: &mut Vec<f64>,
+    tx_bytes: &mut u64,
     shed: &mut usize,
     errors: &mut usize,
 ) {
@@ -112,16 +131,22 @@ fn tally(
             // NOT rx-wait time, which would include the remainder of
             // the submission schedule for early requests
             latencies.push(res.e2e.as_secs_f64());
+            *tx_bytes += res.tx_bytes as u64;
         }
         Ok(Ok(Outcome::Shed(_))) => *shed += 1,
         _ => *errors += 1,
     }
 }
 
-/// Replay a schedule against a running server (open loop: requests are
-/// issued at their scheduled time regardless of completions).
-pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Result<LoadReport> {
-    replay_inner(server, images, schedule, None)
+/// Replay a schedule against a serving client (open loop: requests are
+/// issued at their scheduled time regardless of completions). Generic
+/// over the transport: the in-process `Server` or a `TcpClient`.
+pub fn replay<C: Client + ?Sized>(
+    client: &C,
+    images: &[Vec<f32>],
+    schedule: &[Arrival],
+) -> Result<LoadReport> {
+    replay_inner(client, images, schedule, None)
 }
 
 /// Replay a schedule while walking a bandwidth trace: before each arrival
@@ -130,17 +155,17 @@ pub fn replay(server: &Server, images: &[Vec<f32>], schedule: &[Arrival]) -> Res
 /// trace) pair see the identical link history — the fair substrate for
 /// static-vs-adaptive comparisons. The trace mutates only the link; the
 /// adaptive estimator still learns purely from observed transfers.
-pub fn replay_traced(
-    server: &Server,
+pub fn replay_traced<C: Client + ?Sized>(
+    client: &C,
     images: &[Vec<f32>],
     schedule: &[Arrival],
     trace: &BwTrace,
 ) -> Result<LoadReport> {
-    replay_inner(server, images, schedule, Some(trace))
+    replay_inner(client, images, schedule, Some(trace))
 }
 
-fn replay_inner(
-    server: &Server,
+fn replay_inner<C: Client + ?Sized>(
+    client: &C,
     images: &[Vec<f32>],
     schedule: &[Arrival],
     trace: Option<&BwTrace>,
@@ -150,24 +175,25 @@ fn replay_inner(
     let mut shed = 0usize;
     let mut errors = 0usize;
     if let Some(t) = trace {
-        server.set_uplink(t.uplink_at(Duration::ZERO));
+        client.set_uplink(t.uplink_at(Duration::ZERO));
     }
     for a in schedule {
         if let Some(t) = trace {
-            server.set_uplink(t.uplink_at(a.at));
+            client.set_uplink(t.uplink_at(a.at));
         }
         let target = start + a.at;
         if let Some(wait) = target.checked_duration_since(Instant::now()) {
             std::thread::sleep(wait);
         }
-        match server.submit(images[a.image % images.len()].clone()) {
+        match client.submit(images[a.image % images.len()].clone()) {
             Ok(rx) => pending.push(rx),
             Err(_) => errors += 1,
         }
     }
     let mut latencies = Vec::with_capacity(pending.len());
+    let mut tx_bytes = 0u64;
     for rx in pending {
-        tally(rx.recv(), &mut latencies, &mut shed, &mut errors);
+        tally(rx.recv(), &mut latencies, &mut tx_bytes, &mut shed, &mut errors);
     }
     let wall = start.elapsed().as_secs_f64();
     let n = schedule.len();
@@ -178,6 +204,7 @@ fn replay_inner(
         completed: latencies.len(),
         shed,
         errors,
+        tx_bytes,
         latencies,
     })
 }
@@ -186,8 +213,8 @@ fn replay_inner(
 /// requests (waiting for every response before the next submission).
 /// Image picks are deterministic: client `c`, request `i` uses image
 /// `(c * per_client + i) % images.len()`.
-pub fn closed_loop(
-    server: &Server,
+pub fn closed_loop<C: Client + ?Sized>(
+    client: &C,
     images: &[Vec<f32>],
     clients: usize,
     per_client: usize,
@@ -195,6 +222,7 @@ pub fn closed_loop(
     anyhow::ensure!(!images.is_empty(), "empty image pool");
     let start = Instant::now();
     let mut lat_all = Vec::new();
+    let mut tx_bytes = 0u64;
     let mut shed = 0usize;
     let mut errors = 0usize;
     std::thread::scope(|scope| {
@@ -202,21 +230,23 @@ pub fn closed_loop(
         for c in 0..clients {
             joins.push(scope.spawn(move || {
                 let mut latencies = Vec::with_capacity(per_client);
+                let mut tx = 0u64;
                 let mut shed = 0usize;
                 let mut errors = 0usize;
                 for i in 0..per_client {
                     let img = images[(c * per_client + i) % images.len()].clone();
-                    match server.submit(img) {
-                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut shed, &mut errors),
+                    match client.submit(img) {
+                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut tx, &mut shed, &mut errors),
                         Err(_) => errors += 1,
                     }
                 }
-                (latencies, shed, errors)
+                (latencies, tx, shed, errors)
             }));
         }
         for j in joins {
-            let (l, s, e) = j.join().expect("closed-loop client panicked");
+            let (l, t, s, e) = j.join().expect("closed-loop client panicked");
             lat_all.extend(l);
+            tx_bytes += t;
             shed += s;
             errors += e;
         }
@@ -230,6 +260,7 @@ pub fn closed_loop(
         completed: lat_all.len(),
         shed,
         errors,
+        tx_bytes,
         latencies: lat_all,
     })
 }
@@ -285,10 +316,14 @@ impl MixedReport {
 
 /// Run a mixed workload: the closed-loop background runs on worker
 /// threads while the open-loop schedule replays on the calling thread.
-pub fn run_mixed(server: &Server, images: &[Vec<f32>], wl: &MixedWorkload) -> Result<MixedReport> {
+pub fn run_mixed<C: Client + ?Sized>(
+    client: &C,
+    images: &[Vec<f32>],
+    wl: &MixedWorkload,
+) -> Result<MixedReport> {
     anyhow::ensure!(!images.is_empty(), "empty image pool");
     let start = Instant::now();
-    let mut closed_parts: Vec<(Vec<f64>, usize, usize)> = Vec::new();
+    let mut closed_parts: Vec<(Vec<f64>, u64, usize, usize)> = Vec::new();
     let mut open_report: Option<Result<LoadReport>> = None;
     std::thread::scope(|scope| {
         let mut joins = Vec::with_capacity(wl.closed_clients);
@@ -296,29 +331,32 @@ pub fn run_mixed(server: &Server, images: &[Vec<f32>], wl: &MixedWorkload) -> Re
             let picks = &wl.closed_images;
             joins.push(scope.spawn(move || {
                 let mut latencies = Vec::with_capacity(wl.closed_per_client);
+                let mut tx = 0u64;
                 let mut shed = 0usize;
                 let mut errors = 0usize;
                 for i in 0..wl.closed_per_client {
                     let pick = picks[c * wl.closed_per_client + i] % images.len();
-                    match server.submit(images[pick].clone()) {
-                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut shed, &mut errors),
+                    match client.submit(images[pick].clone()) {
+                        Ok(rx) => tally(rx.recv(), &mut latencies, &mut tx, &mut shed, &mut errors),
                         Err(_) => errors += 1,
                     }
                 }
-                (latencies, shed, errors)
+                (latencies, tx, shed, errors)
             }));
         }
-        open_report = Some(replay(server, images, &wl.open));
+        open_report = Some(replay(client, images, &wl.open));
         for j in joins {
             closed_parts.push(j.join().expect("mixed closed client panicked"));
         }
     });
     let wall = start.elapsed().as_secs_f64().max(1e-9);
     let mut lat_all = Vec::new();
+    let mut tx_bytes = 0u64;
     let mut shed = 0usize;
     let mut errors = 0usize;
-    for (l, s, e) in closed_parts {
+    for (l, t, s, e) in closed_parts {
         lat_all.extend(l);
+        tx_bytes += t;
         shed += s;
         errors += e;
     }
@@ -330,6 +368,7 @@ pub fn run_mixed(server: &Server, images: &[Vec<f32>], wl: &MixedWorkload) -> Re
         completed: lat_all.len(),
         shed,
         errors,
+        tx_bytes,
         latencies: lat_all,
     };
     Ok(MixedReport { open: open_report.expect("open replay ran")?, closed })
@@ -422,6 +461,7 @@ mod tests {
             completed: 4,
             shed: 0,
             errors: 0,
+            tx_bytes: 0,
             latencies: vec![0.004, 0.001, 0.003, 0.002],
         };
         assert_eq!(r.quantile(0.5), 0.002);
@@ -429,6 +469,64 @@ mod tests {
         assert!((r.mean() - 0.0025).abs() < 1e-12);
         assert!(r.fully_accounted());
         assert_eq!(r.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn quantile_survives_nan_samples() {
+        // a NaN latency (e.g. a corrupt duration off a real network
+        // transport) used to panic `partial_cmp().unwrap()` mid-sort;
+        // with total_cmp it sorts above every real sample instead
+        let r = LoadReport {
+            offered_rps: 1.0,
+            achieved_rps: 1.0,
+            requests: 3,
+            completed: 3,
+            shed: 0,
+            errors: 0,
+            tx_bytes: 0,
+            latencies: vec![f64::NAN, 0.001, 0.002],
+        };
+        assert_eq!(r.quantile(0.5), 0.002, "NaN must not displace real samples");
+        assert_eq!(r.quantile(0.0), 0.001);
+        assert!(r.quantile(1.0).is_nan(), "the NaN sample itself sorts last");
+    }
+
+    #[test]
+    fn quantile_well_defined_for_empty_and_single_sample_runs() {
+        let empty = LoadReport {
+            offered_rps: 0.0,
+            achieved_rps: 0.0,
+            requests: 0,
+            completed: 0,
+            shed: 0,
+            errors: 0,
+            tx_bytes: 0,
+            latencies: vec![],
+        };
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(empty.quantile(q), 0.0);
+        }
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.tx_bytes_per_completed(), 0.0);
+        let single = LoadReport { requests: 1, completed: 1, latencies: vec![0.007], ..empty };
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(single.quantile(q), 0.007, "q={q}");
+        }
+    }
+
+    #[test]
+    fn tx_bytes_per_completed_averages() {
+        let r = LoadReport {
+            offered_rps: 1.0,
+            achieved_rps: 1.0,
+            requests: 4,
+            completed: 4,
+            shed: 0,
+            errors: 0,
+            tx_bytes: 4 * 161,
+            latencies: vec![0.001; 4],
+        };
+        assert!((r.tx_bytes_per_completed() - 161.0).abs() < 1e-12);
     }
 
     #[test]
@@ -440,6 +538,7 @@ mod tests {
             completed: 6,
             shed: 3,
             errors: 0,
+            tx_bytes: 0,
             latencies: vec![0.001; 6],
         };
         assert!(!r.fully_accounted(), "6 + 3 != 10");
@@ -474,6 +573,7 @@ mod tests {
             completed: 50,
             shed: 0,
             errors: 0,
+            tx_bytes: 0,
             latencies: vec![0.01; 50],
         };
         let s = adaptive_table(
@@ -493,6 +593,7 @@ mod tests {
             completed: 90,
             shed: 10,
             errors: 0,
+            tx_bytes: 0,
             latencies: vec![0.002; 90],
         };
         let s = policy_table("sweep", &[("block".into(), r.clone()), ("shed".into(), r)]);

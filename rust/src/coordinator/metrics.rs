@@ -114,6 +114,18 @@ pub struct ServingStats {
     pub pool_misses: u64,
     /// Capacity bytes the pool handed out without allocating.
     pub pool_bytes_reused: u64,
+    /// TCP front-end: connections accepted over the run (0 when serving
+    /// in-process only — the front-end fills these at snapshot).
+    pub tcp_accepted: u64,
+    /// TCP front-end: connections open at snapshot time.
+    pub tcp_active: u64,
+    /// TCP front-end: sockets that died mid-frame (EOF inside a frame or
+    /// a hard I/O error). The partial frame is never submitted and its
+    /// pooled buffer is recycled.
+    pub tcp_read_errors: u64,
+    /// TCP front-end: frames refused with a typed error response (bad
+    /// magic, oversized, structurally invalid).
+    pub tcp_frame_rejects: u64,
 }
 
 impl ServingStats {
@@ -201,6 +213,7 @@ impl ServingStats {
              adaptive est={:.2}Mbps rtt={:.1}ms active=p{} switches={} \
              mid_batch_swaps={}  plans: [{}]\n\
              pool   hits={} misses={} hit_rate={:.1}% reused={} bytes\n\
+             tcp    accepted={} active={} read_errors={} frame_rejects={}\n\
              tx_total={} bytes",
             self.requests,
             self.shed,
@@ -231,6 +244,10 @@ impl ServingStats {
             self.pool_misses,
             100.0 * self.pool_hit_rate(),
             self.pool_bytes_reused,
+            self.tcp_accepted,
+            self.tcp_active,
+            self.tcp_read_errors,
+            self.tcp_frame_rejects,
             self.tx_bytes_total,
         )
     }
@@ -329,6 +346,19 @@ mod tests {
         assert!((s.pool_hit_rate() - 0.75).abs() < 1e-12);
         let r = s.report();
         assert!(r.contains("hit_rate=75.0%"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_tcp_counters() {
+        let mut s = ServingStats::default();
+        s.tcp_accepted = 4;
+        s.tcp_active = 1;
+        s.tcp_read_errors = 2;
+        s.tcp_frame_rejects = 3;
+        let r = s.report();
+        assert!(r.contains("accepted=4"), "{r}");
+        assert!(r.contains("read_errors=2"), "{r}");
+        assert!(r.contains("frame_rejects=3"), "{r}");
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //! re-splitting layer (link estimation + hysteretic plan switching over a
 //! `splitter::planbank` bank) lives in [`adaptive`]; the zero-copy data
 //! plane (size-classed buffer pool + in-place packing + scatter-gather
-//! framing) lives in [`bufpool`], [`protocol`], and [`link`].
+//! framing) lives in [`bufpool`], [`protocol`], and [`link`]; the TCP
+//! front-end bridging real client sockets into the admission queue
+//! (binary frames in, exactly-once responses out) lives in [`net`].
 
 pub mod adaptive;
 pub mod bufpool;
@@ -30,6 +32,7 @@ pub mod edge;
 pub mod link;
 pub mod loadgen;
 pub mod metrics;
+pub mod net;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
@@ -47,13 +50,14 @@ pub use loadgen::{
     replay_traced, run_mixed, Arrival, LoadReport, MixedReport, MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
-pub use protocol::{ActivationPacket, ActivationView, PacketHeader, TX_HEADER_BYTES};
+pub use net::{NetConfig, NetError, NetStats, TcpClient, TcpFrontend};
+pub use protocol::{ActivationPacket, ActivationView, FrameError, PacketHeader, TX_HEADER_BYTES};
 pub use scheduler::{
     AdmissionPolicy, AdmissionQueue, BatchCost, CostPrior, RoutePolicy, SchedulerConfig,
 };
 pub use server::{
-    ArtifactMeta, InferenceResult, Outcome, ResponseReceiver, ServeConfig, ServeMode, Server,
-    ShedInfo,
+    ArtifactMeta, Client, InferenceResult, Outcome, ResponseReceiver, ServeConfig, ServeMode,
+    Server, ShedInfo,
 };
 pub use testkit::{
     load_eval_images, reference_image, write_adaptive_bank, write_reference_artifacts,

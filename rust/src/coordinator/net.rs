@@ -1,0 +1,979 @@
+//! TCP serving front-end: the binary frame protocol over real sockets.
+//!
+//! The paper's production argument (Table 4) is that edge→cloud traffic
+//! rides plain sockets with binary framing — an in-memory link is not a
+//! credible serving boundary. This module is that edge of the system:
+//!
+//! * [`TcpFrontend`] — a listener whose per-connection reader threads
+//!   assemble length-delimited request frames (handling short/partial
+//!   reads, rejecting garbage preambles and oversized or truncated
+//!   frames with a **typed error response**), decode them into images,
+//!   and feed the existing [`Server`] admission queue exactly like
+//!   in-process clients. A per-connection writer thread streams the
+//!   terminal [`Outcome`] of every admitted request back as a binary
+//!   response frame, in submission order, so the pipeline's exactly-once
+//!   answered-or-shed contract survives client disconnects: an admitted
+//!   request is always answered by the server (the write is simply
+//!   dropped if the client is gone), and a frame that never finished
+//!   arriving is never submitted (its pooled buffer goes back on the
+//!   shelf).
+//! * [`TcpClient`] — the matching client: pipelined submissions over one
+//!   connection, a reader thread that resolves responses FIFO onto the
+//!   same [`ResponseReceiver`] channels the in-process [`Server`] hands
+//!   out. Because both implement [`Client`], `loadgen` replays identical
+//!   schedules over either transport (`loadtest --transport tcp|inproc`).
+//!
+//! ## Wire format
+//!
+//! Requests reuse the activation frame layout ([`PacketHeader`], 33 B)
+//! with `bits = 32`: the payload is the raw little-endian f32 image.
+//! Responses are `RESP_MAGIC (u32) | status (u8) | body_len (u32) | body`
+//! with status ∈ {done, shed, error}; the done body carries the class,
+//! shard, plan, batch size, wire bytes, the per-stage timings, and the
+//! logits, so a remote client reconstructs the same [`InferenceResult`]
+//! an in-process client gets. Request payload buffers are checked out of
+//! the server's [`BufPool`] — the stable, reusable frame buffers PR 4 put
+//! in place — and recycled whether the frame completes, is rejected, or
+//! dies mid-read.
+
+use super::bufpool::BufPool;
+use super::protocol::{PacketHeader, MAGIC, TX_HEADER_BYTES};
+use super::scheduler::AdmissionPolicy;
+use super::server::{Client, InferenceResult, Outcome, ResponseReceiver, Server, ShedInfo};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Response-frame magic ("ASPR" — the request frames keep "ASPT").
+pub const RESP_MAGIC: u32 = 0x4153_5052;
+
+/// Fixed response-frame prefix: magic (u32) + status (u8) + body length
+/// (u32).
+pub const RESP_HEADER_BYTES: usize = 4 + 1 + 4;
+
+/// Request frames announce a 32-bit-float payload.
+pub const REQ_BITS: u8 = 32;
+
+const ST_DONE: u8 = 0;
+const ST_SHED: u8 = 1;
+const ST_ERROR: u8 = 2;
+
+/// Front-end tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Largest request payload a connection will accept; a frame
+    /// announcing more is rejected with [`NetError::Oversized`] before
+    /// any buffer is sized for it.
+    pub max_payload: usize,
+    /// Read-timeout granularity: how often a blocked reader rechecks the
+    /// shutdown flag.
+    pub io_tick: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_payload: 16 << 20, io_tick: Duration::from_millis(50) }
+    }
+}
+
+/// Typed reasons a connection rejects a frame (or relays a failure).
+/// These travel the wire as the error-response code byte, so clients can
+/// tell a protocol bug from server-side load problems.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// The frame does not start with the protocol magic — a garbage
+    /// preamble (e.g. an HTTP request hitting the frame port). The
+    /// stream cannot be resynchronized, so the connection closes.
+    BadMagic(u32),
+    /// The header announces a payload larger than the front-end accepts.
+    Oversized { len: usize, max: usize },
+    /// Structurally invalid request (undecodable header, wrong bit
+    /// width, payload not a whole number of f32s).
+    BadFrame(String),
+    /// The serving pipeline failed the request (relayed `Err` outcome).
+    Server(String),
+}
+
+impl NetError {
+    fn code(&self) -> u8 {
+        match self {
+            NetError::BadMagic(_) => 0,
+            NetError::Oversized { .. } => 1,
+            NetError::BadFrame(_) => 2,
+            NetError::Server(_) => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            NetError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} B payload (front-end max {max} B)")
+            }
+            NetError::BadFrame(msg) => write!(f, "bad request frame: {msg}"),
+            NetError::Server(msg) => write!(f, "server error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Per-front-end connection counters (folded into [`ServingStats`] by
+/// [`TcpFrontend::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted over the front-end's life.
+    pub accepted: u64,
+    /// Connections currently open.
+    pub active: u64,
+    /// Sockets that died mid-frame (EOF inside a frame, hard I/O error).
+    pub read_errors: u64,
+    /// Frames refused with a typed error response.
+    pub frame_rejects: u64,
+    /// Request frames accepted into the admission queue.
+    pub requests: u64,
+    /// Terminal outcomes of admitted requests successfully written back
+    /// to the client (any status, including relayed pipeline errors;
+    /// frame rejects and writes to a vanished client do not count).
+    pub responses: u64,
+}
+
+#[derive(Default)]
+struct NetCounters {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    read_errors: AtomicU64,
+    frame_rejects: AtomicU64,
+    requests: AtomicU64,
+    responses: AtomicU64,
+}
+
+impl NetCounters {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            read_errors: self.read_errors.load(Ordering::Relaxed),
+            frame_rejects: self.frame_rejects.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame codecs (shared by the front-end, the client, and the tests)
+// ---------------------------------------------------------------------
+
+/// Encode one request frame: a [`PacketHeader`] with `bits = 32`
+/// followed by the image as little-endian f32 bytes.
+pub fn encode_request(image: &[f32]) -> Result<Vec<u8>> {
+    let payload_len = image.len() * 4;
+    let header = PacketHeader {
+        bits: REQ_BITS,
+        scale: 1.0,
+        zero_point: 0.0,
+        shape: [1, 1, image.len() as i32, 1],
+    }
+    .encode(payload_len)?;
+    let mut out = Vec::with_capacity(TX_HEADER_BYTES + payload_len);
+    out.extend_from_slice(&header);
+    for v in image {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Validate a received request-frame header and return the payload byte
+/// count it announces. Every reject reason is a typed [`NetError`].
+pub fn decode_request_header(
+    hdr: &[u8; TX_HEADER_BYTES],
+    max_payload: usize,
+) -> Result<usize, NetError> {
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("4-byte slice"));
+    if magic != MAGIC {
+        return Err(NetError::BadMagic(magic));
+    }
+    let (h, len) = PacketHeader::decode(hdr).map_err(|e| NetError::BadFrame(format!("{e:#}")))?;
+    if h.bits != REQ_BITS {
+        return Err(NetError::BadFrame(format!(
+            "request bits {} (want {REQ_BITS}-bit float images)",
+            h.bits
+        )));
+    }
+    if len > max_payload {
+        return Err(NetError::Oversized { len, max: max_payload });
+    }
+    if len % 4 != 0 {
+        return Err(NetError::BadFrame(format!("payload {len} B is not a whole f32 count")));
+    }
+    Ok(len)
+}
+
+/// Decode a request payload into the image the pipeline consumes.
+pub fn decode_image(payload: &[u8]) -> Vec<f32> {
+    payload
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk")))
+        .collect()
+}
+
+fn policy_code(p: AdmissionPolicy) -> u8 {
+    match p {
+        AdmissionPolicy::Block => 0,
+        AdmissionPolicy::ShedNewest => 1,
+        AdmissionPolicy::ShedOldest => 2,
+    }
+}
+
+fn policy_from_code(c: u8) -> AdmissionPolicy {
+    match c {
+        1 => AdmissionPolicy::ShedNewest,
+        2 => AdmissionPolicy::ShedOldest,
+        _ => AdmissionPolicy::Block,
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_dur(out: &mut Vec<u8>, d: Duration) {
+    put_u64(out, d.as_nanos() as u64);
+}
+
+/// Serialize one terminal outcome into `out` (cleared first) as a full
+/// response frame. Reuses the buffer's capacity — at steady state the
+/// writer thread allocates nothing.
+pub fn write_response(out: &mut Vec<u8>, outcome: &Result<Outcome>) {
+    out.clear();
+    put_u32(out, RESP_MAGIC);
+    match outcome {
+        Ok(Outcome::Done(r)) => {
+            out.push(ST_DONE);
+            put_u32(out, 0); // body length, patched below
+            put_u32(out, r.class as u32);
+            put_u32(out, r.shard as u32);
+            put_u32(out, r.plan as u32);
+            put_u32(out, r.batch_size as u32);
+            put_u64(out, r.tx_bytes as u64);
+            put_dur(out, r.e2e);
+            put_dur(out, r.edge);
+            put_dur(out, r.net);
+            put_dur(out, r.codec);
+            put_dur(out, r.cloud);
+            put_dur(out, r.queue);
+            put_u32(out, r.logits.len() as u32);
+            for v in &r.logits {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(Outcome::Shed(s)) => {
+            out.push(ST_SHED);
+            put_u32(out, 0);
+            out.push(policy_code(s.policy));
+            put_u64(out, s.queue_depth as u64);
+            put_dur(out, s.waited);
+        }
+        Err(e) => {
+            write_error_body(out, &NetError::Server(format!("{e:#}")));
+            return;
+        }
+    }
+    patch_body_len(out);
+}
+
+/// Serialize a typed frame-reject response into `out` (cleared first).
+pub fn write_reject(out: &mut Vec<u8>, err: &NetError) {
+    out.clear();
+    put_u32(out, RESP_MAGIC);
+    write_error_body(out, err);
+}
+
+/// Append status + body for an error response (magic already written),
+/// then patch the body length.
+fn write_error_body(out: &mut Vec<u8>, err: &NetError) {
+    out.push(ST_ERROR);
+    put_u32(out, 0);
+    out.push(err.code());
+    out.extend_from_slice(err.to_string().as_bytes());
+    patch_body_len(out);
+}
+
+fn patch_body_len(out: &mut Vec<u8>) {
+    let body = (out.len() - RESP_HEADER_BYTES) as u32;
+    out[5..9].copy_from_slice(&body.to_le_bytes());
+}
+
+/// Parse a response-frame prefix into `(status, body_len)`.
+pub fn decode_response_header(hdr: &[u8; RESP_HEADER_BYTES]) -> Result<(u8, usize)> {
+    let magic = u32::from_le_bytes(hdr[0..4].try_into()?);
+    anyhow::ensure!(magic == RESP_MAGIC, "bad response magic {magic:#010x}");
+    let status = hdr[4];
+    let len = u32::from_le_bytes(hdr[5..9].try_into()?) as usize;
+    Ok((status, len))
+}
+
+/// Little-endian field cursor over a response body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.off + n <= self.buf.len(), "truncated response body");
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn dur(&mut self) -> Result<Duration> {
+        Ok(Duration::from_nanos(self.u64()?))
+    }
+}
+
+/// Parse a response body back into the terminal outcome the server sent.
+/// A `status = error` frame decodes to `Err`, exactly like the pipeline
+/// `Err` an in-process client receives.
+pub fn decode_response(status: u8, body: &[u8]) -> Result<Outcome> {
+    let mut c = Cursor { buf: body, off: 0 };
+    match status {
+        ST_DONE => {
+            let class = c.u32()? as usize;
+            let shard = c.u32()? as usize;
+            let plan = c.u32()? as usize;
+            let batch_size = c.u32()? as usize;
+            let tx_bytes = c.u64()? as usize;
+            let e2e = c.dur()?;
+            let edge = c.dur()?;
+            let net = c.dur()?;
+            let codec = c.dur()?;
+            let cloud = c.dur()?;
+            let queue = c.dur()?;
+            let n = c.u32()? as usize;
+            let mut logits = Vec::with_capacity(n);
+            for _ in 0..n {
+                logits.push(f32::from_le_bytes(c.take(4)?.try_into()?));
+            }
+            Ok(Outcome::Done(InferenceResult {
+                logits,
+                class,
+                edge,
+                net,
+                codec,
+                cloud,
+                queue,
+                e2e,
+                tx_bytes,
+                batch_size,
+                shard,
+                plan,
+            }))
+        }
+        ST_SHED => {
+            let policy = policy_from_code(c.u8()?);
+            let queue_depth = c.u64()? as usize;
+            let waited = c.dur()?;
+            Ok(Outcome::Shed(ShedInfo { policy, queue_depth, waited }))
+        }
+        ST_ERROR => {
+            let _code = c.u8()?;
+            let msg = String::from_utf8_lossy(c.take(body.len().saturating_sub(1))?).into_owned();
+            bail!("{msg}")
+        }
+        other => bail!("unknown response status {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// stop-aware socket reads
+// ---------------------------------------------------------------------
+
+enum ReadFull {
+    /// The buffer was filled.
+    Full,
+    /// EOF before the first byte — a clean close between frames.
+    CleanEof,
+    /// EOF inside the buffer — the peer died mid-frame.
+    TruncatedEof,
+    /// The front-end is shutting down.
+    Stopped,
+    /// Hard socket error.
+    Io(std::io::Error),
+}
+
+/// A read error that means "try again", not "the socket is gone": the
+/// front-end's timeout tick, or a signal interruption.
+fn is_retry(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
+}
+
+/// Fill `buf` from a stream whose read timeout is the front-end's
+/// `io_tick`, re-arming on every timeout until data arrives or `stop`
+/// flips. This is what makes partial reads at arbitrary byte boundaries
+/// a non-event: the loop keeps appending from wherever the last `read`
+/// left off.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> ReadFull {
+    let mut off = 0usize;
+    while off < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return ReadFull::Stopped;
+        }
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return if off == 0 { ReadFull::CleanEof } else { ReadFull::TruncatedEof },
+            Ok(n) => off += n,
+            Err(e) if is_retry(&e) => continue,
+            Err(e) => return ReadFull::Io(e),
+        }
+    }
+    ReadFull::Full
+}
+
+// ---------------------------------------------------------------------
+// TcpFrontend
+// ---------------------------------------------------------------------
+
+/// One in-order unit of work for a connection's writer thread.
+enum ConnEvent {
+    /// An admitted request: await its terminal outcome, then frame it.
+    Pending(ResponseReceiver),
+    /// A typed frame reject: frame it and let the connection close.
+    Reject(NetError),
+}
+
+/// The TCP front-end: accepts client sockets and bridges their frames
+/// into the [`Server`] admission queue (see module docs).
+pub struct TcpFrontend {
+    server: Arc<Server>,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    counters: Arc<NetCounters>,
+}
+
+impl TcpFrontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start serving the pipeline over it.
+    pub fn bind(addr: &str, server: Arc<Server>, cfg: NetConfig) -> Result<TcpFrontend> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind front-end to {addr}"))?;
+        TcpFrontend::start(listener, server, cfg)
+    }
+
+    /// Serve the pipeline over an already-bound listener.
+    pub fn start(
+        listener: TcpListener,
+        server: Arc<Server>,
+        cfg: NetConfig,
+    ) -> Result<TcpFrontend> {
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(NetCounters::default());
+        let accept = {
+            let server = server.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name("tcp-accept".into())
+                .spawn(move || accept_loop(listener, server, cfg, stop, conns, counters))?
+        };
+        Ok(TcpFrontend { server, local, stop, accept: Some(accept), conns, counters })
+    }
+
+    /// The bound address (port resolved when binding to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Connection-level counters only.
+    pub fn net_stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    /// Full serving stats with the front-end counters folded in.
+    pub fn stats(&self) -> super::metrics::ServingStats {
+        let mut s = self.server.stats();
+        let n = self.net_stats();
+        s.tcp_accepted = n.accepted;
+        s.tcp_active = n.active;
+        s.tcp_read_errors = n.read_errors;
+        s.tcp_frame_rejects = n.frame_rejects;
+        s
+    }
+
+    /// Stop accepting, drain the connections (every admitted request is
+    /// still answered by the running server), and return the final
+    /// stats. The server itself stays up — the caller owns its `Arc`.
+    pub fn shutdown(mut self) -> super::metrics::ServingStats {
+        self.halt();
+        self.stats()
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    counters: Arc<NetCounters>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // reap finished connections so a long-running front-end
+                // does not accumulate dead JoinHandles forever
+                conns.lock().unwrap().retain(|h| !h.is_finished());
+                counters.accepted.fetch_add(1, Ordering::Relaxed);
+                counters.active.fetch_add(1, Ordering::Relaxed);
+                let server = server.clone();
+                let stop = stop.clone();
+                let counters2 = counters.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("tcp-conn".into())
+                    .spawn(move || conn_thread(server, stream, cfg, stop, counters2));
+                match spawned {
+                    Ok(h) => conns.lock().unwrap().push(h),
+                    Err(_) => {
+                        // could not spawn: the stream drops (connection
+                        // refused at the thread level, not the socket)
+                        counters.active.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn conn_thread(
+    server: Arc<Server>,
+    mut stream: TcpStream,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.io_tick));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let pool = server.buf_pool();
+    if let Ok(wstream) = stream.try_clone() {
+        let (ev_tx, ev_rx) = mpsc::channel::<ConnEvent>();
+        let writer = {
+            let pool = pool.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name("tcp-conn-writer".into())
+                .spawn(move || writer_loop(wstream, ev_rx, pool, counters))
+        };
+        read_loop(&server, &mut stream, &cfg, &stop, &counters, &pool, &ev_tx);
+        drop(ev_tx); // writer drains the in-flight responses and exits
+        if let Ok(w) = writer {
+            let _ = w.join();
+        }
+    } else {
+        counters.read_errors.fetch_add(1, Ordering::Relaxed);
+    }
+    counters.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Assemble request frames off one socket until it closes, a frame is
+/// rejected, or the front-end stops. Every accepted frame becomes one
+/// admission-queue submission; every reject is handed to the writer so
+/// the typed error response goes out before the connection closes.
+fn read_loop(
+    server: &Server,
+    stream: &mut TcpStream,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    counters: &NetCounters,
+    pool: &BufPool,
+    ev_tx: &mpsc::Sender<ConnEvent>,
+) {
+    let mut hdr = [0u8; TX_HEADER_BYTES];
+    loop {
+        match read_full(stream, &mut hdr, stop) {
+            ReadFull::Full => {}
+            ReadFull::CleanEof | ReadFull::Stopped => return,
+            ReadFull::TruncatedEof | ReadFull::Io(_) => {
+                counters.read_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let len = match decode_request_header(&hdr, cfg.max_payload) {
+            Ok(len) => len,
+            Err(e) => {
+                counters.frame_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = ev_tx.send(ConnEvent::Reject(e));
+                return;
+            }
+        };
+        // the payload lands in a pooled buffer; whatever happens next
+        // (success, reject, disconnect) it goes back on the shelf
+        let mut payload = pool.checkout(len);
+        payload.resize(len, 0);
+        match read_full(stream, &mut payload, stop) {
+            ReadFull::Full => {}
+            ReadFull::Stopped => {
+                pool.checkin(payload);
+                return;
+            }
+            ReadFull::CleanEof | ReadFull::TruncatedEof | ReadFull::Io(_) => {
+                // disconnect mid-frame: nothing was submitted, so there
+                // is nothing to answer — recycle the buffer and close
+                pool.checkin(payload);
+                counters.read_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let image = decode_image(&payload);
+        pool.checkin(payload);
+        match server.submit(image) {
+            Ok(rx) => {
+                counters.requests.fetch_add(1, Ordering::Relaxed);
+                if ev_tx.send(ConnEvent::Pending(rx)).is_err() {
+                    return; // writer died (client gone)
+                }
+            }
+            Err(e) => {
+                // the admission queue is closed (server stopping)
+                let _ = ev_tx.send(ConnEvent::Reject(NetError::Server(format!("{e:#}"))));
+                return;
+            }
+        }
+    }
+}
+
+/// Stream response frames back in submission order. If the client is
+/// gone the writes stop, but the server has already answered (or will
+/// answer) every admitted request exactly once — sending into a dropped
+/// channel is a no-op, so nothing leaks and nothing double-counts.
+fn writer_loop(
+    mut stream: TcpStream,
+    ev_rx: mpsc::Receiver<ConnEvent>,
+    pool: Arc<BufPool>,
+    counters: Arc<NetCounters>,
+) {
+    let mut buf = pool.checkout(1024);
+    while let Ok(ev) = ev_rx.recv() {
+        let answered = match ev {
+            ConnEvent::Pending(resp) => {
+                let outcome = match resp.recv() {
+                    Ok(o) => o,
+                    Err(_) => Err(anyhow::anyhow!("pipeline dropped request")),
+                };
+                write_response(&mut buf, &outcome);
+                true
+            }
+            ConnEvent::Reject(e) => {
+                write_reject(&mut buf, &e);
+                false
+            }
+        };
+        if stream.write_all(&buf).is_err() {
+            break;
+        }
+        if answered {
+            counters.responses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    pool.checkin(buf);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+// ---------------------------------------------------------------------
+// TcpClient
+// ---------------------------------------------------------------------
+
+/// A pipelined client for the front-end's frame protocol. Submissions
+/// write one request frame each and enqueue a response slot; a reader
+/// thread resolves the slots FIFO as response frames arrive (the
+/// front-end answers in submission order per connection). Implements
+/// [`Client`], so `loadgen` drives it exactly like the in-process
+/// server.
+pub struct TcpClient {
+    writer: Mutex<TcpStream>,
+    stream: TcpStream,
+    pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpClient {
+    /// Connect to a running [`TcpFrontend`].
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).context("connect to serving front-end")?;
+        let _ = stream.set_nodelay(true);
+        let pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>> =
+            Arc::new(Mutex::new(VecDeque::new()));
+        let reader = {
+            let rstream = stream.try_clone().context("clone client stream")?;
+            let pending = pending.clone();
+            std::thread::Builder::new()
+                .name("tcp-client-reader".into())
+                .spawn(move || client_reader(rstream, pending))?
+        };
+        let writer = Mutex::new(stream.try_clone().context("clone client stream")?);
+        Ok(TcpClient { writer, stream, pending, reader: Some(reader) })
+    }
+
+    /// Submit one image; the receiver yields the request's terminal
+    /// outcome, decoded from the response frame.
+    pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
+        let frame = encode_request(&image)?;
+        let (tx, rx) = mpsc::channel();
+        // hold the write lock across enqueue + write so the pending
+        // order always matches the on-wire frame order
+        let mut w = self.writer.lock().unwrap();
+        self.pending.lock().unwrap().push_back(tx);
+        if let Err(e) = w.write_all(&frame) {
+            // the frame never left: roll the slot back (the write lock
+            // guarantees no later submission enqueued behind it)
+            self.pending.lock().unwrap().pop_back();
+            return Err(anyhow::anyhow!("front-end connection lost: {e}"));
+        }
+        Ok(rx)
+    }
+}
+
+impl Client for TcpClient {
+    fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
+        TcpClient::submit(self, image)
+    }
+}
+
+impl Drop for TcpClient {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn client_reader(
+    mut stream: TcpStream,
+    pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>>,
+) {
+    loop {
+        let mut hdr = [0u8; RESP_HEADER_BYTES];
+        if stream.read_exact(&mut hdr).is_err() {
+            break;
+        }
+        let (status, body_len) = match decode_response_header(&hdr) {
+            Ok(x) => x,
+            Err(_) => break,
+        };
+        if body_len > 64 << 20 {
+            break; // protocol violation: implausible body
+        }
+        let mut body = vec![0u8; body_len];
+        if stream.read_exact(&mut body).is_err() {
+            break;
+        }
+        let outcome = decode_response(status, &body);
+        match pending.lock().unwrap().pop_front() {
+            Some(tx) => {
+                let _ = tx.send(outcome);
+            }
+            None => break, // response with no matching request
+        }
+    }
+    // connection over: every unresolved submission gets a terminal error
+    for tx in pending.lock().unwrap().drain(..) {
+        let _ = tx.send(Err(anyhow::anyhow!("front-end connection closed")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done_result() -> InferenceResult {
+        InferenceResult {
+            logits: vec![0.25, -1.5, 3.75],
+            class: 2,
+            edge: Duration::from_micros(120),
+            net: Duration::from_micros(900),
+            codec: Duration::from_micros(30),
+            cloud: Duration::from_micros(440),
+            queue: Duration::from_micros(75),
+            e2e: Duration::from_micros(1600),
+            tx_bytes: 161,
+            batch_size: 4,
+            shard: 1,
+            plan: 3,
+        }
+    }
+
+    #[test]
+    fn request_frame_roundtrips() {
+        let image = vec![0.0f32, 0.5, 1.0, -2.25];
+        let frame = encode_request(&image).unwrap();
+        assert_eq!(frame.len(), TX_HEADER_BYTES + 4 * image.len());
+        let hdr: [u8; TX_HEADER_BYTES] = frame[..TX_HEADER_BYTES].try_into().unwrap();
+        let len = decode_request_header(&hdr, 1 << 20).unwrap();
+        assert_eq!(len, 4 * image.len());
+        assert_eq!(decode_image(&frame[TX_HEADER_BYTES..]), image);
+    }
+
+    #[test]
+    fn request_header_rejects_are_typed() {
+        let image = vec![0.5f32; 8];
+        let frame = encode_request(&image).unwrap();
+        let mut hdr: [u8; TX_HEADER_BYTES] = frame[..TX_HEADER_BYTES].try_into().unwrap();
+
+        // oversized: the announced payload exceeds the front-end cap
+        assert_eq!(decode_request_header(&hdr, 16), Err(NetError::Oversized { len: 32, max: 16 }));
+        // garbage preamble
+        hdr[0] ^= 0xff;
+        assert!(matches!(decode_request_header(&hdr, 1 << 20), Err(NetError::BadMagic(_))));
+        hdr[0] ^= 0xff;
+        // wrong bit width (an activation frame is not a request frame)
+        hdr[4] = 4;
+        assert!(matches!(decode_request_header(&hdr, 1 << 20), Err(NetError::BadFrame(_))));
+    }
+
+    #[test]
+    fn done_response_roundtrips_every_field() {
+        let res = done_result();
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Ok(Outcome::Done(res.clone())));
+        let hdr: [u8; RESP_HEADER_BYTES] = buf[..RESP_HEADER_BYTES].try_into().unwrap();
+        let (status, len) = decode_response_header(&hdr).unwrap();
+        assert_eq!(status, ST_DONE);
+        assert_eq!(len, buf.len() - RESP_HEADER_BYTES);
+        match decode_response(status, &buf[RESP_HEADER_BYTES..]).unwrap() {
+            Outcome::Done(d) => {
+                assert_eq!(d.logits, res.logits);
+                assert_eq!(d.class, res.class);
+                assert_eq!(d.shard, res.shard);
+                assert_eq!(d.plan, res.plan);
+                assert_eq!(d.batch_size, res.batch_size);
+                assert_eq!(d.tx_bytes, res.tx_bytes);
+                assert_eq!(d.e2e, res.e2e);
+                assert_eq!(d.edge, res.edge);
+                assert_eq!(d.net, res.net);
+                assert_eq!(d.codec, res.codec);
+                assert_eq!(d.cloud, res.cloud);
+                assert_eq!(d.queue, res.queue);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shed_response_roundtrips() {
+        let shed = ShedInfo {
+            policy: AdmissionPolicy::ShedOldest,
+            queue_depth: 17,
+            waited: Duration::from_millis(3),
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Ok(Outcome::Shed(shed.clone())));
+        let hdr: [u8; RESP_HEADER_BYTES] = buf[..RESP_HEADER_BYTES].try_into().unwrap();
+        let (status, _) = decode_response_header(&hdr).unwrap();
+        match decode_response(status, &buf[RESP_HEADER_BYTES..]).unwrap() {
+            Outcome::Shed(s) => {
+                assert_eq!(s.policy, shed.policy);
+                assert_eq!(s.queue_depth, shed.queue_depth);
+                assert_eq!(s.waited, shed.waited);
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_and_reject_responses_decode_to_err() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Err(anyhow::anyhow!("engine exploded")));
+        let hdr: [u8; RESP_HEADER_BYTES] = buf[..RESP_HEADER_BYTES].try_into().unwrap();
+        let (status, _) = decode_response_header(&hdr).unwrap();
+        assert_eq!(status, ST_ERROR);
+        let err = decode_response(status, &buf[RESP_HEADER_BYTES..]).unwrap_err();
+        assert!(err.to_string().contains("engine exploded"), "{err}");
+
+        write_reject(&mut buf, &NetError::Oversized { len: 99, max: 10 });
+        let hdr: [u8; RESP_HEADER_BYTES] = buf[..RESP_HEADER_BYTES].try_into().unwrap();
+        let (status, _) = decode_response_header(&hdr).unwrap();
+        let err = decode_response(status, &buf[RESP_HEADER_BYTES..]).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn truncated_response_bodies_are_rejected() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Ok(Outcome::Done(done_result())));
+        let body = &buf[RESP_HEADER_BYTES..];
+        for cut in [0, 3, 11, body.len() - 1] {
+            assert!(decode_response(ST_DONE, &body[..cut]).is_err(), "cut={cut}");
+        }
+        assert!(decode_response(ST_DONE, body).is_ok());
+        assert!(decode_response(77, body).is_err(), "unknown status");
+    }
+
+    #[test]
+    fn policy_codes_roundtrip() {
+        use AdmissionPolicy::{Block, ShedNewest, ShedOldest};
+        for p in [Block, ShedNewest, ShedOldest] {
+            assert_eq!(policy_from_code(policy_code(p)), p);
+        }
+    }
+
+    #[test]
+    fn response_buffer_is_reused_across_outcomes() {
+        let mut buf = vec![0xAAu8; 7]; // dirty scratch, wrong length
+        write_response(&mut buf, &Ok(Outcome::Done(done_result())));
+        let first = buf.clone();
+        write_reject(&mut buf, &NetError::BadMagic(0xdead));
+        write_response(&mut buf, &Ok(Outcome::Done(done_result())));
+        assert_eq!(buf, first, "re-encoding after a reject is byte-identical");
+    }
+}

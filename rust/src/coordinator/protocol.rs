@@ -29,6 +29,32 @@ pub const MAGIC: u32 = 0x4153_5054;
 /// match what [`ActivationPacket::to_binary`] actually puts on the wire.
 pub const TX_HEADER_BYTES: usize = 4 + 1 + 4 + 4 + 16 + 4;
 
+/// A frame the codec refuses to produce, as a typed error so the wire
+/// boundary (`coordinator::net`) can map it onto a protocol error
+/// response instead of string-matching. Receive-side failures (bad
+/// magic, truncation) stay `anyhow` errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// The payload is longer than the header's u32 `len` field can
+    /// announce — encoding would silently truncate the length to
+    /// `len mod 2³²` and put a corrupt header on the wire.
+    PayloadTooLarge { payload_len: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::PayloadTooLarge { payload_len } => write!(
+                f,
+                "payload of {payload_len} B exceeds the u32 frame length field ({} B max)",
+                u32::MAX
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
 /// The fixed-size header fields of one activation frame (everything but
 /// the payload). The zero-copy serving path moves one of these by value
 /// next to a pooled payload buffer instead of materializing a packet.
@@ -43,8 +69,13 @@ pub struct PacketHeader {
 
 impl PacketHeader {
     /// Encode the binary frame header announcing a `payload_len`-byte
-    /// payload: exactly [`TX_HEADER_BYTES`] bytes, on the stack.
-    pub fn encode(&self, payload_len: usize) -> [u8; TX_HEADER_BYTES] {
+    /// payload: exactly [`TX_HEADER_BYTES`] bytes, on the stack. A
+    /// payload the u32 `len` field cannot announce is a typed error,
+    /// never a silently truncated header.
+    pub fn encode(&self, payload_len: usize) -> Result<[u8; TX_HEADER_BYTES], FrameError> {
+        if payload_len > u32::MAX as usize {
+            return Err(FrameError::PayloadTooLarge { payload_len });
+        }
         let mut out = [0u8; TX_HEADER_BYTES];
         out[0..4].copy_from_slice(&MAGIC.to_le_bytes());
         out[4] = self.bits;
@@ -54,7 +85,7 @@ impl PacketHeader {
             out[13 + 4 * i..17 + 4 * i].copy_from_slice(&d.to_le_bytes());
         }
         out[29..33].copy_from_slice(&(payload_len as u32).to_le_bytes());
-        out
+        Ok(out)
     }
 
     /// Decode a binary frame header; returns the fields plus the payload
@@ -186,19 +217,22 @@ impl ActivationPacket {
 
     /// Binary framing (socket mode). Allocating wrapper around
     /// [`ActivationPacket::write_into`].
-    pub fn to_binary(&self) -> Vec<u8> {
+    pub fn to_binary(&self) -> Result<Vec<u8>, FrameError> {
         let mut out = Vec::with_capacity(self.payload.len() + TX_HEADER_BYTES);
-        self.write_into(&mut out);
-        out
+        self.write_into(&mut out)?;
+        Ok(out)
     }
 
     /// In-place binary framing: write the frame into `out` (cleared
-    /// first), reusing its capacity. Byte-identical to [`to_binary`].
-    pub fn write_into(&self, out: &mut Vec<u8>) {
+    /// first), reusing its capacity. Byte-identical to [`to_binary`];
+    /// an unannounceable payload length is the same typed error.
+    pub fn write_into(&self, out: &mut Vec<u8>) -> Result<(), FrameError> {
+        let header = self.header().encode(self.payload.len())?;
         out.clear();
         out.reserve(TX_HEADER_BYTES + self.payload.len());
-        out.extend_from_slice(&self.header().encode(self.payload.len()));
+        out.extend_from_slice(&header);
         out.extend_from_slice(&self.payload);
+        Ok(())
     }
 
     /// Parse binary framing into an owned packet: a zero-copy
@@ -283,7 +317,7 @@ mod tests {
     #[test]
     fn binary_roundtrip() {
         let p = sample();
-        let buf = p.to_binary();
+        let buf = p.to_binary().unwrap();
         assert_eq!(buf.len(), p.wire_bytes_binary());
         let q = ActivationPacket::from_binary(&buf).unwrap();
         assert_eq!(p, q);
@@ -292,9 +326,9 @@ mod tests {
     #[test]
     fn header_const_matches_framing() {
         let p = sample();
-        assert_eq!(p.to_binary().len(), TX_HEADER_BYTES + p.payload.len());
+        assert_eq!(p.to_binary().unwrap().len(), TX_HEADER_BYTES + p.payload.len());
         let empty = ActivationPacket { payload: vec![], ..sample() };
-        assert_eq!(empty.to_binary().len(), TX_HEADER_BYTES);
+        assert_eq!(empty.to_binary().unwrap().len(), TX_HEADER_BYTES);
     }
 
     #[test]
@@ -314,7 +348,7 @@ mod tests {
     #[test]
     fn truncation_detected() {
         let p = sample();
-        let buf = p.to_binary();
+        let buf = p.to_binary().unwrap();
         assert!(ActivationPacket::from_binary(&buf[..buf.len() - 1]).is_err());
         assert!(ActivationPacket::from_binary(&buf[..10]).is_err());
     }
@@ -322,7 +356,7 @@ mod tests {
     #[test]
     fn bad_magic_rejected() {
         let p = sample();
-        let mut buf = p.to_binary();
+        let mut buf = p.to_binary().unwrap();
         buf[0] ^= 0xff;
         assert!(ActivationPacket::from_binary(&buf).is_err());
     }
@@ -331,18 +365,33 @@ mod tests {
     fn write_into_matches_to_binary_and_reuses_scratch() {
         let p = sample();
         let mut buf = vec![0xAAu8; 7]; // dirty scratch
-        p.write_into(&mut buf);
-        assert_eq!(buf, p.to_binary());
+        p.write_into(&mut buf).unwrap();
+        assert_eq!(buf, p.to_binary().unwrap());
         let empty = ActivationPacket { payload: vec![], ..sample() };
-        empty.write_into(&mut buf);
-        assert_eq!(buf, empty.to_binary());
+        empty.write_into(&mut buf).unwrap();
+        assert_eq!(buf, empty.to_binary().unwrap());
         assert_eq!(buf.len(), TX_HEADER_BYTES);
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn oversized_payload_len_is_a_typed_error_not_a_truncated_header() {
+        let h = sample().header();
+        // the boundary itself is encodable…
+        let enc = h.encode(u32::MAX as usize).unwrap();
+        let (_, len) = PacketHeader::decode(&enc).unwrap();
+        assert_eq!(len, u32::MAX as usize);
+        // …one past it used to encode `len mod 2^32` (a corrupt header
+        // announcing 0 bytes); now it is a typed error
+        let err = h.encode(u32::MAX as usize + 1).unwrap_err();
+        assert_eq!(err, FrameError::PayloadTooLarge { payload_len: u32::MAX as usize + 1 });
+        assert!(err.to_string().contains("u32"), "{err}");
     }
 
     #[test]
     fn header_encode_decode_roundtrip() {
         let p = sample();
-        let enc = p.header().encode(p.payload.len());
+        let enc = p.header().encode(p.payload.len()).unwrap();
         assert_eq!(enc.len(), TX_HEADER_BYTES);
         let (h, len) = PacketHeader::decode(&enc).unwrap();
         assert_eq!(h, p.header());
@@ -352,7 +401,7 @@ mod tests {
     #[test]
     fn view_parse_matches_owned_parse() {
         let p = sample();
-        let buf = p.to_binary();
+        let buf = p.to_binary().unwrap();
         let v = ActivationView::parse(&buf).unwrap();
         assert_eq!(v.to_owned(), p);
         // the payload is a borrow into the frame, not a copy
@@ -364,7 +413,7 @@ mod tests {
     #[test]
     fn view_rejects_truncation_at_every_cut() {
         let p = sample();
-        let buf = p.to_binary();
+        let buf = p.to_binary().unwrap();
         for cut in [0, 3, 10, TX_HEADER_BYTES - 1, TX_HEADER_BYTES, buf.len() - 1] {
             assert!(ActivationView::parse(&buf[..cut]).is_err(), "cut={cut}");
         }
@@ -374,7 +423,7 @@ mod tests {
     #[test]
     fn sg_parse_borrows_payload_segment_and_checks_len() {
         let p = sample();
-        let header = p.header().encode(p.payload.len());
+        let header = p.header().encode(p.payload.len()).unwrap();
         let v = ActivationView::parse_sg(&header, &p.payload).unwrap();
         assert_eq!(v.to_owned(), p);
         assert_eq!(v.payload.as_ptr(), p.payload.as_ptr(), "no copy");

@@ -245,6 +245,29 @@ impl Outcome {
 /// The response half a client holds after [`Server::submit`].
 pub type ResponseReceiver = mpsc::Receiver<Result<Outcome>>;
 
+/// A serving client: anything that can submit one image and hand back a
+/// channel yielding exactly one terminal [`Outcome`] — the in-process
+/// [`Server`], or a [`super::net::TcpClient`] speaking the binary frame
+/// protocol over a real socket. Load generation (`loadgen`) is generic
+/// over this, so the identical schedules replay over either transport.
+pub trait Client: Sync {
+    fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver>;
+
+    /// Replace the live uplink where supported (bandwidth-trace replay).
+    /// Remote clients ignore this: the trace drives the server side.
+    fn set_uplink(&self, _uplink: Uplink) {}
+}
+
+impl Client for Server {
+    fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
+        Server::submit(self, image)
+    }
+
+    fn set_uplink(&self, uplink: Uplink) {
+        Server::set_uplink(self, uplink)
+    }
+}
+
 struct Request {
     image: Vec<f32>,
     resp: mpsc::Sender<Result<Outcome>>,
@@ -626,6 +649,20 @@ impl Server {
         &self.plan_ids
     }
 
+    /// The shared buffer pool; the TCP front-end reads request frames
+    /// into (and serializes responses out of) the same shelves the
+    /// serving pipeline recycles through.
+    pub(crate) fn buf_pool(&self) -> Arc<BufPool> {
+        self.pool.clone()
+    }
+
+    /// Raw pool counters. Unlike [`Server::stats`] this includes
+    /// `checkins`, so a quiesced pipeline can be audited for leaked
+    /// buffers: every checkout must eventually be checked back in.
+    pub fn pool_stats(&self) -> super::bufpool::PoolStats {
+        self.pool.stats()
+    }
+
     /// The currently active plan index.
     pub fn active_plan(&self) -> usize {
         self.adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0)
@@ -770,9 +807,12 @@ fn edge_chain_sg(
                 Ok((h, Duration::ZERO))
             }
         };
+        let work = work.and_then(|(header, edge_dt)| {
+            let frame_header = header.encode(payload.len())?;
+            Ok((header, frame_header, edge_dt))
+        });
         match work {
-            Ok((header, edge_dt)) => {
-                let frame_header = header.encode(payload.len());
+            Ok((header, frame_header, edge_dt)) => {
                 staged.push(StagedSg {
                     resp: req.resp,
                     submitted: req.submitted,
@@ -1305,10 +1345,14 @@ fn shard_thread(
                 st.batches += 1;
                 st.shard_batches[shard_id] += 1;
                 for (job, lg) in sb.jobs.into_iter().zip(logits) {
+                    // total_cmp: a NaN logit (conceivable once inputs
+                    // arrive off a real network) must not panic the
+                    // shard thread — NaN sorts above every real value,
+                    // so the argmax is still well-defined
                     let class = lg
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i)
                         .unwrap_or(0);
                     let queue = job.arrived.elapsed();

@@ -20,9 +20,10 @@
 use anyhow::{bail, Context, Result};
 use auto_split::coordinator::{
     adaptive_table, load_eval_images, mixed_workload, poisson_schedule, policy_table, replay,
-    replay_traced, run_mixed, write_adaptive_bank, AdaptiveBankSpec, AdaptiveConfig,
-    AdmissionPolicy, BwTrace, CostPrior, LoadReport, Outcome, RefArtifactSpec, RoutePolicy,
-    SchedulerConfig, ServeConfig, ServeMode, Server, ServingStats, WireFormat,
+    replay_traced, run_mixed, write_adaptive_bank, write_reference_artifacts, AdaptiveBankSpec,
+    AdaptiveConfig, AdmissionPolicy, BwTrace, Client, CostPrior, Hysteresis, LoadReport,
+    NetConfig, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig, ServeConfig, ServeMode,
+    Server, ServingStats, TcpClient, TcpFrontend, WireFormat,
 };
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
@@ -95,17 +96,20 @@ fn main() -> Result<()> {
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
             eprintln!("  bankgen   --model resnet50 [--bins 0] [--tiers 0,100] [--out bank.json]");
             eprintln!("            | --synthetic [--out bank]   runnable REFHLO plan bank");
-            eprintln!("  serve     [--artifacts artifacts] [--mode split|cloud] [--requests 64]");
-            eprintln!("            [--mbps 3] [--batch 8] [--rpc]");
+            eprintln!("  serve     [--artifacts artifacts | --synthetic] [--mode split|cloud]");
+            eprintln!("            [--requests 64] [--mbps 3] [--batch 8] [--rpc]");
             eprintln!("            [--shards 1] [--edge-workers 1] [--queue-cap 256]");
             eprintln!("            [--admission block|shed-newest|shed-oldest]");
             eprintln!("            [--slo-ms 0] [--route rr|least|affinity] [--link-chain 8]");
-            eprintln!("            [--adaptive --bank <dir>] [--pool on|off]");
+            eprintln!("            [--adaptive --bank <dir> [--hys-margin .25] [--hys-windows 3]]");
+            eprintln!("            [--pool on|off]");
+            eprintln!("            [--listen 127.0.0.1:7070 [--duration-s 0]]   TCP front-end");
             eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
             eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
             eprintln!("            [--seed 1] [--compare] [--json out.json] [--pool on|off]");
+            eprintln!("            [--transport inproc|tcp [--connect host:port]]");
             eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
-            eprintln!("             [--pin plan-id]]");
+            eprintln!("             [--pin plan-id] [--hys-margin 0.25] [--hys-windows 3]]");
             eprintln!("            + all `serve` scheduler flags");
             Ok(())
         }
@@ -223,6 +227,25 @@ fn pool_from_args(args: &Args) -> Result<bool> {
     }
 }
 
+/// Parse `--hys-margin` / `--hys-windows`. The CLI is strict where the
+/// library clamps: a degenerate config (zero windows, negative margin)
+/// would disable flap damping entirely, so it is rejected here instead
+/// of silently replaced (`Hysteresis::sanitized` is the in-library net).
+fn hysteresis_from_args(args: &Args) -> Result<Hysteresis> {
+    let d = Hysteresis::default();
+    let margin: f64 = args.parse("--hys-margin", d.margin)?;
+    let windows: u32 = args.parse("--hys-windows", d.windows)?;
+    anyhow::ensure!(
+        margin.is_finite() && margin >= 0.0,
+        "--hys-margin {margin} disables flap damping (must be a finite value ≥ 0)"
+    );
+    anyhow::ensure!(
+        windows >= 1,
+        "--hys-windows 0 disables flap damping (must be ≥ 1 consecutive windows)"
+    );
+    Ok(Hysteresis { margin, windows })
+}
+
 /// Build the scheduler configuration from the shared serve/loadtest flags.
 fn scheduler_from_args(args: &Args) -> Result<SchedulerConfig> {
     let mut s = SchedulerConfig::default();
@@ -277,12 +300,22 @@ fn serving_inputs(args: &Args) -> Result<(PathBuf, Vec<Vec<f32>>, bool)> {
 }
 
 /// Emit a machine-readable serving benchmark record (CI trajectory file).
-fn write_bench_json(path: &str, sched: &SchedulerConfig, r: &LoadReport) -> Result<()> {
+/// `requests` + `tx_bytes_per_req` let the TCP smoke gate exactly-once
+/// accounting and per-request wire-byte parity across transports.
+fn write_bench_json(
+    path: &str,
+    sched: &SchedulerConfig,
+    r: &LoadReport,
+    transport: &str,
+) -> Result<()> {
     let json = format!(
-        "{{\n  \"bench\": \"serving\",\n  \"shards\": {},\n  \"admission\": \"{}\",\n  \
+        "{{\n  \"bench\": \"serving\",\n  \"transport\": \"{}\",\n  \"shards\": {},\n  \
+         \"admission\": \"{}\",\n  \
          \"route\": \"{}\",\n  \"queue_cap\": {},\n  \"offered_rps\": {:.3},\n  \
          \"achieved_rps\": {:.3},\n  \"p50_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
-         \"shed_rate\": {:.4},\n  \"completed\": {},\n  \"shed\": {},\n  \"errors\": {}\n}}\n",
+         \"shed_rate\": {:.4},\n  \"requests\": {},\n  \"completed\": {},\n  \"shed\": {},\n  \
+         \"errors\": {},\n  \"tx_bytes_per_req\": {:.4}\n}}\n",
+        transport,
         sched.shards,
         sched.admission,
         sched.route,
@@ -292,9 +325,11 @@ fn write_bench_json(path: &str, sched: &SchedulerConfig, r: &LoadReport) -> Resu
         r.quantile(0.5) * 1e3,
         r.quantile(0.99) * 1e3,
         r.shed_rate(),
+        r.requests,
         r.completed,
         r.shed,
         r.errors,
+        r.tx_bytes_per_completed(),
     );
     std::fs::write(path, json).with_context(|| format!("write {path}"))
 }
@@ -460,10 +495,11 @@ fn run_adaptive_loadtest(
         acfg.bank.img > 0,
         "bank has no runnable artifacts — generate one with `bankgen --synthetic`"
     );
-    let acfg = match args.get("--pin") {
+    let mut acfg = match args.get("--pin") {
         Some(id) => acfg.with_pinned(id),
         None => acfg,
     };
+    acfg.hysteresis = hysteresis_from_args(args)?;
     let images: Vec<Vec<f32>> = (0..32u64)
         .map(|i| RefArtifactSpec { img: acfg.bank.img, ..Default::default() }.image(1000 + i))
         .collect();
@@ -540,11 +576,112 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let per_client: usize = args.parse("--per-client", 32)?;
     let seed: u64 = args.parse("--seed", 1u64)?;
     let mbps: f64 = args.parse("--mbps", 3.0)?;
+    let tcp = match args.get("--transport") {
+        None | Some("inproc") => false,
+        Some("tcp") => true,
+        Some(v) => bail!("bad --transport {v} (expected tcp|inproc)"),
+    };
     if args.flag("--adaptive") {
+        anyhow::ensure!(!tcp, "--transport tcp does not combine with --adaptive yet");
         return run_adaptive_loadtest(args, &sched, rps, n, seed);
+    }
+    if tcp {
+        anyhow::ensure!(!args.flag("--compare"), "--transport tcp does not take --compare");
+        return run_tcp_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps);
     }
     let (dir, images, synthetic) = serving_inputs(args)?;
     let result = run_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps, &dir, &images);
+    if synthetic {
+        let _ = std::fs::remove_dir_all(&dir); // disposable temp artifacts
+    }
+    result
+}
+
+/// Drive one deterministic workload (open-loop, or mixed when `clients`
+/// > 0) through any serving transport and return the open-loop report —
+/// the shared core of the in-process and TCP loadtest paths.
+#[allow(clippy::too_many_arguments)]
+fn run_workload<C: Client>(
+    client: &C,
+    images: &[Vec<f32>],
+    rps: f64,
+    n: usize,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+    shards: usize,
+) -> Result<LoadReport> {
+    if clients > 0 {
+        println!(
+            "mixed load: {rps} rps open-loop × {n} + {clients} closed-loop clients × {per_client}"
+        );
+        let wl = mixed_workload(rps, n, clients, per_client, images.len(), seed);
+        let mr = run_mixed(client, images, &wl)?;
+        print_report("closed", &mr.closed);
+        Ok(mr.open)
+    } else if n == 0 {
+        bail!("nothing to do: --requests and --clients are both 0");
+    } else {
+        println!("open-loop Poisson load: {rps} rps, {n} requests, {shards} shards");
+        let schedule = poisson_schedule(rps, n, images.len(), seed);
+        replay(client, images, &schedule)
+    }
+}
+
+/// The `loadtest --transport tcp` path: replay the workload over real
+/// loopback sockets. Without `--connect` this spins up the full server +
+/// [`TcpFrontend`] in-process and talks to it through a [`TcpClient`] —
+/// the same pipeline as `--transport inproc`, with the binary frame
+/// protocol and a real TCP stack in between. With `--connect HOST:PORT`
+/// it drives an external `serve --listen` process instead (client-side
+/// accounting only).
+#[allow(clippy::too_many_arguments)]
+fn run_tcp_loadtest(
+    args: &Args,
+    sched: &SchedulerConfig,
+    rps: f64,
+    n: usize,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+    mbps: f64,
+) -> Result<()> {
+    // the shared tail: warm up one connection, drive the workload, and
+    // record the run — identical whether the server is remote or local
+    let drive = |client: TcpClient, images: &[Vec<f32>]| -> Result<()> {
+        let _ = client.submit(images[0].clone())?.recv(); // warm-up
+        let report =
+            run_workload(&client, images, rps, n, clients, per_client, seed, sched.shards)?;
+        print_report("tcp", &report);
+        if let Some(path) = args.get("--json") {
+            write_bench_json(path, sched, &report, "tcp")?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    };
+
+    if let Some(addr) = args.get("--connect") {
+        // remote server: images must match its artifact spec — the
+        // default synthetic spec on both sides (CI's two-process smoke)
+        let spec = RefArtifactSpec::default();
+        let images: Vec<Vec<f32>> = (0..32u64).map(|i| spec.image(1000 + i)).collect();
+        return drive(TcpClient::connect(addr)?, &images);
+    }
+
+    let (dir, images, synthetic) = serving_inputs(args)?;
+    let result = (|| -> Result<()> {
+        let mut cfg = ServeConfig::new(&dir);
+        cfg.uplink = Uplink::mbps(mbps);
+        cfg.scheduler = sched.clone();
+        cfg.pool = pool_from_args(args)?;
+        let server = std::sync::Arc::new(Server::start(cfg)?);
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), NetConfig::default())?;
+        println!("tcp loopback front-end on {}", frontend.local_addr());
+        // the client closes inside `drive`, before the front-end drains
+        drive(TcpClient::connect(frontend.local_addr())?, &images)?;
+        println!("\n{}", frontend.shutdown().report());
+        Ok(())
+    })();
     if synthetic {
         let _ = std::fs::remove_dir_all(&dir); // disposable temp artifacts
     }
@@ -591,7 +728,7 @@ fn run_loadtest(
             let name = sched.admission.to_string();
             let row = rows.iter().find(|(p, _)| *p == name).map(|(_, r)| r);
             let row = row.context("configured policy missing from comparison")?;
-            write_bench_json(path, sched, row)?;
+            write_bench_json(path, sched, row, "inproc")?;
             println!("wrote {path} ({name} row)");
         }
         return Ok(());
@@ -599,24 +736,10 @@ fn run_loadtest(
 
     let server = make_server(sched.clone())?;
     let _ = server.infer(images[0].clone()); // warm-up
-    let report = if clients > 0 {
-        println!(
-            "mixed load: {rps} rps open-loop × {n} + {clients} closed-loop clients × {per_client}"
-        );
-        let wl = mixed_workload(rps, n, clients, per_client, images.len(), seed);
-        let mr = run_mixed(&server, images, &wl)?;
-        print_report("closed", &mr.closed);
-        mr.open
-    } else if n == 0 {
-        bail!("nothing to do: --requests and --clients are both 0");
-    } else {
-        println!("open-loop Poisson load: {rps} rps, {n} requests, {} shards", sched.shards);
-        let schedule = poisson_schedule(rps, n, images.len(), seed);
-        replay(&server, images, &schedule)?
-    };
+    let report = run_workload(&server, images, rps, n, clients, per_client, seed, sched.shards)?;
     print_report("open", &report);
     if let Some(path) = args.get("--json") {
-        write_bench_json(path, sched, &report)?;
+        write_bench_json(path, sched, &report, "inproc")?;
         println!("wrote {path}");
     }
     println!("\n{}", server.shutdown().report());
@@ -624,8 +747,15 @@ fn run_loadtest(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = args.get("--artifacts").unwrap_or("artifacts");
-    let mut cfg = ServeConfig::new(dir);
+    let synthetic = args.flag("--synthetic");
+    let dir: PathBuf = if synthetic {
+        let d = std::env::temp_dir().join(format!("autosplit-serve-{}", std::process::id()));
+        write_reference_artifacts(&d, &RefArtifactSpec::default())?;
+        d
+    } else {
+        PathBuf::from(args.get("--artifacts").unwrap_or("artifacts"))
+    };
+    let mut cfg = ServeConfig::new(&dir);
     cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
     cfg.scheduler = scheduler_from_args(args)?;
     cfg.pool = pool_from_args(args)?;
@@ -639,13 +769,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     if args.flag("--adaptive") {
         let bank = args.get("--bank").context("--adaptive requires --bank <dir>")?;
-        cfg.adaptive = Some(AdaptiveConfig::load(Path::new(bank))?);
+        let mut acfg = AdaptiveConfig::load(Path::new(bank))?;
+        acfg.hysteresis = hysteresis_from_args(args)?;
+        cfg.adaptive = Some(acfg);
     }
     let n: usize = args.parse("--requests", 64)?;
 
     println!(
-        "starting pipeline ({:?}, artifacts={dir}, {} shards)...",
-        cfg.mode, cfg.scheduler.shards
+        "starting pipeline ({:?}, artifacts={}, {} shards)...",
+        cfg.mode,
+        dir.display(),
+        cfg.scheduler.shards
     );
     let server = Server::start(cfg)?;
     println!(
@@ -653,8 +787,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.meta.params, server.meta.acc_float, server.meta.acc_quant_split
     );
 
+    // ---- TCP front-end mode: serve sockets instead of a local replay
+    if let Some(listen) = args.get("--listen") {
+        use std::io::Write as _;
+        let server = std::sync::Arc::new(server);
+        let frontend = TcpFrontend::bind(listen, server, NetConfig::default())?;
+        // this exact line is what `loadtest --connect` scripts parse
+        println!("listening on {}", frontend.local_addr());
+        let _ = std::io::stdout().flush();
+        let duration_s: f64 = args.parse("--duration-s", 0.0)?;
+        if duration_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(duration_s));
+        } else {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        let stats = frontend.shutdown();
+        println!("{}", stats.report());
+        if synthetic {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        return Ok(());
+    }
+
+    // ---- synthetic local replay: deterministic pseudo-images, no
+    // bundled eval set (and no labels, so no accuracy line)
+    if synthetic {
+        let spec = RefArtifactSpec::default();
+        let submitted: Vec<_> =
+            (0..n).map(|i| server.submit(spec.image(1000 + i as u64))).collect::<Result<_>>()?;
+        let mut answered = 0;
+        let mut shed = 0;
+        for rx in submitted {
+            match rx.recv()?? {
+                Outcome::Done(_) => answered += 1,
+                Outcome::Shed(_) => shed += 1,
+            }
+        }
+        let stats = server.shutdown();
+        println!("\nanswered {answered} requests ({shed} shed)");
+        println!("{}", stats.report());
+        let _ = std::fs::remove_dir_all(&dir);
+        return Ok(());
+    }
+
     // replay the bundled eval set
-    let eval = Path::new(dir).join("eval_set.bin");
+    let eval = Path::new(&dir).join("eval_set.bin");
     let buf = std::fs::read(&eval).with_context(|| format!("read {eval:?}"))?;
     let count = u32::from_le_bytes(buf[..4].try_into()?) as usize;
     let img = server.meta.img * server.meta.img;

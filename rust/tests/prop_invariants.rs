@@ -397,13 +397,13 @@ fn prop_view_parse_matches_owned_parse_random_frames() {
             ],
             payload: (0..len).map(|_| rng.next_u64() as u8).collect(),
         };
-        let buf = pkt.to_binary();
+        let buf = pkt.to_binary().unwrap();
         let owned = ActivationPacket::from_binary(&buf).unwrap();
         let view = ActivationView::parse(&buf).unwrap();
         assert_eq!(view.to_owned(), owned, "case {case}");
         assert_eq!(owned, pkt, "case {case}");
         // scatter-gather parse over separate segments agrees
-        let header = pkt.header().encode(pkt.payload.len());
+        let header = pkt.header().encode(pkt.payload.len()).unwrap();
         let sg = ActivationView::parse_sg(&header, &pkt.payload).unwrap();
         assert_eq!(sg.to_owned(), pkt, "case {case} (sg)");
         // any truncated frame is rejected by both parsers

@@ -1,0 +1,317 @@
+//! TCP front-end integration tests: the binary frame protocol over real
+//! loopback sockets, against the full serving pipeline (synthetic REFHLO
+//! artifacts — no `make artifacts` needed).
+//!
+//! Locks the ISSUE's serving-boundary contract:
+//! * partial reads split at arbitrary byte boundaries of header and
+//!   payload still assemble into one frame;
+//! * garbage preambles and oversized frames draw a typed error response
+//!   and close the connection — nothing reaches the admission queue;
+//! * a client disconnect mid-frame sheds the partial frame without
+//!   leaking its pooled buffer (checkouts == checkins at quiescence);
+//! * concurrent clients interleave frames without cross-talk;
+//! * the same schedule replayed over TCP and in-process agrees on
+//!   exactly-once accounting and per-request wire bytes.
+
+use auto_split::coordinator::net::{
+    decode_response, decode_response_header, encode_request, RESP_HEADER_BYTES,
+};
+use auto_split::coordinator::{
+    poisson_schedule, reference_image, replay, write_reference_artifacts, NetConfig, Outcome,
+    RefArtifactSpec, ServeConfig, Server, TcpClient, TcpFrontend, TX_HEADER_BYTES,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLASSES: usize = 10;
+const C2: usize = 2;
+const HW: usize = 64;
+
+fn write_artifacts(tag: &str) -> PathBuf {
+    let name = format!("autosplit-tcp-{}-{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    write_reference_artifacts(&dir, &RefArtifactSpec::default()).unwrap();
+    dir
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Start the full pipeline plus a loopback front-end.
+fn start_frontend(tag: &str, net: NetConfig) -> (PathBuf, Arc<Server>, TcpFrontend) {
+    let dir = write_artifacts(tag);
+    let server = Arc::new(Server::start(ServeConfig::new(&dir)).expect("start server"));
+    let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net).expect("bind front-end");
+    (dir, server, frontend)
+}
+
+/// Read one response frame off a raw socket.
+fn read_response(stream: &mut TcpStream) -> anyhow::Result<Outcome> {
+    let mut hdr = [0u8; RESP_HEADER_BYTES];
+    stream.read_exact(&mut hdr)?;
+    let (status, body_len) = decode_response_header(&hdr)?;
+    let mut body = vec![0u8; body_len];
+    stream.read_exact(&mut body)?;
+    decode_response(status, &body)
+}
+
+/// Poll until `cond` holds (the front-end's counters update as its
+/// threads notice socket events) or the deadline passes.
+fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn tcp_roundtrip_matches_inproc_on_the_same_server() {
+    let (dir, server, frontend) = start_frontend("roundtrip", NetConfig::default());
+    let image = reference_image(1);
+
+    let inproc = server.infer(image.clone()).expect("in-process infer");
+    let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+    let out = client.submit(image).unwrap().recv().unwrap().unwrap();
+    let tcp = out.done().expect("tcp request served");
+
+    // the response frame reconstructs the in-process result exactly
+    assert_eq!(tcp.logits, inproc.logits);
+    assert_eq!(tcp.class, inproc.class);
+    assert_eq!(tcp.tx_bytes, inproc.tx_bytes);
+    assert_eq!(tcp.tx_bytes, TX_HEADER_BYTES + C2 * HW);
+    assert!(tcp.e2e > Duration::ZERO);
+
+    drop(client);
+    let stats = frontend.shutdown();
+    assert_eq!(stats.tcp_accepted, 1);
+    assert_eq!(stats.tcp_frame_rejects, 0);
+    assert_eq!(stats.offered, 2, "one in-process + one tcp request");
+    cleanup(&dir);
+}
+
+#[test]
+fn partial_reads_at_every_byte_boundary_still_frame() {
+    let (dir, server, frontend) = start_frontend("partial", NetConfig::default());
+    let image = reference_image(2);
+    let reference = server.infer(image.clone()).expect("reference infer");
+    let frame = encode_request(&image).unwrap();
+
+    // one frame written byte-at-a-time: the reader must reassemble
+    // across a split at EVERY byte boundary of header and payload
+    let mut stream = TcpStream::connect(frontend.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    for &b in &frame {
+        stream.write_all(&[b]).unwrap();
+    }
+    let res = read_response(&mut stream).unwrap();
+    let res = res.done().expect("byte-at-a-time frame served");
+    assert_eq!(res.logits, reference.logits);
+
+    // and a sweep of two-chunk splits, including the header edges
+    let mut cuts = vec![1, TX_HEADER_BYTES - 1, TX_HEADER_BYTES, TX_HEADER_BYTES + 1];
+    cuts.extend((0..frame.len()).step_by(97).skip(1));
+    cuts.push(frame.len() - 1);
+    for cut in cuts {
+        stream.write_all(&frame[..cut]).unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // force a short read
+        stream.write_all(&frame[cut..]).unwrap();
+        let res = read_response(&mut stream).unwrap().done().expect("split frame served");
+        assert_eq!(res.logits, reference.logits, "cut={cut}");
+    }
+
+    drop(stream);
+    let stats = frontend.shutdown();
+    assert_eq!(stats.tcp_frame_rejects, 0);
+    assert_eq!(stats.tcp_read_errors, 0, "clean closes are not read errors");
+    cleanup(&dir);
+}
+
+#[test]
+fn garbage_preamble_counts_a_frame_reject_and_nothing_is_submitted() {
+    let (dir, _server, frontend) = start_frontend("garbage", NetConfig::default());
+    let mut stream = TcpStream::connect(frontend.local_addr()).unwrap();
+    stream.write_all(b"GET / HTTP/1.1\r\nHost: not-a-frame\r\n\r\n padding!").unwrap();
+
+    let err = read_response(&mut stream).expect_err("error response decodes to Err");
+    assert!(err.to_string().contains("magic"), "typed bad-magic reject: {err}");
+    // the connection is closed after the error frame
+    let mut probe = [0u8; 1];
+    assert_eq!(stream.read(&mut probe).unwrap_or(0), 0, "connection must close");
+
+    wait_for(|| frontend.net_stats().frame_rejects == 1, "frame reject counter");
+    let stats = frontend.shutdown();
+    assert_eq!(stats.offered, 0, "garbage never reaches the admission queue");
+    cleanup(&dir);
+}
+
+#[test]
+fn oversized_frame_draws_typed_error_before_any_buffer_is_sized() {
+    let cfg = NetConfig { max_payload: 1024, ..NetConfig::default() };
+    let (dir, _server, frontend) = start_frontend("oversized", cfg);
+    let mut stream = TcpStream::connect(frontend.local_addr()).unwrap();
+    // a valid header announcing 4 MiB — past the 1 KiB front-end cap
+    let image = vec![0.5f32; 1 << 20];
+    let frame = encode_request(&image).unwrap();
+    stream.write_all(&frame[..TX_HEADER_BYTES]).unwrap();
+
+    let err = read_response(&mut stream).expect_err("oversized must be rejected");
+    assert!(err.to_string().contains("oversized"), "typed oversize reject: {err}");
+    wait_for(|| frontend.net_stats().frame_rejects == 1, "frame reject counter");
+    let stats = frontend.shutdown();
+    assert_eq!(stats.offered, 0);
+    cleanup(&dir);
+}
+
+#[test]
+fn disconnect_mid_frame_sheds_without_leaking_the_pooled_buffer() {
+    let (dir, server, frontend) = start_frontend("midframe", NetConfig::default());
+    // warm the pipeline so the pool shelves are populated
+    let warm = server.infer(reference_image(3)).expect("warm-up");
+    assert_eq!(warm.logits.len(), CLASSES);
+
+    let image = reference_image(4);
+    let frame = encode_request(&image).unwrap();
+    for round in 0..5 {
+        let mut stream = TcpStream::connect(frontend.local_addr()).unwrap();
+        // header + half the payload, then vanish
+        stream.write_all(&frame[..TX_HEADER_BYTES + 512]).unwrap();
+        drop(stream);
+        wait_for(
+            || frontend.net_stats().read_errors as usize == round + 1,
+            "mid-frame disconnect noticed",
+        );
+    }
+
+    let net = frontend.net_stats();
+    assert_eq!(net.read_errors, 5, "each disconnect is one read error");
+    assert_eq!(net.requests, 0, "partial frames are never submitted");
+
+    // no leak: at quiescence every pooled checkout (pipeline buffers,
+    // the 5 partial-frame payloads, the writers' response scratch) has
+    // been checked back in
+    wait_for(
+        || {
+            let p = server.pool_stats();
+            p.hits + p.misses == p.checkins
+        },
+        "pool checkouts to drain back to the shelves",
+    );
+
+    // and the server still serves: shed-not-poisoned
+    let client = TcpClient::connect(frontend.local_addr()).unwrap();
+    let res = client.submit(image).unwrap().recv().unwrap().unwrap().done().unwrap();
+    assert_eq!(res.logits, warm.logits, "same image ⇒ same logits after the disconnect storm");
+    drop(client);
+
+    let stats = frontend.shutdown();
+    assert_eq!(stats.offered, 2, "warm-up + post-storm request only");
+    assert_eq!(stats.requests, 2);
+    cleanup(&dir);
+}
+
+#[test]
+fn concurrent_clients_interleave_frames_without_crosstalk() {
+    let (dir, server, frontend) = start_frontend("concurrent", NetConfig::default());
+    let n_clients = 4usize;
+    let per_client = 8usize;
+
+    // reference logits per image, computed in-process on the same server
+    let images: Vec<Vec<f32>> = (0..per_client as u64).map(reference_image).collect();
+    let expected: Vec<Vec<f32>> =
+        images.iter().map(|im| server.infer(im.clone()).unwrap().logits).collect();
+
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let images = &images;
+            let expected = &expected;
+            let addr = frontend.local_addr();
+            scope.spawn(move || {
+                let client = TcpClient::connect(addr).expect("connect");
+                // pipelined: all frames in flight before the first recv
+                let rxs: Vec<_> = (0..per_client)
+                    .map(|i| client.submit(images[(i + c) % per_client].clone()).unwrap())
+                    .collect();
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let res = rx.recv().unwrap().unwrap().done().expect("served");
+                    assert_eq!(
+                        res.logits,
+                        expected[(i + c) % per_client],
+                        "client {c} request {i} got someone else's answer"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = frontend.shutdown();
+    let tcp_requests = (n_clients * per_client) as u64;
+    assert_eq!(stats.tcp_accepted, n_clients as u64);
+    assert_eq!(stats.offered, tcp_requests + per_client as u64, "tcp + in-process reference");
+    assert_eq!(stats.requests + stats.shed, stats.offered, "exactly-once over sockets");
+    assert_eq!(stats.tcp_frame_rejects, 0);
+    cleanup(&dir);
+}
+
+#[test]
+fn same_schedule_over_tcp_and_inproc_agree_on_accounting_and_wire_bytes() {
+    let dir = write_artifacts("parity");
+    let images: Vec<Vec<f32>> = (0..8u64).map(reference_image).collect();
+    let schedule = poisson_schedule(300.0, 60, images.len(), 7);
+
+    // in-process transport
+    let server = Server::start(ServeConfig::new(&dir)).unwrap();
+    let _ = server.infer(images[0].clone());
+    let inproc = replay(&server, &images, &schedule).unwrap();
+    server.shutdown();
+
+    // tcp transport: same artifacts, same schedule, real sockets
+    let server = Arc::new(Server::start(ServeConfig::new(&dir)).unwrap());
+    let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), NetConfig::default()).unwrap();
+    let client = TcpClient::connect(frontend.local_addr()).unwrap();
+    let _ = client.submit(images[0].clone()).unwrap().recv().unwrap();
+    let tcp = replay(&client, &images, &schedule).unwrap();
+    drop(client);
+    let stats = frontend.shutdown();
+
+    for (name, r) in [("inproc", &inproc), ("tcp", &tcp)] {
+        assert!(r.fully_accounted(), "{name}: completed+shed+errors == offered");
+        assert_eq!(r.errors, 0, "{name} errors");
+    }
+    assert_eq!(tcp.completed, inproc.completed, "Block admission completes everything");
+    // per-request wire bytes are a property of the split plan, not the
+    // client transport — bit-identical across transports
+    assert_eq!(tcp.tx_bytes_per_completed(), inproc.tx_bytes_per_completed());
+    assert_eq!(tcp.tx_bytes_per_completed(), (TX_HEADER_BYTES + C2 * HW) as f64);
+    // server-side accounting saw every tcp request exactly once
+    assert_eq!(stats.offered, schedule.len() as u64 + 1);
+    assert_eq!(stats.requests + stats.shed, stats.offered);
+    cleanup(&dir);
+}
+
+#[test]
+fn client_disconnect_after_submit_is_still_answered_exactly_once() {
+    let (dir, server, frontend) = start_frontend("ghost", NetConfig::default());
+    {
+        let client = TcpClient::connect(frontend.local_addr()).unwrap();
+        let _rx = client.submit(reference_image(5)).unwrap();
+        // client vanishes with the response in flight
+    }
+    // the server still answers the admitted request exactly once (the
+    // write is dropped, the accounting is not)
+    wait_for(
+        || {
+            let s = server.stats();
+            s.requests + s.shed == 1
+        },
+        "ghost request to resolve",
+    );
+    let stats = frontend.shutdown();
+    assert_eq!(stats.offered, 1);
+    assert_eq!(stats.requests + stats.shed, 1);
+    cleanup(&dir);
+}
