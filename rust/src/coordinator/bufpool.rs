@@ -93,16 +93,25 @@ impl BufPool {
     /// Size-class index whose buffers satisfy a `cap`-byte checkout
     /// (may be ≥ [`NUM_CLASSES`] for huge requests — never shelved).
     fn ceil_class(cap: usize) -> usize {
+        // Guard before rounding: for caps above the top bit,
+        // `next_power_of_two()` wraps to 0 in release builds and
+        // `ilog2(0)` panics. Anything past the largest class takes the
+        // allocate-exact path anyway, so clamp instead of computing.
+        if cap > MIN_CLASS_BYTES << (NUM_CLASSES - 1) {
+            return NUM_CLASSES;
+        }
         let c = cap.max(MIN_CLASS_BYTES).next_power_of_two();
         (c / MIN_CLASS_BYTES).ilog2() as usize
     }
 
     /// Largest size class a `cap`-byte buffer fully covers (checkin key).
+    /// Clamped to [`NUM_CLASSES`] (= dropped on checkin) for beyond-range
+    /// capacities so huge buffers can never reshelve.
     fn floor_class(cap: usize) -> Option<usize> {
         if cap < MIN_CLASS_BYTES {
             return None;
         }
-        Some((cap / MIN_CLASS_BYTES).ilog2() as usize)
+        Some(((cap / MIN_CLASS_BYTES).ilog2() as usize).min(NUM_CLASSES))
     }
 
     /// Check out a cleared buffer with capacity ≥ `cap`.
@@ -220,6 +229,23 @@ mod tests {
         assert_eq!(pool.stats().checkins, 0, "beyond-range buffers are dropped");
         let st = pool.stats();
         assert_eq!((st.hits, st.misses), (0, 2));
+    }
+
+    #[test]
+    fn huge_capacity_class_math_never_panics() {
+        // `next_power_of_two()` wraps to 0 (release) for caps above the
+        // top bit; both class functions must clamp to the allocate-exact
+        // range instead of feeding `ilog2(0)`.
+        for cap in [usize::MAX, usize::MAX - 1, (usize::MAX >> 1) + 2, 1usize << 63] {
+            assert_eq!(BufPool::ceil_class(cap), NUM_CLASSES, "cap={cap}");
+            let class = BufPool::floor_class(cap).unwrap();
+            assert!(class >= NUM_CLASSES, "huge buffers must never reshelve (cap={cap})");
+        }
+        // Boundary: the largest classed capacity still classes normally.
+        let top = MIN_CLASS_BYTES << (NUM_CLASSES - 1);
+        assert_eq!(BufPool::ceil_class(top), NUM_CLASSES - 1);
+        assert_eq!(BufPool::ceil_class(top + 1), NUM_CLASSES);
+        assert_eq!(BufPool::floor_class(top), Some(NUM_CLASSES - 1));
     }
 
     #[test]

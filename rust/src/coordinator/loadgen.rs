@@ -197,8 +197,14 @@ fn replay_inner<C: Client + ?Sized>(
     }
     let wall = start.elapsed().as_secs_f64();
     let n = schedule.len();
+    // Degenerate schedules (single arrival, or every arrival at t=0) have
+    // a zero span; dividing by it yields `inf`, which then poisons every
+    // report that aggregates this run. Fall back to measured wall time so
+    // the rate stays finite for any non-empty schedule.
+    let span = schedule.last().map(|a| a.at.as_secs_f64()).unwrap_or(0.0);
+    let denom = if span > 0.0 { span } else { wall.max(1e-9) };
     Ok(LoadReport {
-        offered_rps: n as f64 / schedule.last().map(|a| a.at.as_secs_f64()).unwrap_or(1.0),
+        offered_rps: n as f64 / denom,
         achieved_rps: latencies.len() as f64 / wall,
         requests: n,
         completed: latencies.len(),
@@ -374,6 +380,199 @@ pub fn run_mixed<C: Client + ?Sized>(
     Ok(MixedReport { open: open_report.expect("open replay ran")?, closed })
 }
 
+/// Configuration for the C10K fan-in scenario: thousands of concurrent
+/// [`super::net::TcpClient`] connections held open against one
+/// front-end, plus connection-churn and slow-reader stress.
+#[derive(Debug, Clone, Copy)]
+pub struct C10kConfig {
+    /// Connections to hold open simultaneously (the peak).
+    pub connections: usize,
+    /// Pipelined requests submitted per held connection.
+    pub per_conn: usize,
+    /// Connect → one request → disconnect cycles after the peak phase.
+    pub churn: usize,
+    /// Also run the slow-reader (slowloris-style) scenario.
+    pub slow: bool,
+    /// Client worker threads fanning out the connections.
+    pub workers: usize,
+}
+
+impl Default for C10kConfig {
+    fn default() -> Self {
+        C10kConfig { connections: 1024, per_conn: 2, churn: 128, slow: true, workers: 16 }
+    }
+}
+
+/// Outcome of a C10K run: the main-phase load accounting plus the
+/// stress-scenario results.
+#[derive(Debug, Clone)]
+pub struct C10kReport {
+    /// Accounting for the peak phase (`connections × per_conn` requests;
+    /// exactly-once: `completed + shed + errors == requests`).
+    pub load: LoadReport,
+    /// Connections actually opened in the peak phase.
+    pub connections: usize,
+    /// Churn cycles that completed (connected, got a terminal response).
+    pub churned: usize,
+    /// Did the slow reader receive its full, decodable response?
+    pub slow_ok: bool,
+}
+
+/// Drive a [`super::net::TcpFrontend`] at C10K scale: open
+/// `cfg.connections` concurrent connections, call `at_peak` while every
+/// one is simultaneously open (thread-count sampling hooks in here),
+/// pipeline `per_conn` requests down each, drain, then run the
+/// connection-churn and slow-reader scenarios.
+pub fn c10k_tcp(
+    addr: std::net::SocketAddr,
+    images: &[Vec<f32>],
+    cfg: &C10kConfig,
+    at_peak: impl FnOnce(),
+) -> Result<C10kReport> {
+    use super::net::TcpClient;
+    anyhow::ensure!(!images.is_empty(), "empty image pool");
+    anyhow::ensure!(cfg.connections > 0 && cfg.per_conn > 0 && cfg.workers > 0, "bad c10k config");
+    let start = Instant::now();
+    let workers = cfg.workers.min(cfg.connections);
+    let chunk = cfg.connections.div_ceil(workers);
+
+    // Phase 1: open every connection, fanned across client workers.
+    let mut clients: Vec<TcpClient> = Vec::with_capacity(cfg.connections);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            joins.push(scope.spawn(move || {
+                let lo = w * chunk;
+                let hi = (lo + chunk).min(cfg.connections);
+                (lo..hi).filter_map(|_| TcpClient::connect(addr).ok()).collect::<Vec<_>>()
+            }));
+        }
+        for j in joins {
+            clients.extend(j.join().expect("c10k connect worker panicked"));
+        }
+    });
+    let connections = clients.len();
+    anyhow::ensure!(
+        connections == cfg.connections,
+        "only {connections}/{} connections opened",
+        cfg.connections
+    );
+
+    // Phase 2: the peak — every connection is open at once.
+    at_peak();
+
+    // Phase 3: pipelined submissions on every connection, then drain.
+    let mut latencies = Vec::new();
+    let mut tx_bytes = 0u64;
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for cs in clients.chunks(chunk) {
+            joins.push(scope.spawn(move || {
+                let mut pending = Vec::with_capacity(cs.len() * cfg.per_conn);
+                let mut errors = 0usize;
+                for (k, c) in cs.iter().enumerate() {
+                    for i in 0..cfg.per_conn {
+                        let img = images[(k * cfg.per_conn + i) % images.len()].clone();
+                        match c.submit(img) {
+                            Ok(rx) => pending.push(rx),
+                            Err(_) => errors += 1,
+                        }
+                    }
+                }
+                let mut latencies = Vec::with_capacity(pending.len());
+                let mut tx = 0u64;
+                let mut shed = 0usize;
+                for rx in pending {
+                    tally(rx.recv(), &mut latencies, &mut tx, &mut shed, &mut errors);
+                }
+                (latencies, tx, shed, errors)
+            }));
+        }
+        for j in joins {
+            let (l, t, s, e) = j.join().expect("c10k submit worker panicked");
+            latencies.extend(l);
+            tx_bytes += t;
+            shed += s;
+            errors += e;
+        }
+    });
+    drop(clients); // close the peak-phase connections before churning
+
+    // Phase 4: connection churn — the accept path under open/close load.
+    let mut churned = 0usize;
+    if cfg.churn > 0 {
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for w in 0..workers {
+                joins.push(scope.spawn(move || {
+                    let share = cfg.churn / workers + usize::from(w < cfg.churn % workers);
+                    let mut ok = 0usize;
+                    for i in 0..share {
+                        let Ok(c) = TcpClient::connect(addr) else { continue };
+                        let img = images[(w + i) % images.len()].clone();
+                        if let Ok(rx) = c.submit(img) {
+                            if matches!(rx.recv(), Ok(Ok(_))) {
+                                ok += 1;
+                            }
+                        }
+                    }
+                    ok
+                }));
+            }
+            for j in joins {
+                churned += j.join().expect("c10k churn worker panicked");
+            }
+        });
+    }
+
+    // Phase 5: slow reader — the front-end must tolerate a client that
+    // drains its response one byte at a time.
+    let slow_ok = !cfg.slow || slow_reader(addr, &images[0]).is_ok();
+
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let n = connections * cfg.per_conn;
+    let load = LoadReport {
+        offered_rps: n as f64 / wall,
+        achieved_rps: latencies.len() as f64 / wall,
+        requests: n,
+        completed: latencies.len(),
+        shed,
+        errors,
+        tx_bytes,
+        latencies,
+    };
+    Ok(C10kReport { load, connections, churned, slow_ok })
+}
+
+/// Slowloris-style check over a raw socket: submit one frame, then read
+/// the response byte-by-byte with a delay. Succeeds iff the full frame
+/// arrives and decodes to a terminal outcome.
+fn slow_reader(addr: std::net::SocketAddr, image: &[f32]) -> Result<()> {
+    use super::net::{decode_response, decode_response_header, encode_request, RESP_HEADER_BYTES};
+    use std::io::Write;
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.write_all(&encode_request(image)?)?;
+    let mut hdr = [0u8; RESP_HEADER_BYTES];
+    read_slowly(&mut s, &mut hdr)?;
+    let (status, body_len) = decode_response_header(&hdr)?;
+    anyhow::ensure!(body_len < 1 << 20, "implausible response body ({body_len} B)");
+    let mut body = vec![0u8; body_len];
+    read_slowly(&mut s, &mut body)?;
+    decode_response(status, &body)?;
+    Ok(())
+}
+
+fn read_slowly(s: &mut std::net::TcpStream, buf: &mut [u8]) -> Result<()> {
+    use std::io::Read;
+    for i in 0..buf.len() {
+        s.read_exact(&mut buf[i..i + 1])?;
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    Ok(())
+}
+
 /// Render the static-vs-adaptive comparison: one row per serving
 /// configuration replayed over the identical (schedule, bandwidth-trace)
 /// pair. Rows are `(name, report, plan_switches, mid_batch_swaps)`.
@@ -421,6 +620,57 @@ pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::AdmissionPolicy;
+    use crate::coordinator::server::{ResponseReceiver, ShedInfo};
+
+    /// A transportless stub: every submission is answered immediately
+    /// (as shed, so no `InferenceResult` needs fabricating).
+    struct InstantClient;
+
+    impl Client for InstantClient {
+        fn submit(&self, _image: Vec<f32>) -> Result<ResponseReceiver> {
+            let (tx, rx) = mpsc::channel();
+            tx.send(Ok(Outcome::Shed(ShedInfo {
+                policy: AdmissionPolicy::Block,
+                queue_depth: 0,
+                waited: Duration::ZERO,
+            })))
+            .unwrap();
+            Ok(rx)
+        }
+    }
+
+    #[test]
+    fn degenerate_schedules_report_finite_offered_rps() {
+        let images = vec![vec![0.0f32; 4]];
+        // single arrival at t=0: the schedule span is zero, which used
+        // to divide to `inf` and poison every aggregated report
+        let single = [Arrival { at: Duration::ZERO, image: 0 }];
+        let r = replay(&InstantClient, &images, &single).unwrap();
+        assert!(r.offered_rps.is_finite(), "offered_rps = {}", r.offered_rps);
+        assert!(r.offered_rps > 0.0);
+        assert!(r.fully_accounted());
+
+        // every arrival at t=0 — same zero span, more requests
+        let burst: Vec<Arrival> =
+            (0..5).map(|_| Arrival { at: Duration::ZERO, image: 0 }).collect();
+        let r = replay(&InstantClient, &images, &burst).unwrap();
+        assert!(r.offered_rps.is_finite(), "offered_rps = {}", r.offered_rps);
+        assert_eq!(r.requests, 5);
+        assert!(r.fully_accounted());
+
+        // empty schedule: zero everything, still finite
+        let r = replay(&InstantClient, &images, &[]).unwrap();
+        assert!(r.offered_rps.is_finite(), "offered_rps = {}", r.offered_rps);
+        assert_eq!(r.requests, 0);
+    }
+
+    #[test]
+    fn c10k_config_defaults_hit_the_acceptance_floor() {
+        let cfg = C10kConfig::default();
+        assert!(cfg.connections >= 1024, "C10K means ≥ 1024 concurrent connections");
+        assert!(cfg.per_conn >= 1 && cfg.workers >= 1);
+    }
 
     #[test]
     fn schedule_is_sorted_and_deterministic() {

@@ -126,6 +126,13 @@ pub struct ServingStats {
     /// TCP front-end: frames refused with a typed error response (bad
     /// magic, oversized, structurally invalid).
     pub tcp_frame_rejects: u64,
+    /// TCP front-end: request frames accepted into the admission queue.
+    pub tcp_requests: u64,
+    /// TCP front-end: terminal outcomes of admitted requests written
+    /// back to their client in full. When no client disconnects, a
+    /// drained front-end ends with `tcp_responses == tcp_requests` —
+    /// the wire-level exactly-once invariant.
+    pub tcp_responses: u64,
 }
 
 impl ServingStats {
@@ -213,7 +220,8 @@ impl ServingStats {
              adaptive est={:.2}Mbps rtt={:.1}ms active=p{} switches={} \
              mid_batch_swaps={}  plans: [{}]\n\
              pool   hits={} misses={} hit_rate={:.1}% reused={} bytes\n\
-             tcp    accepted={} active={} read_errors={} frame_rejects={}\n\
+             tcp    accepted={} active={} read_errors={} frame_rejects={} \
+             requests={} responses={}\n\
              tx_total={} bytes",
             self.requests,
             self.shed,
@@ -248,6 +256,8 @@ impl ServingStats {
             self.tcp_active,
             self.tcp_read_errors,
             self.tcp_frame_rejects,
+            self.tcp_requests,
+            self.tcp_responses,
             self.tx_bytes_total,
         )
     }
@@ -355,10 +365,13 @@ mod tests {
         s.tcp_active = 1;
         s.tcp_read_errors = 2;
         s.tcp_frame_rejects = 3;
+        s.tcp_requests = 9;
+        s.tcp_responses = 9;
         let r = s.report();
         assert!(r.contains("accepted=4"), "{r}");
         assert!(r.contains("read_errors=2"), "{r}");
         assert!(r.contains("frame_rejects=3"), "{r}");
+        assert!(r.contains("requests=9 responses=9"), "{r}");
     }
 
     #[test]

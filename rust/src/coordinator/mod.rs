@@ -23,7 +23,10 @@
 //! plane (size-classed buffer pool + in-place packing + scatter-gather
 //! framing) lives in [`bufpool`], [`protocol`], and [`link`]; the TCP
 //! front-end bridging real client sockets into the admission queue
-//! (binary frames in, exactly-once responses out) lives in [`net`].
+//! (binary frames in, exactly-once responses out) lives in [`net`],
+//! with its default single-thread readiness event loop (`epoll(7)` on
+//! Linux, `poll(2)` elsewhere) in the private `reactor` module and the
+//! thread-per-connection oracle selectable via [`IoModel`].
 
 pub mod adaptive;
 pub mod bufpool;
@@ -34,6 +37,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod net;
 pub mod protocol;
+mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod testkit;
@@ -46,11 +50,12 @@ pub use cloud::CloudWorker;
 pub use edge::{EdgeSpec, EdgeWorker};
 pub use link::{DelayMode, Link, Segments, SgTransfer, Transfer, WireFormat};
 pub use loadgen::{
-    adaptive_table, closed_loop, mixed_workload, poisson_schedule, policy_table, replay,
-    replay_traced, run_mixed, Arrival, LoadReport, MixedReport, MixedWorkload,
+    adaptive_table, c10k_tcp, closed_loop, mixed_workload, poisson_schedule, policy_table, replay,
+    replay_traced, run_mixed, Arrival, C10kConfig, C10kReport, LoadReport, MixedReport,
+    MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
-pub use net::{NetConfig, NetError, NetStats, TcpClient, TcpFrontend};
+pub use net::{IoModel, NetConfig, NetError, NetStats, TcpClient, TcpFrontend};
 pub use protocol::{ActivationPacket, ActivationView, FrameError, PacketHeader, TX_HEADER_BYTES};
 pub use scheduler::{
     AdmissionPolicy, AdmissionQueue, BatchCost, CostPrior, RoutePolicy, SchedulerConfig,

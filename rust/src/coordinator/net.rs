@@ -4,19 +4,24 @@
 //! rides plain sockets with binary framing — an in-memory link is not a
 //! credible serving boundary. This module is that edge of the system:
 //!
-//! * [`TcpFrontend`] — a listener whose per-connection reader threads
-//!   assemble length-delimited request frames (handling short/partial
-//!   reads, rejecting garbage preambles and oversized or truncated
-//!   frames with a **typed error response**), decode them into images,
-//!   and feed the existing [`Server`] admission queue exactly like
-//!   in-process clients. A per-connection writer thread streams the
-//!   terminal [`Outcome`] of every admitted request back as a binary
-//!   response frame, in submission order, so the pipeline's exactly-once
-//!   answered-or-shed contract survives client disconnects: an admitted
-//!   request is always answered by the server (the write is simply
-//!   dropped if the client is gone), and a frame that never finished
-//!   arriving is never submitted (its pooled buffer goes back on the
-//!   shelf).
+//! * [`TcpFrontend`] — a listener serving length-delimited request
+//!   frames (handling short/partial reads, rejecting garbage preambles
+//!   and oversized or truncated frames with a **typed error response**),
+//!   decoding them into images, and feeding the existing [`Server`]
+//!   admission queue exactly like in-process clients. Two
+//!   interchangeable I/O models drive it ([`IoModel`]):
+//!   [`IoModel::Reactor`] (default) multiplexes every connection onto
+//!   ONE readiness-driven event-loop thread (`epoll`/`poll`, see the
+//!   `reactor` module) so the front-end's thread count is O(shards +
+//!   edge workers) — the C10K shape; [`IoModel::Threads`] keeps PR 5's
+//!   blocking reader/writer thread pair per connection as the wire-
+//!   parity oracle. Both stream the terminal [`Outcome`] of every
+//!   admitted request back in submission order, so the pipeline's
+//!   exactly-once answered-or-shed contract survives client
+//!   disconnects: an admitted request is always answered by the server
+//!   (the write is simply dropped if the client is gone), and a frame
+//!   that never finished arriving is never submitted (its pooled
+//!   buffer goes back on the shelf).
 //! * [`TcpClient`] — the matching client: pipelined submissions over one
 //!   connection, a reader thread that resolves responses FIFO onto the
 //!   same [`ResponseReceiver`] channels the in-process [`Server`] hands
@@ -62,6 +67,39 @@ const ST_DONE: u8 = 0;
 const ST_SHED: u8 = 1;
 const ST_ERROR: u8 = 2;
 
+/// Which I/O engine drives the front-end's sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoModel {
+    /// One readiness-driven event-loop thread for all connections
+    /// (`epoll` on Linux, `poll(2)` elsewhere). Thread count is
+    /// O(shards + edge workers), independent of connection count.
+    #[default]
+    Reactor,
+    /// PR 5's blocking model: a reader and a writer thread per accepted
+    /// connection. Kept as the bit-parity oracle for the reactor.
+    Threads,
+}
+
+impl IoModel {
+    /// Parse a `--io-model` flag value.
+    pub fn parse(s: &str) -> Option<IoModel> {
+        match s {
+            "reactor" => Some(IoModel::Reactor),
+            "threads" => Some(IoModel::Threads),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for IoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoModel::Reactor => write!(f, "reactor"),
+            IoModel::Threads => write!(f, "threads"),
+        }
+    }
+}
+
 /// Front-end tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct NetConfig {
@@ -69,14 +107,20 @@ pub struct NetConfig {
     /// announcing more is rejected with [`NetError::Oversized`] before
     /// any buffer is sized for it.
     pub max_payload: usize,
-    /// Read-timeout granularity: how often a blocked reader rechecks the
-    /// shutdown flag.
+    /// Read-timeout granularity: how often a blocked reader (threads) or
+    /// an idle poller wait (reactor) rechecks the shutdown flag.
     pub io_tick: Duration,
+    /// Socket-driving engine; see [`IoModel`].
+    pub io_model: IoModel,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        NetConfig { max_payload: 16 << 20, io_tick: Duration::from_millis(50) }
+        NetConfig {
+            max_payload: 16 << 20,
+            io_tick: Duration::from_millis(50),
+            io_model: IoModel::default(),
+        }
     }
 }
 
@@ -144,14 +188,16 @@ pub struct NetStats {
     pub responses: u64,
 }
 
+/// Shared counter cells behind [`NetStats`]; the reactor module bumps
+/// these directly, so the fields are crate-visible.
 #[derive(Default)]
-struct NetCounters {
-    accepted: AtomicU64,
-    active: AtomicU64,
-    read_errors: AtomicU64,
-    frame_rejects: AtomicU64,
-    requests: AtomicU64,
-    responses: AtomicU64,
+pub(crate) struct NetCounters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) active: AtomicU64,
+    pub(crate) read_errors: AtomicU64,
+    pub(crate) frame_rejects: AtomicU64,
+    pub(crate) requests: AtomicU64,
+    pub(crate) responses: AtomicU64,
 }
 
 impl NetCounters {
@@ -474,6 +520,9 @@ pub struct TcpFrontend {
     accept: Option<std::thread::JoinHandle<()>>,
     conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     counters: Arc<NetCounters>,
+    /// Present in reactor mode: rings the event loop so it notices the
+    /// stop flag without waiting out an idle poll tick.
+    waker: Option<Arc<super::reactor::WakeHandle>>,
 }
 
 impl TcpFrontend {
@@ -496,16 +545,32 @@ impl TcpFrontend {
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
         let counters = Arc::new(NetCounters::default());
-        let accept = {
-            let server = server.clone();
-            let stop = stop.clone();
-            let conns = conns.clone();
-            let counters = counters.clone();
-            std::thread::Builder::new()
-                .name("tcp-accept".into())
-                .spawn(move || accept_loop(listener, server, cfg, stop, conns, counters))?
+        let mut waker = None;
+        let accept = match cfg.io_model {
+            IoModel::Threads => {
+                let server = server.clone();
+                let stop = stop.clone();
+                let conns = conns.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new()
+                    .name("tcp-accept".into())
+                    .spawn(move || accept_loop(listener, server, cfg, stop, conns, counters))?
+            }
+            IoModel::Reactor => {
+                let (wake, wake_rx) = super::reactor::wake_channel()?;
+                let wake = Arc::new(wake);
+                waker = Some(wake.clone());
+                let server = server.clone();
+                let stop = stop.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new().name("tcp-reactor".into()).spawn(move || {
+                    super::reactor::run_reactor(
+                        listener, server, cfg, stop, counters, wake, wake_rx,
+                    )
+                })?
+            }
         };
-        Ok(TcpFrontend { server, local, stop, accept: Some(accept), conns, counters })
+        Ok(TcpFrontend { server, local, stop, accept: Some(accept), conns, counters, waker })
     }
 
     /// The bound address (port resolved when binding to port 0).
@@ -526,6 +591,8 @@ impl TcpFrontend {
         s.tcp_active = n.active;
         s.tcp_read_errors = n.read_errors;
         s.tcp_frame_rejects = n.frame_rejects;
+        s.tcp_requests = n.requests;
+        s.tcp_responses = n.responses;
         s
     }
 
@@ -539,6 +606,9 @@ impl TcpFrontend {
 
     fn halt(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        if let Some(w) = &self.waker {
+            w.wake(); // pull the reactor out of its poll wait now
+        }
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -601,6 +671,12 @@ fn conn_thread(
     stop: Arc<AtomicBool>,
     counters: Arc<NetCounters>,
 ) {
+    // On some platforms an accepted socket inherits the listener's
+    // nonblocking flag; blocking reads would then surface as an endless
+    // `WouldBlock` retry loop in `read_full` — a 100% CPU busy-spin.
+    // The threaded model is built on blocking reads with a read
+    // timeout, so pin the mode explicitly.
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(cfg.io_tick));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));

@@ -1,0 +1,930 @@
+//! Readiness-driven TCP front-end: one event-loop thread for every
+//! connection (the C10K shape), replacing PR 5's two-threads-per-socket
+//! model as the default `--io-model`.
+//!
+//! The paper's serving story assumes "a large number of low-power
+//! devices" fanning into one split-serving endpoint; a thread pair per
+//! device caps that fan-in at tens of clients. Here the accepted sockets
+//! are nonblocking and registered with `epoll(7)` (direct `extern "C"`
+//! declarations — the build is offline, no crates; non-Linux targets
+//! fall back to `poll(2)` behind the same [`Poller`] surface). Each
+//! connection is a small state machine:
+//!
+//! ```text
+//! reading header ──► reading payload (pooled buffer) ──► submit
+//!        ▲                                                 │
+//!        └───────── writing queued response frames ◄───────┘
+//! ```
+//!
+//! driven entirely by readiness events on ONE reactor thread, so the
+//! front-end's thread count is O(shards + edge workers), not
+//! O(connections).
+//!
+//! Completed [`Outcome`]s are produced on pipeline threads; each request
+//! carries a [`Responder`] hook that sends a `(conn, seq)`-tagged
+//! [`Completion`] back over a channel and rings the reactor's wakeup
+//! pipe. The reactor slots completions into the connection's pending
+//! queue, which is drained strictly head-first — writes always go out in
+//! submission order, exactly like the threaded path's FIFO writer, and
+//! the exactly-once answered-or-shed contract holds verbatim (an
+//! admitted frame is always answered; a frame that never finished
+//! arriving is never submitted and its pooled buffer goes back on the
+//! shelf).
+//!
+//! Backpressure note: under `Block` admission, `submit_with` can block
+//! the reactor thread while the queue is full. That is deliberate — the
+//! edge workers drain the queue independently, so the stall is bounded
+//! by pipeline progress, and a blocked reactor applies exactly the
+//! back-pressure a blocked per-connection reader thread used to.
+
+use super::bufpool::BufPool;
+use super::net::{
+    decode_image, decode_request_header, write_reject, write_response, NetConfig, NetCounters,
+    NetError,
+};
+use super::protocol::TX_HEADER_BYTES;
+use super::server::{Outcome, Responder, Server};
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+pub(crate) use sys::{wake_channel, WakeHandle, WakeReader};
+use sys::{Poller, EV_READ, EV_WRITE};
+
+/// Poller token for the listening socket.
+const TOK_LISTENER: u64 = 0;
+/// Poller token for the wakeup pipe's read end.
+const TOK_WAKER: u64 = 1;
+/// First token handed to an accepted connection.
+const TOK_BASE: u64 = 2;
+
+/// How long a stopping reactor waits for in-flight responses to flush
+/// before force-closing the remaining connections (the threaded path's
+/// equivalent is its 10 s write timeout).
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// One readiness report from the platform poller.
+#[derive(Clone, Copy)]
+pub(crate) struct PollEvent {
+    token: u64,
+    readable: bool,
+    writable: bool,
+}
+
+/// A terminal outcome routed back to the reactor, tagged with the
+/// connection token and the per-connection submission sequence number.
+struct Completion {
+    conn: u64,
+    seq: u64,
+    outcome: Result<Outcome>,
+}
+
+/// Where a connection is in frame assembly.
+enum ReadState {
+    /// Collecting the fixed-size request header.
+    Header { hdr: [u8; TX_HEADER_BYTES], off: usize },
+    /// Collecting the announced payload into a pooled buffer.
+    Payload { buf: Vec<u8>, off: usize },
+    /// No more frames will be read (EOF, reject, error, or draining).
+    Closed,
+}
+
+/// One in-order unit of the connection's response queue.
+enum Slot {
+    /// Submitted to the pipeline; its completion has not arrived yet.
+    Waiting(u64),
+    /// Completed out of order — held until it reaches the queue head.
+    Ready(Result<Outcome>),
+    /// A typed frame reject (written, not counted as a response).
+    Reject(NetError),
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    read: ReadState,
+    /// Response queue in submission order; only the head is ever staged.
+    pending: VecDeque<Slot>,
+    /// The response frame currently on the wire (pooled; woff = sent).
+    wbuf: Vec<u8>,
+    woff: usize,
+    /// Does flushing `wbuf` count as an answered response? (Rejects
+    /// don't — they mirror the threaded writer's accounting.)
+    wbuf_counts: bool,
+    next_seq: u64,
+    /// Interest mask currently registered with the poller.
+    interest: u32,
+    /// A write hit a hard error — the peer is gone; close on next sweep.
+    dead: bool,
+}
+
+/// Reactor thread entry point: logs the failure reason if the event
+/// loop itself dies (individual connection errors never surface here).
+pub(crate) fn run_reactor(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    wake: Arc<WakeHandle>,
+    wake_rx: WakeReader,
+) {
+    if let Err(e) = reactor_loop(listener, server, cfg, stop, counters, wake, wake_rx) {
+        eprintln!("tcp-reactor failed: {e:#}");
+    }
+}
+
+fn reactor_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    wake: Arc<WakeHandle>,
+    wake_rx: WakeReader,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), TOK_LISTENER, EV_READ)?;
+    poller.register(wake_rx.raw_fd(), TOK_WAKER, EV_READ)?;
+    let (comp_tx, comp_rx) = mpsc::channel::<Completion>();
+    let pool = server.buf_pool();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = TOK_BASE;
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut touched: Vec<u64> = Vec::new();
+    let mut draining = false;
+    let mut drain_deadline = Instant::now();
+    let mut accepting = true;
+
+    loop {
+        if !draining && stop.load(Ordering::Relaxed) {
+            // Shutdown: stop accepting and reading, but keep the loop
+            // alive until every admitted request's response has flushed
+            // (or the drain deadline passes — a stalled client must not
+            // pin the front-end open forever).
+            draining = true;
+            drain_deadline = Instant::now() + DRAIN_DEADLINE;
+            let _ = poller.deregister(listener.as_raw_fd());
+            accepting = false;
+            for (tok, conn) in conns.iter_mut() {
+                close_read(conn, &pool);
+                touched.push(*tok);
+            }
+        }
+        if draining && (conns.is_empty() || Instant::now() > drain_deadline) {
+            break;
+        }
+
+        poller.wait(cfg.io_tick, &mut events)?;
+        for ev in events.iter().copied() {
+            match ev.token {
+                TOK_LISTENER => {
+                    if accepting {
+                        accept_ready(
+                            &listener,
+                            &mut poller,
+                            &mut conns,
+                            &mut next_token,
+                            &pool,
+                            &counters,
+                        );
+                    }
+                }
+                TOK_WAKER => wake_rx.drain(),
+                tok => {
+                    if let Some(conn) = conns.get_mut(&tok) {
+                        if ev.readable && !draining {
+                            pump_read(conn, tok, &server, &pool, &cfg, &counters, &comp_tx, &wake);
+                        }
+                        // Always try to flush: a reject staged by the
+                        // read pump has no completion to trigger it, and
+                        // a writable event is what resumes a partial
+                        // frame.
+                        let _ = ev.writable;
+                        pump_write(conn, &counters);
+                        touched.push(tok);
+                    }
+                }
+            }
+        }
+        // Slot in every completion that arrived while we slept (or that
+        // a synchronous shed produced inside pump_read above).
+        while let Ok(c) = comp_rx.try_recv() {
+            if let Some(conn) = conns.get_mut(&c.conn) {
+                resolve(conn, c.seq, c.outcome);
+                pump_write(conn, &counters);
+                touched.push(c.conn);
+            }
+        }
+        // Sweep only the connections something happened to: close the
+        // finished/dead ones, re-arm interest on the rest.
+        touched.sort_unstable();
+        touched.dedup();
+        for tok in touched.drain(..) {
+            let finished = match conns.get_mut(&tok) {
+                Some(conn) => {
+                    if conn.dead || conn_finished(conn) {
+                        true
+                    } else {
+                        update_interest(conn, &mut poller, tok);
+                        false
+                    }
+                }
+                None => false,
+            };
+            if finished {
+                if let Some(conn) = conns.remove(&tok) {
+                    close_conn(conn, &mut poller, &pool, &counters);
+                }
+            }
+        }
+    }
+
+    for (_, conn) in conns.drain() {
+        close_conn(conn, &mut poller, &pool, &counters);
+    }
+    Ok(())
+}
+
+/// Accept every connection the listener has ready (level-triggered: keep
+/// going until `WouldBlock`).
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    pool: &BufPool,
+    counters: &NetCounters,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let tok = *next_token;
+                *next_token += 1;
+                if poller.register(stream.as_raw_fd(), tok, EV_READ).is_err() {
+                    continue;
+                }
+                counters.accepted.fetch_add(1, Ordering::Relaxed);
+                counters.active.fetch_add(1, Ordering::Relaxed);
+                conns.insert(
+                    tok,
+                    Conn {
+                        stream,
+                        read: ReadState::Header { hdr: [0u8; TX_HEADER_BYTES], off: 0 },
+                        pending: VecDeque::new(),
+                        wbuf: pool.checkout(1024),
+                        woff: 0,
+                        wbuf_counts: false,
+                        next_seq: 0,
+                        interest: EV_READ,
+                        dead: false,
+                    },
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Advance the connection's frame assembly as far as the socket allows:
+/// complete payloads become submissions, complete headers size the next
+/// pooled payload buffer, and the read step pulls whatever bytes are
+/// ready. Returns on `WouldBlock` (readiness will call back), EOF, or a
+/// frame reject.
+#[allow(clippy::too_many_arguments)]
+fn pump_read(
+    conn: &mut Conn,
+    tok: u64,
+    server: &Server,
+    pool: &BufPool,
+    cfg: &NetConfig,
+    counters: &NetCounters,
+    comp_tx: &mpsc::Sender<Completion>,
+    wake: &Arc<WakeHandle>,
+) {
+    loop {
+        // 1) Payload fully assembled (incl. zero-length payloads, which
+        //    must never reach the read step — read(&mut []) returns
+        //    Ok(0) and would be mistaken for EOF).
+        if matches!(&conn.read, ReadState::Payload { buf, off } if *off == buf.len()) {
+            complete_frame(conn, tok, server, pool, counters, comp_tx, wake);
+            continue;
+        }
+        // 2) Header fully assembled: validate it and size the payload.
+        let full_hdr = match &conn.read {
+            ReadState::Header { hdr, off } if *off == TX_HEADER_BYTES => Some(*hdr),
+            _ => None,
+        };
+        if let Some(hdr) = full_hdr {
+            match decode_request_header(&hdr, cfg.max_payload) {
+                Ok(len) => {
+                    let mut buf = pool.checkout(len);
+                    buf.resize(len, 0);
+                    conn.read = ReadState::Payload { buf, off: 0 };
+                }
+                Err(e) => {
+                    counters.frame_rejects.fetch_add(1, Ordering::Relaxed);
+                    conn.pending.push_back(Slot::Reject(e));
+                    close_read(conn, pool);
+                    return;
+                }
+            }
+            continue;
+        }
+        // 3) Pull bytes into whichever buffer is partial.
+        let res = match &mut conn.read {
+            ReadState::Closed => return,
+            ReadState::Header { hdr, off } => match conn.stream.read(&mut hdr[*off..]) {
+                Ok(n) => {
+                    *off += n;
+                    Ok(n)
+                }
+                Err(e) => Err(e),
+            },
+            ReadState::Payload { buf, off } => match conn.stream.read(&mut buf[*off..]) {
+                Ok(n) => {
+                    *off += n;
+                    Ok(n)
+                }
+                Err(e) => Err(e),
+            },
+        };
+        match res {
+            Ok(0) => {
+                // EOF. Between frames it is a clean close; inside one it
+                // means the peer died mid-frame.
+                let clean = matches!(&conn.read, ReadState::Header { off: 0, .. });
+                if !clean {
+                    counters.read_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                close_read(conn, pool);
+                return;
+            }
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                counters.read_errors.fetch_add(1, Ordering::Relaxed);
+                close_read(conn, pool);
+                return;
+            }
+        }
+    }
+}
+
+/// A request frame finished arriving: decode it, recycle the pooled
+/// payload buffer, and submit with a completion hook that routes the
+/// outcome back to this reactor tagged `(conn, seq)`.
+fn complete_frame(
+    conn: &mut Conn,
+    tok: u64,
+    server: &Server,
+    pool: &BufPool,
+    counters: &NetCounters,
+    comp_tx: &mpsc::Sender<Completion>,
+    wake: &Arc<WakeHandle>,
+) {
+    let state = std::mem::replace(
+        &mut conn.read,
+        ReadState::Header { hdr: [0u8; TX_HEADER_BYTES], off: 0 },
+    );
+    let ReadState::Payload { buf, .. } = state else {
+        return;
+    };
+    let image = decode_image(&buf);
+    pool.checkin(buf);
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    let responder = {
+        let comp_tx = comp_tx.clone();
+        let wake = wake.clone();
+        Responder::new(move |outcome| {
+            let _ = comp_tx.send(Completion { conn: tok, seq, outcome });
+            wake.wake();
+        })
+    };
+    match server.submit_with(image, responder) {
+        Ok(()) => {
+            counters.requests.fetch_add(1, Ordering::Relaxed);
+            conn.pending.push_back(Slot::Waiting(seq));
+        }
+        Err(e) => {
+            // Admission queue closed (server stopping): typed reject,
+            // then no more frames off this socket.
+            conn.pending.push_back(Slot::Reject(NetError::Server(format!("{e:#}"))));
+            close_read(conn, pool);
+        }
+    }
+}
+
+/// Stop reading this connection, recycling a half-read payload buffer.
+fn close_read(conn: &mut Conn, pool: &BufPool) {
+    let state = std::mem::replace(&mut conn.read, ReadState::Closed);
+    if let ReadState::Payload { buf, .. } = state {
+        pool.checkin(buf);
+    }
+}
+
+/// Slot a completion into the connection's pending queue. The sequence
+/// tag finds the right slot even though the pipeline completes requests
+/// out of order; an unknown sequence (already force-closed) is ignored.
+fn resolve(conn: &mut Conn, seq: u64, outcome: Result<Outcome>) {
+    if let Some(slot) =
+        conn.pending.iter_mut().find(|s| matches!(s, Slot::Waiting(w) if *w == seq))
+    {
+        *slot = Slot::Ready(outcome);
+    }
+}
+
+/// Flush the staged response frame and stage follow-ups while the head
+/// of the pending queue is terminal — writes leave strictly in
+/// submission order. Returns on `WouldBlock` (a writable event resumes),
+/// when the head is still `Waiting`, or when the queue is empty.
+fn pump_write(conn: &mut Conn, counters: &NetCounters) {
+    if conn.dead {
+        return;
+    }
+    loop {
+        while conn.woff < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.woff..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(n) => conn.woff += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // Peer is gone. The server still answers every
+                    // admitted request exactly once — the write is
+                    // simply dropped, same as the threaded path.
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        if conn.woff > 0 {
+            if conn.wbuf_counts {
+                counters.responses.fetch_add(1, Ordering::Relaxed);
+            }
+            conn.wbuf.clear();
+            conn.woff = 0;
+            conn.wbuf_counts = false;
+        }
+        let head_terminal =
+            matches!(conn.pending.front(), Some(Slot::Ready(_)) | Some(Slot::Reject(_)));
+        if !head_terminal {
+            return;
+        }
+        match conn.pending.pop_front() {
+            Some(Slot::Ready(outcome)) => {
+                write_response(&mut conn.wbuf, &outcome);
+                conn.wbuf_counts = true;
+            }
+            Some(Slot::Reject(err)) => {
+                write_reject(&mut conn.wbuf, &err);
+                conn.wbuf_counts = false;
+            }
+            _ => return,
+        }
+    }
+}
+
+/// A connection is finished once no more frames will arrive, every
+/// submission has been answered, and the last frame has flushed.
+fn conn_finished(conn: &Conn) -> bool {
+    matches!(conn.read, ReadState::Closed)
+        && conn.pending.is_empty()
+        && conn.woff >= conn.wbuf.len()
+}
+
+/// Re-register the interest mask the connection's state actually needs
+/// (level-triggered pollers busy-wake on interests you no longer have —
+/// most importantly EV_READ after EOF).
+fn update_interest(conn: &mut Conn, poller: &mut Poller, tok: u64) {
+    let mut want = 0u32;
+    if !matches!(conn.read, ReadState::Closed) {
+        want |= EV_READ;
+    }
+    let write_pending = conn.woff < conn.wbuf.len()
+        || matches!(conn.pending.front(), Some(Slot::Ready(_)) | Some(Slot::Reject(_)));
+    if write_pending {
+        want |= EV_WRITE;
+    }
+    if want != conn.interest && poller.modify(conn.stream.as_raw_fd(), tok, want).is_ok() {
+        conn.interest = want;
+    }
+}
+
+/// Tear a connection down: deregister, recycle its pooled buffers,
+/// shut the socket.
+fn close_conn(mut conn: Conn, poller: &mut Poller, pool: &BufPool, counters: &NetCounters) {
+    let _ = poller.deregister(conn.stream.as_raw_fd());
+    close_read(&mut conn, pool);
+    pool.checkin(std::mem::take(&mut conn.wbuf));
+    let _ = conn.stream.shutdown(Shutdown::Both);
+    counters.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// platform pollers
+// ---------------------------------------------------------------------
+
+/// `epoll(7)` — the Linux reactor backbone. Level-triggered on purpose:
+/// the pumps re-run until `WouldBlock`, so edge-vs-level subtleties
+/// (starved wakeups after partial drains) cannot arise.
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::PollEvent;
+    use anyhow::{bail, Result};
+    use std::os::fd::RawFd;
+    use std::time::Duration;
+
+    pub const EV_READ: u32 = 0x001; // EPOLLIN
+    pub const EV_WRITE: u32 = 0x004; // EPOLLOUT
+    const EV_ERR: u32 = 0x008; // EPOLLERR (always reported)
+    const EV_HUP: u32 = 0x010; // EPOLLHUP (always reported)
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o200_0000;
+    const O_NONBLOCK: i32 = 0o4000;
+    const O_CLOEXEC: i32 = 0o200_0000;
+
+    /// Mirrors the kernel's `struct epoll_event`; packed on x86-64 (the
+    /// one ABI where the kernel declares it so). Fields are only ever
+    /// copied out by value — never referenced — because references into
+    /// a packed struct are undefined alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn pipe2(fds: *mut i32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    pub struct Poller {
+        epfd: i32,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                bail!("epoll_create1 failed");
+            }
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn ctl(&mut self, op: i32, fd: RawFd, token: u64, interest: u32) -> Result<()> {
+            let mut ev = EpollEvent { events: interest, data: token };
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                bail!("epoll_ctl(op={op}, fd={fd}) failed");
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: u32) -> Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: u32) -> Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+            // The fd may already be closed/EPOLLHUP-reaped; best effort.
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let _ = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout: Duration, out: &mut Vec<PollEvent>) -> Result<()> {
+            out.clear();
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
+            };
+            // n < 0 is EINTR (or a dead epfd, surfaced elsewhere): report
+            // no events and let the loop re-poll.
+            for i in 0..n.max(0) as usize {
+                let ev = self.buf[i];
+                let events = ev.events;
+                let token = ev.data;
+                out.push(PollEvent {
+                    token,
+                    readable: events & (EV_READ | EV_ERR | EV_HUP) != 0,
+                    writable: events & (EV_WRITE | EV_ERR | EV_HUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.epfd) };
+        }
+    }
+
+    /// Write end of the wakeup pipe: any thread rings the reactor out of
+    /// `epoll_wait` by writing one byte. Nonblocking — if the pipe is
+    /// full the reactor is already scheduled to wake, so a dropped byte
+    /// is fine (level-triggering re-reports until drained).
+    pub struct WakeHandle {
+        fd: i32,
+    }
+
+    impl WakeHandle {
+        pub fn wake(&self) {
+            let b = [1u8];
+            let _ = unsafe { write(self.fd, b.as_ptr(), 1) };
+        }
+    }
+
+    impl Drop for WakeHandle {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.fd) };
+        }
+    }
+
+    /// Read end of the wakeup pipe, owned by the reactor.
+    pub struct WakeReader {
+        fd: i32,
+    }
+
+    impl WakeReader {
+        pub fn raw_fd(&self) -> RawFd {
+            self.fd
+        }
+
+        /// One gulp per readiness report; level-triggering re-arms if
+        /// more bytes remain, so there is no drain-until-empty loop to
+        /// get stuck in.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 256];
+            let _ = unsafe { read(self.fd, buf.as_mut_ptr(), buf.len()) };
+        }
+    }
+
+    impl Drop for WakeReader {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.fd) };
+        }
+    }
+
+    pub fn wake_channel() -> Result<(WakeHandle, WakeReader)> {
+        let mut fds = [0i32; 2];
+        if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
+            bail!("pipe2 failed");
+        }
+        Ok((WakeHandle { fd: fds[1] }, WakeReader { fd: fds[0] }))
+    }
+}
+
+/// `poll(2)` fallback for non-Linux Unix targets: same [`Poller`]
+/// surface, O(n) per wait instead of O(ready). The wakeup channel is a
+/// loopback TCP socketpair (pipes need platform-specific creation
+/// flags; a nonblocking loopback pair is portable std).
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use super::PollEvent;
+    use anyhow::{bail, Context, Result};
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::{AsRawFd, RawFd};
+    use std::time::Duration;
+
+    pub const EV_READ: u32 = 1;
+    pub const EV_WRITE: u32 = 2;
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+    const POLLERR: i16 = 0x8;
+    const POLLHUP: i16 = 0x10;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout_ms: i32) -> i32;
+    }
+
+    pub struct Poller {
+        entries: Vec<(RawFd, u64, u32)>,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: u32) -> Result<()> {
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: u32) -> Result<()> {
+            for e in self.entries.iter_mut() {
+                if e.0 == fd {
+                    *e = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            bail!("modify of unregistered fd {fd}")
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+            self.entries.retain(|e| e.0 != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout: Duration, out: &mut Vec<PollEvent>) -> Result<()> {
+            out.clear();
+            if self.entries.is_empty() {
+                std::thread::sleep(timeout.min(Duration::from_millis(50)));
+                return Ok(());
+            }
+            let mut fds: Vec<PollFd> = self
+                .entries
+                .iter()
+                .map(|&(fd, _tok, interest)| {
+                    let mut events = 0i16;
+                    if interest & EV_READ != 0 {
+                        events |= POLLIN;
+                    }
+                    if interest & EV_WRITE != 0 {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd, events, revents: 0 }
+                })
+                .collect();
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, ms) };
+            if n <= 0 {
+                return Ok(()); // timeout or EINTR: re-poll
+            }
+            for (pf, &(_fd, tok, _interest)) in fds.iter().zip(self.entries.iter()) {
+                let r = pf.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(PollEvent {
+                    token: tok,
+                    readable: r & (POLLIN | POLLERR | POLLHUP) != 0,
+                    writable: r & (POLLOUT | POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    pub struct WakeHandle {
+        tx: TcpStream,
+    }
+
+    impl WakeHandle {
+        pub fn wake(&self) {
+            // `Write for &TcpStream` makes the handle shareable without
+            // a lock; a full socket buffer just means the reactor is
+            // already due to wake.
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+
+    pub struct WakeReader {
+        rx: TcpStream,
+    }
+
+    impl WakeReader {
+        pub fn raw_fd(&self) -> RawFd {
+            self.rx.as_raw_fd()
+        }
+
+        pub fn drain(&self) {
+            let mut buf = [0u8; 256];
+            let _ = (&self.rx).read(&mut buf);
+        }
+    }
+
+    pub fn wake_channel() -> Result<(WakeHandle, WakeReader)> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("wake channel listener")?;
+        let addr = listener.local_addr()?;
+        let tx = TcpStream::connect(addr).context("wake channel connect")?;
+        let (rx, _) = listener.accept().context("wake channel accept")?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        let _ = tx.set_nodelay(true);
+        Ok((WakeHandle { tx }, WakeReader { rx }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        (tx, rx)
+    }
+
+    fn wait_for(
+        poller: &mut Poller,
+        events: &mut Vec<PollEvent>,
+        pred: impl Fn(&PollEvent) -> bool,
+        what: &str,
+    ) {
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            poller.wait(Duration::from_millis(20), events).unwrap();
+            if events.iter().any(&pred) {
+                return;
+            }
+            assert!(Instant::now() < deadline, "no {what} readiness within 2s");
+        }
+    }
+
+    #[test]
+    fn poller_reports_readable_with_the_registered_token() {
+        let (mut tx, rx) = loopback_pair();
+        rx.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(rx.as_raw_fd(), 7, EV_READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(Duration::from_millis(10), &mut events).unwrap();
+        assert!(!events.iter().any(|e| e.token == 7 && e.readable), "no data yet");
+
+        tx.write_all(&[42]).unwrap();
+        wait_for(&mut poller, &mut events, |e| e.token == 7 && e.readable, "read");
+    }
+
+    #[test]
+    fn poller_reports_writable_only_when_asked() {
+        let (_tx, rx) = loopback_pair();
+        rx.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(rx.as_raw_fd(), 9, EV_READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(Duration::from_millis(10), &mut events).unwrap();
+        assert!(
+            !events.iter().any(|e| e.token == 9),
+            "an idle socket with read-only interest reports nothing"
+        );
+
+        poller.modify(rx.as_raw_fd(), 9, EV_READ | EV_WRITE).unwrap();
+        wait_for(&mut poller, &mut events, |e| e.token == 9 && e.writable, "write");
+
+        poller.deregister(rx.as_raw_fd()).unwrap();
+        poller.wait(Duration::from_millis(10), &mut events).unwrap();
+        assert!(!events.iter().any(|e| e.token == 9), "deregistered fd still reported");
+    }
+
+    #[test]
+    fn waker_crosses_threads_and_drains() {
+        let (wake, wake_rx) = wake_channel().unwrap();
+        let wake = Arc::new(wake);
+        let mut poller = Poller::new().unwrap();
+        poller.register(wake_rx.raw_fd(), TOK_WAKER, EV_READ).unwrap();
+
+        let w = wake.clone();
+        let t = std::thread::spawn(move || w.wake());
+
+        let mut events = Vec::new();
+        wait_for(&mut poller, &mut events, |e| e.token == TOK_WAKER && e.readable, "waker");
+        wake_rx.drain();
+        t.join().unwrap();
+    }
+}

@@ -245,6 +245,47 @@ impl Outcome {
 /// The response half a client holds after [`Server::submit`].
 pub type ResponseReceiver = mpsc::Receiver<Result<Outcome>>;
 
+/// Caller-supplied completion hook for one submitted request, invoked
+/// with the request's single terminal outcome. [`Server::submit`] wraps a
+/// plain channel sender in one; the reactor front-end instead routes
+/// every completion into a shared tagged channel plus a wakeup pipe, so
+/// one event-loop thread can serve thousands of connections without a
+/// per-request blocking receive. Dropping a `Responder` unanswered (a
+/// pipeline thread died mid-request) delivers the same terminal error a
+/// dropped channel sender used to, keeping the exactly-once contract.
+pub(crate) struct Responder(Option<Box<dyn FnOnce(Result<Outcome>) + Send>>);
+
+impl Responder {
+    pub(crate) fn new<F>(f: F) -> Responder
+    where
+        F: FnOnce(Result<Outcome>) + Send + 'static,
+    {
+        Responder(Some(Box::new(f)))
+    }
+
+    /// Deliver the terminal outcome (consumes the hook).
+    pub(crate) fn answer(mut self, out: Result<Outcome>) {
+        if let Some(f) = self.0.take() {
+            f(out);
+        }
+    }
+
+    /// Discard the hook without delivering anything — only for requests
+    /// that never entered the pipeline (the submit call itself errored,
+    /// which is the caller's answer).
+    fn disarm(mut self) {
+        self.0.take();
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(anyhow::anyhow!("pipeline dropped request")));
+        }
+    }
+}
+
 /// A serving client: anything that can submit one image and hand back a
 /// channel yielding exactly one terminal [`Outcome`] — the in-process
 /// [`Server`], or a [`super::net::TcpClient`] speaking the binary frame
@@ -270,13 +311,13 @@ impl Client for Server {
 
 struct Request {
     image: Vec<f32>,
-    resp: mpsc::Sender<Result<Outcome>>,
+    resp: Responder,
     submitted: Instant,
 }
 
 struct CloudJob {
     packet: ActivationPacket,
-    resp: mpsc::Sender<Result<Outcome>>,
+    resp: Responder,
     submitted: Instant,
     edge: Duration,
     net: Duration,
@@ -599,7 +640,23 @@ impl Server {
     /// `Block` admission this call itself blocks while the queue is full.
     pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        let req = Request { image, resp: resp_tx, submitted: Instant::now() };
+        self.submit_with(
+            image,
+            Responder::new(move |out| {
+                let _ = resp_tx.send(out);
+            }),
+        )?;
+        Ok(resp_rx)
+    }
+
+    /// Submission with a caller-provided completion hook: the pipeline
+    /// invokes `resp` with the request's single terminal outcome instead
+    /// of allocating a channel pair. The reactor front-end routes every
+    /// connection's completions through one tagged channel this way. On
+    /// `Err` (queue closed) the hook is discarded undelivered — the error
+    /// return is the answer.
+    pub(crate) fn submit_with(&self, image: Vec<f32>, resp: Responder) -> Result<()> {
+        let req = Request { image, resp, submitted: Instant::now() };
         // count the offer BEFORE enqueueing: once pushed, the pipeline can
         // complete the request concurrently, and a stats() snapshot must
         // never observe requests + shed > offered
@@ -608,12 +665,13 @@ impl Server {
             Admit::Enqueued => {}
             Admit::RefusedNewest(r) => self.shed(r),
             Admit::EvictedOldest(old) => self.shed(old),
-            Admit::Closed(_) => {
+            Admit::Closed(req) => {
                 self.stats.lock().unwrap().offered -= 1; // never entered the pipeline
+                req.resp.disarm();
                 anyhow::bail!("server stopped")
             }
         }
-        Ok(resp_rx)
+        Ok(())
     }
 
     /// Answer one request as load-shed (counted, never computed).
@@ -624,7 +682,7 @@ impl Server {
             queue_depth: self.queue.depth(),
             waited: req.submitted.elapsed(),
         };
-        let _ = req.resp.send(Ok(Outcome::Shed(info)));
+        req.resp.answer(Ok(Outcome::Shed(info)));
     }
 
     /// Current admission-queue depth.
@@ -726,7 +784,7 @@ fn abort_start(
 /// accounting is identical in both; only where the payload bytes live
 /// differs (pooled buffer moved along vs decoded copy).
 struct SentPacket {
-    resp: mpsc::Sender<Result<Outcome>>,
+    resp: Responder,
     submitted: Instant,
     edge_dt: Duration,
     packet: ActivationPacket,
@@ -739,7 +797,7 @@ struct SentPacket {
 /// One staged request on the pooled path: header by value, payload in a
 /// pooled buffer, the encoded frame header on the stack.
 struct StagedSg {
-    resp: mpsc::Sender<Result<Outcome>>,
+    resp: Responder,
     submitted: Instant,
     edge_dt: Duration,
     header: PacketHeader,
@@ -824,7 +882,7 @@ fn edge_chain_sg(
             }
             Err(e) => {
                 pool.checkin(payload);
-                let _ = req.resp.send(Err(e));
+                req.resp.answer(Err(e));
             }
         }
     }
@@ -844,7 +902,7 @@ fn edge_chain_sg(
             let msg = format!("{e:#}");
             for s in staged {
                 pool.checkin(s.payload);
-                let _ = s.resp.send(Err(anyhow::anyhow!("{msg}")));
+                s.resp.answer(Err(anyhow::anyhow!("{msg}")));
             }
             return Vec::new();
         }
@@ -886,8 +944,7 @@ fn edge_chain_owned(
     uplink: &Mutex<Uplink>,
 ) -> Vec<SentPacket> {
     let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
-    let mut staged: Vec<(mpsc::Sender<Result<Outcome>>, Instant, Duration)> =
-        Vec::with_capacity(reqs.len());
+    let mut staged: Vec<(Responder, Instant, Duration)> = Vec::with_capacity(reqs.len());
     for req in reqs {
         let work = (|| -> Result<(ActivationPacket, Duration)> {
             match (workers, cfg.mode) {
@@ -915,7 +972,7 @@ fn edge_chain_owned(
                 staged.push((req.resp, req.submitted, edge_dt));
             }
             Err(e) => {
-                let _ = req.resp.send(Err(e));
+                req.resp.answer(Err(e));
             }
         }
     }
@@ -929,7 +986,7 @@ fn edge_chain_owned(
         Err(e) => {
             let msg = format!("{e:#}");
             for (resp, _, _) in staged {
-                let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
+                resp.answer(Err(anyhow::anyhow!("{msg}")));
             }
             return Vec::new();
         }
@@ -1170,7 +1227,7 @@ fn dispatcher_thread(
             // shard is gone; answer its batch rather than dropping it
             outstanding.sub(shard, n);
             for job in lost.jobs {
-                let _ = job.resp.send(Err(anyhow::anyhow!("cloud shard {shard} unavailable")));
+                job.resp.answer(Err(anyhow::anyhow!("cloud shard {shard} unavailable")));
             }
         }
     }
@@ -1383,13 +1440,13 @@ fn shard_thread(
                     st.net.record(res.net);
                     st.cloud.record(res.cloud);
                     st.queue.record(res.queue);
-                    let _ = job.resp.send(Ok(Outcome::Done(res)));
+                    job.resp.answer(Ok(Outcome::Done(res)));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for job in sb.jobs {
-                    let _ = job.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    job.resp.answer(Err(anyhow::anyhow!("{msg}")));
                 }
             }
         }

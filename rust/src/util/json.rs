@@ -81,7 +81,13 @@ impl Json {
                 let _ = write!(out, "{b}");
             }
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no lexeme for inf/NaN; `write!("{n}")` would emit
+                // bare `inf` which our own parser (rightly) rejects. Serialize
+                // every non-finite value as null so emitted documents always
+                // re-parse.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -332,6 +338,67 @@ mod tests {
     fn string_escapes() {
         let j = Json::parse(r#""a\nb\"cA""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "a\nb\"cA");
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null_and_reparse() {
+        let j = Json::Arr(vec![
+            Json::Num(f64::INFINITY),
+            Json::Num(f64::NEG_INFINITY),
+            Json::Num(f64::NAN),
+            Json::Num(1.5),
+        ]);
+        let s = j.to_string_pretty();
+        assert!(!s.contains("inf") && !s.contains("NaN"), "bad tokens in {s}");
+        let back = Json::parse(&s).unwrap();
+        let a = back.as_arr().unwrap();
+        assert_eq!(a[0], Json::Null);
+        assert_eq!(a[1], Json::Null);
+        assert_eq!(a[2], Json::Null);
+        assert_eq!(a[3].as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn write_parse_roundtrip_over_edge_case_floats() {
+        // Property-style sweep: every emitted document must re-parse, and
+        // finite values must survive the trip exactly (f64 Display is
+        // shortest-roundtrip in Rust).
+        let cases = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            -0.1,
+            1e-308,
+            -1e-308,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::MIN,
+            1e15,
+            1e15 - 1.0,
+            -(1e15 - 1.0),
+            2.5e17,
+            f64::EPSILON,
+            std::f64::consts::PI,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        for &x in &cases {
+            let mut obj = BTreeMap::new();
+            obj.insert("v".to_string(), Json::Num(x));
+            let doc = Json::Obj(obj);
+            let s = doc.to_string_pretty();
+            let back = Json::parse(&s)
+                .unwrap_or_else(|e| panic!("{x:?} emitted unparseable JSON {s:?}: {e}"));
+            let v = back.get("v").unwrap();
+            if x.is_finite() {
+                assert_eq!(v.as_f64().unwrap(), x, "value changed through roundtrip: {s}");
+            } else {
+                assert_eq!(v, &Json::Null, "non-finite must become null: {s}");
+            }
+        }
     }
 
     #[test]

@@ -17,8 +17,8 @@ use auto_split::coordinator::net::{
     decode_response, decode_response_header, encode_request, RESP_HEADER_BYTES,
 };
 use auto_split::coordinator::{
-    poisson_schedule, reference_image, replay, write_reference_artifacts, NetConfig, Outcome,
-    RefArtifactSpec, ServeConfig, Server, TcpClient, TcpFrontend, TX_HEADER_BYTES,
+    poisson_schedule, reference_image, replay, write_reference_artifacts, IoModel, NetConfig,
+    Outcome, RefArtifactSpec, ServeConfig, Server, TcpClient, TcpFrontend, TX_HEADER_BYTES,
 };
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -291,6 +291,72 @@ fn same_schedule_over_tcp_and_inproc_agree_on_accounting_and_wire_bytes() {
     assert_eq!(stats.offered, schedule.len() as u64 + 1);
     assert_eq!(stats.requests + stats.shed, stats.offered);
     cleanup(&dir);
+}
+
+/// The default config with a specific socket engine.
+fn net_with(model: IoModel) -> NetConfig {
+    NetConfig { io_model: model, ..NetConfig::default() }
+}
+
+#[test]
+fn both_io_models_serve_identical_results_and_reassemble_split_frames() {
+    for model in [IoModel::Reactor, IoModel::Threads] {
+        let (dir, server, frontend) = start_frontend(&format!("both-{model}"), net_with(model));
+        let image = reference_image(11);
+        let inproc = server.infer(image.clone()).expect("in-process infer");
+
+        let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+        let tcp = client.submit(image.clone()).unwrap().recv().unwrap().unwrap();
+        let tcp = tcp.done().expect("tcp request served");
+        assert_eq!(tcp.logits, inproc.logits, "{model}");
+        assert_eq!(tcp.tx_bytes, inproc.tx_bytes, "{model}");
+        drop(client);
+
+        // a two-chunk split across the header boundary must reassemble
+        // under either engine
+        let frame = encode_request(&image).unwrap();
+        let mut stream = TcpStream::connect(frontend.local_addr()).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream.write_all(&frame[..TX_HEADER_BYTES - 3]).unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // force a short read
+        stream.write_all(&frame[TX_HEADER_BYTES - 3..]).unwrap();
+        let res = read_response(&mut stream).unwrap().done().expect("split frame served");
+        assert_eq!(res.logits, inproc.logits, "{model} split frame");
+        drop(stream);
+
+        let stats = frontend.shutdown();
+        assert_eq!(stats.tcp_frame_rejects, 0, "{model}");
+        assert_eq!(stats.tcp_requests, 2, "{model}");
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn shutdown_with_no_disconnects_answers_every_admitted_request_on_the_wire() {
+    // The ISSUE's observability invariant: with no client disconnects,
+    // every admitted request's terminal outcome was written back —
+    // `tcp_responses == tcp_requests` at shutdown, under both engines.
+    for model in [IoModel::Reactor, IoModel::Threads] {
+        let (dir, _server, frontend) =
+            start_frontend(&format!("invariant-{model}"), net_with(model));
+        let client = TcpClient::connect(frontend.local_addr()).unwrap();
+        let n = 24u64;
+        let rxs: Vec<_> = (0..n).map(|i| client.submit(reference_image(i % 6)).unwrap()).collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap().unwrap().done().expect("served");
+        }
+        drop(client); // clean close, after every response arrived
+
+        let stats = frontend.shutdown();
+        assert_eq!(stats.tcp_requests, n, "{model}: all frames admitted");
+        assert_eq!(
+            stats.tcp_responses, stats.tcp_requests,
+            "{model}: every admitted request answered on the wire exactly once"
+        );
+        assert_eq!(stats.tcp_read_errors, 0, "{model}");
+        assert_eq!(stats.requests + stats.shed, stats.offered, "{model}: exactly-once");
+        cleanup(&dir);
+    }
 }
 
 #[test]
