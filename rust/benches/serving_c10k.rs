@@ -223,6 +223,9 @@ fn main() {
         ("errors", Json::Num(report.load.errors as f64)),
         ("exactly_once", Json::Bool(exactly_once)),
         ("achieved_rps", Json::Num(report.load.achieved_rps)),
+        ("p50_ms", Json::Num(report.load.quantile(0.5) * 1e3)),
+        ("p99_ms", Json::Num(report.load.quantile(0.99) * 1e3)),
+        ("p999_ms", Json::Num(report.load.quantile(0.999) * 1e3)),
         ("churn_target", Json::Num(cfg.churn as f64)),
         ("churned", Json::Num(report.churned as f64)),
         ("churn_ok", Json::Bool(churn_ok)),
@@ -233,6 +236,13 @@ fn main() {
         ("oracle_service_threads", opt_num(oracle_peak.map(|(s, _)| s))),
         ("thread_bound_ok", thread_bound_ok.map(Json::Bool).unwrap_or(Json::Null)),
         ("parity_ok", Json::Bool(parity_ok)),
+        (
+            "meta",
+            auto_split::util::bench_meta(&format!(
+                "{connections} connections × {} reqs, churn {}, slowloris on",
+                cfg.per_conn, cfg.churn
+            )),
+        ),
     ]);
     let mut doc = json.to_string_pretty();
     doc.push('\n');

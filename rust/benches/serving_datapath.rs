@@ -211,9 +211,12 @@ fn main() {
         })
         .collect::<Vec<_>>()
         .join(",\n");
+    let meta = auto_split::util::bench_meta(&format!("{n} requests/mode, loopback synthetic"))
+        .to_string_pretty();
     let json = format!(
         "{{\n  \"bench\": \"datapath\",\n  \"requests\": {n},\n  \
          \"alloc_drop_pct\": {alloc_drop:.2},\n  \"bytes_drop_pct\": {bytes_drop:.2},\n  \
+         \"meta\": {meta},\n  \
          \"rows\": [\n{rows_json}\n  ]\n}}\n"
     );
     std::fs::write("BENCH_datapath.json", json).expect("write BENCH_datapath.json");

@@ -601,7 +601,7 @@ pub fn adaptive_table(title: &str, rows: &[(String, LoadReport, u64, u64)]) -> S
 pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
     let mut t = Table::new(
         title,
-        &["policy", "offered rps", "achieved rps", "p50 ms", "p99 ms", "shed", "errors"],
+        &["policy", "offered rps", "achieved rps", "p50 ms", "p99 ms", "p99.9 ms", "shed", "errors"],
     );
     for (name, r) in rows {
         t.row(&[
@@ -610,6 +610,7 @@ pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
             format!("{:.0}", r.achieved_rps),
             format!("{:.2}", r.quantile(0.5) * 1e3),
             format!("{:.2}", r.quantile(0.99) * 1e3),
+            format!("{:.2}", r.quantile(0.999) * 1e3),
             format!("{} ({:.0}%)", r.shed, 100.0 * r.shed_rate()),
             r.errors.to_string(),
         ]);

@@ -1,5 +1,10 @@
 //! Serving metrics: latency histograms (log-bucketed) + throughput.
+//!
+//! The request path no longer mutates these under a mutex — the atomic
+//! [`super::obsv::ServingRegistry`] is the write side, and a
+//! [`ServingStats`] is assembled from its snapshot at read time.
 
+use crate::util::Json;
 use std::time::Duration;
 
 /// Log-scale latency histogram from 1 µs to ~100 s.
@@ -23,12 +28,49 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn record(&mut self, d: Duration) {
-        let s = d.as_secs_f64().max(1e-9);
+        self.record_n(d.as_secs_f64(), 1);
+    }
+
+    /// Record a duration given in seconds. NaN is ignored (an undefined
+    /// sample must not shift quantiles), negatives clamp to the floor
+    /// bucket, +inf clamps to the top bucket.
+    pub fn record_secs(&mut self, s: f64) {
+        self.record_n(s, 1);
+    }
+
+    /// Bulk record: `n` samples of `seconds` in one bucket update (how
+    /// an atomic registry histogram re-layers onto this legacy shape).
+    pub fn record_n(&mut self, seconds: f64, n: u64) {
+        if seconds.is_nan() || n == 0 {
+            return;
+        }
+        let s = seconds.clamp(1e-9, f64::MAX);
         let idx = (((s.log10() - LOG_MIN) * PER_DECADE) as isize).clamp(0, BUCKETS as isize - 1);
-        self.buckets[idx as usize] += 1;
-        self.count += 1;
-        self.sum_s += s;
+        self.buckets[idx as usize] += n;
+        self.count += n;
+        self.sum_s += s * n as f64;
         self.max_s = self.max_s.max(s);
+    }
+
+    /// Replace the exact moments after a bucket-level reconstruction
+    /// (`record_n` charges bucket-midpoint values; the registry knows
+    /// the true sum/max and restores them here).
+    pub(crate) fn set_exact_moments(&mut self, sum_s: f64, max_s: f64) {
+        if self.count > 0 {
+            self.sum_s = sum_s;
+            self.max_s = max_s;
+        }
+    }
+
+    /// Bucket-wise merge (associative and commutative — the bucket
+    /// layout is a compile-time constant).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.max_s = self.max_s.max(other.max_s);
     }
 
     pub fn count(&self) -> u64 {
@@ -49,18 +91,43 @@ impl LatencyHistogram {
 
     /// Approximate quantile from the log buckets (bucket upper edge).
     pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_opt(q).unwrap_or(0.0)
+    }
+
+    /// Quantile that distinguishes "no samples" from "zero latency":
+    /// `None` when empty, so JSON emitters can write `null` instead of
+    /// a fake `0`.
+    pub fn quantile_opt(&self, q: f64) -> Option<f64> {
         if self.count == 0 {
-            return 0.0;
+            return None;
         }
         let target = (q * self.count as f64).ceil() as u64;
         let mut acc = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return 10f64.powf(LOG_MIN + (i as f64 + 1.0) / PER_DECADE);
+                return Some(10f64.powf(LOG_MIN + (i as f64 + 1.0) / PER_DECADE));
             }
         }
-        self.max_s
+        Some(self.max_s)
+    }
+
+    /// Summary object for JSON export: `null` quantiles when empty.
+    pub fn to_json(&self) -> Json {
+        let q = |q: f64| self.quantile_opt(q).map(|v| Json::Num(v * 1e3)).unwrap_or(Json::Null);
+        Json::Obj(
+            [
+                ("count".to_string(), Json::Num(self.count as f64)),
+                ("mean_ms".to_string(), Json::Num(self.mean() * 1e3)),
+                ("max_ms".to_string(), Json::Num(self.max_s * 1e3)),
+                ("p50_ms".to_string(), q(0.5)),
+                ("p95_ms".to_string(), q(0.95)),
+                ("p99_ms".to_string(), q(0.99)),
+                ("p999_ms".to_string(), q(0.999)),
+            ]
+            .into_iter()
+            .collect(),
+        )
     }
 }
 
@@ -261,6 +328,52 @@ impl ServingStats {
             self.tx_bytes_total,
         )
     }
+
+    /// Machine-readable snapshot — the body of the live `stats` frame
+    /// and the shape external scrapers consume. Empty histograms
+    /// serialize their quantiles as `null` via [`Json`].
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[u64]| Json::Arr(v.iter().map(|&n| Json::Num(n as f64)).collect());
+        Json::Obj(
+            [
+                ("requests".to_string(), Json::Num(self.requests as f64)),
+                ("offered".to_string(), Json::Num(self.offered as f64)),
+                ("shed".to_string(), Json::Num(self.shed as f64)),
+                ("batches".to_string(), Json::Num(self.batches as f64)),
+                ("wall_s".to_string(), Json::Num(self.wall_s)),
+                ("throughput_rps".to_string(), Json::Num(self.throughput())),
+                ("tx_bytes_total".to_string(), Json::Num(self.tx_bytes_total as f64)),
+                ("batch_slo_closes".to_string(), Json::Num(self.batch_slo_closes as f64)),
+                ("queue_depth".to_string(), Json::Num(self.queue_depth as f64)),
+                ("queue_peak".to_string(), Json::Num(self.queue_peak as f64)),
+                ("e2e".to_string(), self.e2e.to_json()),
+                ("edge".to_string(), self.edge.to_json()),
+                ("net".to_string(), self.net.to_json()),
+                ("cloud".to_string(), self.cloud.to_json()),
+                ("queue_wait".to_string(), self.queue.to_json()),
+                ("shard_batches".to_string(), nums(&self.shard_batches)),
+                ("shard_requests".to_string(), nums(&self.shard_requests)),
+                ("edge_requests".to_string(), nums(&self.edge_requests)),
+                ("plan_requests".to_string(), nums(&self.plan_requests)),
+                ("plan_switches".to_string(), Json::Num(self.plan_switches as f64)),
+                ("mid_batch_swaps".to_string(), Json::Num(self.mid_batch_swaps as f64)),
+                ("active_plan".to_string(), Json::Num(self.active_plan as f64)),
+                ("est_bps".to_string(), Json::Num(self.est_bps)),
+                ("est_rtt_s".to_string(), Json::Num(self.est_rtt_s)),
+                ("pool_hits".to_string(), Json::Num(self.pool_hits as f64)),
+                ("pool_misses".to_string(), Json::Num(self.pool_misses as f64)),
+                ("pool_bytes_reused".to_string(), Json::Num(self.pool_bytes_reused as f64)),
+                ("tcp_accepted".to_string(), Json::Num(self.tcp_accepted as f64)),
+                ("tcp_active".to_string(), Json::Num(self.tcp_active as f64)),
+                ("tcp_read_errors".to_string(), Json::Num(self.tcp_read_errors as f64)),
+                ("tcp_frame_rejects".to_string(), Json::Num(self.tcp_frame_rejects as f64)),
+                ("tcp_requests".to_string(), Json::Num(self.tcp_requests as f64)),
+                ("tcp_responses".to_string(), Json::Num(self.tcp_responses as f64)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +408,66 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile(0.99), 0.0);
         assert_eq!(h.mean(), 0.0);
+        assert!(h.quantile_opt(0.99).is_none(), "empty quantile must be None, not 0");
+    }
+
+    #[test]
+    fn empty_quantiles_serialize_as_null() {
+        let doc = LatencyHistogram::default().to_json().to_string_pretty();
+        assert!(doc.contains("\"p50_ms\": null"), "{doc}");
+        assert!(doc.contains("\"p999_ms\": null"), "{doc}");
+    }
+
+    #[test]
+    fn record_edge_cases_zero_negative_nan_inf() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::ZERO); // clamps to the 1ns floor bucket
+        h.record_secs(-3.0); // negative clamps to the floor bucket
+        h.record_secs(f64::NAN); // ignored entirely
+        h.record_secs(f64::INFINITY); // clamps to the top bucket
+        h.record_secs(1e-12); // sub-resolution clamps to the floor bucket
+        assert_eq!(h.count(), 4, "NaN must not count");
+        assert!(h.quantile(0.5) <= 1e-6, "floor-bucket samples dominate: {}", h.quantile(0.5));
+        assert!(h.quantile(0.99) >= 1e2, "inf lands in the top bucket: {}", h.quantile(0.99));
+    }
+
+    #[test]
+    fn merge_associative_and_count_exact() {
+        let mk = |vals: &[f64]| {
+            let mut h = LatencyHistogram::default();
+            for &v in vals {
+                h.record_secs(v);
+            }
+            h
+        };
+        let (a, b, c) = (mk(&[1e-3, 5e-3]), mk(&[2e-2]), mk(&[7e-4, 0.3, 1.0]));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c.count(), 6);
+        assert_eq!(ab_c.count(), a_bc.count());
+        assert!((ab_c.mean() - a_bc.mean()).abs() < 1e-12);
+        assert_eq!(ab_c.max(), a_bc.max());
+        for q in [0.1, 0.5, 0.9, 0.999] {
+            assert_eq!(ab_c.quantile(q), a_bc.quantile(q), "quantile {q} differs");
+        }
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for _ in 0..5 {
+            a.record_secs(3e-3);
+        }
+        b.record_n(3e-3, 5);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.quantile(0.5), b.quantile(0.5));
+        assert!((a.mean() - b.mean()).abs() < 1e-12);
     }
 
     #[test]
@@ -372,6 +545,28 @@ mod tests {
         assert!(r.contains("read_errors=2"), "{r}");
         assert!(r.contains("frame_rejects=3"), "{r}");
         assert!(r.contains("requests=9 responses=9"), "{r}");
+    }
+
+    #[test]
+    fn stats_to_json_parses_and_carries_totals() {
+        let mut s = ServingStats::with_shards(2);
+        s.requests = 6;
+        s.shed = 2;
+        s.offered = 8;
+        s.shard_requests = vec![4, 2];
+        let doc = s.to_json().to_string_pretty();
+        let parsed = Json::parse(&doc).expect("stats json must parse");
+        match parsed {
+            Json::Obj(o) => {
+                assert!(matches!(o.get("requests"), Some(Json::Num(v)) if *v == 6.0));
+                assert!(matches!(o.get("offered"), Some(Json::Num(v)) if *v == 8.0));
+                match o.get("e2e") {
+                    Some(Json::Obj(h)) => assert!(matches!(h.get("p50_ms"), Some(Json::Null))),
+                    other => panic!("e2e summary missing: {other:?}"),
+                }
+            }
+            other => panic!("not an object: {other:?}"),
+        }
     }
 
     #[test]

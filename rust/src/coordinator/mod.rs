@@ -36,6 +36,7 @@ pub mod link;
 pub mod loadgen;
 pub mod metrics;
 pub mod net;
+pub mod obsv;
 pub mod protocol;
 mod reactor;
 pub mod scheduler;
@@ -55,7 +56,11 @@ pub use loadgen::{
     MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
-pub use net::{IoModel, NetConfig, NetError, NetStats, TcpClient, TcpFrontend};
+pub use net::{IoModel, NetConfig, NetError, NetStats, ReqFrame, TcpClient, TcpFrontend};
+pub use obsv::{
+    chrome_trace, Counter, CounterVec, Gauge, HistSnapshot, Histogram, ServingRegistry, SpanKind,
+    SpanRecord, SpanTag, TraceConfig, Tracer,
+};
 pub use protocol::{ActivationPacket, ActivationView, FrameError, PacketHeader, TX_HEADER_BYTES};
 pub use scheduler::{
     AdmissionPolicy, AdmissionQueue, BatchCost, CostPrior, RoutePolicy, SchedulerConfig,

@@ -42,9 +42,11 @@
 //! dies mid-read.
 
 use super::bufpool::BufPool;
+use super::metrics::ServingStats;
 use super::protocol::{PacketHeader, MAGIC, TX_HEADER_BYTES};
 use super::scheduler::AdmissionPolicy;
 use super::server::{Client, InferenceResult, Outcome, ResponseReceiver, Server, ShedInfo};
+use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -63,9 +65,18 @@ pub const RESP_HEADER_BYTES: usize = 4 + 1 + 4;
 /// Request frames announce a 32-bit-float payload.
 pub const REQ_BITS: u8 = 32;
 
+/// Sentinel `bits` value marking a **stats request** frame: same 33-byte
+/// header layout, zero-length payload. 0xFF can never be a real sample
+/// width, so old peers reject it as a typed [`NetError::BadFrame`]
+/// instead of misreading it as an image.
+pub const STATS_BITS: u8 = 0xFF;
+
 const ST_DONE: u8 = 0;
 const ST_SHED: u8 = 1;
 const ST_ERROR: u8 = 2;
+/// Response status for a stats request: the body is the registry
+/// snapshot serialized as UTF-8 JSON (`ServingStats::to_json`).
+const ST_STATS: u8 = 3;
 
 /// Which I/O engine drives the front-end's sockets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -202,13 +213,19 @@ pub(crate) struct NetCounters {
 
 impl NetCounters {
     fn snapshot(&self) -> NetStats {
+        // Read `responses` BEFORE `requests` (both SeqCst, matching the
+        // SeqCst increments): a request is counted at admission and its
+        // response later, so reading the later-written counter first
+        // guarantees a mid-run snapshot never shows responses > requests.
+        let responses = self.responses.load(Ordering::SeqCst);
+        let requests = self.requests.load(Ordering::SeqCst);
         NetStats {
             accepted: self.accepted.load(Ordering::Relaxed),
             active: self.active.load(Ordering::Relaxed),
             read_errors: self.read_errors.load(Ordering::Relaxed),
             frame_rejects: self.frame_rejects.load(Ordering::Relaxed),
-            requests: self.requests.load(Ordering::Relaxed),
-            responses: self.responses.load(Ordering::Relaxed),
+            requests,
+            responses,
         }
     }
 }
@@ -236,17 +253,45 @@ pub fn encode_request(image: &[f32]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Validate a received request-frame header and return the payload byte
-/// count it announces. Every reject reason is a typed [`NetError`].
-pub fn decode_request_header(
+/// Encode a stats request frame: a bare [`PacketHeader`] with
+/// `bits = STATS_BITS` and no payload.
+pub fn encode_stats_request() -> Result<Vec<u8>> {
+    let header = PacketHeader {
+        bits: STATS_BITS,
+        scale: 0.0,
+        zero_point: 0.0,
+        shape: [0, 0, 0, 0],
+    }
+    .encode(0)?;
+    Ok(header.to_vec())
+}
+
+/// What a decoded request-frame header asks the front-end to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqFrame {
+    /// An inference request announcing this many payload bytes.
+    Image(usize),
+    /// A live stats snapshot request (no payload).
+    Stats,
+}
+
+/// Validate a received request-frame header. Every reject reason is a
+/// typed [`NetError`].
+pub fn decode_request_frame(
     hdr: &[u8; TX_HEADER_BYTES],
     max_payload: usize,
-) -> Result<usize, NetError> {
+) -> Result<ReqFrame, NetError> {
     let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("4-byte slice"));
     if magic != MAGIC {
         return Err(NetError::BadMagic(magic));
     }
     let (h, len) = PacketHeader::decode(hdr).map_err(|e| NetError::BadFrame(format!("{e:#}")))?;
+    if h.bits == STATS_BITS {
+        if len != 0 {
+            return Err(NetError::BadFrame(format!("stats request announces {len} B payload")));
+        }
+        return Ok(ReqFrame::Stats);
+    }
     if h.bits != REQ_BITS {
         return Err(NetError::BadFrame(format!(
             "request bits {} (want {REQ_BITS}-bit float images)",
@@ -259,7 +304,20 @@ pub fn decode_request_header(
     if len % 4 != 0 {
         return Err(NetError::BadFrame(format!("payload {len} B is not a whole f32 count")));
     }
-    Ok(len)
+    Ok(ReqFrame::Image(len))
+}
+
+/// Validate an **image** request-frame header and return the payload
+/// byte count it announces (the pre-stats-frame entry point, kept for
+/// callers that never speak the stats extension).
+pub fn decode_request_header(
+    hdr: &[u8; TX_HEADER_BYTES],
+    max_payload: usize,
+) -> Result<usize, NetError> {
+    match decode_request_frame(hdr, max_payload)? {
+        ReqFrame::Image(len) => Ok(len),
+        ReqFrame::Stats => Err(NetError::BadFrame("stats frame on an image-only path".into())),
+    }
 }
 
 /// Decode a request payload into the image the pipeline consumes.
@@ -337,6 +395,37 @@ pub fn write_response(out: &mut Vec<u8>, outcome: &Result<Outcome>) {
         }
     }
     patch_body_len(out);
+}
+
+/// Serialize a stats response into `out` (cleared first): the snapshot
+/// JSON text as the frame body under `ST_STATS`.
+pub fn write_stats_response(out: &mut Vec<u8>, json: &str) {
+    out.clear();
+    put_u32(out, RESP_MAGIC);
+    out.push(ST_STATS);
+    put_u32(out, 0);
+    out.extend_from_slice(json.as_bytes());
+    patch_body_len(out);
+}
+
+/// Fold front-end connection counters into a pipeline snapshot — the one
+/// place the `tcp_*` fields of [`ServingStats`] are populated, shared by
+/// [`TcpFrontend::stats`] and the live stats frame (both io models).
+pub(crate) fn fold_net_stats(s: &mut ServingStats, n: NetStats) {
+    s.tcp_accepted = n.accepted;
+    s.tcp_active = n.active;
+    s.tcp_read_errors = n.read_errors;
+    s.tcp_frame_rejects = n.frame_rejects;
+    s.tcp_requests = n.requests;
+    s.tcp_responses = n.responses;
+}
+
+/// Snapshot the pipeline + front-end counters and serialize the combined
+/// stats as the JSON text a stats frame carries.
+pub(crate) fn stats_frame_json(server: &Server, counters: &NetCounters) -> String {
+    let mut s = server.stats();
+    fold_net_stats(&mut s, counters.snapshot());
+    s.to_json().to_string_pretty()
 }
 
 /// Serialize a typed frame-reject response into `out` (cleared first).
@@ -509,6 +598,10 @@ enum ConnEvent {
     Pending(ResponseReceiver),
     /// A typed frame reject: frame it and let the connection close.
     Reject(NetError),
+    /// A stats request: the snapshot was taken at decode time (so its
+    /// position in the response order matches its position on the wire);
+    /// frame the JSON text and keep the connection open.
+    Stats(String),
 }
 
 /// The TCP front-end: accepts client sockets and bridges their frames
@@ -584,15 +677,9 @@ impl TcpFrontend {
     }
 
     /// Full serving stats with the front-end counters folded in.
-    pub fn stats(&self) -> super::metrics::ServingStats {
+    pub fn stats(&self) -> ServingStats {
         let mut s = self.server.stats();
-        let n = self.net_stats();
-        s.tcp_accepted = n.accepted;
-        s.tcp_active = n.active;
-        s.tcp_read_errors = n.read_errors;
-        s.tcp_frame_rejects = n.frame_rejects;
-        s.tcp_requests = n.requests;
-        s.tcp_responses = n.responses;
+        fold_net_stats(&mut s, self.net_stats());
         s
     }
 
@@ -724,8 +811,16 @@ fn read_loop(
                 return;
             }
         }
-        let len = match decode_request_header(&hdr, cfg.max_payload) {
-            Ok(len) => len,
+        let len = match decode_request_frame(&hdr, cfg.max_payload) {
+            Ok(ReqFrame::Image(len)) => len,
+            Ok(ReqFrame::Stats) => {
+                // answered from the snapshot, never enters the admission
+                // queue — and is not counted as a request/response
+                if ev_tx.send(ConnEvent::Stats(stats_frame_json(server, counters))).is_err() {
+                    return; // writer died (client gone)
+                }
+                continue;
+            }
             Err(e) => {
                 counters.frame_rejects.fetch_add(1, Ordering::Relaxed);
                 let _ = ev_tx.send(ConnEvent::Reject(e));
@@ -754,7 +849,7 @@ fn read_loop(
         pool.checkin(payload);
         match server.submit(image) {
             Ok(rx) => {
-                counters.requests.fetch_add(1, Ordering::Relaxed);
+                counters.requests.fetch_add(1, Ordering::SeqCst);
                 if ev_tx.send(ConnEvent::Pending(rx)).is_err() {
                     return; // writer died (client gone)
                 }
@@ -793,12 +888,16 @@ fn writer_loop(
                 write_reject(&mut buf, &e);
                 false
             }
+            ConnEvent::Stats(json) => {
+                write_stats_response(&mut buf, &json);
+                false
+            }
         };
         if stream.write_all(&buf).is_err() {
             break;
         }
         if answered {
-            counters.responses.fetch_add(1, Ordering::Relaxed);
+            counters.responses.fetch_add(1, Ordering::SeqCst);
         }
     }
     pool.checkin(buf);
@@ -809,6 +908,27 @@ fn writer_loop(
 // TcpClient
 // ---------------------------------------------------------------------
 
+/// What one in-flight client frame resolves to: an inference outcome or
+/// a stats snapshot. The reader matches response frames to slots FIFO,
+/// so the two kinds can interleave freely on one connection.
+enum PendingSlot {
+    Outcome(mpsc::Sender<Result<Outcome>>),
+    Stats(mpsc::Sender<Result<Json>>),
+}
+
+impl PendingSlot {
+    fn fail(self, msg: &str) {
+        match self {
+            PendingSlot::Outcome(tx) => {
+                let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            PendingSlot::Stats(tx) => {
+                let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
 /// A pipelined client for the front-end's frame protocol. Submissions
 /// write one request frame each and enqueue a response slot; a reader
 /// thread resolves the slots FIFO as response frames arrive (the
@@ -818,7 +938,7 @@ fn writer_loop(
 pub struct TcpClient {
     writer: Mutex<TcpStream>,
     stream: TcpStream,
-    pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>>,
+    pending: Arc<Mutex<VecDeque<PendingSlot>>>,
     reader: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -827,8 +947,7 @@ impl TcpClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr).context("connect to serving front-end")?;
         let _ = stream.set_nodelay(true);
-        let pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>> =
-            Arc::new(Mutex::new(VecDeque::new()));
+        let pending: Arc<Mutex<VecDeque<PendingSlot>>> = Arc::new(Mutex::new(VecDeque::new()));
         let reader = {
             let rstream = stream.try_clone().context("clone client stream")?;
             let pending = pending.clone();
@@ -840,22 +959,38 @@ impl TcpClient {
         Ok(TcpClient { writer, stream, pending, reader: Some(reader) })
     }
 
-    /// Submit one image; the receiver yields the request's terminal
-    /// outcome, decoded from the response frame.
-    pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
-        let frame = encode_request(&image)?;
-        let (tx, rx) = mpsc::channel();
-        // hold the write lock across enqueue + write so the pending
-        // order always matches the on-wire frame order
+    /// Write one frame with its response slot enqueued atomically: the
+    /// write lock is held across enqueue + write so the pending order
+    /// always matches the on-wire frame order.
+    fn send_frame(&self, frame: &[u8], slot: PendingSlot) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        self.pending.lock().unwrap().push_back(tx);
-        if let Err(e) = w.write_all(&frame) {
+        self.pending.lock().unwrap().push_back(slot);
+        if let Err(e) = w.write_all(frame) {
             // the frame never left: roll the slot back (the write lock
             // guarantees no later submission enqueued behind it)
             self.pending.lock().unwrap().pop_back();
             return Err(anyhow::anyhow!("front-end connection lost: {e}"));
         }
+        Ok(())
+    }
+
+    /// Submit one image; the receiver yields the request's terminal
+    /// outcome, decoded from the response frame.
+    pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
+        let frame = encode_request(&image)?;
+        let (tx, rx) = mpsc::channel();
+        self.send_frame(&frame, PendingSlot::Outcome(tx))?;
         Ok(rx)
+    }
+
+    /// Ask the live front-end for a stats snapshot (blocks until the
+    /// response frame arrives; pipelined requests ahead of it resolve
+    /// first). Returns the parsed `ServingStats::to_json` document.
+    pub fn fetch_stats(&self) -> Result<Json> {
+        let frame = encode_stats_request()?;
+        let (tx, rx) = mpsc::channel();
+        self.send_frame(&frame, PendingSlot::Stats(tx))?;
+        rx.recv().context("front-end connection closed before the stats response")?
     }
 }
 
@@ -874,10 +1009,7 @@ impl Drop for TcpClient {
     }
 }
 
-fn client_reader(
-    mut stream: TcpStream,
-    pending: Arc<Mutex<VecDeque<mpsc::Sender<Result<Outcome>>>>>,
-) {
+fn client_reader(mut stream: TcpStream, pending: Arc<Mutex<VecDeque<PendingSlot>>>) {
     loop {
         let mut hdr = [0u8; RESP_HEADER_BYTES];
         if stream.read_exact(&mut hdr).is_err() {
@@ -894,17 +1026,30 @@ fn client_reader(
         if stream.read_exact(&mut body).is_err() {
             break;
         }
-        let outcome = decode_response(status, &body);
-        match pending.lock().unwrap().pop_front() {
-            Some(tx) => {
-                let _ = tx.send(outcome);
-            }
+        let slot = match pending.lock().unwrap().pop_front() {
+            Some(s) => s,
             None => break, // response with no matching request
+        };
+        match (status, slot) {
+            (ST_STATS, PendingSlot::Stats(tx)) => {
+                let parsed = std::str::from_utf8(&body)
+                    .map_err(|e| anyhow::anyhow!("stats body is not UTF-8: {e}"))
+                    .and_then(Json::parse);
+                let _ = tx.send(parsed);
+            }
+            (_, PendingSlot::Outcome(tx)) => {
+                let _ = tx.send(decode_response(status, &body));
+            }
+            (_, slot) => {
+                // FIFO slot/status mismatch: the stream is desynchronized
+                slot.fail("response/slot mismatch (desynchronized stream)");
+                break;
+            }
         }
     }
     // connection over: every unresolved submission gets a terminal error
-    for tx in pending.lock().unwrap().drain(..) {
-        let _ = tx.send(Err(anyhow::anyhow!("front-end connection closed")));
+    for slot in pending.lock().unwrap().drain(..) {
+        slot.fail("front-end connection closed");
     }
 }
 
@@ -1033,6 +1178,32 @@ mod tests {
         }
         assert!(decode_response(ST_DONE, body).is_ok());
         assert!(decode_response(77, body).is_err(), "unknown status");
+    }
+
+    #[test]
+    fn stats_frames_roundtrip() {
+        let frame = encode_stats_request().unwrap();
+        assert_eq!(frame.len(), TX_HEADER_BYTES, "stats request is a bare header");
+        let hdr: [u8; TX_HEADER_BYTES] = frame[..].try_into().unwrap();
+        assert_eq!(decode_request_frame(&hdr, 1 << 20), Ok(ReqFrame::Stats));
+        // the image-only entry point refuses the sentinel as a typed error
+        assert!(matches!(decode_request_header(&hdr, 1 << 20), Err(NetError::BadFrame(_))));
+        // and an ordinary image frame still decodes as an image
+        let img = encode_request(&[1.0f32, 2.0]).unwrap();
+        let ih: [u8; TX_HEADER_BYTES] = img[..TX_HEADER_BYTES].try_into().unwrap();
+        assert_eq!(decode_request_frame(&ih, 1 << 20), Ok(ReqFrame::Image(8)));
+
+        let mut buf = Vec::new();
+        write_stats_response(&mut buf, "{\"requests\": 7}");
+        let rh: [u8; RESP_HEADER_BYTES] = buf[..RESP_HEADER_BYTES].try_into().unwrap();
+        let (status, len) = decode_response_header(&rh).unwrap();
+        assert_eq!(status, ST_STATS);
+        let body = &buf[RESP_HEADER_BYTES..];
+        assert_eq!(body.len(), len);
+        let j = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(j.get("requests").and_then(|v| v.as_f64()), Some(7.0));
+        // an outcome decoder treats the stats status as unknown
+        assert!(decode_response(status, body).is_err());
     }
 
     #[test]

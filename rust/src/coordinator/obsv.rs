@@ -1,0 +1,825 @@
+//! `coordinator::obsv` — lock-light serving observability.
+//!
+//! Three layers, all allocation-free on the hot path:
+//!
+//! 1. **Metrics registry** ([`ServingRegistry`]): atomic [`Counter`]s,
+//!    [`Gauge`]s, indexed [`CounterVec`]s, and fixed-bucket log2
+//!    [`Histogram`]s that the server/edge/shard/reactor code increments
+//!    directly — no `Mutex<ServingStats>` on the request path. A
+//!    [`ServingStats`] snapshot is re-layered on top at read time.
+//!
+//! 2. **Span tracing** ([`Tracer`]): a sampled per-request stage
+//!    breakdown (admit → queue → edge → pack → uplink → dispatch →
+//!    cloud → respond) carried through the pipeline as a [`SpanTag`]
+//!    and finished exactly once at every terminal answer site. Shed and
+//!    error outcomes always emit, sampled or not. Finished spans land
+//!    in a bounded ring buffer and export as Chrome trace-event JSON
+//!    ([`chrome_trace`], loadable in Perfetto / `chrome://tracing`).
+//!
+//! 3. **Snapshot consistency**: writers bump *totals before components*
+//!    (`requests` before `shard_requests[i]`, `offered` before the
+//!    queue push) with sequentially-consistent RMWs, and
+//!    [`ServingRegistry::snapshot`] reads *components before totals*,
+//!    so any mid-run snapshot satisfies the accounting invariants
+//!    (`Σ shard_requests ≤ requests`, `requests + shed ≤ offered`) —
+//!    the field-by-field mutex-clone path could not promise that.
+
+use super::metrics::{LatencyHistogram, ServingStats};
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// primitives
+
+/// Monotonic atomic counter (u64). `dec` exists for the one
+/// compensation site (admission `Closed` un-offers a request).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, SeqCst);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, SeqCst);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, SeqCst);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(SeqCst)
+    }
+}
+
+/// Last-write-wins atomic gauge (u64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, SeqCst);
+    }
+
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, SeqCst);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(SeqCst)
+    }
+}
+
+/// Fixed-width family of counters indexed by id (shard, edge worker,
+/// plan). Out-of-range increments clamp to the last slot rather than
+/// panic — ids are structurally bounded, this is belt-and-braces.
+#[derive(Debug)]
+pub struct CounterVec(Box<[AtomicU64]>);
+
+impl CounterVec {
+    pub fn new(len: usize) -> Self {
+        CounterVec((0..len.max(1)).map(|_| AtomicU64::new(0)).collect())
+    }
+
+    pub fn inc(&self, i: usize) {
+        self.add(i, 1);
+    }
+
+    pub fn add(&self, i: usize, n: u64) {
+        self.0[i.min(self.0.len() - 1)].fetch_add(n, SeqCst);
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        self.0[i.min(self.0.len() - 1)].load(SeqCst)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.0.iter().map(|c| c.load(SeqCst)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// atomic log2 histogram
+
+/// `16 + 60×16`: exact buckets for 0..15 ns, then 16 linear sub-buckets
+/// per power of two for exponents 4..=63.
+const HIST_BUCKETS: usize = 16 + 60 * 16;
+
+/// Lock-free duration histogram over nanoseconds: values below 16 ns
+/// get exact buckets, larger values get 16 linear sub-buckets per
+/// power of two (≤ 1/16 ≈ 6% relative quantile error), covering the
+/// full u64 range. Mergeable and snapshot-consistent: quantiles are
+/// computed against the bucket sum observed in one pass, never against
+/// a separately-read count.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_index(ns: u64) -> usize {
+    if ns < 16 {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros() as usize; // ≥ 4
+    let sub = ((ns >> (e - 4)) & 0xF) as usize;
+    16 + (e - 4) * 16 + sub
+}
+
+/// Midpoint of the bucket's value range, in nanoseconds.
+fn bucket_mid_ns(idx: usize) -> f64 {
+    if idx < 16 {
+        return idx as f64;
+    }
+    let b = idx - 16;
+    let e = b / 16 + 4;
+    let sub = (b % 16) as u64;
+    let width = 1u64 << (e - 4);
+    ((16 + sub) * width) as f64 + width as f64 / 2.0
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record a duration given in seconds. NaN is ignored (an undefined
+    /// duration must not shift quantiles toward zero), negatives clamp
+    /// to zero, and +inf clamps to the top bucket.
+    pub fn record_secs(&self, s: f64) {
+        if s.is_nan() {
+            return;
+        }
+        let ns = (s.max(0.0) * 1e9).min(u64::MAX as f64) as u64;
+        self.record_ns(ns);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, SeqCst);
+        self.sum_ns.fetch_add(ns, SeqCst);
+        self.max_ns.fetch_max(ns, SeqCst);
+        self.count.fetch_add(1, SeqCst);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(SeqCst)
+    }
+
+    /// One-pass consistent snapshot of the bucket state.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(SeqCst)).collect(),
+            sum_ns: self.sum_ns.load(SeqCst),
+            max_ns: self.max_ns.load(SeqCst),
+        }
+    }
+}
+
+/// Plain (non-atomic) copy of a [`Histogram`]'s state: quantiles,
+/// moments, and lossless merging.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / n as f64 / 1e9
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_ns as f64 / 1e9
+    }
+
+    /// Approximate quantile in seconds; `None` when empty (so empty
+    /// histograms serialize as `null`, not a fake `0`).
+    pub fn quantile_opt(&self, q: f64) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(bucket_mid_ns(i) / 1e9);
+            }
+        }
+        Some(self.max())
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_opt(q).unwrap_or(0.0)
+    }
+
+    /// Bucket-wise merge (associative and commutative: the layouts are
+    /// identical by construction).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Re-layer onto the legacy log10 [`LatencyHistogram`] (what
+    /// [`ServingStats`] reports): bucket counts map through each log2
+    /// bucket's midpoint, then the exact sum/max moments are restored
+    /// so `mean()`/`max()` stay lossless.
+    pub fn to_latency_histogram(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                h.record_n(bucket_mid_ns(i) / 1e9, c);
+            }
+        }
+        h.set_exact_moments(self.sum_ns as f64 / 1e9, self.max_ns as f64 / 1e9);
+        h
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving registry
+
+/// The atomic counter set behind [`ServingStats`]. Request-path code
+/// holds an `Arc<ServingRegistry>` and increments handles directly;
+/// [`ServingRegistry::snapshot`] assembles a consistent `ServingStats`.
+///
+/// Writer protocol (the snapshot-monotonicity contract): bump the
+/// *total* before its *components* — `requests` before
+/// `shard_requests[i]`/`tx_bytes_total`, `offered` before handing the
+/// request to the queue. The snapshot reads components first and
+/// totals last, so the invariants `Σ shard_requests ≤ requests` and
+/// `requests + shed ≤ offered` hold in every mid-run snapshot.
+#[derive(Debug)]
+pub struct ServingRegistry {
+    pub e2e: Histogram,
+    pub edge: Histogram,
+    pub net: Histogram,
+    pub cloud: Histogram,
+    pub queue: Histogram,
+    pub requests: Counter,
+    pub batches: Counter,
+    pub tx_bytes_total: Counter,
+    pub offered: Counter,
+    pub shed: Counter,
+    pub batch_slo_closes: Counter,
+    pub shard_batches: CounterVec,
+    pub shard_requests: CounterVec,
+    pub edge_requests: CounterVec,
+    pub plan_requests: CounterVec,
+    pub plan_switches: Counter,
+    pub mid_batch_swaps: Counter,
+}
+
+impl ServingRegistry {
+    /// Registry sized for the pipeline shape: cloud shards × edge
+    /// workers × banked plans.
+    pub fn sized(shards: usize, edge_workers: usize, plans: usize) -> Self {
+        ServingRegistry {
+            e2e: Histogram::default(),
+            edge: Histogram::default(),
+            net: Histogram::default(),
+            cloud: Histogram::default(),
+            queue: Histogram::default(),
+            requests: Counter::default(),
+            batches: Counter::default(),
+            tx_bytes_total: Counter::default(),
+            offered: Counter::default(),
+            shed: Counter::default(),
+            batch_slo_closes: Counter::default(),
+            shard_batches: CounterVec::new(shards),
+            shard_requests: CounterVec::new(shards),
+            edge_requests: CounterVec::new(edge_workers),
+            plan_requests: CounterVec::new(plans),
+            plan_switches: Counter::default(),
+            mid_batch_swaps: Counter::default(),
+        }
+    }
+
+    /// Consistent point-in-time [`ServingStats`]. Components are read
+    /// before their totals (see the struct docs); wall clock, queue
+    /// depth, pool, adaptive, and TCP fields are left at default for
+    /// the caller (`Server::stats`) to fill from their owners.
+    pub fn snapshot(&self) -> ServingStats {
+        let mut s =
+            ServingStats::sized(self.shard_requests.len(), self.edge_requests.len(), self.plan_requests.len());
+        // components first…
+        s.e2e = self.e2e.snapshot().to_latency_histogram();
+        s.edge = self.edge.snapshot().to_latency_histogram();
+        s.net = self.net.snapshot().to_latency_histogram();
+        s.cloud = self.cloud.snapshot().to_latency_histogram();
+        s.queue = self.queue.snapshot().to_latency_histogram();
+        s.shard_batches = self.shard_batches.snapshot();
+        s.shard_requests = self.shard_requests.snapshot();
+        s.edge_requests = self.edge_requests.snapshot();
+        s.plan_requests = self.plan_requests.snapshot();
+        s.plan_switches = self.plan_switches.get();
+        s.mid_batch_swaps = self.mid_batch_swaps.get();
+        s.batch_slo_closes = self.batch_slo_closes.get();
+        s.tx_bytes_total = self.tx_bytes_total.get();
+        s.batches = self.batches.get();
+        // …totals last, least- to most-inclusive.
+        s.requests = self.requests.get();
+        s.shed = self.shed.get();
+        s.offered = self.offered.get();
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// span tracing
+
+/// Pipeline stages, in request order. Indexes into
+/// [`SpanTag::stage_ns`].
+pub const STAGE_NAMES: [&str; 8] =
+    ["admit", "queue", "edge", "pack", "uplink", "dispatch", "cloud", "respond"];
+pub const STAGE_ADMIT: usize = 0;
+pub const STAGE_QUEUE: usize = 1;
+pub const STAGE_EDGE: usize = 2;
+pub const STAGE_PACK: usize = 3;
+pub const STAGE_UPLINK: usize = 4;
+pub const STAGE_DISPATCH: usize = 5;
+pub const STAGE_CLOUD: usize = 6;
+pub const STAGE_RESPOND: usize = 7;
+
+/// Terminal outcome of a traced request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Done,
+    Shed,
+    Error,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Done => "done",
+            SpanKind::Shed => "shed",
+            SpanKind::Error => "error",
+        }
+    }
+}
+
+/// Per-request trace context, created at admission and carried through
+/// the pipeline (`Request` → `SentPacket` → `CloudJob`). Stage
+/// durations are filled in as each stage's measured time becomes
+/// known; [`Tracer::finish`] turns the tag into a [`SpanRecord`].
+#[derive(Debug, Clone)]
+pub struct SpanTag {
+    pub id: u64,
+    pub sampled: bool,
+    /// Admission time, nanoseconds since the tracer epoch.
+    pub t0_ns: u64,
+    /// Per-stage duration, nanoseconds (see `STAGE_*`).
+    pub stage_ns: [u64; 8],
+}
+
+impl SpanTag {
+    pub fn set_stage(&mut self, stage: usize, d: Duration) {
+        self.stage_ns[stage] = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+    }
+
+    pub fn set_stage_secs(&mut self, stage: usize, s: f64) {
+        if s.is_finite() && s > 0.0 {
+            self.stage_ns[stage] = (s * 1e9).min(u64::MAX as f64) as u64;
+        }
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.stage_ns.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+}
+
+/// A finished span in the ring buffer.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub kind: SpanKind,
+    pub t0_ns: u64,
+    pub stage_ns: [u64; 8],
+}
+
+/// Trace configuration carried by `ServeConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Keep 1-in-N sampled spans; 0 disables tracing entirely (no tags
+    /// are allocated). Shed/error spans are kept regardless of the
+    /// sample once tracing is on.
+    pub sample: u64,
+    /// Ring-buffer capacity; the oldest spans are dropped (and
+    /// counted) once full.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { sample: 0, capacity: 65536 }
+    }
+}
+
+/// Span source + bounded sink. `begin` is called once per admitted
+/// request; `finish` exactly once at the request's terminal answer
+/// site (completed, shed, or errored) — so at `sample: 1` the exported
+/// span count equals completed + shed + errors, the telemetry
+/// extension of the exactly-once answering contract.
+#[derive(Debug)]
+pub struct Tracer {
+    sample: u64,
+    capacity: usize,
+    epoch: Instant,
+    next_id: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Self {
+        Tracer {
+            sample: cfg.sample,
+            capacity: cfg.capacity.max(1),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample > 0
+    }
+
+    /// Start a span; `None` when tracing is off. Every admitted request
+    /// gets a tag when tracing is on (unsampled tags still emit on
+    /// shed/error — those are the spans worth keeping).
+    pub fn begin(&self) -> Option<Box<SpanTag>> {
+        if self.sample == 0 {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, SeqCst);
+        Some(Box::new(SpanTag {
+            id,
+            sampled: id % self.sample == 0,
+            t0_ns: u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX),
+            stage_ns: [0; 8],
+        }))
+    }
+
+    /// Terminal sink: emit the span if it is sampled or non-`Done`.
+    pub fn finish(&self, tag: Option<Box<SpanTag>>, kind: SpanKind) {
+        let Some(tag) = tag else { return };
+        if !tag.sampled && kind == SpanKind::Done {
+            return;
+        }
+        let rec = SpanRecord { id: tag.id, kind, t0_ns: tag.t0_ns, stage_ns: tag.stage_ns };
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, SeqCst);
+        }
+        ring.push_back(rec);
+    }
+
+    /// Drain all buffered spans (oldest first).
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().drain(..).collect()
+    }
+
+    /// Spans evicted from a full ring.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(SeqCst)
+    }
+}
+
+/// Render finished spans as Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` envelope Perfetto and `chrome://tracing`
+/// load directly): one complete ("X") event per stage plus one
+/// request-level envelope event carrying the outcome, stages laid out
+/// end-to-end from the admission timestamp. Stage times here are the
+/// pipeline's *accounted* durations (Virtual delay mode charges
+/// modeled wire/edge time), so the trace shows the latency
+/// decomposition the split planner reasons about.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::with_capacity(spans.len() * 9);
+    for sp in spans {
+        let us = |ns: u64| ns as f64 / 1e3;
+        events.push(Json::Obj(
+            [
+                ("name".to_string(), Json::Str(sp.kind.as_str().into())),
+                ("cat".to_string(), Json::Str("request".into())),
+                ("ph".to_string(), Json::Str("X".into())),
+                ("pid".to_string(), Json::Num(0.0)),
+                ("tid".to_string(), Json::Num(sp.id as f64)),
+                ("ts".to_string(), Json::Num(us(sp.t0_ns))),
+                ("dur".to_string(), Json::Num(us(sp.stage_ns.iter().sum()))),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+        let mut at = sp.t0_ns;
+        for (i, &dur) in sp.stage_ns.iter().enumerate() {
+            events.push(Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(STAGE_NAMES[i].into())),
+                    ("cat".to_string(), Json::Str("stage".into())),
+                    ("ph".to_string(), Json::Str("X".into())),
+                    ("pid".to_string(), Json::Num(0.0)),
+                    ("tid".to_string(), Json::Num(sp.id as f64)),
+                    ("ts".to_string(), Json::Num(us(at))),
+                    ("dur".to_string(), Json::Num(us(dur))),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+            at = at.saturating_add(dur);
+        }
+    }
+    Json::Obj(
+        [
+            ("traceEvents".to_string(), Json::Arr(events)),
+            ("displayTimeUnit".to_string(), Json::Str("ms".into())),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn histogram_sub_resolution_and_zero() {
+        let h = Histogram::default();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_nanos(3));
+        h.record(Duration::from_nanos(15));
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        // sub-16ns values land in their exact buckets
+        assert!(s.quantile(0.01) <= 16e-9, "{}", s.quantile(0.01));
+        assert!((s.mean() - 6e-9).abs() < 1e-12);
+        assert_eq!(s.max(), 15e-9);
+    }
+
+    #[test]
+    fn histogram_negative_nan_inf() {
+        let h = Histogram::default();
+        h.record_secs(f64::NAN); // ignored
+        h.record_secs(-5.0); // clamps to 0
+        h.record_secs(f64::INFINITY); // clamps to the top bucket
+        let s = h.snapshot();
+        assert_eq!(s.count(), 2, "NaN must not be counted");
+        assert!(s.quantile(0.99) > 1e9, "inf must land in the top bucket");
+        assert_eq!(s.quantile_opt(0.01).unwrap(), 0.0, "negative clamps to zero");
+    }
+
+    #[test]
+    fn histogram_quantile_accuracy() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        let p99 = s.quantile(0.99);
+        // ≤ 1/16 relative bucket error
+        assert!((p50 - 500e-6).abs() / 500e-6 < 0.07, "{p50}");
+        assert!((p99 - 990e-6).abs() / 990e-6 < 0.07, "{p99}");
+        assert!(p50 <= p99);
+        assert_eq!(s.count(), 1000);
+    }
+
+    #[test]
+    fn empty_quantile_is_none_and_serializes_null() {
+        let s = Histogram::default().snapshot();
+        assert!(s.quantile_opt(0.5).is_none());
+        assert_eq!(s.quantile(0.5), 0.0);
+        let j = Json::Obj(
+            [("p50".to_string(), s.quantile_opt(0.5).map(Json::Num).unwrap_or(Json::Null))]
+                .into_iter()
+                .collect(),
+        );
+        assert!(j.to_string_pretty().contains("null"), "{}", j.to_string_pretty());
+    }
+
+    #[test]
+    fn merge_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::default();
+            for &v in vals {
+                h.record_ns(v);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(&[10, 2000]), mk(&[50_000]), mk(&[7, 1_000_000, 12]));
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c)
+        let mut ab = a.clone();
+        ab.merge(&b);
+        ab.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab.count(), a_bc.count());
+        assert_eq!(ab.sum_ns, a_bc.sum_ns);
+        assert_eq!(ab.max_ns, a_bc.max_ns);
+        assert_eq!(ab.buckets, a_bc.buckets);
+        for q in [0.1, 0.5, 0.9, 0.999] {
+            assert_eq!(ab.quantile(q), a_bc.quantile(q));
+        }
+    }
+
+    #[test]
+    fn to_latency_histogram_preserves_moments() {
+        let h = Histogram::default();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        let lat = h.snapshot().to_latency_histogram();
+        assert_eq!(lat.count(), 2);
+        assert!((lat.mean() - 0.02).abs() < 1e-9, "{}", lat.mean());
+        assert!((lat.max() - 0.03).abs() < 1e-9);
+        // quantile within the coarser log10 bucket resolution
+        let p50 = lat.quantile(0.5);
+        assert!((5e-3..2e-2).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn registry_snapshot_is_monotonic_under_concurrent_writes() {
+        let reg = Arc::new(ServingRegistry::sized(2, 1, 1));
+        let stop = Arc::new(AtomicU64::new(0));
+        let writers: Vec<_> = (0..2)
+            .map(|shard| {
+                let reg = Arc::clone(&reg);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while stop.load(SeqCst) == 0 {
+                        // writer protocol: totals before components
+                        reg.offered.inc();
+                        if n % 7 == 0 {
+                            reg.shed.inc();
+                        } else {
+                            reg.requests.inc();
+                            reg.shard_requests.inc(shard);
+                        }
+                        n += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..500 {
+            let s = reg.snapshot();
+            let shard_sum: u64 = s.shard_requests.iter().sum();
+            assert!(
+                shard_sum <= s.requests,
+                "per-shard sum {shard_sum} exceeds total {}",
+                s.requests
+            );
+            assert!(
+                s.requests + s.shed <= s.offered,
+                "requests {} + shed {} exceed offered {}",
+                s.requests,
+                s.shed,
+                s.offered
+            );
+        }
+        stop.store(1, SeqCst);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tracer_sampling_and_always_on_errors() {
+        let t = Tracer::new(TraceConfig { sample: 4, capacity: 1024 });
+        for i in 0..100u64 {
+            let tag = t.begin();
+            assert!(tag.is_some());
+            let kind = if i % 10 == 9 { SpanKind::Shed } else { SpanKind::Done };
+            t.finish(tag, kind);
+        }
+        let spans = t.drain();
+        let done = spans.iter().filter(|s| s.kind == SpanKind::Done).count();
+        let shed = spans.iter().filter(|s| s.kind == SpanKind::Shed).count();
+        assert_eq!(shed, 10, "shed spans are always kept");
+        // 25 sampled ids (0,4,..96), of which ids 39,79 are... none: shed ids
+        // are 9,19,..99 — disjoint from the 1-in-4 sample — so 25 done spans.
+        assert_eq!(done, 25, "1-in-4 sampling keeps 25 of 100");
+    }
+
+    #[test]
+    fn tracer_sample_one_is_exactly_once() {
+        let t = Tracer::new(TraceConfig { sample: 1, capacity: 1024 });
+        for _ in 0..50 {
+            let tag = t.begin();
+            t.finish(tag, SpanKind::Done);
+        }
+        assert_eq!(t.drain().len(), 50);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn tracer_ring_bounded() {
+        let t = Tracer::new(TraceConfig { sample: 1, capacity: 8 });
+        for _ in 0..20 {
+            t.finish(t.begin(), SpanKind::Done);
+        }
+        assert_eq!(t.drain().len(), 8);
+        assert_eq!(t.dropped(), 12);
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing() {
+        let t = Tracer::new(TraceConfig::default());
+        assert!(!t.enabled());
+        assert!(t.begin().is_none());
+        t.finish(None, SpanKind::Error);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_json() {
+        let t = Tracer::new(TraceConfig { sample: 1, capacity: 16 });
+        let mut tag = t.begin().unwrap();
+        tag.set_stage(STAGE_QUEUE, Duration::from_micros(120));
+        tag.set_stage_secs(STAGE_EDGE, 3.5e-3);
+        tag.set_stage_secs(STAGE_UPLINK, f64::NAN); // ignored
+        t.finish(Some(tag), SpanKind::Done);
+        let spans = t.drain();
+        let doc = chrome_trace(&spans).to_string_pretty();
+        let parsed = Json::parse(&doc).expect("chrome trace must be valid JSON");
+        match parsed {
+            Json::Obj(o) => match o.get("traceEvents") {
+                Some(Json::Arr(evs)) => {
+                    assert_eq!(evs.len(), 9, "1 request envelope + 8 stage events");
+                }
+                other => panic!("traceEvents missing: {other:?}"),
+            },
+            other => panic!("not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn counter_vec_clamps_out_of_range() {
+        let v = CounterVec::new(2);
+        v.inc(0);
+        v.inc(7); // clamps to last slot
+        assert_eq!(v.get(0), 1);
+        assert_eq!(v.get(1), 1);
+        assert_eq!(v.snapshot(), vec![1, 1]);
+    }
+
+    #[test]
+    fn gauge_and_counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        c.dec();
+        assert_eq!(c.get(), 4);
+        let g = Gauge::default();
+        g.set(9);
+        g.max(3);
+        g.max(12);
+        assert_eq!(g.get(), 12);
+    }
+}

@@ -39,8 +39,8 @@
 
 use super::bufpool::BufPool;
 use super::net::{
-    decode_image, decode_request_header, write_reject, write_response, NetConfig, NetCounters,
-    NetError,
+    decode_image, decode_request_frame, stats_frame_json, write_reject, write_response,
+    write_stats_response, NetConfig, NetCounters, NetError, ReqFrame,
 };
 use super::protocol::TX_HEADER_BYTES;
 use super::server::{Outcome, Responder, Server};
@@ -102,6 +102,9 @@ enum Slot {
     Ready(Result<Outcome>),
     /// A typed frame reject (written, not counted as a response).
     Reject(NetError),
+    /// A stats snapshot, serialized when its request frame was decoded
+    /// (written, not counted as a response).
+    Stats(String),
 }
 
 /// Per-connection state machine.
@@ -328,11 +331,18 @@ fn pump_read(
             _ => None,
         };
         if let Some(hdr) = full_hdr {
-            match decode_request_header(&hdr, cfg.max_payload) {
-                Ok(len) => {
+            match decode_request_frame(&hdr, cfg.max_payload) {
+                Ok(ReqFrame::Image(len)) => {
                     let mut buf = pool.checkout(len);
                     buf.resize(len, 0);
                     conn.read = ReadState::Payload { buf, off: 0 };
+                }
+                Ok(ReqFrame::Stats) => {
+                    // answered from the snapshot (taken now, so its place
+                    // in the response order matches the wire order);
+                    // never submitted, never counted as a request
+                    conn.pending.push_back(Slot::Stats(stats_frame_json(server, counters)));
+                    conn.read = ReadState::Header { hdr: [0u8; TX_HEADER_BYTES], off: 0 };
                 }
                 Err(e) => {
                     counters.frame_rejects.fetch_add(1, Ordering::Relaxed);
@@ -417,7 +427,7 @@ fn complete_frame(
     };
     match server.submit_with(image, responder) {
         Ok(()) => {
-            counters.requests.fetch_add(1, Ordering::Relaxed);
+            counters.requests.fetch_add(1, Ordering::SeqCst);
             conn.pending.push_back(Slot::Waiting(seq));
         }
         Err(e) => {
@@ -477,14 +487,16 @@ fn pump_write(conn: &mut Conn, counters: &NetCounters) {
         }
         if conn.woff > 0 {
             if conn.wbuf_counts {
-                counters.responses.fetch_add(1, Ordering::Relaxed);
+                counters.responses.fetch_add(1, Ordering::SeqCst);
             }
             conn.wbuf.clear();
             conn.woff = 0;
             conn.wbuf_counts = false;
         }
-        let head_terminal =
-            matches!(conn.pending.front(), Some(Slot::Ready(_)) | Some(Slot::Reject(_)));
+        let head_terminal = matches!(
+            conn.pending.front(),
+            Some(Slot::Ready(_)) | Some(Slot::Reject(_)) | Some(Slot::Stats(_))
+        );
         if !head_terminal {
             return;
         }
@@ -495,6 +507,10 @@ fn pump_write(conn: &mut Conn, counters: &NetCounters) {
             }
             Some(Slot::Reject(err)) => {
                 write_reject(&mut conn.wbuf, &err);
+                conn.wbuf_counts = false;
+            }
+            Some(Slot::Stats(json)) => {
+                write_stats_response(&mut conn.wbuf, &json);
                 conn.wbuf_counts = false;
             }
             _ => return,
@@ -519,7 +535,10 @@ fn update_interest(conn: &mut Conn, poller: &mut Poller, tok: u64) {
         want |= EV_READ;
     }
     let write_pending = conn.woff < conn.wbuf.len()
-        || matches!(conn.pending.front(), Some(Slot::Ready(_)) | Some(Slot::Reject(_)));
+        || matches!(
+            conn.pending.front(),
+            Some(Slot::Ready(_)) | Some(Slot::Reject(_)) | Some(Slot::Stats(_))
+        );
     if write_pending {
         want |= EV_WRITE;
     }

@@ -58,6 +58,10 @@ use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
 use super::link::{DelayMode, Link, Segments, WireFormat};
 use super::metrics::ServingStats;
+use super::obsv::{
+    ServingRegistry, SpanKind, SpanRecord, SpanTag, TraceConfig, Tracer, STAGE_ADMIT, STAGE_CLOUD,
+    STAGE_DISPATCH, STAGE_EDGE, STAGE_PACK, STAGE_QUEUE, STAGE_RESPOND, STAGE_UPLINK,
+};
 use super::protocol::{ActivationPacket, PacketHeader, TX_HEADER_BYTES};
 use super::scheduler::{
     drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
@@ -104,6 +108,10 @@ pub struct ServeConfig {
     /// measured pooled gain is conservative.) Wire bytes and results are
     /// bit-identical either way.
     pub pool: bool,
+    /// Per-request span tracing: `sample: 0` (default) allocates no
+    /// tags at all; `sample: N` keeps 1-in-N completed spans plus every
+    /// shed/error span in a bounded ring (`Server::take_spans`).
+    pub trace: TraceConfig,
 }
 
 impl ServeConfig {
@@ -117,6 +125,7 @@ impl ServeConfig {
             scheduler: SchedulerConfig::default(),
             adaptive: None,
             pool: true,
+            trace: TraceConfig::default(),
         }
     }
 
@@ -132,6 +141,11 @@ impl ServeConfig {
 
     pub fn with_pool(mut self, pool: bool) -> Self {
         self.pool = pool;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: TraceConfig) -> Self {
+        self.trace = trace;
         self
     }
 }
@@ -313,6 +327,8 @@ struct Request {
     image: Vec<f32>,
     resp: Responder,
     submitted: Instant,
+    /// Trace context (None when tracing is off — zero hot-path cost).
+    span: Option<Box<SpanTag>>,
 }
 
 struct CloudJob {
@@ -324,6 +340,7 @@ struct CloudJob {
     codec: Duration,
     tx_bytes: usize,
     arrived: Instant,
+    span: Option<Box<SpanTag>>,
     /// Bank plan this job was produced under (batches are plan-pure).
     plan: usize,
     /// Virtually-accounted time to add to the wall clock for `e2e` under
@@ -357,7 +374,10 @@ pub struct Server {
     queue: Arc<AdmissionQueue<Request>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub meta: ArtifactMeta,
-    stats: Arc<Mutex<ServingStats>>,
+    /// Atomic write side of `ServingStats` — the request path increments
+    /// these handles directly, no mutex (see `obsv::ServingRegistry`).
+    reg: Arc<ServingRegistry>,
+    tracer: Arc<Tracer>,
     started: Instant,
     /// Live uplink shared with the edge workers (mutable mid-run for
     /// bandwidth-trace replay — see `loadgen::replay_traced`).
@@ -477,7 +497,8 @@ impl Server {
         let sched = cfg.scheduler.clone();
         let shards = sched.shards.max(1);
         let edge_workers = sched.edge_workers.max(1);
-        let stats = Arc::new(Mutex::new(ServingStats::sized(shards, edge_workers, plans.len())));
+        let reg = Arc::new(ServingRegistry::sized(shards, edge_workers, plans.len()));
+        let tracer = Arc::new(Tracer::new(cfg.trace));
         let queue = Arc::new(AdmissionQueue::new(sched.queue_cap, sched.admission));
         let cost = Arc::new(BatchCost::new(sched.cost_prior));
         let outstanding = Outstanding::new(shards);
@@ -509,7 +530,8 @@ impl Server {
             let cloud_tx = cloud_tx.clone();
             let uplink = uplink.clone();
             let adaptive = adaptive.clone();
-            let stats = stats.clone();
+            let reg = reg.clone();
+            let tracer = tracer.clone();
             let pool = pool.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -524,7 +546,8 @@ impl Server {
                             uplink,
                             adaptive,
                             pool,
-                            stats,
+                            reg,
+                            tracer,
                             edge_ready_tx,
                         )
                     })?,
@@ -543,7 +566,8 @@ impl Server {
             shard_readies.push(ready_rx);
             let cfg = cfg.clone();
             let plans = plans.clone();
-            let stats = stats.clone();
+            let reg = reg.clone();
+            let tracer = tracer.clone();
             let outstanding = outstanding.clone();
             let cost = cost.clone();
             let pool = pool.clone();
@@ -559,7 +583,8 @@ impl Server {
                             outstanding,
                             cost,
                             pool,
-                            stats,
+                            reg,
+                            tracer,
                             ready_tx,
                         )
                     })?,
@@ -572,7 +597,8 @@ impl Server {
             let engine_batches = engine_batches.clone();
             let outstanding = outstanding.clone();
             let cost = cost.clone();
-            let stats = stats.clone();
+            let reg = reg.clone();
+            let tracer = tracer.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name("dispatcher".into())
@@ -584,7 +610,8 @@ impl Server {
                             shard_txs,
                             outstanding,
                             cost,
-                            stats,
+                            reg,
+                            tracer,
                         )
                     })?,
             );
@@ -620,7 +647,8 @@ impl Server {
             queue,
             handles,
             meta,
-            stats,
+            reg,
+            tracer,
             started: Instant::now(),
             uplink,
             adaptive,
@@ -656,17 +684,22 @@ impl Server {
     /// `Err` (queue closed) the hook is discarded undelivered — the error
     /// return is the answer.
     pub(crate) fn submit_with(&self, image: Vec<f32>, resp: Responder) -> Result<()> {
-        let req = Request { image, resp, submitted: Instant::now() };
+        let submitted = Instant::now();
+        let mut span = self.tracer.begin();
+        if let Some(tag) = span.as_mut() {
+            tag.set_stage(STAGE_ADMIT, submitted.elapsed());
+        }
+        let req = Request { image, resp, submitted, span };
         // count the offer BEFORE enqueueing: once pushed, the pipeline can
         // complete the request concurrently, and a stats() snapshot must
         // never observe requests + shed > offered
-        self.stats.lock().unwrap().offered += 1;
+        self.reg.offered.inc();
         match self.queue.push(req) {
             Admit::Enqueued => {}
             Admit::RefusedNewest(r) => self.shed(r),
             Admit::EvictedOldest(old) => self.shed(old),
             Admit::Closed(req) => {
-                self.stats.lock().unwrap().offered -= 1; // never entered the pipeline
+                self.reg.offered.dec(); // never entered the pipeline
                 req.resp.disarm();
                 anyhow::bail!("server stopped")
             }
@@ -674,14 +707,20 @@ impl Server {
         Ok(())
     }
 
-    /// Answer one request as load-shed (counted, never computed).
+    /// Answer one request as load-shed (counted, never computed). Shed
+    /// spans always emit, sampled or not.
     fn shed(&self, req: Request) {
-        self.stats.lock().unwrap().shed += 1;
+        self.reg.shed.inc();
         let info = ShedInfo {
             policy: self.queue.policy(),
             queue_depth: self.queue.depth(),
             waited: req.submitted.elapsed(),
         };
+        let mut span = req.span;
+        if let Some(tag) = span.as_mut() {
+            tag.set_stage(STAGE_QUEUE, info.waited);
+        }
+        self.tracer.finish(span, SpanKind::Shed);
         req.resp.answer(Ok(Outcome::Shed(info)));
     }
 
@@ -726,9 +765,23 @@ impl Server {
         self.adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0)
     }
 
-    /// Snapshot of aggregated metrics.
+    /// Drain the finished trace spans buffered so far (oldest first).
+    /// Empty when tracing is off (`TraceConfig::sample == 0`).
+    pub fn take_spans(&self) -> Vec<SpanRecord> {
+        self.tracer.drain()
+    }
+
+    /// Spans evicted from a full trace ring (0 unless the ring
+    /// overflowed between `take_spans` calls).
+    pub fn spans_dropped(&self) -> u64 {
+        self.tracer.dropped()
+    }
+
+    /// Snapshot of aggregated metrics — assembled from the atomic
+    /// registry (components before totals, so the accounting invariants
+    /// hold even mid-run) and topped up with queue/pool/adaptive state.
     pub fn stats(&self) -> ServingStats {
-        let mut s = self.stats.lock().unwrap().clone();
+        let mut s = self.reg.snapshot();
         s.wall_s = self.started.elapsed().as_secs_f64();
         s.queue_depth = self.queue.depth() as u64;
         s.queue_peak = self.queue.peak() as u64;
@@ -792,6 +845,7 @@ struct SentPacket {
     net_time: Duration,
     rtt: Duration,
     codec_time: Duration,
+    span: Option<Box<SpanTag>>,
 }
 
 /// One staged request on the pooled path: header by value, payload in a
@@ -803,6 +857,7 @@ struct StagedSg {
     header: PacketHeader,
     frame_header: [u8; TX_HEADER_BYTES],
     payload: Vec<u8>,
+    span: Option<Box<SpanTag>>,
 }
 
 /// Capacity hint for a pooled edge payload buffer.
@@ -853,6 +908,7 @@ fn edge_chain_sg(
     reqs: Vec<Request>,
     uplink: &Mutex<Uplink>,
     pool: &BufPool,
+    tracer: &Tracer,
 ) -> Vec<SentPacket> {
     let mut staged: Vec<StagedSg> = Vec::with_capacity(reqs.len());
     for req in reqs {
@@ -878,10 +934,12 @@ fn edge_chain_sg(
                     header,
                     frame_header,
                     payload,
+                    span: req.span,
                 });
             }
             Err(e) => {
                 pool.checkin(payload);
+                tracer.finish(req.span, SpanKind::Error);
                 req.resp.answer(Err(e));
             }
         }
@@ -902,6 +960,7 @@ fn edge_chain_sg(
             let msg = format!("{e:#}");
             for s in staged {
                 pool.checkin(s.payload);
+                tracer.finish(s.span, SpanKind::Error);
                 s.resp.answer(Err(anyhow::anyhow!("{msg}")));
             }
             return Vec::new();
@@ -928,6 +987,7 @@ fn edge_chain_sg(
             net_time: t.net_time,
             rtt: t.rtt,
             codec_time: t.codec_time,
+            span: s.span,
         })
         .collect()
 }
@@ -942,9 +1002,11 @@ fn edge_chain_owned(
     workers: Option<&Vec<EdgeWorker>>,
     reqs: Vec<Request>,
     uplink: &Mutex<Uplink>,
+    tracer: &Tracer,
 ) -> Vec<SentPacket> {
+    type Staged = (Responder, Instant, Duration, Option<Box<SpanTag>>);
     let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
-    let mut staged: Vec<(Responder, Instant, Duration)> = Vec::with_capacity(reqs.len());
+    let mut staged: Vec<Staged> = Vec::with_capacity(reqs.len());
     for req in reqs {
         let work = (|| -> Result<(ActivationPacket, Duration)> {
             match (workers, cfg.mode) {
@@ -969,9 +1031,10 @@ fn edge_chain_owned(
         match work {
             Ok((packet, edge_dt)) => {
                 packets.push(packet);
-                staged.push((req.resp, req.submitted, edge_dt));
+                staged.push((req.resp, req.submitted, edge_dt, req.span));
             }
             Err(e) => {
+                tracer.finish(req.span, SpanKind::Error);
                 req.resp.answer(Err(e));
             }
         }
@@ -985,7 +1048,8 @@ fn edge_chain_owned(
         Ok(t) => t,
         Err(e) => {
             let msg = format!("{e:#}");
-            for (resp, _, _) in staged {
+            for (resp, _, _, span) in staged {
+                tracer.finish(span, SpanKind::Error);
                 resp.answer(Err(anyhow::anyhow!("{msg}")));
             }
             return Vec::new();
@@ -994,7 +1058,7 @@ fn edge_chain_owned(
     staged
         .into_iter()
         .zip(transfers)
-        .map(|((resp, submitted, edge_dt), t)| SentPacket {
+        .map(|((resp, submitted, edge_dt, span), t)| SentPacket {
             resp,
             submitted,
             edge_dt,
@@ -1003,6 +1067,7 @@ fn edge_chain_owned(
             net_time: t.net_time,
             rtt: t.rtt,
             codec_time: t.codec_time,
+            span,
         })
         .collect()
 }
@@ -1017,7 +1082,8 @@ fn edge_thread(
     uplink: Arc<Mutex<Uplink>>,
     adaptive: Option<Arc<Mutex<AdaptiveRt>>>,
     pool: Arc<BufPool>,
-    stats: Arc<Mutex<ServingStats>>,
+    reg: Arc<ServingRegistry>,
+    tracer: Arc<Tracer>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     // own runtime: PJRT handles are thread-local by construction here.
@@ -1067,6 +1133,17 @@ fn edge_thread(
             }
         }
 
+        // the queue stage closes here: time from submission to the pop
+        // that pulled the request into this chain
+        if tracer.enabled() {
+            let popped = Instant::now();
+            for req in reqs.iter_mut() {
+                if let Some(tag) = req.span.as_mut() {
+                    tag.set_stage(STAGE_QUEUE, popped.saturating_duration_since(req.submitted));
+                }
+            }
+        }
+
         // the whole chain runs under one plan: switches apply between
         // link batches, never inside one
         let plan = adaptive.as_ref().map(|a| a.lock().unwrap().active).unwrap_or(0);
@@ -1075,9 +1152,9 @@ fn edge_thread(
         // run the chain through the configured data plane; every failed
         // member was already answered inline
         let sent = if pool.enabled() {
-            edge_chain_sg(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &pool)
+            edge_chain_sg(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &pool, &tracer)
         } else {
-            edge_chain_owned(&cfg, prt, plan, workers.as_ref(), reqs, &uplink)
+            edge_chain_owned(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &tracer)
         };
         if sent.is_empty() {
             continue;
@@ -1097,15 +1174,12 @@ fn edge_thread(
                 let est = rt.est.bps();
                 if let Some(next) = rt.switcher.tick(est) {
                     rt.active = next;
-                    stats.lock().unwrap().plan_switches += 1;
+                    reg.plan_switches.inc();
                 }
             }
         }
-        {
-            let mut st = stats.lock().unwrap();
-            st.edge_requests[edge_id] += sent.len() as u64;
-            st.plan_requests[plan] += sent.len() as u64;
-        }
+        reg.edge_requests.add(edge_id, sent.len() as u64);
+        reg.plan_requests.add(plan, sent.len() as u64);
 
         let arrived = Instant::now();
         // virtual accounting mirrors what RealSleep's wall clock measures:
@@ -1116,13 +1190,21 @@ fn edge_thread(
         // member's own share
         let sim_chain = prt.sim_edge * sent.len() as u32;
         let mut chain_net = Duration::ZERO;
-        for s in sent {
+        for mut s in sent {
             chain_net += s.net_time;
             let virt = if cfg.delay == DelayMode::Virtual {
                 chain_net + sim_chain
             } else {
                 Duration::ZERO
             };
+            if let Some(tag) = s.span.as_mut() {
+                // accounted stage times: what the pipeline charges (the
+                // modeled edge/wire time under Virtual delay), which is
+                // the decomposition the split planner reasons about
+                tag.set_stage(STAGE_EDGE, s.edge_dt + prt.sim_edge);
+                tag.set_stage(STAGE_PACK, s.codec_time);
+                tag.set_stage(STAGE_UPLINK, s.net_time);
+            }
             let job = CloudJob {
                 packet: s.packet,
                 resp: s.resp,
@@ -1134,6 +1216,7 @@ fn edge_thread(
                 arrived,
                 plan,
                 virt,
+                span: s.span,
             };
             // bounded send: blocks under cloud saturation, pushing the
             // backlog into the (shedding) admission queue
@@ -1151,7 +1234,8 @@ fn dispatcher_thread(
     shard_txs: Vec<mpsc::SyncSender<ShardBatch>>,
     outstanding: Outstanding,
     cost: Arc<BatchCost>,
-    stats: Arc<Mutex<ServingStats>>,
+    reg: Arc<ServingRegistry>,
+    tracer: Arc<Tracer>,
 ) {
     let largest_engine = *engine_batches.last().expect("engine set is never empty");
     let eff_max_batch = sched.max_batch.clamp(1, largest_engine);
@@ -1220,13 +1304,14 @@ fn dispatcher_thread(
         let n = batch.len();
         outstanding.add(shard, n);
         if cause == DrainCause::SloBudget {
-            stats.lock().unwrap().batch_slo_closes += 1;
+            reg.batch_slo_closes.inc();
         }
         let sb = ShardBatch { jobs: batch, engine_batch, plan };
         if let Err(mpsc::SendError(lost)) = shard_txs[shard].send(sb) {
             // shard is gone; answer its batch rather than dropping it
             outstanding.sub(shard, n);
             for job in lost.jobs {
+                tracer.finish(job.span, SpanKind::Error);
                 job.resp.answer(Err(anyhow::anyhow!("cloud shard {shard} unavailable")));
             }
         }
@@ -1329,7 +1414,8 @@ fn shard_thread(
     outstanding: Outstanding,
     cost: Arc<BatchCost>,
     pool: Arc<BufPool>,
-    stats: Arc<Mutex<ServingStats>>,
+    reg: Arc<ServingRegistry>,
+    tracer: Arc<Tracer>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let init = (|| -> Result<CloudExec> {
@@ -1380,8 +1466,9 @@ fn shard_thread(
         // plan purity is a dispatcher invariant; count any violation so a
         // regression is visible in ServingStats instead of silent
         if sb.jobs.iter().any(|j| j.plan != sb.plan) {
-            stats.lock().unwrap().mid_batch_swaps += 1;
+            reg.mid_batch_swaps.inc();
         }
+        let exec_start = Instant::now();
         let run = if pool.enabled() {
             run_batch_pooled(&exec, &plans, &sb, &pool, &mut logits_buf, &mut pix_buf)
         } else {
@@ -1398,10 +1485,9 @@ fn shard_thread(
             Ok((logits, cloud_dt)) => {
                 // feed the SLO predictor with the measured execution time
                 cost.observe(sb.engine_batch, cloud_dt.as_secs_f64());
-                let mut st = stats.lock().unwrap();
-                st.batches += 1;
-                st.shard_batches[shard_id] += 1;
-                for (job, lg) in sb.jobs.into_iter().zip(logits) {
+                reg.batches.inc();
+                reg.shard_batches.inc(shard_id);
+                for (mut job, lg) in sb.jobs.into_iter().zip(logits) {
                     // total_cmp: a NaN logit (conceivable once inputs
                     // arrive off a real network) must not panic the
                     // shard thread — NaN sorts above every real value,
@@ -1432,20 +1518,33 @@ fn shard_thread(
                         shard: shard_id,
                         plan: job.plan,
                     };
-                    st.requests += 1;
-                    st.shard_requests[shard_id] += 1;
-                    st.tx_bytes_total += job.tx_bytes as u64;
-                    st.e2e.record(res.e2e);
-                    st.edge.record(res.edge);
-                    st.net.record(res.net);
-                    st.cloud.record(res.cloud);
-                    st.queue.record(res.queue);
+                    // totals before components: a concurrent snapshot
+                    // (components first, totals last) then never observes
+                    // a shard sum exceeding the total
+                    reg.requests.inc();
+                    reg.shard_requests.inc(shard_id);
+                    reg.tx_bytes_total.add(job.tx_bytes as u64);
+                    reg.e2e.record(res.e2e);
+                    reg.edge.record(res.edge);
+                    reg.net.record(res.net);
+                    reg.cloud.record(res.cloud);
+                    reg.queue.record(res.queue);
+                    if let Some(tag) = job.span.as_mut() {
+                        tag.set_stage(
+                            STAGE_DISPATCH,
+                            exec_start.saturating_duration_since(job.arrived),
+                        );
+                        tag.set_stage(STAGE_CLOUD, cloud_dt);
+                        tag.set_stage(STAGE_RESPOND, exec_start.elapsed().saturating_sub(cloud_dt));
+                    }
+                    tracer.finish(job.span, SpanKind::Done);
                     job.resp.answer(Ok(Outcome::Done(res)));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for job in sb.jobs {
+                    tracer.finish(job.span, SpanKind::Error);
                     job.resp.answer(Err(anyhow::anyhow!("{msg}")));
                 }
             }

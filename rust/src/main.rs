@@ -19,19 +19,19 @@
 
 use anyhow::{bail, Context, Result};
 use auto_split::coordinator::{
-    adaptive_table, c10k_tcp, load_eval_images, mixed_workload, poisson_schedule, policy_table,
-    replay, replay_traced, run_mixed, write_adaptive_bank, write_reference_artifacts,
-    AdaptiveBankSpec, AdaptiveConfig, AdmissionPolicy, BwTrace, C10kConfig, Client, CostPrior,
-    Hysteresis, IoModel, LoadReport, NetConfig, Outcome, RefArtifactSpec, RoutePolicy,
-    SchedulerConfig, ServeConfig, ServeMode, Server, ServingStats, TcpClient, TcpFrontend,
-    WireFormat,
+    adaptive_table, c10k_tcp, chrome_trace, load_eval_images, mixed_workload, poisson_schedule,
+    policy_table, replay, replay_traced, run_mixed, write_adaptive_bank,
+    write_reference_artifacts, AdaptiveBankSpec, AdaptiveConfig, AdmissionPolicy, BwTrace,
+    C10kConfig, Client, CostPrior, Hysteresis, IoModel, LoadReport, NetConfig, Outcome,
+    RefArtifactSpec, RoutePolicy, SchedulerConfig, ServeConfig, ServeMode, Server, ServingStats,
+    TcpClient, TcpFrontend, TraceConfig, WireFormat,
 };
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
 use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
 use auto_split::splitter::{AutoSplitConfig, BankGrid, BaselineCtx, PlanBank, PlanSpec, Planner};
-use auto_split::util::Json;
+use auto_split::util::{bench_meta, Json};
 use auto_split::zoo;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -82,6 +82,7 @@ fn main() -> Result<()> {
         Some("bankgen") => cmd_bankgen(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadtest") => cmd_loadtest(&args),
+        Some("stats") => cmd_stats(&args),
         Some("zoo") => {
             for m in zoo::MODEL_NAMES {
                 println!("{m}");
@@ -92,7 +93,9 @@ fn main() -> Result<()> {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
-            eprintln!("usage: auto-split <optimize|baselines|bankgen|serve|loadtest|zoo> [flags]");
+            eprintln!(
+                "usage: auto-split <optimize|baselines|bankgen|serve|loadtest|stats|zoo> [flags]"
+            );
             eprintln!("  optimize  --model resnet50 [--threshold 5] [--mem-mb 32] [--mbps 3]");
             eprintln!("            [--threads 0]   planner workers (0 = per core, 1 = sequential)");
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
@@ -106,6 +109,7 @@ fn main() -> Result<()> {
             eprintln!("            [--adaptive --bank <dir> [--hys-margin .25] [--hys-windows 3]]");
             eprintln!("            [--pool on|off]");
             eprintln!("            [--listen 127.0.0.1:7070 [--duration-s 0]]   TCP front-end");
+            eprintln!("            [--stats-interval-s 0]   periodic stats line while listening");
             eprintln!("            [--io-model reactor|threads]   socket engine (default reactor)");
             eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
             eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
@@ -117,6 +121,10 @@ fn main() -> Result<()> {
             eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
             eprintln!("             [--pin plan-id] [--hys-margin 0.25] [--hys-windows 3]]");
             eprintln!("            + all `serve` scheduler flags");
+            eprintln!("  stats     --connect host:port   fetch a live ServingStats snapshot");
+            eprintln!("            from a running `serve --listen` over the stats frame");
+            eprintln!("  (serve + loadtest) [--trace-sample N] [--trace-out trace.json]");
+            eprintln!("            per-request spans, 1-in-N sampled; Chrome trace-event JSON");
             Ok(())
         }
     }
@@ -245,6 +253,36 @@ fn net_config_from_args(args: &Args) -> Result<NetConfig> {
     Ok(cfg)
 }
 
+/// Parse the shared `--trace-sample` / `--trace-out` tracing flags.
+/// `--trace-out` without an explicit sample implies `--trace-sample 1`
+/// (trace every request) — an empty trace file helps nobody.
+fn trace_from_args(args: &Args) -> Result<TraceConfig> {
+    let mut t = TraceConfig::default();
+    t.sample = args.parse("--trace-sample", 0u64)?;
+    if t.sample == 0 && args.get("--trace-out").is_some() {
+        t.sample = 1;
+    }
+    Ok(t)
+}
+
+/// Drain the server's span ring into a Chrome trace-event file
+/// (`--trace-out`; open it at `ui.perfetto.dev` or `chrome://tracing`).
+/// Must run before [`Server::shutdown`] consumes the server. Returns the
+/// number of spans written (0 when tracing is off).
+fn export_trace(args: &Args, server: &Server) -> Result<usize> {
+    let Some(path) = args.get("--trace-out") else { return Ok(0) };
+    let spans = server.take_spans();
+    let dropped = server.spans_dropped();
+    let mut doc = chrome_trace(&spans).to_string_pretty();
+    doc.push('\n');
+    std::fs::write(path, doc).with_context(|| format!("write {path}"))?;
+    if dropped > 0 {
+        eprintln!("warning: span ring overflowed — {dropped} spans dropped (raise capacity)");
+    }
+    println!("wrote {path} ({} spans)", spans.len());
+    Ok(spans.len())
+}
+
 /// Parse `--hys-margin` / `--hys-windows`. The CLI is strict where the
 /// library clamps: a degenerate config (zero windows, negative margin)
 /// would disable flap damping entirely, so it is rejected here instead
@@ -349,12 +387,20 @@ fn write_bench_json(
         ("achieved_rps", Json::Num(r.achieved_rps)),
         ("p50_ms", Json::Num(r.quantile(0.5) * 1e3)),
         ("p99_ms", Json::Num(r.quantile(0.99) * 1e3)),
+        ("p999_ms", Json::Num(r.quantile(0.999) * 1e3)),
         ("shed_rate", Json::Num(r.shed_rate())),
         ("requests", Json::Num(r.requests as f64)),
         ("completed", Json::Num(r.completed as f64)),
         ("shed", Json::Num(r.shed as f64)),
         ("errors", Json::Num(r.errors as f64)),
         ("tx_bytes_per_req", Json::Num(r.tx_bytes_per_completed())),
+        (
+            "meta",
+            bench_meta(&format!(
+                "transport={transport} shards={} admission={} route={} queue_cap={}",
+                sched.shards, sched.admission, sched.route, sched.queue_cap
+            )),
+        ),
     ]);
     let mut doc = json.to_string_pretty();
     doc.push('\n');
@@ -364,7 +410,7 @@ fn write_bench_json(
 fn print_report(tag: &str, r: &LoadReport) {
     println!(
         "{tag}: offered {:.0} rps  achieved {:.0} rps  completed {}  shed {}  errors {}\n\
-         {tag}: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms",
+         {tag}: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  p99.9 {:.2} ms  mean {:.2} ms",
         r.offered_rps,
         r.achieved_rps,
         r.completed,
@@ -373,6 +419,7 @@ fn print_report(tag: &str, r: &LoadReport) {
         r.quantile(0.5) * 1e3,
         r.quantile(0.95) * 1e3,
         r.quantile(0.99) * 1e3,
+        r.quantile(0.999) * 1e3,
         r.mean() * 1e3,
     );
 }
@@ -490,6 +537,7 @@ fn write_adaptive_json(path: &str, rows: &[(String, LoadReport, ServingStats)]) 
         ("bench", Json::Str("adaptive".into())),
         ("adaptive_strictly_dominates_p50", Json::Bool(dominates)),
         ("rows", Json::Arr(rows_json)),
+        ("meta", bench_meta(&format!("adaptive loadtest, {} configs", rows.len()))),
     ]);
     let mut doc = json.to_string_pretty();
     doc.push('\n');
@@ -678,10 +726,9 @@ fn run_tcp_loadtest(
     seed: u64,
     mbps: f64,
 ) -> Result<()> {
-    // the shared tail: warm up one connection, drive the workload, and
-    // record the run — identical whether the server is remote or local
+    // the shared tail: drive the workload over an already-warm connection
+    // and record the run — identical whether the server is remote or local
     let drive = |client: TcpClient, images: &[Vec<f32>]| -> Result<()> {
-        let _ = client.submit(images[0].clone())?.recv(); // warm-up
         let report =
             run_workload(&client, images, rps, n, clients, per_client, seed, sched.shards)?;
         print_report("tcp", &report);
@@ -693,11 +740,17 @@ fn run_tcp_loadtest(
     };
 
     if let Some(addr) = args.get("--connect") {
+        anyhow::ensure!(
+            args.get("--trace-out").is_none(),
+            "--trace-out needs the in-process server (spans live server-side; drop --connect)"
+        );
         // remote server: images must match its artifact spec — the
         // default synthetic spec on both sides (CI's two-process smoke)
         let spec = RefArtifactSpec::default();
         let images: Vec<Vec<f32>> = (0..32u64).map(|i| spec.image(1000 + i)).collect();
-        return drive(TcpClient::connect(addr)?, &images);
+        let client = TcpClient::connect(addr)?;
+        let _ = client.submit(images[0].clone())?.recv(); // warm-up
+        return drive(client, &images);
     }
 
     let (dir, images, synthetic) = serving_inputs(args)?;
@@ -706,12 +759,19 @@ fn run_tcp_loadtest(
         cfg.uplink = Uplink::mbps(mbps);
         cfg.scheduler = sched.clone();
         cfg.pool = pool_from_args(args)?;
+        cfg.trace = trace_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend =
             TcpFrontend::bind("127.0.0.1:0", server.clone(), net_config_from_args(args)?)?;
         println!("tcp loopback front-end on {}", frontend.local_addr());
+        let client = TcpClient::connect(frontend.local_addr())?;
+        let _ = client.submit(images[0].clone())?.recv(); // warm-up
+        // the warm-up span isn't part of the workload: drop it so a
+        // `--trace-sample 1` trace holds exactly completed+shed spans
+        let _ = server.take_spans();
         // the client closes inside `drive`, before the front-end drains
-        drive(TcpClient::connect(frontend.local_addr())?, &images)?;
+        drive(client, &images)?;
+        export_trace(args, &server)?;
         println!("\n{}", frontend.shutdown().report());
         Ok(())
     })();
@@ -743,8 +803,9 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
         cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
         cfg.scheduler = sched.clone();
         cfg.pool = pool_from_args(args)?;
+        cfg.trace = trace_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
-        let frontend = TcpFrontend::bind("127.0.0.1:0", server, net)?;
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net)?;
         println!(
             "c10k over {} (io-model {}): {} conns × {} reqs, churn {}, slowloris {}",
             frontend.local_addr(),
@@ -764,6 +825,7 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
             write_bench_json(path, sched, &report.load, "c10k")?;
             println!("wrote {path}");
         }
+        export_trace(args, &server)?;
         println!("\n{}", frontend.shutdown().report());
         Ok(())
     })();
@@ -791,6 +853,7 @@ fn run_loadtest(
         cfg.uplink = Uplink::mbps(mbps);
         cfg.scheduler = sched;
         cfg.pool = pool_from_args(args)?;
+        cfg.trace = trace_from_args(args)?;
         Server::start(cfg)
     };
 
@@ -821,12 +884,14 @@ fn run_loadtest(
 
     let server = make_server(sched.clone())?;
     let _ = server.infer(images[0].clone()); // warm-up
+    let _ = server.take_spans(); // drop the warm-up span (see the TCP path)
     let report = run_workload(&server, images, rps, n, clients, per_client, seed, sched.shards)?;
     print_report("open", &report);
     if let Some(path) = args.get("--json") {
         write_bench_json(path, sched, &report, "inproc")?;
         println!("wrote {path}");
     }
+    export_trace(args, &server)?;
     println!("\n{}", server.shutdown().report());
     Ok(())
 }
@@ -844,6 +909,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.uplink = Uplink::mbps(args.parse("--mbps", 3.0)?);
     cfg.scheduler = scheduler_from_args(args)?;
     cfg.pool = pool_from_args(args)?;
+    cfg.trace = trace_from_args(args)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }
@@ -876,18 +942,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(listen) = args.get("--listen") {
         use std::io::Write as _;
         let server = std::sync::Arc::new(server);
-        let frontend = TcpFrontend::bind(listen, server, net_config_from_args(args)?)?;
+        let frontend = TcpFrontend::bind(listen, server.clone(), net_config_from_args(args)?)?;
         // this exact line is what `loadtest --connect` scripts parse
         println!("listening on {}", frontend.local_addr());
         let _ = std::io::stdout().flush();
         let duration_s: f64 = args.parse("--duration-s", 0.0)?;
-        if duration_s > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(duration_s));
+        let interval_s: f64 = args.parse("--stats-interval-s", 0.0)?;
+        let started = std::time::Instant::now();
+        let deadline =
+            (duration_s > 0.0).then(|| started + Duration::from_secs_f64(duration_s));
+        let tick = if interval_s > 0.0 {
+            Duration::from_secs_f64(interval_s.max(0.01))
         } else {
-            loop {
-                std::thread::sleep(Duration::from_secs(3600));
+            Duration::from_secs(3600)
+        };
+        loop {
+            let now = std::time::Instant::now();
+            let nap = match deadline {
+                Some(d) if now >= d => break,
+                Some(d) => tick.min(d - now),
+                None => tick,
+            };
+            std::thread::sleep(nap);
+            if interval_s > 0.0 {
+                // same snapshot the `stats` request frame serves, as a
+                // one-line periodic report on stdout
+                let s = frontend.stats();
+                println!(
+                    "[stats +{:.0}s] completed {}  shed {}  batches {}  p50 {:.2} ms  \
+                     p99 {:.2} ms  queue {}  conns {}",
+                    started.elapsed().as_secs_f64(),
+                    s.requests,
+                    s.shed,
+                    s.batches,
+                    s.e2e.quantile(0.5) * 1e3,
+                    s.e2e.quantile(0.99) * 1e3,
+                    s.queue_depth,
+                    s.tcp_active,
+                );
+                let _ = std::io::stdout().flush();
             }
         }
+        export_trace(args, &server)?;
         let stats = frontend.shutdown();
         println!("{}", stats.report());
         if synthetic {
@@ -910,6 +1006,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Outcome::Shed(_) => shed += 1,
             }
         }
+        export_trace(args, &server)?;
         let stats = server.shutdown();
         println!("\nanswered {answered} requests ({shed} shed)");
         println!("{}", stats.report());
@@ -946,11 +1043,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Outcome::Shed(_) => shed += 1,
         }
     }
+    export_trace(args, &server)?;
     let stats = server.shutdown();
     println!(
         "\naccuracy over {answered} answered requests ({shed} shed): {:.3}",
         if answered > 0 { correct as f64 / answered as f64 } else { 0.0 }
     );
     println!("{}", stats.report());
+    Ok(())
+}
+
+/// `stats --connect HOST:PORT` — fetch a live [`ServingStats`] snapshot
+/// from a running `serve --listen` process over the stats request frame
+/// (a bare header with the `0xFF` bit-width sentinel) and print the JSON
+/// body verbatim.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("--connect").context("stats requires --connect HOST:PORT")?;
+    let client = TcpClient::connect(addr)?;
+    let snap = client.fetch_stats()?;
+    println!("{}", snap.to_string_pretty());
     Ok(())
 }

@@ -1,0 +1,92 @@
+//! Provenance metadata for benchmark artifacts.
+//!
+//! Every `BENCH_*.json` writer attaches one [`bench_meta`] block so a
+//! result file is attributable: which commit produced it, when, and
+//! under what configuration. Offline build — the git sha comes from
+//! shelling out to `git` (best-effort: a missing binary or a non-repo
+//! working directory degrades to `"unknown"`, never an error), and the
+//! UTC timestamp is derived from `SystemTime` by hand (no chrono).
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// The shared `meta` block: `{"git_sha", "timestamp_utc", "config"}`.
+pub fn bench_meta(config: &str) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("git_sha".to_string(), Json::Str(git_sha())),
+        ("timestamp_utc".to_string(), Json::Str(utc_now())),
+        ("config".to_string(), Json::Str(config.to_string())),
+    ]))
+}
+
+/// Best-effort `git rev-parse --short HEAD`; `"unknown"` when git or the
+/// repository is unavailable (e.g. a source tarball build).
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Current wall time as ISO-8601 UTC (`YYYY-MM-DDTHH:MM:SSZ`).
+fn utc_now() -> String {
+    let secs = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    format_utc(secs)
+}
+
+/// Format seconds-since-epoch as ISO-8601 UTC. Civil-date conversion via
+/// Howard Hinnant's days-from-civil inverse (exact over the u64 range we
+/// care about; leap seconds are out of scope for provenance stamps).
+fn format_utc(epoch_secs: u64) -> String {
+    let days = epoch_secs / 86_400;
+    let rem = epoch_secs % 86_400;
+    let (h, m, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+
+    // civil_from_days, shifted so the era starts 0000-03-01
+    let z = days as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11], March-based
+    let d = doy - (153 * mp + 2) / 5 + 1; // [1, 31]
+    let month = if mp < 10 { mp + 3 } else { mp - 9 }; // [1, 12]
+    let year = if month <= 2 { y + 1 } else { y };
+    format!("{year:04}-{month:02}-{d:02}T{h:02}:{m:02}:{s:02}Z")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_epochs_format_correctly() {
+        assert_eq!(format_utc(0), "1970-01-01T00:00:00Z");
+        // `date -u -d @951827696 +%FT%TZ`
+        assert_eq!(format_utc(951_827_696), "2000-02-29T12:34:56Z");
+        // leap-year boundary the March-based calendar must get right
+        assert_eq!(format_utc(951_868_800), "2000-03-01T00:00:00Z");
+        assert_eq!(format_utc(1_754_524_800), "2025-08-07T00:00:00Z");
+    }
+
+    #[test]
+    fn meta_block_has_all_keys() {
+        let m = bench_meta("shards=2 policy=shed-newest");
+        assert_eq!(
+            m.get("config").and_then(|v| v.as_str()),
+            Some("shards=2 policy=shed-newest")
+        );
+        let sha = m.get("git_sha").and_then(|v| v.as_str()).unwrap();
+        assert!(!sha.is_empty());
+        let ts = m.get("timestamp_utc").and_then(|v| v.as_str()).unwrap();
+        assert_eq!(ts.len(), 20, "{ts}");
+        assert!(ts.ends_with('Z') && ts.contains('T'), "{ts}");
+    }
+}

@@ -1,5 +1,7 @@
 //! Small in-tree utilities (the build is offline: no serde/clap/etc.).
 
 pub mod json;
+pub mod meta;
 
 pub use json::Json;
+pub use meta::bench_meta;

@@ -17,8 +17,9 @@ use auto_split::coordinator::net::{
     decode_response, decode_response_header, encode_request, RESP_HEADER_BYTES,
 };
 use auto_split::coordinator::{
-    poisson_schedule, reference_image, replay, write_reference_artifacts, IoModel, NetConfig,
-    Outcome, RefArtifactSpec, ServeConfig, Server, TcpClient, TcpFrontend, TX_HEADER_BYTES,
+    poisson_schedule, reference_image, replay, write_reference_artifacts, AdmissionPolicy,
+    IoModel, NetConfig, Outcome, RefArtifactSpec, ServeConfig, Server, SpanKind, TcpClient,
+    TcpFrontend, TraceConfig, TX_HEADER_BYTES,
 };
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -355,6 +356,87 @@ fn shutdown_with_no_disconnects_answers_every_admitted_request_on_the_wire() {
         );
         assert_eq!(stats.tcp_read_errors, 0, "{model}");
         assert_eq!(stats.requests + stats.shed, stats.offered, "{model}: exactly-once");
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn stats_frame_returns_a_live_snapshot_matching_end_of_run_stats() {
+    // The observability ISSUE's live-export acceptance: a `stats` request
+    // frame on the same socket as inference traffic is answered in wire
+    // order with a ServingStats JSON snapshot whose totals match the
+    // end-of-run stats — on both socket engines.
+    for model in [IoModel::Reactor, IoModel::Threads] {
+        let (dir, _server, frontend) = start_frontend(&format!("stats-{model}"), net_with(model));
+        let client = TcpClient::connect(frontend.local_addr()).unwrap();
+        let n = 12u64;
+        let rxs: Vec<_> = (0..n).map(|i| client.submit(reference_image(i % 6)).unwrap()).collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap().unwrap().done().expect("served");
+        }
+
+        let snap = client.fetch_stats().expect("stats frame answered");
+        let num = |k: &str| snap.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0) as i64;
+        assert_eq!(num("requests"), n as i64, "{model}: snapshot counts every completion");
+        assert_eq!(num("shed"), 0, "{model}");
+        assert_eq!(num("offered"), n as i64, "{model}");
+        assert_eq!(num("tcp_requests"), n as i64, "{model}: stats frames are not requests");
+        assert!(
+            snap.get("e2e").and_then(|h| h.get("p50_ms")).and_then(|v| v.as_f64()).is_some(),
+            "{model}: snapshot carries latency quantiles"
+        );
+
+        // a second fetch is answered too (the frame leaves the
+        // connection open) and stays monotonic
+        let again = client.fetch_stats().expect("second stats fetch");
+        assert_eq!(again.get("requests").and_then(|v| v.as_f64()), Some(n as f64), "{model}");
+        drop(client);
+
+        let end = frontend.shutdown();
+        assert_eq!(end.requests, n, "{model}: snapshot totals match end-of-run stats");
+        assert_eq!(end.shed, 0, "{model}");
+        assert_eq!(end.tcp_requests, n, "{model}");
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn trace_sample_1_holds_one_span_per_completed_or_shed_request() {
+    // The tracing ISSUE's exactness acceptance over real sockets: at
+    // `--trace-sample 1`, Done spans == completed and Shed spans ==
+    // shed, on both socket engines, under a shed-inducing config so
+    // both terminal kinds appear. (The serving_obsv bench covers the
+    // pool on/off axis at larger scale.)
+    for model in [IoModel::Reactor, IoModel::Threads] {
+        let dir = write_artifacts(&format!("trace-{model}"));
+        let mut cfg = ServeConfig::new(&dir);
+        cfg.trace = TraceConfig { sample: 1, ..TraceConfig::default() };
+        cfg.scheduler.queue_cap = 2;
+        cfg.scheduler.admission = AdmissionPolicy::ShedNewest;
+        let server = Arc::new(Server::start(cfg).unwrap());
+        let frontend =
+            TcpFrontend::bind("127.0.0.1:0", server.clone(), net_with(model)).unwrap();
+        let client = TcpClient::connect(frontend.local_addr()).unwrap();
+        let _ = client.submit(reference_image(0)).unwrap().recv().unwrap();
+        let _ = server.take_spans(); // drop the warm-up span
+
+        let images: Vec<Vec<f32>> = (0..6u64).map(reference_image).collect();
+        let schedule = poisson_schedule(3000.0, 150, images.len(), 13);
+        let report = replay(&client, &images, &schedule).unwrap();
+        assert_eq!(report.errors, 0, "{model}");
+        assert!(report.shed > 0, "{model}: the config must actually shed");
+        drop(client);
+
+        let spans = server.take_spans();
+        assert_eq!(server.spans_dropped(), 0, "{model}");
+        let done = spans.iter().filter(|s| s.kind == SpanKind::Done).count() as u64;
+        let shed = spans.iter().filter(|s| s.kind == SpanKind::Shed).count() as u64;
+        let errs = spans.iter().filter(|s| s.kind == SpanKind::Error).count() as u64;
+        assert_eq!(done, report.completed, "{model}: one Done span per completion");
+        assert_eq!(shed, report.shed, "{model}: one Shed span per shed");
+        assert_eq!(errs, 0, "{model}");
+
+        frontend.shutdown();
         cleanup(&dir);
     }
 }
