@@ -238,10 +238,13 @@ fn main() {
         ("parity_ok", Json::Bool(parity_ok)),
         (
             "meta",
-            auto_split::util::bench_meta(&format!(
-                "{connections} connections × {} reqs, churn {}, slowloris on",
-                cfg.per_conn, cfg.churn
-            )),
+            auto_split::util::bench_meta(
+                "c10k",
+                &format!(
+                    "{connections} connections × {} reqs, churn {}, slowloris on",
+                    cfg.per_conn, cfg.churn
+                ),
+            ),
         ),
     ]);
     let mut doc = json.to_string_pretty();

@@ -211,8 +211,9 @@ fn main() {
         })
         .collect::<Vec<_>>()
         .join(",\n");
-    let meta = auto_split::util::bench_meta(&format!("{n} requests/mode, loopback synthetic"))
-        .to_string_pretty();
+    let meta =
+        auto_split::util::bench_meta("datapath", &format!("{n} requests/mode, loopback synthetic"))
+            .to_string_pretty();
     let json = format!(
         "{{\n  \"bench\": \"datapath\",\n  \"requests\": {n},\n  \
          \"alloc_drop_pct\": {alloc_drop:.2},\n  \"bytes_drop_pct\": {bytes_drop:.2},\n  \

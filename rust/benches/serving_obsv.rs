@@ -160,7 +160,10 @@ fn main() {
         ("overhead_ok", Json::Bool(overhead_ok)),
         ("exactness", Json::Arr(rows)),
         ("exact_ok", Json::Bool(exact_ok)),
-        ("meta", bench_meta("trace-sample=1 vs off, 600 reqs @ 400 rps; 4 exactness combos")),
+        (
+            "meta",
+            bench_meta("obsv", "trace-sample=1 vs off, 600 reqs @ 400 rps; 4 exactness combos"),
+        ),
     ]);
     let mut doc = json.to_string_pretty();
     doc.push('\n');

@@ -377,6 +377,86 @@ pub struct AdaptiveRt {
     pub pinned: bool,
 }
 
+/// Modeled-vs-measured drift detector: flags a stale bank when the
+/// measured end-to-end latency sustainedly diverges from the active
+/// plan's `predict_s` (the predict→measure loop's alarm side — the
+/// repricing side is `bankgen --calib`).
+///
+/// A log-space EWMA of `measured / predicted` (log-space for the same
+/// reason as [`LinkEstimator`]: drift is multiplicative and must damp
+/// symmetrically) must sit outside `[1/(1+threshold), 1+threshold]` for
+/// `windows` consecutive observations to raise the flag, and back
+/// inside for `windows` consecutive observations to clear it — the same
+/// two-sided hysteresis discipline as [`PlanSwitcher`], so a ratio
+/// hovering on the boundary can never flap the flag.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    alpha: f64,
+    ln_ratio: f64,
+    threshold: f64,
+    windows: u32,
+    /// Consecutive observations on the far side of the current state.
+    streak: u32,
+    stale: bool,
+    samples: u64,
+}
+
+impl DriftDetector {
+    /// `threshold` is the tolerated fractional drift (e.g. `1.0` flags
+    /// beyond 2× or below ½×); `windows` the consecutive-observation
+    /// requirement in each direction. Degenerate values clamp to safe
+    /// ones (a zero/negative/NaN threshold or zero windows would flap).
+    pub fn new(threshold: f64, windows: u32) -> Self {
+        DriftDetector {
+            alpha: 0.2,
+            ln_ratio: 0.0,
+            threshold: if threshold > 0.0 { threshold } else { 1.0 },
+            windows: windows.max(1),
+            streak: 0,
+            stale: false,
+            samples: 0,
+        }
+    }
+
+    /// Fold in one completed request's measured e2e seconds against the
+    /// plan's prediction at decision time. Degenerate samples (non-finite
+    /// or non-positive on either side) are ignored.
+    pub fn observe(&mut self, measured_s: f64, predicted_s: f64) {
+        if !(measured_s > 0.0 && measured_s.is_finite())
+            || !(predicted_s > 0.0 && predicted_s.is_finite())
+        {
+            return;
+        }
+        let sample = (measured_s / predicted_s).ln();
+        self.ln_ratio = (1.0 - self.alpha) * self.ln_ratio + self.alpha * sample;
+        self.samples += 1;
+        let outside = self.ln_ratio.abs() > (1.0 + self.threshold).ln();
+        if outside != self.stale {
+            self.streak += 1;
+            if self.streak >= self.windows {
+                self.stale = outside;
+                self.streak = 0;
+            }
+        } else {
+            self.streak = 0;
+        }
+    }
+
+    /// Smoothed measured/predicted ratio (1.0 before any sample).
+    pub fn ratio(&self) -> f64 {
+        self.ln_ratio.exp()
+    }
+
+    /// Is the bank's prediction currently flagged as stale?
+    pub fn stale(&self) -> bool {
+        self.stale
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -554,6 +634,74 @@ mod tests {
         assert_eq!(sw.tick(100e6), None, "same plan, different bin");
         assert_eq!(sw.active_bin(), 2);
         assert_eq!(sw.plan(), 1);
+    }
+
+    #[test]
+    fn drift_detector_stays_quiet_under_steady_accurate_load() {
+        let mut d = DriftDetector::new(1.0, 5);
+        for _ in 0..500 {
+            // measured wobbles ±20% around the prediction — well inside 2×
+            d.observe(1.1e-3, 1e-3);
+            d.observe(0.9e-3, 1e-3);
+        }
+        assert!(!d.stale(), "steady accurate load must never flag");
+        assert!((d.ratio() - 1.0).abs() < 0.15, "{}", d.ratio());
+        assert_eq!(d.samples(), 1000);
+    }
+
+    #[test]
+    fn drift_detector_flags_sustained_drift_and_clears() {
+        let mut d = DriftDetector::new(1.0, 5);
+        // measured consistently 4× the prediction: the EWMA crosses 2×
+        for _ in 0..60 {
+            d.observe(4e-3, 1e-3);
+        }
+        assert!(d.stale(), "sustained 4× drift must flag (ratio {})", d.ratio());
+        // predictions become accurate again (bank repriced): flag clears
+        for _ in 0..60 {
+            d.observe(1e-3, 1e-3);
+        }
+        assert!(!d.stale(), "recovered accuracy must clear (ratio {})", d.ratio());
+    }
+
+    #[test]
+    fn drift_detector_no_flap_on_boundary_oscillation() {
+        // drive the smoothed ratio right up to the 2× boundary, then
+        // oscillate samples across it: the windows requirement plus the
+        // EWMA must keep the flag from toggling more than once
+        let mut d = DriftDetector::new(1.0, 5);
+        for _ in 0..200 {
+            d.observe(2e-3, 1e-3);
+        }
+        let settled = d.stale();
+        let mut flips = 0;
+        for i in 0..400 {
+            let m = if i % 2 == 0 { 2.4e-3 } else { 1.7e-3 };
+            let before = d.stale();
+            d.observe(m, 1e-3);
+            if d.stale() != before {
+                flips += 1;
+            }
+        }
+        assert!(flips <= 1, "boundary oscillation flipped the flag {flips} times");
+        let _ = settled;
+    }
+
+    #[test]
+    fn drift_detector_ignores_degenerate_samples() {
+        let mut d = DriftDetector::new(1.0, 3);
+        d.observe(f64::NAN, 1e-3);
+        d.observe(1e-3, f64::NAN);
+        d.observe(0.0, 1e-3);
+        d.observe(-1.0, 1e-3);
+        d.observe(1e-3, 0.0);
+        d.observe(1e-3, f64::INFINITY);
+        assert_eq!(d.samples(), 0);
+        assert_eq!(d.ratio(), 1.0);
+        assert!(!d.stale());
+        // degenerate construction clamps
+        let d = DriftDetector::new(-3.0, 0);
+        assert!(!d.stale());
     }
 
     #[test]

@@ -4,112 +4,75 @@
 //! [`super::obsv::ServingRegistry`] is the write side, and a
 //! [`ServingStats`] is assembled from its snapshot at read time.
 
-use crate::util::Json;
+use crate::util::{HistSnapshot, Json};
 use std::time::Duration;
 
-/// Log-scale latency histogram from 1 µs to ~100 s.
-#[derive(Debug, Clone)]
+/// Read-side latency histogram: a thin view over one
+/// [`util::hist::HistSnapshot`](crate::util::HistSnapshot). The bucket
+/// layout, quantile math, and edge-case policy (NaN ignored, negatives
+/// clamp to zero, +inf to the top bucket) are the shared `util::hist`
+/// implementation — the same one the atomic registry histograms use —
+/// so the registry re-layers onto this shape losslessly (a snapshot
+/// *is* the backing store) and there is exactly one bucket scheme in
+/// the tree. Only the JSON summary shape lives here.
+#[derive(Debug, Clone, Default)]
 pub struct LatencyHistogram {
-    buckets: Vec<u64>,
-    count: u64,
-    sum_s: f64,
-    max_s: f64,
+    snap: HistSnapshot,
 }
 
-const BUCKETS: usize = 160; // 8 per decade over 1e-6..1e2+
-const LOG_MIN: f64 = -6.0;
-const PER_DECADE: f64 = 20.0;
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram { buckets: vec![0; BUCKETS], count: 0, sum_s: 0.0, max_s: 0.0 }
+impl From<HistSnapshot> for LatencyHistogram {
+    /// Lossless: the snapshot becomes the backing store directly — no
+    /// re-bucketing, exact moments preserved.
+    fn from(snap: HistSnapshot) -> Self {
+        LatencyHistogram { snap }
     }
 }
 
 impl LatencyHistogram {
     pub fn record(&mut self, d: Duration) {
-        self.record_n(d.as_secs_f64(), 1);
+        self.snap.record_ns_n(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX), 1);
     }
 
     /// Record a duration given in seconds. NaN is ignored (an undefined
-    /// sample must not shift quantiles), negatives clamp to the floor
+    /// sample must not shift quantiles), negatives clamp to the zero
     /// bucket, +inf clamps to the top bucket.
     pub fn record_secs(&mut self, s: f64) {
-        self.record_n(s, 1);
+        self.snap.record_secs_n(s, 1);
     }
 
-    /// Bulk record: `n` samples of `seconds` in one bucket update (how
-    /// an atomic registry histogram re-layers onto this legacy shape).
+    /// Bulk record: `n` samples of `seconds` in one bucket update.
     pub fn record_n(&mut self, seconds: f64, n: u64) {
-        if seconds.is_nan() || n == 0 {
-            return;
-        }
-        let s = seconds.clamp(1e-9, f64::MAX);
-        let idx = (((s.log10() - LOG_MIN) * PER_DECADE) as isize).clamp(0, BUCKETS as isize - 1);
-        self.buckets[idx as usize] += n;
-        self.count += n;
-        self.sum_s += s * n as f64;
-        self.max_s = self.max_s.max(s);
-    }
-
-    /// Replace the exact moments after a bucket-level reconstruction
-    /// (`record_n` charges bucket-midpoint values; the registry knows
-    /// the true sum/max and restores them here).
-    pub(crate) fn set_exact_moments(&mut self, sum_s: f64, max_s: f64) {
-        if self.count > 0 {
-            self.sum_s = sum_s;
-            self.max_s = max_s;
-        }
+        self.snap.record_secs_n(seconds, n);
     }
 
     /// Bucket-wise merge (associative and commutative — the bucket
     /// layout is a compile-time constant).
     pub fn merge(&mut self, other: &LatencyHistogram) {
-        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
-        }
-        self.count += other.count;
-        self.sum_s += other.sum_s;
-        self.max_s = self.max_s.max(other.max_s);
+        self.snap.merge(&other.snap);
     }
 
     pub fn count(&self) -> u64 {
-        self.count
+        self.snap.count()
     }
 
     pub fn mean(&self) -> f64 {
-        if self.count == 0 {
-            0.0
-        } else {
-            self.sum_s / self.count as f64
-        }
+        self.snap.mean()
     }
 
     pub fn max(&self) -> f64 {
-        self.max_s
+        self.snap.max()
     }
 
-    /// Approximate quantile from the log buckets (bucket upper edge).
+    /// Approximate quantile from the log2 buckets (bucket midpoint).
     pub fn quantile(&self, q: f64) -> f64 {
-        self.quantile_opt(q).unwrap_or(0.0)
+        self.snap.quantile(q)
     }
 
     /// Quantile that distinguishes "no samples" from "zero latency":
     /// `None` when empty, so JSON emitters can write `null` instead of
     /// a fake `0`.
     pub fn quantile_opt(&self, q: f64) -> Option<f64> {
-        if self.count == 0 {
-            return None;
-        }
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return Some(10f64.powf(LOG_MIN + (i as f64 + 1.0) / PER_DECADE));
-            }
-        }
-        Some(self.max_s)
+        self.snap.quantile_opt(q)
     }
 
     /// Summary object for JSON export: `null` quantiles when empty.
@@ -117,9 +80,9 @@ impl LatencyHistogram {
         let q = |q: f64| self.quantile_opt(q).map(|v| Json::Num(v * 1e3)).unwrap_or(Json::Null);
         Json::Obj(
             [
-                ("count".to_string(), Json::Num(self.count as f64)),
+                ("count".to_string(), Json::Num(self.count() as f64)),
                 ("mean_ms".to_string(), Json::Num(self.mean() * 1e3)),
-                ("max_ms".to_string(), Json::Num(self.max_s * 1e3)),
+                ("max_ms".to_string(), Json::Num(self.max() * 1e3)),
                 ("p50_ms".to_string(), q(0.5)),
                 ("p95_ms".to_string(), q(0.95)),
                 ("p99_ms".to_string(), q(0.99)),
@@ -200,6 +163,17 @@ pub struct ServingStats {
     /// drained front-end ends with `tcp_responses == tcp_requests` —
     /// the wire-level exactly-once invariant.
     pub tcp_responses: u64,
+    /// Trace spans evicted from a full ring buffer (telemetry loss
+    /// counter: non-zero means the exported spans under-count).
+    pub trace_spans_dropped: u64,
+    /// Modeled-vs-measured e2e drift: EWMA of measured/predicted
+    /// (1.0 = the bank prices requests exactly; meaningful only for an
+    /// adaptive server, 0.0 otherwise).
+    pub drift_ratio: f64,
+    /// Set when the drift ratio has stayed beyond the hysteretic
+    /// threshold — the plan bank's predictions are stale and it should
+    /// be re-priced from a calibration record (`bankgen --calib`).
+    pub drift_stale: bool,
 }
 
 impl ServingStats {
@@ -289,6 +263,7 @@ impl ServingStats {
              pool   hits={} misses={} hit_rate={:.1}% reused={} bytes\n\
              tcp    accepted={} active={} read_errors={} frame_rejects={} \
              requests={} responses={}\n\
+             drift  ratio={:.3} stale={}  spans_dropped={}\n\
              tx_total={} bytes",
             self.requests,
             self.shed,
@@ -325,6 +300,9 @@ impl ServingStats {
             self.tcp_frame_rejects,
             self.tcp_requests,
             self.tcp_responses,
+            self.drift_ratio,
+            self.drift_stale,
+            self.trace_spans_dropped,
             self.tx_bytes_total,
         )
     }
@@ -369,6 +347,12 @@ impl ServingStats {
                 ("tcp_frame_rejects".to_string(), Json::Num(self.tcp_frame_rejects as f64)),
                 ("tcp_requests".to_string(), Json::Num(self.tcp_requests as f64)),
                 ("tcp_responses".to_string(), Json::Num(self.tcp_responses as f64)),
+                (
+                    "trace_spans_dropped".to_string(),
+                    Json::Num(self.trace_spans_dropped as f64),
+                ),
+                ("drift_ratio".to_string(), Json::Num(self.drift_ratio)),
+                ("drift_stale".to_string(), Json::Bool(self.drift_stale)),
             ]
             .into_iter()
             .collect(),
@@ -421,11 +405,11 @@ mod tests {
     #[test]
     fn record_edge_cases_zero_negative_nan_inf() {
         let mut h = LatencyHistogram::default();
-        h.record(Duration::ZERO); // clamps to the 1ns floor bucket
-        h.record_secs(-3.0); // negative clamps to the floor bucket
+        h.record(Duration::ZERO); // exact zero bucket
+        h.record_secs(-3.0); // negative clamps to the zero bucket
         h.record_secs(f64::NAN); // ignored entirely
         h.record_secs(f64::INFINITY); // clamps to the top bucket
-        h.record_secs(1e-12); // sub-resolution clamps to the floor bucket
+        h.record_secs(1e-12); // sub-nanosecond clamps to the zero bucket
         assert_eq!(h.count(), 4, "NaN must not count");
         assert!(h.quantile(0.5) <= 1e-6, "floor-bucket samples dominate: {}", h.quantile(0.5));
         assert!(h.quantile(0.99) >= 1e2, "inf lands in the top bucket: {}", h.quantile(0.99));
@@ -564,6 +548,28 @@ mod tests {
                     Some(Json::Obj(h)) => assert!(matches!(h.get("p50_ms"), Some(Json::Null))),
                     other => panic!("e2e summary missing: {other:?}"),
                 }
+            }
+            other => panic!("not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_and_json_include_drift_and_span_loss() {
+        let mut s = ServingStats::default();
+        s.drift_ratio = 1.25;
+        s.drift_stale = true;
+        s.trace_spans_dropped = 7;
+        let r = s.report();
+        assert!(r.contains("ratio=1.250"), "{r}");
+        assert!(r.contains("stale=true"), "{r}");
+        assert!(r.contains("spans_dropped=7"), "{r}");
+        let doc = s.to_json().to_string_pretty();
+        let parsed = Json::parse(&doc).expect("stats json must parse");
+        match parsed {
+            Json::Obj(o) => {
+                assert!(matches!(o.get("trace_spans_dropped"), Some(Json::Num(v)) if *v == 7.0));
+                assert!(matches!(o.get("drift_ratio"), Some(Json::Num(v)) if *v == 1.25));
+                assert_eq!(o.get("drift_stale"), Some(&Json::Bool(true)));
             }
             other => panic!("not an object: {other:?}"),
         }

@@ -44,7 +44,8 @@ pub mod server;
 pub mod testkit;
 
 pub use adaptive::{
-    AdaptiveConfig, BwTrace, Hysteresis, LinkEstimator, PlanSwitcher, SwitchBin, TraceStep,
+    AdaptiveConfig, BwTrace, DriftDetector, Hysteresis, LinkEstimator, PlanSwitcher, SwitchBin,
+    TraceStep,
 };
 pub use bufpool::{BufPool, PoolStats};
 pub use cloud::CloudWorker;
@@ -59,7 +60,7 @@ pub use metrics::{LatencyHistogram, ServingStats};
 pub use net::{IoModel, NetConfig, NetError, NetStats, ReqFrame, TcpClient, TcpFrontend};
 pub use obsv::{
     chrome_trace, Counter, CounterVec, Gauge, HistSnapshot, Histogram, ServingRegistry, SpanKind,
-    SpanRecord, SpanTag, TraceConfig, Tracer,
+    SpanRecord, SpanTag, StagedOp, TraceConfig, Tracer,
 };
 pub use protocol::{ActivationPacket, ActivationView, FrameError, PacketHeader, TX_HEADER_BYTES};
 pub use scheduler::{
@@ -70,6 +71,6 @@ pub use server::{
     Server, ShedInfo,
 };
 pub use testkit::{
-    load_eval_images, reference_image, write_adaptive_bank, write_reference_artifacts,
-    AdaptiveBankSpec, AdaptivePlanSpec, RefArtifactSpec,
+    load_eval_images, reference_image, write_adaptive_bank, write_adaptive_bank_with,
+    write_reference_artifacts, AdaptiveBankSpec, AdaptivePlanSpec, RefArtifactSpec,
 };

@@ -28,8 +28,14 @@ use super::metrics::{LatencyHistogram, ServingStats};
 use crate::util::Json;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+// The histogram primitive lives in `util::hist` (the runtime op
+// profiler records into it too, and `runtime` must not depend on the
+// coordinator); re-exported here so observability call sites keep one
+// import path.
+pub use crate::util::hist::{HistSnapshot, Histogram};
 
 // ---------------------------------------------------------------------------
 // primitives
@@ -112,171 +118,6 @@ impl CounterVec {
 }
 
 // ---------------------------------------------------------------------------
-// atomic log2 histogram
-
-/// `16 + 60×16`: exact buckets for 0..15 ns, then 16 linear sub-buckets
-/// per power of two for exponents 4..=63.
-const HIST_BUCKETS: usize = 16 + 60 * 16;
-
-/// Lock-free duration histogram over nanoseconds: values below 16 ns
-/// get exact buckets, larger values get 16 linear sub-buckets per
-/// power of two (≤ 1/16 ≈ 6% relative quantile error), covering the
-/// full u64 range. Mergeable and snapshot-consistent: quantiles are
-/// computed against the bucket sum observed in one pass, never against
-/// a separately-read count.
-#[derive(Debug)]
-pub struct Histogram {
-    buckets: Box<[AtomicU64]>,
-    count: AtomicU64,
-    sum_ns: AtomicU64,
-    max_ns: AtomicU64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram {
-            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_ns: AtomicU64::new(0),
-            max_ns: AtomicU64::new(0),
-        }
-    }
-}
-
-fn bucket_index(ns: u64) -> usize {
-    if ns < 16 {
-        return ns as usize;
-    }
-    let e = 63 - ns.leading_zeros() as usize; // ≥ 4
-    let sub = ((ns >> (e - 4)) & 0xF) as usize;
-    16 + (e - 4) * 16 + sub
-}
-
-/// Midpoint of the bucket's value range, in nanoseconds.
-fn bucket_mid_ns(idx: usize) -> f64 {
-    if idx < 16 {
-        return idx as f64;
-    }
-    let b = idx - 16;
-    let e = b / 16 + 4;
-    let sub = (b % 16) as u64;
-    let width = 1u64 << (e - 4);
-    ((16 + sub) * width) as f64 + width as f64 / 2.0
-}
-
-impl Histogram {
-    pub fn record(&self, d: Duration) {
-        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
-    }
-
-    /// Record a duration given in seconds. NaN is ignored (an undefined
-    /// duration must not shift quantiles toward zero), negatives clamp
-    /// to zero, and +inf clamps to the top bucket.
-    pub fn record_secs(&self, s: f64) {
-        if s.is_nan() {
-            return;
-        }
-        let ns = (s.max(0.0) * 1e9).min(u64::MAX as f64) as u64;
-        self.record_ns(ns);
-    }
-
-    pub fn record_ns(&self, ns: u64) {
-        self.buckets[bucket_index(ns)].fetch_add(1, SeqCst);
-        self.sum_ns.fetch_add(ns, SeqCst);
-        self.max_ns.fetch_max(ns, SeqCst);
-        self.count.fetch_add(1, SeqCst);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(SeqCst)
-    }
-
-    /// One-pass consistent snapshot of the bucket state.
-    pub fn snapshot(&self) -> HistSnapshot {
-        HistSnapshot {
-            buckets: self.buckets.iter().map(|b| b.load(SeqCst)).collect(),
-            sum_ns: self.sum_ns.load(SeqCst),
-            max_ns: self.max_ns.load(SeqCst),
-        }
-    }
-}
-
-/// Plain (non-atomic) copy of a [`Histogram`]'s state: quantiles,
-/// moments, and lossless merging.
-#[derive(Debug, Clone)]
-pub struct HistSnapshot {
-    buckets: Vec<u64>,
-    sum_ns: u64,
-    max_ns: u64,
-}
-
-impl HistSnapshot {
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().sum()
-    }
-
-    pub fn mean(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            0.0
-        } else {
-            self.sum_ns as f64 / n as f64 / 1e9
-        }
-    }
-
-    pub fn max(&self) -> f64 {
-        self.max_ns as f64 / 1e9
-    }
-
-    /// Approximate quantile in seconds; `None` when empty (so empty
-    /// histograms serialize as `null`, not a fake `0`).
-    pub fn quantile_opt(&self, q: f64) -> Option<f64> {
-        let n = self.count();
-        if n == 0 {
-            return None;
-        }
-        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
-        let mut acc = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return Some(bucket_mid_ns(i) / 1e9);
-            }
-        }
-        Some(self.max())
-    }
-
-    pub fn quantile(&self, q: f64) -> f64 {
-        self.quantile_opt(q).unwrap_or(0.0)
-    }
-
-    /// Bucket-wise merge (associative and commutative: the layouts are
-    /// identical by construction).
-    pub fn merge(&mut self, other: &HistSnapshot) {
-        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
-        }
-        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
-        self.max_ns = self.max_ns.max(other.max_ns);
-    }
-
-    /// Re-layer onto the legacy log10 [`LatencyHistogram`] (what
-    /// [`ServingStats`] reports): bucket counts map through each log2
-    /// bucket's midpoint, then the exact sum/max moments are restored
-    /// so `mean()`/`max()` stay lossless.
-    pub fn to_latency_histogram(&self) -> LatencyHistogram {
-        let mut h = LatencyHistogram::default();
-        for (i, &c) in self.buckets.iter().enumerate() {
-            if c > 0 {
-                h.record_n(bucket_mid_ns(i) / 1e9, c);
-            }
-        }
-        h.set_exact_moments(self.sum_ns as f64 / 1e9, self.max_ns as f64 / 1e9);
-        h
-    }
-}
-
-// ---------------------------------------------------------------------------
 // serving registry
 
 /// The atomic counter set behind [`ServingStats`]. Request-path code
@@ -342,12 +183,13 @@ impl ServingRegistry {
     pub fn snapshot(&self) -> ServingStats {
         let mut s =
             ServingStats::sized(self.shard_requests.len(), self.edge_requests.len(), self.plan_requests.len());
-        // components first…
-        s.e2e = self.e2e.snapshot().to_latency_histogram();
-        s.edge = self.edge.snapshot().to_latency_histogram();
-        s.net = self.net.snapshot().to_latency_histogram();
-        s.cloud = self.cloud.snapshot().to_latency_histogram();
-        s.queue = self.queue.snapshot().to_latency_histogram();
+        // components first… (`From<HistSnapshot>` is lossless: the
+        // snapshot becomes the stats histogram's backing store)
+        s.e2e = LatencyHistogram::from(self.e2e.snapshot());
+        s.edge = LatencyHistogram::from(self.edge.snapshot());
+        s.net = LatencyHistogram::from(self.net.snapshot());
+        s.cloud = LatencyHistogram::from(self.cloud.snapshot());
+        s.queue = LatencyHistogram::from(self.queue.snapshot());
         s.shard_batches = self.shard_batches.snapshot();
         s.shard_requests = self.shard_requests.snapshot();
         s.edge_requests = self.edge_requests.snapshot();
@@ -399,6 +241,20 @@ impl SpanKind {
     }
 }
 
+/// One profiled runtime op attributed to a pipeline stage of a traced
+/// request (filled from the op profiler's capture buffer by the edge
+/// and shard threads when both profiling and sampling are on). For a
+/// batched cloud execution the batch's ops are attached to every
+/// sampled member span — the trace shows the work each request rode.
+#[derive(Debug, Clone)]
+pub struct StagedOp {
+    /// The stage this op executed inside (`STAGE_EDGE`/`STAGE_CLOUD`).
+    pub stage: usize,
+    /// Op signature (`kind[shape]`), shared with the profiler table.
+    pub sig: Arc<str>,
+    pub dur_ns: u64,
+}
+
 /// Per-request trace context, created at admission and carried through
 /// the pipeline (`Request` → `SentPacket` → `CloudJob`). Stage
 /// durations are filled in as each stage's measured time becomes
@@ -411,6 +267,9 @@ pub struct SpanTag {
     pub t0_ns: u64,
     /// Per-stage duration, nanoseconds (see `STAGE_*`).
     pub stage_ns: [u64; 8],
+    /// Profiled runtime ops (empty unless `--profile on` and sampled —
+    /// no per-request allocation otherwise).
+    pub ops: Vec<StagedOp>,
 }
 
 impl SpanTag {
@@ -436,6 +295,8 @@ pub struct SpanRecord {
     pub kind: SpanKind,
     pub t0_ns: u64,
     pub stage_ns: [u64; 8],
+    /// Profiled runtime ops attributed to this span (see [`StagedOp`]).
+    pub ops: Vec<StagedOp>,
 }
 
 /// Trace configuration carried by `ServeConfig`.
@@ -500,6 +361,7 @@ impl Tracer {
             sampled: id % self.sample == 0,
             t0_ns: u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX),
             stage_ns: [0; 8],
+            ops: Vec::new(),
         }))
     }
 
@@ -509,7 +371,8 @@ impl Tracer {
         if !tag.sampled && kind == SpanKind::Done {
             return;
         }
-        let rec = SpanRecord { id: tag.id, kind, t0_ns: tag.t0_ns, stage_ns: tag.stage_ns };
+        let rec =
+            SpanRecord { id: tag.id, kind, t0_ns: tag.t0_ns, stage_ns: tag.stage_ns, ops: tag.ops };
         let mut ring = self.ring.lock().unwrap();
         if ring.len() >= self.capacity {
             ring.pop_front();
@@ -554,8 +417,10 @@ pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
             .into_iter()
             .collect(),
         ));
+        let mut starts = [0u64; 8];
         let mut at = sp.t0_ns;
         for (i, &dur) in sp.stage_ns.iter().enumerate() {
+            starts[i] = at;
             events.push(Json::Obj(
                 [
                     ("name".to_string(), Json::Str(STAGE_NAMES[i].into())),
@@ -570,6 +435,27 @@ pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
                 .collect(),
             ));
             at = at.saturating_add(dur);
+        }
+        // profiled runtime ops nest inside their stage's window, laid
+        // end-to-end in execution order (cat "op" — absent entirely
+        // unless the run profiled, so stage/envelope counts are stable)
+        let mut op_at = starts;
+        for op in &sp.ops {
+            let stage = op.stage.min(7);
+            events.push(Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(op.sig.as_ref().into())),
+                    ("cat".to_string(), Json::Str("op".into())),
+                    ("ph".to_string(), Json::Str("X".into())),
+                    ("pid".to_string(), Json::Num(0.0)),
+                    ("tid".to_string(), Json::Num(sp.id as f64)),
+                    ("ts".to_string(), Json::Num(us(op_at[stage]))),
+                    ("dur".to_string(), Json::Num(us(op.dur_ns))),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+            op_at[stage] = op_at[stage].saturating_add(op.dur_ns);
         }
     }
     Json::Obj(
@@ -588,52 +474,9 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
-    fn histogram_sub_resolution_and_zero() {
-        let h = Histogram::default();
-        h.record(Duration::ZERO);
-        h.record(Duration::from_nanos(3));
-        h.record(Duration::from_nanos(15));
-        let s = h.snapshot();
-        assert_eq!(s.count(), 3);
-        // sub-16ns values land in their exact buckets
-        assert!(s.quantile(0.01) <= 16e-9, "{}", s.quantile(0.01));
-        assert!((s.mean() - 6e-9).abs() < 1e-12);
-        assert_eq!(s.max(), 15e-9);
-    }
-
-    #[test]
-    fn histogram_negative_nan_inf() {
-        let h = Histogram::default();
-        h.record_secs(f64::NAN); // ignored
-        h.record_secs(-5.0); // clamps to 0
-        h.record_secs(f64::INFINITY); // clamps to the top bucket
-        let s = h.snapshot();
-        assert_eq!(s.count(), 2, "NaN must not be counted");
-        assert!(s.quantile(0.99) > 1e9, "inf must land in the top bucket");
-        assert_eq!(s.quantile_opt(0.01).unwrap(), 0.0, "negative clamps to zero");
-    }
-
-    #[test]
-    fn histogram_quantile_accuracy() {
-        let h = Histogram::default();
-        for i in 1..=1000u64 {
-            h.record(Duration::from_micros(i));
-        }
-        let s = h.snapshot();
-        let p50 = s.quantile(0.5);
-        let p99 = s.quantile(0.99);
-        // ≤ 1/16 relative bucket error
-        assert!((p50 - 500e-6).abs() / 500e-6 < 0.07, "{p50}");
-        assert!((p99 - 990e-6).abs() / 990e-6 < 0.07, "{p99}");
-        assert!(p50 <= p99);
-        assert_eq!(s.count(), 1000);
-    }
-
-    #[test]
-    fn empty_quantile_is_none_and_serializes_null() {
+    fn empty_quantile_serializes_null() {
         let s = Histogram::default().snapshot();
         assert!(s.quantile_opt(0.5).is_none());
-        assert_eq!(s.quantile(0.5), 0.0);
         let j = Json::Obj(
             [("p50".to_string(), s.quantile_opt(0.5).map(Json::Num).unwrap_or(Json::Null))]
                 .into_iter()
@@ -643,44 +486,17 @@ mod tests {
     }
 
     #[test]
-    fn merge_associative() {
-        let mk = |vals: &[u64]| {
-            let h = Histogram::default();
-            for &v in vals {
-                h.record_ns(v);
-            }
-            h.snapshot()
-        };
-        let (a, b, c) = (mk(&[10, 2000]), mk(&[50_000]), mk(&[7, 1_000_000, 12]));
-        // (a ∪ b) ∪ c == a ∪ (b ∪ c)
-        let mut ab = a.clone();
-        ab.merge(&b);
-        ab.merge(&c);
-        let mut bc = b.clone();
-        bc.merge(&c);
-        let mut a_bc = a.clone();
-        a_bc.merge(&bc);
-        assert_eq!(ab.count(), a_bc.count());
-        assert_eq!(ab.sum_ns, a_bc.sum_ns);
-        assert_eq!(ab.max_ns, a_bc.max_ns);
-        assert_eq!(ab.buckets, a_bc.buckets);
-        for q in [0.1, 0.5, 0.9, 0.999] {
-            assert_eq!(ab.quantile(q), a_bc.quantile(q));
-        }
-    }
-
-    #[test]
-    fn to_latency_histogram_preserves_moments() {
+    fn latency_histogram_view_preserves_moments() {
         let h = Histogram::default();
         h.record(Duration::from_millis(10));
         h.record(Duration::from_millis(30));
-        let lat = h.snapshot().to_latency_histogram();
+        let lat = LatencyHistogram::from(h.snapshot());
         assert_eq!(lat.count(), 2);
         assert!((lat.mean() - 0.02).abs() < 1e-9, "{}", lat.mean());
         assert!((lat.max() - 0.03).abs() < 1e-9);
-        // quantile within the coarser log10 bucket resolution
+        // same bucket scheme as the atomic side: p50 is the 10ms sample
         let p50 = lat.quantile(0.5);
-        assert!((5e-3..2e-2).contains(&p50), "{p50}");
+        assert!((p50 - 10e-3).abs() / 10e-3 < 0.07, "{p50}");
     }
 
     #[test]
@@ -797,6 +613,53 @@ mod tests {
             },
             other => panic!("not an object: {other:?}"),
         }
+    }
+
+    #[test]
+    fn chrome_trace_nests_op_events_inside_stage_windows() {
+        let t = Tracer::new(TraceConfig { sample: 1, capacity: 16 });
+        let mut tag = t.begin().unwrap();
+        tag.set_stage(STAGE_EDGE, Duration::from_micros(100));
+        tag.set_stage(STAGE_CLOUD, Duration::from_micros(200));
+        let sig: Arc<str> = Arc::from("gemm[4x10]");
+        tag.ops.push(StagedOp { stage: STAGE_EDGE, sig: Arc::from("quant_pack[2x64]"), dur_ns: 40_000 });
+        tag.ops.push(StagedOp { stage: STAGE_CLOUD, sig: Arc::clone(&sig), dur_ns: 70_000 });
+        tag.ops.push(StagedOp { stage: STAGE_CLOUD, sig, dur_ns: 50_000 });
+        t.finish(Some(tag), SpanKind::Done);
+        let spans = t.drain();
+        let doc = chrome_trace(&spans);
+        let evs = match &doc {
+            Json::Obj(o) => match o.get("traceEvents") {
+                Some(Json::Arr(evs)) => evs,
+                other => panic!("traceEvents missing: {other:?}"),
+            },
+            other => panic!("not an object: {other:?}"),
+        };
+        // the stage/envelope layout is unchanged: op events are additive
+        assert_eq!(evs.len(), 9 + 3, "9 base events + 3 op events");
+        let get = |e: &Json, k: &str| match e {
+            Json::Obj(o) => o.get(k).cloned().unwrap(),
+            _ => panic!("event not an object"),
+        };
+        let num = |j: Json| match j {
+            Json::Num(n) => n,
+            other => panic!("not a number: {other:?}"),
+        };
+        let ops: Vec<&Json> =
+            evs.iter().filter(|e| get(e, "cat") == Json::Str("op".into())).collect();
+        assert_eq!(ops.len(), 3);
+        // the two cloud ops lie end-to-end inside the cloud stage window
+        let cloud_stage = evs
+            .iter()
+            .find(|e| get(e, "name") == Json::Str("cloud".into()))
+            .expect("cloud stage event");
+        let cs = num(get(cloud_stage, "ts"));
+        let ce = cs + num(get(cloud_stage, "dur"));
+        let c0 = ops[1];
+        let c1 = ops[2];
+        assert_eq!(num(get(c0, "ts")), cs, "first cloud op starts at the stage start");
+        assert_eq!(num(get(c1, "ts")), cs + num(get(c0, "dur")), "ops are laid end-to-end");
+        assert!(num(get(c1, "ts")) + num(get(c1, "dur")) <= ce + 1e-9, "ops fit the window");
     }
 
     #[test]

@@ -52,23 +52,26 @@
 //! `Ok(Outcome::Done)` (served), `Ok(Outcome::Shed)` (load-shed by the
 //! admission policy), or `Err` (malformed request / pipeline failure).
 
-use super::adaptive::{AdaptiveConfig, AdaptiveRt, LinkEstimator, PlanSwitcher, SwitchBin};
+use super::adaptive::{
+    AdaptiveConfig, AdaptiveRt, DriftDetector, LinkEstimator, PlanSwitcher, SwitchBin,
+};
 use super::bufpool::BufPool;
 use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
 use super::link::{DelayMode, Link, Segments, WireFormat};
 use super::metrics::ServingStats;
 use super::obsv::{
-    ServingRegistry, SpanKind, SpanRecord, SpanTag, TraceConfig, Tracer, STAGE_ADMIT, STAGE_CLOUD,
-    STAGE_DISPATCH, STAGE_EDGE, STAGE_PACK, STAGE_QUEUE, STAGE_RESPOND, STAGE_UPLINK,
+    ServingRegistry, SpanKind, SpanRecord, SpanTag, StagedOp, TraceConfig, Tracer, STAGE_ADMIT,
+    STAGE_CLOUD, STAGE_DISPATCH, STAGE_EDGE, STAGE_PACK, STAGE_QUEUE, STAGE_RESPOND, STAGE_UPLINK,
 };
 use super::protocol::{ActivationPacket, PacketHeader, TX_HEADER_BYTES};
 use super::scheduler::{
     drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
     Router, SchedulerConfig,
 };
-use crate::runtime::Runtime;
+use crate::runtime::{capture_begin, capture_take, OpProfileRow, OpProfiler, Runtime};
 use crate::sim::Uplink;
+use crate::splitter::NetClass;
 use crate::util::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -112,6 +115,14 @@ pub struct ServeConfig {
     /// tags at all; `sample: N` keeps 1-in-N completed spans plus every
     /// shed/error span in a bounded ring (`Server::take_spans`).
     pub trace: TraceConfig,
+    /// Op-level runtime profiling (`--profile on`). When set, every
+    /// edge/shard runtime records per-op latencies into a shared
+    /// [`OpProfiler`] (`Server::op_profile`), and sampled trace spans
+    /// carry the ops that ran inside their edge/cloud stages. Off by
+    /// default: the engines take no timestamps at all, and profiled
+    /// runs are bit-identical to unprofiled ones (timing never changes
+    /// the math or its order).
+    pub profile: bool,
 }
 
 impl ServeConfig {
@@ -126,6 +137,7 @@ impl ServeConfig {
             adaptive: None,
             pool: true,
             trace: TraceConfig::default(),
+            profile: false,
         }
     }
 
@@ -148,7 +160,21 @@ impl ServeConfig {
         self.trace = trace;
         self
     }
+
+    pub fn with_profile(mut self, profile: bool) -> Self {
+        self.profile = profile;
+        self
+    }
 }
+
+/// Modeled-vs-measured drift detection (adaptive servers only): the
+/// serving loop feeds every completed request's (measured e2e,
+/// bank-predicted e2e) pair into a log-space EWMA; the stale flag flips
+/// only after `DRIFT_WINDOWS` consecutive observations beyond
+/// `DRIFT_THRESHOLD` (ratio > 2× or < ½× at 1.0) — the same hysteresis
+/// discipline the plan switcher uses, so transient spikes never flap it.
+const DRIFT_THRESHOLD: f64 = 1.0;
+const DRIFT_WINDOWS: u32 = 16;
 
 /// Parsed artifacts/metadata.json.
 #[derive(Debug, Clone)]
@@ -343,6 +369,10 @@ struct CloudJob {
     span: Option<Box<SpanTag>>,
     /// Bank plan this job was produced under (batches are plan-pure).
     plan: usize,
+    /// The bank's predicted e2e seconds for this plan at the link
+    /// estimate the chain ran under (0.0 for a static server) — the
+    /// drift detector compares it against the measured e2e.
+    predicted_s: f64,
     /// Virtually-accounted time to add to the wall clock for `e2e` under
     /// `DelayMode::Virtual`: the chain's modeled edge compute plus the
     /// cumulative modeled wire time up to and including this member
@@ -390,6 +420,11 @@ pub struct Server {
     /// (idle when `ServeConfig::pool` is false — the legacy plane
     /// bypasses it, so its counters read zero).
     pool: Arc<BufPool>,
+    /// Shared op profiler every edge/shard runtime records into
+    /// (`None` unless `ServeConfig::profile`).
+    prof: Option<Arc<OpProfiler>>,
+    /// Modeled-vs-measured drift state (adaptive servers only).
+    drift: Option<Arc<Mutex<DriftDetector>>>,
 }
 
 /// The compiled engine batch sizes actually loaded for `max_batch`: every
@@ -504,6 +539,10 @@ impl Server {
         let outstanding = Outstanding::new(shards);
         let uplink = Arc::new(Mutex::new(cfg.uplink));
         let pool = BufPool::new(cfg.pool);
+        let prof = cfg.profile.then(|| Arc::new(OpProfiler::new()));
+        let drift = adaptive
+            .as_ref()
+            .map(|_| Arc::new(Mutex::new(DriftDetector::new(DRIFT_THRESHOLD, DRIFT_WINDOWS))));
 
         let engine_batches = match cfg.mode {
             ServeMode::Split => engine_batch_set(&plans[0].meta, sched.max_batch),
@@ -533,6 +572,7 @@ impl Server {
             let reg = reg.clone();
             let tracer = tracer.clone();
             let pool = pool.clone();
+            let prof = prof.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("edge-worker-{edge_id}"))
@@ -546,6 +586,7 @@ impl Server {
                             uplink,
                             adaptive,
                             pool,
+                            prof,
                             reg,
                             tracer,
                             edge_ready_tx,
@@ -571,6 +612,8 @@ impl Server {
             let outstanding = outstanding.clone();
             let cost = cost.clone();
             let pool = pool.clone();
+            let prof = prof.clone();
+            let drift = drift.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cloud-shard-{shard_id}"))
@@ -583,6 +626,8 @@ impl Server {
                             outstanding,
                             cost,
                             pool,
+                            prof,
+                            drift,
                             reg,
                             tracer,
                             ready_tx,
@@ -654,6 +699,8 @@ impl Server {
             adaptive,
             plan_ids,
             pool,
+            prof,
+            drift,
         })
     }
 
@@ -777,6 +824,19 @@ impl Server {
         self.tracer.dropped()
     }
 
+    /// Per-op latency table from the shared runtime profiler, sorted by
+    /// op signature. Empty unless the server runs with
+    /// [`ServeConfig::profile`].
+    pub fn op_profile(&self) -> Vec<OpProfileRow> {
+        self.prof.as_ref().map(|p| p.table()).unwrap_or_default()
+    }
+
+    /// The profiler's JSON export (`{"ops": [...]}`); `None` when
+    /// profiling is off.
+    pub fn op_profile_json(&self) -> Option<Json> {
+        self.prof.as_ref().map(|p| p.to_json())
+    }
+
     /// Snapshot of aggregated metrics — assembled from the atomic
     /// registry (components before totals, so the accounting invariants
     /// hold even mid-run) and topped up with queue/pool/adaptive state.
@@ -794,6 +854,12 @@ impl Server {
             s.est_bps = rt.est.bps();
             s.est_rtt_s = rt.est.rtt_s();
             s.active_plan = rt.active as u64;
+        }
+        s.trace_spans_dropped = self.tracer.dropped();
+        if let Some(d) = &self.drift {
+            let d = d.lock().unwrap();
+            s.drift_ratio = d.ratio();
+            s.drift_stale = d.stale();
         }
         s
     }
@@ -911,8 +977,14 @@ fn edge_chain_sg(
     tracer: &Tracer,
 ) -> Vec<SentPacket> {
     let mut staged: Vec<StagedSg> = Vec::with_capacity(reqs.len());
-    for req in reqs {
+    for mut req in reqs {
         let mut payload = pool.checkout(edge_payload_cap(cfg, prt));
+        // opt this thread into op capture only for profiled + sampled
+        // requests — unprofiled/unsampled requests take no timestamps
+        let cap = cfg.profile && req.span.as_ref().map_or(false, |t| t.sampled);
+        if cap {
+            capture_begin();
+        }
         let work = match (workers, cfg.mode) {
             (Some(w), ServeMode::Split) => w[plan].infer_into(&req.image, &mut payload),
             (_, ServeMode::CloudOnly) | (None, _) => {
@@ -921,6 +993,15 @@ fn edge_chain_sg(
                 Ok((h, Duration::ZERO))
             }
         };
+        if cap {
+            if let Some(tag) = req.span.as_mut() {
+                tag.ops.extend(capture_take().into_iter().map(|e| StagedOp {
+                    stage: STAGE_EDGE,
+                    sig: e.sig,
+                    dur_ns: e.dur_ns,
+                }));
+            }
+        }
         let work = work.and_then(|(header, edge_dt)| {
             let frame_header = header.encode(payload.len())?;
             Ok((header, frame_header, edge_dt))
@@ -1007,7 +1088,11 @@ fn edge_chain_owned(
     type Staged = (Responder, Instant, Duration, Option<Box<SpanTag>>);
     let mut packets: Vec<ActivationPacket> = Vec::with_capacity(reqs.len());
     let mut staged: Vec<Staged> = Vec::with_capacity(reqs.len());
-    for req in reqs {
+    for mut req in reqs {
+        let cap = cfg.profile && req.span.as_ref().map_or(false, |t| t.sampled);
+        if cap {
+            capture_begin();
+        }
         let work = (|| -> Result<(ActivationPacket, Duration)> {
             match (workers, cfg.mode) {
                 (Some(w), ServeMode::Split) => w[plan].infer(&req.image),
@@ -1028,6 +1113,15 @@ fn edge_chain_owned(
                 }
             }
         })();
+        if cap {
+            if let Some(tag) = req.span.as_mut() {
+                tag.ops.extend(capture_take().into_iter().map(|e| StagedOp {
+                    stage: STAGE_EDGE,
+                    sig: e.sig,
+                    dur_ns: e.dur_ns,
+                }));
+            }
+        }
         match work {
             Ok((packet, edge_dt)) => {
                 packets.push(packet);
@@ -1082,6 +1176,7 @@ fn edge_thread(
     uplink: Arc<Mutex<Uplink>>,
     adaptive: Option<Arc<Mutex<AdaptiveRt>>>,
     pool: Arc<BufPool>,
+    prof: Option<Arc<OpProfiler>>,
     reg: Arc<ServingRegistry>,
     tracer: Arc<Tracer>,
     ready: mpsc::Sender<Result<()>>,
@@ -1092,7 +1187,10 @@ fn edge_thread(
         match cfg.mode {
             ServeMode::CloudOnly => Ok(None),
             ServeMode::Split => {
-                let rt = Runtime::cpu()?;
+                let rt = match &prof {
+                    Some(p) => Runtime::with_profiler(Arc::clone(p))?,
+                    None => Runtime::cpu()?,
+                };
                 let mut workers = Vec::with_capacity(plans.len());
                 for plan in plans.iter() {
                     let engine = rt.load_hlo_text(&plan.dir.join("lpr_edge_b1.hlo.txt"))?;
@@ -1162,6 +1260,7 @@ fn edge_thread(
 
         // feed the link estimator from what the transfers actually
         // measured, then give the switcher one observation window
+        let mut predicted_s = 0.0;
         if let Some(a) = &adaptive {
             let mut rt = a.lock().unwrap();
             for t in &sent {
@@ -1176,6 +1275,13 @@ fn edge_thread(
                     rt.active = next;
                     reg.plan_switches.inc();
                 }
+            }
+            // price the plan this chain actually ran under at the link
+            // estimate its transfers just updated — the shard compares
+            // this prediction against each member's measured e2e
+            if let Some(acfg) = &cfg.adaptive {
+                let state = NetClass::new("live", rt.est.bps() / 1e6, rt.est.rtt_s() * 1e3);
+                predicted_s = acfg.bank.plans[plan].predict_s(&state);
             }
         }
         reg.edge_requests.add(edge_id, sent.len() as u64);
@@ -1215,6 +1321,7 @@ fn edge_thread(
                 tx_bytes: s.wire_bytes,
                 arrived,
                 plan,
+                predicted_s,
                 virt,
                 span: s.span,
             };
@@ -1414,12 +1521,17 @@ fn shard_thread(
     outstanding: Outstanding,
     cost: Arc<BatchCost>,
     pool: Arc<BufPool>,
+    prof: Option<Arc<OpProfiler>>,
+    drift: Option<Arc<Mutex<DriftDetector>>>,
     reg: Arc<ServingRegistry>,
     tracer: Arc<Tracer>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let init = (|| -> Result<CloudExec> {
-        let rt = Runtime::cpu()?;
+        let rt = match &prof {
+            Some(p) => Runtime::with_profiler(Arc::clone(p))?,
+            None => Runtime::cpu()?,
+        };
         match cfg.mode {
             ServeMode::Split => {
                 let mut workers = Vec::with_capacity(plans.len());
@@ -1468,11 +1580,26 @@ fn shard_thread(
         if sb.jobs.iter().any(|j| j.plan != sb.plan) {
             reg.mid_batch_swaps.inc();
         }
+        // a batched execution's ops are the work every member rode:
+        // capture once around the run, clone onto each sampled span
+        let cap = cfg.profile
+            && sb.jobs.iter().any(|j| j.span.as_ref().map_or(false, |t| t.sampled));
+        if cap {
+            capture_begin();
+        }
         let exec_start = Instant::now();
         let run = if pool.enabled() {
             run_batch_pooled(&exec, &plans, &sb, &pool, &mut logits_buf, &mut pix_buf)
         } else {
             run_batch_owned(&exec, &plans, &sb)
+        };
+        let batch_ops: Vec<StagedOp> = if cap {
+            capture_take()
+                .into_iter()
+                .map(|e| StagedOp { stage: STAGE_CLOUD, sig: e.sig, dur_ns: e.dur_ns })
+                .collect()
+        } else {
+            Vec::new()
         };
         // the batch tensor is built (or the run failed): either way the
         // pooled payload buffers are dead — recycle them
@@ -1529,6 +1656,9 @@ fn shard_thread(
                     reg.net.record(res.net);
                     reg.cloud.record(res.cloud);
                     reg.queue.record(res.queue);
+                    if let Some(d) = &drift {
+                        d.lock().unwrap().observe(e2e.as_secs_f64(), job.predicted_s);
+                    }
                     if let Some(tag) = job.span.as_mut() {
                         tag.set_stage(
                             STAGE_DISPATCH,
@@ -1536,6 +1666,9 @@ fn shard_thread(
                         );
                         tag.set_stage(STAGE_CLOUD, cloud_dt);
                         tag.set_stage(STAGE_RESPOND, exec_start.elapsed().saturating_sub(cloud_dt));
+                        if tag.sampled && !batch_ops.is_empty() {
+                            tag.ops.extend(batch_ops.iter().cloned());
+                        }
                     }
                     tracer.finish(job.span, SpanKind::Done);
                     job.resp.answer(Ok(Outcome::Done(res)));

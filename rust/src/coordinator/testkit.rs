@@ -10,6 +10,7 @@
 
 use crate::coordinator::protocol::TX_HEADER_BYTES;
 use crate::profile::SplitMix64;
+use crate::sim::CalibScales;
 use crate::splitter::{BankGrid, NetClass, PlanBank, PlanSpec};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -215,6 +216,18 @@ impl AdaptiveBankSpec {
 /// Everything is a pure function of the spec, so two writes produce
 /// byte-identical banks (the determinism test locks this).
 pub fn write_adaptive_bank(dir: &Path, spec: &AdaptiveBankSpec) -> Result<PlanBank> {
+    write_adaptive_bank_with(dir, spec, &CalibScales::identity())
+}
+
+/// [`write_adaptive_bank`] with measured-latency calibration: the bank's
+/// predictions (and therefore its per-cell selections) are re-priced
+/// through `scales` ([`PlanBank::generate_calibrated`]). Identity scales
+/// reproduce the uncalibrated bank byte-for-byte.
+pub fn write_adaptive_bank_with(
+    dir: &Path,
+    spec: &AdaptiveBankSpec,
+    scales: &CalibScales,
+) -> Result<PlanBank> {
     anyhow::ensure!(!spec.plans.is_empty(), "bank spec needs at least one plan");
     let mut candidates = Vec::with_capacity(spec.plans.len());
     for plan in &spec.plans {
@@ -234,7 +247,8 @@ pub fn write_adaptive_bank(dir: &Path, spec: &AdaptiveBankSpec) -> Result<PlanBa
             artifacts: Some(rel),
         });
     }
-    let mut bank = PlanBank::generate("refhlo-synthetic", &candidates, &spec.grid, 1);
+    let mut bank =
+        PlanBank::generate_calibrated("refhlo-synthetic", &candidates, &spec.grid, 1, scales);
     bank.img = spec.img;
     std::fs::write(dir.join("plan_bank.json"), bank.to_json())
         .with_context(|| format!("write {dir:?}/plan_bank.json"))?;
@@ -298,6 +312,19 @@ mod tests {
         }
         assert_eq!(spec.image(3).len(), spec.img * spec.img);
         assert_eq!(spec.image(3), spec.image(3));
+    }
+
+    #[test]
+    fn calibrated_bank_with_identity_scales_is_byte_identical() {
+        let base =
+            std::env::temp_dir().join(format!("autosplit-bankcal-{}", std::process::id()));
+        let spec = AdaptiveBankSpec::default();
+        write_adaptive_bank(&base.join("a"), &spec).unwrap();
+        write_adaptive_bank_with(&base.join("b"), &spec, &CalibScales::identity()).unwrap();
+        let a = std::fs::read(base.join("a/plan_bank.json")).unwrap();
+        let b = std::fs::read(base.join("b/plan_bank.json")).unwrap();
+        assert_eq!(a, b, "identity calibration must not change the bank bytes");
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -21,15 +21,18 @@ use anyhow::{bail, Context, Result};
 use auto_split::coordinator::{
     adaptive_table, c10k_tcp, chrome_trace, load_eval_images, mixed_workload, poisson_schedule,
     policy_table, replay, replay_traced, run_mixed, write_adaptive_bank,
-    write_reference_artifacts, AdaptiveBankSpec, AdaptiveConfig, AdmissionPolicy, BwTrace,
-    C10kConfig, Client, CostPrior, Hysteresis, IoModel, LoadReport, NetConfig, Outcome,
-    RefArtifactSpec, RoutePolicy, SchedulerConfig, ServeConfig, ServeMode, Server, ServingStats,
-    TcpClient, TcpFrontend, TraceConfig, WireFormat,
+    write_adaptive_bank_with, write_reference_artifacts, AdaptiveBankSpec, AdaptiveConfig,
+    AdmissionPolicy, BwTrace, C10kConfig, Client, CostPrior, Hysteresis, IoModel, LoadReport,
+    NetConfig, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig, ServeConfig, ServeMode,
+    Server, ServingStats, SpanRecord, TcpClient, TcpFrontend, TraceConfig, WireFormat,
 };
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
-use auto_split::sim::{AcceleratorConfig, LatencyModel, Uplink};
+use auto_split::runtime::OpProfileRow;
+use auto_split::sim::{
+    aggregate, AcceleratorConfig, CalibRecord, CalibScales, LatencyModel, StagePriors, Uplink,
+};
 use auto_split::splitter::{AutoSplitConfig, BankGrid, BaselineCtx, PlanBank, PlanSpec, Planner};
 use auto_split::util::{bench_meta, Json};
 use auto_split::zoo;
@@ -101,6 +104,8 @@ fn main() -> Result<()> {
             eprintln!("  baselines --model yolov3   [--threshold 10] [--mem-mb 32] [--mbps 3]");
             eprintln!("  bankgen   --model resnet50 [--bins 0] [--tiers 0,100] [--out bank.json]");
             eprintln!("            | --synthetic [--out bank]   runnable REFHLO plan bank");
+            eprintln!("            [--calib calib.json]   reprice predictions from measured");
+            eprintln!("            serving latencies (a `loadtest --calib-out` record)");
             eprintln!("  serve     [--artifacts artifacts | --synthetic] [--mode split|cloud]");
             eprintln!("            [--requests 64] [--mbps 3] [--batch 8] [--rpc]");
             eprintln!("            [--shards 1] [--edge-workers 1] [--queue-cap 256]");
@@ -119,12 +124,16 @@ fn main() -> Result<()> {
             eprintln!("            [--c10k [--connections 1024] [--per-conn 2] [--churn 128]");
             eprintln!("             [--conn-workers 16] [--no-slowloris]]   C10K concurrency");
             eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
-            eprintln!("             [--pin plan-id] [--hys-margin 0.25] [--hys-windows 3]]");
+            eprintln!("             [--pin plan-id] [--hys-margin 0.25] [--hys-windows 3]");
+            eprintln!("             [--calib-out calib.json]]   measured-latency calibration");
             eprintln!("            + all `serve` scheduler flags");
             eprintln!("  stats     --connect host:port   fetch a live ServingStats snapshot");
             eprintln!("            from a running `serve --listen` over the stats frame");
             eprintln!("  (serve + loadtest) [--trace-sample N] [--trace-out trace.json]");
             eprintln!("            per-request spans, 1-in-N sampled; Chrome trace-event JSON");
+            eprintln!("  (serve + loadtest) [--profile on|off] [--profile-out ops.json]");
+            eprintln!("            op-level runtime profiler (off = zero cost; on = bit-identical");
+            eprintln!("            results, per-op latency table)");
             Ok(())
         }
     }
@@ -283,6 +292,86 @@ fn export_trace(args: &Args, server: &Server) -> Result<usize> {
     Ok(spans.len())
 }
 
+/// Parse the shared `--profile on|off` flag (default off: the engines
+/// take zero timestamps and the hot loop is untouched). `--profile-out`
+/// or `--calib-out` without an explicit `--profile off` implies `on` —
+/// the artifacts they write are empty without the profiler.
+fn profile_from_args(args: &Args) -> Result<bool> {
+    match args.get("--profile") {
+        None => Ok(args.get("--profile-out").is_some() || args.get("--calib-out").is_some()),
+        Some("on") => Ok(true),
+        Some("off") => Ok(false),
+        Some(v) => bail!("bad --profile {v} (expected on|off)"),
+    }
+}
+
+/// Write the per-op latency table to `--profile-out` (the profiler's
+/// log2-histogram rows as `{"ops": [...]}` JSON). Must run before
+/// [`Server::shutdown`] consumes the server.
+fn export_profile(args: &Args, server: &Server) -> Result<()> {
+    let Some(path) = args.get("--profile-out") else { return Ok(()) };
+    let Some(json) = server.op_profile_json() else {
+        bail!("--profile-out needs the profiler (drop `--profile off`)");
+    };
+    let mut doc = json.to_string_pretty();
+    doc.push('\n');
+    std::fs::write(path, doc).with_context(|| format!("write {path}"))?;
+    println!("wrote {path} ({} op signatures)", server.op_profile().len());
+    Ok(())
+}
+
+/// Load the `bankgen --calib` record into repricing scales (identity
+/// when the flag is absent — `generate_calibrated` with identity scales
+/// is bit-exact with the analytic `generate`).
+fn calib_scales_from_args(args: &Args) -> Result<CalibScales> {
+    let Some(path) = args.get("--calib") else { return Ok(CalibScales::identity()) };
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let rec = CalibRecord::parse_str(&text)
+        .with_context(|| format!("{path} is not a calibration record (`loadtest --calib-out`)"))?;
+    let s = rec.scales();
+    println!(
+        "calibration from {path}: {} spans  edge ×{:.3}  uplink ×{:.3}  cloud ×{:.3}  \
+         +{:.1} µs/request",
+        rec.e2e_count,
+        s.edge,
+        s.uplink,
+        s.cloud,
+        s.extra_s * 1e6,
+    );
+    Ok(s)
+}
+
+/// Analytic stage priors the `--calib-out` record compares measurements
+/// against: each bank plan's modeled edge/cloud/transfer terms weighted
+/// by the share of requests it actually served, with transmission
+/// priced at the link estimator's final state (the same state the
+/// switcher priced plans against). Degenerate estimates (a zero-rate
+/// link would make the transfer prior non-finite) collapse to a zero
+/// prior, which `sim::calib` treats as "keep the measurement, scale 1".
+fn adaptive_priors(bank: &PlanBank, stats: &ServingStats) -> StagePriors {
+    let counts = &stats.plan_requests;
+    let total: u64 = counts.iter().take(bank.plans.len()).sum();
+    let uplink = Uplink::from_mbps_rtt(stats.est_bps / 1e6, stats.est_rtt_s * 1e3);
+    let (mut edge_s, mut uplink_s, mut cloud_s) = (0.0f64, 0.0f64, 0.0f64);
+    for (i, p) in bank.plans.iter().enumerate() {
+        let w = if total > 0 {
+            counts.get(i).copied().unwrap_or(0) as f64 / total as f64
+        } else {
+            1.0 / bank.plans.len().max(1) as f64
+        };
+        edge_s += w * p.edge_s;
+        cloud_s += w * p.cloud_s;
+        uplink_s += w * uplink.transfer_seconds(p.tx_bytes);
+    }
+    let sane = |v: f64| if v.is_finite() && v > 0.0 { v } else { 0.0 };
+    StagePriors {
+        edge_s: sane(edge_s),
+        pack_s: 0.0,
+        uplink_s: sane(uplink_s),
+        cloud_s: sane(cloud_s),
+    }
+}
+
 /// Parse `--hys-margin` / `--hys-windows`. The CLI is strict where the
 /// library clamps: a degenerate config (zero windows, negative margin)
 /// would disable flap damping entirely, so it is rejected here instead
@@ -396,10 +485,13 @@ fn write_bench_json(
         ("tx_bytes_per_req", Json::Num(r.tx_bytes_per_completed())),
         (
             "meta",
-            bench_meta(&format!(
-                "transport={transport} shards={} admission={} route={} queue_cap={}",
-                sched.shards, sched.admission, sched.route, sched.queue_cap
-            )),
+            bench_meta(
+                "loadtest",
+                &format!(
+                    "transport={transport} shards={} admission={} route={} queue_cap={}",
+                    sched.shards, sched.admission, sched.route, sched.queue_cap
+                ),
+            ),
         ),
     ]);
     let mut doc = json.to_string_pretty();
@@ -466,11 +558,12 @@ fn write_bank(out: &str, bank: &PlanBank) -> Result<PathBuf> {
 }
 
 fn cmd_bankgen(args: &Args) -> Result<()> {
+    let scales = calib_scales_from_args(args)?;
     if args.flag("--synthetic") {
         // runnable bank: REFHLO artifact set per plan + plan_bank.json
         let out = args.get("--out").unwrap_or("bank");
         let spec = AdaptiveBankSpec::default();
-        let bank = write_adaptive_bank(Path::new(out), &spec)?;
+        let bank = write_adaptive_bank_with(Path::new(out), &spec, &scales)?;
         println!("{}", bank_table(&bank));
         println!("wrote {} plan artifact sets + plan_bank.json under {out}", bank.plans.len());
         return Ok(());
@@ -492,7 +585,13 @@ fn cmd_bankgen(args: &Args) -> Result<()> {
         anyhow::ensure!(!tiers.is_empty(), "bad --tiers {t:?}");
         grid = grid.with_tiers(&tiers);
     }
-    let bank = PlanBank::generate(&opt.name, &candidates, &grid, args.parse("--threads", 0usize)?);
+    let bank = PlanBank::generate_calibrated(
+        &opt.name,
+        &candidates,
+        &grid,
+        args.parse("--threads", 0usize)?,
+        &scales,
+    );
     println!(
         "{}: {} feasible candidates → {} banked plans",
         opt.name,
@@ -537,7 +636,7 @@ fn write_adaptive_json(path: &str, rows: &[(String, LoadReport, ServingStats)]) 
         ("bench", Json::Str("adaptive".into())),
         ("adaptive_strictly_dominates_p50", Json::Bool(dominates)),
         ("rows", Json::Arr(rows_json)),
-        ("meta", bench_meta(&format!("adaptive loadtest, {} configs", rows.len()))),
+        ("meta", bench_meta("adaptive", &format!("adaptive loadtest, {} configs", rows.len()))),
     ]);
     let mut doc = json.to_string_pretty();
     doc.push('\n');
@@ -590,11 +689,32 @@ fn run_adaptive_loadtest(
         acfg.bank.plans.len()
     );
 
-    let run_one = |name: &str, pin: Option<&str>| -> Result<(String, LoadReport, ServingStats)> {
+    // calibration aggregates spans, so `--calib-out` without an explicit
+    // sample traces every request (mirrors the `--trace-out` implication)
+    let calib_out = args.get("--calib-out");
+    let mut tcfg = trace_from_args(args)?;
+    if calib_out.is_some() && tcfg.sample == 0 {
+        tcfg.sample = 1;
+    }
+    let profile = profile_from_args(args)?;
+
+    /// One measured configuration, with the artifacts drained before
+    /// shutdown (spans + per-op table) for `--calib-out`/`--trace-out`.
+    struct AdaptiveRun {
+        name: String,
+        report: LoadReport,
+        stats: ServingStats,
+        spans: Vec<SpanRecord>,
+        ops: Vec<OpProfileRow>,
+    }
+
+    let run_one = |name: &str, pin: Option<&str>| -> Result<AdaptiveRun> {
         let mut cfg = ServeConfig::new("unused-when-adaptive");
         cfg.uplink = trace.uplink_at(Duration::ZERO);
         cfg.scheduler = sched.clone();
         cfg.pool = pool_from_args(args)?;
+        cfg.trace = tcfg;
+        cfg.profile = profile;
         let mut a = acfg.clone();
         if let Some(id) = pin {
             a = a.with_pinned(id);
@@ -602,7 +722,10 @@ fn run_adaptive_loadtest(
         cfg.adaptive = Some(a);
         let server = Server::start(cfg)?;
         let _ = server.infer(images[0].clone()); // warm-up
+        let _ = server.take_spans(); // the warm-up span is not workload
         let report = replay_traced(&server, &images, &schedule, &trace)?;
+        let spans = server.take_spans();
+        let ops = server.op_profile();
         let stats = server.shutdown();
         println!(
             "{name}: p50 {:.2} ms  p99 {:.2} ms  switches {}  mid_batch_swaps {}",
@@ -611,10 +734,10 @@ fn run_adaptive_loadtest(
             stats.plan_switches,
             stats.mid_batch_swaps,
         );
-        Ok((name.to_string(), report, stats))
+        Ok(AdaptiveRun { name: name.to_string(), report, stats, spans, ops })
     };
 
-    let mut rows = vec![run_one("adaptive", None)?];
+    let mut runs = vec![run_one("adaptive", None)?];
     if args.flag("--compare") {
         let tier = acfg.bank.tier_entries(acfg.slo_tier_ms);
         let lo = tier.first().context("bank entries")?;
@@ -623,17 +746,58 @@ fn run_adaptive_loadtest(
         let hi_name = format!("static-{}", hi.state.name);
         let lo_id = acfg.bank.plans[lo.plan].id.clone();
         let hi_id = acfg.bank.plans[hi.plan].id.clone();
-        rows.push(run_one(&lo_name, Some(&lo_id))?);
+        runs.push(run_one(&lo_name, Some(&lo_id))?);
         if hi_id != lo_id {
-            rows.push(run_one(&hi_name, Some(&hi_id))?);
+            runs.push(run_one(&hi_name, Some(&hi_id))?);
         }
-        let trows: Vec<(String, LoadReport, u64, u64)> = rows
+        let trows: Vec<(String, LoadReport, u64, u64)> = runs
             .iter()
-            .map(|(n, r, s)| (n.clone(), r.clone(), s.plan_switches, s.mid_batch_swaps))
+            .map(|r| {
+                (r.name.clone(), r.report.clone(), r.stats.plan_switches, r.stats.mid_batch_swaps)
+            })
             .collect();
         println!("{}", adaptive_table("Static vs adaptive over the bandwidth trace", &trows));
     }
+
+    // the adaptive (non-pinned) run is the record of interest for every
+    // export — the pinned comparison runs only feed the table above
+    let first = &runs[0];
+    if let Some(path) = args.get("--trace-out") {
+        let mut doc = chrome_trace(&first.spans).to_string_pretty();
+        doc.push('\n');
+        std::fs::write(path, doc).with_context(|| format!("write {path}"))?;
+        println!("wrote {path} ({} spans)", first.spans.len());
+    }
+    if let Some(path) = args.get("--profile-out") {
+        let ops = Json::Obj(
+            [(
+                "ops".to_string(),
+                Json::Arr(first.ops.iter().map(OpProfileRow::to_json).collect()),
+            )]
+            .into_iter()
+            .collect(),
+        );
+        let mut doc = ops.to_string_pretty();
+        doc.push('\n');
+        std::fs::write(path, doc).with_context(|| format!("write {path}"))?;
+        println!("wrote {path} ({} op signatures)", first.ops.len());
+    }
+    if let Some(path) = calib_out {
+        let priors = adaptive_priors(&acfg.bank, &first.stats);
+        let rec = aggregate(&first.spans, &priors, &first.ops);
+        let mut doc = rec.to_json().to_string_pretty();
+        doc.push('\n');
+        std::fs::write(path, doc).with_context(|| format!("write {path}"))?;
+        println!(
+            "wrote {path} ({} spans; measured e2e {:.3} ms, modeled overhead {:.1} µs)",
+            rec.e2e_count,
+            rec.e2e_s * 1e3,
+            rec.overhead_s * 1e6,
+        );
+    }
     if let Some(path) = args.get("--json") {
+        let rows: Vec<(String, LoadReport, ServingStats)> =
+            runs.iter().map(|r| (r.name.clone(), r.report.clone(), r.stats.clone())).collect();
         write_adaptive_json(path, &rows)?;
         println!("wrote {path}");
     }
@@ -744,6 +908,10 @@ fn run_tcp_loadtest(
             args.get("--trace-out").is_none(),
             "--trace-out needs the in-process server (spans live server-side; drop --connect)"
         );
+        anyhow::ensure!(
+            args.get("--profile-out").is_none(),
+            "--profile-out needs the in-process server (the profiler lives server-side)"
+        );
         // remote server: images must match its artifact spec — the
         // default synthetic spec on both sides (CI's two-process smoke)
         let spec = RefArtifactSpec::default();
@@ -760,6 +928,7 @@ fn run_tcp_loadtest(
         cfg.scheduler = sched.clone();
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
+        cfg.profile = profile_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend =
             TcpFrontend::bind("127.0.0.1:0", server.clone(), net_config_from_args(args)?)?;
@@ -772,6 +941,7 @@ fn run_tcp_loadtest(
         // the client closes inside `drive`, before the front-end drains
         drive(client, &images)?;
         export_trace(args, &server)?;
+        export_profile(args, &server)?;
         println!("\n{}", frontend.shutdown().report());
         Ok(())
     })();
@@ -804,6 +974,7 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
         cfg.scheduler = sched.clone();
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
+        cfg.profile = profile_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net)?;
         println!(
@@ -826,6 +997,7 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
             println!("wrote {path}");
         }
         export_trace(args, &server)?;
+        export_profile(args, &server)?;
         println!("\n{}", frontend.shutdown().report());
         Ok(())
     })();
@@ -854,6 +1026,7 @@ fn run_loadtest(
         cfg.scheduler = sched;
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
+        cfg.profile = profile_from_args(args)?;
         Server::start(cfg)
     };
 
@@ -892,6 +1065,7 @@ fn run_loadtest(
         println!("wrote {path}");
     }
     export_trace(args, &server)?;
+    export_profile(args, &server)?;
     println!("\n{}", server.shutdown().report());
     Ok(())
 }
@@ -910,6 +1084,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.scheduler = scheduler_from_args(args)?;
     cfg.pool = pool_from_args(args)?;
     cfg.trace = trace_from_args(args)?;
+    cfg.profile = profile_from_args(args)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }
@@ -984,6 +1159,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
         export_trace(args, &server)?;
+        export_profile(args, &server)?;
         let stats = frontend.shutdown();
         println!("{}", stats.report());
         if synthetic {
@@ -1007,6 +1183,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
         export_trace(args, &server)?;
+        export_profile(args, &server)?;
         let stats = server.shutdown();
         println!("\nanswered {answered} requests ({shed} shed)");
         println!("{}", stats.report());
@@ -1044,6 +1221,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     export_trace(args, &server)?;
+    export_profile(args, &server)?;
     let stats = server.shutdown();
     println!(
         "\naccuracy over {answered} answered requests ({shed} shed): {:.3}",

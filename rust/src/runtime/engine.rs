@@ -27,18 +27,32 @@
 //! Real HLO text (`HloModule ...`) is detected and rejected with a clear
 //! error pointing at the PJRT backend.
 
+use super::opprof::{OpProbe, OpProfiler};
 use crate::profile::SplitMix64;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Runtime handle (PJRT-client analogue). Cheap; create once per thread.
-pub struct Runtime;
+/// Optionally carries an [`OpProfiler`]: engines loaded through a
+/// profiling runtime time each interpreter op (`--profile on`); the
+/// default runtime attaches nothing and the run loops skip even the
+/// clock reads.
+pub struct Runtime {
+    prof: Option<Arc<OpProfiler>>,
+}
 
 impl Runtime {
     /// The reference CPU runtime (in the PJRT build: the CPU plugin).
     pub fn cpu() -> Result<Self> {
-        Ok(Runtime)
+        Ok(Runtime { prof: None })
+    }
+
+    /// A runtime whose engines record per-op latencies into `prof`.
+    pub fn with_profiler(prof: Arc<OpProfiler>) -> Result<Self> {
+        Ok(Runtime { prof: Some(prof) })
     }
 
     pub fn platform(&self) -> String {
@@ -51,8 +65,10 @@ impl Runtime {
             .with_context(|| format!("read artifact {path:?}"))?;
         let program = parse_ref_program(&text)
             .with_context(|| format!("parse artifact {path:?}"))?;
+        let prof = self.prof.as_deref().map(|p| EngineProf::resolve(p, &program));
         Ok(Engine {
             program,
+            prof,
             name: path
                 .file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
@@ -131,9 +147,46 @@ impl<'a> LiteralView<'a> {
     }
 }
 
+/// Per-program probe set, resolved once at engine-load time (op
+/// signatures bake in the program's output shapes, so every engine with
+/// the same shape shares one histogram per op).
+enum EngineProf {
+    Edge { pack: OpProbe },
+    Cloud { unpack: OpProbe, gemm: OpProbe },
+    Full { gemm: OpProbe },
+}
+
+impl EngineProf {
+    fn resolve(p: &OpProfiler, program: &Program) -> EngineProf {
+        match program {
+            Program::EdgePack { img, c2, hw, .. } => EngineProf::Edge {
+                pack: p.probe(&format!("quant_pack[{c2}x{hw}]"), (img * img) as u64),
+            },
+            Program::CloudLogits { batch, c2, hw, bits, classes, .. } => {
+                let feat = c2 * hw * (8 / bits) as usize;
+                EngineProf::Cloud {
+                    unpack: p.probe(
+                        &format!("unpack_dequant[{batch}x{feat}]"),
+                        (batch * feat) as u64,
+                    ),
+                    gemm: p.probe(
+                        &format!("gemm[{batch}x{classes}]"),
+                        (batch * classes * feat) as u64,
+                    ),
+                }
+            }
+            Program::FullLogits { img, classes, .. } => EngineProf::Full {
+                gemm: p.probe(&format!("gemm[1x{classes}]"), (classes * img * img) as u64),
+            },
+        }
+    }
+}
+
 /// One loaded executable.
 pub struct Engine {
     program: Program,
+    /// Present only when loaded through `Runtime::with_profiler`.
+    prof: Option<EngineProf>,
     pub name: String,
 }
 
@@ -168,11 +221,18 @@ impl Engine {
                 let feat = sample * per;
                 let mask = ((1u16 << bits) - 1) as u8;
                 out.reserve(batch * classes);
+                // Profiling accumulates whole-batch durations per op and
+                // records once per run; the math and its order are
+                // untouched, so profiled runs are bit-identical. With no
+                // profiler even the clock reads are skipped.
+                let timing = self.prof.is_some();
+                let (mut t_unpack, mut t_gemm) = (Duration::ZERO, Duration::ZERO);
                 // one unpack scratch for the whole batch, not per sample
                 let mut x: Vec<f32> = Vec::with_capacity(feat);
                 for b in 0..*batch {
                     let bytes = &data[b * sample..(b + 1) * sample];
                     // unpack + dequantize
+                    let t = timing.then(Instant::now);
                     x.clear();
                     for &byte in bytes {
                         for slot in 0..per {
@@ -180,6 +240,10 @@ impl Engine {
                             x.push(code as f32 * scale);
                         }
                     }
+                    if let Some(t) = t {
+                        t_unpack += t.elapsed();
+                    }
+                    let t = timing.then(Instant::now);
                     for c in 0..*classes {
                         let row = &weights[c * feat..(c + 1) * feat];
                         let mut acc = 0.0f32;
@@ -188,6 +252,13 @@ impl Engine {
                         }
                         out.push(acc);
                     }
+                    if let Some(t) = t {
+                        t_gemm += t.elapsed();
+                    }
+                }
+                if let Some(EngineProf::Cloud { unpack, gemm }) = &self.prof {
+                    unpack.record(t_unpack);
+                    gemm.record(t_gemm);
                 }
                 Ok(())
             }
@@ -201,6 +272,7 @@ impl Engine {
                     x.len()
                 );
                 out.reserve(*classes);
+                let t = self.prof.is_some().then(Instant::now);
                 for c in 0..*classes {
                     let row = &weights[c * feat..(c + 1) * feat];
                     let mut acc = 0.0f32;
@@ -208,6 +280,9 @@ impl Engine {
                         acc += w * v;
                     }
                     out.push(acc);
+                }
+                if let (Some(t), Some(EngineProf::Full { gemm })) = (t, &self.prof) {
+                    gemm.record(t.elapsed());
                 }
                 Ok(())
             }
@@ -253,12 +328,16 @@ impl Engine {
                 let qmax = ((1u16 << bits) - 1) as f32;
                 let code = |v: f32| -> u8 { (v / scale).round().clamp(0.0, qmax) as u8 };
                 out.reserve(c2 * hw);
+                let t = self.prof.is_some().then(Instant::now);
                 for j in 0..c2 * hw {
                     let mut byte = 0u8;
                     for slot in 0..per {
                         byte |= code(x[j * per + slot]) << (slot as u8 * bits);
                     }
                     out.push(byte);
+                }
+                if let (Some(t), Some(EngineProf::Edge { pack })) = (t, &self.prof) {
+                    pack.record(t.elapsed());
                 }
                 Ok(())
             }
@@ -463,6 +542,39 @@ mod tests {
         assert!(literal_u8(&[1, 2, 3], &[1, 3]).is_ok());
         assert!(literal_view_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(literal_view_u8(&[1, 2, 3], &[1, 3]).is_ok());
+    }
+
+    #[test]
+    fn profiled_engine_is_bit_identical_and_records_ops() {
+        let edge = write_tmp(
+            "edge_prof.hlo.txt",
+            "REFHLO v1\nprogram: edge_pack\nimg: 4\nbits: 4\nc2: 2\nhw: 4\nscale: 0.1\n",
+        );
+        let cloud = write_tmp(
+            "cloud_prof.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 1\nc2: 2\nhw: 4\nbits: 4\n\
+             scale: 0.1\nclasses: 3\nseed: 7\n",
+        );
+        let plain = Runtime::cpu().unwrap();
+        let prof = Arc::new(OpProfiler::new());
+        let timed = Runtime::with_profiler(Arc::clone(&prof)).unwrap();
+        let img: Vec<f32> = (0..16).map(|i| i as f32 * 0.07).collect();
+        let lit = literal_f32(&img, &[1, 1, 4, 4]).unwrap();
+
+        let packed0 = plain.load_hlo_text(&edge).unwrap().run_u8(&[lit.clone()]).unwrap();
+        let packed1 = timed.load_hlo_text(&edge).unwrap().run_u8(&[lit]).unwrap();
+        assert_eq!(packed0, packed1, "profiling must not change the wire bytes");
+
+        let blit = literal_u8(&packed0, &[1, 2, 4]).unwrap();
+        let logits0 = plain.load_hlo_text(&cloud).unwrap().run_f32(&[blit.clone()]).unwrap();
+        let logits1 = timed.load_hlo_text(&cloud).unwrap().run_f32(&[blit]).unwrap();
+        assert_eq!(logits0, logits1, "profiling must not change the logits");
+
+        let sigs: Vec<String> = prof.table().iter().map(|r| r.sig.clone()).collect();
+        assert_eq!(sigs, ["gemm[1x3]", "quant_pack[2x4]", "unpack_dequant[1x16]"]);
+        for row in prof.table() {
+            assert_eq!(row.count, 1, "{}: one run recorded", row.sig);
+        }
     }
 
     #[test]

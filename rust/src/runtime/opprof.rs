@@ -1,0 +1,268 @@
+//! Op-level runtime profiler (`--profile on`): zero cost when off,
+//! bit-identical results when on.
+//!
+//! The REFHLO interpreter is the one place that knows how long each
+//! tensor op actually takes on this host — the analytic `sim::latency`
+//! model only predicts it. When an [`Engine`] is loaded through a
+//! [`Runtime`](super::Runtime) carrying an [`OpProfiler`], it resolves
+//! one [`OpProbe`] per interpreter op at load time (a `Mutex` touch per
+//! engine load, never per request) and records each op's measured
+//! nanoseconds into a shared lock-free [`Histogram`] keyed by op
+//! signature (`kind[shape]`). Timing wraps the existing loops without
+//! reordering any float math, so profiled and unprofiled execution are
+//! bit-identical; with no profiler attached the engine carries `None`
+//! and the run loops skip even the clock reads.
+//!
+//! A thread-local **capture buffer** ([`capture_begin`]/[`capture_take`])
+//! additionally collects the individual op timings of one engine run so
+//! the serving threads can attach them to a sampled request span
+//! (`obsv::StagedOp`) — the Chrome trace then shows the runtime ops
+//! nested inside the `edge`/`cloud` stage windows.
+
+use crate::util::{Histogram, Json};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One measured op execution, as collected by the thread-local capture
+/// buffer (signature shared with the profiler registry).
+#[derive(Debug, Clone)]
+pub struct OpEvent {
+    pub sig: Arc<str>,
+    pub dur_ns: u64,
+}
+
+thread_local! {
+    static CAPTURE: RefCell<Option<Vec<OpEvent>>> = const { RefCell::new(None) };
+}
+
+/// Start capturing op events on this thread (serving threads call this
+/// just before running an engine for a *sampled* span).
+pub fn capture_begin() {
+    CAPTURE.with(|c| *c.borrow_mut() = Some(Vec::new()));
+}
+
+/// Stop capturing and return the events recorded since
+/// [`capture_begin`] (empty if capture was never started).
+pub fn capture_take() -> Vec<OpEvent> {
+    CAPTURE.with(|c| c.borrow_mut().take()).unwrap_or_default()
+}
+
+/// A resolved per-op recording handle: one histogram shared by every
+/// engine whose op has the same signature. Recording is a handful of
+/// atomic RMWs — no locks, no allocation (unless a capture is active).
+#[derive(Debug, Clone)]
+pub struct OpProbe {
+    sig: Arc<str>,
+    hist: Arc<Histogram>,
+    /// Tensor elements processed per call (throughput denominator).
+    elems: u64,
+}
+
+impl OpProbe {
+    pub fn record(&self, d: Duration) {
+        self.hist.record(d);
+        CAPTURE.with(|c| {
+            if let Some(buf) = c.borrow_mut().as_mut() {
+                buf.push(OpEvent {
+                    sig: Arc::clone(&self.sig),
+                    dur_ns: u64::try_from(d.as_nanos()).unwrap_or(u64::MAX),
+                });
+            }
+        });
+    }
+
+    pub fn sig(&self) -> &str {
+        &self.sig
+    }
+}
+
+struct ProbeEntry {
+    sig: Arc<str>,
+    hist: Arc<Histogram>,
+    elems: u64,
+}
+
+/// Process-wide registry of op histograms, keyed by op signature.
+/// Engines resolve probes at load time; [`OpProfiler::table`] exports
+/// the aggregate per-op latency table.
+#[derive(Default)]
+pub struct OpProfiler {
+    reg: Mutex<BTreeMap<String, ProbeEntry>>,
+}
+
+impl OpProfiler {
+    pub fn new() -> Self {
+        OpProfiler::default()
+    }
+
+    /// Resolve (or create) the probe for an op signature. Called at
+    /// engine-load time only.
+    pub fn probe(&self, sig: &str, elems: u64) -> OpProbe {
+        let mut reg = self.reg.lock().unwrap();
+        let e = reg.entry(sig.to_string()).or_insert_with(|| ProbeEntry {
+            sig: Arc::from(sig),
+            hist: Arc::new(Histogram::default()),
+            elems,
+        });
+        OpProbe { sig: Arc::clone(&e.sig), hist: Arc::clone(&e.hist), elems: e.elems }
+    }
+
+    /// Per-op latency table, sorted by signature (deterministic order).
+    pub fn table(&self) -> Vec<OpProfileRow> {
+        let reg = self.reg.lock().unwrap();
+        reg.values()
+            .map(|e| {
+                let s = e.hist.snapshot();
+                let count = s.count();
+                let total_s = s.mean() * count as f64;
+                OpProfileRow {
+                    sig: e.sig.to_string(),
+                    count,
+                    total_s,
+                    mean_s: s.mean(),
+                    p50_s: s.quantile(0.5),
+                    p99_s: s.quantile(0.99),
+                    max_s: s.max(),
+                    elems_per_call: e.elems,
+                    elems_per_s: if total_s > 0.0 {
+                        e.elems as f64 * count as f64 / total_s
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// `{"ops": [...]}` export of [`OpProfiler::table`].
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [(
+                "ops".to_string(),
+                Json::Arr(self.table().iter().map(OpProfileRow::to_json).collect()),
+            )]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// One row of the exported per-op latency table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpProfileRow {
+    pub sig: String,
+    pub count: u64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+    pub elems_per_call: u64,
+    pub elems_per_s: f64,
+}
+
+impl OpProfileRow {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("sig".to_string(), Json::Str(self.sig.clone())),
+                ("count".to_string(), Json::Num(self.count as f64)),
+                ("total_s".to_string(), Json::Num(self.total_s)),
+                ("mean_s".to_string(), Json::Num(self.mean_s)),
+                ("p50_s".to_string(), Json::Num(self.p50_s)),
+                ("p99_s".to_string(), Json::Num(self.p99_s)),
+                ("max_s".to_string(), Json::Num(self.max_s)),
+                ("elems_per_call".to_string(), Json::Num(self.elems_per_call as f64)),
+                ("elems_per_s".to_string(), Json::Num(self.elems_per_s)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Inverse of [`OpProfileRow::to_json`] (tolerant: missing numeric
+    /// fields read as 0).
+    pub fn parse(j: &Json) -> Option<OpProfileRow> {
+        let Json::Obj(o) = j else { return None };
+        let num = |k: &str| match o.get(k) {
+            Some(Json::Num(n)) => *n,
+            _ => 0.0,
+        };
+        let sig = match o.get("sig") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return None,
+        };
+        Some(OpProfileRow {
+            sig,
+            count: num("count") as u64,
+            total_s: num("total_s"),
+            mean_s: num("mean_s"),
+            p50_s: num("p50_s"),
+            p99_s: num("p99_s"),
+            max_s: num("max_s"),
+            elems_per_call: num("elems_per_call") as u64,
+            elems_per_s: num("elems_per_s"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_shares_histogram_by_signature() {
+        let p = OpProfiler::new();
+        let a = p.probe("gemm[4x10]", 400);
+        let b = p.probe("gemm[4x10]", 400);
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(30));
+        let t = p.table();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].count, 2, "same signature shares one histogram");
+        assert!((t[0].mean_s - 20e-6).abs() < 1e-9, "{}", t[0].mean_s);
+        assert_eq!(t[0].elems_per_call, 400);
+        assert!(t[0].elems_per_s > 0.0);
+    }
+
+    #[test]
+    fn table_sorted_by_signature() {
+        let p = OpProfiler::new();
+        p.probe("unpack_dequant[1x128]", 128).record(Duration::from_micros(5));
+        p.probe("gemm[1x10]", 1280).record(Duration::from_micros(9));
+        let sigs: Vec<&str> = p.table().iter().map(|r| r.sig.as_str()).collect();
+        assert_eq!(sigs, ["gemm[1x10]", "unpack_dequant[1x128]"]);
+    }
+
+    #[test]
+    fn capture_collects_only_between_begin_and_take() {
+        let p = OpProfiler::new();
+        let probe = p.probe("quant_pack[2x64]", 256);
+        probe.record(Duration::from_micros(1)); // before capture: dropped
+        capture_begin();
+        probe.record(Duration::from_micros(2));
+        probe.record(Duration::from_micros(3));
+        let evs = capture_take();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].sig.as_ref(), "quant_pack[2x64]");
+        assert_eq!(evs[0].dur_ns, 2_000);
+        assert_eq!(evs[1].dur_ns, 3_000);
+        probe.record(Duration::from_micros(4)); // after take: dropped
+        assert!(capture_take().is_empty());
+        assert_eq!(p.table()[0].count, 4, "histogram sees every record");
+    }
+
+    #[test]
+    fn row_json_roundtrips() {
+        let p = OpProfiler::new();
+        p.probe("gemm[8x10]", 8 * 10 * 512).record(Duration::from_micros(42));
+        let rows = p.table();
+        let j = rows[0].to_json();
+        let back = OpProfileRow::parse(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.sig, rows[0].sig);
+        assert_eq!(back.count, rows[0].count);
+        assert_eq!(back.elems_per_call, rows[0].elems_per_call);
+    }
+}

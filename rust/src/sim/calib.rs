@@ -1,0 +1,363 @@
+//! Measured-latency calibration: close the predict→measure loop.
+//!
+//! The plan bank prices every candidate split with the analytic prior
+//! (`PlanSpec::predict_s` = edge + cloud + uplink transfer). This module
+//! turns PR 7's measured span data into a deterministic
+//! [`CalibRecord`]: per-stage scale factors relative to a caller-chosen
+//! [`StagePriors`], plus the overhead the analytic model does not price
+//! at all (admission, queueing, dispatch, respond), plus the runtime's
+//! per-op latency table. `bankgen --calib` then reprices banks with
+//! [`CalibScales`] so `predict_s` tracks what the serving pipeline
+//! actually measured on this host.
+//!
+//! Determinism contract: aggregation uses integer nanosecond sums over
+//! the span set, so the same spans in any order produce a byte-identical
+//! `calib.json` (the CI gate depends on this). Stages with zero samples
+//! keep the analytic prior (`scale = 1.0`, `measured_s = null`).
+
+use crate::coordinator::obsv::{
+    SpanKind, SpanRecord, STAGE_ADMIT, STAGE_CLOUD, STAGE_DISPATCH, STAGE_EDGE, STAGE_PACK,
+    STAGE_QUEUE, STAGE_RESPOND, STAGE_UPLINK,
+};
+use crate::runtime::OpProfileRow;
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+const MAGIC: &str = "auto-split-calib-v1";
+
+/// Analytic per-request stage priors (seconds) the measurements are
+/// compared against — what `predict_s` charges for each stage under the
+/// traffic mix that produced the spans.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagePriors {
+    pub edge_s: f64,
+    /// The analytic model prices packing at zero (it is part of the
+    /// edge partition); kept explicit so a future prior can split it.
+    pub pack_s: f64,
+    pub uplink_s: f64,
+    pub cloud_s: f64,
+}
+
+/// One calibrated stage: sample count, measured mean (None when no
+/// samples), the prior it is compared against, and the resulting
+/// multiplicative scale (1.0 when unmeasured or the prior is zero).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCalib {
+    pub count: u64,
+    pub measured_s: Option<f64>,
+    pub prior_s: f64,
+    pub scale: f64,
+}
+
+impl StageCalib {
+    fn from_sum(sum_ns: u128, count: u64, prior_s: f64) -> StageCalib {
+        let measured_s =
+            (count > 0).then(|| sum_ns as f64 / count as f64 / 1e9);
+        let scale = match measured_s {
+            Some(m) if prior_s > 0.0 => m / prior_s,
+            _ => 1.0,
+        };
+        StageCalib { count, measured_s, prior_s, scale }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("count".to_string(), Json::Num(self.count as f64)),
+                (
+                    "measured_s".to_string(),
+                    self.measured_s.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("prior_s".to_string(), Json::Num(self.prior_s)),
+                ("scale".to_string(), Json::Num(self.scale)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    fn parse(j: &Json) -> Option<StageCalib> {
+        let Json::Obj(o) = j else { return None };
+        let num = |k: &str| match o.get(k) {
+            Some(Json::Num(n)) => Some(*n),
+            _ => None,
+        };
+        Some(StageCalib {
+            count: num("count")? as u64,
+            measured_s: num("measured_s"),
+            prior_s: num("prior_s")?,
+            scale: num("scale")?,
+        })
+    }
+}
+
+/// Multiplicative repricing factors extracted from a [`CalibRecord`],
+/// applied by `PlanSpec::predict_calibrated_s`. `identity()` leaves the
+/// analytic prediction bit-exact (`x * 1.0 + 0.0`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibScales {
+    pub edge: f64,
+    pub uplink: f64,
+    pub cloud: f64,
+    /// Additive per-request seconds the analytic model does not price:
+    /// pipeline overhead (admit/queue/dispatch/respond) plus packing.
+    pub extra_s: f64,
+}
+
+impl CalibScales {
+    pub fn identity() -> Self {
+        CalibScales { edge: 1.0, uplink: 1.0, cloud: 1.0, extra_s: 0.0 }
+    }
+}
+
+/// Deterministic calibration record (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibRecord {
+    /// Keyed `edge`/`pack`/`uplink`/`cloud` (BTreeMap: sorted JSON).
+    pub stages: BTreeMap<String, StageCalib>,
+    /// Mean per-request seconds spent outside the modeled stages
+    /// (admit + queue + dispatch + respond), over completed spans.
+    pub overhead_s: f64,
+    /// Completed spans aggregated.
+    pub e2e_count: u64,
+    /// Mean measured end-to-end seconds over completed spans.
+    pub e2e_s: f64,
+    /// Per-op latency table from the runtime profiler (may be empty
+    /// when the run was traced but not profiled).
+    pub ops: Vec<OpProfileRow>,
+}
+
+/// Aggregate completed spans (and an optional per-op table) into a
+/// [`CalibRecord`] against the given priors. Order-independent: every
+/// mean comes from integer nanosecond sums.
+pub fn aggregate(spans: &[SpanRecord], priors: &StagePriors, ops: &[OpProfileRow]) -> CalibRecord {
+    const MODELED: [(&str, usize); 4] = [
+        ("edge", STAGE_EDGE),
+        ("pack", STAGE_PACK),
+        ("uplink", STAGE_UPLINK),
+        ("cloud", STAGE_CLOUD),
+    ];
+    const OVERHEAD: [usize; 4] = [STAGE_ADMIT, STAGE_QUEUE, STAGE_DISPATCH, STAGE_RESPOND];
+
+    let mut sums = [0u128; 4];
+    let mut counts = [0u64; 4];
+    let mut overhead_ns = 0u128;
+    let mut e2e_ns = 0u128;
+    let mut done = 0u64;
+    for sp in spans.iter().filter(|s| s.kind == SpanKind::Done) {
+        done += 1;
+        for (slot, &(_, stage)) in MODELED.iter().enumerate() {
+            let ns = sp.stage_ns[stage];
+            if ns > 0 {
+                sums[slot] += ns as u128;
+                counts[slot] += 1;
+            }
+        }
+        for &stage in &OVERHEAD {
+            overhead_ns += sp.stage_ns[stage] as u128;
+        }
+        e2e_ns += sp.stage_ns.iter().map(|&n| n as u128).sum::<u128>();
+    }
+
+    let prior_of = |name: &str| match name {
+        "edge" => priors.edge_s,
+        "pack" => priors.pack_s,
+        "uplink" => priors.uplink_s,
+        _ => priors.cloud_s,
+    };
+    let stages = MODELED
+        .iter()
+        .enumerate()
+        .map(|(slot, &(name, _))| {
+            (name.to_string(), StageCalib::from_sum(sums[slot], counts[slot], prior_of(name)))
+        })
+        .collect();
+    let mean = |ns: u128| if done > 0 { ns as f64 / done as f64 / 1e9 } else { 0.0 };
+    CalibRecord {
+        stages,
+        overhead_s: mean(overhead_ns),
+        e2e_count: done,
+        e2e_s: mean(e2e_ns),
+        ops: ops.to_vec(),
+    }
+}
+
+impl CalibRecord {
+    fn stage(&self, name: &str) -> Option<&StageCalib> {
+        self.stages.get(name)
+    }
+
+    /// Repricing factors for `predict_calibrated_s`: per-stage scales
+    /// (1.0 where unmeasured) plus the additive unmodeled seconds.
+    pub fn scales(&self) -> CalibScales {
+        let scale = |n: &str| self.stage(n).map(|s| s.scale).unwrap_or(1.0);
+        let pack_s =
+            self.stage("pack").and_then(|s| s.measured_s).unwrap_or(0.0);
+        CalibScales {
+            edge: scale("edge"),
+            uplink: scale("uplink"),
+            cloud: scale("cloud"),
+            extra_s: self.overhead_s + pack_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("magic".to_string(), Json::Str(MAGIC.to_string())),
+                (
+                    "stages".to_string(),
+                    Json::Obj(
+                        self.stages.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                    ),
+                ),
+                ("overhead_s".to_string(), Json::Num(self.overhead_s)),
+                (
+                    "e2e".to_string(),
+                    Json::Obj(
+                        [
+                            ("count".to_string(), Json::Num(self.e2e_count as f64)),
+                            ("measured_s".to_string(), Json::Num(self.e2e_s)),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    ),
+                ),
+                (
+                    "ops".to_string(),
+                    Json::Arr(self.ops.iter().map(OpProfileRow::to_json).collect()),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Inverse of [`CalibRecord::to_json`]. The magic is required (this
+    /// is a CLI input file); stage entries are otherwise tolerant.
+    pub fn parse(j: &Json) -> Option<CalibRecord> {
+        let Json::Obj(o) = j else { return None };
+        match o.get("magic") {
+            Some(Json::Str(m)) if m == MAGIC => {}
+            _ => return None,
+        }
+        let mut stages = BTreeMap::new();
+        if let Some(Json::Obj(st)) = o.get("stages") {
+            for (k, v) in st {
+                stages.insert(k.clone(), StageCalib::parse(v)?);
+            }
+        }
+        let num = |k: &str| match o.get(k) {
+            Some(Json::Num(n)) => *n,
+            _ => 0.0,
+        };
+        let (e2e_count, e2e_s) = match o.get("e2e") {
+            Some(Json::Obj(e)) => {
+                let g = |k: &str| match e.get(k) {
+                    Some(Json::Num(n)) => *n,
+                    _ => 0.0,
+                };
+                (g("count") as u64, g("measured_s"))
+            }
+            _ => (0, 0.0),
+        };
+        let ops = match o.get("ops") {
+            Some(Json::Arr(rows)) => rows.iter().filter_map(OpProfileRow::parse).collect(),
+            _ => Vec::new(),
+        };
+        Some(CalibRecord { stages, overhead_s: num("overhead_s"), e2e_count, e2e_s, ops })
+    }
+
+    /// Load from a JSON string (CLI convenience).
+    pub fn parse_str(text: &str) -> Option<CalibRecord> {
+        CalibRecord::parse(&Json::parse(text).ok()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, stage_ns: [u64; 8]) -> SpanRecord {
+        SpanRecord { id: 0, kind, t0_ns: 0, stage_ns, ops: Vec::new() }
+    }
+
+    fn priors() -> StagePriors {
+        StagePriors { edge_s: 1e-3, pack_s: 0.0, uplink_s: 10e-3, cloud_s: 2e-3 }
+    }
+
+    #[test]
+    fn aggregation_is_order_independent() {
+        let mut spans = vec![
+            span(SpanKind::Done, [100, 200, 1_000_000, 5_000, 9_000_000, 300, 2_500_000, 50]),
+            span(SpanKind::Done, [80, 150, 1_200_000, 6_000, 11_000_000, 250, 1_500_000, 40]),
+            span(SpanKind::Shed, [999, 999, 999, 999, 999, 999, 999, 999]), // ignored
+        ];
+        let a = aggregate(&spans, &priors(), &[]);
+        spans.reverse();
+        let b = aggregate(&spans, &priors(), &[]);
+        assert_eq!(a, b);
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "same span set must serialize byte-identically"
+        );
+        assert_eq!(a.e2e_count, 2, "shed spans are excluded");
+        let edge = a.stage("edge").unwrap();
+        assert_eq!(edge.count, 2);
+        assert!((edge.measured_s.unwrap() - 1.1e-3).abs() < 1e-12);
+        assert!((edge.scale - 1.1).abs() < 1e-9, "{}", edge.scale);
+    }
+
+    #[test]
+    fn zero_sample_stage_keeps_prior() {
+        // no uplink time recorded at all (e.g. full-cloud plan)
+        let spans =
+            vec![span(SpanKind::Done, [10, 20, 500_000, 0, 0, 30, 900_000, 40])];
+        let rec = aggregate(&spans, &priors(), &[]);
+        let up = rec.stage("uplink").unwrap();
+        assert_eq!(up.count, 0);
+        assert_eq!(up.measured_s, None);
+        assert_eq!(up.scale, 1.0, "unmeasured stage falls back to the prior");
+        assert!(rec.to_json().to_string_pretty().contains("null"));
+        let s = rec.scales();
+        assert_eq!(s.uplink, 1.0);
+    }
+
+    #[test]
+    fn scales_reprice_to_measured_means() {
+        let spans = vec![
+            span(SpanKind::Done, [1_000, 2_000, 2_000_000, 10_000, 5_000_000, 500, 4_000_000, 500]),
+        ];
+        let rec = aggregate(&spans, &priors(), &[]);
+        let s = rec.scales();
+        // scale × prior reproduces the measured stage mean exactly
+        assert!((s.edge * 1e-3 - 2e-3).abs() < 1e-12);
+        assert!((s.uplink * 10e-3 - 5e-3).abs() < 1e-12);
+        assert!((s.cloud * 2e-3 - 4e-3).abs() < 1e-12);
+        // extra_s covers pack + the four unmodeled stages
+        assert!((s.extra_s - (10_000. + 1_000. + 2_000. + 500. + 500.) / 1e9).abs() < 1e-15);
+        let modeled = s.edge * 1e-3 + s.uplink * 10e-3 + s.cloud * 2e-3 + s.extra_s;
+        assert!((modeled - rec.e2e_s).abs() < 1e-12, "calibrated sum matches measured e2e");
+    }
+
+    #[test]
+    fn json_roundtrips_and_requires_magic() {
+        let spans =
+            vec![span(SpanKind::Done, [10, 20, 500_000, 400, 3_000_000, 30, 900_000, 40])];
+        let rec = aggregate(&spans, &priors(), &[]);
+        let text = rec.to_json().to_string_pretty();
+        let back = CalibRecord::parse_str(&text).unwrap();
+        assert_eq!(back.e2e_count, rec.e2e_count);
+        assert_eq!(back.stages, rec.stages);
+        assert_eq!(back.to_json().to_string_pretty(), text, "parse∘to_json is identity");
+        assert!(CalibRecord::parse_str("{\"magic\": \"wrong\"}").is_none());
+    }
+
+    #[test]
+    fn empty_span_set_is_all_priors() {
+        let rec = aggregate(&[], &priors(), &[]);
+        assert_eq!(rec.e2e_count, 0);
+        assert_eq!(rec.scales(), CalibScales { edge: 1.0, uplink: 1.0, cloud: 1.0, extra_s: 0.0 });
+    }
+}

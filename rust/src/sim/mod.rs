@@ -6,12 +6,14 @@
 //! substitution argument). The key property preserved is §5.1's: fixed
 //! INT8 MACs mean sub-8-bit precision accelerates *data movement only*.
 
+pub mod calib;
 pub mod device;
 pub mod latency;
 pub mod memory;
 pub mod network;
 pub mod systolic;
 
+pub use calib::{aggregate, CalibRecord, CalibScales, StageCalib, StagePriors};
 pub use device::{AcceleratorConfig, Dataflow};
 pub use latency::{LatencyModel, CLOUD_DISPATCH_S, EDGE_DISPATCH_S};
 pub use network::Uplink;

@@ -33,7 +33,7 @@
 //! identity, so a bank stores each distinct plan once.
 
 use super::solutions::Solution;
-use crate::sim::Uplink;
+use crate::sim::{CalibScales, Uplink};
 use crate::util::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -141,7 +141,19 @@ impl PlanSpec {
     /// Predicted end-to-end seconds at a network state: the plan's
     /// compute terms plus its transmission re-priced at this uplink.
     pub fn predict_s(&self, state: &NetClass) -> f64 {
-        self.edge_s + self.cloud_s + state.uplink().transfer_seconds(self.tx_bytes)
+        self.predict_calibrated_s(state, &CalibScales::identity())
+    }
+
+    /// [`PlanSpec::predict_s`] with measured-latency calibration
+    /// (`sim::calib`): each analytic term is multiplied by its stage's
+    /// measured/prior ratio, plus the additive per-request overhead the
+    /// analytic model does not price. Identity scales reproduce
+    /// `predict_s` bit-exactly (`x * 1.0` and `x + 0.0` are exact).
+    pub fn predict_calibrated_s(&self, state: &NetClass, scales: &CalibScales) -> f64 {
+        scales.edge * self.edge_s
+            + scales.cloud * self.cloud_s
+            + scales.uplink * state.uplink().transfer_seconds(self.tx_bytes)
+            + scales.extra_s
     }
 
     /// Summarize a planner [`Solution`] into a bank candidate. The id is a
@@ -223,7 +235,9 @@ fn select_for_state(
     state: &NetClass,
     slo_ms: f64,
     max_drop_pct: f64,
+    scales: &CalibScales,
 ) -> (usize, f64) {
+    let predict = |i: usize| candidates[i].predict_calibrated_s(state, scales);
     let accurate: Vec<usize> = (0..candidates.len())
         .filter(|&i| candidates[i].acc_drop_pct <= max_drop_pct + 1e-9)
         .collect();
@@ -233,7 +247,7 @@ fn select_for_state(
         // most accurate plan that meets the latency budget
         let mut best: Option<usize> = None;
         for &i in &pool {
-            if candidates[i].predict_s(state) * 1e3 <= slo_ms + 1e-9 {
+            if predict(i) * 1e3 <= slo_ms + 1e-9 {
                 let better = match best {
                     None => true,
                     Some(b) => candidates[i].acc_drop_pct < candidates[b].acc_drop_pct - 1e-12,
@@ -244,14 +258,14 @@ fn select_for_state(
             }
         }
         if let Some(i) = best {
-            return (i, candidates[i].predict_s(state));
+            return (i, predict(i));
         }
         // nothing meets the budget: fall through to fastest
     }
     let mut best = pool[0];
-    let mut best_s = candidates[best].predict_s(state);
+    let mut best_s = predict(best);
     for &i in &pool[1..] {
-        let s = candidates[i].predict_s(state);
+        let s = predict(i);
         if s < best_s - 1e-15 {
             best = i;
             best_s = s;
@@ -270,6 +284,21 @@ impl PlanBank {
         grid: &BankGrid,
         threads: usize,
     ) -> PlanBank {
+        // identity scales reproduce the analytic prediction bit-exactly,
+        // so uncalibrated banks are unchanged by the calibration path
+        PlanBank::generate_calibrated(model, candidates, grid, threads, &CalibScales::identity())
+    }
+
+    /// [`PlanBank::generate`] with every cell priced by
+    /// `predict_calibrated_s` — `bankgen --calib` reprices a bank from a
+    /// measured `sim::calib::CalibRecord`.
+    pub fn generate_calibrated(
+        model: &str,
+        candidates: &[PlanSpec],
+        grid: &BankGrid,
+        threads: usize,
+        scales: &CalibScales,
+    ) -> PlanBank {
         assert!(!candidates.is_empty(), "bank needs at least one candidate plan");
         assert!(!grid.states.is_empty() && !grid.slo_tiers_ms.is_empty());
         // tier-major, ascending-mbps cell order (the switcher's bin order)
@@ -286,7 +315,7 @@ impl PlanBank {
         let picks: Vec<(usize, f64)> = if workers <= 1 {
             cells
                 .iter()
-                .map(|(t, s)| select_for_state(candidates, s, *t, grid.max_drop_pct))
+                .map(|(t, s)| select_for_state(candidates, s, *t, grid.max_drop_pct, scales))
                 .collect()
         } else {
             let next = AtomicUsize::new(0);
@@ -301,7 +330,7 @@ impl PlanBank {
                         }
                         let (t, s) = cells[i];
                         *slots[i].lock().unwrap() =
-                            select_for_state(candidates, s, t, grid.max_drop_pct);
+                            select_for_state(candidates, s, t, grid.max_drop_pct, scales);
                     });
                 }
             });
@@ -521,6 +550,46 @@ mod tests {
             let par = PlanBank::generate("demo", &frontier(), &grid, threads);
             assert_eq!(seq, par, "threads={threads}");
             assert_eq!(seq.to_json(), par.to_json(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn identity_scales_generate_bit_identical_banks() {
+        let grid = demo_grid();
+        let plain = PlanBank::generate("demo", &frontier(), &grid, 1);
+        let cal =
+            PlanBank::generate_calibrated("demo", &frontier(), &grid, 1, &CalibScales::identity());
+        assert_eq!(plain, cal);
+        assert_eq!(plain.to_json(), cal.to_json());
+    }
+
+    #[test]
+    fn calibrated_scales_reprice_and_reselect() {
+        let grid = demo_grid();
+        let plain = PlanBank::generate("demo", &frontier(), &grid, 1);
+        // measured uplink 10× faster than the prior: byte counts stop
+        // mattering, so the cheap-edge shallow split wins even on BLE
+        let fast_up = CalibScales { edge: 1.0, uplink: 0.05, cloud: 1.0, extra_s: 0.0 };
+        let cal = PlanBank::generate_calibrated("demo", &frontier(), &grid, 1, &fast_up);
+        let id_at_ble = |b: &PlanBank| {
+            b.tier_entries(0.0)
+                .iter()
+                .find(|e| e.state.name == "ble")
+                .map(|e| b.plans[e.plan].id.clone())
+                .unwrap()
+        };
+        assert_eq!(id_at_ble(&plain), "b1");
+        assert_eq!(id_at_ble(&cal), "b8", "repriced uplink changes the BLE winner");
+        // additive overhead shifts every no-SLO prediction by the same
+        // amount without changing the argmin winner (SLO tiers *can*
+        // reselect — a budget that was met may no longer be)
+        let extra = CalibScales { edge: 1.0, uplink: 1.0, cloud: 1.0, extra_s: 0.5 };
+        let shifted = PlanBank::generate_calibrated("demo", &frontier(), &grid, 1, &extra);
+        for (a, b) in plain.entries.iter().zip(&shifted.entries) {
+            if a.slo_ms == 0.0 {
+                assert_eq!(a.state.name, b.state.name);
+                assert!((b.predicted_s - a.predicted_s - 0.5).abs() < 1e-12);
+            }
         }
     }
 

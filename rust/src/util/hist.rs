@@ -1,0 +1,305 @@
+//! The one log2 histogram implementation shared by every layer.
+//!
+//! Two faces over the same bucket layout:
+//!
+//! * [`Histogram`] — lock-free atomic write side. Request-path threads
+//!   (and, since the op profiler, the REFHLO interpreter itself) record
+//!   nanosecond durations with a handful of relaxed-cost atomic RMWs.
+//! * [`HistSnapshot`] — plain one-pass copy: quantiles, moments,
+//!   lossless merging, and non-atomic recording for single-threaded
+//!   read-side consumers (`coordinator::metrics::LatencyHistogram` is a
+//!   thin view over one of these — there is no second bucket scheme).
+//!
+//! Layout: exact buckets for 0..15 ns, then 16 linear sub-buckets per
+//! power of two for exponents 4..=63 (≤ 1/16 ≈ 6% relative quantile
+//! error), covering the full u64 nanosecond range.
+
+/// `16 + 60×16`: exact buckets for 0..15 ns, then 16 linear sub-buckets
+/// per power of two for exponents 4..=63.
+pub const HIST_BUCKETS: usize = 16 + 60 * 16;
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::time::Duration;
+
+pub(crate) fn bucket_index(ns: u64) -> usize {
+    if ns < 16 {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros() as usize; // ≥ 4
+    let sub = ((ns >> (e - 4)) & 0xF) as usize;
+    16 + (e - 4) * 16 + sub
+}
+
+/// Midpoint of the bucket's value range, in nanoseconds.
+pub(crate) fn bucket_mid_ns(idx: usize) -> f64 {
+    if idx < 16 {
+        return idx as f64;
+    }
+    let b = idx - 16;
+    let e = b / 16 + 4;
+    let sub = (b % 16) as u64;
+    let width = 1u64 << (e - 4);
+    ((16 + sub) * width) as f64 + width as f64 / 2.0
+}
+
+/// Clamp a seconds value onto the recordable nanosecond range: NaN is
+/// rejected (`None`), negatives clamp to zero, +inf to the top.
+fn secs_to_ns(s: f64) -> Option<u64> {
+    if s.is_nan() {
+        return None;
+    }
+    Some((s.max(0.0) * 1e9).min(u64::MAX as f64) as u64)
+}
+
+/// Lock-free duration histogram over nanoseconds (see module docs).
+/// Mergeable and snapshot-consistent: quantiles are computed against
+/// the bucket sum observed in one pass, never against a
+/// separately-read count.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record a duration given in seconds. NaN is ignored (an undefined
+    /// duration must not shift quantiles toward zero), negatives clamp
+    /// to zero, and +inf clamps to the top bucket.
+    pub fn record_secs(&self, s: f64) {
+        if let Some(ns) = secs_to_ns(s) {
+            self.record_ns(ns);
+        }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, SeqCst);
+        self.sum_ns.fetch_add(ns, SeqCst);
+        self.max_ns.fetch_max(ns, SeqCst);
+        self.count.fetch_add(1, SeqCst);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(SeqCst)
+    }
+
+    /// One-pass consistent snapshot of the bucket state.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(SeqCst)).collect(),
+            sum_ns: self.sum_ns.load(SeqCst),
+            max_ns: self.max_ns.load(SeqCst),
+        }
+    }
+}
+
+/// Plain (non-atomic) copy of a [`Histogram`]'s state: quantiles,
+/// moments, lossless merging, and direct single-threaded recording.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: vec![0; HIST_BUCKETS], sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / n as f64 / 1e9
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_ns as f64 / 1e9
+    }
+
+    /// Approximate quantile in seconds; `None` when empty (so empty
+    /// histograms serialize as `null`, not a fake `0`).
+    pub fn quantile_opt(&self, q: f64) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(bucket_mid_ns(i) / 1e9);
+            }
+        }
+        Some(self.max())
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_opt(q).unwrap_or(0.0)
+    }
+
+    /// Non-atomic write side: `n` samples of `ns` nanoseconds at once
+    /// (the read-side `LatencyHistogram` records through this).
+    pub fn record_ns_n(&mut self, ns: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_index(ns)] += n;
+        self.sum_ns = self.sum_ns.saturating_add(ns.saturating_mul(n));
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// [`HistSnapshot::record_ns_n`] over seconds, with the same
+    /// NaN/negative/+inf policy as [`Histogram::record_secs`].
+    pub fn record_secs_n(&mut self, s: f64, n: u64) {
+        if let Some(ns) = secs_to_ns(s) {
+            self.record_ns_n(ns, n);
+        }
+    }
+
+    /// Bucket-wise merge (associative and commutative: the layouts are
+    /// identical by construction).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_sub_resolution_and_zero() {
+        let h = Histogram::default();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_nanos(3));
+        h.record(Duration::from_nanos(15));
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        // sub-16ns values land in their exact buckets
+        assert!(s.quantile(0.01) <= 16e-9, "{}", s.quantile(0.01));
+        assert!((s.mean() - 6e-9).abs() < 1e-12);
+        assert_eq!(s.max(), 15e-9);
+    }
+
+    #[test]
+    fn histogram_negative_nan_inf() {
+        let h = Histogram::default();
+        h.record_secs(f64::NAN); // ignored
+        h.record_secs(-5.0); // clamps to 0
+        h.record_secs(f64::INFINITY); // clamps to the top bucket
+        let s = h.snapshot();
+        assert_eq!(s.count(), 2, "NaN must not be counted");
+        assert!(s.quantile(0.99) > 1e9, "inf must land in the top bucket");
+        assert_eq!(s.quantile_opt(0.01).unwrap(), 0.0, "negative clamps to zero");
+    }
+
+    #[test]
+    fn histogram_quantile_accuracy() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        let p99 = s.quantile(0.99);
+        // ≤ 1/16 relative bucket error
+        assert!((p50 - 500e-6).abs() / 500e-6 < 0.07, "{p50}");
+        assert!((p99 - 990e-6).abs() / 990e-6 < 0.07, "{p99}");
+        assert!(p50 <= p99);
+        assert_eq!(s.count(), 1000);
+    }
+
+    #[test]
+    fn empty_quantile_is_none() {
+        let s = Histogram::default().snapshot();
+        assert!(s.quantile_opt(0.5).is_none());
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn merge_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::default();
+            for &v in vals {
+                h.record_ns(v);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(&[10, 2000]), mk(&[50_000]), mk(&[7, 1_000_000, 12]));
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c)
+        let mut ab = a.clone();
+        ab.merge(&b);
+        ab.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab.count(), a_bc.count());
+        assert_eq!(ab.sum_ns, a_bc.sum_ns);
+        assert_eq!(ab.max_ns, a_bc.max_ns);
+        assert_eq!(ab.buckets, a_bc.buckets);
+        for q in [0.1, 0.5, 0.9, 0.999] {
+            assert_eq!(ab.quantile(q), a_bc.quantile(q));
+        }
+    }
+
+    #[test]
+    fn snapshot_record_matches_atomic_record() {
+        let atomic = Histogram::default();
+        let mut plain = HistSnapshot::default();
+        for v in [0u64, 7, 999, 50_000, 1_000_000_000] {
+            atomic.record_ns(v);
+            plain.record_ns_n(v, 1);
+        }
+        let snap = atomic.snapshot();
+        assert_eq!(snap.count(), plain.count());
+        assert_eq!(snap.sum_ns, plain.sum_ns);
+        assert_eq!(snap.max_ns, plain.max_ns);
+        assert_eq!(snap.buckets, plain.buckets);
+    }
+
+    #[test]
+    fn bulk_record_matches_repeated() {
+        let mut a = HistSnapshot::default();
+        let mut b = HistSnapshot::default();
+        for _ in 0..5 {
+            a.record_secs_n(3e-3, 1);
+        }
+        b.record_secs_n(3e-3, 5);
+        assert_eq!(a.buckets, b.buckets);
+        assert_eq!(a.sum_ns, b.sum_ns);
+        assert_eq!(a.count(), b.count());
+    }
+}

@@ -11,12 +11,28 @@ use super::json::Json;
 use std::collections::BTreeMap;
 use std::time::{SystemTime, UNIX_EPOCH};
 
-/// The shared `meta` block: `{"git_sha", "timestamp_utc", "config"}`.
-pub fn bench_meta(config: &str) -> Json {
+/// The shared `meta` block:
+/// `{"bench", "git_sha", "timestamp_utc", "config", "host"}` — the bench
+/// name identifies which harness produced the file (the CI artifact set
+/// carries several), and the host block (logical cpu count + os) makes
+/// latency numbers comparable across machines.
+pub fn bench_meta(name: &str, config: &str) -> Json {
     Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str(name.to_string())),
         ("git_sha".to_string(), Json::Str(git_sha())),
         ("timestamp_utc".to_string(), Json::Str(utc_now())),
         ("config".to_string(), Json::Str(config.to_string())),
+        ("host".to_string(), host_meta()),
+    ]))
+}
+
+/// The `host` sub-block: logical CPU count + OS, from std only.
+fn host_meta() -> Json {
+    let cpus =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    Json::Obj(BTreeMap::from([
+        ("cpus".to_string(), Json::Num(cpus as f64)),
+        ("os".to_string(), Json::Str(std::env::consts::OS.to_string())),
     ]))
 }
 
@@ -78,7 +94,8 @@ mod tests {
 
     #[test]
     fn meta_block_has_all_keys() {
-        let m = bench_meta("shards=2 policy=shed-newest");
+        let m = bench_meta("serving_obsv", "shards=2 policy=shed-newest");
+        assert_eq!(m.get("bench").and_then(|v| v.as_str()), Some("serving_obsv"));
         assert_eq!(
             m.get("config").and_then(|v| v.as_str()),
             Some("shards=2 policy=shed-newest")
@@ -88,5 +105,17 @@ mod tests {
         let ts = m.get("timestamp_utc").and_then(|v| v.as_str()).unwrap();
         assert_eq!(ts.len(), 20, "{ts}");
         assert!(ts.ends_with('Z') && ts.contains('T'), "{ts}");
+    }
+
+    #[test]
+    fn meta_host_block_reports_this_machine() {
+        let m = bench_meta("x", "y");
+        let host = m.get("host").expect("host block");
+        let cpus = host.get("cpus").and_then(|v| v.as_f64()).unwrap();
+        assert!(cpus >= 1.0, "{cpus}");
+        assert_eq!(
+            host.get("os").and_then(|v| v.as_str()),
+            Some(std::env::consts::OS)
+        );
     }
 }

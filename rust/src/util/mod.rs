@@ -1,7 +1,9 @@
 //! Small in-tree utilities (the build is offline: no serde/clap/etc.).
 
+pub mod hist;
 pub mod json;
 pub mod meta;
 
+pub use hist::{HistSnapshot, Histogram};
 pub use json::Json;
 pub use meta::bench_meta;

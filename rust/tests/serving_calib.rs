@@ -1,0 +1,303 @@
+//! Op-level runtime profiler + measured-latency calibration, end to
+//! end over the serving pipeline:
+//!
+//! * profiler on/off is **bit-identical** — same classes, same logits
+//!   bytes, same billed wire bytes — on both data planes (`--pool
+//!   on|off`) and both socket engines (`reactor`, `threads`);
+//! * a profiled + sampled request span carries op events attributed to
+//!   the `edge` and `cloud` stages, and the Chrome trace export nests
+//!   them as `"op"`-category events; profiler off does zero work
+//!   (empty table, no span ops);
+//! * calibration over live spans is deterministic (order-independent,
+//!   byte-identical JSON) and a live span set with a stage zeroed out
+//!   falls back to that stage's prior;
+//! * the bank writer applies calibration scales (additive overhead
+//!   shifts every no-SLO prediction by exactly that constant);
+//! * the drift detector does not flap under steady, accurately-modeled
+//!   load, and the span-loss counter is exported through
+//!   `ServingStats`.
+
+use auto_split::coordinator::obsv::{STAGE_CLOUD, STAGE_EDGE};
+use auto_split::coordinator::{
+    chrome_trace, poisson_schedule, replay, write_adaptive_bank, write_adaptive_bank_with,
+    AdaptiveBankSpec, AdaptiveConfig, Client, IoModel, NetConfig, RefArtifactSpec, ServeConfig,
+    Server, SpanKind, TcpClient, TcpFrontend, TraceConfig,
+};
+use auto_split::sim::{aggregate, CalibRecord, CalibScales, StagePriors, Uplink};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn inputs(tag: &str) -> (PathBuf, Vec<Vec<f32>>) {
+    let spec = RefArtifactSpec::default();
+    let dir =
+        std::env::temp_dir().join(format!("autosplit-calib-{tag}-{}", std::process::id()));
+    auto_split::coordinator::write_reference_artifacts(&dir, &spec)
+        .expect("write synthetic artifacts");
+    let images = (0..12).map(|i| spec.image(4000 + i as u64)).collect();
+    (dir, images)
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Per-request stable signature: class, logits as exact LE bytes,
+/// billed wire bytes. Timings are excluded — they are wall clock, not
+/// results.
+fn signature<C: Client>(client: &C, images: &[Vec<f32>]) -> Vec<(usize, Vec<u8>, usize)> {
+    images
+        .iter()
+        .map(|im| {
+            let r = client
+                .submit(im.clone())
+                .expect("submit")
+                .recv()
+                .expect("terminal outcome")
+                .expect("pipeline ok")
+                .done()
+                .expect("Block admission never sheds a sequential run");
+            let bytes: Vec<u8> = r.logits.iter().flat_map(|v| v.to_le_bytes()).collect();
+            (r.class, bytes, r.tx_bytes)
+        })
+        .collect()
+}
+
+#[test]
+fn profiler_is_bit_identical_on_both_data_planes() {
+    let (dir, images) = inputs("bits");
+    for pool in [true, false] {
+        let mut sigs = Vec::new();
+        for profile in [false, true] {
+            let mut cfg = ServeConfig::new(&dir);
+            cfg.pool = pool;
+            cfg.profile = profile;
+            let server = Server::start(cfg).expect("server");
+            let _ = server.infer(images[0].clone()); // warm-up
+            sigs.push(signature(&server, &images));
+            server.shutdown();
+        }
+        assert_eq!(
+            sigs[0], sigs[1],
+            "pool={pool}: profiled execution must be bit-identical to unprofiled"
+        );
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn profiler_is_wire_identical_on_both_io_models() {
+    let (dir, images) = inputs("wire");
+    for io_model in [IoModel::Reactor, IoModel::Threads] {
+        let mut sigs = Vec::new();
+        for profile in [false, true] {
+            let mut cfg = ServeConfig::new(&dir);
+            cfg.profile = profile;
+            let server = Arc::new(Server::start(cfg).expect("server"));
+            let net = NetConfig { io_model, ..NetConfig::default() };
+            let frontend =
+                TcpFrontend::bind("127.0.0.1:0", server.clone(), net).expect("bind");
+            let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+            let _ = client.submit(images[0].clone()).expect("warm-up").recv();
+            sigs.push(signature(&client, &images));
+            drop(client);
+            frontend.shutdown();
+        }
+        assert_eq!(
+            sigs[0], sigs[1],
+            "{io_model}: profiled wire bytes must equal unprofiled wire bytes"
+        );
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn profiled_sampled_spans_carry_staged_op_events() {
+    let (dir, images) = inputs("ops");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.profile = true;
+    cfg.trace = TraceConfig { sample: 1, ..TraceConfig::default() };
+    let server = Server::start(cfg).expect("server");
+    let _ = server.infer(images[0].clone()); // warm-up
+    let _ = server.take_spans();
+    let schedule = poisson_schedule(300.0, 40, images.len(), 7);
+    let report = replay(&server, &images, &schedule).expect("replay");
+    assert_eq!(report.errors, 0);
+
+    let spans = server.take_spans();
+    let done: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Done).collect();
+    assert_eq!(done.len() as u64, report.completed);
+    for s in &done {
+        assert!(!s.ops.is_empty(), "sampled+profiled span must carry op events");
+        assert!(
+            s.ops.iter().all(|o| o.stage == STAGE_EDGE || o.stage == STAGE_CLOUD),
+            "runtime ops execute in the edge and cloud stages only"
+        );
+        assert!(s.ops.iter().any(|o| o.stage == STAGE_EDGE), "edge partition ran ops");
+        assert!(s.ops.iter().any(|o| o.stage == STAGE_CLOUD), "cloud partition ran ops");
+    }
+
+    // the Chrome export nests the op events as an "op" category
+    let doc = chrome_trace(&spans);
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+    let op_events =
+        events.iter().filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("op")).count();
+    let span_ops: usize = spans.iter().map(|s| s.ops.len()).sum();
+    assert_eq!(op_events, span_ops, "every staged op becomes one trace event");
+
+    // the shared per-op table saw the same signatures
+    let table = server.op_profile();
+    assert!(!table.is_empty());
+    assert!(table.iter().any(|r| r.sig.starts_with("quant_pack[")), "{table:?}");
+    assert!(table.iter().any(|r| r.sig.starts_with("gemm[")), "{table:?}");
+    assert!(table.iter().all(|r| r.count > 0 && r.elems_per_call > 0));
+    assert!(server.op_profile_json().is_some());
+    server.shutdown();
+    cleanup(&dir);
+}
+
+#[test]
+fn profiler_off_does_no_work() {
+    let (dir, images) = inputs("off");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.trace = TraceConfig { sample: 1, ..TraceConfig::default() };
+    // profile stays default-off
+    let server = Server::start(cfg).expect("server");
+    for im in &images {
+        let _ = server.infer(im.clone()).expect("infer");
+    }
+    assert!(server.op_profile().is_empty(), "no profiler ⇒ empty table");
+    assert!(server.op_profile_json().is_none());
+    let spans = server.take_spans();
+    assert!(!spans.is_empty());
+    assert!(
+        spans.iter().all(|s| s.ops.is_empty()),
+        "unprofiled spans must not allocate op buffers"
+    );
+    server.shutdown();
+    cleanup(&dir);
+}
+
+#[test]
+fn calibration_over_live_spans_is_deterministic() {
+    let (dir, images) = inputs("det");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.profile = true;
+    cfg.trace = TraceConfig { sample: 1, ..TraceConfig::default() };
+    let server = Server::start(cfg).expect("server");
+    let _ = server.infer(images[0].clone()); // warm-up
+    let _ = server.take_spans();
+    for im in &images {
+        let _ = server.infer(im.clone()).expect("infer");
+    }
+    let spans = server.take_spans();
+    let ops = server.op_profile();
+    server.shutdown();
+
+    let priors = StagePriors { edge_s: 1e-3, pack_s: 0.0, uplink_s: 5e-3, cloud_s: 1e-3 };
+    let a = aggregate(&spans, &priors, &ops);
+    let mut shuffled = spans.clone();
+    shuffled.reverse();
+    let b = aggregate(&shuffled, &priors, &ops);
+    assert_eq!(a, b, "span order must not change the record");
+    let text = a.to_json().to_string_pretty();
+    assert_eq!(text, b.to_json().to_string_pretty(), "byte-identical calib.json");
+
+    // the record round-trips through the CLI file format
+    let back = CalibRecord::parse_str(&text).expect("parse calib.json");
+    assert_eq!(back, a);
+    assert_eq!(back.to_json().to_string_pretty(), text);
+    assert_eq!(a.e2e_count, images.len() as u64);
+    assert!(!a.ops.is_empty(), "profiled run embeds the per-op table");
+
+    // zeroing one stage across the live span set falls back to the
+    // prior: scale 1.0, measured null
+    let mut zeroed = spans.clone();
+    for s in &mut zeroed {
+        s.stage_ns[auto_split::coordinator::obsv::STAGE_UPLINK] = 0;
+    }
+    let z = aggregate(&zeroed, &priors, &ops);
+    let s = z.scales();
+    assert_eq!(s.uplink, 1.0, "unmeasured stage keeps the analytic prior");
+    assert!(z.to_json().to_string_pretty().contains("null"));
+    cleanup(&dir);
+}
+
+#[test]
+fn calibrated_bank_writer_applies_additive_overhead() {
+    let base = std::env::temp_dir().join(format!("autosplit-calib-bank-{}", std::process::id()));
+    let spec = AdaptiveBankSpec::default();
+    let identity = write_adaptive_bank(&base.join("id"), &spec).unwrap();
+    let extra = CalibScales { edge: 1.0, uplink: 1.0, cloud: 1.0, extra_s: 0.05 };
+    let shifted = write_adaptive_bank_with(&base.join("cal"), &spec, &extra).unwrap();
+    assert_eq!(identity.plans, shifted.plans, "plans are state-independent");
+    let mut checked = 0;
+    for (a, b) in identity.entries.iter().zip(&shifted.entries) {
+        assert_eq!(a.state.name, b.state.name);
+        if a.slo_ms == 0.0 {
+            // +constant preserves the argmin, so the same plan wins and
+            // its prediction moves by exactly the overhead
+            assert_eq!(a.plan, b.plan, "cell {}", a.state.name);
+            assert!(
+                (b.predicted_s - a.predicted_s - 0.05).abs() < 1e-12,
+                "cell {}: {} vs {}",
+                a.state.name,
+                a.predicted_s,
+                b.predicted_s
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "the no-SLO tier must be present");
+    cleanup(&base);
+}
+
+#[test]
+fn drift_detector_does_not_flap_under_steady_load() {
+    let dir =
+        std::env::temp_dir().join(format!("autosplit-calib-drift-{}", std::process::id()));
+    let bank = write_adaptive_bank(&dir, &AdaptiveBankSpec::default()).unwrap();
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.uplink = Uplink::wifi();
+    cfg.adaptive = Some(AdaptiveConfig::new(bank, &dir));
+    let server = Server::start(cfg).expect("server");
+    let spec = AdaptiveBankSpec::default();
+    for i in 0..40u64 {
+        let _ = server.infer(spec.image(300 + i)).expect("infer");
+    }
+    let stats = server.shutdown();
+    assert!(stats.drift_ratio.is_finite() && stats.drift_ratio > 0.0, "{}", stats.drift_ratio);
+    assert!(
+        !stats.drift_stale,
+        "steady accurately-modeled load must not flag a stale bank (ratio {:.3})",
+        stats.drift_ratio
+    );
+    // the flag and ratio flow through the JSON export
+    let j = stats.to_json();
+    assert!(j.get("drift_stale").is_some() && j.get("drift_ratio").is_some());
+    cleanup(&dir);
+}
+
+#[test]
+fn span_loss_counter_is_exported() {
+    let (dir, images) = inputs("loss");
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.trace = TraceConfig { sample: 1, capacity: 2 };
+    let server = Server::start(cfg).expect("server");
+    for _ in 0..3 {
+        for im in &images {
+            let _ = server.infer(im.clone()).expect("infer");
+        }
+    }
+    let dropped = server.spans_dropped();
+    assert!(dropped > 0, "a 2-slot ring must overflow under 36 requests");
+    let stats = server.stats();
+    assert_eq!(stats.trace_spans_dropped, dropped);
+    let report = stats.report();
+    assert!(report.contains("spans_dropped="), "{report}");
+    assert_eq!(
+        stats.to_json().get("trace_spans_dropped").and_then(|v| v.as_f64()),
+        Some(dropped as f64)
+    );
+    server.shutdown();
+    cleanup(&dir);
+}
