@@ -1,0 +1,267 @@
+//! Kernel-layer bench: the speedup and exactness claims ISSUE 9 gates
+//! in CI, written to `BENCH_kernels.json`.
+//!
+//! 1. **Op-level speedup** — one profiled scalar runtime and one
+//!    profiled auto runtime execute the identical packed batch through
+//!    the cloud-shard engine (and the identical image through the edge
+//!    engine); per-op mean latencies from the opprof histograms give the
+//!    scalar/auto speedup per signature, tagged with the kernel variant
+//!    that ran. Gate: ≥ 4× on the cloud-shard GEMM.
+//! 2. **End-to-end p50** — the same serving pipeline (big REFHLO
+//!    artifacts, fast modeled uplink so compute dominates) run
+//!    closed-loop under `--kernels scalar` and `--kernels auto`,
+//!    interleaved best-of-3. Gate: auto p50 strictly better.
+//! 3. **Exactness** — max logit deviation ≤ 1e-4 between scalar and
+//!    auto on identical payloads (only summation order differs), edge
+//!    codes within 1 quantization step, and the scalar path bit-exact
+//!    against the seed formulas written out longhand here.
+//!
+//! Runs entirely on synthetic artifacts; no `make artifacts` needed.
+
+use auto_split::coordinator::{write_reference_artifacts, RefArtifactSpec, ServeConfig, Server};
+use auto_split::profile::SplitMix64;
+use auto_split::runtime::{
+    literal_f32, literal_u8, KernelKind, OpProfileRow, OpProfiler, Runtime,
+};
+use auto_split::sim::Uplink;
+use auto_split::util::{bench_meta, Json};
+use std::path::Path;
+use std::sync::Arc;
+
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Big enough that the GEMM dominates and the weight matrix streams
+/// from beyond L2: 128×128 images, 4-bit packing, 64-class head
+/// (64 × 16384 f32 weights = 4 MB), cloud batch 8.
+fn big_spec() -> RefArtifactSpec {
+    RefArtifactSpec {
+        img: 128,
+        bits: 4,
+        c2: 2,
+        hw: 4096,
+        classes: 64,
+        scale: 0.05,
+        cloud_batches: vec![1, 8],
+        seed: 42,
+    }
+}
+
+const BATCH: usize = 8;
+const CLOUD_ITERS: usize = 30;
+const EDGE_ITERS: usize = 50;
+
+/// Mean seconds of the op row whose signature starts with `prefix`.
+fn mean_of(rows: &[OpProfileRow], prefix: &str) -> f64 {
+    rows.iter()
+        .find(|r| r.sig.starts_with(prefix))
+        .map(|r| r.mean_s)
+        .unwrap_or_else(|| panic!("no op row with prefix {prefix}"))
+}
+
+/// The seed interpreter's pack + dequant + left-to-right GEMM, written
+/// out longhand (not via the engine) — the scalar-kernel oracle must
+/// reproduce these bytes and bits exactly.
+fn seed_pack(spec: &RefArtifactSpec, img: &[f32]) -> Vec<u8> {
+    let per = (8 / spec.bits) as usize;
+    let qmax = ((1u16 << spec.bits) - 1) as f32;
+    img.chunks_exact(per)
+        .map(|group| {
+            let mut byte = 0u8;
+            for (slot, &v) in group.iter().enumerate() {
+                let code = (v / spec.scale).round().clamp(0.0, qmax) as u8;
+                byte |= code << (slot as u8 * spec.bits);
+            }
+            byte
+        })
+        .collect()
+}
+
+fn seed_logits(spec: &RefArtifactSpec, packed: &[u8]) -> Vec<f32> {
+    let per = (8 / spec.bits) as usize;
+    let mask = ((1u16 << spec.bits) - 1) as u8;
+    let mut x = Vec::with_capacity(packed.len() * per);
+    for &b in packed {
+        for slot in 0..per {
+            x.push(((b >> (slot as u8 * spec.bits)) & mask) as f32 * spec.scale);
+        }
+    }
+    let feat = x.len();
+    let mut rng = SplitMix64::new(spec.seed);
+    let weights: Vec<f32> =
+        (0..spec.classes * feat).map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.1).collect();
+    weights
+        .chunks_exact(feat)
+        .map(|row| {
+            let mut acc = 0.0f32;
+            for (w, v) in row.iter().zip(&x) {
+                acc += w * v;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Closed-loop sequential p50 (seconds) over the serving pipeline with
+/// the given kernel policy. Fast modeled uplink so compute dominates.
+fn e2e_p50(dir: &Path, spec: &RefArtifactSpec, kind: KernelKind) -> f64 {
+    let mut cfg = ServeConfig::new(dir).with_kernels(kind);
+    cfg.uplink = Uplink::mbps(1000.0);
+    let server = Server::start(cfg).expect("server");
+    let images: Vec<Vec<f32>> = (0..16).map(|i| spec.image(9000 + i)).collect();
+    let _ = server.infer(images[0].clone()).expect("warm-up");
+    let mut e2e: Vec<f64> = Vec::new();
+    for i in 0..64 {
+        let r = server.infer(images[i % images.len()].clone()).expect("infer");
+        e2e.push(r.e2e.as_secs_f64());
+    }
+    server.shutdown();
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    e2e[e2e.len() / 2]
+}
+
+fn main() {
+    let arg = |k: &str| std::env::args().skip_while(|a| a != k).nth(1);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_kernels.json".into());
+
+    let spec = big_spec();
+    let dir = std::env::temp_dir().join(format!("autosplit-kern-bench-{}", std::process::id()));
+    write_reference_artifacts(&dir, &spec).expect("write synthetic artifacts");
+
+    // ---- phase 1: op-level scalar-vs-auto speedup ------------------
+    let prof_scalar = Arc::new(OpProfiler::new());
+    let prof_auto = Arc::new(OpProfiler::new());
+    let rt_scalar = Runtime::with_profiler(Arc::clone(&prof_scalar))
+        .unwrap()
+        .with_kernels(KernelKind::Scalar);
+    let rt_auto =
+        Runtime::with_profiler(Arc::clone(&prof_auto)).unwrap().with_kernels(KernelKind::Auto);
+
+    let edge_s = rt_scalar.load_hlo_text(&dir.join("lpr_edge_b1.hlo.txt")).unwrap();
+    let edge_a = rt_auto.load_hlo_text(&dir.join("lpr_edge_b1.hlo.txt")).unwrap();
+    let cloud_s = rt_scalar.load_hlo_text(&dir.join("lpr_cloud_b8.hlo.txt")).unwrap();
+    let cloud_a = rt_auto.load_hlo_text(&dir.join("lpr_cloud_b8.hlo.txt")).unwrap();
+    let auto_variant = cloud_a.kernel();
+    println!(
+        "kernels: scalar oracle vs auto → {auto_variant}  (features: {})",
+        auto_split::runtime::kernels::cpu_features(),
+    );
+
+    // identical inputs for both: one image, one scalar-packed batch
+    let image = spec.image(7);
+    let idims = [1i64, 1, spec.img as i64, spec.img as i64];
+    let ilit = literal_f32(&image, &idims).unwrap();
+    let packed = seed_pack(&spec, &image);
+    let mut batch = Vec::with_capacity(BATCH * packed.len());
+    for _ in 0..BATCH {
+        batch.extend_from_slice(&packed);
+    }
+    let bdims = [BATCH as i64, spec.c2 as i64, spec.hw as i64];
+    let blit = literal_u8(&batch, &bdims).unwrap();
+
+    // edge: scalar path must be the seed formula, auto within 1 code
+    let packed_s = edge_s.run_u8(&[ilit.clone()]).unwrap();
+    let packed_a = edge_a.run_u8(&[ilit.clone()]).unwrap();
+    let scalar_pack_identical = packed_s == packed;
+    let mut max_code_dev = 0i16;
+    for (&a, &b) in packed_s.iter().zip(&packed_a) {
+        for shift in [0u8, 4] {
+            let (ca, cb) = (((a >> shift) & 0x0F) as i16, ((b >> shift) & 0x0F) as i16);
+            max_code_dev = max_code_dev.max((ca - cb).abs());
+        }
+    }
+
+    // cloud: scalar path must be the seed gemm, auto within 1e-4
+    let logits_s = cloud_s.run_f32(&[blit.clone()]).unwrap();
+    let logits_a = cloud_a.run_f32(&[blit.clone()]).unwrap();
+    let want = seed_logits(&spec, &packed);
+    let scalar_gemm_identical =
+        logits_s.chunks_exact(spec.classes).all(|sample| sample == want.as_slice());
+    let scalar_identical = scalar_pack_identical && scalar_gemm_identical;
+    let mut max_logit_dev = 0.0f64;
+    for (a, b) in logits_s.iter().zip(&logits_a) {
+        max_logit_dev = max_logit_dev.max(((a - b).abs() / (1.0 + a.abs())) as f64);
+    }
+
+    // timed iterations (first runs above already warmed the engines)
+    for _ in 0..CLOUD_ITERS {
+        let _ = cloud_s.run_f32(&[blit.clone()]).unwrap();
+        let _ = cloud_a.run_f32(&[blit.clone()]).unwrap();
+    }
+    for _ in 0..EDGE_ITERS {
+        let _ = edge_s.run_u8(&[ilit.clone()]).unwrap();
+        let _ = edge_a.run_u8(&[ilit.clone()]).unwrap();
+    }
+    let rows_s = prof_scalar.table();
+    let rows_a = prof_auto.table();
+    let gemm_speedup = mean_of(&rows_s, "gemm[8x") / mean_of(&rows_a, "gemm[8x");
+    let unpack_speedup =
+        mean_of(&rows_s, "unpack_dequant[8x") / mean_of(&rows_a, "unpack_dequant[8x");
+    let pack_speedup = mean_of(&rows_s, "quant_pack[") / mean_of(&rows_a, "quant_pack[");
+    println!(
+        "op speedups (scalar/auto mean): gemm ×{gemm_speedup:.2}  \
+         unpack ×{unpack_speedup:.2}  quant_pack ×{pack_speedup:.2}"
+    );
+    println!(
+        "exactness: scalar identical to seed = {scalar_identical}  \
+         max logit dev = {max_logit_dev:.2e}  max code dev = {max_code_dev}"
+    );
+
+    // ---- phase 2: end-to-end serving p50, interleaved best-of-3 ----
+    let mut p50_scalar = f64::INFINITY;
+    let mut p50_auto = f64::INFINITY;
+    for _ in 0..3 {
+        p50_scalar = p50_scalar.min(e2e_p50(&dir, &spec, KernelKind::Scalar));
+        p50_auto = p50_auto.min(e2e_p50(&dir, &spec, KernelKind::Auto));
+    }
+    let p50_improved = p50_auto < p50_scalar;
+    println!(
+        "e2e p50: scalar {:.3} ms  auto {:.3} ms  ({})",
+        p50_scalar * 1e3,
+        p50_auto * 1e3,
+        if p50_improved { "auto faster" } else { "NOT FASTER" },
+    );
+
+    let ops_json =
+        |rows: &[OpProfileRow]| Json::Arr(rows.iter().map(OpProfileRow::to_json).collect());
+    let json = jobj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("auto_variant", Json::Str(auto_variant.to_string())),
+        ("gemm_speedup", Json::Num(gemm_speedup)),
+        ("unpack_speedup", Json::Num(unpack_speedup)),
+        ("pack_speedup", Json::Num(pack_speedup)),
+        ("p50_scalar_ms", Json::Num(p50_scalar * 1e3)),
+        ("p50_auto_ms", Json::Num(p50_auto * 1e3)),
+        ("p50_improved", Json::Bool(p50_improved)),
+        ("max_logit_dev", Json::Num(max_logit_dev)),
+        ("max_code_dev", Json::Num(max_code_dev as f64)),
+        ("scalar_identical", Json::Bool(scalar_identical)),
+        ("ops_scalar", ops_json(&rows_s)),
+        ("ops_auto", ops_json(&rows_a)),
+        (
+            "meta",
+            bench_meta(
+                "kernels",
+                &format!(
+                    "img=128 bits=4 classes=64 batch={BATCH}; {CLOUD_ITERS} cloud + \
+                     {EDGE_ITERS} edge iters; e2e best-of-3 × 64 reqs @ 1000 Mbps"
+                ),
+            ),
+        ),
+    ]);
+    let mut doc = json.to_string_pretty();
+    doc.push('\n');
+    std::fs::write(&json_path, doc).expect("write bench json");
+    println!("wrote {json_path}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert!(scalar_identical, "scalar kernels must be bit-identical to the seed formulas");
+    assert!(max_code_dev <= 1, "fast quantize must stay within 1 code of the oracle");
+    assert!(max_logit_dev <= 1e-4, "auto logits must stay within 1e-4 of the scalar oracle");
+    if auto_variant != "scalar" {
+        assert!(gemm_speedup >= 4.0, "cloud-shard GEMM speedup {gemm_speedup:.2} < 4x");
+        assert!(p50_improved, "auto e2e p50 must beat scalar");
+    }
+}

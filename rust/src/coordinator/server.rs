@@ -69,7 +69,7 @@ use super::scheduler::{
     drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
     Router, SchedulerConfig,
 };
-use crate::runtime::{capture_begin, capture_take, OpProfileRow, OpProfiler, Runtime};
+use crate::runtime::{capture_begin, capture_take, KernelKind, OpProfileRow, OpProfiler, Runtime};
 use crate::sim::Uplink;
 use crate::splitter::NetClass;
 use crate::util::Json;
@@ -123,6 +123,12 @@ pub struct ServeConfig {
     /// runs are bit-identical to unprofiled ones (timing never changes
     /// the math or its order).
     pub profile: bool,
+    /// Interpreter kernel policy (`--kernels scalar|auto`): `scalar`
+    /// forces the seed's bit-exact scalar loops, `auto` (default)
+    /// dispatches the SIMD/blocked fast path detected at startup
+    /// (epsilon-gated against the oracle). Applies to every edge and
+    /// shard runtime this server constructs.
+    pub kernels: KernelKind,
 }
 
 impl ServeConfig {
@@ -138,6 +144,7 @@ impl ServeConfig {
             pool: true,
             trace: TraceConfig::default(),
             profile: false,
+            kernels: KernelKind::default_kind(),
         }
     }
 
@@ -163,6 +170,11 @@ impl ServeConfig {
 
     pub fn with_profile(mut self, profile: bool) -> Self {
         self.profile = profile;
+        self
+    }
+
+    pub fn with_kernels(mut self, kernels: KernelKind) -> Self {
+        self.kernels = kernels;
         self
     }
 }
@@ -1190,7 +1202,8 @@ fn edge_thread(
                 let rt = match &prof {
                     Some(p) => Runtime::with_profiler(Arc::clone(p))?,
                     None => Runtime::cpu()?,
-                };
+                }
+                .with_kernels(cfg.kernels);
                 let mut workers = Vec::with_capacity(plans.len());
                 for plan in plans.iter() {
                     let engine = rt.load_hlo_text(&plan.dir.join("lpr_edge_b1.hlo.txt"))?;
@@ -1531,7 +1544,8 @@ fn shard_thread(
         let rt = match &prof {
             Some(p) => Runtime::with_profiler(Arc::clone(p))?,
             None => Runtime::cpu()?,
-        };
+        }
+        .with_kernels(cfg.kernels);
         match cfg.mode {
             ServeMode::Split => {
                 let mut workers = Vec::with_capacity(plans.len());

@@ -29,7 +29,7 @@ use auto_split::coordinator::{
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
 use auto_split::report::{fmt_bytes, fmt_latency, Table};
-use auto_split::runtime::OpProfileRow;
+use auto_split::runtime::{KernelKind, OpProfileRow};
 use auto_split::sim::{
     aggregate, AcceleratorConfig, CalibRecord, CalibScales, LatencyModel, StagePriors, Uplink,
 };
@@ -134,6 +134,9 @@ fn main() -> Result<()> {
             eprintln!("  (serve + loadtest) [--profile on|off] [--profile-out ops.json]");
             eprintln!("            op-level runtime profiler (off = zero cost; on = bit-identical");
             eprintln!("            results, per-op latency table)");
+            eprintln!("  (serve + loadtest) [--kernels auto|scalar]   interpreter kernels:");
+            eprintln!("            auto = SIMD/blocked fast path (runtime-detected, default),");
+            eprintln!("            scalar = seed bit-exact oracle loops");
             Ok(())
         }
     }
@@ -247,6 +250,19 @@ fn pool_from_args(args: &Args) -> Result<bool> {
         None | Some("on") => Ok(true),
         Some("off") => Ok(false),
         Some(v) => bail!("bad --pool {v} (expected on|off)"),
+    }
+}
+
+/// The `--kernels scalar|auto` flag: interpreter kernel dispatch.
+/// `scalar` forces the seed's bit-exact loops (the oracle the
+/// bit-identity suites run against); `auto` (default) dispatches the
+/// SIMD/blocked fast path detected at startup. The process default can
+/// also be set via `AUTO_SPLIT_KERNELS=scalar|auto`.
+fn kernels_from_args(args: &Args) -> Result<KernelKind> {
+    match args.get("--kernels") {
+        None => Ok(KernelKind::default_kind()),
+        Some(v) => KernelKind::parse(v)
+            .with_context(|| format!("bad --kernels {v} (expected auto|scalar)")),
     }
 }
 
@@ -715,6 +731,7 @@ fn run_adaptive_loadtest(
         cfg.pool = pool_from_args(args)?;
         cfg.trace = tcfg;
         cfg.profile = profile;
+        cfg.kernels = kernels_from_args(args)?;
         let mut a = acfg.clone();
         if let Some(id) = pin {
             a = a.with_pinned(id);
@@ -929,6 +946,7 @@ fn run_tcp_loadtest(
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
+        cfg.kernels = kernels_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend =
             TcpFrontend::bind("127.0.0.1:0", server.clone(), net_config_from_args(args)?)?;
@@ -975,6 +993,7 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
+        cfg.kernels = kernels_from_args(args)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net)?;
         println!(
@@ -1027,6 +1046,7 @@ fn run_loadtest(
         cfg.pool = pool_from_args(args)?;
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
+        cfg.kernels = kernels_from_args(args)?;
         Server::start(cfg)
     };
 
@@ -1085,6 +1105,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.pool = pool_from_args(args)?;
     cfg.trace = trace_from_args(args)?;
     cfg.profile = profile_from_args(args)?;
+    cfg.kernels = kernels_from_args(args)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }

@@ -6,6 +6,13 @@
 //! inner loops) ~100× faster than **height-width packing** (pairing
 //! adjacent spatial positions with strided access) — Table 6. We implement
 //! both layouts; the serving hot path uses channel packing.
+//!
+//! Full channel groups and full spatial planes route through the
+//! contiguous-walk helpers in [`runtime::kernels`](crate::runtime::kernels)
+//! (pure integer ops — bit-identical to the index-arithmetic loops kept
+//! for the padded tails, and the form the compiler auto-vectorizes).
+
+use crate::runtime::kernels;
 
 /// Packing layout along which value-pairs are formed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +57,16 @@ pub fn pack_into(codes: &[u8], bits: u8, plane: usize, layout: PackLayout, out: 
             assert!(plane > 0 && codes.len() % plane == 0);
             let channels = codes.len() / plane;
             let mut c = 0;
+            while c + per_byte <= channels {
+                kernels::pack_channel_group(
+                    &codes[c * plane..(c + per_byte) * plane],
+                    plane,
+                    bits,
+                    out,
+                );
+                c += per_byte;
+            }
+            // tail group with zero-padded channels: seed loop
             while c < channels {
                 for i in 0..plane {
                     let mut byte = 0u8;
@@ -68,9 +85,12 @@ pub fn pack_into(codes: &[u8], bits: u8, plane: usize, layout: PackLayout, out: 
             // Adjacent spatial positions within one channel share a byte.
             assert!(plane > 0 && codes.len() % plane == 0);
             let channels = codes.len() / plane;
+            let full = plane - plane % per_byte;
             for c in 0..channels {
                 let base = c * plane;
-                let mut i = 0;
+                kernels::pack_consecutive(&codes[base..base + full], bits, out);
+                // zero-padded spatial tail: seed loop
+                let mut i = full;
                 while i < plane {
                     let mut byte = 0u8;
                     for slot in 0..per_byte {
@@ -126,6 +146,17 @@ pub fn unpack_into(
             let channels = elems / plane;
             let mut c = 0;
             let mut byte_idx = 0;
+            while c + per_byte <= channels {
+                kernels::unpack_channel_group(
+                    &packed[byte_idx..byte_idx + plane],
+                    plane,
+                    bits,
+                    &mut out[c * plane..(c + per_byte) * plane],
+                );
+                byte_idx += plane;
+                c += per_byte;
+            }
+            // tail group: only the real channels exist in `out`
             while c < channels {
                 for i in 0..plane {
                     let byte = packed[byte_idx];
@@ -143,10 +174,19 @@ pub fn unpack_into(
         PackLayout::HeightWidth => {
             assert!(plane > 0 && elems % plane == 0);
             let channels = elems / plane;
+            let full = plane - plane % per_byte;
+            let full_bytes = full / per_byte;
             let mut byte_idx = 0;
             for c in 0..channels {
                 let base = c * plane;
-                let mut i = 0;
+                kernels::unpack_consecutive(
+                    &packed[byte_idx..byte_idx + full_bytes],
+                    bits,
+                    &mut out[base..base + full],
+                );
+                byte_idx += full_bytes;
+                // spatial tail: seed loop drops the pad slots
+                let mut i = full;
                 while i < plane {
                     let byte = packed[byte_idx];
                     byte_idx += 1;

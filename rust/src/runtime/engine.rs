@@ -26,7 +26,18 @@
 //!
 //! Real HLO text (`HloModule ...`) is detected and rejected with a clear
 //! error pointing at the PJRT backend.
+//!
+//! ## Kernel dispatch
+//!
+//! The hot loops run through [`super::kernels`]: `--kernels scalar`
+//! keeps the seed's scalar loops below (the bit-exactness oracle),
+//! `--kernels auto` (default) dispatches the SIMD/blocked fast path
+//! selected once per process by runtime feature detection. Fast-path
+//! results are epsilon-gated against the oracle (summation order and a
+//! reciprocal-multiply quantizer differ), never bit-gated; everything
+//! downstream of the interpreter is identical either way.
 
+use super::kernels::{self, DequantLut, KernelKind, KernelVariant};
 use super::opprof::{OpProbe, OpProfiler};
 use crate::profile::SplitMix64;
 use anyhow::{bail, Context, Result};
@@ -42,17 +53,25 @@ use std::time::{Duration, Instant};
 /// clock reads.
 pub struct Runtime {
     prof: Option<Arc<OpProfiler>>,
+    kernels: KernelKind,
 }
 
 impl Runtime {
     /// The reference CPU runtime (in the PJRT build: the CPU plugin).
     pub fn cpu() -> Result<Self> {
-        Ok(Runtime { prof: None })
+        Ok(Runtime { prof: None, kernels: KernelKind::default_kind() })
     }
 
     /// A runtime whose engines record per-op latencies into `prof`.
     pub fn with_profiler(prof: Arc<OpProfiler>) -> Result<Self> {
-        Ok(Runtime { prof: Some(prof) })
+        Ok(Runtime { prof: Some(prof), kernels: KernelKind::default_kind() })
+    }
+
+    /// Select the kernel policy for engines loaded through this runtime
+    /// (`scalar` = seed oracle, `auto` = detected SIMD fast path).
+    pub fn with_kernels(mut self, kernels: KernelKind) -> Self {
+        self.kernels = kernels;
+        self
     }
 
     pub fn platform(&self) -> String {
@@ -65,10 +84,21 @@ impl Runtime {
             .with_context(|| format!("read artifact {path:?}"))?;
         let program = parse_ref_program(&text)
             .with_context(|| format!("parse artifact {path:?}"))?;
-        let prof = self.prof.as_deref().map(|p| EngineProf::resolve(p, &program));
+        let variant = kernels::resolve(self.kernels);
+        let prof = self.prof.as_deref().map(|p| EngineProf::resolve(p, &program, variant.name()));
+        // the fused u8 path's dequant LUT is a load-time artifact of
+        // (bits, scale), like the head weights
+        let lut = match &program {
+            Program::CloudLogits { bits, scale, .. } if !variant.is_scalar() => {
+                Some(DequantLut::new(*bits, *scale))
+            }
+            _ => None,
+        };
         Ok(Engine {
             program,
             prof,
+            variant,
+            lut,
             name: path
                 .file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
@@ -157,10 +187,10 @@ enum EngineProf {
 }
 
 impl EngineProf {
-    fn resolve(p: &OpProfiler, program: &Program) -> EngineProf {
+    fn resolve(p: &OpProfiler, program: &Program, kernel: &'static str) -> EngineProf {
         match program {
             Program::EdgePack { img, c2, hw, .. } => EngineProf::Edge {
-                pack: p.probe(&format!("quant_pack[{c2}x{hw}]"), (img * img) as u64),
+                pack: p.probe(&format!("quant_pack[{c2}x{hw}]"), (img * img) as u64, kernel),
             },
             Program::CloudLogits { batch, c2, hw, bits, classes, .. } => {
                 let feat = c2 * hw * (8 / bits) as usize;
@@ -168,15 +198,17 @@ impl EngineProf {
                     unpack: p.probe(
                         &format!("unpack_dequant[{batch}x{feat}]"),
                         (batch * feat) as u64,
+                        kernel,
                     ),
                     gemm: p.probe(
                         &format!("gemm[{batch}x{classes}]"),
                         (batch * classes * feat) as u64,
+                        kernel,
                     ),
                 }
             }
             Program::FullLogits { img, classes, .. } => EngineProf::Full {
-                gemm: p.probe(&format!("gemm[1x{classes}]"), (classes * img * img) as u64),
+                gemm: p.probe(&format!("gemm[1x{classes}]"), (classes * img * img) as u64, kernel),
             },
         }
     }
@@ -187,10 +219,21 @@ pub struct Engine {
     program: Program,
     /// Present only when loaded through `Runtime::with_profiler`.
     prof: Option<EngineProf>,
+    /// Dispatched kernel implementation (resolved at load time).
+    variant: KernelVariant,
+    /// Fused-path dequant LUT; `Some` only for `cloud_logits` on a
+    /// non-scalar variant.
+    lut: Option<DequantLut>,
     pub name: String,
 }
 
 impl Engine {
+    /// Name of the kernel variant this engine dispatches to
+    /// (`scalar`/`sse2`/`avx2_fma`/`neon`).
+    pub fn kernel(&self) -> &'static str {
+        self.variant.name()
+    }
+
     /// Execute and read back an f32 tensor. Allocating wrapper around
     /// [`Engine::run_f32_into`].
     pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
@@ -219,41 +262,65 @@ impl Engine {
                 );
                 let per = (8 / bits) as usize;
                 let feat = sample * per;
-                let mask = ((1u16 << bits) - 1) as u8;
-                out.reserve(batch * classes);
                 // Profiling accumulates whole-batch durations per op and
                 // records once per run; the math and its order are
-                // untouched, so profiled runs are bit-identical. With no
-                // profiler even the clock reads are skipped.
+                // untouched by timing, so profiled runs are bit-identical
+                // to unprofiled ones. With no profiler even the clock
+                // reads are skipped.
                 let timing = self.prof.is_some();
                 let (mut t_unpack, mut t_gemm) = (Duration::ZERO, Duration::ZERO);
-                // one unpack scratch for the whole batch, not per sample
-                let mut x: Vec<f32> = Vec::with_capacity(feat);
-                for b in 0..*batch {
-                    let bytes = &data[b * sample..(b + 1) * sample];
-                    // unpack + dequantize
-                    let t = timing.then(Instant::now);
-                    x.clear();
-                    for &byte in bytes {
-                        for slot in 0..per {
-                            let code = (byte >> (slot as u8 * bits)) & mask;
-                            x.push(code as f32 * scale);
+                if let Some(lut) = &self.lut {
+                    // fused fast path: packed bytes feed the blocked
+                    // microkernel tile by tile, never materializing the
+                    // full f32 activation row
+                    out.resize(batch * classes, 0.0);
+                    for b in 0..*batch {
+                        let bytes = &data[b * sample..(b + 1) * sample];
+                        let logits = &mut out[b * classes..(b + 1) * classes];
+                        let (tu, tg) = kernels::gemv_fused_u8(
+                            self.variant,
+                            weights,
+                            feat,
+                            bytes,
+                            lut,
+                            logits,
+                            timing,
+                        );
+                        t_unpack += tu;
+                        t_gemm += tg;
+                    }
+                } else {
+                    // scalar oracle: the seed interpreter's loops,
+                    // bit-exact with every artifact this repo ever shipped
+                    let mask = ((1u16 << bits) - 1) as u8;
+                    out.reserve(batch * classes);
+                    // one unpack scratch for the whole batch, not per sample
+                    let mut x: Vec<f32> = Vec::with_capacity(feat);
+                    for b in 0..*batch {
+                        let bytes = &data[b * sample..(b + 1) * sample];
+                        // unpack + dequantize
+                        let t = timing.then(Instant::now);
+                        x.clear();
+                        for &byte in bytes {
+                            for slot in 0..per {
+                                let code = (byte >> (slot as u8 * bits)) & mask;
+                                x.push(code as f32 * scale);
+                            }
                         }
-                    }
-                    if let Some(t) = t {
-                        t_unpack += t.elapsed();
-                    }
-                    let t = timing.then(Instant::now);
-                    for c in 0..*classes {
-                        let row = &weights[c * feat..(c + 1) * feat];
-                        let mut acc = 0.0f32;
-                        for (w, v) in row.iter().zip(&x) {
-                            acc += w * v;
+                        if let Some(t) = t {
+                            t_unpack += t.elapsed();
                         }
-                        out.push(acc);
-                    }
-                    if let Some(t) = t {
-                        t_gemm += t.elapsed();
+                        let t = timing.then(Instant::now);
+                        for row in weights.chunks_exact(feat) {
+                            let mut acc = 0.0f32;
+                            for (w, v) in row.iter().zip(&x) {
+                                acc += w * v;
+                            }
+                            out.push(acc);
+                        }
+                        if let Some(t) = t {
+                            t_gemm += t.elapsed();
+                        }
                     }
                 }
                 if let Some(EngineProf::Cloud { unpack, gemm }) = &self.prof {
@@ -271,15 +338,19 @@ impl Engine {
                     self.name,
                     x.len()
                 );
-                out.reserve(*classes);
                 let t = self.prof.is_some().then(Instant::now);
-                for c in 0..*classes {
-                    let row = &weights[c * feat..(c + 1) * feat];
-                    let mut acc = 0.0f32;
-                    for (w, v) in row.iter().zip(x) {
-                        acc += w * v;
+                if self.variant.is_scalar() {
+                    out.reserve(*classes);
+                    for row in weights.chunks_exact(feat) {
+                        let mut acc = 0.0f32;
+                        for (w, v) in row.iter().zip(x) {
+                            acc += w * v;
+                        }
+                        out.push(acc);
                     }
-                    out.push(acc);
+                } else {
+                    out.resize(*classes, 0.0);
+                    kernels::gemv(self.variant, weights, feat, x, out);
                 }
                 if let (Some(t), Some(EngineProf::Full { gemm })) = (t, &self.prof) {
                     gemm.record(t.elapsed());
@@ -325,16 +396,24 @@ impl Engine {
                     img * img,
                     c2 * hw * per
                 );
-                let qmax = ((1u16 << bits) - 1) as f32;
-                let code = |v: f32| -> u8 { (v / scale).round().clamp(0.0, qmax) as u8 };
-                out.reserve(c2 * hw);
                 let t = self.prof.is_some().then(Instant::now);
-                for j in 0..c2 * hw {
-                    let mut byte = 0u8;
-                    for slot in 0..per {
-                        byte |= code(x[j * per + slot]) << (slot as u8 * bits);
+                if self.variant.is_scalar() {
+                    // seed oracle: per-element division, round-half-away
+                    let qmax = ((1u16 << bits) - 1) as f32;
+                    let code = |v: f32| -> u8 { (v / scale).round().clamp(0.0, qmax) as u8 };
+                    out.reserve(c2 * hw);
+                    for j in 0..c2 * hw {
+                        let mut byte = 0u8;
+                        for slot in 0..per {
+                            byte |= code(x[j * per + slot]) << (slot as u8 * bits);
+                        }
+                        out.push(byte);
                     }
-                    out.push(byte);
+                } else {
+                    // fast path: SIMD quantize with a precomputed
+                    // reciprocal (≤ 1 code from the oracle at rounding
+                    // boundaries — epsilon-gated, never bit-gated)
+                    kernels::quantize_pack(self.variant, x, *bits, *scale, out);
                 }
                 if let (Some(t), Some(EngineProf::Edge { pack })) = (t, &self.prof) {
                     pack.record(t.elapsed());
@@ -606,5 +685,128 @@ mod tests {
         let mut logits = vec![9.0f32; 2]; // dirty scratch
         c.run_f32_into(&[literal_view_u8(&batch, &bdims).unwrap()], &mut logits).unwrap();
         assert_eq!(logits, owned, "same float summation order, bit-identical");
+    }
+
+    /// The scalar-kernel engine must reproduce the seed interpreter's
+    /// formulas bit for bit — it IS the seed path, selected by flag.
+    #[test]
+    fn scalar_kernels_bit_identical_to_seed_formulas() {
+        let edge = write_tmp(
+            "edge_seed.hlo.txt",
+            "REFHLO v1\nprogram: edge_pack\nimg: 8\nbits: 4\nc2: 2\nhw: 16\nscale: 0.05\n",
+        );
+        let cloud = write_tmp(
+            "cloud_seed.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 1\nc2: 2\nhw: 16\nbits: 4\n\
+             scale: 0.05\nclasses: 4\nseed: 7\n",
+        );
+        let rt = Runtime::cpu().unwrap().with_kernels(KernelKind::Scalar);
+        let e = rt.load_hlo_text(&edge).unwrap();
+        let c = rt.load_hlo_text(&cloud).unwrap();
+        assert_eq!(e.kernel(), "scalar");
+        assert_eq!(c.kernel(), "scalar");
+
+        let mut rng = SplitMix64::new(123);
+        let img: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        let packed = e.run_u8(&[literal_f32(&img, &[1, 1, 8, 8]).unwrap()]).unwrap();
+        // seed quantize-pack, written out longhand
+        let mut want = Vec::new();
+        for pair in img.chunks_exact(2) {
+            let q = |v: f32| (v / 0.05).round().clamp(0.0, 15.0) as u8;
+            want.push(q(pair[0]) | (q(pair[1]) << 4));
+        }
+        assert_eq!(packed, want, "scalar engine == seed pack formula");
+
+        let logits = c.run_f32(&[literal_u8(&packed, &[1, 2, 16]).unwrap()]).unwrap();
+        // seed unpack/dequant + left-to-right dot against head_weights
+        let weights = head_weights(7, 4, 64);
+        let mut x = Vec::new();
+        for &b in &packed {
+            x.push((b & 0x0F) as f32 * 0.05);
+            x.push((b >> 4) as f32 * 0.05);
+        }
+        let want: Vec<f32> = weights
+            .chunks_exact(64)
+            .map(|row| {
+                let mut acc = 0.0f32;
+                for (w, v) in row.iter().zip(&x) {
+                    acc += w * v;
+                }
+                acc
+            })
+            .collect();
+        assert_eq!(logits, want, "scalar engine == seed gemm formula");
+    }
+
+    /// The auto fast path must stay within the epsilon gate of the
+    /// scalar oracle on every program type.
+    #[test]
+    fn auto_kernels_within_epsilon_of_scalar_oracle() {
+        let edge = write_tmp(
+            "edge_auto.hlo.txt",
+            "REFHLO v1\nprogram: edge_pack\nimg: 16\nbits: 4\nc2: 2\nhw: 64\nscale: 0.01\n",
+        );
+        let cloud = write_tmp(
+            "cloud_auto.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 2\nc2: 2\nhw: 64\nbits: 4\n\
+             scale: 0.01\nclasses: 6\nseed: 11\n",
+        );
+        let full = write_tmp(
+            "full_auto.hlo.txt",
+            "REFHLO v1\nprogram: full_logits\nimg: 16\nclasses: 6\nseed: 11\n",
+        );
+        let oracle = Runtime::cpu().unwrap().with_kernels(KernelKind::Scalar);
+        let fast = Runtime::cpu().unwrap().with_kernels(KernelKind::Auto);
+
+        let mut rng = SplitMix64::new(77);
+        let img: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
+        let lit = literal_f32(&img, &[1, 1, 16, 16]).unwrap();
+
+        // edge: codes within 1 quantization step of the oracle
+        let p0 = oracle.load_hlo_text(&edge).unwrap().run_u8(&[lit.clone()]).unwrap();
+        let p1 = fast.load_hlo_text(&edge).unwrap().run_u8(&[lit.clone()]).unwrap();
+        assert_eq!(p0.len(), p1.len());
+        for (a, b) in p0.iter().zip(&p1) {
+            for shift in [0u8, 4] {
+                let (ca, cb) = ((a >> shift) & 0x0F, (b >> shift) & 0x0F);
+                assert!((ca as i16 - cb as i16).abs() <= 1, "{ca} vs {cb}");
+            }
+        }
+
+        // cloud: logits within 1e-4 of the oracle on identical payloads
+        let mut batch = p0.clone();
+        batch.extend_from_slice(&p0);
+        let blit = literal_u8(&batch, &[2, 2, 64]).unwrap();
+        let l0 = oracle.load_hlo_text(&cloud).unwrap().run_f32(&[blit.clone()]).unwrap();
+        let l1 = fast.load_hlo_text(&cloud).unwrap().run_f32(&[blit]).unwrap();
+        for (a, b) in l0.iter().zip(&l1) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+
+        // full: f32 gemm within 1e-4
+        let f0 = oracle.load_hlo_text(&full).unwrap().run_f32(&[lit.clone()]).unwrap();
+        let f1 = fast.load_hlo_text(&full).unwrap().run_f32(&[lit]).unwrap();
+        for (a, b) in f0.iter().zip(&f1) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    /// Profiler rows carry the dispatched kernel variant.
+    #[test]
+    fn profiler_rows_tagged_with_kernel_variant() {
+        let cloud = write_tmp(
+            "cloud_tag.hlo.txt",
+            "REFHLO v1\nprogram: cloud_logits\nbatch: 1\nc2: 2\nhw: 4\nbits: 4\n\
+             scale: 0.1\nclasses: 3\nseed: 7\n",
+        );
+        let prof = Arc::new(OpProfiler::new());
+        let rt = Runtime::with_profiler(Arc::clone(&prof))
+            .unwrap()
+            .with_kernels(KernelKind::Scalar);
+        let c = rt.load_hlo_text(&cloud).unwrap();
+        c.run_f32(&[literal_u8(&[0u8; 8], &[1, 2, 4]).unwrap()]).unwrap();
+        for row in prof.table() {
+            assert_eq!(row.kernel, "scalar", "{}", row.sig);
+        }
     }
 }

@@ -1,0 +1,912 @@
+//! SIMD + blocked kernel layer for the REFHLO interpreter.
+//!
+//! Every serving and planner number in this repo bottoms out in the
+//! interpreter's three hot loops (unpack/dequant, the linear-head GEMM,
+//! and the edge quantize-pack). This module gives each of them a
+//! dispatched fast path — explicit per-arch `std::arch` intrinsics
+//! (AVX2+FMA and SSE2 on x86_64, NEON on aarch64) behind **one-time
+//! runtime feature detection** — while keeping the seed's scalar loops
+//! in `engine.rs` as the bit-exactness oracle.
+//!
+//! ## Dispatch
+//!
+//! [`KernelKind`] is the *configured* policy (`--kernels scalar|auto`,
+//! default `auto`; the `AUTO_SPLIT_KERNELS` env var sets the process
+//! default so CI can run the whole test suite against the oracle).
+//! [`resolve`] turns it into the *dispatched* [`KernelVariant`]:
+//! `scalar` always forces the oracle; `auto` picks the widest variant
+//! the CPU supports, detected once per process ([`detect`]).
+//!
+//! ## Exactness policy
+//!
+//! * Integer/code-space kernels (bit packing/unpacking, the dequant
+//!   LUT's *codes*) are **bit-identical** to the seed loops on every
+//!   variant — pure integer ops have one right answer.
+//! * Float kernels are **epsilon-gated**: SIMD lane reduction and the
+//!   k-panel blocking reorder f32 summation, and the quantize fast path
+//!   multiplies by a precomputed `1/scale` instead of dividing, so fast
+//!   variants may differ from the oracle by a few ULPs (≤ 1e-4 on the
+//!   logits at the shapes the benches gate; ≤ 1 code on the packer).
+//!   `--kernels scalar` reproduces the seed path exactly.
+//!
+//! ## Blocking
+//!
+//! The GEMV microkernel is register-blocked (4 vector accumulators in
+//! flight per row, hiding FMA latency) and both GEMM entry points walk
+//! the reduction dimension in L1-sized panels ([`PANEL`]): within a
+//! panel the activation slice stays cache-hot while the weight rows
+//! stream through once. The fused quantized path ([`gemv_fused_u8`])
+//! never materializes the full f32 activation row: a per-`(bits,scale)`
+//! 256-entry LUT ([`DequantLut`]) expands one packed-byte tile at a
+//! time into an 8 KB stack buffer that feeds the same microkernel.
+
+use std::fmt;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Configured kernel policy (`--kernels` / [`KernelKind::default_kind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Force the scalar oracle — bit-identical to the seed interpreter.
+    Scalar,
+    /// Dispatch the widest SIMD variant this CPU supports ([`detect`]).
+    Auto,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "auto" => Some(KernelKind::Auto),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default: `AUTO_SPLIT_KERNELS=scalar|auto` when set
+    /// (read once — CI runs the tier-1 suite under both), else `auto`.
+    pub fn default_kind() -> KernelKind {
+        static DEFAULT: OnceLock<KernelKind> = OnceLock::new();
+        *DEFAULT.get_or_init(|| {
+            std::env::var("AUTO_SPLIT_KERNELS")
+                .ok()
+                .and_then(|v| KernelKind::parse(&v))
+                .unwrap_or(KernelKind::Auto)
+        })
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Auto => "auto",
+        })
+    }
+}
+
+/// Dispatched kernel implementation. All variants exist on every arch
+/// (so CLI parsing and provenance records are portable); [`detect`]
+/// only ever returns the ones the build target can execute, and the
+/// dispatchers fall back to scalar for foreign variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelVariant {
+    Scalar,
+    /// x86_64 baseline: 4-lane mul+add, 4 accumulators.
+    Sse2,
+    /// 8-lane FMA, 4 accumulators (requires `avx2` **and** `fma`).
+    Avx2Fma,
+    /// aarch64 baseline: 4-lane fused multiply-add, 4 accumulators.
+    Neon,
+}
+
+impl KernelVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Sse2 => "sse2",
+            KernelVariant::Avx2Fma => "avx2_fma",
+            KernelVariant::Neon => "neon",
+        }
+    }
+
+    pub fn is_scalar(self) -> bool {
+        self == KernelVariant::Scalar
+    }
+}
+
+impl fmt::Display for KernelVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The widest variant this CPU can execute, detected once per process.
+pub fn detect() -> KernelVariant {
+    static DETECTED: OnceLock<KernelVariant> = OnceLock::new();
+    *DETECTED.get_or_init(detect_impl)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> KernelVariant {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        KernelVariant::Avx2Fma
+    } else {
+        // SSE2 is part of the x86_64 baseline — always executable.
+        KernelVariant::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_impl() -> KernelVariant {
+    // NEON is part of the aarch64 baseline — always executable.
+    KernelVariant::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_impl() -> KernelVariant {
+    KernelVariant::Scalar
+}
+
+/// Detected CPU SIMD features as a comma-joined list (provenance for
+/// `BENCH_*.json` host facts); empty on arches without a SIMD kernel.
+pub fn cpu_features() -> &'static str {
+    static FEATURES: OnceLock<String> = OnceLock::new();
+    FEATURES.get_or_init(features_impl).as_str()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn features_impl() -> String {
+    let mut f = vec!["sse2"];
+    if std::arch::is_x86_feature_detected!("avx") {
+        f.push("avx");
+    }
+    if std::arch::is_x86_feature_detected!("avx2") {
+        f.push("avx2");
+    }
+    if std::arch::is_x86_feature_detected!("fma") {
+        f.push("fma");
+    }
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        f.push("avx512f");
+    }
+    f.join(",")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn features_impl() -> String {
+    "neon".to_string()
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn features_impl() -> String {
+    String::new()
+}
+
+/// Resolve the configured policy to the variant that will actually run.
+pub fn resolve(kind: KernelKind) -> KernelVariant {
+    match kind {
+        KernelKind::Scalar => KernelVariant::Scalar,
+        KernelKind::Auto => detect(),
+    }
+}
+
+/// f32 lanes per k-panel: 16 KB — half a typical 32 KB L1d, so the
+/// activation panel stays resident while the weight rows stream.
+pub const PANEL: usize = 4096;
+
+/// f32 lanes per fused-unpack tile: 8 KB of stack, always a multiple of
+/// every `8/bits` group size (1/2/4/8).
+pub const FUSE_TILE: usize = 2048;
+
+/// Dot product dispatched by variant. The scalar arm is a plain
+/// left-to-right fold; SIMD arms reduce 4 vector accumulators and so
+/// reorder the summation (epsilon-gated, never bit-gated).
+#[inline]
+pub fn dot(variant: KernelVariant, w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    match variant {
+        KernelVariant::Scalar => dot_scalar(w, x),
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Sse2 => unsafe { x86::dot_sse2(w, x) },
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2Fma => unsafe { x86::dot_avx2(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { arm::dot_neon(w, x) },
+        // a variant this build target cannot execute: degrade to scalar
+        _ => dot_scalar(w, x),
+    }
+}
+
+#[inline]
+fn dot_scalar(w: &[f32], x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (a, b) in w.iter().zip(x) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// Blocked GEMV: `out[c] += dot(weights_row_c, x)` for every row. The
+/// caller zero-fills `out` (`weights.len() == feat * out.len()`); the
+/// reduction dimension is walked in L1-sized [`PANEL`]s so `x` stays
+/// hot while the weight rows stream through once per panel.
+pub fn gemv(variant: KernelVariant, weights: &[f32], feat: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), feat);
+    debug_assert_eq!(weights.len(), feat * out.len());
+    let mut k0 = 0;
+    while k0 < feat {
+        let tl = PANEL.min(feat - k0);
+        for (row, o) in weights.chunks_exact(feat).zip(out.iter_mut()) {
+            *o += dot(variant, &row[k0..k0 + tl], &x[k0..k0 + tl]);
+        }
+        k0 += tl;
+    }
+}
+
+/// Per-`(bits, scale)` dequantization lookup table: 256 entries × the
+/// `8/bits` codes a packed byte carries, each lane precomputed exactly
+/// as the scalar oracle does (`code as f32 * scale`) — so LUT-driven
+/// unpack is bit-identical to the seed's shift/mask/multiply loop and
+/// only the downstream summation order distinguishes the fast path.
+pub struct DequantLut {
+    bits: u8,
+    per: usize,
+    /// `256 * per` lanes, row-major by byte value.
+    table: Vec<f32>,
+}
+
+impl DequantLut {
+    pub fn new(bits: u8, scale: f32) -> DequantLut {
+        assert!(matches!(bits, 1 | 2 | 4 | 8), "packable bit-widths: 1/2/4/8");
+        let per = (8 / bits) as usize;
+        let mask = ((1u16 << bits) - 1) as u8;
+        let mut table = Vec::with_capacity(256 * per);
+        for byte in 0u16..=255 {
+            for slot in 0..per {
+                let code = (byte as u8 >> (slot as u8 * bits)) & mask;
+                table.push(code as f32 * scale);
+            }
+        }
+        DequantLut { bits, per, table }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Dequantized lanes per packed byte (`8/bits`).
+    pub fn per(&self) -> usize {
+        self.per
+    }
+
+    /// The `per` dequantized lanes of one packed byte.
+    #[inline]
+    pub fn lanes(&self, byte: u8) -> &[f32] {
+        &self.table[byte as usize * self.per..byte as usize * self.per + self.per]
+    }
+}
+
+/// LUT-driven unpack + dequantize of a whole payload into `out`
+/// (cleared first). Lane values are bit-identical to the seed loop.
+pub fn unpack_dequant(lut: &DequantLut, bytes: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(bytes.len() * lut.per);
+    for &b in bytes {
+        out.extend_from_slice(lut.lanes(b));
+    }
+}
+
+/// Fused quantized GEMV: logits for one packed u8 sample without
+/// materializing the full f32 activation row. Packed bytes are
+/// LUT-expanded one [`FUSE_TILE`] at a time into a stack buffer that
+/// feeds the blocked microkernel; the caller zero-fills `out`.
+///
+/// When `timing` is set the per-tile LUT expansion and accumulation are
+/// clocked separately so the op profiler can keep attributing unpack vs
+/// gemm time — the math is identical with timing on or off (profiled
+/// runs stay bit-identical to unprofiled ones).
+pub fn gemv_fused_u8(
+    variant: KernelVariant,
+    weights: &[f32],
+    feat: usize,
+    bytes: &[u8],
+    lut: &DequantLut,
+    out: &mut [f32],
+    timing: bool,
+) -> (Duration, Duration) {
+    let per = lut.per;
+    debug_assert_eq!(bytes.len() * per, feat);
+    debug_assert_eq!(weights.len(), feat * out.len());
+    let mut tile = [0.0f32; FUSE_TILE];
+    let (mut t_unpack, mut t_gemm) = (Duration::ZERO, Duration::ZERO);
+    let mut k0 = 0usize;
+    for chunk in bytes.chunks(FUSE_TILE / per) {
+        let tl = chunk.len() * per;
+        let t = timing.then(Instant::now);
+        for (j, &b) in chunk.iter().enumerate() {
+            tile[j * per..j * per + per].copy_from_slice(lut.lanes(b));
+        }
+        if let Some(t) = t {
+            t_unpack += t.elapsed();
+        }
+        let t = timing.then(Instant::now);
+        for (row, o) in weights.chunks_exact(feat).zip(out.iter_mut()) {
+            *o += dot(variant, &row[k0..k0 + tl], &tile[..tl]);
+        }
+        if let Some(t) = t {
+            t_gemm += t.elapsed();
+        }
+        k0 += tl;
+    }
+    (t_unpack, t_gemm)
+}
+
+/// Quantize an f32 buffer and pack `8/bits` consecutive codes per byte
+/// (the edge partition's payload layout), appending to `out`.
+///
+/// The scalar arm is the seed oracle: `(v / scale).round()` clamped —
+/// bit-identical to the seed engine. Fast arms hoist the division into
+/// a precomputed reciprocal and quantize via `floor(v/scale + 0.5)`
+/// (identical across every fast variant, SIMD or not; may differ from
+/// the oracle by ≤ 1 code at rounding boundaries — epsilon-gated).
+pub fn quantize_pack(variant: KernelVariant, x: &[f32], bits: u8, scale: f32, out: &mut Vec<u8>) {
+    let per = (8 / bits) as usize;
+    debug_assert_eq!(x.len() % per, 0);
+    let qmax = ((1u16 << bits) - 1) as f32;
+    out.reserve(x.len() / per);
+    if variant.is_scalar() {
+        for group in x.chunks_exact(per) {
+            let mut byte = 0u8;
+            for (slot, &v) in group.iter().enumerate() {
+                byte |= ((v / scale).round().clamp(0.0, qmax) as u8) << (slot as u8 * bits);
+            }
+            out.push(byte);
+        }
+        return;
+    }
+    let inv = 1.0 / scale;
+    // quantize an L1-resident chunk of codes, then bit-pack it; 256 is
+    // a multiple of every group size, so chunks never split a byte
+    let mut codes = [0u8; 256];
+    for chunk in x.chunks(256) {
+        quantize_codes(variant, chunk, inv, qmax, &mut codes[..chunk.len()]);
+        pack_consecutive(&codes[..chunk.len()], bits, out);
+    }
+}
+
+/// The fast-path quantizer for one lane; all fast variants (SIMD and
+/// fallback alike) use exactly this formula, so codes agree bitwise
+/// across sse2/avx2/neon and only the scalar oracle can differ.
+#[inline]
+fn code_fast(v: f32, inv: f32, qmax: f32) -> u8 {
+    (v * inv + 0.5).floor().clamp(0.0, qmax) as u8
+}
+
+fn quantize_codes(variant: KernelVariant, x: &[f32], inv: f32, qmax: f32, codes: &mut [u8]) {
+    debug_assert_eq!(x.len(), codes.len());
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2Fma => unsafe { x86::quantize_avx2(x, inv, qmax, codes) },
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => unsafe { arm::quantize_neon(x, inv, qmax, codes) },
+        _ => {
+            for (c, &v) in codes.iter_mut().zip(x) {
+                *c = code_fast(v, inv, qmax);
+            }
+        }
+    }
+}
+
+/// Pack `8/bits` consecutive codes per byte, appending to `out`
+/// (`codes.len()` must be a multiple of the group size). Bit-identical
+/// to the seed loops on every variant — integer ops only.
+pub fn pack_consecutive(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    if bits == 8 {
+        out.extend_from_slice(codes);
+        return;
+    }
+    let per = (8 / bits) as usize;
+    debug_assert_eq!(codes.len() % per, 0);
+    out.reserve(codes.len() / per);
+    match per {
+        2 => {
+            for pair in codes.chunks_exact(2) {
+                debug_assert!(pair[0] < 16 && pair[1] < 16);
+                out.push(pair[0] | (pair[1] << 4));
+            }
+        }
+        _ => {
+            for group in codes.chunks_exact(per) {
+                let mut byte = 0u8;
+                for (slot, &v) in group.iter().enumerate() {
+                    debug_assert!(v < (1 << bits));
+                    byte |= v << (slot as u8 * bits);
+                }
+                out.push(byte);
+            }
+        }
+    }
+}
+
+/// Invert [`pack_consecutive`] into `dst`
+/// (`dst.len() == packed.len() * 8/bits`).
+pub fn unpack_consecutive(packed: &[u8], bits: u8, dst: &mut [u8]) {
+    if bits == 8 {
+        dst.copy_from_slice(packed);
+        return;
+    }
+    let per = (8 / bits) as usize;
+    debug_assert_eq!(dst.len(), packed.len() * per);
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (&byte, group) in packed.iter().zip(dst.chunks_exact_mut(per)) {
+        for (slot, v) in group.iter_mut().enumerate() {
+            *v = (byte >> (slot as u8 * bits)) & mask;
+        }
+    }
+}
+
+/// Channel-layout packing of one *full* group: `8/bits` channel rows of
+/// `plane` codes each (`group.len() == per * plane`), one output byte
+/// per spatial index, appended to `out`. The contiguous-row walk is the
+/// auto-vectorizable form of the seed's strided index arithmetic and
+/// produces identical bytes.
+pub fn pack_channel_group(group: &[u8], plane: usize, bits: u8, out: &mut Vec<u8>) {
+    let per = (8 / bits) as usize;
+    debug_assert_eq!(group.len(), per * plane);
+    out.reserve(plane);
+    match per {
+        2 => {
+            let (lo, hi) = group.split_at(plane);
+            for (&a, &b) in lo.iter().zip(hi) {
+                debug_assert!(a < 16 && b < 16);
+                out.push(a | (b << 4));
+            }
+        }
+        _ => {
+            for i in 0..plane {
+                let mut byte = 0u8;
+                for slot in 0..per {
+                    let v = group[slot * plane + i];
+                    debug_assert!(v < (1 << bits));
+                    byte |= v << (slot as u8 * bits);
+                }
+                out.push(byte);
+            }
+        }
+    }
+}
+
+/// Invert [`pack_channel_group`]: scatter `plane` packed bytes back
+/// into `8/bits` channel rows (`dst.len() == per * plane`).
+pub fn unpack_channel_group(packed: &[u8], plane: usize, bits: u8, dst: &mut [u8]) {
+    let per = (8 / bits) as usize;
+    debug_assert_eq!(packed.len(), plane);
+    debug_assert_eq!(dst.len(), per * plane);
+    let mask = ((1u16 << bits) - 1) as u8;
+    match per {
+        2 => {
+            let (lo, hi) = dst.split_at_mut(plane);
+            for ((v, l), h) in packed.iter().zip(lo).zip(hi) {
+                *l = v & mask;
+                *h = v >> 4;
+            }
+        }
+        _ => {
+            for (i, &byte) in packed.iter().enumerate() {
+                for slot in 0..per {
+                    dst[slot * plane + i] = (byte >> (slot as u8 * bits)) & mask;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::code_fast;
+    use std::arch::x86_64::*;
+
+    /// 8-lane FMA dot with 4 accumulators in flight (register blocking
+    /// hides the ~4-cycle FMA latency the scalar chain serializes on).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot_avx2(w: &[f32], x: &[f32]) -> f32 {
+        let n = w.len();
+        let wp = w.as_ptr();
+        let xp = x.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(wp.add(i)), _mm256_loadu_ps(xp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 8)),
+                _mm256_loadu_ps(xp.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 16)),
+                _mm256_loadu_ps(xp.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(wp.add(i + 24)),
+                _mm256_loadu_ps(xp.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(wp.add(i)), _mm256_loadu_ps(xp.add(i)), acc0);
+            i += 8;
+        }
+        let sum = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), sum);
+        let mut acc = lanes.iter().sum::<f32>();
+        while i < n {
+            acc += w[i] * x[i];
+            i += 1;
+        }
+        acc
+    }
+
+    /// 4-lane mul+add dot, 4 accumulators — the x86_64 baseline path
+    /// for hosts without AVX2/FMA.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_sse2(w: &[f32], x: &[f32]) -> f32 {
+        let n = w.len();
+        let wp = w.as_ptr();
+        let xp = x.as_ptr();
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let mut acc2 = _mm_setzero_ps();
+        let mut acc3 = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(wp.add(i)), _mm_loadu_ps(xp.add(i))));
+            acc1 = _mm_add_ps(
+                acc1,
+                _mm_mul_ps(_mm_loadu_ps(wp.add(i + 4)), _mm_loadu_ps(xp.add(i + 4))),
+            );
+            acc2 = _mm_add_ps(
+                acc2,
+                _mm_mul_ps(_mm_loadu_ps(wp.add(i + 8)), _mm_loadu_ps(xp.add(i + 8))),
+            );
+            acc3 = _mm_add_ps(
+                acc3,
+                _mm_mul_ps(_mm_loadu_ps(wp.add(i + 12)), _mm_loadu_ps(xp.add(i + 12))),
+            );
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(wp.add(i)), _mm_loadu_ps(xp.add(i))));
+            i += 4;
+        }
+        let sum = _mm_add_ps(_mm_add_ps(acc0, acc1), _mm_add_ps(acc2, acc3));
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), sum);
+        let mut acc = lanes.iter().sum::<f32>();
+        while i < n {
+            acc += w[i] * x[i];
+            i += 1;
+        }
+        acc
+    }
+
+    /// 8-lane quantize: `floor(v * inv + 0.5)` clamped to `[0, qmax]`,
+    /// lane-exact with [`code_fast`] (the scalar tail uses it).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_avx2(x: &[f32], inv: f32, qmax: f32, codes: &mut [u8]) {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let vinv = _mm256_set1_ps(inv);
+        let vhalf = _mm256_set1_ps(0.5);
+        let vzero = _mm256_setzero_ps();
+        let vmax = _mm256_set1_ps(qmax);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let t = _mm256_add_ps(_mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), vinv), vhalf);
+            let t = _mm256_min_ps(_mm256_max_ps(_mm256_floor_ps(t), vzero), vmax);
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, _mm256_cvttps_epi32(t));
+            for (c, &l) in codes[i..i + 8].iter_mut().zip(&lanes) {
+                *c = l as u8;
+            }
+            i += 8;
+        }
+        while i < n {
+            codes[i] = code_fast(x[i], inv, qmax);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::code_fast;
+    use std::arch::aarch64::*;
+
+    /// 4-lane fused multiply-add dot, 4 accumulators in flight.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(w: &[f32], x: &[f32]) -> f32 {
+        let n = w.len();
+        let wp = w.as_ptr();
+        let xp = x.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(wp.add(i)), vld1q_f32(xp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(wp.add(i + 4)), vld1q_f32(xp.add(i + 4)));
+            acc2 = vfmaq_f32(acc2, vld1q_f32(wp.add(i + 8)), vld1q_f32(xp.add(i + 8)));
+            acc3 = vfmaq_f32(acc3, vld1q_f32(wp.add(i + 12)), vld1q_f32(xp.add(i + 12)));
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(wp.add(i)), vld1q_f32(xp.add(i)));
+            i += 4;
+        }
+        let sum = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), sum);
+        let mut acc = lanes.iter().sum::<f32>();
+        while i < n {
+            acc += w[i] * x[i];
+            i += 1;
+        }
+        acc
+    }
+
+    /// 4-lane quantize, lane-exact with [`code_fast`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quantize_neon(x: &[f32], inv: f32, qmax: f32, codes: &mut [u8]) {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let vinv = vdupq_n_f32(inv);
+        let vhalf = vdupq_n_f32(0.5);
+        let vzero = vdupq_n_f32(0.0);
+        let vmax = vdupq_n_f32(qmax);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let t = vaddq_f32(vmulq_f32(vld1q_f32(xp.add(i)), vinv), vhalf);
+            let t = vminq_f32(vmaxq_f32(vrndmq_f32(t), vzero), vmax);
+            let mut lanes = [0i32; 4];
+            vst1q_s32(lanes.as_mut_ptr(), vcvtq_s32_f32(t));
+            for (c, &l) in codes[i..i + 4].iter_mut().zip(&lanes) {
+                *c = l as u8;
+            }
+            i += 4;
+        }
+        while i < n {
+            codes[i] = code_fast(x[i], inv, qmax);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::SplitMix64;
+
+    fn rand_f32(n: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| lo + rng.next_f32() * (hi - lo)).collect()
+    }
+
+    #[test]
+    fn detection_is_stable_and_consistent() {
+        assert_eq!(detect(), detect());
+        assert_eq!(resolve(KernelKind::Scalar), KernelVariant::Scalar);
+        assert_eq!(resolve(KernelKind::Auto), detect());
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        {
+            assert!(!detect().is_scalar(), "SIMD baseline expected on this arch");
+            assert!(!cpu_features().is_empty());
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_displays() {
+        assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Auto));
+        assert_eq!(KernelKind::parse("fast"), None);
+        assert_eq!(KernelKind::Auto.to_string(), "auto");
+        assert_eq!(KernelVariant::Avx2Fma.name(), "avx2_fma");
+    }
+
+    #[test]
+    fn simd_dot_matches_scalar_within_epsilon() {
+        // odd lengths exercise every remainder path (32/8/1, 16/4/1)
+        for n in [1usize, 7, 8, 31, 32, 100, 1000, 4097] {
+            let w = rand_f32(n, 11 + n as u64, -1.0, 1.0);
+            let x = rand_f32(n, 77 + n as u64, -1.0, 1.0);
+            let exact: f64 = w.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+            for v in [KernelVariant::Scalar, detect()] {
+                let got = dot(v, &w, &x) as f64;
+                assert!(
+                    (got - exact).abs() <= 1e-4 * (1.0 + exact.abs()),
+                    "{v} dot n={n}: {got} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches_per_row_dot() {
+        let (classes, feat) = (7, 5000); // spans two k-panels
+        let w = rand_f32(classes * feat, 3, -0.1, 0.1);
+        let x = rand_f32(feat, 4, 0.0, 1.0);
+        for v in [KernelVariant::Scalar, detect()] {
+            let mut out = vec![0.0f32; classes];
+            gemv(v, &w, feat, &x, &mut out);
+            for (c, o) in out.iter().enumerate() {
+                let exact: f64 = w[c * feat..(c + 1) * feat]
+                    .iter()
+                    .zip(&x)
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum();
+                assert!((*o as f64 - exact).abs() <= 1e-4 * (1.0 + exact.abs()), "{v} row {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_lanes_are_bit_identical_to_seed_unpack_at_every_byte() {
+        for bits in [1u8, 2, 4, 8] {
+            let scale = 0.05f32;
+            let lut = DequantLut::new(bits, scale);
+            let per = (8 / bits) as usize;
+            assert_eq!(lut.per(), per);
+            let mask = ((1u16 << bits) - 1) as u8;
+            for byte in 0..=255u8 {
+                let lanes = lut.lanes(byte);
+                for slot in 0..per {
+                    let code = (byte >> (slot as u8 * bits)) & mask;
+                    let seed = code as f32 * scale;
+                    assert_eq!(lanes[slot].to_bits(), seed.to_bits(), "bits={bits} byte={byte}");
+                }
+            }
+            // clamp boundary: the all-ones byte decodes to qmax in every lane
+            let qmax = ((1u16 << bits) - 1) as f32;
+            assert!(lut.lanes(0xFF).iter().all(|&v| v == qmax * scale), "bits={bits}");
+            assert!(lut.lanes(0x00).iter().all(|&v| v == 0.0), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fused_gemv_matches_unpack_then_gemv() {
+        let mut rng = SplitMix64::new(9);
+        for bits in [1u8, 2, 4, 8] {
+            let per = (8 / bits) as usize;
+            let n_bytes = 1200; // spans multiple fuse tiles at every width
+            let feat = n_bytes * per;
+            let classes = 5;
+            let scale = 0.05f32;
+            let bytes: Vec<u8> = (0..n_bytes).map(|_| (rng.next_f32() * 256.0) as u8).collect();
+            let w = rand_f32(classes * feat, 21 + bits as u64, -0.1, 0.1);
+            let lut = DequantLut::new(bits, scale);
+            let mut x = Vec::new();
+            unpack_dequant(&lut, &bytes, &mut x);
+            assert_eq!(x.len(), feat);
+            for v in [KernelVariant::Scalar, detect()] {
+                let mut unfused = vec![0.0f32; classes];
+                gemv(v, &w, feat, &x, &mut unfused);
+                let mut fused = vec![0.0f32; classes];
+                let (tu, tg) = gemv_fused_u8(v, &w, feat, &bytes, &lut, &mut fused, false);
+                assert_eq!((tu, tg), (Duration::ZERO, Duration::ZERO));
+                for (a, b) in fused.iter().zip(&unfused) {
+                    assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{v} bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_timing_does_not_change_results() {
+        let bits = 4u8;
+        let (n_bytes, classes) = (700, 3);
+        let feat = n_bytes * 2;
+        let mut rng = SplitMix64::new(5);
+        let bytes: Vec<u8> = (0..n_bytes).map(|_| (rng.next_f32() * 256.0) as u8).collect();
+        let w = rand_f32(classes * feat, 6, -0.1, 0.1);
+        let lut = DequantLut::new(bits, 0.1);
+        let v = detect();
+        let mut cold = vec![0.0f32; classes];
+        gemv_fused_u8(v, &w, feat, &bytes, &lut, &mut cold, false);
+        let mut timed = vec![0.0f32; classes];
+        gemv_fused_u8(v, &w, feat, &bytes, &lut, &mut timed, true);
+        assert_eq!(cold, timed, "timing must be observation-only");
+    }
+
+    #[test]
+    fn fast_quantize_within_one_code_of_oracle() {
+        for bits in [1u8, 2, 4, 8] {
+            let per = (8 / bits) as usize;
+            let scale = 0.05f32;
+            let qmax = ((1u16 << bits) - 1) as f32;
+            // spans below-zero, in-range, and above-qmax clamp regions
+            let x = rand_f32(per * 400, 31 + bits as u64, -0.5, qmax * scale * 1.5);
+            let mut oracle = Vec::new();
+            quantize_pack(KernelVariant::Scalar, &x, bits, scale, &mut oracle);
+            let mut fast = Vec::new();
+            quantize_pack(detect(), &x, bits, scale, &mut fast);
+            assert_eq!(oracle.len(), fast.len());
+            let mask = ((1u16 << bits) - 1) as u8;
+            for (i, (&a, &b)) in oracle.iter().zip(&fast).enumerate() {
+                for slot in 0..per {
+                    let ca = (a >> (slot as u8 * bits)) & mask;
+                    let cb = (b >> (slot as u8 * bits)) & mask;
+                    assert!(
+                        (ca as i16 - cb as i16).abs() <= 1,
+                        "bits={bits} byte {i} slot {slot}: {ca} vs {cb}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_quantize_clamps_at_boundaries() {
+        let bits = 4u8;
+        let scale = 0.1f32;
+        // well below zero and well above qmax·scale: clamp on both ends,
+        // identically on the oracle and every fast variant
+        let x = [-5.0f32, -0.04, 0.0, 0.04, 1.5, 100.0, 0.75, 0.05];
+        let mut oracle = Vec::new();
+        quantize_pack(KernelVariant::Scalar, &x, bits, scale, &mut oracle);
+        let mut fast = Vec::new();
+        quantize_pack(detect(), &x, bits, scale, &mut fast);
+        assert_eq!(oracle, fast, "no rounding ties in this fixture — must agree exactly");
+        assert_eq!(oracle[0] & 0x0F, 0, "below-range clamps to 0");
+        assert_eq!(oracle[2] & 0x0F, 15, "above-range clamps to qmax");
+    }
+
+    #[test]
+    fn consecutive_pack_roundtrips() {
+        let mut rng = SplitMix64::new(2);
+        for bits in [1u8, 2, 4, 8] {
+            let per = (8 / bits) as usize;
+            let mask = ((1u16 << bits) - 1) as u8;
+            let codes: Vec<u8> =
+                (0..per * 50).map(|_| (rng.next_f32() * 256.0) as u8 & mask).collect();
+            let mut packed = Vec::new();
+            pack_consecutive(&codes, bits, &mut packed);
+            assert_eq!(packed.len(), codes.len() / per);
+            let mut back = vec![0u8; codes.len()];
+            unpack_consecutive(&packed, bits, &mut back);
+            assert_eq!(back, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn channel_group_pack_matches_seed_index_arithmetic() {
+        let mut rng = SplitMix64::new(8);
+        for bits in [1u8, 2, 4] {
+            let per = (8 / bits) as usize;
+            let plane = 13;
+            let mask = ((1u16 << bits) - 1) as u8;
+            let group: Vec<u8> =
+                (0..per * plane).map(|_| (rng.next_f32() * 256.0) as u8 & mask).collect();
+            let mut got = Vec::new();
+            pack_channel_group(&group, plane, bits, &mut got);
+            let mut want = Vec::new();
+            for i in 0..plane {
+                let mut byte = 0u8;
+                for slot in 0..per {
+                    byte |= group[slot * plane + i] << (slot as u8 * bits);
+                }
+                want.push(byte);
+            }
+            assert_eq!(got, want, "bits={bits}");
+            let mut back = vec![0u8; group.len()];
+            unpack_channel_group(&got, plane, bits, &mut back);
+            assert_eq!(back, group, "bits={bits}");
+        }
+    }
+}

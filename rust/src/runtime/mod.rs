@@ -12,10 +12,12 @@
 //! and swapping the engine internals — the API here is the PJRT wrapper's.
 
 pub mod engine;
+pub mod kernels;
 pub mod opprof;
 
 pub use engine::{
     literal_f32, literal_u8, literal_view_f32, literal_view_u8, Engine, Literal, LiteralView,
     Runtime,
 };
+pub use kernels::{KernelKind, KernelVariant};
 pub use opprof::{capture_begin, capture_take, OpEvent, OpProbe, OpProfileRow, OpProfiler};

@@ -82,6 +82,10 @@ struct ProbeEntry {
     sig: Arc<str>,
     hist: Arc<Histogram>,
     elems: u64,
+    /// Kernel variant that executes this op (`runtime::kernels`
+    /// dispatch), recorded so exported tables say which implementation
+    /// produced each histogram.
+    kernel: &'static str,
 }
 
 /// Process-wide registry of op histograms, keyed by op signature.
@@ -98,13 +102,16 @@ impl OpProfiler {
     }
 
     /// Resolve (or create) the probe for an op signature. Called at
-    /// engine-load time only.
-    pub fn probe(&self, sig: &str, elems: u64) -> OpProbe {
+    /// engine-load time only. `kernel` names the dispatched
+    /// `runtime::kernels` variant executing the op (first resolver wins
+    /// for a shared signature — one profiler serves one kernel config).
+    pub fn probe(&self, sig: &str, elems: u64, kernel: &'static str) -> OpProbe {
         let mut reg = self.reg.lock().unwrap();
         let e = reg.entry(sig.to_string()).or_insert_with(|| ProbeEntry {
             sig: Arc::from(sig),
             hist: Arc::new(Histogram::default()),
             elems,
+            kernel,
         });
         OpProbe { sig: Arc::clone(&e.sig), hist: Arc::clone(&e.hist), elems: e.elems }
     }
@@ -119,6 +126,7 @@ impl OpProfiler {
                 let total_s = s.mean() * count as f64;
                 OpProfileRow {
                     sig: e.sig.to_string(),
+                    kernel: e.kernel.to_string(),
                     count,
                     total_s,
                     mean_s: s.mean(),
@@ -153,6 +161,9 @@ impl OpProfiler {
 #[derive(Debug, Clone, PartialEq)]
 pub struct OpProfileRow {
     pub sig: String,
+    /// `runtime::kernels` variant that executed this op
+    /// (`scalar`/`sse2`/`avx2_fma`/`neon`).
+    pub kernel: String,
     pub count: u64,
     pub total_s: f64,
     pub mean_s: f64,
@@ -168,6 +179,7 @@ impl OpProfileRow {
         Json::Obj(
             [
                 ("sig".to_string(), Json::Str(self.sig.clone())),
+                ("kernel".to_string(), Json::Str(self.kernel.clone())),
                 ("count".to_string(), Json::Num(self.count as f64)),
                 ("total_s".to_string(), Json::Num(self.total_s)),
                 ("mean_s".to_string(), Json::Num(self.mean_s)),
@@ -194,8 +206,15 @@ impl OpProfileRow {
             Some(Json::Str(s)) => s.clone(),
             _ => return None,
         };
+        // records written before the kernel layer carry no tag: they
+        // were produced by the scalar interpreter
+        let kernel = match o.get("kernel") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => "scalar".to_string(),
+        };
         Some(OpProfileRow {
             sig,
+            kernel,
             count: num("count") as u64,
             total_s: num("total_s"),
             mean_s: num("mean_s"),
@@ -215,8 +234,8 @@ mod tests {
     #[test]
     fn probe_shares_histogram_by_signature() {
         let p = OpProfiler::new();
-        let a = p.probe("gemm[4x10]", 400);
-        let b = p.probe("gemm[4x10]", 400);
+        let a = p.probe("gemm[4x10]", 400, "scalar");
+        let b = p.probe("gemm[4x10]", 400, "scalar");
         a.record(Duration::from_micros(10));
         b.record(Duration::from_micros(30));
         let t = p.table();
@@ -230,8 +249,8 @@ mod tests {
     #[test]
     fn table_sorted_by_signature() {
         let p = OpProfiler::new();
-        p.probe("unpack_dequant[1x128]", 128).record(Duration::from_micros(5));
-        p.probe("gemm[1x10]", 1280).record(Duration::from_micros(9));
+        p.probe("unpack_dequant[1x128]", 128, "scalar").record(Duration::from_micros(5));
+        p.probe("gemm[1x10]", 1280, "scalar").record(Duration::from_micros(9));
         let sigs: Vec<&str> = p.table().iter().map(|r| r.sig.as_str()).collect();
         assert_eq!(sigs, ["gemm[1x10]", "unpack_dequant[1x128]"]);
     }
@@ -239,7 +258,7 @@ mod tests {
     #[test]
     fn capture_collects_only_between_begin_and_take() {
         let p = OpProfiler::new();
-        let probe = p.probe("quant_pack[2x64]", 256);
+        let probe = p.probe("quant_pack[2x64]", 256, "scalar");
         probe.record(Duration::from_micros(1)); // before capture: dropped
         capture_begin();
         probe.record(Duration::from_micros(2));
@@ -257,12 +276,21 @@ mod tests {
     #[test]
     fn row_json_roundtrips() {
         let p = OpProfiler::new();
-        p.probe("gemm[8x10]", 8 * 10 * 512).record(Duration::from_micros(42));
+        p.probe("gemm[8x10]", 8 * 10 * 512, "avx2_fma").record(Duration::from_micros(42));
         let rows = p.table();
         let j = rows[0].to_json();
         let back = OpProfileRow::parse(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
         assert_eq!(back.sig, rows[0].sig);
+        assert_eq!(back.kernel, "avx2_fma");
         assert_eq!(back.count, rows[0].count);
         assert_eq!(back.elems_per_call, rows[0].elems_per_call);
+    }
+
+    #[test]
+    fn parse_defaults_kernel_to_scalar_for_old_records() {
+        let j = Json::parse(r#"{"sig": "gemm[1x10]", "count": 3}"#).unwrap();
+        let row = OpProfileRow::parse(&j).unwrap();
+        assert_eq!(row.kernel, "scalar", "pre-kernel-layer records were scalar");
+        assert_eq!(row.count, 3);
     }
 }

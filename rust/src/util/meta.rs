@@ -26,13 +26,19 @@ pub fn bench_meta(name: &str, config: &str) -> Json {
     ]))
 }
 
-/// The `host` sub-block: logical CPU count + OS, from std only.
+/// The `host` sub-block: logical CPU count, OS, detected SIMD features,
+/// and the kernel variant the default policy dispatches to — so every
+/// latency record says which implementation produced it.
 fn host_meta() -> Json {
+    use crate::runtime::kernels;
     let cpus =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let kind = kernels::KernelKind::default_kind();
     Json::Obj(BTreeMap::from([
         ("cpus".to_string(), Json::Num(cpus as f64)),
         ("os".to_string(), Json::Str(std::env::consts::OS.to_string())),
+        ("cpu_features".to_string(), Json::Str(kernels::cpu_features().to_string())),
+        ("kernel".to_string(), Json::Str(kernels::resolve(kind).name().to_string())),
     ]))
 }
 
@@ -117,5 +123,13 @@ mod tests {
             host.get("os").and_then(|v| v.as_str()),
             Some(std::env::consts::OS)
         );
+        let kernel = host.get("kernel").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            ["scalar", "sse2", "avx2_fma", "neon"].contains(&kernel),
+            "{kernel}"
+        );
+        // cpu_features is informational and may be empty off x86/arm,
+        // but the key itself must always be present
+        assert!(host.get("cpu_features").and_then(|v| v.as_str()).is_some());
     }
 }

@@ -1,0 +1,242 @@
+//! Kernel-layer integration tests (synthetic REFHLO artifacts — no
+//! `make artifacts` needed).
+//!
+//! Locks ISSUE 9's exactness contract end to end:
+//! * `--kernels scalar` is **bit-identical** to the seed interpreter on
+//!   both data planes (`--pool on|off`) and both io models
+//!   (`--io-model reactor|threads`) — verified against the seed
+//!   formulas written out longhand in this file, not against another
+//!   engine;
+//! * the auto fast path stays inside the epsilon gate: cloud logits
+//!   within 1e-4 of the scalar oracle on identical packed payloads
+//!   (only summation order differs), edge codes within 1 quantization
+//!   step (reciprocal-multiply vs divide at rounding boundaries);
+//! * the bounds hold across bit-widths 1/2/4/8 and payload shapes,
+//!   including the clamp-saturating extremes the dequant LUT must get
+//!   right.
+
+use auto_split::coordinator::{
+    reference_image, write_reference_artifacts, IoModel, NetConfig, RefArtifactSpec, ServeConfig,
+    Server, TcpClient, TcpFrontend,
+};
+use auto_split::profile::SplitMix64;
+use auto_split::runtime::{literal_u8, KernelKind, Runtime};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn write_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("autosplit-kern-{}-{tag}", std::process::id()));
+    write_reference_artifacts(&dir, &RefArtifactSpec::default()).unwrap();
+    dir
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The seed interpreter's whole split pipeline, written out longhand:
+/// divide-and-round quantize, consecutive packing, shift/mask dequant,
+/// left-to-right dot against the SplitMix64 head weights. The scalar
+/// kernel path must reproduce this bit for bit.
+fn seed_logits(spec: &RefArtifactSpec, img: &[f32]) -> Vec<f32> {
+    let per = (8 / spec.bits) as usize;
+    let qmax = ((1u16 << spec.bits) - 1) as f32;
+    let mask = ((1u16 << spec.bits) - 1) as u8;
+    let mut packed = Vec::new();
+    for group in img.chunks_exact(per) {
+        let mut byte = 0u8;
+        for (slot, &v) in group.iter().enumerate() {
+            let code = (v / spec.scale).round().clamp(0.0, qmax) as u8;
+            byte |= code << (slot as u8 * spec.bits);
+        }
+        packed.push(byte);
+    }
+    let mut x = Vec::new();
+    for &b in &packed {
+        for slot in 0..per {
+            x.push(((b >> (slot as u8 * spec.bits)) & mask) as f32 * spec.scale);
+        }
+    }
+    let feat = x.len();
+    let mut rng = SplitMix64::new(spec.seed);
+    let weights: Vec<f32> =
+        (0..spec.classes * feat).map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.1).collect();
+    weights
+        .chunks_exact(feat)
+        .map(|row| {
+            let mut acc = 0.0f32;
+            for (w, v) in row.iter().zip(&x) {
+                acc += w * v;
+            }
+            acc
+        })
+        .collect()
+}
+
+#[test]
+fn scalar_kernels_bit_identical_to_seed_on_both_data_planes() {
+    let spec = RefArtifactSpec::default();
+    for pool in [true, false] {
+        let dir = write_artifacts(if pool { "plane-pool" } else { "plane-owned" });
+        let cfg = ServeConfig::new(&dir).with_kernels(KernelKind::Scalar).with_pool(pool);
+        let server = Server::start(cfg).expect("start server");
+        for seed in 1..=4u64 {
+            let img = reference_image(seed);
+            let res = server.infer(img.clone()).expect("infer");
+            assert_eq!(
+                res.logits,
+                seed_logits(&spec, &img),
+                "pool={pool} seed={seed}: scalar kernels must be the seed path, bitwise"
+            );
+        }
+        server.shutdown();
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn scalar_kernels_bit_identical_to_seed_on_both_io_models() {
+    let spec = RefArtifactSpec::default();
+    for io in [IoModel::Reactor, IoModel::Threads] {
+        let dir = write_artifacts(if io == IoModel::Reactor { "io-reactor" } else { "io-threads" });
+        let cfg = ServeConfig::new(&dir).with_kernels(KernelKind::Scalar);
+        let server = Arc::new(Server::start(cfg).expect("start server"));
+        let net = NetConfig { io_model: io, ..NetConfig::default() };
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net).expect("bind");
+        let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+        for seed in 1..=2u64 {
+            let img = reference_image(seed);
+            let out = client.submit(img.clone()).unwrap().recv().unwrap().unwrap();
+            let res = out.done().expect("tcp request served");
+            assert_eq!(
+                res.logits,
+                seed_logits(&spec, &img),
+                "io={io:?} seed={seed}: scalar kernels over TCP must be the seed path"
+            );
+        }
+        drop(client);
+        frontend.shutdown();
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn auto_cloud_logits_within_epsilon_of_scalar_on_identical_payloads() {
+    // shapes × bit-widths: identical packed payloads into both engines,
+    // so the only divergence is the fast path's summation order
+    let shapes = [(2usize, 64usize, 10usize), (2, 96, 7)];
+    for bits in [1u8, 2, 4, 8] {
+        for &(c2, hw, classes) in &shapes {
+            let dir = std::env::temp_dir()
+                .join(format!("autosplit-kern-eps-{}-{bits}-{hw}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let cloud = dir.join("cloud.hlo.txt");
+            std::fs::write(
+                &cloud,
+                format!(
+                    "REFHLO v1\nprogram: cloud_logits\nbatch: 1\nc2: {c2}\nhw: {hw}\n\
+                     bits: {bits}\nscale: 0.05\nclasses: {classes}\nseed: 42\n"
+                ),
+            )
+            .unwrap();
+            let oracle = Runtime::cpu().unwrap().with_kernels(KernelKind::Scalar);
+            let fast = Runtime::cpu().unwrap().with_kernels(KernelKind::Auto);
+            let co = oracle.load_hlo_text(&cloud).unwrap();
+            let cf = fast.load_hlo_text(&cloud).unwrap();
+
+            let mut rng = SplitMix64::new(1000 + bits as u64);
+            let mut payloads: Vec<Vec<u8>> = (0..3)
+                .map(|_| (0..c2 * hw).map(|_| (rng.next_f32() * 256.0) as u8).collect())
+                .collect();
+            // clamp-saturating extremes: every lane 0 and every lane qmax
+            payloads.push(vec![0x00u8; c2 * hw]);
+            payloads.push(vec![0xFFu8; c2 * hw]);
+            for payload in &payloads {
+                let lit = literal_u8(payload, &[1, c2 as i64, hw as i64]).unwrap();
+                let l0 = co.run_f32(&[lit.clone()]).unwrap();
+                let l1 = cf.run_f32(&[lit]).unwrap();
+                assert_eq!(l0.len(), classes);
+                for (a, b) in l0.iter().zip(&l1) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                        "bits={bits} c2={c2} hw={hw}: {a} vs {b}"
+                    );
+                }
+            }
+            cleanup(&dir);
+        }
+    }
+}
+
+#[test]
+fn auto_edge_codes_within_one_step_of_scalar_across_bits() {
+    for bits in [1u8, 2, 4, 8] {
+        let per = (8 / bits) as usize;
+        let img = 16usize;
+        let hw = img * img / (2 * per);
+        let dir =
+            std::env::temp_dir().join(format!("autosplit-kern-edge-{}-{bits}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let edge = dir.join("edge.hlo.txt");
+        std::fs::write(
+            &edge,
+            format!(
+                "REFHLO v1\nprogram: edge_pack\nimg: {img}\nbits: {bits}\nc2: 2\nhw: {hw}\n\
+                 scale: 0.05\n"
+            ),
+        )
+        .unwrap();
+        let oracle = Runtime::cpu().unwrap().with_kernels(KernelKind::Scalar);
+        let fast = Runtime::cpu().unwrap().with_kernels(KernelKind::Auto);
+        let eo = oracle.load_hlo_text(&edge).unwrap();
+        let ef = fast.load_hlo_text(&edge).unwrap();
+
+        let mut rng = SplitMix64::new(55 + bits as u64);
+        // spread past the clamp range so both ends saturate
+        let image: Vec<f32> = (0..img * img).map(|_| rng.next_f32() * 2.0 - 0.5).collect();
+        let lit =
+            auto_split::runtime::literal_f32(&image, &[1, 1, img as i64, img as i64]).unwrap();
+        let p0 = eo.run_u8(&[lit.clone()]).unwrap();
+        let p1 = ef.run_u8(&[lit]).unwrap();
+        assert_eq!(p0.len(), p1.len());
+        let mask = ((1u16 << bits) - 1) as u8;
+        for (i, (&a, &b)) in p0.iter().zip(&p1).enumerate() {
+            for slot in 0..per {
+                let ca = (a >> (slot as u8 * bits)) & mask;
+                let cb = (b >> (slot as u8 * bits)) & mask;
+                assert!(
+                    (ca as i16 - cb as i16).abs() <= 1,
+                    "bits={bits} byte {i} slot {slot}: {ca} vs {cb}"
+                );
+            }
+        }
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn auto_end_to_end_close_to_scalar_pipeline() {
+    // full pipeline (edge quantize + cloud gemm both on the fast path):
+    // a boundary-straddling pixel may quantize one code apart, moving a
+    // logit by up to scale·|w| — so this end-to-end gate is looser than
+    // the identical-payload 1e-4 gate above, and the predicted class
+    // must agree outright
+    let dir_s = write_artifacts("e2e-scalar");
+    let dir_a = write_artifacts("e2e-auto");
+    let scalar =
+        Server::start(ServeConfig::new(&dir_s).with_kernels(KernelKind::Scalar)).unwrap();
+    let auto = Server::start(ServeConfig::new(&dir_a).with_kernels(KernelKind::Auto)).unwrap();
+    for seed in 1..=8u64 {
+        let img = reference_image(seed);
+        let rs = scalar.infer(img.clone()).unwrap();
+        let ra = auto.infer(img).unwrap();
+        for (a, b) in rs.logits.iter().zip(&ra.logits) {
+            assert!((a - b).abs() <= 1e-2, "seed={seed}: {a} vs {b}");
+        }
+        assert_eq!(rs.class, ra.class, "seed={seed}: kernel choice must not flip the class");
+    }
+    scalar.shutdown();
+    auto.shutdown();
+    cleanup(&dir_s);
+    cleanup(&dir_a);
+}
