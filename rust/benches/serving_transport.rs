@@ -1,0 +1,214 @@
+//! Transport-layer benchmark: owned copy vs scatter-gather vs depth-N
+//! pipelined uplink vs simulated RDMA, plus the real-socket throughput
+//! ceiling. Writes `BENCH_transport.json` for the CI trajectory with
+//! the PR's acceptance gates as booleans:
+//!
+//! * `pipelined_beats_serial_p50` — at a constrained (3G-class) uplink
+//!   with a modeled per-request edge cost, depth-4 pipelining must give
+//!   a strictly better end-to-end p50 than the serial depth-1 chain
+//!   (transmit of frame `i` overlaps packing of frame `i+1`).
+//! * `wire_parity` — every uplink transport bills identical wire bytes
+//!   per request (the modeled `Link` is the oracle).
+//! * `exactly_once` — completed + shed + errors == offered on every row.
+//! * `rdma_sim_rps_ge_tcp` — the zero-copy registered-ring uplink's
+//!   throughput ceiling is at least the socket front-end's.
+//!
+//! Section A pins the adaptive bank's `b4` plan (12 ms modeled edge,
+//! 8225 B frames) so pipelining has real pack time to overlap; the
+//! schedule is a single burst so the edge workers form full
+//! `--link-chain` chains deterministically. Section B replays the same
+//! burst through a real TCP front-end and through the in-process
+//! rdma-sim uplink on the tiny static artifacts.
+//!
+//! Runs entirely on synthetic REFHLO artifacts — no `make artifacts`.
+
+use auto_split::coordinator::{
+    replay, transport_table, write_adaptive_bank, write_reference_artifacts, AdaptiveBankSpec,
+    AdaptiveConfig, Arrival, Client, LoadReport, NetConfig, RefArtifactSpec, ServeConfig, Server,
+    TcpClient, TcpFrontend, TransportKind,
+};
+use auto_split::sim::Uplink;
+use auto_split::util::{bench_meta, Json};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("autosplit-transport-{tag}-{}", std::process::id()))
+}
+
+fn burst(n: usize, pool: usize) -> Vec<Arrival> {
+    (0..n).map(|i| Arrival { at: Duration::ZERO, image: i % pool }).collect()
+}
+
+fn row_json(config: &str, transport: &str, depth: usize, pool: bool, r: &LoadReport) -> Json {
+    jobj(vec![
+        ("config", Json::Str(config.to_string())),
+        ("transport", Json::Str(transport.to_string())),
+        ("depth", Json::Num(depth as f64)),
+        ("pool", Json::Bool(pool)),
+        ("p50_ms", Json::Num(r.quantile(0.5) * 1e3)),
+        ("p99_ms", Json::Num(r.quantile(0.99) * 1e3)),
+        ("achieved_rps", Json::Num(r.achieved_rps)),
+        ("tx_bytes_per_req", Json::Num(r.tx_bytes_per_completed())),
+        ("requests", Json::Num(r.requests as f64)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("errors", Json::Num(r.errors as f64)),
+    ])
+}
+
+fn main() {
+    let arg = |k: &str| std::env::args().skip_while(|a| a != k).nth(1);
+    let n: usize = arg("--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let nb: usize = arg("--tput-requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_transport.json".to_string());
+
+    // ---- section A: pinned-plan burst over a 3G-class uplink ---------
+    let bank_dir = tmp("bank");
+    let spec = AdaptiveBankSpec::default();
+    let bank = write_adaptive_bank(&bank_dir, &spec).expect("write bank");
+    let images: Vec<Vec<f32>> = (0..16u64).map(|i| spec.image(900 + i)).collect();
+    let sched = burst(n, images.len());
+
+    let run = |kind: TransportKind, depth: usize, pool: bool| -> LoadReport {
+        let mut cfg = ServeConfig::new("unused-when-adaptive");
+        cfg.adaptive = Some(AdaptiveConfig::new(bank.clone(), &bank_dir).with_pinned("b4"));
+        cfg.uplink = Uplink::cellular_3g();
+        cfg.pool = pool;
+        cfg.transport = kind;
+        cfg.pipeline_depth = depth;
+        cfg.scheduler.max_delay = Duration::from_millis(200);
+        let server = Server::start(cfg).expect("server");
+        let _ = server.infer(images[0].clone()); // warm-up (own chain)
+        let report = replay(&server, &images, &sched).expect("replay");
+        server.shutdown();
+        report
+    };
+
+    let rows: Vec<(String, usize, LoadReport)> = vec![
+        ("link-owned".to_string(), 1, run(TransportKind::Link, 1, false)),
+        ("link-sg".to_string(), 1, run(TransportKind::Link, 1, true)),
+        ("link-sg".to_string(), 4, run(TransportKind::Link, 4, true)),
+        ("rdma-sim".to_string(), 4, run(TransportKind::RdmaSim, 4, true)),
+    ];
+    println!("{}", transport_table("uplink transports, pinned b4 @ 3G, burst", &rows));
+    let _ = std::fs::remove_dir_all(&bank_dir);
+
+    let serial = &rows[1].2; // link-sg depth 1: the scatter-gather oracle
+    let piped = &rows[2].2; // link-sg depth 4
+    let serial_p50 = serial.quantile(0.5);
+    let piped_p50 = piped.quantile(0.5);
+    let piped_wins = piped_p50 < serial_p50;
+    let wire_ok = rows
+        .iter()
+        .all(|(_, _, r)| r.tx_bytes_per_completed() == serial.tx_bytes_per_completed());
+    let accounted = rows
+        .iter()
+        .all(|(_, _, r)| r.fully_accounted() && r.shed == 0 && r.errors == 0 && r.completed == n);
+
+    // ---- section B: throughput ceiling, socket front-end vs rdma-sim -
+    let art_dir = tmp("art");
+    let tiny = RefArtifactSpec::default();
+    write_reference_artifacts(&art_dir, &tiny).expect("write artifacts");
+    let timages: Vec<Vec<f32>> = (0..8u64).map(|i| tiny.image(100 + i)).collect();
+    let tsched = burst(nb, timages.len());
+
+    let tcp_report;
+    {
+        let server = Arc::new(Server::start(ServeConfig::new(&art_dir)).expect("server"));
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), NetConfig::default())
+            .expect("bind front-end");
+        let client = TcpClient::connect(frontend.local_addr()).expect("connect");
+        let _ = client.submit(timages[0].clone()).expect("warm-up").recv();
+        tcp_report = replay(&client, &timages, &tsched).expect("tcp replay");
+        drop(client);
+        let _ = frontend.shutdown();
+    }
+    let rdma_report;
+    {
+        let mut cfg = ServeConfig::new(&art_dir);
+        cfg.transport = TransportKind::RdmaSim;
+        cfg.pipeline_depth = 4;
+        let server = Server::start(cfg).expect("server");
+        let _ = server.infer(timages[0].clone()); // warm-up
+        rdma_report = replay(&server, &timages, &tsched).expect("rdma-sim replay");
+        server.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&art_dir);
+
+    let tput: Vec<(String, usize, LoadReport)> = vec![
+        ("tcp".to_string(), 1, tcp_report),
+        ("rdma-sim".to_string(), 4, rdma_report),
+    ];
+    println!("{}", transport_table("throughput ceiling, burst over static artifacts", &tput));
+    let tcp_rps = tput[0].2.achieved_rps;
+    let rdma_rps = tput[1].2.achieved_rps;
+    let rdma_ok = rdma_rps >= tcp_rps;
+    let tput_once = tput.iter().all(|(_, _, r)| r.fully_accounted() && r.errors == 0);
+
+    // ---- record + gates ----------------------------------------------
+    let mut rows_json: Vec<Json> = rows
+        .iter()
+        .map(|(name, depth, r)| {
+            let pool = name != "link-owned";
+            row_json("pinned-b4-3g", name, *depth, pool, r)
+        })
+        .collect();
+    for (name, depth, r) in &tput {
+        rows_json.push(row_json("static-tput", name, *depth, true, r));
+    }
+
+    let json = jobj(vec![
+        ("bench", Json::Str("transport".to_string())),
+        ("requests", Json::Num(n as f64)),
+        ("tput_requests", Json::Num(nb as f64)),
+        ("rows", Json::Arr(rows_json)),
+        ("serial_p50_ms", Json::Num(serial_p50 * 1e3)),
+        ("pipelined_p50_ms", Json::Num(piped_p50 * 1e3)),
+        ("pipelined_beats_serial_p50", Json::Bool(piped_wins)),
+        ("wire_parity", Json::Bool(wire_ok)),
+        ("exactly_once", Json::Bool(accounted && tput_once)),
+        ("tcp_rps", Json::Num(tcp_rps)),
+        ("rdma_sim_rps", Json::Num(rdma_rps)),
+        ("rdma_sim_rps_ge_tcp", Json::Bool(rdma_ok)),
+        (
+            "meta",
+            bench_meta(
+                "transport",
+                &format!("pinned b4 bank @ 3G uplink, burst n={n}, tput burst nb={nb}"),
+            ),
+        ),
+    ]);
+    let mut doc = json.to_string_pretty();
+    doc.push('\n');
+    std::fs::write(&json_path, doc).expect("write bench json");
+    println!("wrote {json_path}");
+    println!(
+        "gates: pipelined_beats_serial_p50={piped_wins} (p50 {:.2} ms vs {:.2} ms), \
+         wire_parity={wire_ok}, exactly_once={}, rdma_sim_rps_ge_tcp={rdma_ok} \
+         ({rdma_rps:.0} vs {tcp_rps:.0} rps)",
+        piped_p50 * 1e3,
+        serial_p50 * 1e3,
+        accounted && tput_once,
+    );
+
+    assert!(accounted && tput_once, "every request must be answered or shed exactly once");
+    assert!(wire_ok, "uplink transports must bill identical wire bytes per request");
+    assert!(
+        piped_wins,
+        "depth-4 pipelining must strictly beat the serial p50 at a constrained uplink \
+         ({:.2} ms vs {:.2} ms)",
+        piped_p50 * 1e3,
+        serial_p50 * 1e3,
+    );
+    assert!(
+        rdma_ok,
+        "rdma-sim throughput ceiling must be at least the tcp front-end's \
+         ({rdma_rps:.0} rps vs {tcp_rps:.0} rps)",
+    );
+}

@@ -161,6 +161,128 @@ impl BufPool {
     }
 }
 
+/// Traffic counters of one [`BufRing`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RingStats {
+    /// Buffers leased from the ring (ring pop or pool fallthrough).
+    pub leases: u64,
+    /// Leases served straight off the ring — no pool lock was touched.
+    pub ring_hits: u64,
+}
+
+/// A fixed-depth ring of registered buffers fronting a [`BufPool`] —
+/// the memory-region registration idiom from RDMA stacks (a transport
+/// posts only from buffers it registered up front; `rust-ibverbs`'
+/// `memory/pool.rs`). A [`super::transport::Transport`] or a network
+/// connection leases send/recv buffers from its ring and redeems them
+/// on completion; buffers that come back stay resident on the ring (up
+/// to `depth`), so at steady state a lease touches no shared pool lock
+/// at all. The ring starts empty and registers just-in-time on redeem
+/// (`memory/jit.rs`) unless built [`BufRing::prefilled`]; when the ring
+/// is dry or the ask outgrows the registered capacity, the lease falls
+/// through to the pool — depth is a working-set hint, never a
+/// correctness limit.
+pub struct BufRing {
+    pool: Arc<BufPool>,
+    ring: Mutex<Vec<Vec<u8>>>,
+    depth: usize,
+    cap: usize,
+    leases: AtomicU64,
+    ring_hits: AtomicU64,
+}
+
+impl BufRing {
+    /// An empty ring registering up to `depth` buffers of capacity ≥
+    /// `cap` as they are redeemed (just-in-time registration — nothing
+    /// is allocated until traffic flows, so per-connection rings stay
+    /// free for idle connections).
+    pub fn new(pool: Arc<BufPool>, depth: usize, cap: usize) -> BufRing {
+        BufRing {
+            pool,
+            ring: Mutex::new(Vec::new()),
+            depth: depth.max(1),
+            cap: cap.max(MIN_CLASS_BYTES),
+            leases: AtomicU64::new(0),
+            ring_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// A ring with all `depth` buffers registered (checked out of the
+    /// pool) up front — the uplink-sender shape, where the first post
+    /// must already be zero-allocation.
+    pub fn prefilled(pool: Arc<BufPool>, depth: usize, cap: usize) -> BufRing {
+        let ring = BufRing::new(pool, depth, cap);
+        let bufs: Vec<Vec<u8>> = (0..ring.depth).map(|_| ring.pool.checkout(ring.cap)).collect();
+        *ring.ring.lock().unwrap() = bufs;
+        ring
+    }
+
+    /// Registered per-buffer capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Registered ring depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Buffers currently resident on the ring.
+    pub fn resident(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Lease a cleared buffer with capacity ≥ `cap`: off the ring when
+    /// the ask fits the registered capacity and a buffer is resident,
+    /// else through the pool.
+    pub fn lease(&self, cap: usize) -> Vec<u8> {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        if cap <= self.cap {
+            if let Some(mut buf) = self.ring.lock().unwrap().pop() {
+                self.ring_hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                return buf;
+            }
+        }
+        self.pool.checkout(cap.max(self.cap))
+    }
+
+    /// Redeem a leased buffer: back onto the ring up to its depth when
+    /// the buffer covers the registered capacity, else reshelved
+    /// through the pool.
+    pub fn redeem(&self, buf: Vec<u8>) {
+        if buf.capacity() >= self.cap {
+            let mut ring = self.ring.lock().unwrap();
+            if ring.len() < self.depth {
+                ring.push(buf);
+                return;
+            }
+        }
+        self.pool.checkin(buf);
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> RingStats {
+        RingStats {
+            leases: self.leases.load(Ordering::Relaxed),
+            ring_hits: self.ring_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for BufRing {
+    /// Deregistration reshelves the resident buffers through the pool:
+    /// closing a connection (or tearing down a transport) never leaks
+    /// pooled capacity.
+    fn drop(&mut self) {
+        if let Ok(ring) = self.ring.get_mut() {
+            for buf in std::mem::take(ring) {
+                self.pool.checkin(buf);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +396,81 @@ mod tests {
     #[test]
     fn empty_stats_hit_rate_is_zero() {
         assert_eq!(PoolStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn ring_registers_just_in_time_and_then_serves_locally() {
+        let pool = BufPool::new(true);
+        let ring = BufRing::new(Arc::clone(&pool), 2, 1024);
+        assert_eq!(ring.resident(), 0, "JIT ring starts empty");
+        // first lease falls through to the pool…
+        let buf = ring.lease(100);
+        assert!(buf.capacity() >= 1024, "fallthrough registers full ring capacity");
+        assert_eq!(ring.stats(), RingStats { leases: 1, ring_hits: 0 });
+        // …and the redeem registers it on the ring
+        ring.redeem(buf);
+        assert_eq!(ring.resident(), 1);
+        let buf = ring.lease(512);
+        assert!(buf.is_empty() && buf.capacity() >= 512);
+        assert_eq!(ring.stats(), RingStats { leases: 2, ring_hits: 1 });
+        ring.redeem(buf);
+    }
+
+    #[test]
+    fn prefilled_ring_hits_from_the_first_lease() {
+        let pool = BufPool::new(true);
+        let ring = BufRing::prefilled(Arc::clone(&pool), 3, 256);
+        assert_eq!(ring.resident(), 3);
+        let a = ring.lease(64);
+        let b = ring.lease(256);
+        assert_eq!(ring.stats(), RingStats { leases: 2, ring_hits: 2 });
+        assert_eq!(ring.resident(), 1);
+        ring.redeem(a);
+        ring.redeem(b);
+        assert_eq!(ring.resident(), 3, "redeems refill up to depth");
+    }
+
+    #[test]
+    fn ring_overflow_and_oversize_route_through_the_pool() {
+        let pool = BufPool::new(true);
+        let ring = BufRing::prefilled(Arc::clone(&pool), 1, 256);
+        // an ask beyond the registered capacity bypasses the ring
+        let big = ring.lease(1 << 16);
+        assert!(big.capacity() >= 1 << 16);
+        assert_eq!(ring.stats().ring_hits, 0);
+        // its redeem overflows the full ring and reshelves via the pool
+        let small = ring.lease(64);
+        ring.redeem(small);
+        ring.redeem(big);
+        assert_eq!(ring.resident(), 1, "depth bounds residency");
+        assert!(pool.stats().checkins >= 1, "overflow went back to the pool");
+    }
+
+    #[test]
+    fn dropping_a_ring_reshelves_resident_buffers() {
+        let pool = BufPool::new(true);
+        {
+            let ring = BufRing::prefilled(Arc::clone(&pool), 2, 256);
+            assert_eq!(ring.resident(), 2);
+        }
+        // deregistration put both buffers back on the shelf
+        assert_eq!(pool.stats().checkins, 2);
+        let a = pool.checkout(256);
+        let b = pool.checkout(256);
+        assert_eq!(pool.stats().hits, 2, "next checkouts are warm");
+        drop((a, b));
+    }
+
+    #[test]
+    fn ring_over_disabled_pool_still_recycles_registered_buffers() {
+        // the ring is itself the registration: even when the backing
+        // pool drops every checkin, redeemed ring buffers stay resident
+        let pool = BufPool::new(false);
+        let ring = BufRing::prefilled(Arc::clone(&pool), 2, 128);
+        let buf = ring.lease(64);
+        ring.redeem(buf);
+        assert_eq!(ring.resident(), 2);
+        assert_eq!(ring.lease(64).capacity() >= 64, true);
+        assert_eq!(ring.stats().ring_hits, 2);
     }
 }

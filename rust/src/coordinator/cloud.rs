@@ -2,6 +2,13 @@
 //! executable per batch size (PJRT has no dynamic shapes); a batch of k
 //! requests runs on the smallest engine with capacity ≥ k, padding with
 //! zeros.
+//!
+//! The worker knows the plan's **full batch set** independently of which
+//! engines are currently resident: engines may load lazily (and be
+//! evicted by the shard's LRU cache when `--engine-cache` caps
+//! residency), but `engine_batch_for` always selects over the full set —
+//! so padding decisions, and therefore logits, are identical whether an
+//! engine was eagerly loaded, lazily loaded, or reloaded after eviction.
 
 use super::protocol::ActivationPacket;
 use crate::runtime::{literal_view_u8, Engine};
@@ -10,8 +17,10 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 pub struct CloudWorker {
-    /// batch size → engine
+    /// batch size → resident engine (a subset of `batch_set`)
     engines: BTreeMap<usize, Engine>,
+    /// every compiled batch size the plan ships, loaded or not
+    batch_set: Vec<usize>,
     /// packed payload shape (C/2, H·W)
     packed_shape: (usize, usize),
     classes: usize,
@@ -24,11 +33,27 @@ impl CloudWorker {
         classes: usize,
     ) -> Self {
         assert!(!engines.is_empty());
-        CloudWorker { engines, packed_shape, classes }
+        let batch_set = engines.keys().copied().collect();
+        CloudWorker { engines, batch_set, packed_shape, classes }
+    }
+
+    /// A worker that knows its full batch set up front but holds no
+    /// resident engine yet — the lazy-loading shape. `batch_set` must be
+    /// non-empty; it is sorted and deduped here.
+    pub fn with_batch_set(
+        batch_set: Vec<usize>,
+        packed_shape: (usize, usize),
+        classes: usize,
+    ) -> Self {
+        let mut batch_set = batch_set;
+        batch_set.sort_unstable();
+        batch_set.dedup();
+        assert!(!batch_set.is_empty());
+        CloudWorker { engines: BTreeMap::new(), batch_set, packed_shape, classes }
     }
 
     pub fn max_batch(&self) -> usize {
-        *self.engines.keys().last().unwrap()
+        *self.batch_set.last().unwrap()
     }
 
     /// Logits per request this worker's head produces.
@@ -36,13 +61,38 @@ impl CloudWorker {
         self.classes
     }
 
-    /// Smallest compiled batch size that fits `k` requests.
+    /// Smallest compiled batch size that fits `k` requests — selected
+    /// over the **full** batch set, not the resident engines, so lazy
+    /// loading and eviction can never change a padding decision.
     pub fn engine_batch_for(&self, k: usize) -> usize {
-        self.engines
-            .range(k..)
-            .next()
-            .map(|(&b, _)| b)
+        self.batch_set
+            .iter()
+            .copied()
+            .find(|&b| b >= k)
             .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Is the engine for compiled batch size `b` resident?
+    pub fn is_loaded(&self, b: usize) -> bool {
+        self.engines.contains_key(&b)
+    }
+
+    /// Make an engine resident. `b` must belong to the batch set.
+    pub fn insert_engine(&mut self, b: usize, engine: Engine) {
+        debug_assert!(self.batch_set.contains(&b), "batch {b} outside the plan's batch set");
+        self.engines.insert(b, engine);
+    }
+
+    /// Drop a resident engine (LRU eviction). Returns whether an engine
+    /// was actually resident. The batch set is unchanged — the engine
+    /// can be reloaded on the next batch that needs it.
+    pub fn evict_engine(&mut self, b: usize) -> bool {
+        self.engines.remove(&b).is_some()
+    }
+
+    /// Number of resident engines.
+    pub fn loaded(&self) -> usize {
+        self.engines.len()
     }
 
     /// Run a batch of packets; returns per-request logits + compute time.
@@ -68,7 +118,9 @@ impl CloudWorker {
     /// the caller's pooled `scratch`, and the engine writes all `B ×
     /// classes` logits (padding rows included) into the caller's reusable
     /// `logits` buffer. Returns the compiled engine batch used + compute
-    /// time. Bit-identical to [`CloudWorker::infer_batch`].
+    /// time. Bit-identical to [`CloudWorker::infer_batch`]. Fails if the
+    /// selected engine is not resident (the shard ensures residency
+    /// before dispatching a batch).
     pub fn infer_batch_into(
         &self,
         payloads: &[&[u8]],

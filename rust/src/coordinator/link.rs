@@ -115,12 +115,19 @@ impl Link {
         Ok((wire_bytes, decoded, t0.elapsed()))
     }
 
-    /// Send a packet through the link: serialize, model the wire,
-    /// deserialize on the far side. A stand-alone transfer pays the full
-    /// uplink RTT.
-    pub fn transmit(&self, packet: &ActivationPacket) -> Result<Transfer> {
+    /// One transfer whose share of the chain RTT is decided by the
+    /// caller: `charge_rtt` pays the full uplink RTT iff the frame moves
+    /// bytes — exactly the per-element accounting `transmit_batch`
+    /// applies, exposed so a [`super::transport::Transport`] can post
+    /// frames one at a time without changing any number. `transmit` and
+    /// `transmit_batch` delegate here, so the two paths cannot drift.
+    pub fn transmit_chained(
+        &self,
+        packet: &ActivationPacket,
+        charge_rtt: bool,
+    ) -> Result<Transfer> {
         let (wire_bytes, decoded, codec_time) = self.codec_roundtrip(packet)?;
-        let rtt = if wire_bytes > 0 {
+        let rtt = if charge_rtt && wire_bytes > 0 {
             Duration::from_secs_f64(self.uplink.rtt_s)
         } else {
             Duration::ZERO
@@ -132,6 +139,13 @@ impl Link {
         Ok(Transfer { packet: decoded, wire_bytes, net_time, rtt, codec_time })
     }
 
+    /// Send a packet through the link: serialize, model the wire,
+    /// deserialize on the far side. A stand-alone transfer pays the full
+    /// uplink RTT.
+    pub fn transmit(&self, packet: &ActivationPacket) -> Result<Transfer> {
+        self.transmit_chained(packet, true)
+    }
+
     /// Send a chain of packets that share one connection round: the RTT is
     /// charged **once for the whole batch** (on the first transfer), each
     /// packet pays its own bandwidth term. Total modeled time equals
@@ -140,18 +154,9 @@ impl Link {
         let mut out = Vec::with_capacity(packets.len());
         let mut rtt_charged = false;
         for packet in packets {
-            let (wire_bytes, decoded, codec_time) = self.codec_roundtrip(packet)?;
-            let rtt = if !rtt_charged && wire_bytes > 0 {
-                rtt_charged = true;
-                Duration::from_secs_f64(self.uplink.rtt_s)
-            } else {
-                Duration::ZERO
-            };
-            let net_time = rtt + Duration::from_secs_f64(self.uplink.payload_seconds(wire_bytes));
-            if self.delay == DelayMode::RealSleep {
-                std::thread::sleep(net_time);
-            }
-            out.push(Transfer { packet: decoded, wire_bytes, net_time, rtt, codec_time });
+            let t = self.transmit_chained(packet, !rtt_charged)?;
+            rtt_charged = rtt_charged || !t.rtt.is_zero();
+            out.push(t);
         }
         Ok(out)
     }
@@ -182,12 +187,12 @@ impl Link {
         Ok((wire_bytes, t0.elapsed()))
     }
 
-    /// Scatter-gather [`Link::transmit`]: header and payload travel as
-    /// separate segments and the payload never leaves its buffer. Wire
-    /// accounting and modeled time are identical to the owned path.
-    pub fn transmit_sg(&self, seg: Segments<'_>) -> Result<SgTransfer> {
+    /// Scatter-gather dual of [`Link::transmit_chained`]: the caller
+    /// decides this frame's share of the chain RTT (paid iff the frame
+    /// moves bytes). `transmit_sg`/`transmit_batch_sg` delegate here.
+    pub fn transmit_sg_chained(&self, seg: Segments<'_>, charge_rtt: bool) -> Result<SgTransfer> {
         let (wire_bytes, codec_time) = self.codec_sg(seg)?;
-        let rtt = if wire_bytes > 0 {
+        let rtt = if charge_rtt && wire_bytes > 0 {
             Duration::from_secs_f64(self.uplink.rtt_s)
         } else {
             Duration::ZERO
@@ -199,6 +204,13 @@ impl Link {
         Ok(SgTransfer { wire_bytes, net_time, rtt, codec_time })
     }
 
+    /// Scatter-gather [`Link::transmit`]: header and payload travel as
+    /// separate segments and the payload never leaves its buffer. Wire
+    /// accounting and modeled time are identical to the owned path.
+    pub fn transmit_sg(&self, seg: Segments<'_>) -> Result<SgTransfer> {
+        self.transmit_sg_chained(seg, true)
+    }
+
     /// Scatter-gather [`Link::transmit_batch`]: one connection round for
     /// the chain (RTT charged once, on the first frame), each frame pays
     /// its own bandwidth term, and no frame is ever concatenated.
@@ -206,18 +218,9 @@ impl Link {
         let mut out = Vec::with_capacity(segs.len());
         let mut rtt_charged = false;
         for seg in segs {
-            let (wire_bytes, codec_time) = self.codec_sg(*seg)?;
-            let rtt = if !rtt_charged && wire_bytes > 0 {
-                rtt_charged = true;
-                Duration::from_secs_f64(self.uplink.rtt_s)
-            } else {
-                Duration::ZERO
-            };
-            let net_time = rtt + Duration::from_secs_f64(self.uplink.payload_seconds(wire_bytes));
-            if self.delay == DelayMode::RealSleep {
-                std::thread::sleep(net_time);
-            }
-            out.push(SgTransfer { wire_bytes, net_time, rtt, codec_time });
+            let t = self.transmit_sg_chained(*seg, !rtt_charged)?;
+            rtt_charged = rtt_charged || !t.rtt.is_zero();
+            out.push(t);
         }
         Ok(out)
     }
@@ -347,6 +350,41 @@ mod tests {
         assert!(asc.wire_bytes > 3 * bin.wire_bytes);
         // byte-for-byte the same wire accounting as the owned path
         assert_eq!(asc.wire_bytes, rpc.transmit(&p).unwrap().wire_bytes);
+    }
+
+    #[test]
+    fn chained_calls_reproduce_batch_accounting_exactly() {
+        // the per-frame primitives a Transport posts through must agree
+        // bit-for-bit with the batch loops they were extracted from
+        let link = Link::new(Uplink::cellular_3g());
+        let packets: Vec<ActivationPacket> = [64usize, 512, 128].iter().map(|&n| pkt(n)).collect();
+        let batch = link.transmit_batch(&packets).unwrap();
+        let mut rtt_charged = false;
+        for (p, b) in packets.iter().zip(&batch) {
+            let t = link.transmit_chained(p, !rtt_charged).unwrap();
+            rtt_charged = rtt_charged || !t.rtt.is_zero();
+            assert_eq!(t.wire_bytes, b.wire_bytes);
+            assert_eq!(t.net_time, b.net_time);
+            assert_eq!(t.rtt, b.rtt);
+            assert_eq!(t.packet, b.packet);
+        }
+        // scatter-gather dual
+        let headers: Vec<_> =
+            packets.iter().map(|p| p.header().encode(p.payload.len()).unwrap()).collect();
+        let segs: Vec<Segments<'_>> = packets
+            .iter()
+            .zip(&headers)
+            .map(|(p, h)| Segments { header: h, payload: &p.payload })
+            .collect();
+        let sg_batch = link.transmit_batch_sg(&segs).unwrap();
+        let mut rtt_charged = false;
+        for (seg, b) in segs.iter().zip(&sg_batch) {
+            let t = link.transmit_sg_chained(*seg, !rtt_charged).unwrap();
+            rtt_charged = rtt_charged || !t.rtt.is_zero();
+            assert_eq!(t.wire_bytes, b.wire_bytes);
+            assert_eq!(t.net_time, b.net_time);
+            assert_eq!(t.rtt, b.rtt);
+        }
     }
 
     #[test]

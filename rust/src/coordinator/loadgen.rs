@@ -618,6 +618,29 @@ pub fn policy_table(title: &str, rows: &[(String, LoadReport)]) -> String {
     t.render()
 }
 
+/// Render a transport/pipelining comparison from named load reports —
+/// the artifact of a `--transport`/`--pipeline-depth` sweep. Rows are
+/// `(transport, depth, report)`.
+pub fn transport_table(title: &str, rows: &[(String, usize, LoadReport)]) -> String {
+    let mut t = Table::new(
+        title,
+        &["transport", "depth", "achieved rps", "p50 ms", "p99 ms", "tx B/req", "done", "errors"],
+    );
+    for (name, depth, r) in rows {
+        t.row(&[
+            name.clone(),
+            depth.to_string(),
+            format!("{:.0}", r.achieved_rps),
+            format!("{:.2}", r.quantile(0.5) * 1e3),
+            format!("{:.2}", r.quantile(0.99) * 1e3),
+            format!("{:.0}", r.tx_bytes_per_completed()),
+            r.completed.to_string(),
+            r.errors.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -833,6 +856,27 @@ mod tests {
         );
         assert!(s.contains("adaptive") && s.contains("static-ble"), "{s}");
         assert!(s.contains("switches"), "{s}");
+    }
+
+    #[test]
+    fn transport_table_renders_depth_and_bytes() {
+        let r = LoadReport {
+            offered_rps: 100.0,
+            achieved_rps: 95.0,
+            requests: 20,
+            completed: 20,
+            shed: 0,
+            errors: 0,
+            tx_bytes: 20 * 161,
+            latencies: vec![0.004; 20],
+        };
+        let s = transport_table(
+            "uplink transports",
+            &[("link".into(), 1, r.clone()), ("rdma-sim".into(), 4, r)],
+        );
+        assert!(s.contains("link") && s.contains("rdma-sim"), "{s}");
+        assert!(s.contains("depth"), "{s}");
+        assert!(s.contains("161"), "{s}");
     }
 
     #[test]

@@ -131,6 +131,12 @@ pub struct ServingStats {
     /// Cloud batches that mixed plans — the invariant counter; the
     /// dispatcher closes batches at plan boundaries, so this stays 0.
     pub mid_batch_swaps: u64,
+    /// Cloud engines compiled on demand across shards (lazy first-use
+    /// loads plus reloads after an eviction).
+    pub engine_loads: u64,
+    /// Cloud engines dropped by the per-shard `--engine-cache` LRU
+    /// (0 with an uncapped cache).
+    pub engine_evictions: u64,
     /// Active plan index at snapshot time.
     pub active_plan: u64,
     /// Link estimator's bandwidth estimate at snapshot time, bits/s.
@@ -260,7 +266,8 @@ impl ServingStats {
              queue  depth={} peak={}  slo_closes={}  shards: [{}]  edges: [{}]\n\
              adaptive est={:.2}Mbps rtt={:.1}ms active=p{} switches={} \
              mid_batch_swaps={}  plans: [{}]\n\
-             pool   hits={} misses={} hit_rate={:.1}% reused={} bytes\n\
+             pool   hits={} misses={} hit_rate={:.1}% reused={} bytes  \
+             engines loads={} evictions={}\n\
              tcp    accepted={} active={} read_errors={} frame_rejects={} \
              requests={} responses={}\n\
              drift  ratio={:.3} stale={}  spans_dropped={}\n\
@@ -294,6 +301,8 @@ impl ServingStats {
             self.pool_misses,
             100.0 * self.pool_hit_rate(),
             self.pool_bytes_reused,
+            self.engine_loads,
+            self.engine_evictions,
             self.tcp_accepted,
             self.tcp_active,
             self.tcp_read_errors,
@@ -341,6 +350,8 @@ impl ServingStats {
                 ("pool_hits".to_string(), Json::Num(self.pool_hits as f64)),
                 ("pool_misses".to_string(), Json::Num(self.pool_misses as f64)),
                 ("pool_bytes_reused".to_string(), Json::Num(self.pool_bytes_reused as f64)),
+                ("engine_loads".to_string(), Json::Num(self.engine_loads as f64)),
+                ("engine_evictions".to_string(), Json::Num(self.engine_evictions as f64)),
                 ("tcp_accepted".to_string(), Json::Num(self.tcp_accepted as f64)),
                 ("tcp_active".to_string(), Json::Num(self.tcp_active as f64)),
                 ("tcp_read_errors".to_string(), Json::Num(self.tcp_read_errors as f64)),
@@ -570,6 +581,24 @@ mod tests {
                 assert!(matches!(o.get("trace_spans_dropped"), Some(Json::Num(v)) if *v == 7.0));
                 assert!(matches!(o.get("drift_ratio"), Some(Json::Num(v)) if *v == 1.25));
                 assert_eq!(o.get("drift_stale"), Some(&Json::Bool(true)));
+            }
+            other => panic!("not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_and_json_include_engine_cache_counters() {
+        let mut s = ServingStats::default();
+        s.engine_loads = 5;
+        s.engine_evictions = 2;
+        let r = s.report();
+        assert!(r.contains("engines loads=5 evictions=2"), "{r}");
+        let doc = s.to_json().to_string_pretty();
+        let parsed = Json::parse(&doc).expect("stats json must parse");
+        match parsed {
+            Json::Obj(o) => {
+                assert!(matches!(o.get("engine_loads"), Some(Json::Num(v)) if *v == 5.0));
+                assert!(matches!(o.get("engine_evictions"), Some(Json::Num(v)) if *v == 2.0));
             }
             other => panic!("not an object: {other:?}"),
         }

@@ -21,7 +21,10 @@
 //! re-splitting layer (link estimation + hysteretic plan switching over a
 //! `splitter::planbank` bank) lives in [`adaptive`]; the zero-copy data
 //! plane (size-classed buffer pool + in-place packing + scatter-gather
-//! framing) lives in [`bufpool`], [`protocol`], and [`link`]; the TCP
+//! framing) lives in [`bufpool`], [`protocol`], and [`link`], with the
+//! pluggable uplink verbs on top — registered buffer rings, depth-N
+//! pipelined posts, and the link / TCP / simulated-RDMA impls — in
+//! [`transport`]; the TCP
 //! front-end bridging real client sockets into the admission queue
 //! (binary frames in, exactly-once responses out) lives in [`net`],
 //! with its default single-thread readiness event loop (`epoll(7)` on
@@ -42,19 +45,20 @@ mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod testkit;
+pub mod transport;
 
 pub use adaptive::{
     AdaptiveConfig, BwTrace, DriftDetector, Hysteresis, LinkEstimator, PlanSwitcher, SwitchBin,
     TraceStep,
 };
-pub use bufpool::{BufPool, PoolStats};
+pub use bufpool::{BufPool, BufRing, PoolStats, RingStats};
 pub use cloud::CloudWorker;
 pub use edge::{EdgeSpec, EdgeWorker};
 pub use link::{DelayMode, Link, Segments, SgTransfer, Transfer, WireFormat};
 pub use loadgen::{
     adaptive_table, c10k_tcp, closed_loop, mixed_workload, poisson_schedule, policy_table, replay,
-    replay_traced, run_mixed, Arrival, C10kConfig, C10kReport, LoadReport, MixedReport,
-    MixedWorkload,
+    replay_traced, run_mixed, transport_table, Arrival, C10kConfig, C10kReport, LoadReport,
+    MixedReport, MixedWorkload,
 };
 pub use metrics::{LatencyHistogram, ServingStats};
 pub use net::{IoModel, NetConfig, NetError, NetStats, ReqFrame, TcpClient, TcpFrontend};
@@ -73,4 +77,8 @@ pub use server::{
 pub use testkit::{
     load_eval_images, reference_image, write_adaptive_bank, write_adaptive_bank_with,
     write_reference_artifacts, AdaptiveBankSpec, AdaptivePlanSpec, RefArtifactSpec,
+};
+pub use transport::{
+    pipeline_schedule, serial_schedule, Completion, LinkTransport, RdmaSimTransport,
+    TcpFrameTransport, Transport, TransportKind, TxFrame,
 };

@@ -41,15 +41,16 @@
 //! in place — and recycled whether the frame completes, is rejected, or
 //! dies mid-read.
 
-use super::bufpool::BufPool;
+use super::bufpool::{BufPool, BufRing};
 use super::metrics::ServingStats;
 use super::protocol::{PacketHeader, MAGIC, TX_HEADER_BYTES};
 use super::scheduler::AdmissionPolicy;
 use super::server::{Client, InferenceResult, Outcome, ResponseReceiver, Server, ShedInfo};
+use super::transport::{TcpFrameTransport, Transport, TxFrame};
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -237,6 +238,16 @@ impl NetCounters {
 /// Encode one request frame: a [`PacketHeader`] with `bits = 32`
 /// followed by the image as little-endian f32 bytes.
 pub fn encode_request(image: &[f32]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_request_into(image, &mut out)?;
+    Ok(out)
+}
+
+/// Encode one request frame into `out` (cleared first), reusing its
+/// capacity — the registered-ring path: a leased buffer round-trips
+/// through encode → post → redeem with zero steady-state allocation.
+pub fn encode_request_into(image: &[f32], out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     let payload_len = image.len() * 4;
     let header = PacketHeader {
         bits: REQ_BITS,
@@ -245,12 +256,12 @@ pub fn encode_request(image: &[f32]) -> Result<Vec<u8>> {
         shape: [1, 1, image.len() as i32, 1],
     }
     .encode(payload_len)?;
-    let mut out = Vec::with_capacity(TX_HEADER_BYTES + payload_len);
+    out.reserve(TX_HEADER_BYTES + payload_len);
     out.extend_from_slice(&header);
     for v in image {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Encode a stats request frame: a bare [`PacketHeader`] with
@@ -768,6 +779,11 @@ fn conn_thread(
     let _ = stream.set_read_timeout(Some(cfg.io_tick));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
     let pool = server.buf_pool();
+    // Each connection fronts the shared pool with a small registered
+    // ring: at steady state a frame's payload buffer recycles on the
+    // ring without touching the pool lock, and the ring reshelves its
+    // residents through the pool when the connection closes.
+    let ring = BufRing::new(pool.clone(), 2, 64 << 10);
     if let Ok(wstream) = stream.try_clone() {
         let (ev_tx, ev_rx) = mpsc::channel::<ConnEvent>();
         let writer = {
@@ -777,7 +793,7 @@ fn conn_thread(
                 .name("tcp-conn-writer".into())
                 .spawn(move || writer_loop(wstream, ev_rx, pool, counters))
         };
-        read_loop(&server, &mut stream, &cfg, &stop, &counters, &pool, &ev_tx);
+        read_loop(&server, &mut stream, &cfg, &stop, &counters, &ring, &ev_tx);
         drop(ev_tx); // writer drains the in-flight responses and exits
         if let Ok(w) = writer {
             let _ = w.join();
@@ -798,7 +814,7 @@ fn read_loop(
     cfg: &NetConfig,
     stop: &AtomicBool,
     counters: &NetCounters,
-    pool: &BufPool,
+    ring: &BufRing,
     ev_tx: &mpsc::Sender<ConnEvent>,
 ) {
     let mut hdr = [0u8; TX_HEADER_BYTES];
@@ -827,26 +843,26 @@ fn read_loop(
                 return;
             }
         };
-        // the payload lands in a pooled buffer; whatever happens next
-        // (success, reject, disconnect) it goes back on the shelf
-        let mut payload = pool.checkout(len);
+        // the payload lands in a ring-registered buffer; whatever
+        // happens next (success, reject, disconnect) it is redeemed
+        let mut payload = ring.lease(len);
         payload.resize(len, 0);
         match read_full(stream, &mut payload, stop) {
             ReadFull::Full => {}
             ReadFull::Stopped => {
-                pool.checkin(payload);
+                ring.redeem(payload);
                 return;
             }
             ReadFull::CleanEof | ReadFull::TruncatedEof | ReadFull::Io(_) => {
                 // disconnect mid-frame: nothing was submitted, so there
                 // is nothing to answer — recycle the buffer and close
-                pool.checkin(payload);
+                ring.redeem(payload);
                 counters.read_errors.fetch_add(1, Ordering::Relaxed);
                 return;
             }
         }
         let image = decode_image(&payload);
-        pool.checkin(payload);
+        ring.redeem(payload);
         match server.submit(image) {
             Ok(rx) => {
                 counters.requests.fetch_add(1, Ordering::SeqCst);
@@ -868,13 +884,17 @@ fn read_loop(
 /// answer) every admitted request exactly once — sending into a dropped
 /// channel is a no-op, so nothing leaks and nothing double-counts.
 fn writer_loop(
-    mut stream: TcpStream,
+    stream: TcpStream,
     ev_rx: mpsc::Receiver<ConnEvent>,
     pool: Arc<BufPool>,
     counters: Arc<NetCounters>,
 ) {
-    let mut buf = pool.checkout(1024);
+    // Responses post through the shared TCP frame transport: the frame
+    // buffer is leased from the transport's registered ring, filled,
+    // posted as a raw frame, and redeemed by the post itself.
+    let mut t = TcpFrameTransport::new(stream, pool, 2, 4096);
     while let Ok(ev) = ev_rx.recv() {
+        let mut buf = t.acquire(1024);
         let answered = match ev {
             ConnEvent::Pending(resp) => {
                 let outcome = match resp.recv() {
@@ -893,15 +913,15 @@ fn writer_loop(
                 false
             }
         };
-        if stream.write_all(&buf).is_err() {
+        if t.post(TxFrame::Raw(buf)).is_err() {
             break;
         }
+        let _ = t.complete(); // raw posts complete synchronously
         if answered {
             counters.responses.fetch_add(1, Ordering::SeqCst);
         }
     }
-    pool.checkin(buf);
-    let _ = stream.shutdown(Shutdown::Both);
+    let _ = t.writer_mut().shutdown(Shutdown::Both);
 }
 
 // ---------------------------------------------------------------------
@@ -936,7 +956,10 @@ impl PendingSlot {
 /// [`Client`], so `loadgen` drives it exactly like the in-process
 /// server.
 pub struct TcpClient {
-    writer: Mutex<TcpStream>,
+    /// The shared frame transport over the write half: request frames
+    /// are leased from its registered ring, posted raw, and redeemed by
+    /// the post — steady-state submissions allocate nothing.
+    transport: Mutex<TcpFrameTransport<TcpStream>>,
     stream: TcpStream,
     pending: Arc<Mutex<VecDeque<PendingSlot>>>,
     reader: Option<std::thread::JoinHandle<()>>,
@@ -955,31 +978,49 @@ impl TcpClient {
                 .name("tcp-client-reader".into())
                 .spawn(move || client_reader(rstream, pending))?
         };
-        let writer = Mutex::new(stream.try_clone().context("clone client stream")?);
-        Ok(TcpClient { writer, stream, pending, reader: Some(reader) })
+        let wstream = stream.try_clone().context("clone client stream")?;
+        let transport =
+            Mutex::new(TcpFrameTransport::new(wstream, BufPool::new(true), 4, 16 << 10));
+        Ok(TcpClient { transport, stream, pending, reader: Some(reader) })
     }
 
-    /// Write one frame with its response slot enqueued atomically: the
-    /// write lock is held across enqueue + write so the pending order
-    /// always matches the on-wire frame order.
-    fn send_frame(&self, frame: &[u8], slot: PendingSlot) -> Result<()> {
-        let mut w = self.writer.lock().unwrap();
-        self.pending.lock().unwrap().push_back(slot);
-        if let Err(e) = w.write_all(frame) {
-            // the frame never left: roll the slot back (the write lock
-            // guarantees no later submission enqueued behind it)
-            self.pending.lock().unwrap().pop_back();
-            return Err(anyhow::anyhow!("front-end connection lost: {e}"));
+    /// Build and post one frame with its response slot enqueued
+    /// atomically: the transport lock is held across enqueue + post so
+    /// the pending order always matches the on-wire frame order.
+    fn send_frame<F>(&self, cap: usize, fill: F, slot: PendingSlot) -> Result<()>
+    where
+        F: FnOnce(&mut Vec<u8>) -> Result<()>,
+    {
+        let mut t = self.transport.lock().unwrap();
+        let mut frame = t.acquire(cap);
+        if let Err(e) = fill(&mut frame) {
+            t.redeem(frame);
+            return Err(e);
         }
-        Ok(())
+        self.pending.lock().unwrap().push_back(slot);
+        match t.post(TxFrame::Raw(frame)) {
+            Ok(_) => {
+                let _ = t.complete(); // raw posts complete synchronously
+                Ok(())
+            }
+            Err(e) => {
+                // the frame never left: roll the slot back (the lock
+                // guarantees no later submission enqueued behind it)
+                self.pending.lock().unwrap().pop_back();
+                Err(anyhow::anyhow!("front-end connection lost: {e:#}"))
+            }
+        }
     }
 
     /// Submit one image; the receiver yields the request's terminal
     /// outcome, decoded from the response frame.
     pub fn submit(&self, image: Vec<f32>) -> Result<ResponseReceiver> {
-        let frame = encode_request(&image)?;
         let (tx, rx) = mpsc::channel();
-        self.send_frame(&frame, PendingSlot::Outcome(tx))?;
+        self.send_frame(
+            TX_HEADER_BYTES + image.len() * 4,
+            |buf| encode_request_into(&image, buf),
+            PendingSlot::Outcome(tx),
+        )?;
         Ok(rx)
     }
 
@@ -987,9 +1028,15 @@ impl TcpClient {
     /// response frame arrives; pipelined requests ahead of it resolve
     /// first). Returns the parsed `ServingStats::to_json` document.
     pub fn fetch_stats(&self) -> Result<Json> {
-        let frame = encode_stats_request()?;
         let (tx, rx) = mpsc::channel();
-        self.send_frame(&frame, PendingSlot::Stats(tx))?;
+        self.send_frame(
+            TX_HEADER_BYTES,
+            |buf| {
+                buf.extend_from_slice(&encode_stats_request()?);
+                Ok(())
+            },
+            PendingSlot::Stats(tx),
+        )?;
         rx.recv().context("front-end connection closed before the stats response")?
     }
 }
@@ -1083,6 +1130,19 @@ mod tests {
         let len = decode_request_header(&hdr, 1 << 20).unwrap();
         assert_eq!(len, 4 * image.len());
         assert_eq!(decode_image(&frame[TX_HEADER_BYTES..]), image);
+    }
+
+    #[test]
+    fn encode_request_into_matches_encode_request_and_reuses_capacity() {
+        let image = vec![0.5f32, -1.0, 2.0, 0.0];
+        let owned = encode_request(&image).unwrap();
+        let mut buf = vec![0xAAu8; 3]; // dirty scratch, wrong length
+        encode_request_into(&image, &mut buf).unwrap();
+        assert_eq!(buf, owned);
+        let ptr = buf.as_ptr();
+        encode_request_into(&image, &mut buf).unwrap();
+        assert_eq!(buf, owned);
+        assert_eq!(buf.as_ptr(), ptr, "re-encode must reuse the allocation");
     }
 
     #[test]

@@ -149,6 +149,11 @@ pub struct ServingRegistry {
     pub plan_requests: CounterVec,
     pub plan_switches: Counter,
     pub mid_batch_swaps: Counter,
+    /// Cloud engines compiled on demand (lazy loads + post-eviction
+    /// reloads), summed across shards.
+    pub engine_loads: Counter,
+    /// Cloud engines dropped by the per-shard `--engine-cache` LRU.
+    pub engine_evictions: Counter,
 }
 
 impl ServingRegistry {
@@ -173,6 +178,8 @@ impl ServingRegistry {
             plan_requests: CounterVec::new(plans),
             plan_switches: Counter::default(),
             mid_batch_swaps: Counter::default(),
+            engine_loads: Counter::default(),
+            engine_evictions: Counter::default(),
         }
     }
 
@@ -196,6 +203,8 @@ impl ServingRegistry {
         s.plan_requests = self.plan_requests.snapshot();
         s.plan_switches = self.plan_switches.get();
         s.mid_batch_swaps = self.mid_batch_swaps.get();
+        s.engine_loads = self.engine_loads.get();
+        s.engine_evictions = self.engine_evictions.get();
         s.batch_slo_closes = self.batch_slo_closes.get();
         s.tx_bytes_total = self.tx_bytes_total.get();
         s.batches = self.batches.get();

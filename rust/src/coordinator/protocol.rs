@@ -215,6 +215,20 @@ impl ActivationPacket {
         }
     }
 
+    /// Reassemble a packet from a header moved by value and an owned
+    /// payload buffer — the inverse of splitting a packet into
+    /// `(header(), payload)` for a scatter-gather post. Moves the
+    /// payload; nothing is re-encoded or copied.
+    pub fn from_parts(h: PacketHeader, payload: Vec<u8>) -> Self {
+        ActivationPacket {
+            bits: h.bits,
+            scale: h.scale,
+            zero_point: h.zero_point,
+            shape: h.shape,
+            payload,
+        }
+    }
+
     /// Binary framing (socket mode). Allocating wrapper around
     /// [`ActivationPacket::write_into`].
     pub fn to_binary(&self) -> Result<Vec<u8>, FrameError> {
@@ -418,6 +432,17 @@ mod tests {
             assert!(ActivationView::parse(&buf[..cut]).is_err(), "cut={cut}");
         }
         assert!(ActivationView::parse(&buf).is_ok());
+    }
+
+    #[test]
+    fn from_parts_is_the_inverse_of_header_payload_split() {
+        let p = sample();
+        let h = p.header();
+        let payload = p.payload.clone();
+        let ptr = payload.as_ptr();
+        let q = ActivationPacket::from_parts(h, payload);
+        assert_eq!(q, p);
+        assert_eq!(q.payload.as_ptr(), ptr, "payload moved, not copied");
     }
 
     #[test]

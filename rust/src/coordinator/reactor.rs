@@ -37,7 +37,7 @@
 //! by pipeline progress, and a blocked reactor applies exactly the
 //! back-pressure a blocked per-connection reader thread used to.
 
-use super::bufpool::BufPool;
+use super::bufpool::{BufPool, BufRing};
 use super::net::{
     decode_image, decode_request_frame, stats_frame_json, write_reject, write_response,
     write_stats_response, NetConfig, NetCounters, NetError, ReqFrame,
@@ -67,6 +67,15 @@ const TOK_BASE: u64 = 2;
 /// before force-closing the remaining connections (the threaded path's
 /// equivalent is its 10 s write timeout).
 const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Registered capacity of each connection's receive ring: payload
+/// buffers up to this size recycle on the connection itself, without
+/// touching the shared pool lock; larger frames fall through to an
+/// exact pool checkout. Registration is just-in-time, so an idle
+/// connection's ring holds nothing.
+const RECV_RING_BYTES: usize = 16 << 10;
+/// Receive-ring depth: one payload in assembly plus one in hand-off.
+const RECV_RING_DEPTH: usize = 2;
 
 /// One readiness report from the platform poller.
 #[derive(Clone, Copy)]
@@ -111,6 +120,10 @@ enum Slot {
 struct Conn {
     stream: TcpStream,
     read: ReadState,
+    /// Registered receive ring fronting the shared pool; payload buffers
+    /// lease from and redeem to it, and its residents reshelve through
+    /// the pool when the connection drops.
+    ring: BufRing,
     /// Response queue in submission order; only the head is ever staged.
     pending: VecDeque<Slot>,
     /// The response frame currently on the wire (pooled; woff = sent).
@@ -176,7 +189,7 @@ fn reactor_loop(
             let _ = poller.deregister(listener.as_raw_fd());
             accepting = false;
             for (tok, conn) in conns.iter_mut() {
-                close_read(conn, &pool);
+                close_read(conn);
                 touched.push(*tok);
             }
         }
@@ -203,7 +216,7 @@ fn reactor_loop(
                 tok => {
                     if let Some(conn) = conns.get_mut(&tok) {
                         if ev.readable && !draining {
-                            pump_read(conn, tok, &server, &pool, &cfg, &counters, &comp_tx, &wake);
+                            pump_read(conn, tok, &server, &cfg, &counters, &comp_tx, &wake);
                         }
                         // Always try to flush: a reject staged by the
                         // read pump has no completion to trigger it, and
@@ -262,7 +275,7 @@ fn accept_ready(
     poller: &mut Poller,
     conns: &mut HashMap<u64, Conn>,
     next_token: &mut u64,
-    pool: &BufPool,
+    pool: &Arc<BufPool>,
     counters: &NetCounters,
 ) {
     loop {
@@ -284,6 +297,7 @@ fn accept_ready(
                     Conn {
                         stream,
                         read: ReadState::Header { hdr: [0u8; TX_HEADER_BYTES], off: 0 },
+                        ring: BufRing::new(pool.clone(), RECV_RING_DEPTH, RECV_RING_BYTES),
                         pending: VecDeque::new(),
                         wbuf: pool.checkout(1024),
                         woff: 0,
@@ -311,7 +325,6 @@ fn pump_read(
     conn: &mut Conn,
     tok: u64,
     server: &Server,
-    pool: &BufPool,
     cfg: &NetConfig,
     counters: &NetCounters,
     comp_tx: &mpsc::Sender<Completion>,
@@ -322,7 +335,7 @@ fn pump_read(
         //    must never reach the read step — read(&mut []) returns
         //    Ok(0) and would be mistaken for EOF).
         if matches!(&conn.read, ReadState::Payload { buf, off } if *off == buf.len()) {
-            complete_frame(conn, tok, server, pool, counters, comp_tx, wake);
+            complete_frame(conn, tok, server, counters, comp_tx, wake);
             continue;
         }
         // 2) Header fully assembled: validate it and size the payload.
@@ -333,7 +346,7 @@ fn pump_read(
         if let Some(hdr) = full_hdr {
             match decode_request_frame(&hdr, cfg.max_payload) {
                 Ok(ReqFrame::Image(len)) => {
-                    let mut buf = pool.checkout(len);
+                    let mut buf = conn.ring.lease(len);
                     buf.resize(len, 0);
                     conn.read = ReadState::Payload { buf, off: 0 };
                 }
@@ -347,7 +360,7 @@ fn pump_read(
                 Err(e) => {
                     counters.frame_rejects.fetch_add(1, Ordering::Relaxed);
                     conn.pending.push_back(Slot::Reject(e));
-                    close_read(conn, pool);
+                    close_read(conn);
                     return;
                 }
             }
@@ -379,7 +392,7 @@ fn pump_read(
                 if !clean {
                     counters.read_errors.fetch_add(1, Ordering::Relaxed);
                 }
-                close_read(conn, pool);
+                close_read(conn);
                 return;
             }
             Ok(_) => {}
@@ -387,21 +400,20 @@ fn pump_read(
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(_) => {
                 counters.read_errors.fetch_add(1, Ordering::Relaxed);
-                close_read(conn, pool);
+                close_read(conn);
                 return;
             }
         }
     }
 }
 
-/// A request frame finished arriving: decode it, recycle the pooled
-/// payload buffer, and submit with a completion hook that routes the
-/// outcome back to this reactor tagged `(conn, seq)`.
+/// A request frame finished arriving: decode it, redeem the payload
+/// buffer onto the connection's ring, and submit with a completion hook
+/// that routes the outcome back to this reactor tagged `(conn, seq)`.
 fn complete_frame(
     conn: &mut Conn,
     tok: u64,
     server: &Server,
-    pool: &BufPool,
     counters: &NetCounters,
     comp_tx: &mpsc::Sender<Completion>,
     wake: &Arc<WakeHandle>,
@@ -414,7 +426,7 @@ fn complete_frame(
         return;
     };
     let image = decode_image(&buf);
-    pool.checkin(buf);
+    conn.ring.redeem(buf);
     let seq = conn.next_seq;
     conn.next_seq += 1;
     let responder = {
@@ -434,16 +446,17 @@ fn complete_frame(
             // Admission queue closed (server stopping): typed reject,
             // then no more frames off this socket.
             conn.pending.push_back(Slot::Reject(NetError::Server(format!("{e:#}"))));
-            close_read(conn, pool);
+            close_read(conn);
         }
     }
 }
 
-/// Stop reading this connection, recycling a half-read payload buffer.
-fn close_read(conn: &mut Conn, pool: &BufPool) {
+/// Stop reading this connection, redeeming a half-read payload buffer
+/// back onto its ring.
+fn close_read(conn: &mut Conn) {
     let state = std::mem::replace(&mut conn.read, ReadState::Closed);
     if let ReadState::Payload { buf, .. } = state {
-        pool.checkin(buf);
+        conn.ring.redeem(buf);
     }
 }
 
@@ -547,11 +560,12 @@ fn update_interest(conn: &mut Conn, poller: &mut Poller, tok: u64) {
     }
 }
 
-/// Tear a connection down: deregister, recycle its pooled buffers,
-/// shut the socket.
+/// Tear a connection down: deregister, recycle its pooled buffers
+/// (dropping the receive ring reshelves its residents), shut the
+/// socket.
 fn close_conn(mut conn: Conn, poller: &mut Poller, pool: &BufPool, counters: &NetCounters) {
     let _ = poller.deregister(conn.stream.as_raw_fd());
-    close_read(&mut conn, pool);
+    close_read(&mut conn);
     pool.checkin(std::mem::take(&mut conn.wbuf));
     let _ = conn.stream.shutdown(Shutdown::Both);
     counters.active.fetch_sub(1, Ordering::Relaxed);

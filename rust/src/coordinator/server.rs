@@ -58,7 +58,7 @@ use super::adaptive::{
 use super::bufpool::BufPool;
 use super::cloud::CloudWorker;
 use super::edge::{EdgeSpec, EdgeWorker};
-use super::link::{DelayMode, Link, Segments, WireFormat};
+use super::link::{DelayMode, Link, WireFormat};
 use super::metrics::ServingStats;
 use super::obsv::{
     ServingRegistry, SpanKind, SpanRecord, SpanTag, StagedOp, TraceConfig, Tracer, STAGE_ADMIT,
@@ -69,12 +69,14 @@ use super::scheduler::{
     drain_deadline, Admit, AdmissionPolicy, AdmissionQueue, BatchCost, DrainCause, Outstanding,
     Router, SchedulerConfig,
 };
+use super::transport::{
+    pipeline_schedule, LinkTransport, RdmaSimTransport, Transport, TransportKind, TxFrame,
+};
 use crate::runtime::{capture_begin, capture_take, KernelKind, OpProfileRow, OpProfiler, Runtime};
 use crate::sim::Uplink;
 use crate::splitter::NetClass;
 use crate::util::Json;
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -129,6 +131,23 @@ pub struct ServeConfig {
     /// (epsilon-gated against the oracle). Applies to every edge and
     /// shard runtime this server constructs.
     pub kernels: KernelKind,
+    /// Which [`Transport`] the edge workers post the uplink through:
+    /// [`TransportKind::Link`] (default — the modeled codec path,
+    /// bit-identical to the pre-transport loop at depth 1) or
+    /// [`TransportKind::RdmaSim`] (registered-buffer zero-copy over the
+    /// same modeled wire). [`TransportKind::Tcp`] is a *front-end*
+    /// selection (real clients over sockets) and is rejected here.
+    pub transport: TransportKind,
+    /// Uplink pipelining depth (`--pipeline-depth`): up to this many
+    /// posts in flight per chain, so modeled transmit overlaps modeled
+    /// edge packing. `1` (default) reproduces the serial chain exactly;
+    /// requires `Virtual` delay accounting beyond 1.
+    pub pipeline_depth: usize,
+    /// Per-shard cap on resident cloud engines across all plans × batch
+    /// sizes (`--engine-cache`). Engines load lazily on the first batch
+    /// that needs them; beyond the cap the least-recently-used engine is
+    /// evicted. `0` (default) = lazy loading with no eviction.
+    pub engine_cache: usize,
 }
 
 impl ServeConfig {
@@ -145,6 +164,9 @@ impl ServeConfig {
             trace: TraceConfig::default(),
             profile: false,
             kernels: KernelKind::default_kind(),
+            transport: TransportKind::Link,
+            pipeline_depth: 1,
+            engine_cache: 0,
         }
     }
 
@@ -175,6 +197,21 @@ impl ServeConfig {
 
     pub fn with_kernels(mut self, kernels: KernelKind) -> Self {
         self.kernels = kernels;
+        self
+    }
+
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth;
+        self
+    }
+
+    pub fn with_engine_cache(mut self, cap: usize) -> Self {
+        self.engine_cache = cap;
         self
     }
 }
@@ -532,6 +569,29 @@ impl Server {
     /// Start the pipeline threads (compiles the artifacts — takes a
     /// moment on first call).
     pub fn start(cfg: ServeConfig) -> Result<Server> {
+        anyhow::ensure!(
+            (1..=64).contains(&cfg.pipeline_depth),
+            "--pipeline-depth must be in 1..=64 (got {})",
+            cfg.pipeline_depth
+        );
+        anyhow::ensure!(
+            cfg.transport != TransportKind::Tcp,
+            "tcp is a front-end transport (socket clients); the server uplink is link or rdma-sim"
+        );
+        if cfg.pipeline_depth > 1 {
+            anyhow::ensure!(
+                cfg.delay == DelayMode::Virtual,
+                "--pipeline-depth > 1 requires virtual delay accounting (the pipelined \
+                 schedule prices overlap; RealSleep would serialize it anyway)"
+            );
+        }
+        if cfg.transport == TransportKind::RdmaSim {
+            anyhow::ensure!(
+                cfg.wire == WireFormat::Binary,
+                "rdma-sim requires the binary wire format (the ASCII RPC baseline \
+                 cannot express zero-copy)"
+            );
+        }
         let (plans, plan_ids) = resolve_plans(&cfg)?;
         let plans = Arc::new(plans);
         let adaptive = match &cfg.adaptive {
@@ -972,11 +1032,98 @@ fn chain_link(cfg: &ServeConfig, uplink: &Mutex<Uplink>) -> Link {
     Link::new(ul).with_format(cfg.wire).with_delay(cfg.delay)
 }
 
+/// Post one staged chain through the transport with up to
+/// `cfg.pipeline_depth` frames in flight, reap every completion, and
+/// zip the accounting back onto the staged metadata. The chain fails
+/// atomically — exactly the pre-transport `transmit_batch*` semantics:
+/// on any post/completion error every member is answered with the same
+/// error and reclaimed payload buffers go back to the registered ring.
+fn post_chain(
+    transport: &mut dyn Transport,
+    depth: usize,
+    staged: Vec<StagedSg>,
+    tracer: &Tracer,
+) -> Vec<SentPacket> {
+    let depth = depth.max(1);
+    type Meta = (Responder, Instant, Duration, Option<Box<SpanTag>>);
+    let mut metas: Vec<Meta> = Vec::with_capacity(staged.len());
+    let mut completions = Vec::with_capacity(staged.len());
+    let mut failed: Option<String> = None;
+    for (i, s) in staged.into_iter().enumerate() {
+        let StagedSg { resp, submitted, edge_dt, header, frame_header, payload, span } = s;
+        metas.push((resp, submitted, edge_dt, span));
+        if failed.is_some() {
+            transport.redeem(payload);
+            continue;
+        }
+        // the chain pays its RTT on the first frame; deciding at post
+        // time (not from reaped completions) keeps pipelined posting
+        // from ever double-charging it
+        let frame = TxFrame::Sg { header, frame_header, payload, charge_rtt: i == 0 };
+        match transport.post(frame) {
+            Ok(_) => {
+                // completion-ring discipline: at most `depth` outstanding
+                while failed.is_none() && transport.in_flight() >= depth {
+                    match transport.complete() {
+                        Ok(c) => completions.push(c),
+                        Err(e) => failed = Some(format!("{e:#}")),
+                    }
+                }
+            }
+            Err(e) => failed = Some(format!("{e:#}")),
+        }
+    }
+    while failed.is_none() && transport.in_flight() > 0 {
+        match transport.complete() {
+            Ok(c) => completions.push(c),
+            Err(e) => failed = Some(format!("{e:#}")),
+        }
+    }
+    if failed.is_none() && completions.len() != metas.len() {
+        failed = Some(format!(
+            "transport completed {} of {} posted frames",
+            completions.len(),
+            metas.len()
+        ));
+    }
+    if failed.is_none() && completions.iter().any(|c| c.packet.is_none()) {
+        failed = Some("modeled transport returned no far-side packet".to_string());
+    }
+    if let Some(msg) = failed {
+        for c in completions {
+            if let Some(p) = c.packet {
+                transport.redeem(p.payload);
+            }
+        }
+        for (resp, _, _, span) in metas {
+            tracer.finish(span, SpanKind::Error);
+            resp.answer(Err(anyhow::anyhow!("{msg}")));
+        }
+        return Vec::new();
+    }
+    metas
+        .into_iter()
+        .zip(completions)
+        .map(|((resp, submitted, edge_dt, span), c)| SentPacket {
+            resp,
+            submitted,
+            edge_dt,
+            packet: c.packet.expect("checked above"),
+            wire_bytes: c.wire_bytes,
+            net_time: c.net_time,
+            rtt: c.rtt,
+            codec_time: c.codec_time,
+            span,
+        })
+        .collect()
+}
+
 /// Process one request chain on the zero-copy pooled data plane: pack
-/// into pooled payload buffers, frame headers on the stack, transmit
-/// header+payload as scatter-gather segments (nothing concatenated, far
-/// side borrows), then MOVE each pooled buffer into its cloud job. Every
-/// failed request is answered inline; the returned members are in-flight.
+/// into registered buffers leased from the transport's ring, frame
+/// headers on the stack, post header+payload as scatter-gather frames
+/// (nothing concatenated, the far side reassembles by ownership), then
+/// MOVE each buffer into its cloud job. Every failed request is answered
+/// inline; the returned members are in-flight.
 #[allow(clippy::too_many_arguments)]
 fn edge_chain_sg(
     cfg: &ServeConfig,
@@ -984,13 +1131,12 @@ fn edge_chain_sg(
     plan: usize,
     workers: Option<&Vec<EdgeWorker>>,
     reqs: Vec<Request>,
-    uplink: &Mutex<Uplink>,
-    pool: &BufPool,
+    transport: &mut dyn Transport,
     tracer: &Tracer,
 ) -> Vec<SentPacket> {
     let mut staged: Vec<StagedSg> = Vec::with_capacity(reqs.len());
     for mut req in reqs {
-        let mut payload = pool.checkout(edge_payload_cap(cfg, prt));
+        let mut payload = transport.acquire(edge_payload_cap(cfg, prt));
         // opt this thread into op capture only for profiled + sampled
         // requests — unprofiled/unsampled requests take no timestamps
         let cap = cfg.profile && req.span.as_ref().map_or(false, |t| t.sampled);
@@ -1031,7 +1177,7 @@ fn edge_chain_sg(
                 });
             }
             Err(e) => {
-                pool.checkin(payload);
+                transport.redeem(payload);
                 tracer.finish(req.span, SpanKind::Error);
                 req.resp.answer(Err(e));
             }
@@ -1041,48 +1187,10 @@ fn edge_chain_sg(
         return Vec::new();
     }
     sleep_sim_edge(cfg, prt, staged.len());
-    let link = chain_link(cfg, uplink);
-    let segs: Vec<Segments<'_>> = staged
-        .iter()
-        .map(|s| Segments { header: &s.frame_header, payload: &s.payload })
-        .collect();
-    let transfers = match link.transmit_batch_sg(&segs) {
-        Ok(t) => t,
-        Err(e) => {
-            drop(segs);
-            let msg = format!("{e:#}");
-            for s in staged {
-                pool.checkin(s.payload);
-                tracer.finish(s.span, SpanKind::Error);
-                s.resp.answer(Err(anyhow::anyhow!("{msg}")));
-            }
-            return Vec::new();
-        }
-    };
-    drop(segs);
-    staged
-        .into_iter()
-        .zip(transfers)
-        .map(|(s, t)| SentPacket {
-            resp: s.resp,
-            submitted: s.submitted,
-            edge_dt: s.edge_dt,
-            // the pooled payload moves into the packet — no copy; the
-            // shard checks it back in once the batch tensor is built
-            packet: ActivationPacket {
-                bits: s.header.bits,
-                scale: s.header.scale,
-                zero_point: s.header.zero_point,
-                shape: s.header.shape,
-                payload: s.payload,
-            },
-            wire_bytes: t.wire_bytes,
-            net_time: t.net_time,
-            rtt: t.rtt,
-            codec_time: t.codec_time,
-            span: s.span,
-        })
-        .collect()
+    // the leased payload moves into the posted frame and comes back in
+    // the completion's packet — no copy; the shard checks it back into
+    // the pool once the batch tensor is built
+    post_chain(transport, cfg.pipeline_depth, staged, tracer)
 }
 
 /// Process one request chain on the owned copying data plane (the seed's
@@ -1094,7 +1202,7 @@ fn edge_chain_owned(
     plan: usize,
     workers: Option<&Vec<EdgeWorker>>,
     reqs: Vec<Request>,
-    uplink: &Mutex<Uplink>,
+    transport: &mut dyn Transport,
     tracer: &Tracer,
 ) -> Vec<SentPacket> {
     type Staged = (Responder, Instant, Duration, Option<Box<SpanTag>>);
@@ -1149,30 +1257,55 @@ fn edge_chain_owned(
         return Vec::new();
     }
     sleep_sim_edge(cfg, prt, packets.len());
-    let link = chain_link(cfg, uplink);
-    let transfers = match link.transmit_batch(&packets) {
-        Ok(t) => t,
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for (resp, _, _, span) in staged {
-                tracer.finish(span, SpanKind::Error);
-                resp.answer(Err(anyhow::anyhow!("{msg}")));
-            }
-            return Vec::new();
+    let depth = cfg.pipeline_depth.max(1);
+    let mut completions = Vec::with_capacity(packets.len());
+    let mut failed: Option<String> = None;
+    for (i, packet) in packets.into_iter().enumerate() {
+        if failed.is_some() {
+            continue;
         }
-    };
+        match transport.post(TxFrame::Owned { packet, charge_rtt: i == 0 }) {
+            Ok(_) => {
+                while failed.is_none() && transport.in_flight() >= depth {
+                    match transport.complete() {
+                        Ok(c) => completions.push(c),
+                        Err(e) => failed = Some(format!("{e:#}")),
+                    }
+                }
+            }
+            Err(e) => failed = Some(format!("{e:#}")),
+        }
+    }
+    while failed.is_none() && transport.in_flight() > 0 {
+        match transport.complete() {
+            Ok(c) => completions.push(c),
+            Err(e) => failed = Some(format!("{e:#}")),
+        }
+    }
+    if failed.is_none()
+        && (completions.len() != staged.len() || completions.iter().any(|c| c.packet.is_none()))
+    {
+        failed = Some("transport lost a frame mid-chain".to_string());
+    }
+    if let Some(msg) = failed {
+        for (resp, _, _, span) in staged {
+            tracer.finish(span, SpanKind::Error);
+            resp.answer(Err(anyhow::anyhow!("{msg}")));
+        }
+        return Vec::new();
+    }
     staged
         .into_iter()
-        .zip(transfers)
-        .map(|((resp, submitted, edge_dt, span), t)| SentPacket {
+        .zip(completions)
+        .map(|((resp, submitted, edge_dt, span), c)| SentPacket {
             resp,
             submitted,
             edge_dt,
-            packet: t.packet,
-            wire_bytes: t.wire_bytes,
-            net_time: t.net_time,
-            rtt: t.rtt,
-            codec_time: t.codec_time,
+            packet: c.packet.expect("checked above"),
+            wire_bytes: c.wire_bytes,
+            net_time: c.net_time,
+            rtt: c.rtt,
+            codec_time: c.codec_time,
             span,
         })
         .collect()
@@ -1195,9 +1328,9 @@ fn edge_thread(
 ) {
     // own runtime: PJRT handles are thread-local by construction here.
     // One edge engine per bank plan — hot-swapping is an index change.
-    let init = (|| -> Result<Option<Vec<EdgeWorker>>> {
-        match cfg.mode {
-            ServeMode::CloudOnly => Ok(None),
+    let init = (|| -> Result<(Option<Vec<EdgeWorker>>, Box<dyn Transport>)> {
+        let workers = match cfg.mode {
+            ServeMode::CloudOnly => None,
             ServeMode::Split => {
                 let rt = match &prof {
                     Some(p) => Runtime::with_profiler(Arc::clone(p))?,
@@ -1217,11 +1350,25 @@ fn edge_thread(
                         },
                     ));
                 }
-                Ok(Some(workers))
+                Some(workers)
             }
-        }
+        };
+        // one long-lived transport per edge worker: the registered send
+        // ring survives across chains, sized to the largest payload any
+        // plan can pack and as deep as the pipeline
+        let ring_cap =
+            plans.iter().map(|p| edge_payload_cap(&cfg, p)).max().unwrap_or(1024).max(64);
+        let depth = cfg.pipeline_depth.max(1);
+        let link = chain_link(&cfg, &uplink);
+        let transport: Box<dyn Transport> = match cfg.transport {
+            TransportKind::RdmaSim => {
+                Box::new(RdmaSimTransport::new(link, pool.clone(), depth, ring_cap)?)
+            }
+            _ => Box::new(LinkTransport::new(link, pool.clone(), depth, ring_cap)),
+        };
+        Ok((workers, transport))
     })();
-    let workers = match init {
+    let (workers, mut transport) = match init {
         Ok(w) => {
             let _ = ready.send(Ok(()));
             w
@@ -1261,11 +1408,13 @@ fn edge_thread(
         let prt = &plans[plan];
 
         // run the chain through the configured data plane; every failed
-        // member was already answered inline
+        // member was already answered inline. The live uplink is read
+        // here so bandwidth-trace replay takes effect per chain.
+        transport.set_link(chain_link(&cfg, &uplink));
         let sent = if pool.enabled() {
-            edge_chain_sg(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &pool, &tracer)
+            edge_chain_sg(&cfg, prt, plan, workers.as_ref(), reqs, transport.as_mut(), &tracer)
         } else {
-            edge_chain_owned(&cfg, prt, plan, workers.as_ref(), reqs, &uplink, &tracer)
+            edge_chain_owned(&cfg, prt, plan, workers.as_ref(), reqs, transport.as_mut(), &tracer)
         };
         if sent.is_empty() {
             continue;
@@ -1301,21 +1450,29 @@ fn edge_thread(
         reg.plan_requests.add(plan, sent.len() as u64);
 
         let arrived = Instant::now();
-        // virtual accounting mirrors what RealSleep's wall clock measures:
-        // the whole chain computes on the edge before anything transmits
-        // (every member waits n × sim_edge), and chain member i completes
-        // its transfer after the chain RTT plus every payload up to its
-        // own — so the per-member virtual time is CUMULATIVE, not just the
-        // member's own share
-        let sim_chain = prt.sim_edge * sent.len() as u32;
-        let mut chain_net = Duration::ZERO;
-        for mut s in sent {
-            chain_net += s.net_time;
-            let virt = if cfg.delay == DelayMode::Virtual {
-                chain_net + sim_chain
-            } else {
-                Duration::ZERO
-            };
+        // virtual accounting mirrors what RealSleep's wall clock measures.
+        // Depth 1 (the serial chain): the whole chain computes on the edge
+        // before anything transmits (every member waits n × sim_edge), and
+        // chain member i completes after the chain RTT plus every payload
+        // up to its own — cumulative, not the member's own share. Depth >
+        // 1: the pipelined schedule, where transmit of frame k overlaps
+        // packing of frames k+1..k+depth.
+        let virts: Vec<Duration> = if cfg.delay != DelayMode::Virtual {
+            vec![Duration::ZERO; sent.len()]
+        } else if cfg.pipeline_depth <= 1 {
+            let sim_chain = prt.sim_edge * sent.len() as u32;
+            let mut chain_net = Duration::ZERO;
+            sent.iter()
+                .map(|s| {
+                    chain_net += s.net_time;
+                    chain_net + sim_chain
+                })
+                .collect()
+        } else {
+            let nets: Vec<Duration> = sent.iter().map(|s| s.net_time).collect();
+            pipeline_schedule(prt.sim_edge, &nets, cfg.pipeline_depth)
+        };
+        for (mut s, virt) in sent.into_iter().zip(virts) {
             if let Some(tag) = s.span.as_mut() {
                 // accounted stage times: what the pipeline charges (the
                 // modeled edge/wire time under Virtual delay), which is
@@ -1540,37 +1697,40 @@ fn shard_thread(
     tracer: Arc<Tracer>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    let init = (|| -> Result<CloudExec> {
+    // the runtime stays alive for the shard's whole life: cloud engines
+    // now load lazily (and may reload after eviction), so compilation is
+    // no longer confined to startup
+    let init = (|| -> Result<(Runtime, CloudExec)> {
         let rt = match &prof {
             Some(p) => Runtime::with_profiler(Arc::clone(p))?,
             None => Runtime::cpu()?,
         }
         .with_kernels(cfg.kernels);
-        match cfg.mode {
+        let exec = match cfg.mode {
             ServeMode::Split => {
-                let mut workers = Vec::with_capacity(plans.len());
-                for plan in plans.iter() {
-                    let mut engines = BTreeMap::new();
-                    for &b in &engine_batch_set(&plan.meta, cfg.scheduler.max_batch) {
-                        let e = rt
-                            .load_hlo_text(&plan.dir.join(format!("lpr_cloud_b{b}.hlo.txt")))?;
-                        engines.insert(b, e);
-                    }
-                    workers.push(CloudWorker::new(
-                        engines,
-                        plan.meta.packed_shape,
-                        plan.meta.classes,
-                    ));
-                }
-                Ok(CloudExec::Split(workers))
+                // workers know their full batch set up front (so padding
+                // never depends on residency) but hold no engines yet
+                let workers = plans
+                    .iter()
+                    .map(|plan| {
+                        CloudWorker::with_batch_set(
+                            engine_batch_set(&plan.meta, cfg.scheduler.max_batch),
+                            plan.meta.packed_shape,
+                            plan.meta.classes,
+                        )
+                    })
+                    .collect();
+                CloudExec::Split(workers)
             }
             ServeMode::CloudOnly => {
+                // the Cloud-Only baseline has exactly one engine: eager
                 let dir = &plans[0].dir;
-                Ok(CloudExec::Full(rt.load_hlo_text(&dir.join("lpr_full_b1.hlo.txt"))?))
+                CloudExec::Full(rt.load_hlo_text(&dir.join("lpr_full_b1.hlo.txt"))?)
             }
-        }
+        };
+        Ok((rt, exec))
     })();
-    let exec = match init {
+    let (rt, mut exec) = match init {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
@@ -1580,6 +1740,11 @@ fn shard_thread(
             return;
         }
     };
+
+    // LRU over resident (plan, engine-batch) engines, most-recent last;
+    // `--engine-cache 0` = lazy loading without eviction
+    let cache_cap = cfg.engine_cache;
+    let mut lru: Vec<(usize, usize)> = Vec::new();
 
     // per-shard reusable scratch for the pooled data plane: the f32
     // buffers live as long as the shard, the u8 batch scratch cycles
@@ -1594,6 +1759,34 @@ fn shard_thread(
         if sb.jobs.iter().any(|j| j.plan != sb.plan) {
             reg.mid_batch_swaps.inc();
         }
+        // ensure the engine this batch pads to is resident (lazy load +
+        // LRU touch/evict) BEFORE the timed execution: compilation is a
+        // cache event, not batch compute
+        let prep: Result<()> = match &mut exec {
+            CloudExec::Split(workers) => (|| {
+                let w = &mut workers[sb.plan];
+                let b = w.engine_batch_for(sb.jobs.len());
+                if !w.is_loaded(b) {
+                    let e = rt.load_hlo_text(
+                        &plans[sb.plan].dir.join(format!("lpr_cloud_b{b}.hlo.txt")),
+                    )?;
+                    w.insert_engine(b, e);
+                    reg.engine_loads.inc();
+                }
+                lru.retain(|&k| k != (sb.plan, b));
+                lru.push((sb.plan, b));
+                if cache_cap > 0 {
+                    while lru.len() > cache_cap {
+                        let (p, eb) = lru.remove(0);
+                        if workers[p].evict_engine(eb) {
+                            reg.engine_evictions.inc();
+                        }
+                    }
+                }
+                Ok(())
+            })(),
+            CloudExec::Full(_) => Ok(()),
+        };
         // a batched execution's ops are the work every member rode:
         // capture once around the run, clone onto each sampled span
         let cap = cfg.profile
@@ -1602,10 +1795,15 @@ fn shard_thread(
             capture_begin();
         }
         let exec_start = Instant::now();
-        let run = if pool.enabled() {
-            run_batch_pooled(&exec, &plans, &sb, &pool, &mut logits_buf, &mut pix_buf)
-        } else {
-            run_batch_owned(&exec, &plans, &sb)
+        let run = match prep {
+            Ok(()) => {
+                if pool.enabled() {
+                    run_batch_pooled(&exec, &plans, &sb, &pool, &mut logits_buf, &mut pix_buf)
+                } else {
+                    run_batch_owned(&exec, &plans, &sb)
+                }
+            }
+            Err(e) => Err(e),
         };
         let batch_ops: Vec<StagedOp> = if cap {
             capture_take()

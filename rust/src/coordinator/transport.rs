@@ -1,0 +1,737 @@
+//! Pluggable uplink transport with completion-ring semantics.
+//!
+//! The serving stack used to hard-wire three wire paths — the modeled
+//! in-memory [`Link`], threaded TCP, and the reactor — each reimplementing
+//! framing and buffer handling. This module factors the common shape into
+//! a [`Transport`] trait styled after RDMA verbs (`rust-ibverbs`
+//! zerocopy): **acquire** a registered send buffer from a [`BufRing`],
+//! **post** a frame, reap a [`Completion`] carrying the wire accounting.
+//! Three implementations:
+//!
+//! * [`LinkTransport`] — the modeled in-memory link. Posts route through
+//!   `Link::transmit_chained`/`transmit_sg_chained`, so every number
+//!   (wire bytes, net time, RTT-once-per-chain, codec time) is identical
+//!   to the pre-trait `transmit_batch`/`transmit_batch_sg` loops. This is
+//!   the accounting oracle.
+//! * [`RdmaSimTransport`] — the zero-copy ceiling over the same modeled
+//!   wire: posts move pre-registered buffers without any far-side codec
+//!   pass (header never re-materialized, payload never re-parsed), so
+//!   `codec_time` is zero while wire bytes and modeled time match the
+//!   binary link exactly. The gap between this and [`LinkTransport`]
+//!   quantifies what registered-memory transfer would buy.
+//! * [`TcpFrameTransport`] — the real TCP frame protocol behind the same
+//!   verbs: a post is one or two `write_all`s (the `writev` idiom for
+//!   scatter-gather frames) and completes immediately with byte-count
+//!   accounting; modeled time stays zero because real sockets measure
+//!   themselves.
+//!
+//! On top of the trait, [`pipeline_schedule`] prices a depth-N pipelined
+//! chain: up to `depth` posts in flight, so the modeled transmit of
+//! request *k* overlaps the modeled edge packing of request *k+1* — the
+//! overlap Dynamic Split Computing argues dominates the split-point
+//! latency. [`serial_schedule`] is the legacy whole-chain oracle
+//! (`--pipeline-depth 1`).
+
+use super::bufpool::{BufPool, BufRing, RingStats};
+use super::link::{Link, Segments, WireFormat};
+use super::protocol::{ActivationPacket, PacketHeader, TX_HEADER_BYTES};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which wire path a [`Transport`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Modeled in-memory link (full codec roundtrip) — the oracle.
+    Link,
+    /// Real TCP framing.
+    Tcp,
+    /// Simulated RDMA: modeled wire, registered buffers, no codec pass.
+    RdmaSim,
+}
+
+impl TransportKind {
+    /// Parse a `--transport` flag value. `inproc` is the legacy alias
+    /// for `link`.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "link" | "inproc" => TransportKind::Link,
+            "tcp" => TransportKind::Tcp,
+            "rdma-sim" => TransportKind::RdmaSim,
+            other => bail!("unknown transport {other:?} (want link|inproc|tcp|rdma-sim)"),
+        })
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TransportKind::Link => "link",
+            TransportKind::Tcp => "tcp",
+            TransportKind::RdmaSim => "rdma-sim",
+        })
+    }
+}
+
+/// One frame handed to [`Transport::post`].
+pub enum TxFrame {
+    /// Scatter-gather: pre-encoded frame header + payload in its leased
+    /// buffer, never concatenated. `charge_rtt` marks the frame that
+    /// pays the chain's single RTT (the first posted frame of a chain).
+    Sg {
+        header: PacketHeader,
+        frame_header: [u8; TX_HEADER_BYTES],
+        payload: Vec<u8>,
+        charge_rtt: bool,
+    },
+    /// A whole owned packet (the copy/legacy plane).
+    Owned { packet: ActivationPacket, charge_rtt: bool },
+    /// Raw pre-framed bytes (TCP control frames; invalid on modeled
+    /// transports, which account per activation frame).
+    Raw(Vec<u8>),
+}
+
+/// One reaped work completion: the wire accounting for a posted frame,
+/// plus — on modeled transports — the far-side packet.
+#[derive(Debug)]
+pub struct Completion {
+    /// Post sequence number (monotonic per transport, starts at 0).
+    pub seq: u64,
+    pub wire_bytes: usize,
+    /// Modeled network time (zero on real TCP — sockets measure
+    /// themselves).
+    pub net_time: Duration,
+    /// RTT portion of `net_time` (charged on one frame per chain).
+    pub rtt: Duration,
+    /// Measured codec CPU time (zero on rdma-sim: nothing re-encodes).
+    pub codec_time: Duration,
+    /// The packet as the far side sees it. `None` on raw TCP posts.
+    pub packet: Option<ActivationPacket>,
+}
+
+/// Verbs-style uplink: acquire a registered buffer, post frames, reap
+/// completions in post order. Implementations may complete posts
+/// synchronously (the modeled wires do), but callers must only rely on
+/// the ring discipline: every successful post yields exactly one
+/// completion, FIFO.
+pub trait Transport: Send {
+    fn kind(&self) -> TransportKind;
+
+    /// Lease a cleared, registered send buffer with capacity ≥ `cap`.
+    fn acquire(&mut self, cap: usize) -> Vec<u8>;
+
+    /// Return an unused (or drained) buffer to the registered ring.
+    fn redeem(&mut self, buf: Vec<u8>);
+
+    /// Post one frame; returns its completion sequence number.
+    fn post(&mut self, frame: TxFrame) -> Result<u64>;
+
+    /// Reap the oldest outstanding completion. Errors if none is
+    /// outstanding — completions never appear out of thin air.
+    fn complete(&mut self) -> Result<Completion>;
+
+    /// Posts not yet reaped.
+    fn in_flight(&self) -> usize;
+
+    /// Registered-ring traffic counters.
+    fn ring_stats(&self) -> RingStats;
+
+    /// Swap the modeled wire (bandwidth-trace replay reads the live
+    /// uplink per chain). Real transports ignore it — their wire is a
+    /// socket, not a model.
+    fn set_link(&mut self, _link: Link) {}
+}
+
+/// The modeled in-memory link behind the verbs — accounting oracle.
+pub struct LinkTransport {
+    link: Link,
+    ring: BufRing,
+    completions: VecDeque<Completion>,
+    next_seq: u64,
+}
+
+impl LinkTransport {
+    /// `depth` send buffers of `cap` bytes are registered up front (the
+    /// uplink sender must be zero-allocation from the first post).
+    pub fn new(link: Link, pool: Arc<BufPool>, depth: usize, cap: usize) -> LinkTransport {
+        LinkTransport {
+            link,
+            ring: BufRing::prefilled(pool, depth, cap),
+            completions: VecDeque::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+}
+
+impl Transport for LinkTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Link
+    }
+
+    fn acquire(&mut self, cap: usize) -> Vec<u8> {
+        self.ring.lease(cap)
+    }
+
+    fn redeem(&mut self, buf: Vec<u8>) {
+        self.ring.redeem(buf);
+    }
+
+    fn post(&mut self, frame: TxFrame) -> Result<u64> {
+        let seq = self.next_seq;
+        let c = match frame {
+            TxFrame::Sg { header, frame_header, payload, charge_rtt } => {
+                let t = self
+                    .link
+                    .transmit_sg_chained(
+                        Segments { header: &frame_header, payload: &payload },
+                        charge_rtt,
+                    )
+                    .context("sg post")?;
+                Completion {
+                    seq,
+                    wire_bytes: t.wire_bytes,
+                    net_time: t.net_time,
+                    rtt: t.rtt,
+                    codec_time: t.codec_time,
+                    // far side reassembles from the moved payload —
+                    // bytes never copied
+                    packet: Some(ActivationPacket::from_parts(header, payload)),
+                }
+            }
+            TxFrame::Owned { packet, charge_rtt } => {
+                let t = self.link.transmit_chained(&packet, charge_rtt).context("owned post")?;
+                Completion {
+                    seq,
+                    wire_bytes: t.wire_bytes,
+                    net_time: t.net_time,
+                    rtt: t.rtt,
+                    codec_time: t.codec_time,
+                    packet: Some(t.packet),
+                }
+            }
+            TxFrame::Raw(_) => bail!("raw posts are a TCP-transport concept"),
+        };
+        self.next_seq += 1;
+        self.completions.push_back(c);
+        Ok(seq)
+    }
+
+    fn complete(&mut self) -> Result<Completion> {
+        self.completions.pop_front().context("no completion outstanding")
+    }
+
+    fn in_flight(&self) -> usize {
+        self.completions.len()
+    }
+
+    fn ring_stats(&self) -> RingStats {
+        self.ring.stats()
+    }
+
+    fn set_link(&mut self, link: Link) {
+        self.link = link;
+    }
+}
+
+/// Simulated RDMA over the modeled wire: registered buffers move by
+/// ownership, nothing re-encodes or re-parses, `codec_time` is zero.
+/// Wire bytes and modeled time match the binary link exactly, so the
+/// only difference from [`LinkTransport`] is the codec CPU it skips —
+/// the zero-copy ceiling.
+pub struct RdmaSimTransport {
+    link: Link,
+    ring: BufRing,
+    completions: VecDeque<Completion>,
+    next_seq: u64,
+}
+
+impl RdmaSimTransport {
+    /// Errors on an ASCII-format link: the Table 4 RPC baseline cannot
+    /// express zero-copy (its envelope forces a re-encode), so the
+    /// combination is meaningless.
+    pub fn new(
+        link: Link,
+        pool: Arc<BufPool>,
+        depth: usize,
+        cap: usize,
+    ) -> Result<RdmaSimTransport> {
+        anyhow::ensure!(
+            link.format == WireFormat::Binary,
+            "rdma-sim requires the binary wire format"
+        );
+        Ok(RdmaSimTransport {
+            link,
+            ring: BufRing::prefilled(pool, depth, cap),
+            completions: VecDeque::new(),
+            next_seq: 0,
+        })
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    /// Price a `wire_bytes` post on the modeled uplink, charging RTT iff
+    /// this frame carries the chain's round.
+    fn price(&self, wire_bytes: usize, charge_rtt: bool) -> (Duration, Duration) {
+        let rtt = if charge_rtt && wire_bytes > 0 {
+            Duration::from_secs_f64(self.link.uplink.rtt_s)
+        } else {
+            Duration::ZERO
+        };
+        let net = rtt + Duration::from_secs_f64(self.link.uplink.payload_seconds(wire_bytes));
+        (net, rtt)
+    }
+}
+
+impl Transport for RdmaSimTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::RdmaSim
+    }
+
+    fn acquire(&mut self, cap: usize) -> Vec<u8> {
+        self.ring.lease(cap)
+    }
+
+    fn redeem(&mut self, buf: Vec<u8>) {
+        self.ring.redeem(buf);
+    }
+
+    fn post(&mut self, frame: TxFrame) -> Result<u64> {
+        let seq = self.next_seq;
+        let c = match frame {
+            TxFrame::Sg { header, frame_header: _, payload, charge_rtt } => {
+                // registered-memory transfer: same bytes on the wire as
+                // the binary frame, but no far-side parse — ownership of
+                // the registered buffer IS the delivery
+                let wire_bytes = TX_HEADER_BYTES + payload.len();
+                let (net_time, rtt) = self.price(wire_bytes, charge_rtt);
+                if self.link.delay == super::link::DelayMode::RealSleep {
+                    std::thread::sleep(net_time);
+                }
+                Completion {
+                    seq,
+                    wire_bytes,
+                    net_time,
+                    rtt,
+                    codec_time: Duration::ZERO,
+                    packet: Some(ActivationPacket::from_parts(header, payload)),
+                }
+            }
+            TxFrame::Owned { packet, charge_rtt } => {
+                let wire_bytes = packet.wire_bytes_binary();
+                let (net_time, rtt) = self.price(wire_bytes, charge_rtt);
+                if self.link.delay == super::link::DelayMode::RealSleep {
+                    std::thread::sleep(net_time);
+                }
+                Completion {
+                    seq,
+                    wire_bytes,
+                    net_time,
+                    rtt,
+                    codec_time: Duration::ZERO,
+                    packet: Some(packet),
+                }
+            }
+            TxFrame::Raw(_) => bail!("raw posts are a TCP-transport concept"),
+        };
+        self.next_seq += 1;
+        self.completions.push_back(c);
+        Ok(seq)
+    }
+
+    fn complete(&mut self) -> Result<Completion> {
+        self.completions.pop_front().context("no completion outstanding")
+    }
+
+    fn in_flight(&self) -> usize {
+        self.completions.len()
+    }
+
+    fn ring_stats(&self) -> RingStats {
+        self.ring.stats()
+    }
+
+    fn set_link(&mut self, mut link: Link) {
+        // the binary-format invariant was checked at construction and
+        // survives live-uplink swaps
+        link.format = WireFormat::Binary;
+        self.link = link;
+    }
+}
+
+/// The real TCP frame protocol behind the verbs. Generic over the write
+/// half so the frame path is testable without sockets; a post is one or
+/// two `write_all`s (scatter-gather keeps header and payload as separate
+/// writes — the `writev` idiom) and completes immediately with byte
+/// accounting. Modeled times are zero: real sockets measure themselves.
+pub struct TcpFrameTransport<W: Write + Send> {
+    writer: W,
+    ring: BufRing,
+    completions: VecDeque<Completion>,
+    next_seq: u64,
+}
+
+impl<W: Write + Send> TcpFrameTransport<W> {
+    pub fn new(writer: W, pool: Arc<BufPool>, depth: usize, cap: usize) -> TcpFrameTransport<W> {
+        TcpFrameTransport {
+            writer,
+            // client connections register just-in-time: an idle
+            // connection's ring costs nothing
+            ring: BufRing::new(pool, depth, cap),
+            completions: VecDeque::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn writer_mut(&mut self) -> &mut W {
+        &mut self.writer
+    }
+}
+
+impl<W: Write + Send> Transport for TcpFrameTransport<W> {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn acquire(&mut self, cap: usize) -> Vec<u8> {
+        self.ring.lease(cap)
+    }
+
+    fn redeem(&mut self, buf: Vec<u8>) {
+        self.ring.redeem(buf);
+    }
+
+    fn post(&mut self, frame: TxFrame) -> Result<u64> {
+        let seq = self.next_seq;
+        let c = match frame {
+            TxFrame::Sg { header: _, frame_header, payload, charge_rtt: _ } => {
+                self.writer.write_all(&frame_header).context("tcp sg header write")?;
+                self.writer.write_all(&payload).context("tcp sg payload write")?;
+                let wire_bytes = frame_header.len() + payload.len();
+                // the payload buffer has been drained onto the wire —
+                // back to the registered ring
+                self.ring.redeem(payload);
+                Completion {
+                    seq,
+                    wire_bytes,
+                    net_time: Duration::ZERO,
+                    rtt: Duration::ZERO,
+                    codec_time: Duration::ZERO,
+                    packet: None,
+                }
+            }
+            TxFrame::Owned { packet, charge_rtt: _ } => {
+                let header = packet.header().encode(packet.payload.len())?;
+                self.writer.write_all(&header).context("tcp header write")?;
+                self.writer.write_all(&packet.payload).context("tcp payload write")?;
+                Completion {
+                    seq,
+                    wire_bytes: header.len() + packet.payload.len(),
+                    net_time: Duration::ZERO,
+                    rtt: Duration::ZERO,
+                    codec_time: Duration::ZERO,
+                    packet: Some(packet),
+                }
+            }
+            TxFrame::Raw(bytes) => {
+                self.writer.write_all(&bytes).context("tcp raw write")?;
+                let wire_bytes = bytes.len();
+                self.ring.redeem(bytes);
+                Completion {
+                    seq,
+                    wire_bytes,
+                    net_time: Duration::ZERO,
+                    rtt: Duration::ZERO,
+                    codec_time: Duration::ZERO,
+                    packet: None,
+                }
+            }
+        };
+        self.writer.flush().context("tcp flush")?;
+        self.next_seq += 1;
+        self.completions.push_back(c);
+        Ok(seq)
+    }
+
+    fn complete(&mut self) -> Result<Completion> {
+        self.completions.pop_front().context("no completion outstanding")
+    }
+
+    fn in_flight(&self) -> usize {
+        self.completions.len()
+    }
+
+    fn ring_stats(&self) -> RingStats {
+        self.ring.stats()
+    }
+}
+
+/// Per-request virtual finish times of a depth-`depth` pipelined chain.
+///
+/// The edge packs requests in order (each costs `sim_edge`) and may hold
+/// up to `depth` posted-but-unfinished transmits; the modeled wire is
+/// serial (one frame at a time). With `pack[i]`/`net[i]` as finish
+/// times:
+///
+/// ```text
+/// pack[i] = max(pack[i-1], net[i-depth]) + sim_edge
+/// net[i]  = max(pack[i],  net[i-1]) + net_cost[i]
+/// ```
+///
+/// so transmit of frame *k* overlaps packing of *k+1..k+depth*. At
+/// `depth ≥ n` with `sim_edge = 0` this degenerates to the cumulative
+/// wire time — identical to the serial chain. All math is integer-nanos
+/// `Duration`, so schedules are exactly reproducible.
+pub fn pipeline_schedule(sim_edge: Duration, net_cost: &[Duration], depth: usize) -> Vec<Duration> {
+    let depth = depth.max(1);
+    let n = net_cost.len();
+    let mut pack = vec![Duration::ZERO; n];
+    let mut net = vec![Duration::ZERO; n];
+    for i in 0..n {
+        let prev_pack = if i == 0 { Duration::ZERO } else { pack[i - 1] };
+        let gate = if i >= depth { net[i - depth] } else { Duration::ZERO };
+        pack[i] = prev_pack.max(gate) + sim_edge;
+        let prev_net = if i == 0 { Duration::ZERO } else { net[i - 1] };
+        net[i] = pack[i].max(prev_net) + net_cost[i];
+    }
+    net
+}
+
+/// The legacy serial oracle (`--pipeline-depth 1` accounting): the whole
+/// chain packs first (`n × sim_edge`), then transmits back to back, and
+/// every request's virtual finish time includes the full pack phase —
+/// exactly the numbers the pre-transport serving loop produced.
+pub fn serial_schedule(sim_edge: Duration, net_cost: &[Duration]) -> Vec<Duration> {
+    let pack_all = sim_edge * net_cost.len() as u32;
+    let mut cum = pack_all;
+    net_cost
+        .iter()
+        .map(|&t| {
+            cum += t;
+            cum
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Uplink;
+
+    fn pkt(n: usize) -> ActivationPacket {
+        ActivationPacket {
+            bits: 4,
+            scale: 0.1,
+            zero_point: 0.0,
+            shape: [1, 32, 4, 4],
+            payload: (0..n).map(|i| (i % 256) as u8).collect(),
+        }
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    /// Deterministic pseudo-random durations (LCG) for schedule tests.
+    fn lcg_nets(seed: u64, n: usize) -> Vec<Duration> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                Duration::from_micros(100 + (s >> 33) % 5000)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transport_kind_parses_flags_and_aliases() {
+        assert_eq!(TransportKind::parse("link").unwrap(), TransportKind::Link);
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Link);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("rdma-sim").unwrap(), TransportKind::RdmaSim);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::RdmaSim.to_string(), "rdma-sim");
+    }
+
+    #[test]
+    fn link_transport_posts_match_batch_oracle_exactly() {
+        let link = Link::new(Uplink::cellular_3g());
+        let packets: Vec<ActivationPacket> = [64usize, 512, 128].iter().map(|&n| pkt(n)).collect();
+        let oracle = link.transmit_batch(&packets).unwrap();
+
+        let pool = BufPool::new(true);
+        let mut t = LinkTransport::new(link.clone(), pool, 4, 1024);
+        for (i, p) in packets.iter().enumerate() {
+            let mut payload = t.acquire(p.payload.len());
+            payload.extend_from_slice(&p.payload);
+            let frame_header = p.header().encode(payload.len()).unwrap();
+            let seq = t
+                .post(TxFrame::Sg {
+                    header: p.header(),
+                    frame_header,
+                    payload,
+                    charge_rtt: i == 0,
+                })
+                .unwrap();
+            assert_eq!(seq, i as u64);
+        }
+        assert_eq!(t.in_flight(), 3);
+        for (i, o) in oracle.iter().enumerate() {
+            let c = t.complete().unwrap();
+            assert_eq!(c.seq, i as u64, "completions reap FIFO");
+            assert_eq!(c.wire_bytes, o.wire_bytes);
+            assert_eq!(c.net_time, o.net_time);
+            assert_eq!(c.rtt, o.rtt);
+            assert_eq!(c.packet.as_ref().unwrap(), &o.packet, "far side bit-identical");
+        }
+        assert!(t.complete().is_err(), "exactly one completion per post");
+        assert!(t.ring_stats().ring_hits >= 3, "registered ring served the posts");
+    }
+
+    #[test]
+    fn link_transport_owned_posts_match_transmit() {
+        let link = Link::new(Uplink::paper_default());
+        let p = pkt(256);
+        let oracle = link.transmit(&p).unwrap();
+        let mut t = LinkTransport::new(link, BufPool::new(true), 2, 512);
+        t.post(TxFrame::Owned { packet: p.clone(), charge_rtt: true }).unwrap();
+        let c = t.complete().unwrap();
+        assert_eq!(c.wire_bytes, oracle.wire_bytes);
+        assert_eq!(c.net_time, oracle.net_time);
+        assert_eq!(c.packet.unwrap(), p);
+    }
+
+    #[test]
+    fn rdma_sim_matches_link_wire_accounting_with_zero_codec() {
+        let link = Link::new(Uplink::cellular_3g());
+        let packets: Vec<ActivationPacket> = [64usize, 512, 128].iter().map(|&n| pkt(n)).collect();
+        let oracle = link.transmit_batch(&packets).unwrap();
+
+        let mut t = RdmaSimTransport::new(link.clone(), BufPool::new(true), 4, 1024).unwrap();
+        for (i, p) in packets.iter().enumerate() {
+            let mut payload = t.acquire(p.payload.len());
+            payload.extend_from_slice(&p.payload);
+            let frame_header = p.header().encode(payload.len()).unwrap();
+            t.post(TxFrame::Sg { header: p.header(), frame_header, payload, charge_rtt: i == 0 })
+                .unwrap();
+        }
+        for (o, p) in oracle.iter().zip(&packets) {
+            let c = t.complete().unwrap();
+            assert_eq!(c.wire_bytes, o.wire_bytes, "binary wire parity");
+            assert_eq!(c.net_time, o.net_time, "same modeled uplink");
+            assert_eq!(c.rtt, o.rtt);
+            assert_eq!(c.codec_time, Duration::ZERO, "zero-copy: nothing re-encodes");
+            assert_eq!(c.packet.as_ref().unwrap(), p, "delivery by ownership, bit-identical");
+        }
+    }
+
+    #[test]
+    fn rdma_sim_rejects_ascii_format() {
+        let link = Link::new(Uplink::paper_default()).with_format(WireFormat::AsciiRpc);
+        assert!(RdmaSimTransport::new(link, BufPool::new(true), 2, 256).is_err());
+    }
+
+    #[test]
+    fn tcp_transport_writes_frames_and_completes_with_byte_counts() {
+        let pool = BufPool::new(true);
+        let mut t = TcpFrameTransport::new(Vec::<u8>::new(), pool, 2, 1024);
+        let p = pkt(300);
+
+        let mut payload = t.acquire(p.payload.len());
+        payload.extend_from_slice(&p.payload);
+        let frame_header = p.header().encode(payload.len()).unwrap();
+        t.post(TxFrame::Sg { header: p.header(), frame_header, payload, charge_rtt: true })
+            .unwrap();
+        let c = t.complete().unwrap();
+        assert_eq!(c.wire_bytes, TX_HEADER_BYTES + p.payload.len());
+        assert_eq!(c.net_time, Duration::ZERO);
+        assert!(c.packet.is_none(), "bytes left the process; nothing to hand back");
+
+        // the wire holds exactly the binary framing
+        assert_eq!(*t.writer_mut(), p.to_binary().unwrap());
+        // the drained payload buffer was redeemed onto the ring
+        assert_eq!(t.ring_stats().leases, 1);
+
+        t.writer_mut().clear();
+        t.post(TxFrame::Raw(vec![1, 2, 3])).unwrap();
+        assert_eq!(t.complete().unwrap().wire_bytes, 3);
+        assert_eq!(*t.writer_mut(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pipeline_depth_ge_n_with_zero_edge_is_cumulative_wire_time() {
+        let nets = lcg_nets(7, 16);
+        let sched = pipeline_schedule(Duration::ZERO, &nets, 16);
+        let mut cum = Duration::ZERO;
+        for (s, &t) in sched.iter().zip(&nets) {
+            cum += t;
+            assert_eq!(*s, cum);
+        }
+        // with no edge time to overlap, depth is irrelevant
+        assert_eq!(sched, pipeline_schedule(Duration::ZERO, &nets, 1));
+        assert_eq!(sched, serial_schedule(Duration::ZERO, &nets));
+    }
+
+    #[test]
+    fn pipeline_depth_one_serializes_pack_and_send() {
+        let e = ms(3);
+        let nets = lcg_nets(11, 8);
+        let sched = pipeline_schedule(e, &nets, 1);
+        let mut cum = Duration::ZERO;
+        for (i, (s, &t)) in sched.iter().zip(&nets).enumerate() {
+            cum += e + t;
+            assert_eq!(*s, cum, "i={i}: pack then send, no overlap");
+        }
+    }
+
+    #[test]
+    fn deeper_pipelines_never_finish_later() {
+        for seed in [1u64, 2, 3] {
+            let nets = lcg_nets(seed, 24);
+            for &e in &[Duration::ZERO, ms(1), ms(5)] {
+                let mut prev = pipeline_schedule(e, &nets, 1);
+                for depth in 2..=8 {
+                    let cur = pipeline_schedule(e, &nets, depth);
+                    for (c, p) in cur.iter().zip(&prev) {
+                        assert!(c <= p, "depth {depth} regressed (seed {seed})");
+                    }
+                    prev = cur;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelining_strictly_beats_the_serial_oracle_when_edge_time_exists() {
+        let e = ms(2);
+        let nets = lcg_nets(5, 12);
+        let serial = serial_schedule(e, &nets);
+        let piped = pipeline_schedule(e, &nets, 4);
+        for (i, (p, s)) in piped.iter().zip(&serial).enumerate() {
+            assert!(p < s, "request {i}: pipelined must strictly beat serial");
+        }
+        // and the last request still cannot beat the wire itself
+        let wire: Duration = nets.iter().sum();
+        assert!(*piped.last().unwrap() >= wire + e);
+    }
+
+    #[test]
+    fn serial_schedule_matches_legacy_chain_accounting() {
+        // the legacy loop: sim_chain = n·sim_edge charged to everyone,
+        // chain_net accumulates per frame
+        let e = ms(4);
+        let nets = vec![ms(10), ms(20), ms(5)];
+        let sched = serial_schedule(e, &nets);
+        let sim_chain = e * 3;
+        assert_eq!(sched[0], sim_chain + ms(10));
+        assert_eq!(sched[1], sim_chain + ms(30));
+        assert_eq!(sched[2], sim_chain + ms(35));
+    }
+}

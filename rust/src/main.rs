@@ -24,7 +24,8 @@ use auto_split::coordinator::{
     write_adaptive_bank_with, write_reference_artifacts, AdaptiveBankSpec, AdaptiveConfig,
     AdmissionPolicy, BwTrace, C10kConfig, Client, CostPrior, Hysteresis, IoModel, LoadReport,
     NetConfig, Outcome, RefArtifactSpec, RoutePolicy, SchedulerConfig, ServeConfig, ServeMode,
-    Server, ServingStats, SpanRecord, TcpClient, TcpFrontend, TraceConfig, WireFormat,
+    Server, ServingStats, SpanRecord, TcpClient, TcpFrontend, TraceConfig, TransportKind,
+    WireFormat,
 };
 use auto_split::graph::optimize_for_inference;
 use auto_split::profile::ModelProfile;
@@ -113,14 +114,17 @@ fn main() -> Result<()> {
             eprintln!("            [--slo-ms 0] [--route rr|least|affinity] [--link-chain 8]");
             eprintln!("            [--adaptive --bank <dir> [--hys-margin .25] [--hys-windows 3]]");
             eprintln!("            [--pool on|off]");
+            eprintln!("            [--transport link|rdma-sim] [--pipeline-depth 1]");
+            eprintln!("            [--engine-cache 0]   per-shard resident plan-engine LRU cap");
             eprintln!("            [--listen 127.0.0.1:7070 [--duration-s 0]]   TCP front-end");
             eprintln!("            [--stats-interval-s 0]   periodic stats line while listening");
             eprintln!("            [--io-model reactor|threads]   socket engine (default reactor)");
             eprintln!("  loadtest  [--artifacts artifacts | --synthetic] [--rps 100]");
             eprintln!("            [--requests 200] [--clients 0] [--per-client 32]");
             eprintln!("            [--seed 1] [--compare] [--json out.json] [--pool on|off]");
-            eprintln!("            [--transport inproc|tcp [--connect host:port]]");
-            eprintln!("            [--io-model reactor|threads]");
+            eprintln!("            [--transport link|inproc|tcp|rdma-sim [--connect host:port]]");
+            eprintln!("            [--pipeline-depth 1]   uplink posts kept in flight (1..=64)");
+            eprintln!("            [--engine-cache 0] [--io-model reactor|threads]");
             eprintln!("            [--c10k [--connections 1024] [--per-conn 2] [--churn 128]");
             eprintln!("             [--conn-workers 16] [--no-slowloris]]   C10K concurrency");
             eprintln!("            [--adaptive [--bank dir] [--bw-trace file|ble-wifi-3g]");
@@ -137,6 +141,8 @@ fn main() -> Result<()> {
             eprintln!("  (serve + loadtest) [--kernels auto|scalar]   interpreter kernels:");
             eprintln!("            auto = SIMD/blocked fast path (runtime-detected, default),");
             eprintln!("            scalar = seed bit-exact oracle loops");
+            eprintln!("  (serve --listen + loadtest --transport tcp) [--max-payload-mb 16]");
+            eprintln!("            front-end request frame cap, 1..=4095 (u32 length fields)");
             Ok(())
         }
     }
@@ -266,16 +272,48 @@ fn kernels_from_args(args: &Args) -> Result<KernelKind> {
     }
 }
 
-/// Parse the shared `--io-model` flag into a front-end [`NetConfig`]
-/// (reactor by default; `threads` selects the thread-per-connection
-/// oracle).
+/// Parse the shared `--io-model` / `--max-payload-mb` flags into a
+/// front-end [`NetConfig`] (reactor by default; `threads` selects the
+/// thread-per-connection oracle). The payload cap is bounded to
+/// 1..=4095 MiB: request frames carry u32 length fields, so any larger
+/// cap could admit a length that no longer round-trips through the
+/// header (4095 MiB = 0xFFF0_0000 < u32::MAX).
 fn net_config_from_args(args: &Args) -> Result<NetConfig> {
     let mut cfg = NetConfig::default();
     if let Some(v) = args.get("--io-model") {
         cfg.io_model = IoModel::parse(v)
             .with_context(|| format!("bad --io-model {v} (expected reactor|threads)"))?;
     }
+    if args.get("--max-payload-mb").is_some() {
+        let mb: usize = args.parse("--max-payload-mb", 16usize)?;
+        anyhow::ensure!(
+            (1..=4095).contains(&mb),
+            "--max-payload-mb {mb} out of range (1..=4095: frame lengths are u32)"
+        );
+        cfg.max_payload = mb << 20;
+    }
     Ok(cfg)
+}
+
+/// Parse `--transport` into the uplink [`TransportKind`] (`inproc` stays
+/// a legacy alias for `link`). `tcp` names the socket front-end path,
+/// not a server uplink — the loadtest dispatcher routes it separately
+/// and [`Server::start`] rejects it as an uplink.
+fn transport_from_args(args: &Args) -> Result<TransportKind> {
+    match args.get("--transport") {
+        None => Ok(TransportKind::Link),
+        Some(v) => TransportKind::parse(v),
+    }
+}
+
+/// Apply the shared uplink-tuning flags — `--pipeline-depth` (posts kept
+/// in flight per chain, validated 1..=64 by the server) and
+/// `--engine-cache` (per-shard resident plan-engine LRU cap, 0 =
+/// uncapped) — to a [`ServeConfig`].
+fn tune_serve_config(args: &Args, cfg: &mut ServeConfig) -> Result<()> {
+    cfg.pipeline_depth = args.parse("--pipeline-depth", cfg.pipeline_depth)?;
+    cfg.engine_cache = args.parse("--engine-cache", cfg.engine_cache)?;
+    Ok(())
 }
 
 /// Parse the shared `--trace-sample` / `--trace-out` tracing flags.
@@ -480,10 +518,12 @@ fn write_bench_json(
     sched: &SchedulerConfig,
     r: &LoadReport,
     transport: &str,
+    pipeline_depth: usize,
 ) -> Result<()> {
     let json = jobj(vec![
         ("bench", Json::Str("serving".into())),
         ("transport", Json::Str(transport.into())),
+        ("pipeline_depth", Json::Num(pipeline_depth as f64)),
         ("shards", Json::Num(sched.shards as f64)),
         ("admission", Json::Str(sched.admission.to_string())),
         ("route", Json::Str(sched.route.to_string())),
@@ -504,7 +544,8 @@ fn write_bench_json(
             bench_meta(
                 "loadtest",
                 &format!(
-                    "transport={transport} shards={} admission={} route={} queue_cap={}",
+                    "transport={transport} depth={pipeline_depth} shards={} admission={} \
+                     route={} queue_cap={}",
                     sched.shards, sched.admission, sched.route, sched.queue_cap
                 ),
             ),
@@ -668,6 +709,7 @@ fn run_adaptive_loadtest(
     rps: f64,
     n: usize,
     seed: u64,
+    kind: TransportKind,
 ) -> Result<()> {
     let (acfg, tmp): (AdaptiveConfig, Option<PathBuf>) = match args.get("--bank") {
         Some(p) => (AdaptiveConfig::load(Path::new(p))?, None),
@@ -732,6 +774,8 @@ fn run_adaptive_loadtest(
         cfg.trace = tcfg;
         cfg.profile = profile;
         cfg.kernels = kernels_from_args(args)?;
+        cfg.transport = kind;
+        tune_serve_config(args, &mut cfg)?;
         let mut a = acfg.clone();
         if let Some(id) = pin {
             a = a.with_pinned(id);
@@ -832,26 +876,25 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let per_client: usize = args.parse("--per-client", 32)?;
     let seed: u64 = args.parse("--seed", 1u64)?;
     let mbps: f64 = args.parse("--mbps", 3.0)?;
-    let tcp = match args.get("--transport") {
-        None | Some("inproc") => false,
-        Some("tcp") => true,
-        Some(v) => bail!("bad --transport {v} (expected tcp|inproc)"),
-    };
+    let kind = transport_from_args(args)?;
+    let tcp = kind == TransportKind::Tcp;
     if args.flag("--c10k") {
         anyhow::ensure!(!args.flag("--adaptive"), "--c10k does not combine with --adaptive");
         anyhow::ensure!(!args.flag("--compare"), "--c10k does not take --compare");
-        return run_c10k_loadtest(args, &sched);
+        anyhow::ensure!(!tcp, "--c10k already drives sockets; pick an uplink (link|rdma-sim)");
+        return run_c10k_loadtest(args, &sched, kind);
     }
     if args.flag("--adaptive") {
         anyhow::ensure!(!tcp, "--transport tcp does not combine with --adaptive yet");
-        return run_adaptive_loadtest(args, &sched, rps, n, seed);
+        return run_adaptive_loadtest(args, &sched, rps, n, seed, kind);
     }
     if tcp {
         anyhow::ensure!(!args.flag("--compare"), "--transport tcp does not take --compare");
         return run_tcp_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps);
     }
     let (dir, images, synthetic) = serving_inputs(args)?;
-    let result = run_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps, &dir, &images);
+    let result =
+        run_loadtest(args, &sched, rps, n, clients, per_client, seed, mbps, &dir, &images, kind);
     if synthetic {
         let _ = std::fs::remove_dir_all(&dir); // disposable temp artifacts
     }
@@ -909,12 +952,13 @@ fn run_tcp_loadtest(
 ) -> Result<()> {
     // the shared tail: drive the workload over an already-warm connection
     // and record the run — identical whether the server is remote or local
+    let depth: usize = args.parse("--pipeline-depth", 1usize)?;
     let drive = |client: TcpClient, images: &[Vec<f32>]| -> Result<()> {
         let report =
             run_workload(&client, images, rps, n, clients, per_client, seed, sched.shards)?;
         print_report("tcp", &report);
         if let Some(path) = args.get("--json") {
-            write_bench_json(path, sched, &report, "tcp")?;
+            write_bench_json(path, sched, &report, "tcp", depth)?;
             println!("wrote {path}");
         }
         Ok(())
@@ -947,6 +991,7 @@ fn run_tcp_loadtest(
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
         cfg.kernels = kernels_from_args(args)?;
+        tune_serve_config(args, &mut cfg)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend =
             TcpFrontend::bind("127.0.0.1:0", server.clone(), net_config_from_args(args)?)?;
@@ -975,7 +1020,7 @@ fn run_tcp_loadtest(
 /// `benches/serving_c10k` gates in CI, here as a CLI knob. `--io-model
 /// threads` drives the identical workload through the
 /// thread-per-connection oracle for comparison.
-fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
+fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig, kind: TransportKind) -> Result<()> {
     let net = net_config_from_args(args)?;
     let d = C10kConfig::default();
     let c10k = C10kConfig {
@@ -994,6 +1039,8 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
         cfg.kernels = kernels_from_args(args)?;
+        cfg.transport = kind;
+        tune_serve_config(args, &mut cfg)?;
         let server = std::sync::Arc::new(Server::start(cfg)?);
         let frontend = TcpFrontend::bind("127.0.0.1:0", server.clone(), net)?;
         println!(
@@ -1012,7 +1059,8 @@ fn run_c10k_loadtest(args: &Args, sched: &SchedulerConfig) -> Result<()> {
         print_report("c10k", &report.load);
         println!("churned {}/{}  slow_reader_ok {}", report.churned, c10k.churn, report.slow_ok);
         if let Some(path) = args.get("--json") {
-            write_bench_json(path, sched, &report.load, "c10k")?;
+            let depth: usize = args.parse("--pipeline-depth", 1usize)?;
+            write_bench_json(path, sched, &report.load, "c10k", depth)?;
             println!("wrote {path}");
         }
         export_trace(args, &server)?;
@@ -1038,7 +1086,13 @@ fn run_loadtest(
     mbps: f64,
     dir: &Path,
     images: &[Vec<f32>],
+    kind: TransportKind,
 ) -> Result<()> {
+    // the BENCH record keeps the legacy `inproc` label for the default
+    // modeled link (CI gates match on it); rdma-sim names itself
+    let depth: usize = args.parse("--pipeline-depth", 1usize)?;
+    let tname =
+        if kind == TransportKind::Link { "inproc".to_string() } else { kind.to_string() };
     let make_server = |sched: SchedulerConfig| -> Result<Server> {
         let mut cfg = ServeConfig::new(dir);
         cfg.uplink = Uplink::mbps(mbps);
@@ -1047,6 +1101,8 @@ fn run_loadtest(
         cfg.trace = trace_from_args(args)?;
         cfg.profile = profile_from_args(args)?;
         cfg.kernels = kernels_from_args(args)?;
+        cfg.transport = kind;
+        tune_serve_config(args, &mut cfg)?;
         Server::start(cfg)
     };
 
@@ -1069,7 +1125,7 @@ fn run_loadtest(
             let name = sched.admission.to_string();
             let row = rows.iter().find(|(p, _)| *p == name).map(|(_, r)| r);
             let row = row.context("configured policy missing from comparison")?;
-            write_bench_json(path, sched, row, "inproc")?;
+            write_bench_json(path, sched, row, &tname, depth)?;
             println!("wrote {path} ({name} row)");
         }
         return Ok(());
@@ -1081,7 +1137,7 @@ fn run_loadtest(
     let report = run_workload(&server, images, rps, n, clients, per_client, seed, sched.shards)?;
     print_report("open", &report);
     if let Some(path) = args.get("--json") {
-        write_bench_json(path, sched, &report, "inproc")?;
+        write_bench_json(path, sched, &report, &tname, depth)?;
         println!("wrote {path}");
     }
     export_trace(args, &server)?;
@@ -1106,6 +1162,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.trace = trace_from_args(args)?;
     cfg.profile = profile_from_args(args)?;
     cfg.kernels = kernels_from_args(args)?;
+    let kind = transport_from_args(args)?;
+    anyhow::ensure!(
+        kind != TransportKind::Tcp,
+        "serve's uplink transport is link|rdma-sim (tcp is the loadtest front-end; \
+         sockets come from --listen)"
+    );
+    cfg.transport = kind;
+    tune_serve_config(args, &mut cfg)?;
     if args.flag("--rpc") {
         cfg.wire = WireFormat::AsciiRpc;
     }

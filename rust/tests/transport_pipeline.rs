@@ -1,0 +1,331 @@
+//! Transport-layer integration: the pluggable uplink (`--transport
+//! link|rdma-sim`) and depth-N pipelining (`--pipeline-depth`) must be
+//! invisible to results — bit-identical logits, identical per-request
+//! wire bytes, exactly-once answered-or-shed — with the modeled link at
+//! depth 1 as the accounting oracle. Plus the frame-split property test:
+//! a pipelined TCP byte stream cut at every possible boundary (frame
+//! edges and mid-chunk) reassembles to the serial oracle's packets and
+//! byte count.
+//!
+//! Runs entirely on synthetic REFHLO artifacts — no `make artifacts`.
+
+use auto_split::coordinator::{
+    write_adaptive_bank, write_reference_artifacts, ActivationPacket, AdaptiveBankSpec,
+    AdaptiveConfig, AdmissionPolicy, BufPool, DelayMode, InferenceResult, Outcome, PacketHeader,
+    RefArtifactSpec, ServeConfig, Server, ServingStats, TcpFrameTransport, Transport,
+    TransportKind, TxFrame, WireFormat, TX_HEADER_BYTES,
+};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn synth_dir(tag: &str) -> (PathBuf, RefArtifactSpec) {
+    let spec = RefArtifactSpec::default();
+    let dir =
+        std::env::temp_dir().join(format!("autosplit-transport-{tag}-{}", std::process::id()));
+    write_reference_artifacts(&dir, &spec).expect("write synthetic artifacts");
+    (dir, spec)
+}
+
+/// Drive one configuration with a deterministic workload — a sequential
+/// phase (every request its own chain) followed by a burst (chains form
+/// freely) — and return per-request results in submission order.
+fn run_config(
+    dir: &Path,
+    images: &[Vec<f32>],
+    tweak: impl FnOnce(&mut ServeConfig),
+) -> (Vec<InferenceResult>, ServingStats) {
+    let mut cfg = ServeConfig::new(dir);
+    tweak(&mut cfg);
+    let server = Server::start(cfg).expect("server start");
+    let mut results = Vec::new();
+    for img in &images[..6] {
+        results.push(server.infer(img.clone()).expect("sequential infer"));
+    }
+    let rxs: Vec<_> = images[6..]
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("burst submit"))
+        .collect();
+    for rx in rxs {
+        results.push(rx.recv().unwrap().unwrap().done().expect("burst request answered"));
+    }
+    let stats = server.shutdown();
+    (results, stats)
+}
+
+#[test]
+fn transports_and_depths_are_bit_identical_to_the_link_oracle() {
+    let (dir, spec) = synth_dir("parity");
+    let images: Vec<Vec<f32>> = (0..16).map(|i| spec.image(7000 + i as u64)).collect();
+
+    // the oracle: default config == modeled link, depth 1, pooled
+    let (oracle, ostats) = run_config(&dir, &images, |_| {});
+    assert_eq!(ostats.requests, images.len() as u64);
+
+    let variants: Vec<(&str, Box<dyn FnOnce(&mut ServeConfig)>)> = vec![
+        ("link-d4", Box::new(|c: &mut ServeConfig| c.pipeline_depth = 4)),
+        ("rdma-d1", Box::new(|c: &mut ServeConfig| c.transport = TransportKind::RdmaSim)),
+        (
+            "rdma-d4",
+            Box::new(|c: &mut ServeConfig| {
+                c.transport = TransportKind::RdmaSim;
+                c.pipeline_depth = 4;
+            }),
+        ),
+        (
+            "link-d4-pool-off",
+            Box::new(|c: &mut ServeConfig| {
+                c.pipeline_depth = 4;
+                c.pool = false;
+            }),
+        ),
+    ];
+    for (name, tweak) in variants {
+        let (got, stats) = run_config(&dir, &images, tweak);
+        assert_eq!(stats.requests, images.len() as u64, "{name}: exactly-once");
+        assert_eq!(got.len(), oracle.len(), "{name}");
+        for (i, (g, o)) in got.iter().zip(&oracle).enumerate() {
+            assert_eq!(g.logits, o.logits, "{name}: logits drift at request {i}");
+            assert_eq!(g.class, o.class, "{name}: class at request {i}");
+            assert_eq!(g.tx_bytes, o.tx_bytes, "{name}: wire bytes at request {i}");
+        }
+        // sequential-phase chains are singletons in every run, so the
+        // modeled network time must agree to the nanosecond as well
+        for (i, (g, o)) in got.iter().zip(&oracle).take(6).enumerate() {
+            assert_eq!(g.net, o.net, "{name}: modeled net time at sequential request {i}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_chains_shed_or_answer_every_request_exactly_once() {
+    let (dir, spec) = synth_dir("shed");
+    let images: Vec<Vec<f32>> = (0..8).map(|i| spec.image(7100 + i as u64)).collect();
+    let mut cfg = ServeConfig::new(&dir);
+    cfg.transport = TransportKind::RdmaSim;
+    cfg.pipeline_depth = 4;
+    cfg.scheduler.queue_cap = 2;
+    cfg.scheduler.admission = AdmissionPolicy::ShedNewest;
+    let server = Server::start(cfg).expect("server start");
+    let _ = server.infer(images[0].clone()).expect("warm-up");
+
+    let n = 32;
+    let rxs: Vec<_> =
+        (0..n).map(|i| server.submit(images[i % images.len()].clone()).unwrap()).collect();
+    let (mut done, mut shed) = (0u64, 0u64);
+    for rx in rxs {
+        match rx.recv().expect("pipeline must answer, never drop").unwrap() {
+            Outcome::Done(_) => done += 1,
+            Outcome::Shed(_) => shed += 1,
+        }
+    }
+    assert_eq!(done + shed, n as u64, "every submission gets exactly one terminal outcome");
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, done + 1, "served counter matches answered (+warm-up)");
+    assert_eq!(stats.shed, shed, "shed counter matches shed outcomes");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The virtual-latency half of the tentpole: with a pinned bank plan
+/// that models real edge seconds, a depth-4 uplink overlaps transmit
+/// with packing and must not price any request later than the serial
+/// oracle — strictly earlier whenever a multi-request chain forms.
+#[test]
+fn pipelined_virtual_schedule_never_prices_later_than_serial() {
+    let base = std::env::temp_dir().join(format!("autosplit-pipevirt-{}", std::process::id()));
+    let spec = AdaptiveBankSpec::default();
+    let bank = write_adaptive_bank(&base, &spec).expect("write bank");
+    let images: Vec<Vec<f32>> = (0..8u64).map(|i| spec.image(7200 + i)).collect();
+    let acfg = AdaptiveConfig::new(bank, &base).with_pinned("b1"); // 55 ms modeled edge
+
+    let run = |depth: usize| -> (Vec<InferenceResult>, ServingStats) {
+        let mut cfg = ServeConfig::new("unused-when-adaptive");
+        cfg.adaptive = Some(acfg.clone());
+        cfg.pipeline_depth = depth;
+        cfg.scheduler.max_delay = Duration::from_millis(100);
+        let server = Server::start(cfg).expect("server start");
+        let _ = server.infer(images[0].clone()).expect("warm-up");
+        let rxs: Vec<_> = images.iter().map(|i| server.submit(i.clone()).unwrap()).collect();
+        let results =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().done().unwrap()).collect();
+        (results, server.shutdown())
+    };
+
+    let (serial, s1) = run(1);
+    let (piped, s4) = run(4);
+    for (i, (p, s)) in piped.iter().zip(&serial).enumerate() {
+        assert_eq!(p.logits, s.logits, "depth must not change logits (request {i})");
+        assert_eq!(p.tx_bytes, s.tx_bytes, "depth must not change wire bytes (request {i})");
+    }
+    // chain composition is wall-clock driven; only when both runs packed
+    // the burst into one chain (the overwhelmingly common case: warm-up
+    // batch + burst batch) are the virtual schedules comparable 1:1 —
+    // and then pipelining must win outright
+    if s1.batches == 2 && s4.batches == 2 {
+        let sum = |rs: &[InferenceResult]| rs.iter().map(|r| r.e2e.as_secs_f64()).sum::<f64>();
+        assert!(
+            sum(&piped) < sum(&serial),
+            "depth 4 must strictly beat serial on a full chain: {} vs {}",
+            sum(&piped),
+            sum(&serial)
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn invalid_transport_configs_are_rejected_at_start() {
+    let (dir, _) = synth_dir("validate");
+    let start = |tweak: &dyn Fn(&mut ServeConfig)| {
+        let mut cfg = ServeConfig::new(&dir);
+        tweak(&mut cfg);
+        Server::start(cfg)
+    };
+    assert!(start(&|c| c.pipeline_depth = 0).is_err(), "depth 0");
+    assert!(start(&|c| c.pipeline_depth = 65).is_err(), "depth 65");
+    assert!(start(&|c| c.transport = TransportKind::Tcp).is_err(), "tcp uplink");
+    assert!(
+        start(&|c| {
+            c.transport = TransportKind::RdmaSim;
+            c.wire = WireFormat::AsciiRpc;
+        })
+        .is_err(),
+        "rdma-sim over ascii"
+    );
+    assert!(
+        start(&|c| {
+            c.pipeline_depth = 4;
+            c.delay = DelayMode::RealSleep;
+        })
+        .is_err(),
+        "pipelining needs virtual accounting"
+    );
+    // and the boundary cases start fine
+    assert!(start(&|c| c.pipeline_depth = 64).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_cache_lru_evicts_without_changing_results() {
+    let (dir, spec) = synth_dir("engines");
+    let images: Vec<Vec<f32>> = (0..14).map(|i| spec.image(7300 + i as u64)).collect();
+    let run = |cap: usize| -> (Vec<Vec<f32>>, ServingStats) {
+        let mut cfg = ServeConfig::new(&dir);
+        cfg.engine_cache = cap;
+        cfg.scheduler.max_delay = Duration::from_millis(50);
+        let server = Server::start(cfg).expect("server start");
+        let mut logits = Vec::new();
+        // sequential → batch-1 engine; burst → larger engines; then
+        // sequential again so a capped cache has to reload evictees
+        for img in &images[..3] {
+            logits.push(server.infer(img.clone()).unwrap().logits);
+        }
+        let rxs: Vec<_> =
+            images[3..11].iter().map(|img| server.submit(img.clone()).unwrap()).collect();
+        for rx in rxs {
+            logits.push(rx.recv().unwrap().unwrap().done().unwrap().logits);
+        }
+        for img in &images[11..] {
+            logits.push(server.infer(img.clone()).unwrap().logits);
+        }
+        (logits, server.shutdown())
+    };
+
+    let (uncapped, su) = run(0);
+    let (capped, sc) = run(1);
+    assert_eq!(uncapped, capped, "LRU eviction must never change logits");
+    assert_eq!(su.engine_evictions, 0, "uncapped cache never evicts");
+    assert!(su.engine_loads >= 1, "lazy loading still compiles on first use");
+    // with cap 1 exactly one engine stays resident, so every load after
+    // the first displaced the previous one
+    assert_eq!(sc.engine_evictions, sc.engine_loads - 1, "cap-1 LRU invariant");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Frame-split property test (TCP byte stream)
+// ---------------------------------------------------------------------
+
+fn packets() -> Vec<ActivationPacket> {
+    [5usize, 257, 64, 1, 128]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| ActivationPacket {
+            bits: 4,
+            scale: 0.05 + i as f32,
+            zero_point: 0.0,
+            shape: [1, 2, n as i32, 1],
+            payload: (0..n).map(|b| ((b * 7 + i) % 256) as u8).collect(),
+        })
+        .collect()
+}
+
+/// Post every packet as a scatter-gather frame through a
+/// [`TcpFrameTransport`] writing into memory, keeping up to `depth`
+/// posts in flight; returns the wire stream and the billed byte total.
+fn stream_at_depth(packets: &[ActivationPacket], depth: usize) -> (Vec<u8>, usize) {
+    let mut t = TcpFrameTransport::new(Vec::<u8>::new(), BufPool::new(true), depth, 1024);
+    let mut billed = 0usize;
+    for (i, p) in packets.iter().enumerate() {
+        let mut payload = t.acquire(p.payload.len());
+        payload.extend_from_slice(&p.payload);
+        let frame_header = p.header().encode(payload.len()).unwrap();
+        t.post(TxFrame::Sg { header: p.header(), frame_header, payload, charge_rtt: i == 0 })
+            .unwrap();
+        while t.in_flight() >= depth {
+            billed += t.complete().unwrap().wire_bytes;
+        }
+    }
+    while t.in_flight() > 0 {
+        billed += t.complete().unwrap().wire_bytes;
+    }
+    (std::mem::take(t.writer_mut()), billed)
+}
+
+/// Incremental receive loop — the same header-then-payload discipline the
+/// front-end connection readers run: buffer until a whole frame is
+/// available, parse, repeat.
+fn reassemble(chunks: &[&[u8]]) -> Vec<ActivationPacket> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    for chunk in chunks {
+        buf.extend_from_slice(chunk);
+        loop {
+            if buf.len() < TX_HEADER_BYTES {
+                break;
+            }
+            let (_, len) = PacketHeader::decode(&buf[..TX_HEADER_BYTES]).expect("frame header");
+            if buf.len() < TX_HEADER_BYTES + len {
+                break;
+            }
+            let frame: Vec<u8> = buf.drain(..TX_HEADER_BYTES + len).collect();
+            out.push(ActivationPacket::from_binary(&frame).expect("frame body"));
+        }
+    }
+    out
+}
+
+#[test]
+fn pipelined_tcp_stream_reassembles_identically_at_every_split_point() {
+    let packets = packets();
+    let (serial, serial_bytes) = stream_at_depth(&packets, 1);
+    assert_eq!(serial.len(), serial_bytes, "billing covers exactly the bytes written");
+
+    for depth in [2usize, 4, 8] {
+        let (piped, piped_bytes) = stream_at_depth(&packets, depth);
+        assert_eq!(piped, serial, "depth {depth}: wire bytes must be order-identical");
+        assert_eq!(piped_bytes, serial_bytes, "depth {depth}: billed bytes must match serial");
+    }
+
+    // the receiver may see the stream cut anywhere: at every chunk
+    // boundary and at every mid-chunk byte offset. Each split must
+    // reassemble to the same packets and account the same bytes.
+    let (stream, _) = stream_at_depth(&packets, 4);
+    for cut in 0..=stream.len() {
+        let got = reassemble(&[&stream[..cut], &stream[cut..]]);
+        assert_eq!(got, packets, "split at byte {cut}");
+    }
+    // and a pathological 1-byte-at-a-time receiver
+    let drips: Vec<&[u8]> = stream.chunks(1).collect();
+    assert_eq!(reassemble(&drips), packets, "byte-at-a-time reassembly");
+}
